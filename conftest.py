@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make the build-time python package importable
+when pytest is invoked as `pytest python/tests/` from the repository root
+(the Makefile `cd python` path works either way)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,56 @@
+//! Edge-device latency/energy explorer.
+//!
+//! Measures real per-iteration train/infer wallclock of the ViT variants
+//! on this host (through the compiled HLO executables), calibrates the
+//! host's sustained GFLOP/s, and projects to the paper's four boards —
+//! the workflow behind Fig. 8 and Tabs. 2-4.
+//!
+//!     cargo run --release --example edge_latency
+
+use anyhow::Result;
+use wasi_train::device::calibrate::measure_gflops;
+use wasi_train::device::energy::iteration_energy;
+use wasi_train::device::latency::project_time;
+use wasi_train::device::spec::DEVICES;
+use wasi_train::eval::latency::measure_iteration;
+use wasi_train::eval::EvalCtx;
+use wasi_train::util::table::Table;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::var("WASI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let ctx = EvalCtx::open(&artifacts, "eval_out", 60, true)?;
+
+    println!("calibrating host ...");
+    let hg = measure_gflops(192, 2);
+    println!("host sustained matmul: {hg:.1} GFLOP/s\n");
+
+    let mut t = Table::new(["variant", "host infer (ms)", "host train (ms)"])
+        .title("Measured per-iteration time (host, PJRT CPU)");
+    let mut measured = Vec::new();
+    for name in ["vit_wasi_eps40", "vit_wasi_eps80", "vit_vanilla"] {
+        let Ok(entry) = ctx.session.manifest.model(name) else { continue };
+        let entry = entry.clone();
+        let (inf, tr) = measure_iteration(&ctx, &entry, 3)?;
+        t.row([name.to_string(), format!("{:.0}", inf * 1e3), format!("{:.0}", tr * 1e3)]);
+        measured.push((name, inf, tr));
+    }
+    t.print();
+
+    let mut t2 = Table::new(["variant", "device", "infer (s)", "train (s)", "train energy (J)"])
+        .title("\nProjected to edge devices (roofline, AI=64)");
+    for (name, inf, tr) in &measured {
+        for dev in DEVICES {
+            let pi = project_time(*inf, hg, dev, 64.0);
+            let pt = project_time(*tr, hg, dev, 64.0);
+            t2.row([
+                name.to_string(),
+                dev.name.to_string(),
+                format!("{pi:.2}"),
+                format!("{pt:.2}"),
+                format!("{:.1}", iteration_energy(dev, pt)),
+            ]);
+        }
+    }
+    t2.print();
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! End-to-end on-device fine-tuning driver (the repository's E2E
+//! validation run, recorded in EXPERIMENTS.md).
+//!
+//! Fine-tunes BOTH the vanilla and the WASI ε=0.8 ViT artifacts for a few
+//! hundred steps on the synthetic CIFAR-10-like task, logging the loss
+//! curves, final validation accuracy, per-step wallclock, and the memory
+//! breakdown — i.e. the full paper pipeline (pretrained model → on-device
+//! fine-tune in the subspace) through all three layers.
+//!
+//!     cargo run --release --example ondevice_finetune [steps]
+
+use anyhow::Result;
+use wasi_train::coordinator::{FinetuneConfig, Session};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let artifacts = std::env::var("WASI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let session = Session::open(&artifacts)?;
+
+    let mut summary = Vec::new();
+    for model in ["vit_vanilla", "vit_wasi_eps80"] {
+        println!("\n=== fine-tuning {model} for {steps} steps (cifar10-like, seed 233) ===");
+        let report = session.finetune(&FinetuneConfig {
+            model: model.into(),
+            dataset: "cifar10-like".into(),
+            samples: 512,
+            steps,
+            seed: 233,
+            verbose: true,
+        })?;
+        println!("\nloss curve ({model}):");
+        for (s, l) in &report.loss_curve {
+            println!("  step {s:>4}  loss {l:.4}");
+        }
+        println!(
+            "{model}: val acc {:.3}, mean step {:.1} ms, train mem {:.2} MB",
+            report.val_accuracy,
+            report.mean_step_seconds * 1e3,
+            report.memory.total_mb()
+        );
+        summary.push((model, report));
+    }
+
+    let (van, wasi) = (&summary[0].1, &summary[1].1);
+    println!("\n=== E2E comparison (vanilla vs WASI eps=0.8) ===");
+    println!(
+        "accuracy : vanilla {:.3}  wasi {:.3}  (gap {:+.3})",
+        van.val_accuracy,
+        wasi.val_accuracy,
+        wasi.val_accuracy - van.val_accuracy
+    );
+    println!(
+        "step time: vanilla {:.1} ms  wasi {:.1} ms  (speedup {:.2}x)",
+        van.mean_step_seconds * 1e3,
+        wasi.mean_step_seconds * 1e3,
+        van.mean_step_seconds / wasi.mean_step_seconds
+    );
+    println!(
+        "train mem: vanilla {:.2} MB  wasi {:.2} MB  (compression {:.1}x)",
+        van.memory.total_mb(),
+        wasi.memory.total_mb(),
+        van.memory.total_mb() / wasi.memory.total_mb()
+    );
+    Ok(())
+}

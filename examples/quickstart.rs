@@ -1,0 +1,40 @@
+//! Quickstart: load the WASI ViT artifact, fine-tune for a handful of
+//! steps on a synthetic CIFAR-like task, and report loss + memory.
+//!
+//! Run after `make artifacts build`:
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+use wasi_train::coordinator::{FinetuneConfig, Session};
+
+fn main() -> Result<()> {
+    let artifacts = std::env::var("WASI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!("opening session over {artifacts}/ ...");
+    let session = Session::open(&artifacts)?;
+    println!("platform: {}", session.runtime.platform());
+    println!("models:   {:?}", session.manifest.models.keys().collect::<Vec<_>>());
+
+    let cfg = FinetuneConfig {
+        model: "vit_wasi_eps80".into(),
+        dataset: "cifar10-like".into(),
+        samples: 256,
+        steps: 30,
+        seed: 233,
+        verbose: true,
+    };
+    println!("\nfine-tuning {} on {} for {} steps ...", cfg.model, cfg.dataset, cfg.steps);
+    let report = session.finetune(&cfg)?;
+
+    println!("\n=== quickstart report ===");
+    println!("final (smoothed) loss : {:.4}", report.final_loss);
+    println!("validation accuracy   : {:.3}", report.val_accuracy);
+    println!("mean step time        : {:.1} ms", report.mean_step_seconds * 1e3);
+    println!(
+        "training memory       : {:.2} MB ({} weight elems, {} act elems, {} state elems)",
+        report.memory.total_mb(),
+        report.memory.weights,
+        report.memory.activations,
+        report.memory.asi_state
+    );
+    Ok(())
+}

@@ -1,0 +1,472 @@
+"""AOT compiler: lower every model variant to HLO text + build the manifest.
+
+This is the ONLY entry point that runs Python; after ``make artifacts`` the
+rust binary is self-contained.  For each variant we emit:
+
+* ``<name>.train.hlo.txt``  — (params, state, x, y1h, lr) -> (params', state', loss, acc)
+* ``<name>.infer.hlo.txt``  — (params, x) -> logits
+* ``<name>.params.f32``     — initial flat parameters (little-endian f32)
+* ``<name>.state.f32``      — initial ASI warm-start state (WASI variants)
+
+plus micro-kernel artifacts for the rust-side L1 benches, the per-layer
+singular-value spectra (Fig. 3a), the Eq. 28 perplexity table for the
+rust rank-selection DP, and ``manifest.json`` tying it all together.
+
+HLO **text** is the interchange format (not ``.serialize()``): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, synthdata, train, wasi
+from .kernels import ref
+from .kernels.lowrank_linear import lowrank_linear as pallas_lowrank_linear
+from .kernels.subspace import power_step as pallas_power_step
+from .model import (SwinLiteConfig, TinyDecConfig, ViTConfig, WasiSpec)
+
+EPS_GRID = [0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_hlo(fn, example_args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def write_f32(arr: np.ndarray, path: str) -> None:
+    np.asarray(arr, np.float32).tofile(path)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Build-time pretraining (the "ImageNet" stand-in, DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+def pretrain_vit(cfg: ViTConfig, steps: int, batch: int, seed: int = 7):
+    """Brief supervised pretrain on a synthetic base task so fine-tuning
+    starts from a genuinely trained (decaying-spectrum) model."""
+    params = model.init_vit(cfg, seed=0)
+    pspec = train.ParamSpec.from_params(params)
+    sspec = train.empty_spec()
+    step = jax.jit(train.make_train_step(model.vit_forward, cfg, None, pspec, sspec))
+    data = synthdata.SynthVision(classes=cfg.classes, image=cfg.image, seed=seed)
+    flat = pspec.pack(params)
+    state = np.zeros(0, np.float32)
+    loss = acc = None
+    for i in range(steps):
+        x, y = data.batch(batch)
+        lr = 0.05 * 0.5 * (1 + np.cos(np.pi * i / steps))
+        flat, state, loss, acc = step(flat, state, x, y, lr)
+    print(f"  pretrain: {steps} steps, final loss {float(loss):.4f} acc {float(acc):.3f}")
+    return pspec.unpack(np.asarray(flat)), float(loss), float(acc)
+
+
+def pretrain_generic(forward, cfg, init_fn, data, steps: int, batch: int):
+    params = init_fn(cfg, 0)
+    pspec = train.ParamSpec.from_params(params)
+    step = jax.jit(train.make_train_step(forward, cfg, None, pspec, train.empty_spec()))
+    flat = pspec.pack(params)
+    state = np.zeros(0, np.float32)
+    loss = None
+    for i in range(steps):
+        x, y = data.batch(batch)
+        lr = 0.05 * 0.5 * (1 + np.cos(np.pi * i / steps))
+        flat, state, loss, acc = step(flat, state, x, y, lr)
+    print(f"  pretrain: {steps} steps, final loss {float(loss):.4f}")
+    return pspec.unpack(np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 28 perplexity table (feeds the rust rank-selection DP)
+# ---------------------------------------------------------------------------
+
+
+def capture_dy(forward, params, cfg, x, y1h, plan):
+    """Exact per-layer output gradients via zero probes (see model.linear)."""
+    spec = WasiSpec(asi_ranks={n: () for n in plan}, capture=True)
+    acts = train.capture_activations(forward, params, cfg, x, list(plan))
+    probes = {f"{n}.__probe": jnp.zeros(acts[n].shape[:-1] + (
+        np.shape(params[f"{n}.w"])[0],), jnp.float32) for n in plan}
+
+    def loss_fn(pr):
+        logits, _ = forward(params, x, cfg, spec, pr)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+
+    grads = jax.grad(loss_fn)(probes)
+    return acts, {n: np.asarray(grads[f"{n}.__probe"]) for n in plan}
+
+
+def perplexity_table(acts, dys, plan, eps_grid):
+    """P in R^{layers x E} + the rank tensor R^{layers x E x 3} (App. A.2)."""
+    layers = sorted(plan.keys())
+    table, ranks, mems = [], [], []
+    for name in layers:
+        row_p, row_r, row_m = [], [], []
+        for eps in eps_grid:
+            ppl, r, mem = wasi.perplexity_entry(acts[name], dys[name], eps)
+            row_p.append(ppl)
+            row_r.append(list(r))
+            row_m.append(mem)
+        table.append(row_p)
+        ranks.append(row_r)
+        mems.append(row_m)
+    return {"layers": layers, "eps_grid": eps_grid, "perplexity": table,
+            "ranks": ranks, "memory": mems}
+
+
+# ---------------------------------------------------------------------------
+# Variant emission
+# ---------------------------------------------------------------------------
+
+
+def emit_variant(out, name, forward, cfg, params, spec, state, batch,
+                 input_dim, classes, extra=None, train_too=True):
+    """Lower train+infer for one (model, spec) pair and write all files."""
+    pspec = train.ParamSpec.from_params(params)
+    sspec = train.ParamSpec.from_params(state) if state else train.empty_spec()
+
+    files = {}
+    t0 = time.time()
+    if train_too:
+        step = train.make_train_step(forward, cfg, spec, pspec, sspec)
+        args = (sds((pspec.total,)), sds((sspec.total,)),
+                sds((batch, input_dim)), sds((batch, classes)), sds(()))
+        path = os.path.join(out, f"{name}.train.hlo.txt")
+        write_hlo(step, args, path)
+        files["train_hlo"] = os.path.basename(path)
+    infer = train.make_infer_step(forward, cfg, spec, pspec)
+    ipath = os.path.join(out, f"{name}.infer.hlo.txt")
+    write_hlo(infer, (sds((pspec.total,)), sds((batch, input_dim))), ipath)
+    files["infer_hlo"] = os.path.basename(ipath)
+
+    write_f32(pspec.pack(params), os.path.join(out, f"{name}.params.f32"))
+    files["params_file"] = f"{name}.params.f32"
+    if state:
+        write_f32(sspec.pack(state), os.path.join(out, f"{name}.state.f32"))
+        files["state_file"] = f"{name}.state.f32"
+
+    entry = {
+        **files,
+        "batch": batch,
+        "input_dim": input_dim,
+        "classes": classes,
+        "params_len": pspec.total,
+        "state_len": sspec.total,
+        "param_spec": pspec.manifest(),
+        "state_spec": sspec.manifest(),
+    }
+    if extra:
+        entry.update(extra)
+    print(f"  {name}: params={pspec.total} state={sspec.total} "
+          f"({time.time() - t0:.1f}s)")
+    return entry
+
+
+def build_asi_variant(params, plan, eps, acts):
+    """ASI-only baseline: dense weights + compressed backward residuals."""
+    state, asi_ranks = train.init_asi_state(acts, plan, eps)
+    spec = WasiSpec(asi_ranks=asi_ranks, asi_only=frozenset(plan.keys()))
+    extra = {
+        "eps": eps,
+        "baseline": "asi",
+        "asi_ranks": {k: list(v) for k, v in asi_ranks.items()},
+        "layer_dims": {k: {"out_in": list(v[0]), "act": list(v[1])}
+                       for k, v in plan.items()},
+    }
+    return dict(params), state, spec, extra
+
+
+def build_svdllm_variant(params, plan, eps, acts, lora_rank=8):
+    """SVD-LLM baseline at the compression ratio WASI reaches at ``eps``
+    (App. B.1), with LoRA adapters (α=16, r=8)."""
+    out = dict(params)
+    ranks = {}
+    rng = np.random.default_rng(99)
+    for name in sorted(plan.keys()):
+        w = np.asarray(params[f"{name}.w"])
+        o, i = w.shape
+        # WASI's ratio at this eps for this layer:
+        _, _, s = wasi.svd_factorize(w, eps)
+        k_wasi = wasi.select_rank(s, eps)
+        ratio = (o * i) / max(1, k_wasi * (o + i))
+        k = wasi.svdllm_rank_for_ratio(o, i, max(ratio, 1.0))
+        x = np.asarray(acts[name]).sum(axis=0)  # (N, I) batch-summed
+        wu, wv = wasi.svdllm_factorize(w, x, k)
+        del out[f"{name}.w"]
+        out[f"{name}.wu"] = wu
+        out[f"{name}.wv"] = wv
+        out[f"{name}.la"] = (rng.standard_normal((lora_rank, i)) /
+                             np.sqrt(lora_rank)).astype(np.float32)
+        out[f"{name}.lb"] = np.zeros((o, lora_rank), np.float32)
+        ranks[name] = k
+    spec = WasiSpec(svdllm=frozenset(plan.keys()))
+    extra = {
+        "eps": eps,
+        "baseline": "svdllm",
+        "weight_ranks": ranks,
+        "layer_dims": {k: {"out_in": list(v[0]), "act": list(v[1])}
+                       for k, v in plan.items()},
+    }
+    return out, {}, spec, extra
+
+
+def activation_spectra(acts):
+    """Per-mode singular-value spectra of each captured activation (Fig. 4)."""
+    out = {}
+    for name, x in acts.items():
+        x = np.asarray(x)
+        modes = []
+        for m in range(x.ndim):
+            a = np.moveaxis(x, m, 0).reshape(x.shape[m], -1)
+            s = np.linalg.svd(a, compute_uv=False)
+            modes.append([float(v) for v in s[:64]])
+        out[name] = modes
+    return out
+
+
+def build_wasi_variant(forward, cfg, params, plan, eps, acts,
+                       use_kernels=False, method="gs"):
+    wp, weight_ranks, spectra = train.factorize_params(params, plan, eps)
+    state, asi_ranks = train.init_asi_state(acts, plan, eps)
+    spec = WasiSpec(weight_ranks=weight_ranks, asi_ranks=asi_ranks,
+                    method=method, use_kernels=use_kernels)
+    extra = {
+        "eps": eps,
+        "weight_ranks": weight_ranks,
+        "asi_ranks": {k: list(v) for k, v in asi_ranks.items()},
+        "layer_dims": {k: {"out_in": list(v[0]), "act": list(v[1])}
+                       for k, v in plan.items()},
+    }
+    return wp, state, spec, extra, spectra
+
+
+# ---------------------------------------------------------------------------
+# Micro-kernel artifacts (rust-side L1 benches)
+# ---------------------------------------------------------------------------
+
+
+def emit_kernels(out, manifest, fast):
+    b, n, i_dim, o_dim, k = 16, 65, 128, 512, 40
+    rows = b * n
+
+    def pallas_fwd(x, l, r):
+        return (pallas_lowrank_linear(x, l, r),)
+
+    def ref_fwd(x, l, r):
+        return (ref.lowrank_linear(x, l, r),)
+
+    def dense_fwd(x, w):
+        return (x @ w.T,)
+
+    shapes = (sds((b, n, i_dim)), sds((o_dim, k)), sds((k, i_dim)))
+    write_hlo(pallas_fwd, shapes, os.path.join(out, "kernel.lowrank_pallas.hlo.txt"))
+    write_hlo(ref_fwd, shapes, os.path.join(out, "kernel.lowrank_ref.hlo.txt"))
+    write_hlo(dense_fwd, (sds((b, n, i_dim)), sds((o_dim, i_dim))),
+              os.path.join(out, "kernel.dense.hlo.txt"))
+
+    def pallas_power(a, u):
+        return (pallas_power_step(a, u),)
+
+    write_hlo(pallas_power, (sds((i_dim, rows)), sds((i_dim, 16))),
+              os.path.join(out, "kernel.power_pallas.hlo.txt"))
+
+    manifest["kernels"] = {
+        "lowrank_pallas": {"hlo": "kernel.lowrank_pallas.hlo.txt",
+                           "shapes": {"x": [b, n, i_dim], "l": [o_dim, k], "r": [k, i_dim]}},
+        "lowrank_ref": {"hlo": "kernel.lowrank_ref.hlo.txt",
+                        "shapes": {"x": [b, n, i_dim], "l": [o_dim, k], "r": [k, i_dim]}},
+        "dense": {"hlo": "kernel.dense.hlo.txt",
+                  "shapes": {"x": [b, n, i_dim], "w": [o_dim, i_dim]}},
+        "power_pallas": {"hlo": "kernel.power_pallas.hlo.txt",
+                         "shapes": {"a": [i_dim, rows], "u": [i_dim, 16]}},
+    }
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced variant set + short pretrain (CI)")
+    ap.add_argument("--pretrain-steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args()
+
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    fast = args.fast
+    t_start = time.time()
+
+    vit_cfg = ViTConfig(dim=64, depth=2, heads=2) if fast else ViTConfig()
+    pre_steps = args.pretrain_steps or (20 if fast else 250)
+    batch = args.batch
+
+    manifest = {"models": {}, "spectra": {}, "eps_grid": EPS_GRID,
+                "vit_config": vit_cfg.__dict__ | {"tokens": vit_cfg.tokens}}
+
+    # ---- ViT ------------------------------------------------------------
+    print("[aot] pretraining ViT base model ...")
+    vit_params, _, _ = pretrain_vit(vit_cfg, pre_steps, 32)
+    plan = model.vit_wasi_layers(vit_cfg)
+
+    calib = synthdata.SynthVision(classes=vit_cfg.classes, image=vit_cfg.image,
+                                  seed=23)
+    cx, cy = calib.batch(batch)
+    acts, dys = capture_dy(model.vit_forward, vit_params, vit_cfg, cx, cy, plan)
+
+    print("[aot] emitting ViT variants ...")
+    manifest["models"]["vit_vanilla"] = emit_variant(
+        out, "vit_vanilla", model.vit_forward, vit_cfg, vit_params, None, None,
+        batch, vit_cfg.image ** 2 * 3, vit_cfg.classes)
+
+    wasi_eps = [0.8] if fast else [0.4, 0.6, 0.8, 0.9]
+    for eps in wasi_eps:
+        wp, state, spec, extra, spectra = build_wasi_variant(
+            model.vit_forward, vit_cfg, vit_params, plan, eps, acts)
+        tag = f"vit_wasi_eps{int(round(eps * 100))}"
+        manifest["models"][tag] = emit_variant(
+            out, tag, model.vit_forward, vit_cfg, wp, spec, state,
+            batch, vit_cfg.image ** 2 * 3, vit_cfg.classes, extra)
+        if eps == 0.8:
+            manifest["spectra"] = {k: [float(x) for x in v]
+                                   for k, v in spectra.items()}
+
+    # Baseline artifacts: ASI-only and SVD-LLM (for Fig. 5 / Tab. 2 rows).
+    asi_eps = [0.8] if fast else [0.4, 0.6, 0.8, 0.9]
+    for eps in asi_eps:
+        wp, state, spec, extra = build_asi_variant(vit_params, plan, eps, acts)
+        tag = f"vit_asi_eps{int(round(eps * 100))}"
+        manifest["models"][tag] = emit_variant(
+            out, tag, model.vit_forward, vit_cfg, wp, spec, state,
+            batch, vit_cfg.image ** 2 * 3, vit_cfg.classes, extra)
+    for eps in ([0.8] if fast else [0.4, 0.6, 0.8, 0.9]):
+        wp, state, spec, extra = build_svdllm_variant(vit_params, plan, eps, acts)
+        tag = f"vit_svdllm_eps{int(round(eps * 100))}"
+        manifest["models"][tag] = emit_variant(
+            out, tag, model.vit_forward, vit_cfg, wp, spec, state,
+            batch, vit_cfg.image ** 2 * 3, vit_cfg.classes, extra)
+
+    manifest["activation_spectra"] = activation_spectra(acts)
+
+    if not fast:
+        # Pallas-kernels-in-graph variant: proves the full L1->L2->L3 stack.
+        wp, state, spec, extra, _ = build_wasi_variant(
+            model.vit_forward, vit_cfg, vit_params, plan, 0.8, acts,
+            use_kernels=True)
+        extra["kernels_in_graph"] = True
+        manifest["models"]["vit_wasi_kernel_eps80"] = emit_variant(
+            out, "vit_wasi_kernel_eps80", model.vit_forward, vit_cfg, wp, spec,
+            state, batch, vit_cfg.image ** 2 * 3, vit_cfg.classes, extra)
+
+        # Attention+MLP variant (paper Tab. 1).
+        plan_attn = model.vit_wasi_layers(vit_cfg, attn=True)
+        acts_a, _ = capture_dy(model.vit_forward, vit_params, vit_cfg, cx, cy,
+                               plan_attn)
+        wp, state, spec, extra, _ = build_wasi_variant(
+            model.vit_forward, vit_cfg, vit_params, plan_attn, 0.8, acts_a)
+        extra["attn"] = True
+        manifest["models"]["vit_wasi_attn_eps80"] = emit_variant(
+            out, "vit_wasi_attn_eps80", model.vit_forward, vit_cfg, wp, spec,
+            state, batch, vit_cfg.image ** 2 * 3, vit_cfg.classes, extra)
+
+    # Eq. 28 perplexity table for the rust rank-selection DP.
+    print("[aot] building perplexity table ...")
+    manifest["perplexity"] = perplexity_table(acts, dys, plan, EPS_GRID)
+    manifest["activation_dims"] = {n: list(np.shape(acts[n])) for n in plan}
+
+    # ---- SwinLite (4D activations) --------------------------------------
+    if not fast:
+        swin_cfg = SwinLiteConfig()
+        print("[aot] pretraining SwinLite ...")
+        swin_data = synthdata.SynthVision(classes=swin_cfg.classes,
+                                          image=swin_cfg.image, seed=11)
+        swin_params = pretrain_generic(model.swinlite_forward, swin_cfg,
+                                       model.init_swinlite, swin_data,
+                                       pre_steps // 2, 32)
+        splan = model.swinlite_wasi_layers(swin_cfg)
+        sacts = train.capture_activations(model.swinlite_forward, swin_params,
+                                          swin_cfg, swin_data.batch(batch)[0],
+                                          list(splan))
+        manifest["models"]["swinlite_vanilla"] = emit_variant(
+            out, "swinlite_vanilla", model.swinlite_forward, swin_cfg,
+            swin_params, None, None, batch, swin_cfg.image ** 2 * 3,
+            swin_cfg.classes)
+        for eps in [0.6, 0.8]:
+            wp, state, spec, extra, _ = build_wasi_variant(
+                model.swinlite_forward, swin_cfg, swin_params, splan, eps, sacts)
+            tag = f"swinlite_wasi_eps{int(round(eps * 100))}"
+            manifest["models"][tag] = emit_variant(
+                out, tag, model.swinlite_forward, swin_cfg, wp, spec, state,
+                batch, swin_cfg.image ** 2 * 3, swin_cfg.classes, extra)
+        manifest["swin_config"] = {
+            "image": swin_cfg.image, "patch": swin_cfg.patch,
+            "dim": swin_cfg.dim, "depths": list(swin_cfg.depths),
+            "window": swin_cfg.window, "classes": swin_cfg.classes}
+
+    # ---- TinyDec (decoder-only, BoolQ-like) ------------------------------
+    if not fast:
+        dec_cfg = TinyDecConfig()
+        print("[aot] pretraining TinyDec ...")
+        dec_data = synthdata.SynthSequence(vocab=dec_cfg.vocab, seq=dec_cfg.seq,
+                                           seed=13)
+        dec_params = pretrain_generic(model.tinydec_forward, dec_cfg,
+                                      model.init_tinydec, dec_data,
+                                      pre_steps // 2, 32)
+        dplan = model.tinydec_wasi_layers(dec_cfg)
+        dacts = train.capture_activations(model.tinydec_forward, dec_params,
+                                          dec_cfg, dec_data.batch(batch)[0],
+                                          list(dplan))
+        manifest["models"]["tinydec_vanilla"] = emit_variant(
+            out, "tinydec_vanilla", model.tinydec_forward, dec_cfg, dec_params,
+            None, None, batch, dec_cfg.seq, dec_cfg.classes)
+        wp, state, spec, extra, _ = build_wasi_variant(
+            model.tinydec_forward, dec_cfg, dec_params, dplan, 0.5, dacts)
+        manifest["models"]["tinydec_wasi_eps50"] = emit_variant(
+            out, "tinydec_wasi_eps50", model.tinydec_forward, dec_cfg, wp, spec,
+            state, batch, dec_cfg.seq, dec_cfg.classes, extra)
+        manifest["dec_config"] = {
+            "vocab": dec_cfg.vocab, "seq": dec_cfg.seq, "dim": dec_cfg.dim,
+            "depth": dec_cfg.depth, "classes": dec_cfg.classes}
+
+    # ---- micro-kernels ----------------------------------------------------
+    print("[aot] emitting kernel artifacts ...")
+    emit_kernels(out, manifest, fast)
+
+    manifest["build"] = {"fast": fast, "pretrain_steps": pre_steps,
+                         "batch": batch,
+                         "elapsed_s": round(time.time() - t_start, 1)}
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t_start:.1f}s -> {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

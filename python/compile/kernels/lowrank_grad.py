@@ -1,0 +1,75 @@
+"""Pallas kernel for the f_LR low-rank gradient contraction (Eqs. 15-18).
+
+Computes  dW[o,i] = sum_{b,n} dy[b,n,o] * ~X[b,n,i]  from the Tucker
+factors of ~X without ever reconstructing ~X.  The grid walks the token
+dimension N in blocks and accumulates dW in the output block, which stays
+resident (all grid steps map to block (0, 0)) — the classic reduction
+pattern.  Per grid step every operand is small: a (B, n_blk, O) slab of
+dy, the (r1, r2, r3) core, and the three thin factor matrices, so the
+whole working set fits VMEM at WASI ranks.
+
+Runs under ``interpret=True`` on CPU; see lowrank_linear.py for why.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(dy_ref, u1_ref, u2_ref, u3_ref, core_ref, o_ref):
+    g = pl.program_id(0)
+
+    dy = dy_ref[...]        # (B, n_blk, O)
+    u1 = u1_ref[...]        # (B, r1)
+    u2 = u2_ref[...]        # (n_blk, r2)
+    u3 = u3_ref[...]        # (I, r3)
+    core = core_ref[...]    # (r1, r2, r3)
+
+    # Eq. 15: Z1[n, o, p] = sum_b dy[b,n,o] u1[b,p]
+    z1 = jnp.einsum("bno,bp->nop", dy, u1)
+    # Eq. 16: Z2[p, s, n] = sum_q core[p,q,s] u2[n,q]
+    z2 = jnp.einsum("pqs,nq->psn", core, u2)
+    # Eq. 17: Z3[p, i, n] = sum_s Z2[p,s,n] u3[i,s]
+    z3 = jnp.einsum("psn,is->pin", z2, u3)
+    # Eq. 18 (partial over this n-block): dW += sum_{n,p} Z1 Z3
+    contrib = jnp.einsum("nop,pin->oi", z1, z3)
+
+    @pl.when(g == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("n_block", "interpret"))
+def lowrank_grad_3d(core, u1, u2, u3, dy, n_block: int = 64, interpret: bool = True):
+    """f_LR for 3D activations via Pallas.
+
+    core: (r1, r2, r3); u1: (B, r1); u2: (N, r2); u3: (I, r3);
+    dy: (B, N, O)  ->  dW (O, I).
+    """
+    b, n, o_dim = dy.shape
+    i_dim, r3 = u3.shape
+    r1, r2, _ = core.shape
+
+    padded = (n + n_block - 1) // n_block * n_block
+    if padded != n:
+        dy = jnp.pad(dy, ((0, 0), (0, padded - n), (0, 0)))
+        u2 = jnp.pad(u2, ((0, padded - n), (0, 0)))
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(padded // n_block,),
+        in_specs=[
+            pl.BlockSpec((b, n_block, o_dim), lambda g: (0, g, 0)),
+            pl.BlockSpec((b, r1), lambda g: (0, 0)),
+            pl.BlockSpec((n_block, r2), lambda g: (g, 0)),
+            pl.BlockSpec((i_dim, r3), lambda g: (0, 0)),
+            pl.BlockSpec((r1, r2, r3), lambda g: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((o_dim, i_dim), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((o_dim, i_dim), jnp.float32),
+        interpret=interpret,
+    )(dy, u1, u2, u3, core)

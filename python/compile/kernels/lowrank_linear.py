@@ -1,0 +1,66 @@
+"""Pallas kernel for the WASI factored forward  Y = X R^T L^T  (Eq. 8).
+
+TPU mapping of the paper's insight (DESIGN.md §Hardware-Adaptation): the
+rank-space intermediate H = X R^T is the *small* tensor, so it stays in
+VMEM between the two matmul stages of a single kernel — one HBM round-trip
+of H is eliminated compared to two separate matmul ops.  The grid walks
+the flattened token dimension (B*N) in ``block_rows`` panels; R^T and L^T
+are small enough at WASI ranks to be resident per grid step.
+
+Runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); real-TPU perf is estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, rt_ref, lt_ref, o_ref):
+    """One grid step: a rows-panel of X -> rows-panel of Y.
+
+    The intermediate H = X R^T (block_rows x K) never leaves VMEM: it is
+    produced by the first ``dot`` and consumed by the second inside the
+    same kernel invocation.
+    """
+    h = jnp.dot(x_ref[...], rt_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(h, lt_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def lowrank_linear(x, l, r, block_rows: int = 128, interpret: bool = True):
+    """Factored linear forward via Pallas.
+
+    x: (..., I); l: (O, K); r: (K, I)  ->  (..., O)
+
+    Leading dims are flattened to rows and padded up to a multiple of
+    ``block_rows``; the pad rows are sliced off on return.
+    """
+    lead = x.shape[:-1]
+    i_dim = x.shape[-1]
+    o_dim, k_dim = l.shape
+    rows = 1
+    for d in lead:
+        rows *= d
+    xf = x.reshape(rows, i_dim)
+
+    padded = (rows + block_rows - 1) // block_rows * block_rows
+    if padded != rows:
+        xf = jnp.pad(xf, ((0, padded - rows), (0, 0)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(padded // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, i_dim), lambda g: (g, 0)),
+            pl.BlockSpec((i_dim, k_dim), lambda g: (0, 0)),
+            pl.BlockSpec((k_dim, o_dim), lambda g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, o_dim), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, o_dim), jnp.float32),
+        interpret=interpret,
+    )(xf, r.T, l.T)
+
+    return out[:rows].reshape(*lead, o_dim)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact reference implementation
+here; pytest asserts allclose between the two over a hypothesis-driven
+sweep of shapes and dtypes.  The references are also what the L2 model
+uses by default (XLA fuses them well on CPU); the kernel path is selected
+with ``use_kernels=True`` to prove the full three-layer composition.
+"""
+
+import jax.numpy as jnp
+
+
+def lowrank_linear(x, l, r):
+    """Y = X R^T L^T  — the WASI factored forward (Eq. 8).
+
+    x: (..., I), r: (K, I), l: (O, K)  ->  (..., O).
+    The rank-space intermediate H = X R^T is the small tensor.
+    """
+    h = x @ r.T
+    return h @ l.T
+
+
+def lowrank_linear_h(x, r):
+    """Rank-space intermediate H = X R^T, exposed for the backward pass."""
+    return x @ r.T
+
+
+def gram(m):
+    """G = M^T M — the (small) Gram matrix used by orthogonalization."""
+    return m.T @ m
+
+
+def power_step(a_m, u_prev):
+    """Un-orthogonalized subspace-iteration power step:  A (A^T U)."""
+    return a_m @ (a_m.T @ u_prev)
+
+
+def lowrank_grad_3d(core, u1, u2, u3, dy):
+    """f_LR for 3D activations (paper Eqs. 15-18).
+
+    Computes  dW[o, i] = sum_{b,n} dy[b,n,o] * ~X[b,n,i]  where
+    ~X = core x1 u1 x2 u2 x3 u3, WITHOUT reconstructing ~X.
+
+    core: (r1, r2, r3); u1: (B, r1); u2: (N, r2); u3: (I, r3);
+    dy: (B, N, O)  ->  (O, I).
+
+    In factored WASI the same contraction runs with dH (B, N, K) in place
+    of dy, producing dR (K, I).
+    """
+    # Eq. 15: Z1[n, o, r1] = sum_b dy[b,n,o] u1[b,r1]
+    z1 = jnp.einsum("bno,bp->nop", dy, u1)
+    # Eq. 16: Z2[r1, r3, n] = sum_r2 core[r1,r2,r3] u2[n,r2]
+    z2 = jnp.einsum("pqs,nq->psn", core, u2)
+    # Eq. 17: Z3[r1, i, n] = sum_r3 Z2[r1,r3,n] u3[i,r3]
+    z3 = jnp.einsum("psn,is->pin", z2, u3)
+    # Eq. 18: dW[o, i] = sum_{n,r1} Z1[n,o,r1] Z3[r1,i,n]
+    return jnp.einsum("nop,pin->oi", z1, z3)
+
+
+def lowrank_grad_4d(core, u1, u2, u3, u4, dy):
+    """f_LR for 4D activations (paper Eqs. 22-26, SwinLite path).
+
+    core: (r1, r2, r3, r4); u1: (B, r1); u2: (H, r2); u3: (W, r3);
+    u4: (I, r4); dy: (B, H, W, O)  ->  (O, I).
+    """
+    # Eq. 22: Z1[r1, h, w, o] = sum_b dy[b,h,w,o] u1[b,r1]
+    z1 = jnp.einsum("bhwo,bp->phwo", dy, u1)
+    # Eq. 23: Z2[r1, h, r3, r4] = sum_r2 core[r1,r2,r3,r4] u2[h,r2]
+    z2 = jnp.einsum("pqst,hq->phst", core, u2)
+    # Eq. 24: Z3[r1, h, r3, o] = sum_w Z1[r1,h,w,o] u3[w,r3]
+    z3 = jnp.einsum("phwo,ws->phso", z1, u3)
+    # Eq. 25: Z4[r1, h, i, r3] = sum_r4 Z2[r1,h,r3,r4] u4[i,r4]
+    z4 = jnp.einsum("phst,it->phis", z2, u4)
+    # Eq. 26: dW[o, i] = sum_{h,r1,r3} Z3[r1,h,r3,o] Z4[r1,h,i,r3]
+    return jnp.einsum("phso,phis->oi", z3, z4)
+
+
+def dense_grad(x, dy):
+    """Vanilla weight gradient  dW = dy^T x  over all leading dims (Eq. 2)."""
+    xf = x.reshape(-1, x.shape[-1])
+    dyf = dy.reshape(-1, dy.shape[-1])
+    return dyf.T @ xf
+
+
+def tucker3(x, u1, u2, u3):
+    """Tucker core  S = X x1 u1^T x2 u2^T x3 u3^T  for a 3D tensor."""
+    s = jnp.einsum("bni,bp->pni", x, u1)
+    s = jnp.einsum("pni,nq->pqi", s, u2)
+    return jnp.einsum("pqi,ir->pqr", s, u3)
+
+
+def tucker4(x, u1, u2, u3, u4):
+    """Tucker core for a 4D tensor."""
+    s = jnp.einsum("bhwi,bp->phwi", x, u1)
+    s = jnp.einsum("phwi,hq->pqwi", s, u2)
+    s = jnp.einsum("pqwi,wr->pqri", s, u3)
+    return jnp.einsum("pqri,it->pqrt", s, u4)

@@ -1,0 +1,452 @@
+"""L2 models: ViTTiny, SwinLite (4D activations), TinyDec (decoder-only).
+
+Each model exists in two parameterizations:
+
+* **vanilla** — every linear layer is a dense (O, I) matrix;
+* **WASI**    — the designated linear layers are factored (L, R) pairs with
+  per-layer ASI warm-start bases threaded through the forward pass
+  (see wasi.py).  By default only the MLP-block linears are factored
+  (the paper's main experiments); ``wasi_attn=True`` extends to the
+  attention qkv/proj linears (paper Tab. 1).
+
+Parameters are plain dicts keyed by dotted names; ``param_spec`` fixes a
+deterministic order so the whole model crosses the rust↔XLA boundary as a
+single flat f32 vector (static slicing in ``pack.py``).
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import wasi
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ViTConfig:
+    """ViT-tiny: 32x32x3 images, 4x4 patches -> 64 tokens + CLS."""
+
+    image: int = 32
+    patch: int = 4
+    dim: int = 128
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: int = 4
+    classes: int = 10
+
+    @property
+    def tokens(self) -> int:
+        return (self.image // self.patch) ** 2 + 1  # + CLS
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+    @property
+    def hidden(self) -> int:
+        return self.dim * self.mlp_ratio
+
+
+@dataclass(frozen=True)
+class SwinLiteConfig:
+    """Two-stage hierarchical model with (B, H, W, C) activations.
+
+    Window attention over ``window``-sized squares + 4D-activation MLP
+    blocks; patch merging halves H,W and doubles C between stages.  This
+    is the 4D-ASI path that SVD-LLM's whitening cannot handle (App. A.4).
+    """
+
+    image: int = 32
+    patch: int = 2
+    dim: int = 48
+    depths: tuple = (2, 2)
+    window: int = 4
+    heads: int = 4
+    mlp_ratio: int = 4
+    classes: int = 10
+
+    @property
+    def grid(self) -> int:
+        return self.image // self.patch  # 16
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+
+@dataclass(frozen=True)
+class TinyDecConfig:
+    """Decoder-only LM head for BoolQ-like yes/no sequence classification."""
+
+    vocab: int = 256
+    seq: int = 64
+    dim: int = 128
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: int = 4
+    classes: int = 2
+
+
+@dataclass(frozen=True)
+class WasiSpec:
+    """Factorization plan for one model: layer name -> (K, asi_ranks)."""
+
+    weight_ranks: dict = field(default_factory=dict)   # name -> K
+    asi_ranks: dict = field(default_factory=dict)      # name -> tuple r_m
+    method: str = "gs"
+    use_kernels: bool = False
+    refresh_every: int = 1
+    capture: bool = False  # record layer inputs (build-time calibration)
+    # Baseline modes: ASI-only (dense W, compressed residuals) and
+    # SVD-LLM (frozen whitened factors + LoRA adapter).
+    asi_only: frozenset = frozenset()
+    svdllm: frozenset = frozenset()
+    lora_alpha: float = 16.0
+
+    def is_factored(self, name: str) -> bool:
+        return name in self.weight_ranks
+
+
+# ---------------------------------------------------------------------------
+# Shared building blocks
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def linear(params, prefix, x, spec: WasiSpec | None, state, new_state):
+    """Dense or WASI-factored linear + bias, dispatching on the spec.
+
+    ``state``/``new_state`` are dicts of ASI warm-start bases; the layer
+    reads its bases from ``state`` and writes refreshed ones into
+    ``new_state``.
+    """
+    b = params[f"{prefix}.b"]
+    if spec is not None and spec.capture and prefix in spec.asi_ranks:
+        new_state[f"{prefix}.__x"] = x  # build-time calibration hook
+    if spec is not None and prefix in spec.asi_only and f"{prefix}.u1" in state:
+        # ASI-only baseline: dense weight, compressed backward residuals.
+        w = params[f"{prefix}.w"]
+        u1, u2, u3 = (state[f"{prefix}.u{m}"] for m in (1, 2, 3))
+        y, u1n, u2n, u3n = wasi.asi_linear(x, w, u1, u2, u3, spec.method)
+        for m, u in zip((1, 2, 3), (u1n, u2n, u3n)):
+            new_state[f"{prefix}.u{m}"] = u
+        return y + b
+    if spec is not None and prefix in spec.svdllm and f"{prefix}.wu" in params:
+        # SVD-LLM baseline: frozen whitened low-rank pair + LoRA adapter.
+        wu = jax.lax.stop_gradient(params[f"{prefix}.wu"])
+        wv = jax.lax.stop_gradient(params[f"{prefix}.wv"])
+        la = params[f"{prefix}.la"]  # (r, I)
+        lb = params[f"{prefix}.lb"]  # (O, r)
+        y = (x @ wv.T) @ wu.T
+        y = y + ((x @ la.T) @ lb.T) * (spec.lora_alpha / la.shape[0])
+        return y + b
+    if spec is not None and spec.is_factored(prefix) and f"{prefix}.l" in params:
+        l, r = params[f"{prefix}.l"], params[f"{prefix}.r"]
+        if f"{prefix}.u1" not in state:
+            # Inference: no backward pass, so no ASI compression (Eq. 8 only).
+            return ref.lowrank_linear(x, l, r) + b
+        if x.ndim == 3:
+            u1, u2, u3 = (state[f"{prefix}.u{m}"] for m in (1, 2, 3))
+            y, u1n, u2n, u3n = wasi.wasi_linear(
+                x, l, r, u1, u2, u3, spec.method, spec.use_kernels
+            )
+            for m, u in zip((1, 2, 3), (u1n, u2n, u3n)):
+                new_state[f"{prefix}.u{m}"] = u
+        elif x.ndim == 4:
+            u1, u2, u3, u4 = (state[f"{prefix}.u{m}"] for m in (1, 2, 3, 4))
+            y, u1n, u2n, u3n, u4n = wasi.wasi_linear_4d(
+                x, l, r, u1, u2, u3, u4, spec.method
+            )
+            for m, u in zip((1, 2, 3, 4), (u1n, u2n, u3n, u4n)):
+                new_state[f"{prefix}.u{m}"] = u
+        else:
+            raise ValueError(f"unsupported activation rank {x.ndim}")
+        return y + b
+    w = params[f"{prefix}.w"]
+    y = x @ w.T + b
+    if spec is not None and spec.capture:
+        probe = state.get(f"{prefix}.__probe")
+        if probe is not None:
+            # Gradient w.r.t. this zero probe is exactly dL/dY for this
+            # layer — used to build the Eq. 28 perplexity table at AOT time.
+            y = y + probe
+    return y
+
+
+def attention(params, prefix, x, heads, spec, state, new_state, causal=False):
+    """Multi-head self-attention over (B, N, D) tokens."""
+    b_, n, d = x.shape
+    hd = d // heads
+    qkv = linear(params, f"{prefix}.qkv", x, spec, state, new_state)  # (B,N,3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def split_heads(t):
+        return t.reshape(b_, n, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split_heads(q), split_heads(k), split_heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b_, n, d)
+    return linear(params, f"{prefix}.proj", out, spec, state, new_state)
+
+
+def mlp(params, prefix, x, spec, state, new_state):
+    h = linear(params, f"{prefix}.fc1", x, spec, state, new_state)
+    h = jax.nn.gelu(h)
+    return linear(params, f"{prefix}.fc2", h, spec, state, new_state)
+
+
+def block(params, prefix, x, heads, spec, state, new_state, causal=False):
+    h = layer_norm(x, params[f"{prefix}.ln1.g"], params[f"{prefix}.ln1.b"])
+    x = x + attention(params, f"{prefix}.attn", h, heads, spec, state, new_state, causal)
+    h = layer_norm(x, params[f"{prefix}.ln2.g"], params[f"{prefix}.ln2.b"])
+    x = x + mlp(params, f"{prefix}.mlp", h, spec, state, new_state)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Weight init (power-law spectra: the "pretrained" premise, see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+def _powerlaw_matrix(rng: np.random.Generator, o: int, i: int, alpha: float = 0.8,
+                     scale: float | None = None) -> np.ndarray:
+    """Random (O, I) matrix with singular values s_j ∝ (j+1)^-alpha.
+
+    Real pretrained transformer weights have rapidly decaying spectra —
+    exactly the premise WASI exploits.  Plain Gaussian init has a flat
+    Marchenko-Pastur spectrum and would make every K_i ≈ full rank.
+    """
+    k = min(o, i)
+    u, _ = np.linalg.qr(rng.standard_normal((o, k)))
+    v, _ = np.linalg.qr(rng.standard_normal((i, k)))
+    s = (np.arange(1, k + 1, dtype=np.float64) ** -alpha)
+    if scale is None:
+        scale = np.sqrt(2.0 / (o + i)) * np.sqrt(k) / np.linalg.norm(s)
+    w = (u * (s * scale * np.sqrt(k))) @ v.T
+    return w.astype(np.float32)
+
+
+def _init_linear(params, rng, prefix, o, i):
+    params[f"{prefix}.w"] = _powerlaw_matrix(rng, o, i)
+    params[f"{prefix}.b"] = np.zeros((o,), np.float32)
+
+
+def _init_block(params, rng, prefix, d, hidden):
+    _init_linear(params, rng, f"{prefix}.attn.qkv", 3 * d, d)
+    _init_linear(params, rng, f"{prefix}.attn.proj", d, d)
+    _init_linear(params, rng, f"{prefix}.mlp.fc1", hidden, d)
+    _init_linear(params, rng, f"{prefix}.mlp.fc2", d, hidden)
+    for ln in ("ln1", "ln2"):
+        params[f"{prefix}.{ln}.g"] = np.ones((d,), np.float32)
+        params[f"{prefix}.{ln}.b"] = np.zeros((d,), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# ViTTiny
+# ---------------------------------------------------------------------------
+
+
+def init_vit(cfg: ViTConfig, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    params: dict = {}
+    _init_linear(params, rng, "embed", cfg.dim, cfg.patch_dim)
+    params["cls"] = (0.02 * rng.standard_normal((1, 1, cfg.dim))).astype(np.float32)
+    params["pos"] = (0.02 * rng.standard_normal((1, cfg.tokens, cfg.dim))).astype(np.float32)
+    for i in range(cfg.depth):
+        _init_block(params, rng, f"blocks.{i}", cfg.dim, cfg.hidden)
+    params["norm.g"] = np.ones((cfg.dim,), np.float32)
+    params["norm.b"] = np.zeros((cfg.dim,), np.float32)
+    _init_linear(params, rng, "head", cfg.classes, cfg.dim)
+    return params
+
+
+def patchify(x, cfg: ViTConfig):
+    """(B, 32*32*3) flat images -> (B, 64, 48) patch tokens."""
+    b = x.shape[0]
+    g = cfg.image // cfg.patch
+    x = x.reshape(b, g, cfg.patch, g, cfg.patch, 3)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, g * g, cfg.patch_dim)
+
+
+def vit_forward(params, x, cfg: ViTConfig, spec: WasiSpec | None = None,
+                state: dict | None = None):
+    """x: (B, image*image*3) flat f32 -> (logits (B, classes), new_state)."""
+    new_state: dict = {}
+    state = state or {}
+    tok = patchify(x, cfg)
+    tok = linear(params, "embed", tok, None, state, new_state)
+    cls = jnp.broadcast_to(params["cls"], (tok.shape[0], 1, cfg.dim))
+    tok = jnp.concatenate([cls, tok], axis=1) + params["pos"]
+    for i in range(cfg.depth):
+        tok = block(params, f"blocks.{i}", tok, cfg.heads, spec, state, new_state)
+    tok = layer_norm(tok, params["norm.g"], params["norm.b"])
+    logits = linear(params, "head", tok[:, 0], None, state, new_state)
+    return logits, new_state
+
+
+def vit_wasi_layers(cfg: ViTConfig, attn: bool = False):
+    """Names of the linears WASI factors, with their (O, I) and activation dims."""
+    layers = {}
+    n = cfg.tokens
+    for i in range(cfg.depth):
+        layers[f"blocks.{i}.mlp.fc1"] = ((cfg.hidden, cfg.dim), (n, cfg.dim))
+        layers[f"blocks.{i}.mlp.fc2"] = ((cfg.dim, cfg.hidden), (n, cfg.hidden))
+        if attn:
+            layers[f"blocks.{i}.attn.qkv"] = ((3 * cfg.dim, cfg.dim), (n, cfg.dim))
+            layers[f"blocks.{i}.attn.proj"] = ((cfg.dim, cfg.dim), (n, cfg.dim))
+    return layers
+
+
+# ---------------------------------------------------------------------------
+# SwinLite
+# ---------------------------------------------------------------------------
+
+
+def init_swinlite(cfg: SwinLiteConfig, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    params: dict = {}
+    _init_linear(params, rng, "embed", cfg.dim, cfg.patch_dim)
+    d = cfg.dim
+    g = cfg.grid
+    for s, depth in enumerate(cfg.depths):
+        params[f"stages.{s}.pos"] = (0.02 * rng.standard_normal((1, g, g, d))).astype(np.float32)
+        for i in range(depth):
+            _init_block(params, rng, f"stages.{s}.blocks.{i}", d, d * cfg.mlp_ratio)
+        if s + 1 < len(cfg.depths):
+            _init_linear(params, rng, f"stages.{s}.merge", 2 * d, 4 * d)
+            d, g = 2 * d, g // 2
+    params["norm.g"] = np.ones((d,), np.float32)
+    params["norm.b"] = np.zeros((d,), np.float32)
+    _init_linear(params, rng, "head", cfg.classes, d)
+    return params
+
+
+def _window_partition(x, w):
+    b, h, ww, c = x.shape
+    x = x.reshape(b, h // w, w, ww // w, w, c).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(-1, w * w, c)  # (B*nw, w*w, C)
+
+
+def _window_merge(x, w, h, ww, b):
+    c = x.shape[-1]
+    x = x.reshape(b, h // w, ww // w, w, w, c).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, h, ww, c)
+
+
+def swin_block(params, prefix, x, cfg: SwinLiteConfig, spec, state, new_state):
+    """Window attention (3D within windows) + 4D-activation MLP."""
+    b, h, w_, c = x.shape
+    hn = layer_norm(x, params[f"{prefix}.ln1.g"], params[f"{prefix}.ln1.b"])
+    win = _window_partition(hn, cfg.window)
+    # Attention linears stay dense here (spec=None): the 4D WASI path is
+    # exercised by the MLP; qkv inside windows is 3D with a huge batch dim.
+    att = attention(params, f"{prefix}.attn", win, cfg.heads, None, state, new_state)
+    x = x + _window_merge(att, cfg.window, h, w_, b)
+    hn = layer_norm(x, params[f"{prefix}.ln2.g"], params[f"{prefix}.ln2.b"])
+    x = x + mlp(params, f"{prefix}.mlp", hn, spec, state, new_state)  # 4D
+    return x
+
+
+def swinlite_forward(params, x, cfg: SwinLiteConfig, spec: WasiSpec | None = None,
+                     state: dict | None = None):
+    """x: (B, image*image*3) -> (logits, new_state); activations are 4D."""
+    new_state: dict = {}
+    state = state or {}
+    b = x.shape[0]
+    g = cfg.grid
+    x = x.reshape(b, g, cfg.patch, g, cfg.patch, 3).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, g, g, cfg.patch_dim)
+    x = linear(params, "embed", x, None, state, new_state)
+    d = cfg.dim
+    for s, depth in enumerate(cfg.depths):
+        x = x + params[f"stages.{s}.pos"]
+        for i in range(depth):
+            x = swin_block(params, f"stages.{s}.blocks.{i}", x, cfg, spec, state, new_state)
+        if s + 1 < len(cfg.depths):
+            bb, hh, ww, cc = x.shape
+            x = x.reshape(bb, hh // 2, 2, ww // 2, 2, cc).transpose(0, 1, 3, 2, 4, 5)
+            x = x.reshape(bb, hh // 2, ww // 2, 4 * cc)
+            x = linear(params, f"stages.{s}.merge", x, None, state, new_state)
+            d = 2 * d
+    x = layer_norm(x, params["norm.g"], params["norm.b"])
+    pooled = jnp.mean(x, axis=(1, 2))
+    logits = linear(params, "head", pooled, None, state, new_state)
+    return logits, new_state
+
+
+def swinlite_wasi_layers(cfg: SwinLiteConfig):
+    layers = {}
+    d, g = cfg.dim, cfg.grid
+    for s, depth in enumerate(cfg.depths):
+        for i in range(depth):
+            layers[f"stages.{s}.blocks.{i}.mlp.fc1"] = (
+                (d * cfg.mlp_ratio, d), (g, g, d))
+            layers[f"stages.{s}.blocks.{i}.mlp.fc2"] = (
+                (d, d * cfg.mlp_ratio), (g, g, d * cfg.mlp_ratio))
+        if s + 1 < len(cfg.depths):
+            d, g = 2 * d, g // 2
+    return layers
+
+
+# ---------------------------------------------------------------------------
+# TinyDec
+# ---------------------------------------------------------------------------
+
+
+def init_tinydec(cfg: TinyDecConfig, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    params: dict = {}
+    params["tok_embed"] = (0.02 * rng.standard_normal((cfg.vocab, cfg.dim))).astype(np.float32)
+    params["pos"] = (0.02 * rng.standard_normal((1, cfg.seq, cfg.dim))).astype(np.float32)
+    for i in range(cfg.depth):
+        _init_block(params, rng, f"blocks.{i}", cfg.dim, cfg.dim * cfg.mlp_ratio)
+    params["norm.g"] = np.ones((cfg.dim,), np.float32)
+    params["norm.b"] = np.zeros((cfg.dim,), np.float32)
+    _init_linear(params, rng, "head", cfg.classes, cfg.dim)
+    return params
+
+
+def tinydec_forward(params, x, cfg: TinyDecConfig, spec: WasiSpec | None = None,
+                    state: dict | None = None, tune_from: int = 0):
+    """x: (B, seq) f32 token ids -> (logits (B, classes), new_state).
+
+    ``tune_from`` freezes blocks [0, tune_from) with stop_gradient —
+    the paper's "fine-tune the last k layers" sweep (Fig. 7).
+    """
+    new_state: dict = {}
+    state = state or {}
+    ids = x.astype(jnp.int32)
+    tok = params["tok_embed"][ids] + params["pos"]
+    for i in range(cfg.depth):
+        tok = block(params, f"blocks.{i}", tok, cfg.heads, spec, state, new_state,
+                    causal=True)
+        if i + 1 == tune_from:
+            tok = jax.lax.stop_gradient(tok)
+    tok = layer_norm(tok, params["norm.g"], params["norm.b"])
+    logits = linear(params, "head", tok[:, -1], None, state, new_state)
+    return logits, new_state
+
+
+def tinydec_wasi_layers(cfg: TinyDecConfig, tune_from: int = 0):
+    layers = {}
+    hidden = cfg.dim * cfg.mlp_ratio
+    for i in range(tune_from, cfg.depth):
+        layers[f"blocks.{i}.mlp.fc1"] = ((hidden, cfg.dim), (cfg.seq, cfg.dim))
+        layers[f"blocks.{i}.mlp.fc2"] = ((cfg.dim, hidden), (cfg.seq, hidden))
+    return layers

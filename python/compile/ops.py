@@ -1,0 +1,136 @@
+"""LAPACK-free linear-algebra primitives used inside lowered graphs.
+
+Everything here must lower to plain HLO ops: the standalone PJRT CPU client
+used by the rust runtime (xla_extension 0.5.1) cannot resolve the LAPACK
+custom-calls that ``jnp.linalg.{qr,svd,cholesky}`` emit on CPU.  The paper's
+Algorithm 1 calls for Gram-Schmidt anyway, so that is the default
+orthogonalizer; Newton-Schulz (pure matmuls) is provided as the perf-pass
+alternative.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+def orthogonalize_gs(a: jax.Array) -> jax.Array:
+    """Column-wise (modified) Gram-Schmidt orthonormalization.
+
+    ``a`` has shape (n, r) with static r.  Returns Q (n, r) with
+    orthonormal columns spanning (approximately) the column space of
+    ``a``.  Implemented as a ``fori_loop`` over columns so the lowered
+    graph stays small regardless of r; at step j the accumulator q holds
+    zeros in columns >= j, so the full-width projection ``q @ (q.T v)``
+    only removes components along already-orthonormalized columns.
+    """
+    n, r = a.shape
+
+    def body(j, q):
+        v = jax.lax.dynamic_slice(a, (0, j), (n, 1))  # (n, 1)
+        coef = q.T @ v  # (r, 1); columns >= j of q are zero
+        v = v - q @ coef
+        # second projection pass for numerical robustness (CGS2)
+        coef2 = q.T @ v
+        v = v - q @ coef2
+        nrm = jnp.sqrt(jnp.sum(v * v)) + _EPS
+        v = v / nrm
+        return jax.lax.dynamic_update_slice(q, v, (0, j))
+
+    q0 = jnp.zeros_like(a)
+    return jax.lax.fori_loop(0, r, body, q0)
+
+
+def orthogonalize_ns(a: jax.Array, steps: int = 8) -> jax.Array:
+    """Newton-Schulz orthogonalization (pure matmuls).
+
+    Iterates Y <- Y (1.5 I - 0.5 Y^T Y) after spectral pre-scaling, which
+    drives all singular values of Y to 1 while preserving the column
+    space.  Cheaper than GS on wide matrices when r is large because it
+    is matmul-bound (MXU-friendly); used by the perf pass as an
+    alternative orthogonalizer.
+    """
+    n, r = a.shape
+    # Upper bound on the spectral norm: ||A||_2 <= sqrt(||A||_1 ||A||_inf).
+    norm1 = jnp.max(jnp.sum(jnp.abs(a), axis=0))
+    norminf = jnp.max(jnp.sum(jnp.abs(a), axis=1))
+    y = a / (jnp.sqrt(norm1 * norminf) + _EPS)
+    eye = jnp.eye(r, dtype=a.dtype)
+
+    def body(_, y):
+        g = y.T @ y
+        return y @ (1.5 * eye - 0.5 * g)
+
+    return jax.lax.fori_loop(0, steps, body, y)
+
+
+def orthogonalize(a: jax.Array, method: str = "gs") -> jax.Array:
+    """Dispatch helper; ``method`` in {"gs", "ns"}."""
+    if method == "gs":
+        return orthogonalize_gs(a)
+    if method == "ns":
+        return orthogonalize_ns(a)
+    raise ValueError(f"unknown orthogonalization method {method!r}")
+
+
+def subspace_iter_step(a_m: jax.Array, u_prev: jax.Array, method: str = "gs") -> jax.Array:
+    """One warm-started subspace-iteration step (Algorithm 2 / PowerSGD).
+
+    ``a_m`` is a mode unfolding (a, b); ``u_prev`` (a, r) is last
+    iteration's basis.  Returns the refreshed orthonormal basis
+    U = orth(A (A^T U_prev)).
+    """
+    v = a_m.T @ u_prev  # (b, r)
+    return orthogonalize(a_m @ v, method)
+
+
+def global_norm(tree) -> jax.Array:
+    """Global L2 norm over a pytree of arrays (for gradient clipping)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x * x) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    """Scale a gradient pytree so its global L2 norm is <= max_norm."""
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + _EPS))
+    return jax.tree_util.tree_map(lambda x: x * scale, tree), norm
+
+
+def unfold(t: jax.Array, mode: int) -> jax.Array:
+    """Mode-m unfolding of a tensor: moves axis ``mode`` first, flattens the rest."""
+    moved = jnp.moveaxis(t, mode, 0)
+    return moved.reshape(t.shape[mode], -1)
+
+
+def mode_product(t: jax.Array, m: jax.Array, mode: int) -> jax.Array:
+    """i-mode product  (T x_mode M)  with M of shape (q, t.shape[mode])."""
+    moved = jnp.moveaxis(t, mode, -1)
+    out = moved @ m.T
+    return jnp.moveaxis(out, -1, mode)
+
+
+def tucker_reconstruct(core: jax.Array, factors) -> jax.Array:
+    """Reconstruct a tensor from its Tucker core and factor matrices.
+
+    ``factors[m]`` has shape (dim_m, rank_m); the core has the ranks as its
+    shape.  Inverse of the compression performed by ASI.
+    """
+    out = core
+    for mode, u in enumerate(factors):
+        out = mode_product(out, u, mode)
+    return out
+
+
+@partial(jax.jit, static_argnames=("k",))
+def topk_energy_rank(s: jax.Array, eps: float, k: int | None = None):
+    """Smallest K with cumulative explained variance >= eps (Eq. sec 3.3).
+
+    ``s`` are singular values sorted descending.  Used only at trace /
+    build time (the ranks must be static in the artifacts).
+    """
+    energy = s * s
+    cum = jnp.cumsum(energy) / (jnp.sum(energy) + _EPS)
+    return jnp.argmax(cum >= eps) + 1

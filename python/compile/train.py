@@ -1,0 +1,213 @@
+"""Train/infer step builders + flat parameter packing.
+
+The rust coordinator drives training through a single AOT-compiled step:
+
+    (params_flat, asi_state_flat, batch_x, batch_y_onehot, lr)
+        -> (params_flat', asi_state_flat', loss, accuracy)
+
+Everything is f32; parameter and state layouts are fixed by ``ParamSpec``
+and exported to the manifest so rust can slice, checkpoint, and inspect
+individual tensors.
+
+The optimizer is the paper's recipe (App. B.1): SGD, momentum 0, weight
+decay 1e-4 (matrices only), global L2 gradient clipping at 2.0, cosine LR
+handled by the rust scheduler (lr arrives as an input scalar).  After the
+SGD update, every factored layer gets one WSI refresh step (Algorithm 1).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ops, wasi
+from .model import WasiSpec
+
+GRAD_CLIP = 2.0
+WEIGHT_DECAY = 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Flat packing
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Deterministic (name, shape, offset) layout of a parameter dict."""
+
+    entries: tuple  # ((name, shape, offset), ...)
+    total: int
+
+    @staticmethod
+    def from_params(params: dict) -> "ParamSpec":
+        entries = []
+        off = 0
+        for name in sorted(params.keys()):
+            shape = tuple(int(d) for d in np.shape(params[name]))
+            entries.append((name, shape, off))
+            off += int(np.prod(shape)) if shape else 1
+        return ParamSpec(tuple(entries), off)
+
+    def pack(self, params: dict):
+        """Dict -> flat vector (numpy or jnp, following the inputs)."""
+        parts = [np.asarray(params[name], np.float32).reshape(-1)
+                 for name, _, _ in self.entries]
+        return np.concatenate(parts) if parts else np.zeros(0, np.float32)
+
+    def unpack(self, flat):
+        """Flat traced vector -> dict of reshaped views (static slices)."""
+        out = {}
+        for name, shape, off in self.entries:
+            n = int(np.prod(shape)) if shape else 1
+            out[name] = flat[off:off + n].reshape(shape)
+        return out
+
+    def manifest(self):
+        return [
+            {"name": name, "shape": list(shape), "offset": off}
+            for name, shape, off in self.entries
+        ]
+
+
+def empty_spec() -> ParamSpec:
+    return ParamSpec((), 0)
+
+
+# ---------------------------------------------------------------------------
+# WASI-ification of a pretrained model
+# ---------------------------------------------------------------------------
+
+
+def factorize_params(params: dict, layer_plan: dict, eps: float):
+    """Replace each planned layer's dense W with (L, R) at threshold eps.
+
+    ``layer_plan``: name -> ((O, I), act_dims) as produced by
+    ``model.*_wasi_layers``.  Returns (new_params, weight_ranks, spectra).
+    """
+    out = dict(params)
+    weight_ranks = {}
+    spectra = {}
+    for name in sorted(layer_plan.keys()):
+        w = np.asarray(params[f"{name}.w"])
+        l, r, s = wasi.svd_factorize(w, eps)
+        del out[f"{name}.w"]
+        out[f"{name}.l"] = l
+        out[f"{name}.r"] = r
+        weight_ranks[name] = l.shape[1]
+        spectra[name] = s
+    return out, weight_ranks, spectra
+
+
+def init_asi_state(activations: dict, layer_plan: dict, eps: float,
+                   max_ranks: dict | None = None):
+    """HOSVD-initialize the ASI warm-start bases from captured activations.
+
+    ``activations``: name -> ndarray (the input activation of each planned
+    layer on a held-out batch).  Returns (state_dict, asi_ranks).
+    """
+    state = {}
+    asi_ranks = {}
+    for name in sorted(layer_plan.keys()):
+        x = np.asarray(activations[name])
+        ranks = wasi.hosvd_ranks(x, eps)
+        if max_ranks and name in max_ranks:
+            ranks = tuple(min(r, m) for r, m in zip(ranks, max_ranks[name]))
+        _, factors = wasi.hosvd(x, ranks)
+        asi_ranks[name] = ranks
+        for m, u in enumerate(factors, start=1):
+            state[f"{name}.u{m}"] = u
+    return state, asi_ranks
+
+
+def capture_activations(forward, params, cfg, x, layer_names):
+    """Run a vanilla forward and stash the input activation of each layer.
+
+    Uses the capture hook in ``model.linear`` via a WasiSpec that marks
+    the layers but factors nothing.
+    """
+    spec = WasiSpec(weight_ranks={}, asi_ranks={n: () for n in layer_names},
+                    capture=True)
+    _, new_state = forward(params, x, cfg, spec, {})
+    return {n: np.asarray(new_state[f"{n}.__x"]) for n in layer_names}
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def _decay_mask(name: str) -> bool:
+    return name.endswith((".w", ".l", ".r")) or name in ("tok_embed",)
+
+
+def make_train_step(forward, cfg, spec: WasiSpec | None,
+                    pspec: ParamSpec, sspec: ParamSpec):
+    """Build the jittable train step closed over the model and layouts."""
+
+    factored = sorted(spec.weight_ranks.keys()) if spec else []
+
+    def train_step(flat_params, flat_state, x, y1h, lr):
+        params = pspec.unpack(flat_params)
+        state = sspec.unpack(flat_state)
+
+        def loss_fn(p):
+            logits, new_state = forward(p, x, cfg, spec, state)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            loss = -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+            acc = jnp.mean(
+                (jnp.argmax(logits, -1) == jnp.argmax(y1h, -1)).astype(jnp.float32))
+            return loss, (acc, new_state)
+
+        (loss, (acc, new_state)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+
+        grads, _ = ops.clip_by_global_norm(grads, GRAD_CLIP)
+
+        new_params = {}
+        for name, p in params.items():
+            g = grads[name]
+            if _decay_mask(name):
+                g = g + WEIGHT_DECAY * p
+            new_params[name] = p - lr * g
+
+        # WSI refresh (Algorithm 1) on every factored layer.
+        method = spec.method if spec else "gs"
+        for name in factored:
+            l, r = new_params[f"{name}.l"], new_params[f"{name}.r"]
+            lp, rp = wasi.wsi_refresh(l, r, method)
+            new_params[f"{name}.l"] = lp
+            new_params[f"{name}.r"] = rp
+
+        out_state = {}
+        for name, _, _ in sspec.entries:
+            out_state[name] = new_state.get(name, state[name])
+
+        return (pspec.pack_traced(new_params), sspec.pack_traced(out_state),
+                loss, acc)
+
+    return train_step
+
+
+def make_infer_step(forward, cfg, spec: WasiSpec | None, pspec: ParamSpec):
+    """(flat_params, x) -> logits.  ASI is inactive at inference (no
+    backward pass), so the factored layers run plain X R^T L^T."""
+
+    def infer_step(flat_params, x):
+        params = pspec.unpack(flat_params)
+        logits, _ = forward(params, x, cfg, spec, {})
+        return logits
+
+    return infer_step
+
+
+# Traced packing (jnp concatenate; numpy path lives on ParamSpec.pack).
+def _pack_traced(self: ParamSpec, params: dict):
+    if not self.entries:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.concatenate([params[name].reshape(-1)
+                            for name, _, _ in self.entries])
+
+
+ParamSpec.pack_traced = _pack_traced

@@ -1,0 +1,339 @@
+"""WASI — Weight-Activation Subspace Iteration (paper §3.3), in JAX.
+
+Three pieces live here:
+
+* :func:`wasi_linear` — the WASI linear layer as a ``jax.custom_vjp``:
+  forward runs in the factored weight subspace (Eq. 8) and Tucker-
+  compresses the input activation with one warm-started subspace-iteration
+  step per mode (Algorithm 2); backward consumes ONLY the compressed
+  factors, computing dR through the f_LR contraction chain (Eqs. 15-18)
+  and dX through Eq. 10.  The refreshed ASI bases are primal outputs so
+  the warm start threads through the train-step signature.
+
+* :func:`wsi_refresh` — the per-iteration Weight Subspace Iteration step
+  (Algorithm 1) in factored form: one subspace-iteration step on the
+  implicit W = L R, with Gram-Schmidt orthogonalization, never
+  materializing W.
+
+* :func:`svd_factorize` / :func:`select_rank` — the t=0 step: truncated
+  SVD with the explained-variance threshold ε (build-time only, numpy).
+
+All in-graph code is LAPACK-free (see ops.py).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ops
+from .kernels import ref
+from .kernels.lowrank_linear import lowrank_linear as pallas_lowrank_linear
+from .kernels.lowrank_grad import lowrank_grad_3d as pallas_lowrank_grad_3d
+
+# ---------------------------------------------------------------------------
+# Build-time factorization (Step 1 of WSI; numpy, never lowered)
+# ---------------------------------------------------------------------------
+
+
+def select_rank(s: np.ndarray, eps: float) -> int:
+    """Smallest K with cumulative explained variance >= eps (§3.3 Step 1).
+
+    sigma_j^2 = s_j^2 / sum_k s_k^2 with s sorted descending.
+    """
+    energy = s.astype(np.float64) ** 2
+    cum = np.cumsum(energy) / max(energy.sum(), 1e-30)
+    return int(np.searchsorted(cum, eps) + 1)
+
+
+def svd_factorize(w: np.ndarray, eps: float):
+    """Truncated SVD of a weight matrix (Eqs. 5-7).
+
+    w: (O, I)  ->  L = U_K Σ_K (O, K),  R = V_K^T (K, I),  and the full
+    singular-value spectrum (exported to the manifest for rust-side rank
+    re-derivation and the Fig-3a stability study).
+    """
+    u, s, vt = np.linalg.svd(w, full_matrices=False)
+    k = select_rank(s, eps)
+    l = (u[:, :k] * s[:k]).astype(np.float32)
+    r = vt[:k, :].astype(np.float32)
+    return l, r, s.astype(np.float32)
+
+
+def hosvd_ranks(x: np.ndarray, eps: float):
+    """Per-mode ranks of a tensor by explained variance of each unfolding.
+
+    Used at build time to size the ASI factors (the AMC criterion the
+    paper reuses for rank selection, §3.3(i)).
+    """
+    ranks = []
+    for m in range(x.ndim):
+        a = np.moveaxis(x, m, 0).reshape(x.shape[m], -1)
+        s = np.linalg.svd(a, compute_uv=False)
+        ranks.append(min(select_rank(s, eps), a.shape[0]))
+    return tuple(ranks)
+
+
+def hosvd(x: np.ndarray, ranks):
+    """Truncated HOSVD (the AMC baseline's compressor; build-time only)."""
+    factors = []
+    core = x.astype(np.float64)
+    for m, r in enumerate(ranks):
+        a = np.moveaxis(x, m, 0).reshape(x.shape[m], -1)
+        u, _, _ = np.linalg.svd(a, full_matrices=False)
+        u = u[:, :r]
+        factors.append(u.astype(np.float32))
+        core = np.moveaxis(np.moveaxis(core, m, -1) @ u, -1, m)
+    return core.astype(np.float32), factors
+
+
+# ---------------------------------------------------------------------------
+# ASI: activation compression inside the layer (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def asi_compress(x, us, method: str = "gs"):
+    """One warm-started subspace-iteration step per mode; returns
+    (core, new_us).  x is an N-d tensor, us a tuple of (dim_m, r_m) bases."""
+    new_us = []
+    for m, u_prev in enumerate(us):
+        a_m = ops.unfold(x, m)
+        new_us.append(ops.subspace_iter_step(a_m, u_prev, method))
+    core = x
+    for m, u in enumerate(new_us):
+        core = ops.mode_product(core, u.T, m)
+    return core, tuple(new_us)
+
+
+# ---------------------------------------------------------------------------
+# The WASI linear layer (custom_vjp)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def wasi_linear(x, l, r, u1, u2, u3, method="gs", use_kernels=False):
+    """Factored linear with ASI-compressed residuals (3D activations).
+
+    x: (B, N, I); l: (O, K); r: (K, I); u{1,2,3}: warm-start bases for the
+    three modes of x.  Returns (y, u1', u2', u3').
+    """
+    y, (u1n, u2n, u3n) = _wasi_forward(x, l, r, (u1, u2, u3), method, use_kernels)
+    return y, u1n, u2n, u3n
+
+
+def _wasi_forward(x, l, r, us, method, use_kernels):
+    if use_kernels:
+        y = pallas_lowrank_linear(x, l, r)
+    else:
+        y = ref.lowrank_linear(x, l, r)
+    _, new_us = asi_compress(x, us, method)
+    return y, new_us
+
+
+def _wasi_fwd(x, l, r, u1, u2, u3, method, use_kernels):
+    core, (u1n, u2n, u3n) = asi_compress(x, (u1, u2, u3), method)
+    if use_kernels:
+        y = pallas_lowrank_linear(x, l, r)
+    else:
+        y = ref.lowrank_linear(x, l, r)
+    # Residuals: ONLY the Tucker factors of x (Eq. 44 memory) + the weight
+    # factors.  x itself is dropped — that is the whole point.
+    return (y, u1n, u2n, u3n), (core, u1n, u2n, u3n, l, r)
+
+
+def _wasi_bwd(method, use_kernels, res, cts):
+    core, u1, u2, u3, l, r = res
+    dy = cts[0]  # (B, N, O); cotangents of the u outputs are ignored
+    # Eq. 10: dX = dY · L R  (two thin matmuls, never forming L R)
+    dh = dy @ l                      # (B, N, K)
+    dx = dh @ r                      # (B, N, I)
+    # dL = sum_{b,n} dY ⊗ H~  with H~ = X~ R^T computed in Tucker space:
+    #   H~ = core x1 u1 x2 u2 x3 (R u3)   — (B, N, K), K small.
+    ru3 = r @ u3                     # (K, r3)
+    h_t = ops.tucker_reconstruct(core, (u1, u2, ru3))  # (B, N, K)
+    dl = jnp.einsum("bno,bnk->ok", dy, h_t)
+    # dR via the f_LR contraction chain (Eqs. 15-18) with dH in place of dY.
+    if use_kernels:
+        dr = pallas_lowrank_grad_3d(core, u1, u2, u3, dh)
+    else:
+        dr = ref.lowrank_grad_3d(core, u1, u2, u3, dh)
+    zu1 = jnp.zeros_like(u1)
+    zu2 = jnp.zeros_like(u2)
+    zu3 = jnp.zeros_like(u3)
+    return dx, dl, dr, zu1, zu2, zu3
+
+
+wasi_linear.defvjp(_wasi_fwd, _wasi_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7,))
+def wasi_linear_4d(x, l, r, u1, u2, u3, u4, method="gs"):
+    """4D-activation WASI linear (SwinLite path, Eqs. 19-26).
+
+    x: (B, H, W, I); returns (y, u1', u2', u3', u4').  This is the case
+    SVD-LLM's whitening cannot handle (Appendix A.4).
+    """
+    y, us = _wasi_forward_4d(x, l, r, (u1, u2, u3, u4), method)
+    return (y,) + us
+
+
+def _wasi_forward_4d(x, l, r, us, method):
+    y = ref.lowrank_linear(x, l, r)
+    _, new_us = asi_compress(x, us, method)
+    return y, new_us
+
+
+def _wasi_fwd_4d(x, l, r, u1, u2, u3, u4, method):
+    core, new_us = asi_compress(x, (u1, u2, u3, u4), method)
+    y = ref.lowrank_linear(x, l, r)
+    return (y,) + new_us, (core,) + new_us + (l, r)
+
+
+def _wasi_bwd_4d(method, res, cts):
+    core, u1, u2, u3, u4, l, r = res
+    dy = cts[0]                      # (B, H, W, O)
+    dh = dy @ l                      # (B, H, W, K)
+    dx = dh @ r
+    ru4 = r @ u4                     # (K, r4)
+    h_t = ops.tucker_reconstruct(core, (u1, u2, u3, ru4))
+    dl = jnp.einsum("bhwo,bhwk->ok", dy, h_t)
+    dr = ref.lowrank_grad_4d(core, u1, u2, u3, u4, dh)
+    zeros = tuple(jnp.zeros_like(u) for u in (u1, u2, u3, u4))
+    return (dx, dl, dr) + zeros
+
+
+wasi_linear_4d.defvjp(_wasi_fwd_4d, _wasi_bwd_4d)
+
+
+# ---------------------------------------------------------------------------
+# ASI-only layer (Nguyen et al. 2025 baseline): dense W, compressed residuals
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5,))
+def asi_linear(x, w, u1, u2, u3, method="gs"):
+    """Dense linear whose backward uses ASI-compressed activations.
+
+    x: (B, N, I); w: (O, I).  Returns (y, u1', u2', u3').  The weight
+    gradient is computed through the f_LR chain with the full dY — the
+    original Eqs. 15-18 orientation (dense O x I output).
+    """
+    y, us = _asi_forward(x, w, (u1, u2, u3), method)
+    return (y,) + us
+
+
+def _asi_forward(x, w, us, method):
+    y = x @ w.T
+    _, new_us = asi_compress(x, us, method)
+    return y, new_us
+
+
+def _asi_fwd(x, w, u1, u2, u3, method):
+    core, new_us = asi_compress(x, (u1, u2, u3), method)
+    y = x @ w.T
+    return (y,) + new_us, (core,) + new_us + (w,)
+
+
+def _asi_bwd(method, res, cts):
+    core, u1, u2, u3, w = res
+    dy = cts[0]
+    dx = dy @ w
+    dw = ref.lowrank_grad_3d(core, u1, u2, u3, dy)
+    zeros = tuple(jnp.zeros_like(u) for u in (u1, u2, u3))
+    return (dx, dw) + zeros
+
+
+asi_linear.defvjp(_asi_fwd, _asi_bwd)
+
+
+# ---------------------------------------------------------------------------
+# SVD-LLM baseline factorization (Wang et al. 2024; App. A.4)
+# ---------------------------------------------------------------------------
+
+
+def svdllm_factorize(w: np.ndarray, x_calib: np.ndarray, k: int, ridge: float = 1e-3):
+    """Truncation-aware data whitening + truncated SVD (Eqs. 47-48).
+
+    w: (O, I); x_calib: (N, I) batch-summed calibration activation.
+    Returns (wu (O, K), wv (K, I)).
+    """
+    g = (x_calib.astype(np.float64).T @ x_calib.astype(np.float64))
+    # Scale-aware ridge: the calibration Gram is rank-deficient whenever
+    # N < I (batch-summed activations), so regularize relative to its
+    # mean diagonal magnitude.
+    scale = max(float(np.trace(g)) / g.shape[0], 1e-12)
+    g += (ridge * scale) * np.eye(w.shape[1], dtype=np.float64)
+    s = np.linalg.cholesky(g)
+    u, sv, vt = np.linalg.svd(w.astype(np.float64) @ s, full_matrices=False)
+    k = min(k, len(sv))
+    sq = np.sqrt(sv[:k])
+    wu = (u[:, :k] * sq).astype(np.float32)
+    wv = ((sq[:, None] * vt[:k, :]) @ np.linalg.inv(s)).astype(np.float32)
+    return wu, wv
+
+
+def svdllm_rank_for_ratio(o: int, i: int, ratio: float) -> int:
+    """K such that K (O + I) = O I / ratio (the paper drives SVD-LLM by
+    the compression ratios WASI achieves, App. B.1)."""
+    return max(1, int(o * i / (ratio * (o + i))))
+
+
+# ---------------------------------------------------------------------------
+# WSI: weight-factor refresh (Algorithm 1, factored form)
+# ---------------------------------------------------------------------------
+
+
+def wsi_refresh(l, r, method: str = "gs"):
+    """One subspace-iteration step on the implicit W = L R.
+
+    Algorithm 1 step t>0, reconciled with the factored parameterization
+    (the paper's Eq. 11 updates the product; see DESIGN.md §2.1):
+
+        R'ᵀ = Wᵀ L          = Rᵀ (Lᵀ L)
+        L'  = orth(W R'ᵀ)   = orth(L (R R'ᵀ))
+        R'' = L'ᵀ W         = (L'ᵀ L) R
+
+    Every product is K×K-bounded except the final thin ones; W is never
+    materialized.  After the refresh L is orthonormal and R carries the
+    singular-value mass, matching the SVD-based initialization (Eq. 7 up
+    to a rotation within the subspace — the product L R is preserved to
+    first order, exactly preserved when L has full column rank).
+    """
+    ltl = l.T @ l                    # (K, K)
+    rp = ltl @ r                     # R'ᵀ = Wᵀ L  -> R' = (LᵀL) R, (K, I)
+    lp = ops.orthogonalize(l @ (r @ rp.T), method)   # (O, K)
+    rpp = (lp.T @ l) @ r             # re-project so L' R'' ≈ L R
+    return lp, rpp
+
+
+def wsi_refresh_materialized(w, l_prev, method: str = "gs"):
+    """Algorithm 1 verbatim (requires the full W): the ablation mode used
+    by the Fig-3b WSI-vs-SVD study in the rust-native engine, mirrored
+    here for cross-checking."""
+    rt = w.T @ l_prev                # (I, K)
+    l = ops.orthogonalize(w @ rt, method)   # (O, K)
+    r = l.T @ w                      # (K, I)
+    return l, r
+
+
+# ---------------------------------------------------------------------------
+# Perplexity (Eq. 28) — build-time table for the rank-selection DP
+# ---------------------------------------------------------------------------
+
+
+def perplexity_entry(x: np.ndarray, dy: np.ndarray, eps: float):
+    """|| dW_exact - dW_compressed ||_F for one layer at one threshold.
+
+    x: (B, N, I) held-out activation; dy: (B, N, O) its output gradient.
+    Returns (perplexity, ranks, memory_elems).
+    """
+    ranks = hosvd_ranks(x, eps)
+    core, factors = hosvd(x, ranks)
+    exact = ref.dense_grad(jnp.asarray(x), jnp.asarray(dy))
+    approx = ref.lowrank_grad_3d(
+        jnp.asarray(core), *(jnp.asarray(f) for f in factors), jnp.asarray(dy)
+    )
+    ppl = float(jnp.linalg.norm(exact - approx))
+    mem = int(np.prod(ranks) + sum(d * r for d, r in zip(x.shape, ranks)))
+    return ppl, ranks, mem

@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes (and the f32/bf16 dtypes the kernels accept);
+assert_allclose against the reference is the CORE correctness signal for
+the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lowrank_grad import lowrank_grad_3d
+from compile.kernels.lowrank_linear import lowrank_linear
+from compile.kernels.subspace import power_step
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def rnd(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+class TestLowrankLinear:
+    @given(
+        b=st.integers(1, 4),
+        n=st.integers(1, 130),
+        i=st.integers(1, 96),
+        o=st.integers(1, 96),
+        k=st.integers(1, 48),
+        block=st.sampled_from([32, 128]),
+    )
+    def test_matches_ref_over_shapes(self, b, n, i, o, k, block):
+        rng = np.random.default_rng(b * 1000 + n)
+        x, l, r = rnd(rng, b, n, i), rnd(rng, o, k), rnd(rng, k, i)
+        got = lowrank_linear(x, l, r, block_rows=block)
+        want = ref.lowrank_linear(x, l, r)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_2d_input(self):
+        rng = np.random.default_rng(0)
+        x, l, r = rnd(rng, 7, 24), rnd(rng, 12, 5), rnd(rng, 5, 24)
+        np.testing.assert_allclose(
+            lowrank_linear(x, l, r), ref.lowrank_linear(x, l, r), rtol=1e-4
+        )
+
+    def test_bf16_inputs_compute_in_f32(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((2, 16, 32)), jnp.bfloat16)
+        l = jnp.asarray(rng.standard_normal((24, 8)), jnp.bfloat16)
+        r = jnp.asarray(rng.standard_normal((8, 32)), jnp.bfloat16)
+        got = lowrank_linear(x.astype(jnp.float32), l.astype(jnp.float32),
+                             r.astype(jnp.float32))
+        want = ref.lowrank_linear(x.astype(jnp.float32), l.astype(jnp.float32),
+                                  r.astype(jnp.float32))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_rank_edge(self):
+        # K=1 minimal rank still correct
+        rng = np.random.default_rng(2)
+        x, l, r = rnd(rng, 1, 1, 8), rnd(rng, 4, 1), rnd(rng, 1, 8)
+        np.testing.assert_allclose(
+            lowrank_linear(x, l, r), ref.lowrank_linear(x, l, r), rtol=1e-4
+        )
+
+
+class TestLowrankGrad:
+    @given(
+        b=st.integers(1, 6),
+        n=st.integers(1, 70),
+        i=st.integers(2, 64),
+        o=st.integers(2, 64),
+        r1=st.integers(1, 4),
+        r2=st.integers(1, 12),
+        r3=st.integers(1, 16),
+    )
+    def test_matches_ref_over_shapes(self, b, n, i, o, r1, r2, r3):
+        r1, r2, r3 = min(r1, b), min(r2, n), min(r3, i)
+        rng = np.random.default_rng(n * 100 + i)
+        core = rnd(rng, r1, r2, r3)
+        u1, u2, u3 = rnd(rng, b, r1), rnd(rng, n, r2), rnd(rng, i, r3)
+        dy = rnd(rng, b, n, o)
+        got = lowrank_grad_3d(core, u1, u2, u3, dy)
+        want = ref.lowrank_grad_3d(core, u1, u2, u3, dy)
+        np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+    def test_equals_dense_grad_on_reconstruction(self):
+        # f_LR(tucker(x), dy) == dense_grad(reconstruct(x), dy)
+        rng = np.random.default_rng(3)
+        x = rnd(rng, 4, 9, 12)
+        dy = rnd(rng, 4, 9, 7)
+        u1 = jnp.asarray(np.linalg.qr(rng.standard_normal((4, 3)))[0], jnp.float32)
+        u2 = jnp.asarray(np.linalg.qr(rng.standard_normal((9, 5)))[0], jnp.float32)
+        u3 = jnp.asarray(np.linalg.qr(rng.standard_normal((12, 6)))[0], jnp.float32)
+        core = ref.tucker3(x, u1, u2, u3)
+        xt = jnp.einsum("pqr,bp,nq,ir->bni", core, u1, u2, u3)
+        got = lowrank_grad_3d(core, u1, u2, u3, dy)
+        want = ref.dense_grad(xt, dy)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_4d_ref_consistent_with_dense(self):
+        rng = np.random.default_rng(4)
+        x = rnd(rng, 3, 4, 5, 8)
+        dy = rnd(rng, 3, 4, 5, 6)
+        us = [jnp.asarray(np.linalg.qr(rng.standard_normal((d, min(d, 3))))[0],
+                          jnp.float32) for d in (3, 4, 5, 8)]
+        core = ref.tucker4(x, *us)
+        xt = jnp.einsum("pqrt,bp,hq,wr,it->bhwi", core, *us)
+        got = ref.lowrank_grad_4d(core, *us, dy)
+        want = ref.dense_grad(xt, dy)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+class TestPowerStep:
+    @given(
+        a=st.integers(2, 64),
+        b=st.integers(2, 600),
+        r=st.integers(1, 16),
+        block=st.sampled_from([64, 256]),
+    )
+    def test_matches_ref(self, a, b, r, block):
+        r = min(r, a)
+        rng = np.random.default_rng(a + b)
+        a_m = rnd(rng, a, b)
+        u = rnd(rng, a, r)
+        got = power_step(a_m, u, b_block=block)
+        want = ref.power_step(a_m, u)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_invariant_subspace_is_fixed_point(self):
+        # If u spans an invariant subspace, power step preserves its span.
+        rng = np.random.default_rng(5)
+        q = np.linalg.qr(rng.standard_normal((20, 3)))[0].astype(np.float32)
+        a_m = jnp.asarray(q @ np.diag([5.0, 4.0, 3.0]).astype(np.float32) @ q.T)
+        a_full = jnp.concatenate([a_m, jnp.zeros((20, 10))], axis=1)
+        p = power_step(a_full, jnp.asarray(q))
+        # columns of p stay in span(q)
+        proj = q @ (q.T @ np.asarray(p))
+        np.testing.assert_allclose(proj, p, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,187 @@
+"""L2 model semantics: shapes, packing, and loss-decreases for all three
+architectures in both vanilla and WASI parameterizations."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import model, train
+from compile.model import SwinLiteConfig, TinyDecConfig, ViTConfig, WasiSpec
+
+
+def make_batch(rng, b, dim, classes):
+    x = rng.standard_normal((b, dim)).astype(np.float32)
+    y = np.eye(classes, dtype=np.float32)[rng.integers(0, classes, b)]
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def vit_setup():
+    cfg = ViTConfig(dim=64, depth=2, heads=2)
+    params = model.init_vit(cfg, seed=0)
+    return cfg, params
+
+
+class TestShapes:
+    def test_vit_forward_shapes(self, vit_setup):
+        cfg, params = vit_setup
+        rng = np.random.default_rng(0)
+        x, _ = make_batch(rng, 3, 32 * 32 * 3, 10)
+        logits, state = model.vit_forward(params, x, cfg)
+        assert logits.shape == (3, 10)
+        assert state == {}
+
+    def test_swin_forward_shapes(self):
+        cfg = SwinLiteConfig(dim=32, depths=(1, 1), heads=2)
+        params = model.init_swinlite(cfg, 0)
+        rng = np.random.default_rng(1)
+        x, _ = make_batch(rng, 2, 32 * 32 * 3, 10)
+        logits, _ = model.swinlite_forward(params, x, cfg)
+        assert logits.shape == (2, 10)
+
+    def test_tinydec_forward_shapes(self):
+        cfg = TinyDecConfig(dim=32, depth=2, heads=2, seq=16)
+        params = model.init_tinydec(cfg, 0)
+        ids = np.random.default_rng(2).integers(0, 256, (3, 16)).astype(np.float32)
+        logits, _ = model.tinydec_forward(params, ids, cfg)
+        assert logits.shape == (3, 2)
+
+    def test_patchify_roundtrip_count(self, vit_setup):
+        cfg, _ = vit_setup
+        rng = np.random.default_rng(3)
+        x, _ = make_batch(rng, 2, 32 * 32 * 3, 10)
+        tok = model.patchify(jax.numpy.asarray(x), cfg)
+        assert tok.shape == (2, 64, 48)
+        # patch content preservation: total energy equal
+        np.testing.assert_allclose(
+            np.sum(np.asarray(tok) ** 2), np.sum(x ** 2), rtol=1e-5)
+
+
+class TestPacking:
+    def test_pack_unpack_roundtrip(self, vit_setup):
+        _, params = vit_setup
+        spec = train.ParamSpec.from_params(params)
+        flat = spec.pack(params)
+        assert flat.shape == (spec.total,)
+        back = spec.unpack(jax.numpy.asarray(flat))
+        for name in params:
+            np.testing.assert_array_equal(np.asarray(back[name]),
+                                          np.asarray(params[name]))
+
+    def test_spec_is_deterministic(self, vit_setup):
+        _, params = vit_setup
+        s1 = train.ParamSpec.from_params(params)
+        s2 = train.ParamSpec.from_params(dict(reversed(list(params.items()))))
+        assert s1.entries == s2.entries
+
+    def test_manifest_offsets_contiguous(self, vit_setup):
+        _, params = vit_setup
+        spec = train.ParamSpec.from_params(params)
+        m = spec.manifest()
+        off = 0
+        for e in m:
+            assert e["offset"] == off
+            off += int(np.prod(e["shape"])) if e["shape"] else 1
+        assert off == spec.total
+
+
+def run_steps(forward, cfg, spec, params, state, x, y, n=6, lr=0.05):
+    pspec = train.ParamSpec.from_params(params)
+    sspec = train.ParamSpec.from_params(state) if state else train.empty_spec()
+    step = jax.jit(train.make_train_step(forward, cfg, spec, pspec, sspec))
+    fp = pspec.pack(params)
+    fs = sspec.pack(state) if state else np.zeros(0, np.float32)
+    losses = []
+    for _ in range(n):
+        fp, fs, loss, acc = step(fp, fs, x, y, lr)
+        losses.append(float(loss))
+    return losses
+
+
+class TestTraining:
+    def test_vanilla_vit_loss_decreases(self, vit_setup):
+        cfg, params = vit_setup
+        rng = np.random.default_rng(4)
+        x, y = make_batch(rng, 8, 32 * 32 * 3, 10)
+        losses = run_steps(model.vit_forward, cfg, None, params, None, x, y)
+        assert losses[-1] < losses[0]
+        assert all(np.isfinite(losses))
+
+    def test_wasi_vit_loss_decreases(self, vit_setup):
+        cfg, params = vit_setup
+        rng = np.random.default_rng(5)
+        x, y = make_batch(rng, 8, 32 * 32 * 3, 10)
+        plan = model.vit_wasi_layers(cfg)
+        acts = train.capture_activations(model.vit_forward, params, cfg, x, list(plan))
+        wp, wr, _ = train.factorize_params(params, plan, 0.8)
+        state, ar = train.init_asi_state(acts, plan, 0.8)
+        spec = WasiSpec(weight_ranks=wr, asi_ranks=ar)
+        losses = run_steps(model.vit_forward, cfg, spec, wp, state, x, y, n=8)
+        assert losses[-1] < losses[0]
+
+    def test_asi_baseline_loss_decreases(self, vit_setup):
+        cfg, params = vit_setup
+        rng = np.random.default_rng(6)
+        x, y = make_batch(rng, 8, 32 * 32 * 3, 10)
+        plan = model.vit_wasi_layers(cfg)
+        acts = train.capture_activations(model.vit_forward, params, cfg, x, list(plan))
+        state, ar = train.init_asi_state(acts, plan, 0.8)
+        spec = WasiSpec(asi_ranks=ar, asi_only=frozenset(plan.keys()))
+        losses = run_steps(model.vit_forward, cfg, spec, params, state, x, y, n=8)
+        assert losses[-1] < losses[0]
+
+    def test_svdllm_baseline_trains_adapters_only(self, vit_setup):
+        cfg, params = vit_setup
+        rng = np.random.default_rng(7)
+        x, y = make_batch(rng, 8, 32 * 32 * 3, 10)
+        plan = model.vit_wasi_layers(cfg)
+        import compile.aot as aot
+        acts = train.capture_activations(model.vit_forward, params, cfg, x, list(plan))
+        wp, state, spec, _ = aot.build_svdllm_variant(params, plan, 0.8, acts)
+        pspec = train.ParamSpec.from_params(wp)
+        step = jax.jit(train.make_train_step(model.vit_forward, cfg, spec, pspec,
+                                             train.empty_spec()))
+        fp = pspec.pack(wp)
+        fs = np.zeros(0, np.float32)
+        fp0 = np.asarray(fp).copy()
+        for _ in range(3):
+            fp, fs, loss, _ = step(fp, fs, x, y, 0.05)
+        fp = np.asarray(fp)
+        # frozen factors unchanged, adapters changed
+        d = pspec.unpack(fp)
+        d0 = pspec.unpack(fp0)
+        name = sorted(plan.keys())[0]
+        np.testing.assert_array_equal(np.asarray(d[f"{name}.wu"]),
+                                      np.asarray(d0[f"{name}.wu"]))
+        assert not np.array_equal(np.asarray(d[f"{name}.lb"]),
+                                  np.asarray(d0[f"{name}.lb"]))
+
+    def test_wasi_memory_layout_smaller(self, vit_setup):
+        cfg, params = vit_setup
+        plan = model.vit_wasi_layers(cfg)
+        wp, _, _ = train.factorize_params(params, plan, 0.6)
+        p0 = train.ParamSpec.from_params(params).total
+        p1 = train.ParamSpec.from_params(wp).total
+        assert p1 < p0
+
+    def test_tinydec_freezes_early_blocks(self):
+        cfg = TinyDecConfig(dim=32, depth=2, heads=2, seq=16)
+        params = model.init_tinydec(cfg, 0)
+        rng = np.random.default_rng(8)
+        ids = rng.integers(0, 256, (4, 16)).astype(np.float32)
+        y = np.eye(2, dtype=np.float32)[rng.integers(0, 2, 4)]
+        fwd = lambda p, x, c, s, st: model.tinydec_forward(p, x, c, s, st, tune_from=1)
+        pspec = train.ParamSpec.from_params(params)
+        step = jax.jit(train.make_train_step(fwd, cfg, None, pspec, train.empty_spec()))
+        fp0 = pspec.pack(params)
+        fp, _, _, _ = step(fp0, np.zeros(0, np.float32), ids, y, 0.05)
+        d0, d1 = pspec.unpack(fp0), pspec.unpack(np.asarray(fp))
+        # Block 0 (before tune_from) gets no gradient — only the tiny weight
+        # decay term moves it; block 1 receives real task gradients.
+        frozen_delta = np.abs(np.asarray(d1["blocks.0.attn.qkv.w"])
+                              - np.asarray(d0["blocks.0.attn.qkv.w"])).max()
+        trained_delta = np.abs(np.asarray(d1["blocks.1.attn.qkv.w"])
+                               - np.asarray(d0["blocks.1.attn.qkv.w"])).max()
+        scale = np.abs(np.asarray(d0["blocks.0.attn.qkv.w"])).max()
+        assert frozen_delta <= 0.05 * 1e-4 * scale * 1.01  # lr * wd * |w|
+        assert trained_delta > 10 * frozen_delta

@@ -1,0 +1,114 @@
+"""ops.py: LAPACK-free orthogonalization + tensor algebra invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import ops
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+class TestOrthogonalize:
+    @given(n=st.integers(4, 100), r=st.integers(1, 24))
+    def test_gs_orthonormal(self, n, r):
+        r = min(r, n)
+        rng = np.random.default_rng(n * r)
+        a = jnp.asarray(rng.standard_normal((n, r)), jnp.float32)
+        q = ops.orthogonalize_gs(a)
+        g = np.asarray(q.T @ q)
+        np.testing.assert_allclose(g, np.eye(r), atol=2e-4)
+
+    def test_gs_spans_input(self):
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.standard_normal((30, 6)), jnp.float32)
+        q = ops.orthogonalize_gs(a)
+        proj = q @ (q.T @ a)
+        np.testing.assert_allclose(proj, a, rtol=1e-3, atol=1e-3)
+
+    def test_ns_approximately_orthonormal(self):
+        rng = np.random.default_rng(2)
+        a = jnp.asarray(rng.standard_normal((40, 8)), jnp.float32)
+        q = ops.orthogonalize_ns(a, steps=12)
+        g = np.asarray(q.T @ q)
+        np.testing.assert_allclose(g, np.eye(8), atol=5e-2)
+
+    def test_no_lapack_custom_calls_in_lowered_gs(self):
+        # The whole point of ops.py: lowered HLO must be custom-call-free.
+        lowered = jax.jit(ops.orthogonalize_gs).lower(
+            jax.ShapeDtypeStruct((32, 8), jnp.float32))
+        hlo = lowered.compiler_ir("stablehlo")
+        assert "lapack" not in str(hlo).lower()
+
+    def test_dispatch(self):
+        a = jnp.eye(4)
+        assert ops.orthogonalize(a, "gs").shape == (4, 4)
+        assert ops.orthogonalize(a, "ns").shape == (4, 4)
+        with pytest.raises(ValueError):
+            ops.orthogonalize(a, "qr")
+
+
+class TestSubspaceIter:
+    def test_converges_to_dominant_subspace(self):
+        rng = np.random.default_rng(3)
+        u_true = np.linalg.qr(rng.standard_normal((30, 2)))[0]
+        v_true = np.linalg.qr(rng.standard_normal((50, 2)))[0]
+        a = jnp.asarray(
+            (u_true * [9.0, 7.0]) @ v_true.T
+            + 0.01 * rng.standard_normal((30, 50)),
+            jnp.float32,
+        )
+        u = jnp.asarray(rng.standard_normal((30, 2)), jnp.float32)
+        for _ in range(8):
+            u = ops.subspace_iter_step(a, u)
+        # principal angles ≈ 0
+        s = np.linalg.svd(np.asarray(u).T @ u_true, compute_uv=False)
+        assert s.min() > 0.99
+
+
+class TestTensorAlgebra:
+    @given(
+        shape=st.tuples(st.integers(2, 5), st.integers(2, 6), st.integers(2, 7)),
+        mode=st.integers(0, 2),
+    )
+    def test_unfold_consistent_with_moveaxis(self, shape, mode):
+        rng = np.random.default_rng(sum(shape))
+        t = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        m = ops.unfold(t, mode)
+        want = np.moveaxis(np.asarray(t), mode, 0).reshape(shape[mode], -1)
+        np.testing.assert_array_equal(np.asarray(m), want)
+
+    def test_mode_product_identity(self):
+        rng = np.random.default_rng(4)
+        t = jnp.asarray(rng.standard_normal((3, 4, 5)), jnp.float32)
+        for mode in range(3):
+            p = ops.mode_product(t, jnp.eye(t.shape[mode]), mode)
+            np.testing.assert_allclose(p, t, atol=1e-6)
+
+    def test_tucker_reconstruct_inverts_projection(self):
+        rng = np.random.default_rng(5)
+        t = jnp.asarray(rng.standard_normal((4, 5, 6)), jnp.float32)
+        us = [jnp.asarray(np.linalg.qr(rng.standard_normal((d, d)))[0], jnp.float32)
+              for d in t.shape]
+        core = t
+        for m, u in enumerate(us):
+            core = ops.mode_product(core, u.T, m)
+        rec = ops.tucker_reconstruct(core, us)
+        np.testing.assert_allclose(rec, t, rtol=1e-3, atol=1e-4)
+
+
+class TestClip:
+    def test_clip_reduces_large_norm(self):
+        tree = {"a": jnp.ones((10,)) * 10.0}
+        clipped, norm = ops.clip_by_global_norm(tree, 2.0)
+        assert float(norm) > 2.0
+        new_norm = float(ops.global_norm(clipped))
+        assert abs(new_norm - 2.0) < 1e-3
+
+    def test_clip_noop_below_threshold(self):
+        tree = {"a": jnp.ones((4,)) * 0.1}
+        clipped, _ = ops.clip_by_global_norm(tree, 2.0)
+        np.testing.assert_allclose(clipped["a"], tree["a"], rtol=1e-5)

@@ -1,0 +1,170 @@
+"""WASI layer semantics: custom_vjp gradients, WSI refresh invariants,
+rank selection, and the baseline factorizations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import ops, wasi
+from compile.kernels import ref
+
+
+def ortho(rng, n, r):
+    return jnp.asarray(np.linalg.qr(rng.standard_normal((n, r)))[0], jnp.float32)
+
+
+@pytest.fixture
+def small():
+    rng = np.random.default_rng(0)
+    B, N, I, O, K = 4, 11, 24, 18, 6
+    x = jnp.asarray(rng.standard_normal((B, N, I)), jnp.float32)
+    l = jnp.asarray(0.3 * rng.standard_normal((O, K)), jnp.float32)
+    r = jnp.asarray(0.3 * rng.standard_normal((K, I)), jnp.float32)
+    us = (ortho(rng, B, 3), ortho(rng, N, 5), ortho(rng, I, 8))
+    return x, l, r, us
+
+
+class TestWasiLinearVjp:
+    def test_grads_match_compressed_reference(self, small):
+        x, l, r, us = small
+
+        def loss(x, l, r):
+            y, *_ = wasi.wasi_linear(x, l, r, *us)
+            return 0.5 * jnp.sum(y * y)
+
+        gx, gl, gr = jax.grad(loss, argnums=(0, 1, 2))(x, l, r)
+        # reference: dy = y; dx exact; dl/dr against the Tucker-compressed x
+        core, new_us = wasi.asi_compress(x, us)
+        xt = ops.tucker_reconstruct(core, new_us)
+        y = ref.lowrank_linear(x, l, r)
+        np.testing.assert_allclose(gx, (y @ l) @ r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            gl, jnp.einsum("bno,bnk->ok", y, xt @ r.T), rtol=2e-3, atol=1e-4)
+        np.testing.assert_allclose(
+            gr, jnp.einsum("bnk,bni->ki", y @ l, xt), rtol=2e-3, atol=1e-4)
+
+    def test_state_outputs_are_orthonormal(self, small):
+        x, l, r, us = small
+        _, u1n, u2n, u3n = wasi.wasi_linear(x, l, r, *us)
+        for u in (u1n, u2n, u3n):
+            g = np.asarray(u.T @ u)
+            np.testing.assert_allclose(g, np.eye(u.shape[1]), atol=5e-4)
+
+    def test_forward_value_is_exact(self, small):
+        # Forward uses the UNcompressed x (compression affects backward only).
+        x, l, r, us = small
+        y, *_ = wasi.wasi_linear(x, l, r, *us)
+        np.testing.assert_allclose(y, ref.lowrank_linear(x, l, r), rtol=1e-5)
+
+    def test_4d_variant_grads_finite(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((2, 4, 4, 12)), jnp.float32)
+        l = jnp.asarray(0.3 * rng.standard_normal((8, 3)), jnp.float32)
+        r = jnp.asarray(0.3 * rng.standard_normal((3, 12)), jnp.float32)
+        us = (ortho(rng, 2, 2), ortho(rng, 4, 3), ortho(rng, 4, 3), ortho(rng, 12, 4))
+
+        def loss(l, r):
+            y, *_ = wasi.wasi_linear_4d(x, l, r, *us)
+            return jnp.sum(y ** 2)
+
+        gl, gr = jax.grad(loss, argnums=(0, 1))(l, r)
+        assert np.isfinite(np.asarray(gl)).all()
+        assert np.isfinite(np.asarray(gr)).all()
+        assert float(jnp.abs(gl).max()) > 0
+
+
+class TestWsiRefresh:
+    def test_preserves_product_and_orthonormalizes(self):
+        rng = np.random.default_rng(2)
+        l = jnp.asarray(rng.standard_normal((20, 5)), jnp.float32)
+        r = jnp.asarray(rng.standard_normal((5, 16)), jnp.float32)
+        lp, rp = wasi.wsi_refresh(l, r)
+        np.testing.assert_allclose(lp @ rp, l @ r, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(lp.T @ lp), np.eye(5), atol=1e-3)
+
+    def test_materialized_matches_factored_subspace(self):
+        rng = np.random.default_rng(3)
+        w = np.linalg.qr(rng.standard_normal((20, 8)))[0] @ \
+            np.diag([8, 6, 4, 2, 1, 0.5, 0.2, 0.1]) @ \
+            np.linalg.qr(rng.standard_normal((15, 8)))[0].T
+        w = jnp.asarray(w, jnp.float32)
+        l0 = ortho(np.random.default_rng(4), 20, 4)
+        l1, r1 = wasi.wsi_refresh_materialized(w, l0)
+        # iterate: converges toward the top-4 subspace of w
+        for _ in range(6):
+            l1, r1 = wasi.wsi_refresh_materialized(w, l1)
+        u_true = np.linalg.svd(np.asarray(w))[0][:, :4]
+        s = np.linalg.svd(np.asarray(l1).T @ u_true, compute_uv=False)
+        assert s.min() > 0.98
+
+
+class TestRankSelection:
+    def test_select_rank_monotone_in_eps(self):
+        s = np.array([5.0, 3.0, 2.0, 1.0, 0.5, 0.1])
+        prev = 0
+        for eps in [0.2, 0.5, 0.8, 0.95, 0.9999]:
+            k = wasi.select_rank(s, eps)
+            assert k >= prev
+            prev = k
+        assert wasi.select_rank(s, 0.9999) <= len(s)
+
+    def test_svd_factorize_energy(self):
+        rng = np.random.default_rng(5)
+        u = np.linalg.qr(rng.standard_normal((30, 10)))[0]
+        v = np.linalg.qr(rng.standard_normal((25, 10)))[0]
+        w = (u * (np.arange(1, 11)[::-1] ** 1.5)) @ v.T
+        l, r, s = wasi.svd_factorize(w.astype(np.float32), 0.9)
+        rec = l @ r
+        res = np.linalg.norm(rec - w) ** 2 / np.linalg.norm(w) ** 2
+        assert res <= 0.1 + 1e-3
+
+    def test_hosvd_ranks_and_reconstruction(self):
+        rng = np.random.default_rng(6)
+        core = rng.standard_normal((2, 3, 2))
+        t = np.einsum("pqr,bp,nq,ir->bni", core,
+                      rng.standard_normal((6, 2)),
+                      rng.standard_normal((8, 3)),
+                      rng.standard_normal((7, 2)))
+        ranks = wasi.hosvd_ranks(t.astype(np.float32), 0.999)
+        assert tuple(ranks) == (2, 3, 2)
+        c, f = wasi.hosvd(t.astype(np.float32), ranks)
+        rec = np.einsum("pqr,bp,nq,ir->bni", c, *f)
+        assert np.linalg.norm(rec - t) / np.linalg.norm(t) < 1e-3
+
+    def test_perplexity_falls_with_eps(self):
+        rng = np.random.default_rng(7)
+        x = rng.standard_normal((4, 10, 16)).astype(np.float32)
+        dy = rng.standard_normal((4, 10, 12)).astype(np.float32)
+        ppl = [wasi.perplexity_entry(x, dy, eps)[0] for eps in (0.3, 0.6, 0.9, 0.999)]
+        assert ppl[0] >= ppl[-1]
+        assert ppl[-1] < 0.1 * ppl[0] + 1e-3
+
+
+class TestBaselines:
+    def test_asi_linear_grads_match_flr(self):
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.standard_normal((3, 7, 10)), jnp.float32)
+        w = jnp.asarray(0.3 * rng.standard_normal((6, 10)), jnp.float32)
+        us = (ortho(rng, 3, 2), ortho(rng, 7, 4), ortho(rng, 10, 5))
+
+        def loss(w):
+            y, *_ = wasi.asi_linear(x, w, *us)
+            return 0.5 * jnp.sum(y * y)
+
+        gw = jax.grad(loss)(w)
+        core, new_us = wasi.asi_compress(x, us)
+        dy = x @ w.T
+        want = ref.lowrank_grad_3d(core, *new_us, dy)
+        np.testing.assert_allclose(gw, want, rtol=2e-3, atol=1e-4)
+
+    def test_svdllm_factorize_reconstructs_at_full_rank(self):
+        rng = np.random.default_rng(9)
+        w = rng.standard_normal((8, 12)).astype(np.float32)
+        xc = rng.standard_normal((40, 12)).astype(np.float32)
+        wu, wv = wasi.svdllm_factorize(w, xc, 12)
+        np.testing.assert_allclose(wu @ wv, w, rtol=1e-2, atol=1e-3)
+
+    def test_svdllm_rank_for_ratio(self):
+        assert wasi.svdllm_rank_for_ratio(3072, 768, 4.0) == 153
+        assert wasi.svdllm_rank_for_ratio(4, 4, 1e9) == 1

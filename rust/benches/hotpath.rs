@@ -1,0 +1,198 @@
+//! `cargo bench --bench hotpath` — microbenchmarks of every hot path:
+//!
+//! * native engine: dense vs WASI layer forward/backward at ViT-tiny and
+//!   ViT-B dims (the per-layer numbers behind Tab. 2's shape);
+//! * linalg substrate: matmul, Gram-Schmidt, Jacobi SVD, subspace step;
+//! * PJRT path: compiled train/infer step, and the Pallas lowrank kernel
+//!   artifact vs its jnp reference artifact vs dense (L1 comparison).
+
+use wasi_train::bench::{bench, BenchResult};
+use wasi_train::data::rng::Pcg64;
+use wasi_train::linalg::matrix::Mat;
+use wasi_train::linalg::qr::gram_schmidt;
+use wasi_train::linalg::subspace::SubspaceState;
+use wasi_train::linalg::svd::svd;
+use wasi_train::linalg::tucker::Tensor;
+use wasi_train::wasi::asi::AsiCompressor;
+use wasi_train::wasi::layer::{DenseLayer, WasiLayer};
+use wasi_train::wasi::wsi::{powerlaw_factored, WsiFactors};
+
+fn native_layer_benches(results: &mut Vec<BenchResult>) {
+    // ViT-tiny fc1 dims (the compiled artifact's shape) and a ViT-B-ish
+    // fc1 at reduced batch to keep the bench under a second per sample.
+    for (tag, b, n, i, o, k) in [
+        ("tiny-fc1 (16x65x128->512)", 16usize, 65usize, 128usize, 512usize, 45usize),
+        ("vitb-fc1 (8x197x768->3072)", 8, 197, 768, 3072, 164),
+    ] {
+        let dims = [b, n, i];
+        let mut rng = Pcg64::new(1);
+        let x = Tensor::from_vec(&dims, rng.normal_vec(b * n * i));
+        // Exact truncated factors from the powerlaw construction (avoids a
+        // large SVD in bench setup; K matches the ε=0.8 paper-scale rank).
+        let (lmat, rmat, w) = powerlaw_factored(o, i, 0.8, 2, k);
+
+        let mut dense = DenseLayer::new(w);
+        results.push(bench(&format!("dense fwd+bwd {tag}"), 1.0, || {
+            let y = dense.forward(&x);
+            let dy = Tensor::from_vec(&y.shape, y.data.clone());
+            let _ = dense.backward(&dy);
+        }));
+
+        let factors = WsiFactors { l: lmat.clone(), r: rmat.clone() };
+        let ranks = [b.min(8), n.min(16), i.min(24)];
+        let asi = AsiCompressor::new(&dims, &ranks, 3);
+        let mut wasi = WasiLayer::new(factors, asi);
+        results.push(bench(&format!("WASI fwd+bwd {tag} K={k}"), 1.0, || {
+            let y = wasi.forward(&x);
+            let dy = Tensor::from_vec(&y.shape, y.data.clone());
+            let _ = wasi.backward(&dy);
+        }));
+
+        let mut wasi2 = WasiLayer::new(WsiFactors { l: lmat, r: rmat },
+                                       AsiCompressor::new(&dims, &ranks, 3));
+        results.push(bench(&format!("WASI refresh-only {tag}"), 0.5, || {
+            wasi2.factors.refresh();
+        }));
+    }
+}
+
+fn linalg_benches(results: &mut Vec<BenchResult>) {
+    let mut rng = Pcg64::new(7);
+    let a256 = Mat::random(256, 256, &mut rng);
+    let b256 = Mat::random(256, 256, &mut rng);
+    results.push(bench("matmul 256x256x256", 1.0, || {
+        let _ = a256.matmul(&b256);
+    }));
+    let tall = Mat::random(512, 32, &mut rng);
+    results.push(bench("gram_schmidt 512x32", 0.5, || {
+        let _ = gram_schmidt(&tall);
+    }));
+    let m = Mat::random(128, 96, &mut rng);
+    results.push(bench("jacobi svd 128x96", 1.0, || {
+        let _ = svd(&m);
+    }));
+    let unf = Mat::random(128, 1040, &mut rng);
+    let mut st = SubspaceState::random(128, 16, &mut rng);
+    results.push(bench("subspace step 128x1040 r=16", 0.5, || {
+        st.step(&unf);
+    }));
+
+    // Ablation (DESIGN.md §Perf): Gram-Schmidt vs Newton-Schulz
+    // orthogonalization at WSI-refresh shapes.  NS is matmul-bound
+    // (MXU-friendly on real TPUs); GS is what Algorithm 1 specifies.
+    let wide = Mat::random(512, 48, &mut rng);
+    results.push(bench("orth ablation: GS 512x48", 0.5, || {
+        let _ = gram_schmidt(&wide);
+    }));
+    results.push(bench("orth ablation: NS 512x48 (8 it)", 0.5, || {
+        let _ = newton_schulz(&wide, 8);
+    }));
+}
+
+/// Newton-Schulz orthogonalization (pure matmuls) — the perf-pass
+/// alternative to GS; mirrors python/compile/ops.py::orthogonalize_ns.
+fn newton_schulz(a: &Mat, steps: usize) -> Mat {
+    let norm1 = (0..a.cols)
+        .map(|j| a.col(j).iter().map(|x| x.abs()).sum::<f32>())
+        .fold(0.0f32, f32::max);
+    let norminf = (0..a.rows)
+        .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
+        .fold(0.0f32, f32::max);
+    let mut y = a.clone();
+    y.scale(1.0 / (norm1 * norminf).sqrt().max(1e-12));
+    let eye = Mat::eye(a.cols);
+    for _ in 0..steps {
+        let mut g = y.matmul_tn(&y);
+        g.scale(-0.5);
+        let mut m = eye.clone();
+        m.scale(1.5);
+        m.add_assign(&g);
+        y = y.matmul(&m);
+    }
+    y
+}
+
+fn pjrt_benches(results: &mut Vec<BenchResult>) {
+    let artifacts = std::env::var("WASI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        eprintln!("hotpath: artifacts not built; skipping PJRT benches");
+        return;
+    }
+    let rt = match wasi_train::runtime::Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("hotpath: no PJRT client: {e:#}");
+            return;
+        }
+    };
+    let manifest = wasi_train::runtime::Manifest::load(&artifacts).unwrap();
+
+    // L1 kernel microbench: pallas lowrank vs jnp reference vs dense.
+    let mut rng = Pcg64::new(11);
+    for kname in ["lowrank_pallas", "lowrank_ref", "dense", "power_pallas"] {
+        let Some(entry) = manifest.kernels.get(kname) else { continue };
+        let exe = match rt.load(&entry.hlo) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("hotpath: {kname}: {e:#}");
+                continue;
+            }
+        };
+        let inputs: Vec<(Vec<f32>, Vec<usize>)> = entry
+            .shapes
+            .values()
+            .map(|shape| {
+                let n: usize = shape.iter().product();
+                (rng.normal_vec(n), shape.clone())
+            })
+            .collect();
+        let refs: Vec<(&[f32], &[usize])> = inputs
+            .iter()
+            .map(|(d, s)| (d.as_slice(), s.as_slice()))
+            .collect();
+        // warmup/compile
+        let _ = exe.run_f32(&refs);
+        results.push(bench(&format!("PJRT kernel {kname}"), 1.0, || {
+            let _ = exe.run_f32(&refs);
+        }));
+    }
+
+    // End-to-end compiled steps.
+    for name in ["vit_wasi_eps80", "vit_vanilla"] {
+        let Ok(entry) = manifest.model(name) else { continue };
+        let mut step = match wasi_train::runtime::TrainStep::load(&rt, entry) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("hotpath: {name}: {e:#}");
+                continue;
+            }
+        };
+        let mut task = wasi_train::data::synth::VisionTask::new(
+            "bench", entry.classes, 32, 0.7, 8, 1);
+        let (x, y, _) = task.batch_onehot(entry.batch);
+        let _ = step.step(&x, &y, 0.01); // warmup
+        results.push(bench(&format!("PJRT train step {name}"), 2.0, || {
+            let _ = step.step(&x, &y, 0.01);
+        }));
+    }
+}
+
+fn main() {
+    // WASI_BENCH_ONLY=native|linalg|pjrt narrows the run (perf iteration).
+    let only = std::env::var("WASI_BENCH_ONLY").unwrap_or_default();
+    let want = |s: &str| only.is_empty() || only == s;
+    let mut results = Vec::new();
+    if want("native") {
+        native_layer_benches(&mut results);
+    }
+    if want("linalg") {
+        linalg_benches(&mut results);
+    }
+    if want("pjrt") {
+        pjrt_benches(&mut results);
+    }
+    println!("\n=== hotpath bench summary ===");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,42 @@
+//! `cargo bench --bench paper_eval` — regenerates EVERY table and figure
+//! of the paper's evaluation section through the eval harness (quick
+//! settings; use the `wasi-train eval` CLI with --steps for full runs).
+//!
+//! Custom harness (no criterion in the vendored crate set): each exhibit
+//! is timed once end-to-end and its report is printed.
+
+use wasi_train::bench::bench_once;
+use wasi_train::eval::{self, EvalCtx};
+
+fn main() {
+    let artifacts = std::env::var("WASI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        eprintln!("paper_eval: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let steps = std::env::var("WASI_EVAL_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let ctx = match EvalCtx::open(&artifacts, "eval_out", steps, true) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("paper_eval: cannot open session: {e:#}");
+            return;
+        }
+    };
+    let mut results = Vec::new();
+    for name in eval::EXHIBITS {
+        let mut body = String::new();
+        let r = bench_once(name, || {
+            body = eval::run(&ctx, name).unwrap_or_else(|e| format!("ERROR: {e:#}\n"));
+        });
+        println!("\n################ {name} ({:.1}s) ################", r.median_s);
+        println!("{body}");
+        results.push(r);
+    }
+    println!("\n=== paper_eval timing summary ===");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

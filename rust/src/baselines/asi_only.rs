@@ -1,0 +1,105 @@
+//! ASI-only baseline (Nguyen et al. 2025): dense weights + ASI-compressed
+//! activations.  Saves training activation memory like WASI, but keeps
+//! the full architecture — inference is identical to vanilla, and at high
+//! ε the per-iteration subspace-iteration overhead makes training SLOWER
+//! than vanilla (paper Tab. 2's ASI column).
+
+use crate::linalg::matrix::Mat;
+use crate::linalg::tucker::Tensor;
+use crate::wasi::asi::AsiCompressor;
+use crate::wasi::lowrank_grad::lowrank_grad_3d;
+
+pub struct AsiOnlyLayer {
+    pub w: Mat, // (O, I), dense
+    pub asi: AsiCompressor,
+    saved: Option<crate::wasi::asi::CompressedActivation>,
+}
+
+impl AsiOnlyLayer {
+    pub fn new(w: Mat, asi: AsiCompressor) -> Self {
+        AsiOnlyLayer { w, asi, saved: None }
+    }
+
+    /// Dense forward (Eq. 1) but stores only the compressed activation.
+    pub fn forward(&mut self, x: &Tensor) -> Tensor {
+        let i = *x.shape.last().unwrap();
+        let rows = x.numel() / i;
+        let xf = Mat::from_vec(rows, i, x.data.clone());
+        let y = xf.matmul_nt(&self.w);
+        self.saved = Some(self.asi.compress(x));
+        let mut shape = x.shape.clone();
+        *shape.last_mut().unwrap() = self.w.rows;
+        Tensor::from_vec(&shape, y.data)
+    }
+
+    /// dW from the compressed activation (f_LR with the full dY — the
+    /// original Eqs. 15-18 orientation); dX = dY W exactly.
+    pub fn backward(&mut self, dy: &Tensor) -> (Tensor, Mat) {
+        let c = self.saved.take().expect("forward before backward");
+        let o = self.w.rows;
+        let rows = dy.numel() / o;
+        let dyf = Mat::from_vec(rows, o, dy.data.clone());
+        let dx = dyf.matmul(&self.w);
+        let dw = lowrank_grad_3d(&c.core, &c.factors[0], &c.factors[1], &c.factors[2], dy);
+        let mut xshape = dy.shape.clone();
+        *xshape.last_mut().unwrap() = self.w.cols;
+        (Tensor::from_vec(&xshape, dx.data), dw)
+    }
+
+    pub fn sgd(&mut self, dw: &Mat, lr: f32, wd: f32) {
+        for (p, g) in self.w.data.iter_mut().zip(&dw.data) {
+            *p -= lr * (g + wd * *p);
+        }
+    }
+
+    pub fn saved_bytes(&self) -> usize {
+        self.saved
+            .as_ref()
+            .map(|c| (c.core.numel() + c.factors.iter().map(|f| f.data.len()).sum::<usize>()) * 4)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+    use crate::wasi::wsi::powerlaw;
+
+    #[test]
+    fn grads_approach_dense_as_ranks_grow() {
+        let mut rng = Pcg64::new(1);
+        let dims = [6usize, 10, 16];
+        let x = Tensor::from_vec(&dims, rng.normal_vec(dims.iter().product()));
+        let dy = Tensor::from_vec(&[6, 10, 12], rng.normal_vec(720));
+        let w = powerlaw(12, 16, 1.0, 2);
+
+        let mut errs = Vec::new();
+        for ranks in [[2usize, 3, 4], [4, 6, 8], [6, 10, 16]] {
+            let mut layer = AsiOnlyLayer::new(w.clone(), AsiCompressor::new(&dims, &ranks, 3));
+            // burn in bases
+            for _ in 0..4 {
+                layer.forward(&x);
+                layer.saved = Some(layer.asi.compress(&x));
+            }
+            layer.forward(&x);
+            let (_, dw) = layer.backward(&dy);
+            let exact = crate::wasi::lowrank_grad::dense_grad(&x, &dy);
+            let err = dw.sub(&exact).frob_norm() / exact.frob_norm();
+            errs.push(err);
+        }
+        assert!(errs[0] > errs[2], "errors {errs:?}");
+        assert!(errs[2] < 1e-3, "full-rank error {}", errs[2]);
+    }
+
+    #[test]
+    fn memory_less_than_dense_activation() {
+        let dims = [8usize, 32, 64];
+        let mut rng = Pcg64::new(4);
+        let x = Tensor::from_vec(&dims, rng.normal_vec(dims.iter().product()));
+        let w = powerlaw(48, 64, 1.0, 5);
+        let mut layer = AsiOnlyLayer::new(w, AsiCompressor::new(&dims, &[4, 8, 12], 6));
+        layer.forward(&x);
+        assert!(layer.saved_bytes() < x.numel() * 4);
+    }
+}

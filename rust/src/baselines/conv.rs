@@ -1,0 +1,108 @@
+//! Minimal conv substrate for the Fig. 12 WSI-on-convolution study
+//! (MCUNet-like tail).  A conv layer's weight (O, I, k, k) is reshaped to
+//! (O, I·k·k) and WSI factorization applies verbatim; the forward runs as
+//! im2col + matmul — exactly how the compact-CNN on-device stacks the
+//! paper cites implement conv on CPUs.
+
+use crate::linalg::matrix::Mat;
+
+/// im2col for NHWC input, stride 1, same padding, square kernel k.
+pub fn im2col(x: &[f32], h: usize, w: usize, c: usize, k: usize) -> Mat {
+    let pad = k / 2;
+    let rows = h * w;
+    let cols = c * k * k;
+    let mut out = Mat::zeros(rows, cols);
+    for oy in 0..h {
+        for ox in 0..w {
+            let row = oy * w + ox;
+            let mut col = 0;
+            for ky in 0..k {
+                for kx in 0..k {
+                    let iy = oy as isize + ky as isize - pad as isize;
+                    let ix = ox as isize + kx as isize - pad as isize;
+                    if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                        let base = ((iy as usize) * w + ix as usize) * c;
+                        for ch in 0..c {
+                            out.data[row * cols + col + ch] = x[base + ch];
+                        }
+                    }
+                    col += c;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Conv layer with a WSI-factorable weight.
+pub struct ConvLayer {
+    pub weight: Mat, // (O, I*k*k)
+    pub k: usize,
+    pub c_in: usize,
+}
+
+impl ConvLayer {
+    pub fn new(weight: Mat, k: usize, c_in: usize) -> Self {
+        assert_eq!(weight.cols, c_in * k * k);
+        ConvLayer { weight, k, c_in }
+    }
+
+    /// Forward for one NHWC image; returns (H*W, O) feature map.
+    pub fn forward(&self, x: &[f32], h: usize, w: usize) -> Mat {
+        let cols = im2col(x, h, w, self.c_in, self.k);
+        cols.matmul_nt(&self.weight)
+    }
+
+    /// Factored forward through WSI factors (L, R) of the reshaped weight.
+    pub fn forward_factored(&self, x: &[f32], h: usize, w: usize,
+                            l: &Mat, r: &Mat) -> Mat {
+        let cols = im2col(x, h, w, self.c_in, self.k);
+        let hmid = cols.matmul_nt(r); // (H*W, K)
+        hmid.matmul_nt(l)             // (H*W, O)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+    use crate::wasi::wsi::{powerlaw, WsiFactors};
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // k=1: im2col is the identity layout.
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect(); // 2x2x3
+        let m = im2col(&x, 2, 2, 3, 1);
+        assert_eq!(m.rows, 4);
+        assert_eq!(m.cols, 3);
+        assert_eq!(m.data, x);
+    }
+
+    #[test]
+    fn conv_matches_direct_3x3() {
+        // hand-check one output pixel of a 3x3 conv on a 3x3 single-channel image
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let w = Mat::from_vec(1, 9, vec![0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        let conv = ConvLayer::new(w, 3, 1);
+        let y = conv.forward(&x, 3, 3);
+        // identity kernel: output == input
+        for (a, b) in y.data.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn factored_conv_close_at_high_eps() {
+        let mut rng = Pcg64::new(1);
+        let c_in = 4;
+        let k = 3;
+        let w = powerlaw(8, c_in * k * k, 1.2, 2);
+        let conv = ConvLayer::new(w.clone(), k, c_in);
+        let (f, _) = WsiFactors::init_svd(&w, 0.99);
+        let x: Vec<f32> = rng.normal_vec(6 * 6 * c_in);
+        let exact = conv.forward(&x, 6, 6);
+        let fact = conv.forward_factored(&x, 6, 6, &f.l, &f.r);
+        let rel = fact.sub(&exact).frob_norm() / exact.frob_norm();
+        assert!(rel < 0.15, "rel {rel}");
+    }
+}

@@ -1,0 +1,166 @@
+//! LoRA baseline: Y = X Wᵀ + X Aᵀ Bᵀ with frozen W, trainable A (r, I),
+//! B (O, r).  Training memory = full W + adapters + full activations;
+//! inference = merged (identical to vanilla) — the §2 "Low-rank Adapters"
+//! drawbacks WASI is contrasted against.
+
+use crate::data::rng::Pcg64;
+use crate::linalg::matrix::Mat;
+use crate::linalg::tucker::Tensor;
+
+pub struct LoraLayer {
+    pub w: Mat,       // frozen (O, I)
+    pub a: Mat,       // (r, I)
+    pub b: Mat,       // (O, r)
+    pub alpha: f32,
+    saved_x: Option<Tensor>,
+}
+
+impl LoraLayer {
+    /// Standard init: A ~ N(0, 1/r), B = 0 (adapter starts as identity).
+    pub fn new(w: Mat, rank: usize, alpha: f32, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let i = w.cols;
+        let o = w.rows;
+        let mut a = Mat::random(rank, i, &mut rng);
+        a.scale(1.0 / (rank as f32).sqrt());
+        LoraLayer { w, a, b: Mat::zeros(o, rank), alpha, saved_x: None }
+    }
+
+    fn scale(&self) -> f32 {
+        self.alpha / self.a.rows as f32
+    }
+
+    pub fn forward(&mut self, x: &Tensor) -> Tensor {
+        let i = *x.shape.last().unwrap();
+        let rows = x.numel() / i;
+        let xf = Mat::from_vec(rows, i, x.data.clone());
+        let mut y = xf.matmul_nt(&self.w);
+        let xa = xf.matmul_nt(&self.a); // (rows, r)
+        let xab = xa.matmul_nt(&self.b); // (rows, O)
+        let s = self.scale();
+        for (yv, &dv) in y.data.iter_mut().zip(&xab.data) {
+            *yv += s * dv;
+        }
+        self.saved_x = Some(x.clone());
+        let mut shape = x.shape.clone();
+        *shape.last_mut().unwrap() = self.w.rows;
+        Tensor::from_vec(&shape, y.data)
+    }
+
+    /// Returns (dX, dA, dB); W is frozen.
+    pub fn backward(&mut self, dy: &Tensor) -> (Tensor, Mat, Mat) {
+        let x = self.saved_x.take().expect("forward before backward");
+        let i = *x.shape.last().unwrap();
+        let o = self.w.rows;
+        let rows = x.numel() / i;
+        let xf = Mat::from_vec(rows, i, x.data.clone());
+        let dyf = Mat::from_vec(rows, o, dy.data.clone());
+        let s = self.scale();
+        // dB = s · dYᵀ (X Aᵀ)
+        let xa = xf.matmul_nt(&self.a);
+        let mut db = dyf.matmul_tn(&xa);
+        db.scale(s);
+        // dA = s · (Bᵀ dY)ᵀ X = s · (dY B)ᵀ X
+        let dyb = dyf.matmul(&self.b); // (rows, r)
+        let mut da = dyb.matmul_tn(&xf); // (r, I)
+        da.scale(s);
+        // dX = dY W + s · dY B A
+        let mut dx = dyf.matmul(&self.w);
+        let dyba = dyb.matmul(&self.a);
+        for (d, &v) in dx.data.iter_mut().zip(&dyba.data) {
+            *d += s * v;
+        }
+        (Tensor::from_vec(&x.shape, dx.data), da, db)
+    }
+
+    pub fn sgd(&mut self, da: &Mat, db: &Mat, lr: f32) {
+        for (p, g) in self.a.data.iter_mut().zip(&da.data) {
+            *p -= lr * g;
+        }
+        for (p, g) in self.b.data.iter_mut().zip(&db.data) {
+            *p -= lr * g;
+        }
+    }
+
+    /// Training weight-memory (elements): frozen W + both adapters.
+    pub fn weight_elems(&self) -> usize {
+        self.w.data.len() + self.a.data.len() + self.b.data.len()
+    }
+
+    /// Merge the adapter into W (inference deployment — same cost as vanilla).
+    pub fn merge(&self) -> Mat {
+        let mut w = self.w.clone();
+        let s = self.scale();
+        let ba = self.b.matmul(&self.a); // (O, I)
+        for (p, &d) in w.data.iter_mut().zip(&ba.data) {
+            *p += s * d;
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_as_identity_adapter() {
+        let mut rng = Pcg64::new(1);
+        let w = Mat::random(6, 8, &mut rng);
+        let mut l = LoraLayer::new(w.clone(), 2, 16.0, 2);
+        let x = Tensor::from_vec(&[2, 3, 8], rng.normal_vec(48));
+        let y = l.forward(&x);
+        let mut dense = crate::wasi::layer::DenseLayer::new(w);
+        let yd = dense.forward(&x);
+        for (a, b) in y.data.iter().zip(&yd.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn memory_exceeds_vanilla() {
+        let mut rng = Pcg64::new(3);
+        let w = Mat::random(16, 16, &mut rng);
+        let l = LoraLayer::new(w, 4, 16.0, 4);
+        assert!(l.weight_elems() > 16 * 16);
+    }
+
+    #[test]
+    fn adapter_learns_residual() {
+        // Teach the adapter to cancel W (target = 0 map).
+        let mut rng = Pcg64::new(5);
+        let w = Mat::random(4, 6, &mut rng);
+        let mut l = LoraLayer::new(w, 4, 8.0, 6);
+        let x = Tensor::from_vec(&[8, 1, 6], rng.normal_vec(48));
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..200 {
+            let y = l.forward(&x);
+            let loss: f64 = y.data.iter().map(|v| (v * v) as f64).sum();
+            let dy = Tensor::from_vec(&y.shape, y.data.iter().map(|v| 2.0 * v).collect());
+            let (_, da, db) = l.backward(&dy);
+            l.sgd(&da, &db, 0.003);
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < first.unwrap() * 0.5, "{last} vs {first:?}");
+    }
+
+    #[test]
+    fn merge_matches_forward() {
+        let mut rng = Pcg64::new(7);
+        let w = Mat::random(5, 7, &mut rng);
+        let mut l = LoraLayer::new(w, 3, 16.0, 8);
+        // random adapters
+        l.a = Mat::random(3, 7, &mut rng);
+        l.b = Mat::random(5, 3, &mut rng);
+        let x = Tensor::from_vec(&[1, 4, 7], rng.normal_vec(28));
+        let y = l.forward(&x);
+        let merged = l.merge();
+        let mut dense = crate::wasi::layer::DenseLayer::new(merged);
+        let ym = dense.forward(&x);
+        for (a, b) in y.data.iter().zip(&ym.data) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Comparator methods the paper evaluates against (§4.1):
+//!
+//! * `vanilla`  — dense training (the DenseLayer lives in wasi::layer;
+//!   re-exported here for symmetry), Eqs. 1-3.
+//! * `lora`     — frozen dense W + trainable low-rank adapter (Hu et al.
+//!   2022); memory grows (W AND adapter), inference unchanged.
+//! * `svdllm`   — truncation-aware data whitening + truncated SVD + LoRA
+//!   adapters (Wang et al. 2024, App. A.4) — 3D activations only.
+//! * `amc`      — activation-map compression by full HOSVD every
+//!   iteration under an ε threshold (Nguyen et al. 2024): WASI's direct
+//!   ancestor and the source of its rank budgets.
+//! * `asi_only` — ASI on activations with dense weights (Nguyen et al.
+//!   2025): compresses training memory but not the architecture.
+
+pub mod amc;
+pub mod asi_only;
+pub mod conv;
+pub mod lora;
+pub mod svdllm;
+
+pub use crate::wasi::layer::DenseLayer;

@@ -1,0 +1,133 @@
+//! SVD-LLM baseline (Wang et al. 2024; paper App. A.4).
+//!
+//! Truncation-aware data whitening: S = chol(X Xᵀ) over a calibration
+//! activation X (summed over batch), SVD of W S, truncate to K, split as
+//!   W'(u) = U_K Σ_K^{1/2},   W'(v) = Σ_K^{1/2} V_Kᵀ S⁻¹,
+//! then fine-tune with LoRA adapters on top (α=16, r=8 — the paper's
+//! setup, App. B.1).  Only defined for 3D activations: `whiten` takes the
+//! (N, I) batch-summed activation and there is deliberately no 4D path
+//! (that is the Appendix-A.4 limitation WASI escapes; `fig11`/`fig6`
+//! exclude SVD-LLM for SwinLite exactly like the paper does).
+
+use anyhow::{Context, Result};
+
+use crate::linalg::cholesky::{cholesky, invert_lower};
+use crate::linalg::matrix::Mat;
+use crate::linalg::svd::svd;
+
+/// The compressed pair (W'(u), W'(v)) with W̃ = W'(u) W'(v).
+#[derive(Debug, Clone)]
+pub struct SvdLlmFactors {
+    pub wu: Mat, // (O, K)
+    pub wv: Mat, // (K, I)
+}
+
+/// Whitening matrix S from a calibration activation X (N, I):
+/// S = cholesky(Xᵀ X + λI)  (λ ridge for numerical PD).
+pub fn whiten(x: &Mat, ridge: f32) -> Result<Mat> {
+    let mut g = x.matmul_tn(x); // (I, I)
+    for i in 0..g.rows {
+        *g.at_mut(i, i) += ridge;
+    }
+    cholesky(&g).context("whitening Gram not PD")
+}
+
+/// Compress W (O, I) at target rank K with whitening S (paper Eqs. 47-48).
+pub fn compress(w: &Mat, s: &Mat, k: usize) -> SvdLlmFactors {
+    let ws = w.matmul(s); // (O, I)
+    let d = svd(&ws);
+    let k = k.min(d.s.len());
+    let (o, i) = (w.rows, w.cols);
+    let mut wu = Mat::zeros(o, k);
+    let mut wv_pre = Mat::zeros(k, i);
+    for j in 0..k {
+        let sq = d.s[j].max(0.0).sqrt();
+        for r in 0..o {
+            wu.data[r * k + j] = d.u.at(r, j) * sq;
+        }
+        for c in 0..i {
+            wv_pre.data[j * i + c] = sq * d.vt.at(j, c);
+        }
+    }
+    // W'(v) = Σ^{1/2} V_Kᵀ S⁻¹
+    let s_inv = invert_lower(s);
+    let wv = wv_pre.matmul(&s_inv);
+    SvdLlmFactors { wu, wv }
+}
+
+impl SvdLlmFactors {
+    pub fn k(&self) -> usize {
+        self.wu.cols
+    }
+
+    pub fn materialize(&self) -> Mat {
+        self.wu.matmul(&self.wv)
+    }
+
+    /// Weight memory in elements (the two factors).
+    pub fn weight_elems(&self) -> usize {
+        self.wu.data.len() + self.wv.data.len()
+    }
+}
+
+/// Rank for a target compression ratio (the paper drives SVD-LLM by the
+/// ratios WASI achieves at each ε, App. B.1).
+pub fn rank_for_ratio(o: usize, i: usize, ratio: f64) -> usize {
+    // K (O + I) = O I / ratio  =>  K = O I / (ratio (O + I))
+    (((o * i) as f64 / (ratio * (o + i) as f64)).floor() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+    use crate::wasi::wsi::powerlaw;
+
+    #[test]
+    fn whitening_makes_transformed_activation_orthonormalish() {
+        let mut rng = Pcg64::new(1);
+        let x = Mat::random(40, 8, &mut rng); // (N, I)
+        let s = whiten(&x, 1e-3).unwrap();
+        // (X S⁻ᵀ) should have identity Gram: Xᵀ X = S Sᵀ.
+        let g = x.matmul_tn(&x);
+        let rec = s.matmul_nt(&s);
+        for (a, b) in g.data.iter().zip(&rec.data) {
+            assert!((a - b).abs() < 1e-2 * g.frob_norm(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn full_rank_compress_reconstructs() {
+        let mut rng = Pcg64::new(2);
+        let w = Mat::random(10, 8, &mut rng);
+        let x = Mat::random(30, 8, &mut rng);
+        let s = whiten(&x, 1e-3).unwrap();
+        let f = compress(&w, &s, 8);
+        let rec = f.materialize();
+        let rel = rec.sub(&w).frob_norm() / w.frob_norm();
+        assert!(rel < 1e-2, "rel {rel}");
+    }
+
+    #[test]
+    fn truncation_error_grows_as_rank_falls() {
+        let w = powerlaw(24, 20, 1.0, 3);
+        let mut rng = Pcg64::new(4);
+        let x = Mat::random(50, 20, &mut rng);
+        let s = whiten(&x, 1e-3).unwrap();
+        let mut prev = 0.0f32;
+        for k in [20usize, 10, 4, 2] {
+            let f = compress(&w, &s, k);
+            let rel = f.materialize().sub(&w).frob_norm() / w.frob_norm();
+            assert!(rel >= prev - 1e-4, "k={k}: {rel} < {prev}");
+            prev = rel;
+        }
+    }
+
+    #[test]
+    fn ratio_rank_math() {
+        let k = rank_for_ratio(3072, 768, 4.0);
+        // K(O+I)*4 == O*I  =>  K = 3072*768/(4*3840) = 153.6 -> 153
+        assert_eq!(k, 153);
+        assert!(rank_for_ratio(8, 8, 1000.0) >= 1);
+    }
+}

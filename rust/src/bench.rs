@@ -1,0 +1,95 @@
+//! Criterion-lite bench harness (the vendored crate set has no criterion).
+//!
+//! Adaptive iteration count targeting a fixed measurement window, with
+//! warmup, and median / p10 / p90 reporting.  Used by `cargo bench`
+//! (benches/ have `harness = false`) and by the eval modules that need
+//! wallclock numbers.
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+/// One benchmark's results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms  (p10 {:>8.3}, p90 {:>8.3}, n={})",
+            self.name,
+            self.median_s * 1e3,
+            self.p10_s * 1e3,
+            self.p90_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark a closure: warm up, then sample until `budget_s` of
+/// measurement or `max_iters`, whichever first (at least 3 samples).
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    // Warmup: one call, or more if extremely fast.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_secs_f64();
+    let mut samples = Vec::new();
+    let max_iters = 10_000usize;
+    let t_start = Instant::now();
+    while samples.len() < 3
+        || (t_start.elapsed().as_secs_f64() < budget_s && samples.len() < max_iters)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let _ = first;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_s: percentile(&samples, 50.0),
+        p10_s: percentile(&samples, 10.0),
+        p90_s: percentile(&samples, 90.0),
+    }
+}
+
+/// Time a single execution (for expensive end-to-end cases).
+pub fn bench_once<F: FnOnce()>(name: &str, f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed().as_secs_f64();
+    BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        median_s: dt,
+        p10_s: dt,
+        p90_s: dt,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_at_least_three_samples() {
+        let r = bench("noop", 0.0, || {});
+        assert!(r.iters >= 3);
+        assert!(r.median_s >= 0.0);
+    }
+
+    #[test]
+    fn median_in_range() {
+        let r = bench("sleepish", 0.01, || {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert!(r.median_s >= 150e-6, "median {}", r.median_s);
+        assert!(r.p10_s <= r.median_s && r.median_s <= r.p90_s);
+    }
+}

@@ -1,0 +1,187 @@
+//! Checkpointing: save/restore the flat parameter + ASI-state vectors
+//! with an integrity header, so an interrupted on-device fine-tune can
+//! resume exactly (the paper's target devices lose power routinely).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::TrainStep;
+
+const MAGIC: u32 = 0x5741_5349; // "WASI"
+const VERSION: u32 = 1;
+
+/// Serialized snapshot of a training session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub state: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn from_train_step(step: &TrainStep, at_step: u64) -> Checkpoint {
+        Checkpoint {
+            model: step.entry.name.clone(),
+            step: at_step,
+            params: step.params.clone(),
+            state: step.state.clone(),
+        }
+    }
+
+    /// Binary layout: magic, version, step, name_len, name bytes,
+    /// params_len, state_len, params f32 LE, state f32 LE, checksum.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        let name = self.model.as_bytes();
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name);
+        buf.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&(self.state.len() as u64).to_le_bytes());
+        for v in &self.params {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.state {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&checksum(&buf).to_le_bytes());
+        std::fs::write(path.as_ref(), buf)
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let buf = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        if buf.len() < 32 {
+            return Err(anyhow!("checkpoint truncated"));
+        }
+        let (body, tail) = buf.split_at(buf.len() - 8);
+        let want = u64::from_le_bytes(tail.try_into().unwrap());
+        if checksum(body) != want {
+            return Err(anyhow!("checkpoint checksum mismatch (corrupt file)"));
+        }
+        let mut r = Reader { b: body, i: 0 };
+        if r.u32()? != MAGIC {
+            return Err(anyhow!("not a wasi-train checkpoint"));
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(anyhow!("unsupported checkpoint version {version}"));
+        }
+        let step = r.u64()?;
+        let name_len = r.u32()? as usize;
+        let model = String::from_utf8(r.bytes(name_len)?.to_vec())?;
+        let p_len = r.u64()? as usize;
+        let s_len = r.u64()? as usize;
+        let params = r.f32s(p_len)?;
+        let state = r.f32s(s_len)?;
+        Ok(Checkpoint { model, step, params, state })
+    }
+
+    /// Restore into a live TrainStep (must be the same variant).
+    pub fn restore_into(&self, step: &mut TrainStep) -> Result<()> {
+        if step.entry.name != self.model {
+            return Err(anyhow!(
+                "checkpoint is for {:?}, step is {:?}",
+                self.model,
+                step.entry.name
+            ));
+        }
+        if step.params.len() != self.params.len() || step.state.len() != self.state.len() {
+            return Err(anyhow!("checkpoint shape mismatch"));
+        }
+        step.params = self.params.clone();
+        step.state = self.state.clone();
+        Ok(())
+    }
+}
+
+/// FNV-1a 64 over the body.
+fn checksum(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Reader<'_> {
+    fn bytes(&mut self, n: usize) -> Result<&[u8]> {
+        if self.i + n > self.b.len() {
+            return Err(anyhow!("checkpoint truncated at byte {}", self.i));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.bytes(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            model: "vit_wasi_eps80".into(),
+            step: 1234,
+            params: vec![1.0, -2.5, 3.25e-8],
+            state: vec![0.5; 7],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let tmp = std::env::temp_dir().join("wasi_ckpt_test.bin");
+        let c = sample();
+        c.save(&tmp).unwrap();
+        let back = Checkpoint::load(&tmp).unwrap();
+        assert_eq!(back, c);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let tmp = std::env::temp_dir().join("wasi_ckpt_corrupt.bin");
+        sample().save(&tmp).unwrap();
+        let mut bytes = std::fs::read(&tmp).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&tmp, bytes).unwrap();
+        assert!(Checkpoint::load(&tmp).is_err());
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let tmp = std::env::temp_dir().join("wasi_ckpt_garbage.bin");
+        std::fs::write(&tmp, b"definitely not a checkpoint, far too short?x").unwrap();
+        assert!(Checkpoint::load(&tmp).is_err());
+        let _ = std::fs::remove_file(tmp);
+    }
+}

@@ -1,0 +1,112 @@
+//! Live memory accounting for a fine-tuning session (the budget the
+//! on-device deployment must respect; drives Figs. 5-7 memory axes for
+//! the executable models and the `plan-ranks` CLI).
+
+use crate::runtime::ModelEntry;
+
+/// Memory breakdown in ELEMENTS (×4 for bytes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemoryBreakdown {
+    pub weights: usize,
+    pub activations: usize,
+    pub asi_state: usize,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> usize {
+        self.weights + self.activations + self.asi_state
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total() as f64 * 4.0 / (1024.0 * 1024.0)
+    }
+}
+
+/// Account a model variant's training memory from its manifest entry.
+///
+/// * weights: the flat parameter vector (factored layers are already L/R);
+/// * activations: for every factored layer the Eq. 44 compressed form,
+///   for a vanilla entry the full B·N·I per layer (Eq. 42);
+/// * asi_state: the warm-start bases (counted once; they double as the
+///   backward factors).
+pub fn account(entry: &ModelEntry) -> MemoryBreakdown {
+    let mut b = MemoryBreakdown {
+        weights: entry.params_len,
+        asi_state: entry.state_len,
+        ..Default::default()
+    };
+    for (name, (_oi, act)) in &entry.layer_dims {
+        if let Some(ranks) = entry.asi_ranks.get(name) {
+            // Eq. 44: core + factor memory; factors live in asi_state
+            // already, so add only the core here to avoid double counting.
+            let core: usize = ranks.iter().product();
+            b.activations += core;
+        } else {
+            b.activations += act.iter().product::<usize>();
+        }
+    }
+    b
+}
+
+/// Vanilla-model activation memory for the same architecture, for the
+/// compression-ratio denominators: full activations at each factored site.
+pub fn vanilla_activations(entry: &ModelEntry) -> usize {
+    entry
+        .layer_dims
+        .values()
+        .map(|(_oi, act)| act.iter().product::<usize>())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    fn entry() -> ModelEntry {
+        let mut layer_dims = BTreeMap::new();
+        layer_dims.insert(
+            "l1".to_string(),
+            (vec![256usize, 128], vec![16usize, 65, 128]),
+        );
+        let mut asi_ranks = BTreeMap::new();
+        asi_ranks.insert("l1".to_string(), vec![4usize, 12, 20]);
+        ModelEntry {
+            name: "t".into(),
+            train_hlo: None,
+            infer_hlo: PathBuf::new(),
+            params_file: PathBuf::new(),
+            state_file: None,
+            params_len: 1000,
+            state_len: 16 * 4 + 65 * 12 + 128 * 20,
+            batch: 16,
+            input_dim: 3072,
+            classes: 10,
+            eps: Some(0.8),
+            weight_ranks: BTreeMap::new(),
+            asi_ranks,
+            layer_dims,
+            param_spec: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn wasi_total_below_vanilla() {
+        let e = entry();
+        let b = account(&e);
+        // compressed total (core + factors-in-state) < full activation
+        assert!(b.activations + b.asi_state < vanilla_activations(&e));
+        assert_eq!(b.weights, 1000);
+        assert_eq!(b.activations, 4 * 12 * 20);
+    }
+
+    #[test]
+    fn vanilla_entry_counts_full_activations() {
+        let mut e = entry();
+        e.asi_ranks.clear();
+        e.state_len = 0;
+        let b = account(&e);
+        assert_eq!(b.activations, 16 * 65 * 128);
+    }
+}

@@ -1,0 +1,106 @@
+//! Training metrics: per-step records + exponential smoothing, JSON dump.
+
+use crate::util::json::{arr, num, obj, Json};
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub accuracy: f32,
+    pub lr: f32,
+    pub seconds: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub records: Vec<StepRecord>,
+    ema_loss: Option<f64>,
+}
+
+impl Metrics {
+    pub fn push(&mut self, r: StepRecord) {
+        let alpha = 0.1;
+        self.ema_loss = Some(match self.ema_loss {
+            None => r.loss as f64,
+            Some(e) => e * (1.0 - alpha) + r.loss as f64 * alpha,
+        });
+        self.records.push(r);
+    }
+
+    pub fn smoothed_loss(&self) -> f64 {
+        self.ema_loss.unwrap_or(f64::NAN)
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.records.iter().map(|r| r.seconds).sum()
+    }
+
+    pub fn mean_step_seconds(&self) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        self.total_seconds() / self.records.len() as f64
+    }
+
+    /// Loss curve subsampled to at most `n` points (for logging).
+    pub fn loss_curve(&self, n: usize) -> Vec<(usize, f32)> {
+        if self.records.is_empty() {
+            return Vec::new();
+        }
+        let stride = (self.records.len() / n.max(1)).max(1);
+        self.records
+            .iter()
+            .step_by(stride)
+            .map(|r| (r.step, r.loss))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        arr(self.records.iter().map(|r| {
+            obj(vec![
+                ("step", num(r.step as f64)),
+                ("loss", num(r.loss as f64)),
+                ("acc", num(r.accuracy as f64)),
+                ("lr", num(r.lr as f64)),
+                ("sec", num(r.seconds)),
+            ])
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32) -> StepRecord {
+        StepRecord { step, loss, accuracy: 0.5, lr: 0.05, seconds: 0.01 }
+    }
+
+    #[test]
+    fn ema_tracks_loss() {
+        let mut m = Metrics::default();
+        for i in 0..100 {
+            m.push(rec(i, 1.0));
+        }
+        assert!((m.smoothed_loss() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn curve_subsamples() {
+        let mut m = Metrics::default();
+        for i in 0..1000 {
+            m.push(rec(i, i as f32));
+        }
+        let c = m.loss_curve(10);
+        assert!(c.len() >= 10 && c.len() <= 11);
+        assert_eq!(c[0].0, 0);
+    }
+
+    #[test]
+    fn json_serializes() {
+        let mut m = Metrics::default();
+        m.push(rec(0, 2.5));
+        let s = m.to_json().to_string();
+        assert!(s.contains("\"loss\":2.5"));
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: the on-device fine-tuning runtime.
+//!
+//! For this paper the coordinator's job is the training loop itself —
+//! the paper's contribution lives at L2/L1 (the subspace math inside the
+//! step), so L3 is the driver the system prompt calls "thin": session
+//! lifecycle, cosine LR schedule, batching, validation, checkpointing,
+//! live memory accounting, and metrics.  Everything here is pure rust;
+//! compute happens inside the AOT-compiled step.
+
+pub mod checkpoint;
+pub mod memory;
+pub mod metrics;
+pub mod schedule;
+pub mod session;
+pub mod trainer;
+
+pub use schedule::CosineSchedule;
+pub use session::{FinetuneConfig, FinetuneReport, Session};
+pub use trainer::{TrainConfig, Trainer};

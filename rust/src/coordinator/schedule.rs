@@ -1,0 +1,50 @@
+//! Learning-rate schedules.  The paper trains with SGD, initial LR 0.05,
+//! cosine annealing over the full run (App. B.1).
+
+/// Cosine annealing from `lr0` to ~0 over `total` steps.
+#[derive(Debug, Clone, Copy)]
+pub struct CosineSchedule {
+    pub lr0: f32,
+    pub total: usize,
+}
+
+impl CosineSchedule {
+    pub fn paper_default(total: usize) -> Self {
+        CosineSchedule { lr0: 0.05, total: total.max(1) }
+    }
+
+    pub fn lr(&self, step: usize) -> f32 {
+        let t = (step.min(self.total)) as f32 / self.total as f32;
+        self.lr0 * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        let s = CosineSchedule::paper_default(100);
+        assert!((s.lr(0) - 0.05).abs() < 1e-7);
+        assert!(s.lr(100) < 1e-6);
+        assert!((s.lr(50) - 0.025).abs() < 1e-6);
+    }
+
+    #[test]
+    fn monotone_decreasing() {
+        let s = CosineSchedule::paper_default(37);
+        let mut prev = f32::INFINITY;
+        for step in 0..=37 {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn clamps_past_total() {
+        let s = CosineSchedule::paper_default(10);
+        assert_eq!(s.lr(10), s.lr(999));
+    }
+}

@@ -1,0 +1,100 @@
+//! High-level fine-tuning session: dataset + variant + budget -> report.
+//!
+//! This is the public API an application embeds (see examples/): pick a
+//! dataset preset and a model variant, fine-tune under the paper's
+//! recipe, and get back accuracy, loss curve, wallclock, and the memory
+//! breakdown.
+
+use anyhow::Result;
+
+use crate::data::synth::VisionTask;
+use crate::data::Loader;
+use crate::runtime::{Manifest, Runtime};
+
+use super::memory::{account, MemoryBreakdown};
+use super::trainer::{TrainConfig, Trainer};
+
+/// What to fine-tune and how.
+#[derive(Debug, Clone)]
+pub struct FinetuneConfig {
+    pub model: String,
+    pub dataset: String,
+    pub samples: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for FinetuneConfig {
+    fn default() -> Self {
+        FinetuneConfig {
+            model: "vit_wasi_eps80".into(),
+            dataset: "cifar10-like".into(),
+            samples: 512,
+            steps: 200,
+            seed: 233, // the paper's fixed seed (App. B.2)
+            verbose: false,
+        }
+    }
+}
+
+/// Results of one session.
+#[derive(Debug, Clone)]
+pub struct FinetuneReport {
+    pub model: String,
+    pub dataset: String,
+    pub final_loss: f64,
+    pub val_accuracy: f64,
+    pub mean_step_seconds: f64,
+    pub total_seconds: f64,
+    pub memory: MemoryBreakdown,
+    pub loss_curve: Vec<(usize, f32)>,
+}
+
+/// Owns the runtime + manifest and runs sessions.
+pub struct Session {
+    pub runtime: Runtime,
+    pub manifest: Manifest,
+}
+
+impl Session {
+    pub fn open(artifacts_dir: &str) -> Result<Session> {
+        Ok(Session {
+            runtime: Runtime::cpu()?,
+            manifest: Manifest::load(artifacts_dir)?,
+        })
+    }
+
+    /// Fine-tune one variant on one dataset preset; returns the report.
+    pub fn finetune(&self, cfg: &FinetuneConfig) -> Result<FinetuneReport> {
+        let entry = self.manifest.model(&cfg.model)?;
+        let mut task = VisionTask::preset(&cfg.dataset, cfg.seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset preset {:?}", cfg.dataset))?;
+        if task.classes != entry.classes {
+            // Artifacts are compiled for a fixed class count; presets with
+            // more classes are remapped modulo the head size (documented
+            // substitution: the head's class-count is an artifact constant).
+            task = VisionTask::new(&cfg.dataset, entry.classes, 32, 0.7, 8, cfg.seed);
+        }
+        let mut loader = Loader::from_task(&mut task, cfg.samples, cfg.seed);
+        let tcfg = TrainConfig {
+            steps: cfg.steps,
+            lr0: 0.05,
+            log_every: (cfg.steps / 10).max(1),
+            verbose: cfg.verbose,
+        };
+        let mut trainer = Trainer::new(&self.runtime, entry, tcfg)?;
+        trainer.run(&mut loader)?;
+        let val = trainer.validate(&self.runtime, &loader)?;
+        Ok(FinetuneReport {
+            model: cfg.model.clone(),
+            dataset: cfg.dataset.clone(),
+            final_loss: trainer.metrics.smoothed_loss(),
+            val_accuracy: val,
+            mean_step_seconds: trainer.metrics.mean_step_seconds(),
+            total_seconds: trainer.metrics.total_seconds(),
+            memory: account(entry),
+            loss_curve: trainer.metrics.loss_curve(50),
+        })
+    }
+}

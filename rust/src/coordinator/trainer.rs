@@ -1,0 +1,94 @@
+//! The training loop: drives an AOT-compiled train step over a Loader.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::loader::Loader;
+use crate::runtime::{InferStep, Runtime, TrainStep};
+
+use super::metrics::{Metrics, StepRecord};
+use super::schedule::CosineSchedule;
+
+/// Loop configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr0: f32,
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 200, lr0: 0.05, log_every: 20, verbose: false }
+    }
+}
+
+/// A live trainer for one model variant.
+pub struct Trainer<'rt> {
+    pub step: TrainStep<'rt>,
+    pub metrics: Metrics,
+    schedule: CosineSchedule,
+    cfg: TrainConfig,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, entry: &crate::runtime::ModelEntry, cfg: TrainConfig) -> Result<Self> {
+        let step = TrainStep::load(rt, entry)?;
+        let schedule = CosineSchedule { lr0: cfg.lr0, total: cfg.steps };
+        Ok(Trainer { step, metrics: Metrics::default(), schedule, cfg })
+    }
+
+    /// Run the configured number of steps against the loader.
+    pub fn run(&mut self, loader: &mut Loader) -> Result<()> {
+        let batch = self.step.entry.batch;
+        for s in 0..self.cfg.steps {
+            let (x, y) = loader.next_batch(batch);
+            let lr = self.schedule.lr(s);
+            let t0 = Instant::now();
+            let out = self.step.step(&x, &y, lr)?;
+            let dt = t0.elapsed().as_secs_f64();
+            self.metrics.push(StepRecord {
+                step: s,
+                loss: out.loss,
+                accuracy: out.accuracy,
+                lr,
+                seconds: dt,
+            });
+            if self.cfg.verbose && (s % self.cfg.log_every == 0 || s + 1 == self.cfg.steps) {
+                eprintln!(
+                    "[train {}] step {s:>4} loss {:.4} acc {:.3} lr {:.4} ({:.0} ms)",
+                    self.step.entry.name, out.loss, out.accuracy, lr, dt * 1000.0
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Validation accuracy via the matching infer artifact.
+    pub fn validate(&self, rt: &'rt Runtime, loader: &Loader) -> Result<f64> {
+        let infer = InferStep::load(rt, &self.step.entry)?;
+        let batch = self.step.entry.batch;
+        let n = loader.val_len();
+        if n == 0 {
+            return Ok(f64::NAN);
+        }
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let mut start = 0usize;
+        while seen < n {
+            let (x, labels) = loader.val_batch(start, batch);
+            let preds = infer.predict(&self.step.params, &x)?;
+            let take = batch.min(n - seen);
+            for i in 0..take {
+                if preds[i] == labels[i] {
+                    correct += 1;
+                }
+            }
+            seen += take;
+            start += batch;
+        }
+        Ok(correct as f64 / n as f64)
+    }
+}

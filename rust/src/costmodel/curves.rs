@@ -1,0 +1,65 @@
+//! Fig. 2 generator: C/S training+inference surfaces over (dims, rank).
+
+use super::flops::{LayerDims, WasiRanks};
+
+/// One point of the Fig. 2 surfaces.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub dim: usize,
+    pub rank: usize,
+    pub c_training: f64,
+    pub c_inference: f64,
+    pub s_training: f64,
+    pub s_inference: f64,
+}
+
+/// Sweep square layers (I = O = dim, N tokens) over ranks, applying the
+/// same rank to weights and all activation modes, exactly as §3.4 assumes
+/// ("the same optimal rank is applied to both A_i and W_i").
+pub fn fig2_sweep(batch: usize, n_tokens: usize, dims: &[usize], ranks: &[usize]) -> Vec<CurvePoint> {
+    let mut out = Vec::new();
+    for &dim in dims {
+        for &rank in ranks {
+            if rank > dim || rank > batch.max(1) * 0 + dim {
+                continue;
+            }
+            let l = LayerDims { b: batch, n: n_tokens, i: dim, o: dim };
+            let r = [rank.min(batch), rank.min(n_tokens), rank.min(dim)];
+            let wr = WasiRanks { k: rank.min(dim), r };
+            out.push(CurvePoint {
+                dim,
+                rank,
+                c_training: l.c_training(&wr),
+                c_inference: l.c_inference(wr.k),
+                s_training: l.s_training(&wr),
+                s_inference: l.s_inference(wr.k),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigger_models_compress_more_at_fixed_rank() {
+        let pts = fig2_sweep(128, 197, &[256, 512, 1024, 2048], &[32]);
+        // paper §3.4: "As model size grows and the optimal rank decreases,
+        // WASI delivers greater memory compression and speedup".
+        for w in pts.windows(2) {
+            assert!(w[1].c_training > w[0].c_training);
+            assert!(w[1].s_inference > w[0].s_inference);
+        }
+    }
+
+    #[test]
+    fn ratios_approach_one_at_high_rank() {
+        let pts = fig2_sweep(128, 197, &[1024], &[16, 64, 256, 512]);
+        let last = pts.last().unwrap();
+        assert!(last.s_inference < 1.2, "s_inf {}", last.s_inference);
+        let first = pts.first().unwrap();
+        assert!(first.s_inference > 10.0);
+    }
+}

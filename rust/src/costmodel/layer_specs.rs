@@ -1,0 +1,140 @@
+//! Layer-dimension tables for the models the paper evaluates.
+//!
+//! These are the *paper-scale* models (ViT-B/16, Swin-T, TinyLlama-1.1B)
+//! used by the analytic exhibits (Fig. 2 surfaces, the memory/FLOPs axes
+//! of Figs. 5-7/10-11, Tab. 1) — the executable artifacts use the tiny
+//! configs from `aot.py`, but the cost model speaks both scales.
+
+use super::flops::LayerDims;
+
+/// A named model as a list of (layer name, dims) for its MLP linears.
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub layers: Vec<(String, LayerDims)>,
+}
+
+/// ViT-B/16 at 224²: 12 blocks, D=768, hidden=3072, N=197.
+pub fn vit_b16(batch: usize) -> ModelSpec {
+    let mut layers = Vec::new();
+    for blk in 0..12 {
+        layers.push((
+            format!("blocks.{blk}.mlp.fc1"),
+            LayerDims { b: batch, n: 197, i: 768, o: 3072 },
+        ));
+        layers.push((
+            format!("blocks.{blk}.mlp.fc2"),
+            LayerDims { b: batch, n: 197, i: 3072, o: 768 },
+        ));
+    }
+    ModelSpec { name: "vit-b16", layers }
+}
+
+/// ViT-B/16 including attention projections (paper Tab. 1 scope).
+pub fn vit_b16_all_linear(batch: usize) -> ModelSpec {
+    let mut spec = vit_b16(batch);
+    for blk in 0..12 {
+        spec.layers.push((
+            format!("blocks.{blk}.attn.qkv"),
+            LayerDims { b: batch, n: 197, i: 768, o: 2304 },
+        ));
+        spec.layers.push((
+            format!("blocks.{blk}.attn.proj"),
+            LayerDims { b: batch, n: 197, i: 768, o: 768 },
+        ));
+    }
+    spec.name = "vit-b16-all";
+    spec
+}
+
+/// Swin-T: 4 stages (2,2,6,2) with dims (96,192,384,768); token counts
+/// 56², 28², 14², 7² — MLP linears only.  Activations are 4D in the real
+/// model; here N = H*W for the 3D cost model (the 4D memory variant is
+/// exercised separately via `memory::m_wasi_a_4d`).
+pub fn swin_t(batch: usize) -> ModelSpec {
+    let stages: [(usize, usize, usize); 4] =
+        [(2, 96, 56), (2, 192, 28), (6, 384, 14), (2, 768, 7)];
+    let mut layers = Vec::new();
+    for (s, (depth, dim, side)) in stages.iter().enumerate() {
+        for blk in 0..*depth {
+            let n = side * side;
+            layers.push((
+                format!("stages.{s}.blocks.{blk}.mlp.fc1"),
+                LayerDims { b: batch, n, i: *dim, o: 4 * dim },
+            ));
+            layers.push((
+                format!("stages.{s}.blocks.{blk}.mlp.fc2"),
+                LayerDims { b: batch, n, i: 4 * dim, o: *dim },
+            ));
+        }
+    }
+    ModelSpec { name: "swin-t", layers }
+}
+
+/// TinyLlama-1.1B: 22 blocks, D=2048, hidden=5632, seq len 512.
+/// `last_k` restricts to the last k blocks (the Fig. 7 sweep).
+pub fn tinyllama(batch: usize, seq: usize, last_k: usize) -> ModelSpec {
+    let depth = 22;
+    let start = depth - last_k.min(depth);
+    let mut layers = Vec::new();
+    for blk in start..depth {
+        // LLaMA MLP: gate+up (2 x D->H) and down (H->D).
+        layers.push((
+            format!("blocks.{blk}.mlp.gate"),
+            LayerDims { b: batch, n: seq, i: 2048, o: 5632 },
+        ));
+        layers.push((
+            format!("blocks.{blk}.mlp.up"),
+            LayerDims { b: batch, n: seq, i: 2048, o: 5632 },
+        ));
+        layers.push((
+            format!("blocks.{blk}.mlp.down"),
+            LayerDims { b: batch, n: seq, i: 5632, o: 2048 },
+        ));
+    }
+    ModelSpec { name: "tinyllama", layers }
+}
+
+/// MCUNet-like conv spec for the Fig. 12 WSI-on-conv study: conv weights
+/// reshaped (O, I·k·k) — the last four convs of a compact backbone.
+pub fn mcunet_tail() -> Vec<(String, usize, usize)> {
+    vec![
+        ("conv.-4".into(), 160, 960),  // O, I*k*k (pointwise/depthwise mix)
+        ("conv.-3".into(), 320, 1440),
+        ("conv.-2".into(), 640, 2880),
+        ("conv.-1".into(), 1280, 640),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vit_has_24_mlp_linears() {
+        let s = vit_b16(128);
+        assert_eq!(s.layers.len(), 24);
+        assert!(s.layers.iter().all(|(_, d)| d.b == 128 && d.n == 197));
+    }
+
+    #[test]
+    fn all_linear_adds_attention() {
+        assert_eq!(vit_b16_all_linear(1).layers.len(), 48);
+    }
+
+    #[test]
+    fn swin_dims_follow_stages() {
+        let s = swin_t(64);
+        assert_eq!(s.layers.len(), 2 * (2 + 2 + 6 + 2));
+        // first stage tokens = 56*56
+        assert_eq!(s.layers[0].1.n, 3136);
+        // last stage dim = 768
+        assert_eq!(s.layers.last().unwrap().1.i, 4 * 768);
+    }
+
+    #[test]
+    fn tinyllama_last_k() {
+        assert_eq!(tinyllama(4, 512, 5).layers.len(), 15);
+        assert_eq!(tinyllama(4, 512, 22).layers.len(), 66);
+        assert_eq!(tinyllama(4, 512, 99).layers.len(), 66);
+    }
+}

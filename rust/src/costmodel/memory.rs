@@ -1,0 +1,114 @@
+//! Memory model (paper Eqs. 41-46).  Counts are ELEMENTS; multiply by 4
+//! for f32 bytes (helpers provided).
+
+use super::flops::{LayerDims, WasiRanks};
+
+pub const BYTES_PER_ELEM: f64 = 4.0;
+
+impl LayerDims {
+    /// Eq. 41: vanilla weight memory = I O.
+    pub fn m_vanilla_w(&self) -> f64 {
+        (self.i * self.o) as f64
+    }
+
+    /// Eq. 42: vanilla activation memory = B N I.
+    pub fn m_vanilla_a(&self) -> f64 {
+        (self.b * self.n * self.i) as f64
+    }
+
+    /// Eq. 43: WASI weight memory = K (I + O).
+    pub fn m_wasi_w(&self, k: usize) -> f64 {
+        (k * (self.i + self.o)) as f64
+    }
+
+    /// Eq. 44: WASI activation memory = Π r_m + Σ D_m r_m.
+    pub fn m_wasi_a(&self, r: &[usize; 3]) -> f64 {
+        let dims = self.dims();
+        let core: usize = r.iter().product();
+        let factors: usize = dims.iter().zip(r).map(|(d, rm)| d * rm).sum();
+        (core + factors) as f64
+    }
+
+    /// Eq. 45: training memory compression C_training.
+    pub fn c_training(&self, ranks: &WasiRanks) -> f64 {
+        (self.m_vanilla_w() + self.m_vanilla_a())
+            / (self.m_wasi_w(ranks.k) + self.m_wasi_a(&ranks.r))
+    }
+
+    /// Eq. 46: inference memory compression C_inference.
+    pub fn c_inference(&self, k: usize) -> f64 {
+        self.m_vanilla_w() / self.m_wasi_w(k)
+    }
+
+    /// WASI training memory (elements) for this layer.
+    pub fn wasi_train_mem(&self, ranks: &WasiRanks) -> f64 {
+        self.m_wasi_w(ranks.k) + self.m_wasi_a(&ranks.r)
+    }
+
+    /// Vanilla training memory (elements).
+    pub fn vanilla_train_mem(&self) -> f64 {
+        self.m_vanilla_w() + self.m_vanilla_a()
+    }
+}
+
+/// 4D variant of Eq. 44 (SwinLite): dims = (B, H, W, I).
+pub fn m_wasi_a_4d(dims: &[usize; 4], r: &[usize; 4]) -> f64 {
+    let core: usize = r.iter().product();
+    let factors: usize = dims.iter().zip(r).map(|(d, rm)| d * rm).sum();
+    (core + factors) as f64
+}
+
+pub fn elems_to_mb(elems: f64) -> f64 {
+    elems * BYTES_PER_ELEM / (1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L: LayerDims = LayerDims { b: 128, n: 197, i: 768, o: 3072 };
+
+    #[test]
+    fn formulas_match_paper() {
+        assert_eq!(L.m_vanilla_w(), 768.0 * 3072.0);
+        assert_eq!(L.m_vanilla_a(), 128.0 * 197.0 * 768.0);
+        assert_eq!(L.m_wasi_w(64), 64.0 * (768.0 + 3072.0));
+        let r = [8usize, 16, 32];
+        assert_eq!(
+            L.m_wasi_a(&r),
+            (8 * 16 * 32 + 128 * 8 + 197 * 16 + 768 * 32) as f64
+        );
+    }
+
+    #[test]
+    fn compression_large_at_low_rank() {
+        let ranks = WasiRanks { k: 16, r: [4, 8, 16] };
+        assert!(L.c_training(&ranks) > 50.0, "c_tr {}", L.c_training(&ranks));
+        assert!(L.c_inference(16) > 30.0);
+    }
+
+    #[test]
+    fn compression_near_one_at_full_rank() {
+        // At K = IO/(I+O) the weight memory matches vanilla.
+        let kstar = (768 * 3072) / (768 + 3072);
+        let c = L.c_inference(kstar);
+        assert!((c - 1.0).abs() < 0.02, "c = {c}");
+    }
+
+    #[test]
+    fn mb_conversion() {
+        assert!((elems_to_mb(1024.0 * 1024.0) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn four_d_memory() {
+        let dims = [16usize, 16, 16, 192];
+        let r = [4usize, 8, 8, 24];
+        let m = m_wasi_a_4d(&dims, &r);
+        assert_eq!(
+            m,
+            (4 * 8 * 8 * 24 + 16 * 4 + 16 * 8 + 16 * 8 + 192 * 24) as f64
+        );
+        assert!(m < (16 * 16 * 16 * 192) as f64);
+    }
+}

@@ -1,0 +1,14 @@
+//! Analytic cost model — the paper's Appendix A.3 formulas, exactly.
+//!
+//! FLOPs (Eqs. 33-40) and memory (Eqs. 41-46) for vanilla vs WASI
+//! training/inference of a linear layer, plus whole-model aggregation
+//! over layer-dimension tables for ViT / SwinT / TinyLlama-like models.
+//! These regenerate Fig. 2 and the memory/FLOPs axes of Figs. 5-7,
+//! 10-11 and Tab. 1.
+
+pub mod curves;
+pub mod flops;
+pub mod layer_specs;
+pub mod memory;
+
+pub use flops::{LayerDims, WasiRanks};

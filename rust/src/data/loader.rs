@@ -1,0 +1,122 @@
+//! Epoch-based loader over a materialized synthetic dataset.
+//!
+//! The paper fine-tunes on a fixed 80/20 train/val split for 50 epochs
+//! (App. B.1); this loader materializes `n` samples once, then serves
+//! shuffled mini-batches per epoch and a fixed validation set.
+
+use super::rng::Pcg64;
+use super::synth::VisionTask;
+
+pub struct Loader {
+    pub dim: usize,
+    pub classes: usize,
+    train_x: Vec<f32>,
+    train_y: Vec<usize>,
+    val_x: Vec<f32>,
+    val_y: Vec<usize>,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg64,
+}
+
+impl Loader {
+    /// Materialize `n` samples from a task, 80/20 split.
+    pub fn from_task(task: &mut VisionTask, n: usize, seed: u64) -> Self {
+        let (x, y) = task.batch(n);
+        let dim = task.dim;
+        let n_train = n * 4 / 5;
+        let order: Vec<usize> = (0..n_train).collect();
+        Loader {
+            dim,
+            classes: task.classes,
+            train_x: x[..n_train * dim].to_vec(),
+            train_y: y[..n_train].to_vec(),
+            val_x: x[n_train * dim..].to_vec(),
+            val_y: y[n_train..].to_vec(),
+            order,
+            cursor: 0,
+            rng: Pcg64::new(seed ^ 0x10ad),
+        }
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn val_len(&self) -> usize {
+        self.val_y.len()
+    }
+
+    /// Next shuffled train mini-batch as (x, y_onehot).  Reshuffles and
+    /// wraps at epoch boundaries; always returns exactly `batch` samples.
+    pub fn next_batch(&mut self, batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(batch * self.dim);
+        let mut y = vec![0.0f32; batch * self.classes];
+        for i in 0..batch {
+            if self.cursor == 0 {
+                self.rng.shuffle(&mut self.order);
+            }
+            let idx = self.order[self.cursor];
+            self.cursor = (self.cursor + 1) % self.order.len();
+            x.extend_from_slice(&self.train_x[idx * self.dim..(idx + 1) * self.dim]);
+            y[i * self.classes + self.train_y[idx]] = 1.0;
+        }
+        (x, y)
+    }
+
+    /// Validation batches (fixed order), padded by wrapping.
+    pub fn val_batch(&self, start: usize, batch: usize) -> (Vec<f32>, Vec<usize>) {
+        let n = self.val_y.len();
+        let mut x = Vec::with_capacity(batch * self.dim);
+        let mut y = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let idx = (start + i) % n;
+            x.extend_from_slice(&self.val_x[idx * self.dim..(idx + 1) * self.dim]);
+            y.push(self.val_y[idx]);
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_80_20() {
+        let mut task = VisionTask::preset("cifar10-like", 1).unwrap();
+        let loader = Loader::from_task(&mut task, 100, 1);
+        assert_eq!(loader.train_len(), 80);
+        assert_eq!(loader.val_len(), 20);
+    }
+
+    #[test]
+    fn batches_have_exact_size() {
+        let mut task = VisionTask::preset("cifar10-like", 2).unwrap();
+        let mut loader = Loader::from_task(&mut task, 50, 2);
+        for _ in 0..7 {
+            let (x, y) = loader.next_batch(16);
+            assert_eq!(x.len(), 16 * loader.dim);
+            assert_eq!(y.len(), 16 * loader.classes);
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_samples() {
+        let mut task = VisionTask::preset("cifar10-like", 3).unwrap();
+        let mut loader = Loader::from_task(&mut task, 40, 3);
+        // one epoch = 32 train samples; collect two batches of 16
+        let mut seen: Vec<f32> = Vec::new();
+        for _ in 0..2 {
+            seen.extend(loader.next_batch(16).0);
+        }
+        // all 32 distinct samples appear exactly once: compare first elems
+        let mut firsts: Vec<i64> = seen
+            .chunks(loader.dim)
+            .map(|c| (c[0] * 1e6) as i64)
+            .collect();
+        firsts.sort();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 32);
+    }
+}

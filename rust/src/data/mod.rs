@@ -1,0 +1,10 @@
+//! Synthetic datasets + deterministic RNG (the paper's CIFAR/CUB/Flowers/
+//! Pets/BoolQ stand-ins; see DESIGN.md §3 for the substitution argument).
+
+pub mod loader;
+pub mod rng;
+pub mod synth;
+
+pub use loader::Loader;
+pub use rng::Pcg64;
+pub use synth::{SequenceTask, VisionTask, DATASET_PRESETS};

@@ -1,0 +1,215 @@
+//! Synthetic fine-tuning datasets (the CIFAR/CUB/Flowers/Pets/BoolQ
+//! stand-ins, DESIGN.md §3).
+//!
+//! Each vision "dataset" draws per-class low-rank templates in pixel
+//! space and emits `template[label] + sigma * noise`.  The low-rank class
+//! structure is what gives activation maps the concentrated spectra the
+//! paper measures (Fig. 4); difficulty is controlled by sigma, the
+//! number of classes, and the template rank.  Presets mirror the paper's
+//! five downstream datasets in relative difficulty.
+
+use super::rng::Pcg64;
+
+/// A named dataset preset: (name, classes, sigma, template_rank).
+pub const DATASET_PRESETS: &[(&str, usize, f32, usize)] = &[
+    ("cifar10-like", 10, 0.7, 8),
+    ("cifar100-like", 100, 0.55, 12),
+    ("cub-like", 200, 0.45, 16),
+    ("flowers-like", 102, 0.5, 12),
+    ("pets-like", 37, 0.6, 10),
+];
+
+/// Synthetic image-classification task emitting flat (image²·3,) samples.
+pub struct VisionTask {
+    pub name: String,
+    pub classes: usize,
+    pub dim: usize,
+    sigma: f32,
+    templates: Vec<f32>, // (classes, dim) row-major
+    rng: Pcg64,
+}
+
+impl VisionTask {
+    pub fn new(name: &str, classes: usize, image: usize, sigma: f32,
+               template_rank: usize, seed: u64) -> Self {
+        let dim = image * image * 3;
+        let mut rng = Pcg64::new(seed);
+        // templates = coefs (classes x rank) @ basis (rank x dim), unit RMS rows
+        let basis: Vec<f32> = rng.normal_vec(template_rank * dim);
+        let coefs: Vec<f32> = rng.normal_vec(classes * template_rank);
+        let mut templates = vec![0.0f32; classes * dim];
+        for c in 0..classes {
+            for k in 0..template_rank {
+                let w = coefs[c * template_rank + k];
+                let row = &basis[k * dim..(k + 1) * dim];
+                let out = &mut templates[c * dim..(c + 1) * dim];
+                for (o, b) in out.iter_mut().zip(row) {
+                    *o += w * b;
+                }
+            }
+            let row = &mut templates[c * dim..(c + 1) * dim];
+            let rms = (row.iter().map(|x| (x * x) as f64).sum::<f64>()
+                / dim as f64)
+                .sqrt()
+                .max(1e-9) as f32;
+            for x in row.iter_mut() {
+                *x /= rms;
+            }
+        }
+        VisionTask {
+            name: name.to_string(),
+            classes,
+            dim,
+            sigma,
+            templates,
+            rng,
+        }
+    }
+
+    /// Instantiate one of the named presets at 32x32.
+    pub fn preset(name: &str, seed: u64) -> Option<Self> {
+        DATASET_PRESETS
+            .iter()
+            .find(|(n, _, _, _)| *n == name)
+            .map(|&(n, classes, sigma, rank)| Self::new(n, classes, 32, sigma, rank, seed))
+    }
+
+    /// Emit a batch: (x flat (n*dim), labels (n)).
+    pub fn batch(&mut self, n: usize) -> (Vec<f32>, Vec<usize>) {
+        let mut x = vec![0.0f32; n * self.dim];
+        let mut labels = vec![0usize; n];
+        for i in 0..n {
+            let c = self.rng.below(self.classes);
+            labels[i] = c;
+            let t = &self.templates[c * self.dim..(c + 1) * self.dim];
+            let out = &mut x[i * self.dim..(i + 1) * self.dim];
+            for (o, &tv) in out.iter_mut().zip(t) {
+                *o = tv + self.sigma * self.rng.next_normal();
+            }
+        }
+        (x, labels)
+    }
+
+    /// Batch with one-hot labels appended (the train-step input format).
+    pub fn batch_onehot(&mut self, n: usize) -> (Vec<f32>, Vec<f32>, Vec<usize>) {
+        let (x, labels) = self.batch(n);
+        let mut y = vec![0.0f32; n * self.classes];
+        for (i, &c) in labels.iter().enumerate() {
+            y[i * self.classes + c] = 1.0;
+        }
+        (x, y, labels)
+    }
+}
+
+/// BoolQ-like yes/no sequence task: the label is decided by which of two
+/// marker motifs is embedded in the token stream.
+pub struct SequenceTask {
+    pub vocab: usize,
+    pub seq: usize,
+    motifs: [[usize; 4]; 2],
+    rng: Pcg64,
+}
+
+impl SequenceTask {
+    pub fn new(vocab: usize, seq: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let mut motifs = [[0usize; 4]; 2];
+        for m in motifs.iter_mut() {
+            for t in m.iter_mut() {
+                *t = 1 + rng.below(vocab - 1);
+            }
+        }
+        SequenceTask { vocab, seq, motifs, rng }
+    }
+
+    /// Emit (tokens as f32 (n*seq), y_onehot (n*2), labels).
+    pub fn batch_onehot(&mut self, n: usize) -> (Vec<f32>, Vec<f32>, Vec<usize>) {
+        let mut x = vec![0.0f32; n * self.seq];
+        let mut y = vec![0.0f32; n * 2];
+        let mut labels = vec![0usize; n];
+        for i in 0..n {
+            let label = self.rng.below(2);
+            labels[i] = label;
+            y[i * 2 + label] = 1.0;
+            let row = &mut x[i * self.seq..(i + 1) * self.seq];
+            for t in row.iter_mut() {
+                *t = self.rng.below(self.vocab) as f32;
+            }
+            let pos = self.rng.below(self.seq - 4);
+            for (j, &tok) in self.motifs[label].iter().enumerate() {
+                row[pos + j] = tok as f32;
+            }
+        }
+        (x, y, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist() {
+        for (name, classes, _, _) in DATASET_PRESETS {
+            let task = VisionTask::preset(name, 1).unwrap();
+            assert_eq!(task.classes, *classes);
+            assert_eq!(task.dim, 32 * 32 * 3);
+        }
+    }
+
+    #[test]
+    fn batch_shapes_and_labels() {
+        let mut t = VisionTask::preset("cifar10-like", 5).unwrap();
+        let (x, y, labels) = t.batch_onehot(8);
+        assert_eq!(x.len(), 8 * 3072);
+        assert_eq!(y.len(), 8 * 10);
+        for (i, &c) in labels.iter().enumerate() {
+            assert!(c < 10);
+            assert_eq!(y[i * 10 + c], 1.0);
+            assert_eq!(y[i * 10..(i + 1) * 10].iter().sum::<f32>(), 1.0);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_data() {
+        let mut a = VisionTask::preset("pets-like", 233).unwrap();
+        let mut b = VisionTask::preset("pets-like", 233).unwrap();
+        assert_eq!(a.batch(4).0, b.batch(4).0);
+    }
+
+    #[test]
+    fn class_templates_are_distinguishable() {
+        // Same-class samples must be closer than cross-class on average.
+        let mut t = VisionTask::new("x", 2, 8, 0.3, 4, 9);
+        let (x, labels) = t.batch(64);
+        let dim = t.dim;
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(p, q)| ((p - q) * (p - q)) as f64).sum()
+        };
+        let (mut same, mut cross, mut ns, mut nc) = (0.0, 0.0, 0, 0);
+        for i in 0..16 {
+            for j in (i + 1)..16 {
+                let d = dist(&x[i * dim..(i + 1) * dim], &x[j * dim..(j + 1) * dim]);
+                if labels[i] == labels[j] {
+                    same += d;
+                    ns += 1;
+                } else {
+                    cross += d;
+                    nc += 1;
+                }
+            }
+        }
+        if ns > 0 && nc > 0 {
+            assert!(same / ns as f64 <= cross / nc as f64);
+        }
+    }
+
+    #[test]
+    fn sequence_task_marks_motifs() {
+        let mut t = SequenceTask::new(64, 16, 3);
+        let (x, y, labels) = t.batch_onehot(10);
+        assert_eq!(x.len(), 160);
+        assert_eq!(y.len(), 20);
+        assert!(labels.iter().all(|&l| l < 2));
+    }
+}

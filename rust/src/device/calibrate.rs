@@ -1,0 +1,76 @@
+//! Host calibration: measure this machine's sustained matmul GFLOP/s and
+//! effective memory bandwidth so projections anchor to reality.
+
+use std::time::Instant;
+
+use crate::data::rng::Pcg64;
+use crate::linalg::matrix::Mat;
+
+use super::spec::DeviceSpec;
+
+/// Measure sustained dense-matmul GFLOP/s with the native engine.
+pub fn measure_gflops(size: usize, reps: usize) -> f64 {
+    let mut rng = Pcg64::new(0xca11);
+    let a = Mat::random(size, size, &mut rng);
+    let b = Mat::random(size, size, &mut rng);
+    let _warm = a.matmul(&b);
+    let t0 = Instant::now();
+    let mut sink = 0.0f32;
+    for _ in 0..reps {
+        let c = a.matmul(&b);
+        sink += c.data[0];
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(sink);
+    let flops = 2.0 * (size as f64).powi(3) * reps as f64;
+    flops / dt / 1e9
+}
+
+/// Measure effective stream bandwidth (GB/s) with a big copy+add.
+pub fn measure_bandwidth(mb: usize, reps: usize) -> f64 {
+    let n = mb * 1024 * 1024 / 4;
+    let src = vec![1.0f32; n];
+    let mut dst = vec![0.0f32; n];
+    let t0 = Instant::now();
+    for r in 0..reps {
+        let s = r as f32;
+        for (d, x) in dst.iter_mut().zip(&src) {
+            *d = x + s;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(dst[0]);
+    // 2 streams (read + write) per element
+    (2.0 * n as f64 * 4.0 * reps as f64) / dt / 1e9
+}
+
+/// Full host profile as a DeviceSpec (power unknown: use a desktop-class
+/// placeholder; the host profile is only used for time, not energy).
+pub fn host_profile() -> DeviceSpec {
+    let gflops = measure_gflops(256, 4);
+    let mem = measure_bandwidth(64, 2);
+    DeviceSpec {
+        name: "host",
+        gflops,
+        mem_gbps: mem,
+        power_active_w: 65.0,
+        power_idle_w: 15.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gflops_positive_and_sane() {
+        let g = measure_gflops(96, 1);
+        assert!(g > 0.05 && g < 10_000.0, "gflops {g}");
+    }
+
+    #[test]
+    fn bandwidth_positive() {
+        let b = measure_bandwidth(4, 1);
+        assert!(b > 0.1 && b < 2_000.0, "bw {b}");
+    }
+}

@@ -1,0 +1,45 @@
+//! Energy model (Tab. 4): E = P_active * t_busy + P_idle * t_idle.
+//! The paper measures with an INA3221 sensor on the Jetson Orin; the
+//! first-order model is power-at-utilization times phase time.
+
+use super::spec::DeviceSpec;
+
+/// Energy for a phase that keeps the device at `util` in [0,1] for `t` s.
+pub fn phase_energy(dev: &DeviceSpec, t_seconds: f64, util: f64) -> f64 {
+    let p = dev.power_idle_w + (dev.power_active_w - dev.power_idle_w) * util.clamp(0.0, 1.0);
+    p * t_seconds
+}
+
+/// Training iterations keep the CPU pinned; inference batches too.  The
+/// paper's Tab. 4 rows are one inference pass + one training iteration.
+pub fn iteration_energy(dev: &DeviceSpec, t_seconds: f64) -> f64 {
+    phase_energy(dev, t_seconds, 0.95)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::spec::device;
+
+    #[test]
+    fn energy_scales_with_time() {
+        let dev = device("jetson-orin").unwrap();
+        let e1 = iteration_energy(&dev, 1.0);
+        let e2 = iteration_energy(&dev, 2.0);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_less_than_active() {
+        let dev = device("jetson-orin").unwrap();
+        assert!(phase_energy(&dev, 1.0, 0.0) < phase_energy(&dev, 1.0, 1.0));
+    }
+
+    #[test]
+    fn orin_magnitudes_plausible() {
+        // Paper Tab. 4: vanilla inference 6.84s -> 47.51 J (≈7 W average).
+        let dev = device("jetson-orin").unwrap();
+        let e = iteration_energy(&dev, 6.84);
+        assert!(e > 30.0 && e < 150.0, "e = {e}");
+    }
+}

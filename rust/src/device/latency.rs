@@ -1,0 +1,72 @@
+//! Roofline latency projection: t = max(compute, memory) per phase.
+
+use super::spec::DeviceSpec;
+
+/// A workload phase in FLOPs + bytes moved.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// Roofline time for one phase on a device, seconds.
+pub fn phase_time(dev: &DeviceSpec, w: &Workload) -> f64 {
+    let compute = w.flops / (dev.gflops * 1e9);
+    let memory = w.bytes / (dev.mem_gbps * 1e9);
+    compute.max(memory)
+}
+
+/// Total latency over phases with a fixed per-iteration framework
+/// overhead fraction (interpreter/dispatch; fitted from host calibration).
+pub fn estimate_latency(dev: &DeviceSpec, phases: &[Workload], overhead_frac: f64) -> f64 {
+    let t: f64 = phases.iter().map(|w| phase_time(dev, w)).sum();
+    t * (1.0 + overhead_frac)
+}
+
+/// Project a measured host time to a device via the compute-roofline
+/// ratio (used when we have real wallclock for the exact workload).
+pub fn project_time(host_time_s: f64, host_gflops: f64, dev: &DeviceSpec,
+                    arithmetic_intensity: f64) -> f64 {
+    // effective rate = min(F, B * AI); ratio of host to device rates.
+    let host_rate = host_gflops * 1e9;
+    let dev_rate = (dev.gflops * 1e9).min(dev.mem_gbps * 1e9 * arithmetic_intensity);
+    host_time_s * host_rate / dev_rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::spec::device;
+
+    #[test]
+    fn compute_bound_phase() {
+        let dev = device("raspberry-pi-5").unwrap();
+        // high arithmetic intensity -> compute bound
+        let w = Workload { flops: 28e9, bytes: 1e6 };
+        assert!((phase_time(&dev, &w) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn memory_bound_phase() {
+        let dev = device("raspberry-pi-5").unwrap();
+        let w = Workload { flops: 1e6, bytes: 8.5e9 };
+        assert!((phase_time(&dev, &w) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn faster_device_is_faster() {
+        let pi = device("raspberry-pi-4").unwrap();
+        let orin = device("jetson-orin").unwrap();
+        let w = Workload { flops: 1e10, bytes: 1e8 };
+        assert!(phase_time(&orin, &w) < phase_time(&pi, &w));
+    }
+
+    #[test]
+    fn projection_preserves_ratio() {
+        let pi5 = device("raspberry-pi-5").unwrap();
+        // Two workloads with 2x time ratio keep 2x after projection.
+        let a = project_time(1.0, 50.0, &pi5, 100.0);
+        let b = project_time(2.0, 50.0, &pi5, 100.0);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Edge-device simulator (the Raspberry Pi / Jetson substitution,
+//! DESIGN.md §3).
+//!
+//! The paper measures per-iteration wallclock and energy on physical
+//! boards; we (a) measure real wallclock on this host via the PJRT
+//! executables and the native engine, and (b) project to each board with
+//! a calibrated roofline model: t = max(flops / F_dev, bytes / B_dev) per
+//! phase, energy = P_dev(util) * t.  Speedup *ratios* — what the paper
+//! actually reports — transfer through the roofline.
+
+pub mod calibrate;
+pub mod energy;
+pub mod latency;
+pub mod spec;
+
+pub use latency::estimate_latency;
+pub use spec::{DeviceSpec, DEVICES};

@@ -1,0 +1,53 @@
+//! Device profiles.  Numbers are public-spec order-of-magnitude figures
+//! (sustained f32 GFLOPs on CPU-only inference workloads, not peak), which
+//! is all the roofline projection needs to reproduce the paper's *ratios*.
+
+/// An edge-device profile for the roofline simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Sustained f32 GFLOP/s for dense matmul-bound work.
+    pub gflops: f64,
+    /// Sustained memory bandwidth, GB/s.
+    pub mem_gbps: f64,
+    /// Active power draw under full load, watts.
+    pub power_active_w: f64,
+    /// Idle/base power, watts.
+    pub power_idle_w: f64,
+}
+
+/// The boards in the paper's Tables 2-4 plus this host (calibrated live).
+pub const DEVICES: &[DeviceSpec] = &[
+    DeviceSpec { name: "raspberry-pi-5", gflops: 28.0, mem_gbps: 8.5, power_active_w: 7.5, power_idle_w: 2.5 },
+    DeviceSpec { name: "raspberry-pi-4", gflops: 11.0, mem_gbps: 4.0, power_active_w: 6.0, power_idle_w: 2.0 },
+    DeviceSpec { name: "jetson-orin", gflops: 120.0, mem_gbps: 34.0, power_active_w: 15.0, power_idle_w: 5.0 },
+    DeviceSpec { name: "jetson-nano", gflops: 12.0, mem_gbps: 6.0, power_active_w: 7.0, power_idle_w: 2.0 },
+];
+
+pub fn device(name: &str) -> Option<DeviceSpec> {
+    DEVICES.iter().find(|d| d.name == name).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_works() {
+        assert!(device("raspberry-pi-5").is_some());
+        assert!(device("cray-1").is_none());
+    }
+
+    #[test]
+    fn relative_ordering_matches_paper() {
+        // Paper Tab. 3: Orin fastest, Nano slowest of the Jetsons; Pi4
+        // slower than Pi5.
+        let orin = device("jetson-orin").unwrap();
+        let nano = device("jetson-nano").unwrap();
+        let pi5 = device("raspberry-pi-5").unwrap();
+        let pi4 = device("raspberry-pi-4").unwrap();
+        assert!(orin.gflops > pi5.gflops);
+        assert!(pi5.gflops > pi4.gflops);
+        assert!(orin.gflops > nano.gflops);
+    }
+}

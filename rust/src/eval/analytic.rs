@@ -1,0 +1,233 @@
+//! Analytic exhibits: Fig. 2 (cost-model surfaces), Fig. 4 (activation
+//! explained variance), Fig. 12 (WSI on conv), Tab. 1 (all-linear WASI at
+//! paper scale).
+
+use anyhow::Result;
+
+use crate::costmodel::curves::fig2_sweep;
+use crate::costmodel::layer_specs::{mcunet_tail, vit_b16_all_linear};
+use crate::costmodel::{LayerDims, WasiRanks};
+use crate::util::table::{si, Table};
+use crate::wasi::wsi::{powerlaw, WsiFactors};
+
+use super::EvalCtx;
+
+/// Fig. 2: C/S training+inference over (layer dim, rank).
+pub fn fig2(_ctx: &EvalCtx) -> Result<String> {
+    let dims = [256usize, 512, 1024, 2048, 4096];
+    let ranks = [8usize, 16, 32, 64, 128, 256];
+    let pts = fig2_sweep(128, 197, &dims, &ranks);
+    let mut t = Table::new(["dim", "rank", "C_train", "C_infer", "S_train", "S_infer"])
+        .title("Fig 2 — compression/speedup surfaces (B=128, N=197, Eqs. 39-46)");
+    for p in &pts {
+        t.row([
+            p.dim.to_string(),
+            p.rank.to_string(),
+            format!("{:.2}x", p.c_training),
+            format!("{:.2}x", p.c_inference),
+            format!("{:.2}x", p.s_training),
+            format!("{:.2}x", p.s_inference),
+        ]);
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nShape check (paper §3.4): compression/speedup grow with model dim at\n\
+         fixed rank, and converge to ~1x as rank approaches full.\n",
+    );
+    Ok(body)
+}
+
+/// Fig. 4: explained variance of each activation mode (from the AOT
+/// calibration batch's spectra in the manifest).
+pub fn fig4(ctx: &EvalCtx) -> Result<String> {
+    let manifest_path = ctx.session.manifest.dir.join("manifest.json");
+    let text = std::fs::read_to_string(manifest_path)?;
+    let j = crate::util::json::Json::parse(&text)?;
+    let spectra = j
+        .get("activation_spectra")
+        .and_then(|v| v.as_obj())
+        .ok_or_else(|| anyhow::anyhow!("manifest has no activation_spectra (rebuild artifacts)"))?;
+
+    let mut t = Table::new(["layer", "mode", "sv1%", "sv2%", "sv3%", "sv4%", "top4cum%"])
+        .title("Fig 4 — explained variance per singular value, per mode of A_i");
+    for (layer, modes) in spectra.iter().take(4) {
+        for (m, row) in modes.as_arr().unwrap_or(&[]).iter().enumerate() {
+            let s = row.f64_vec()?;
+            let total: f64 = s.iter().map(|v| v * v).sum();
+            if total <= 0.0 {
+                continue;
+            }
+            let pct: Vec<f64> = s.iter().map(|v| v * v / total * 100.0).collect();
+            let top4: f64 = pct.iter().take(4).sum();
+            let get = |i: usize| pct.get(i).copied().unwrap_or(0.0);
+            t.row([
+                layer.clone(),
+                format!("{}", m + 1),
+                format!("{:.1}", get(0)),
+                format!("{:.1}", get(1)),
+                format!("{:.1}", get(2)),
+                format!("{:.1}", get(3)),
+                format!("{:.1}", top4),
+            ]);
+        }
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nShape check (paper Fig. 4): most activation energy concentrates in the\n\
+         first few singular values of every mode.\n",
+    );
+    Ok(body)
+}
+
+/// Fig. 12: WSI applied to the last 1-4 conv layers of an MCUNet-like
+/// tail — weight memory vs reconstruction fidelity; at ε=0.9 memory can
+/// EXCEED vanilla (the paper's negative result).
+pub fn fig12(_ctx: &EvalCtx) -> Result<String> {
+    let tail = mcunet_tail();
+    let mut t = Table::new(["eps", "layers", "weight elems (WSI)", "weight elems (dense)", "ratio", "recon err"])
+        .title("Fig 12 — WSI on conv (MCUNet-like tail, conv as O x I*k*k)");
+    // Factorize each conv weight ONCE at a near-lossless threshold; per-ε
+    // ranks then come from the shared spectrum (one SVD per layer total).
+    let layers: Vec<_> = tail
+        .iter()
+        .rev()
+        .enumerate()
+        .map(|(idx, (_, o, ik2))| {
+            let w = powerlaw(*o, *ik2, 0.35, 42 + idx as u64);
+            let d = crate::linalg::svd::svd(&w);
+            (w, d, *o, *ik2)
+        })
+        .collect();
+    for eps in [0.75f64, 0.8, 0.9] {
+        for n_layers in 1..=layers.len() {
+            let mut wsi_elems = 0usize;
+            let mut dense_elems = 0usize;
+            let mut err_acc = 0.0f64;
+            for (w, d, o, ik2) in layers.iter().take(n_layers) {
+                let k = d.rank_for_energy(eps);
+                wsi_elems += k * (o + ik2);
+                dense_elems += o * ik2;
+                let rec = d.reconstruct(k);
+                err_acc += (rec.sub(w).frob_norm() / w.frob_norm()) as f64;
+            }
+            t.row([
+                format!("{eps}"),
+                n_layers.to_string(),
+                wsi_elems.to_string(),
+                dense_elems.to_string(),
+                format!("{:.2}x", dense_elems as f64 / wsi_elems as f64),
+                format!("{:.3}", err_acc / n_layers as f64),
+            ]);
+        }
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nShape check (paper Fig. 12): at eps=0.9 the optimal rank is high enough\n\
+         that K(O+I) exceeds O*I on compact conv layers (ratio < 1) — WSI does\n\
+         not pay off on already-compact convolutions.\n",
+    );
+    Ok(body)
+}
+
+/// Tab. 1: WASI on ALL linear layers (attention + MLP) of ViT-B/16 at
+/// paper scale (analytic), plus the measured tiny-artifact counterpart.
+pub fn tab1(ctx: &EvalCtx) -> Result<String> {
+    let spec = vit_b16_all_linear(128);
+    let mut t = Table::new(["eps", "TrainMem(MB)", "InferMem(MB)", "TrainFLOPs", "InferFLOPs"])
+        .title("Tab 1 — WASI on all linears, ViT-B/16 scale (B=128; Eqs. 33-46)");
+    for eps in [0.4f64, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
+        let mut train_mem = 0.0;
+        let mut infer_mem = 0.0;
+        let mut train_fl = 0.0;
+        let mut infer_fl = 0.0;
+        for (_, l) in &spec.layers {
+            if eps >= 1.0 {
+                train_mem += l.vanilla_train_mem();
+                infer_mem += l.m_vanilla_w();
+                train_fl += l.vanilla_train_flops();
+                infer_fl += l.f_vanilla();
+            } else {
+                let ranks = paper_scale_ranks(l, eps);
+                train_mem += l.wasi_train_mem(&ranks);
+                infer_mem += l.m_wasi_w(ranks.k);
+                train_fl += l.wasi_train_flops(&ranks);
+                infer_fl += l.f_wasi(ranks.k);
+            }
+        }
+        t.row([
+            format!("{eps}"),
+            format!("{:.1}", train_mem * 4.0 / 1048576.0),
+            format!("{:.1}", infer_mem * 4.0 / 1048576.0),
+            si(train_fl),
+            si(infer_fl),
+        ]);
+    }
+    let mut body = t.render();
+
+    // Measured counterpart on the tiny artifact, if present.
+    if let Ok(entry) = ctx.session.manifest.model("vit_wasi_attn_eps80") {
+        let mem = crate::coordinator::memory::account(entry);
+        body.push_str(&format!(
+            "\nMeasured tiny-artifact counterpart (vit_wasi_attn_eps80):\n\
+             params {} elems, state {} elems, total train mem {:.2} MB\n",
+            entry.params_len, entry.state_len, mem.total_mb()
+        ));
+    }
+    body.push_str(
+        "\nShape check (paper Tab. 1): memory and FLOPs grow monotonically with eps\n\
+         and stay far below vanilla (eps=1.0) until eps→1.\n",
+    );
+    Ok(body)
+}
+
+/// Paper-scale rank model: a trained transformer's spectra decay roughly
+/// like a power law; map ε to ranks through that spectrum (α fitted to
+/// the tiny model's measured spectra).
+pub fn paper_scale_ranks(l: &LayerDims, eps: f64) -> WasiRanks {
+    let k = powerlaw_rank(l.i.min(l.o), eps);
+    let r = [
+        powerlaw_rank(l.b, eps),
+        powerlaw_rank(l.n, eps),
+        powerlaw_rank(l.i, eps),
+    ];
+    WasiRanks { k, r }
+}
+
+/// Rank at explained-variance ε for s_j ∝ j^-0.8 spectra of length n.
+pub fn powerlaw_rank(n: usize, eps: f64) -> usize {
+    let alpha = 0.8f64;
+    let energy: Vec<f64> = (1..=n).map(|j| (j as f64).powf(-2.0 * alpha)).collect();
+    let total: f64 = energy.iter().sum();
+    let mut cum = 0.0;
+    for (j, e) in energy.iter().enumerate() {
+        cum += e;
+        if cum / total >= eps {
+            return j + 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn powerlaw_rank_monotone() {
+        let mut prev = 0;
+        for eps in [0.3, 0.5, 0.7, 0.9, 0.99] {
+            let k = powerlaw_rank(768, eps);
+            assert!(k >= prev);
+            prev = k;
+        }
+        assert!(powerlaw_rank(768, 0.4) < 768 / 10);
+    }
+
+    #[test]
+    fn tab1_ranks_compress() {
+        let l = LayerDims { b: 128, n: 197, i: 768, o: 3072 };
+        let r = paper_scale_ranks(&l, 0.8);
+        assert!(r.k < 300);
+        assert!(l.c_training(&r) > 2.0);
+    }
+}

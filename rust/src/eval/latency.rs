@@ -1,0 +1,363 @@
+//! Latency/energy exhibits: Fig. 8, Tab. 2, Tab. 3, Tab. 4.
+//!
+//! Per-iteration train and inference wallclock is MEASURED on this host
+//! through the compiled HLO executables, then projected to each edge
+//! board with the calibrated roofline (DESIGN.md §3 substitution).  The
+//! paper's claims are ratios (WASI vs vanilla, per ε), which transfer.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::costmodel::{LayerDims, WasiRanks};
+use crate::device::energy::iteration_energy;
+use crate::device::latency::project_time;
+use crate::device::spec::{device, DeviceSpec};
+use crate::runtime::{InferStep, ModelEntry, TrainStep};
+use crate::util::table::Table;
+
+use super::EvalCtx;
+
+/// Measured per-iteration (infer_s, train_s) for a variant.
+pub fn measure_iteration(ctx: &EvalCtx, entry: &ModelEntry, reps: usize) -> Result<(f64, f64)> {
+    let mut task = crate::data::synth::VisionTask::new(
+        "bench", entry.classes, 32, 0.7, 8, 233);
+    let is_seq = entry.input_dim < 512; // tinydec artifacts take token ids
+    let mut step = TrainStep::load(&ctx.session.runtime, entry)?;
+    let infer = InferStep::load(&ctx.session.runtime, entry)?;
+
+    let make_batch = |task: &mut crate::data::synth::VisionTask| -> (Vec<f32>, Vec<f32>) {
+        if is_seq {
+            let mut t = crate::data::synth::SequenceTask::new(256, entry.input_dim, 1);
+            let (x, y, _) = t.batch_onehot(entry.batch);
+            (x, y)
+        } else {
+            let (x, y, _) = task.batch_onehot(entry.batch);
+            (x, y)
+        }
+    };
+
+    // Warmup both paths (compilation already cached by Runtime).
+    let (x, y) = make_batch(&mut task);
+    step.step(&x, &y, 0.01)?;
+    infer.infer(&step.params, &x)?;
+
+    let mut train_t = Vec::new();
+    let mut infer_t = Vec::new();
+    for _ in 0..reps {
+        let (x, y) = make_batch(&mut task);
+        let t0 = Instant::now();
+        step.step(&x, &y, 0.01)?;
+        train_t.push(t0.elapsed().as_secs_f64());
+        let t1 = Instant::now();
+        infer.infer(&step.params, &x)?;
+        infer_t.push(t1.elapsed().as_secs_f64());
+    }
+    Ok((
+        crate::util::stats::median(&infer_t),
+        crate::util::stats::median(&train_t),
+    ))
+}
+
+/// Arithmetic intensity estimate for projecting (compute-heavy transformer
+/// steps are matmul bound; AI >> machine balance on all boards).
+const AI: f64 = 64.0;
+
+fn host_gflops(ctx: &EvalCtx) -> f64 {
+    // cache a quick calibration per run
+    let _ = ctx;
+    crate::device::calibrate::measure_gflops(192, 2)
+}
+
+struct LatRow {
+    name: String,
+    eps: f64,
+    infer_host: f64,
+    train_host: f64,
+}
+
+fn measure_sweep(ctx: &EvalCtx) -> Result<Vec<LatRow>> {
+    let reps = if ctx.quick { 3 } else { 5 };
+    let mut rows = Vec::new();
+    let mut names: Vec<String> = ctx
+        .session
+        .manifest
+        .models
+        .keys()
+        .filter(|n| {
+            (n.starts_with("vit_wasi_eps") || n.starts_with("vit_asi_eps"))
+                && !n.contains("kernel")
+                && !n.contains("attn")
+        })
+        .cloned()
+        .collect();
+    names.push("vit_vanilla".into());
+    if ctx.quick {
+        names.retain(|n| n == "vit_vanilla" || n.ends_with("eps80"));
+    }
+    for name in names {
+        let entry = ctx.session.manifest.model(&name)?.clone();
+        let (i, t) = measure_iteration(ctx, &entry, reps)?;
+        rows.push(LatRow {
+            name,
+            eps: entry.eps.unwrap_or(1.0),
+            infer_host: i,
+            train_host: t,
+        });
+    }
+    rows.sort_by(|a, b| (a.name.clone(), a.eps).partial_cmp(&(b.name.clone(), b.eps)).unwrap());
+    Ok(rows)
+}
+
+/// Fig. 8: train/infer time per iteration vs ε (host-measured + Pi-5
+/// projection), WASI vs vanilla.
+pub fn fig8(ctx: &EvalCtx) -> Result<String> {
+    let rows = measure_sweep(ctx)?;
+    let hg = host_gflops(ctx);
+    let pi5 = device("raspberry-pi-5").unwrap();
+    let mut t = Table::new([
+        "variant", "eps", "infer host(ms)", "train host(ms)", "infer Pi5(s)", "train Pi5(s)", "train speedup",
+    ])
+    .title(format!("Fig 8 — per-iteration latency (host measured, {hg:.1} GF/s; Pi-5 roofline projection)"));
+    let vanilla_train = rows
+        .iter()
+        .find(|r| r.name == "vit_vanilla")
+        .map(|r| r.train_host)
+        .unwrap_or(f64::NAN);
+    for r in rows.iter().filter(|r| !r.name.starts_with("vit_asi")) {
+        t.row([
+            r.name.clone(),
+            format!("{}", r.eps),
+            format!("{:.0}", r.infer_host * 1e3),
+            format!("{:.0}", r.train_host * 1e3),
+            format!("{:.2}", project_time(r.infer_host, hg, &pi5, AI)),
+            format!("{:.2}", project_time(r.train_host, hg, &pi5, AI)),
+            format!("{:.2}x", vanilla_train / r.train_host),
+        ]);
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nShape check (paper Fig. 8): WASI time grows with eps and sits below\n\
+         vanilla at paper-scale layer dims (~1.4x even at eps=0.9).  NOTE: at\n\
+         the tiny artifact scale (D=128) the subspace-iteration overhead can\n\
+         exceed the matmul savings — the crossover the paper's Fig. 2 predicts.\n\
+         The paper-scale check below uses the native engine at ViT-B dims:\n\n",
+    );
+    body.push_str(&native_vitb_comparison(ctx));
+    Ok(body)
+}
+
+/// Native-engine measured per-layer iteration time at ViT-B/16 fc1 dims —
+/// real wallclock at the scale where the paper's speedup claim lives.
+fn native_vitb_comparison(ctx: &EvalCtx) -> String {
+    use crate::linalg::tucker::Tensor;
+    use crate::wasi::asi::AsiCompressor;
+    use crate::wasi::layer::{DenseLayer, WasiLayer};
+    use crate::wasi::wsi::{powerlaw, WsiFactors};
+
+    let (b, n, i, o) = if ctx.quick {
+        (4usize, 197usize, 768usize, 3072usize)
+    } else {
+        (8, 197, 768, 3072)
+    };
+    let dims = [b, n, i];
+    let mut rng = crate::data::Pcg64::new(41);
+    let x = Tensor::from_vec(&dims, rng.normal_vec(b * n * i));
+    let w = powerlaw(o, i, 0.8, 42);
+    let reps = if ctx.quick { 2 } else { 4 };
+
+    let mut t = Table::new(["engine", "eps", "K", "fwd+bwd (ms)", "vs dense"])
+        .title("Fig 8 (native, ViT-B fc1 dims, real wallclock)");
+    let dense_t = {
+        let mut ts = Vec::new();
+        let mut d = DenseLayer::new(w.clone());
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let y = d.forward(&x);
+            let dy = Tensor::from_vec(&y.shape, y.data.clone());
+            let _ = d.backward(&dy);
+            ts.push(t0.elapsed().as_secs_f64());
+        }
+        crate::util::stats::median(&ts)
+    };
+    t.row(["dense".into(), "1.0".into(), "-".into(),
+           format!("{:.0}", dense_t * 1e3), "1.00x".into()]);
+
+    for eps in [0.4f64, 0.8] {
+        let l = LayerDims { b, n, i, o };
+        let ranks = crate::eval::analytic::paper_scale_ranks(&l, eps);
+        // Exact truncated factors straight from the powerlaw construction
+        // (what init_svd would return, without a 3072x768 SVD).
+        let (lmat, rmat, _) = crate::wasi::wsi::powerlaw_factored(o, i, 0.8, 42, ranks.k);
+        let k = lmat.cols;
+        let factors = WsiFactors { l: lmat, r: rmat };
+        let asi = AsiCompressor::new(&dims, &[ranks.r[0], ranks.r[1], ranks.r[2]], 7);
+        let mut wasi = WasiLayer::new(factors, asi);
+        let mut ts = Vec::new();
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let y = wasi.forward(&x);
+            let dy = Tensor::from_vec(&y.shape, y.data.clone());
+            let _ = wasi.backward(&dy);
+            wasi.factors.refresh();
+            ts.push(t0.elapsed().as_secs_f64());
+        }
+        let wt = crate::util::stats::median(&ts);
+        t.row([
+            "WASI".into(),
+            format!("{eps}"),
+            k.to_string(),
+            format!("{:.0}", wt * 1e3),
+            format!("{:.2}x faster", dense_t / wt),
+        ]);
+    }
+    t.render()
+}
+
+/// Tab. 2: WASI vs ASI vs vanilla per-iteration time at each ε.
+pub fn tab2(ctx: &EvalCtx) -> Result<String> {
+    let rows = measure_sweep(ctx)?;
+    let hg = host_gflops(ctx);
+    let pi5 = device("raspberry-pi-5").unwrap();
+    let proj = |s: f64| project_time(s, hg, &pi5, AI);
+
+    let mut t = Table::new([
+        "eps", "WASI inf(s)", "WASI tr(s)", "ASI inf(s)", "ASI tr(s)", "Van inf(s)", "Van tr(s)",
+    ])
+    .title("Tab 2 — Pi-5-projected per-iteration time: WASI vs ASI vs vanilla");
+    let vanilla = rows.iter().find(|r| r.name == "vit_vanilla");
+    let mut eps_values: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.name.starts_with("vit_wasi_eps"))
+        .map(|r| r.eps)
+        .collect();
+    eps_values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    eps_values.dedup();
+    for eps in eps_values {
+        let wasi = rows.iter().find(|r| r.name.starts_with("vit_wasi_eps") && r.eps == eps);
+        let asi = rows.iter().find(|r| r.name.starts_with("vit_asi_eps") && r.eps == eps);
+        let f = |o: Option<&LatRow>, train: bool| -> String {
+            o.map(|r| format!("{:.2}", proj(if train { r.train_host } else { r.infer_host })))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row([
+            format!("{eps}"),
+            f(wasi, false),
+            f(wasi, true),
+            f(asi, false),
+            f(asi, true),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    if let Some(v) = vanilla {
+        t.row([
+            "1.0".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("{:.2}", proj(v.infer_host)),
+            format!("{:.2}", proj(v.train_host)),
+        ]);
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nShape checks (paper Tab. 2): WASI < ASI at every eps (ASI keeps dense\n\
+         weights, so it pays the full forward); ASI approaches/exceeds vanilla\n\
+         at high eps; WASI stays below vanilla throughout.\n",
+    );
+    Ok(body)
+}
+
+/// Tab. 3: latency across edge devices (projected).
+pub fn tab3(ctx: &EvalCtx) -> Result<String> {
+    let rows = measure_sweep(ctx)?;
+    let hg = host_gflops(ctx);
+    let boards = ["jetson-orin", "jetson-nano", "raspberry-pi-4"];
+    let mut t = Table::new(["eps", "Orin inf/tr (s)", "Nano inf/tr (s)", "Pi4 inf/tr (s)"])
+        .title("Tab 3 — WASI per-iteration latency projected across edge devices");
+    let mut print_rows: Vec<&LatRow> = rows
+        .iter()
+        .filter(|r| r.name.starts_with("vit_wasi_eps") || r.name == "vit_vanilla")
+        .collect();
+    print_rows.sort_by(|a, b| a.eps.partial_cmp(&b.eps).unwrap());
+    for r in print_rows {
+        let mut cells = vec![format!("{}", r.eps)];
+        for b in boards {
+            let dev = device(b).unwrap();
+            cells.push(format!(
+                "{:.2} / {:.2}",
+                project_time(r.infer_host, hg, &dev, AI),
+                project_time(r.train_host, hg, &dev, AI)
+            ));
+        }
+        t.row(cells);
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nShape check (paper Tab. 3): Orin fastest, Nano slowest; every board\n\
+         shows the same monotone-in-eps WASI curve below its vanilla row (eps=1).\n",
+    );
+    Ok(body)
+}
+
+/// Tab. 4: energy on Jetson Orin per ε.
+pub fn tab4(ctx: &EvalCtx) -> Result<String> {
+    let rows = measure_sweep(ctx)?;
+    let hg = host_gflops(ctx);
+    let orin = device("jetson-orin").unwrap();
+    let mut t = Table::new(["eps", "Inference Energy (J)", "Training Energy (J)"])
+        .title("Tab 4 — Jetson Orin energy per iteration (power model x projected time)");
+    let mut print_rows: Vec<&LatRow> = rows
+        .iter()
+        .filter(|r| r.name.starts_with("vit_wasi_eps") || r.name == "vit_vanilla")
+        .collect();
+    print_rows.sort_by(|a, b| a.eps.partial_cmp(&b.eps).unwrap());
+    for r in print_rows {
+        let ti = project_time(r.infer_host, hg, &orin, AI);
+        let tt = project_time(r.train_host, hg, &orin, AI);
+        t.row([
+            format!("{}", r.eps),
+            format!("{:.2}", iteration_energy(&orin, ti)),
+            format!("{:.2}", iteration_energy(&orin, tt)),
+        ]);
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nShape check (paper Tab. 4): energy rises monotonically with eps and the\n\
+         vanilla row (eps=1) is the most expensive for both passes.\n",
+    );
+    Ok(body)
+}
+
+/// Analytic per-layer roofline breakdown used by the hotpath bench.
+pub fn layer_roofline(dev: &DeviceSpec, l: &LayerDims, ranks: &WasiRanks) -> (f64, f64) {
+    let w_vanilla = crate::device::latency::Workload {
+        flops: l.vanilla_train_flops(),
+        bytes: (l.vanilla_train_mem()) * 4.0,
+    };
+    let w_wasi = crate::device::latency::Workload {
+        flops: l.wasi_train_flops(ranks),
+        bytes: (l.wasi_train_mem(ranks)) * 4.0,
+    };
+    (
+        crate::device::latency::phase_time(dev, &w_vanilla),
+        crate::device::latency::phase_time(dev, &w_wasi),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::analytic::paper_scale_ranks;
+
+    #[test]
+    fn roofline_prefers_wasi() {
+        let dev = device("raspberry-pi-5").unwrap();
+        let l = LayerDims { b: 128, n: 197, i: 768, o: 3072 };
+        let ranks = paper_scale_ranks(&l, 0.8);
+        let (v, w) = layer_roofline(&dev, &l, &ranks);
+        assert!(w < v, "wasi {w} vs vanilla {v}");
+    }
+}

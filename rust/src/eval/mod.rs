@@ -1,0 +1,93 @@
+//! Evaluation harness: regenerates every table and figure in the paper's
+//! evaluation section (see DESIGN.md §5 for the exhibit → module map).
+//!
+//! Each exhibit is a function `(ctx) -> Result<String>` returning the
+//! rendered tables; `run` dispatches by name and `run_all` sweeps them.
+//! Results are also appended as JSON under `ctx.out_dir` so EXPERIMENTS.md
+//! can cite exact numbers.
+
+pub mod analytic;
+pub mod latency;
+pub mod training;
+pub mod wsi_vs_svd;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Session;
+
+/// Shared evaluation context.
+pub struct EvalCtx {
+    pub session: Session,
+    pub out_dir: PathBuf,
+    /// Fine-tune steps per accuracy point (paper: 50 epochs; here a few
+    /// hundred steps of the tiny models reach their accuracy plateau).
+    pub steps: usize,
+    /// Samples per synthetic dataset.
+    pub samples: usize,
+    pub quick: bool,
+}
+
+impl EvalCtx {
+    pub fn open(artifacts: &str, out_dir: &str, steps: usize, quick: bool) -> Result<Self> {
+        std::fs::create_dir_all(out_dir)?;
+        Ok(EvalCtx {
+            session: Session::open(artifacts)?,
+            out_dir: PathBuf::from(out_dir),
+            steps,
+            samples: if quick { 256 } else { 512 },
+            quick,
+        })
+    }
+
+    pub fn save(&self, name: &str, body: &str) -> Result<()> {
+        let path = self.out_dir.join(format!("{name}.txt"));
+        std::fs::write(&path, body)?;
+        Ok(())
+    }
+}
+
+pub const EXHIBITS: &[&str] = &[
+    "fig2", "fig3a", "fig3b", "fig4", "fig5", "fig6", "fig7", "fig8",
+    "fig9", "fig10", "fig11", "fig12", "tab1", "tab2", "tab3", "tab4",
+];
+
+/// Run one exhibit by name.
+pub fn run(ctx: &EvalCtx, name: &str) -> Result<String> {
+    let body = match name {
+        "fig2" => analytic::fig2(ctx)?,
+        "fig3a" => training::fig3a(ctx)?,
+        "fig3b" => wsi_vs_svd::fig3b(ctx)?,
+        "fig4" => analytic::fig4(ctx)?,
+        "fig5" => training::fig5(ctx)?,
+        "fig6" => training::fig6(ctx)?,
+        "fig7" => training::fig7(ctx)?,
+        "fig8" => latency::fig8(ctx)?,
+        "fig9" => training::fig9(ctx)?,
+        "fig10" => training::fig10(ctx)?,
+        "fig11" => training::fig11(ctx)?,
+        "fig12" => analytic::fig12(ctx)?,
+        "tab1" => analytic::tab1(ctx)?,
+        "tab2" => latency::tab2(ctx)?,
+        "tab3" => latency::tab3(ctx)?,
+        "tab4" => latency::tab4(ctx)?,
+        _ => return Err(anyhow!("unknown exhibit {name:?}; known: {EXHIBITS:?}")),
+    };
+    ctx.save(name, &body)?;
+    Ok(body)
+}
+
+/// Run every exhibit, concatenating reports (used by `eval all` and the
+/// paper_eval bench).
+pub fn run_all(ctx: &EvalCtx) -> Result<String> {
+    let mut out = String::new();
+    for name in EXHIBITS {
+        out.push_str(&format!("\n################ {name} ################\n"));
+        match run(ctx, name) {
+            Ok(body) => out.push_str(&body),
+            Err(e) => out.push_str(&format!("ERROR: {e:#}\n")),
+        }
+    }
+    Ok(out)
+}

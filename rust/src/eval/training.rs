@@ -1,0 +1,413 @@
+//! Fine-tuning exhibits driven through the AOT/HLO path: Figs. 3a, 5, 6,
+//! 7, 9, 10, 11.  Accuracy is *measured* (real training runs on the tiny
+//! artifacts); the paper-scale memory/FLOPs axes come from the cost model
+//! with the measured artifact-scale numbers shown beside them.
+
+use anyhow::Result;
+
+use crate::coordinator::memory::{account, vanilla_activations};
+use crate::coordinator::{FinetuneConfig, FinetuneReport};
+use crate::costmodel::layer_specs::{tinyllama, vit_b16};
+use crate::costmodel::{LayerDims, WasiRanks};
+use crate::linalg::matrix::Mat;
+use crate::linalg::svd::svd;
+use crate::runtime::{ModelEntry, TrainStep};
+use crate::util::table::{si, Table};
+
+use super::analytic::paper_scale_ranks;
+use super::EvalCtx;
+
+fn finetune(ctx: &EvalCtx, model: &str, dataset: &str, seed: u64) -> Result<FinetuneReport> {
+    ctx.session.finetune(&FinetuneConfig {
+        model: model.into(),
+        dataset: dataset.into(),
+        samples: ctx.samples,
+        steps: ctx.steps,
+        seed,
+        verbose: false,
+    })
+}
+
+/// Measured artifact-scale memory/FLOPs row pieces for a variant.
+fn measured_axes(entry: &ModelEntry) -> (f64, f64) {
+    let mem = account(entry);
+    let mut flops = 0.0;
+    for (name, (oi, act)) in &entry.layer_dims {
+        if oi.len() != 2 || act.len() < 2 {
+            continue;
+        }
+        let l = LayerDims {
+            b: entry.batch,
+            n: act[act.len() - 2],
+            i: act[act.len() - 1],
+            o: oi[0],
+        };
+        if let (Some(&k), Some(r)) = (entry.weight_ranks.get(name), entry.asi_ranks.get(name)) {
+            if r.len() == 3 {
+                let ranks = WasiRanks { k, r: [r[0], r[1], r[2]] };
+                flops += l.wasi_train_flops(&ranks);
+                continue;
+            }
+        }
+        flops += l.vanilla_train_flops();
+    }
+    (mem.total_mb(), flops)
+}
+
+/// Fig. 3a: singular-value / rank stability across fine-tuning.
+pub fn fig3a(ctx: &EvalCtx) -> Result<String> {
+    let entry = ctx.session.manifest.model("vit_vanilla")?;
+    let mut step = TrainStep::load(&ctx.session.runtime, entry)?;
+    let task = crate::data::synth::VisionTask::preset("pets-like", 233).unwrap();
+    let mut task = if task.classes != entry.classes {
+        crate::data::synth::VisionTask::new("pets-like", entry.classes, 32, 0.6, 10, 233)
+    } else {
+        task
+    };
+    let layer = "blocks.1.mlp.fc1.w";
+    let snapshots = if ctx.quick { 4 } else { 6 };
+    let steps_per = (ctx.steps / snapshots).max(5);
+    let sched = crate::coordinator::CosineSchedule::paper_default(snapshots * steps_per);
+
+    let mut t = Table::new(["snapshot", "K(eps=0.8)", "s1", "s2", "s3", "s4", "s8"])
+        .title(format!("Fig 3a — spectrum of {layer} while fine-tuning (vanilla HLO run)"));
+    let mut ranks = Vec::new();
+    for snap in 0..snapshots {
+        if snap > 0 {
+            for s in 0..steps_per {
+                let (x, _, labels) = task.batch_onehot(entry.batch);
+                let mut y = vec![0.0f32; entry.batch * entry.classes];
+                for (i, &c) in labels.iter().enumerate() {
+                    y[i * entry.classes + c] = 1.0;
+                }
+                step.step(&x, &y, sched.lr((snap - 1) * steps_per + s))?;
+            }
+        }
+        let (data, shape) = step
+            .tensor(layer)
+            .ok_or_else(|| anyhow::anyhow!("{layer} not in param spec"))?;
+        let w = Mat::from_vec(shape[0], shape[1], data.to_vec());
+        let d = svd(&w);
+        let k = d.rank_for_energy(0.8);
+        ranks.push(k);
+        t.row([
+            snap.to_string(),
+            k.to_string(),
+            format!("{:.3}", d.s[0]),
+            format!("{:.3}", d.s[1]),
+            format!("{:.3}", d.s[2]),
+            format!("{:.3}", d.s[3]),
+            format!("{:.3}", d.s.get(7).copied().unwrap_or(0.0)),
+        ]);
+    }
+    let spread = ranks.iter().max().unwrap() - ranks.iter().min().unwrap();
+    let mut body = t.render();
+    body.push_str(&format!(
+        "\nRank spread across snapshots: {spread} (paper Fig. 3a: ranks are stable\n\
+         across epochs; spread should be a small fraction of K).\n"
+    ));
+    Ok(body)
+}
+
+/// Fig. 5: ViT on CIFAR-10-like — accuracy vs memory/FLOPs for WASI, ASI,
+/// SVD-LLM, vanilla.  Accuracy measured via HLO fine-tunes.
+pub fn fig5(ctx: &EvalCtx) -> Result<String> {
+    fig_vit_panel(ctx, "cifar10-like", "Fig 5")
+}
+
+pub fn fig_vit_panel(ctx: &EvalCtx, dataset: &str, title: &str) -> Result<String> {
+    let m = &ctx.session.manifest;
+    let mut rows: Vec<(String, f64, Option<FinetuneReport>, (f64, f64))> = Vec::new();
+
+    let mut names: Vec<String> = Vec::new();
+    for prefix in ["vit_wasi_eps", "vit_asi_eps", "vit_svdllm_eps"] {
+        for entry in m.models.values() {
+            if entry.name.starts_with(prefix)
+                && !entry.name.contains("kernel")
+                && !entry.name.contains("attn")
+            {
+                names.push(entry.name.clone());
+            }
+        }
+    }
+    names.push("vit_vanilla".into());
+    if ctx.quick {
+        names.retain(|n| n == "vit_vanilla" || n.ends_with("eps80"));
+    }
+
+    // The vanilla manifest entry carries no layer_dims; compute its FLOPs
+    // from any WASI sibling's dims with the vanilla formulas.
+    let vanilla_flops: f64 = m
+        .vit_wasi_variants()
+        .first()
+        .map(|w| {
+            w.layer_dims
+                .values()
+                .filter(|(oi, act)| oi.len() == 2 && act.len() >= 2)
+                .map(|(oi, act)| {
+                    LayerDims {
+                        b: w.batch,
+                        n: act[act.len() - 2],
+                        i: act[act.len() - 1],
+                        o: oi[0],
+                    }
+                    .vanilla_train_flops()
+                })
+                .sum()
+        })
+        .unwrap_or(0.0);
+
+    for name in names {
+        let entry = m.model(&name)?;
+        let report = finetune(ctx, &name, dataset, 233)?;
+        let mut axes = measured_axes(entry);
+        if entry.layer_dims.is_empty() {
+            axes.1 = vanilla_flops;
+        }
+        rows.push((name.clone(), entry.eps.unwrap_or(1.0), Some(report), axes));
+    }
+
+    let mut t = Table::new([
+        "variant", "eps", "val acc", "TrainMem(MB)", "TrainFLOPs/step", "step ms",
+    ])
+    .title(format!("{title} — ViT on {dataset} (accuracy MEASURED via HLO fine-tune, {} steps)", ctx.steps));
+    for (name, eps, report, (mem, flops)) in &rows {
+        let r = report.as_ref().unwrap();
+        t.row([
+            name.clone(),
+            format!("{eps}"),
+            format!("{:.3}", r.val_accuracy),
+            format!("{:.2}", mem),
+            si(*flops),
+            format!("{:.0}", r.mean_step_seconds * 1e3),
+        ]);
+    }
+    let mut body = t.render();
+
+    // Paper-scale analytic panel (ViT-B/16).
+    let spec = vit_b16(128);
+    let mut t2 = Table::new(["eps", "TrainMem(MB)", "TrainFLOPs", "InferMem(MB)", "InferFLOPs"])
+        .title(format!("{title} (analytic, ViT-B/16 scale, MLP linears)"));
+    for eps in [0.4f64, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
+        let (mut tm, mut tf, mut im, mut if_) = (0.0, 0.0, 0.0, 0.0);
+        for (_, l) in &spec.layers {
+            if eps >= 1.0 {
+                tm += l.vanilla_train_mem();
+                tf += l.vanilla_train_flops();
+                im += l.m_vanilla_w();
+                if_ += l.f_vanilla();
+            } else {
+                let rk = paper_scale_ranks(l, eps);
+                tm += l.wasi_train_mem(&rk);
+                tf += l.wasi_train_flops(&rk);
+                im += l.m_wasi_w(rk.k);
+                if_ += l.f_wasi(rk.k);
+            }
+        }
+        t2.row([
+            format!("{eps}"),
+            format!("{:.1}", tm * 4.0 / 1048576.0),
+            si(tf),
+            format!("{:.1}", im * 4.0 / 1048576.0),
+            si(if_),
+        ]);
+    }
+    body.push('\n');
+    body.push_str(&t2.render());
+    body.push_str(
+        "\nShape checks (paper Fig. 5): WASI accuracy rises with eps toward the\n\
+         vanilla point; WASI train memory is far below vanilla and below SVD-LLM\n\
+         (which keeps full activations for its adapters); ASI matches vanilla\n\
+         accuracy but saves less compute than WASI.\n",
+    );
+    Ok(body)
+}
+
+/// Fig. 6: SwinLite (4D activations) across datasets, WASI vs vanilla.
+pub fn fig6(ctx: &EvalCtx) -> Result<String> {
+    let datasets: &[&str] = if ctx.quick {
+        &["cifar10-like"]
+    } else {
+        &["cifar10-like", "pets-like", "flowers-like", "cub-like"]
+    };
+    let mut t = Table::new(["dataset", "variant", "eps", "val acc", "TrainMem(MB)", "step ms"])
+        .title("Fig 6 — SwinLite (4D activations) across datasets");
+    for ds in datasets {
+        for name in ["swinlite_wasi_eps60", "swinlite_wasi_eps80", "swinlite_vanilla"] {
+            if !ctx.session.manifest.models.contains_key(name) {
+                continue;
+            }
+            let entry = ctx.session.manifest.model(name)?;
+            let r = finetune(ctx, name, ds, 233)?;
+            let mem = account(entry);
+            t.row([
+                ds.to_string(),
+                name.to_string(),
+                entry.eps.map(|e| e.to_string()).unwrap_or_else(|| "1.0".into()),
+                format!("{:.3}", r.val_accuracy),
+                format!("{:.2}", mem.total_mb()),
+                format!("{:.0}", r.mean_step_seconds * 1e3),
+            ]);
+        }
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nShape check (paper Fig. 6): WASI tracks vanilla accuracy with a fraction\n\
+         of the training memory across datasets; SVD-LLM is absent by design —\n\
+         its whitening is undefined for 4D activations (App. A.4).\n",
+    );
+    Ok(body)
+}
+
+/// Fig. 7: TinyDec (decoder-only) on the BoolQ-like task + the paper-scale
+/// TinyLlama last-k sweep (analytic axes).
+pub fn fig7(ctx: &EvalCtx) -> Result<String> {
+    let mut body = String::new();
+    let mut t = Table::new(["variant", "val acc", "TrainMem(MB)", "step ms"])
+        .title("Fig 7 — TinyDec on BoolQ-like yes/no task (measured)");
+    for name in ["tinydec_wasi_eps50", "tinydec_vanilla"] {
+        if !ctx.session.manifest.models.contains_key(name) {
+            continue;
+        }
+        let entry = ctx.session.manifest.model(name)?;
+        // sequence task batches
+        let mut task = crate::data::synth::SequenceTask::new(256, entry.input_dim, 233);
+        let mut step = TrainStep::load(&ctx.session.runtime, entry)?;
+        let sched = crate::coordinator::CosineSchedule::paper_default(ctx.steps);
+        let mut accs = Vec::new();
+        let t0 = std::time::Instant::now();
+        for s in 0..ctx.steps {
+            let (x, y, _) = task.batch_onehot(entry.batch);
+            let out = step.step(&x, &y, sched.lr(s))?;
+            accs.push(out.accuracy as f64);
+        }
+        let secs = t0.elapsed().as_secs_f64() / ctx.steps as f64;
+        let tail = &accs[accs.len().saturating_sub(10)..];
+        let acc = tail.iter().sum::<f64>() / tail.len() as f64;
+        let mem = account(entry);
+        t.row([
+            name.to_string(),
+            format!("{:.3}", acc),
+            format!("{:.2}", mem.total_mb()),
+            format!("{:.0}", secs * 1e3),
+        ]);
+    }
+    body.push_str(&t.render());
+
+    // Paper-scale TinyLlama-1.1B last-k sweep (analytic).
+    let mut t2 = Table::new([
+        "last k", "WASI ActMem(MB)", "WASI WeightMem(MB)", "WASI TrainFLOPs",
+        "ActMem x", "WeightMem x", "TrainFLOPs x", "InferFLOPs x",
+    ])
+    .title("Fig 7 (analytic) — TinyLlama-1.1B, WASI eps=0.1, last-k-layer sweep");
+    for k in 1..=5 {
+        let spec = tinyllama(4, 512, k);
+        let (mut v_am, mut w_am, mut v_wm, mut w_wm) = (0.0, 0.0, 0.0, 0.0);
+        let (mut v_tf, mut w_tf, mut v_if, mut w_if) = (0.0, 0.0, 0.0, 0.0);
+        for (_, l) in &spec.layers {
+            let rk = paper_scale_ranks(l, 0.1);
+            v_am += l.m_vanilla_a();
+            w_am += l.m_wasi_a(&rk.r);
+            v_wm += l.m_vanilla_w();
+            w_wm += l.m_wasi_w(rk.k);
+            v_tf += l.vanilla_train_flops();
+            w_tf += l.wasi_train_flops(&rk);
+            v_if += l.f_vanilla();
+            w_if += l.f_wasi(rk.k);
+        }
+        t2.row([
+            k.to_string(),
+            format!("{:.2}", w_am * 4.0 / 1048576.0),
+            format!("{:.2}", w_wm * 4.0 / 1048576.0),
+            si(w_tf),
+            format!("{:.1}x", v_am / w_am),
+            format!("{:.1}x", v_wm / w_wm),
+            format!("{:.1}x", v_tf / w_tf),
+            format!("{:.1}x", v_if / w_if),
+        ]);
+    }
+    body.push('\n');
+    body.push_str(&t2.render());
+    body.push_str(
+        "\nShape check (paper Fig. 7): at eps=0.1 the activation/weight memory and\n\
+         FLOPs ratios are very large (paper: up to 953x / 30x / 13x / 30x) and\n\
+         WASI holds accuracy on the yes/no task.\n",
+    );
+    Ok(body)
+}
+
+/// Fig. 9: seed variance (233/234/235) for WASI ViT.
+pub fn fig9(ctx: &EvalCtx) -> Result<String> {
+    let model = "vit_wasi_eps80";
+    let mut t = Table::new(["seed", "val acc", "final loss", "TrainMem(MB)"])
+        .title("Fig 9 — variance across random seeds (WASI eps=0.8, pets-like)");
+    let mut accs = Vec::new();
+    let seeds: &[u64] = if ctx.quick { &[233, 234] } else { &[233, 234, 235] };
+    for &seed in seeds {
+        let r = finetune(ctx, model, "pets-like", seed)?;
+        accs.push(r.val_accuracy);
+        t.row([
+            seed.to_string(),
+            format!("{:.3}", r.val_accuracy),
+            format!("{:.3}", r.final_loss),
+            format!("{:.2}", r.memory.total_mb()),
+        ]);
+    }
+    let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+    let var = accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>() / accs.len() as f64;
+    let mut body = t.render();
+    body.push_str(&format!(
+        "\nmean acc {:.3}, std {:.4} — paper Fig. 9: variance across seeds is\n\
+         minimal (WASI is built from deterministic SVD/GS/matmul components;\n\
+         only the data order and ASI init differ).\n",
+        mean,
+        var.sqrt()
+    ));
+    Ok(body)
+}
+
+/// Fig. 10: ViT across multiple datasets (same panel as Fig. 5).
+pub fn fig10(ctx: &EvalCtx) -> Result<String> {
+    let datasets: &[&str] = if ctx.quick {
+        &["pets-like"]
+    } else {
+        &["pets-like", "flowers-like", "cifar100-like"]
+    };
+    let mut body = String::new();
+    for ds in datasets {
+        body.push_str(&fig_vit_panel(ctx, ds, "Fig 10")?);
+        body.push('\n');
+    }
+    Ok(body)
+}
+
+/// Fig. 11: SwinLite baselines on CIFAR-10-like; SVD-LLM excluded (4D).
+pub fn fig11(ctx: &EvalCtx) -> Result<String> {
+    let mut t = Table::new(["variant", "eps", "val acc", "TrainMem(MB)", "ActMem vs vanilla"])
+        .title("Fig 11 — SwinLite method comparison on cifar10-like");
+    for name in ["swinlite_wasi_eps60", "swinlite_wasi_eps80", "swinlite_vanilla"] {
+        if !ctx.session.manifest.models.contains_key(name) {
+            continue;
+        }
+        let entry = ctx.session.manifest.model(name)?;
+        let r = finetune(ctx, name, "cifar10-like", 233)?;
+        let mem = account(entry);
+        let vanilla_act = vanilla_activations(entry).max(1);
+        let ratio = vanilla_act as f64
+            / (mem.activations + mem.asi_state).max(1) as f64;
+        t.row([
+            name.to_string(),
+            entry.eps.map(|e| e.to_string()).unwrap_or_else(|| "1.0".into()),
+            format!("{:.3}", r.val_accuracy),
+            format!("{:.2}", mem.total_mb()),
+            if entry.eps.is_some() { format!("{ratio:.1}x smaller") } else { "1.0x".into() },
+        ]);
+    }
+    let mut body = t.render();
+    body.push_str(
+        "\nSVD-LLM row intentionally absent: \"Truncation-Aware Data Whitening\" is\n\
+         only defined for 3D activations (paper App. A.4), and SwinLite's MLP\n\
+         activations are 4D.\n",
+    );
+    Ok(body)
+}

@@ -1,0 +1,146 @@
+//! Fig. 3b: WSI (warm subspace iteration) vs full SVD at every step.
+//!
+//! Native-engine study on a single-layer classifier over the synthetic
+//! pets-like task: both strategies factor the weight at threshold ε; the
+//! SVD strategy re-decomposes the materialized W every step (the paper's
+//! strawman), WSI does one warm refresh.  We report accuracy and total
+//! decomposition FLOPs for each ε — the paper's claim is ~1.36x fewer
+//! FLOPs at equal accuracy and ~+35% accuracy at equal FLOPs.
+
+use anyhow::Result;
+
+use crate::data::synth::VisionTask;
+use crate::data::Pcg64;
+use crate::linalg::matrix::Mat;
+use crate::linalg::svd::svd;
+use crate::util::table::{si, Table};
+use crate::wasi::wsi::{powerlaw, WsiFactors};
+
+use super::EvalCtx;
+
+const DIM: usize = 96;   // feature dim (PCA-like random projection of pixels)
+const CLASSES: usize = 10;
+
+/// Project pixels down to DIM with a fixed random matrix (keeps the
+/// native study cheap while preserving class structure).
+fn project(x: &[f32], n: usize, proj: &Mat) -> Mat {
+    let xm = Mat::from_vec(n, proj.cols, x.to_vec());
+    xm.matmul_nt(proj)
+}
+
+fn softmax_ce_grad(logits: &Mat, labels: &[usize]) -> (f64, f64, Mat) {
+    let n = logits.rows;
+    let c = logits.cols;
+    let mut dy = Mat::zeros(n, c);
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = logits.row(i);
+        let m = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+        let exps: Vec<f64> = row.iter().map(|&v| ((v - m) as f64).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let mut best = 0;
+        for j in 0..c {
+            let p = exps[j] / z;
+            dy.data[i * c + j] = ((p - if labels[i] == j { 1.0 } else { 0.0 }) / n as f64) as f32;
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        loss -= (exps[labels[i]] / z).ln() / n as f64;
+        if best == labels[i] {
+            correct += 1;
+        }
+    }
+    (loss, correct as f64 / n as f64, dy)
+}
+
+/// SVD cost model for an (m, n) matrix (one-sided Jacobi ≈ c·m·n²).
+fn svd_flops(m: usize, n: usize) -> f64 {
+    12.0 * m as f64 * n as f64 * n.min(m) as f64
+}
+
+/// WSI refresh cost (Eq. 36).
+fn wsi_flops(o: usize, i: usize, k: usize) -> f64 {
+    4.0 * (i * o * k) as f64 + 2.0 * (o * k * k) as f64
+}
+
+pub fn fig3b(ctx: &EvalCtx) -> Result<String> {
+    let steps = if ctx.quick { 40 } else { 80 };
+    let batch = 64;
+    let mut rng = Pcg64::new(77);
+    let mut proj = Mat::random(DIM, 32 * 32 * 3, &mut rng);
+    proj.scale(1.0 / (32.0 * 32.0 * 3.0f32).sqrt()); // unit-variance features
+    // Mild spectrum decay so the eps grid spans K ≈ 2..9 of the 10-row
+    // classifier head (the interesting under- to near-full-rank range).
+    let w0 = powerlaw(CLASSES, DIM, 0.3, 5);
+    const LR: f32 = 0.1;
+
+    let mut t = Table::new(["eps", "K", "WSI acc", "SVD acc", "WSI decomp FLOPs", "SVD decomp FLOPs", "ratio"])
+        .title("Fig 3b — WSI vs per-step SVD (native engine, single-layer classifier)");
+    let mut ratios = Vec::new();
+    for eps in [0.4f64, 0.5, 0.6, 0.7, 0.8, 0.9] {
+        // --- WSI strategy: factored training + warm refresh -------------
+        let (mut fac, _) = WsiFactors::init_svd(&w0, eps);
+        let k = fac.k();
+        let mut task = VisionTask::new("pets-like", CLASSES, 32, 0.6, 10, 233);
+        let mut wsi_acc = 0.0;
+        for s in 0..steps {
+            let (x, labels) = task.batch(batch);
+            let xf = project(&x, batch, &proj);
+            let h = xf.matmul_nt(&fac.r);
+            let logits = h.matmul_nt(&fac.l);
+            let (_, acc, dy) = softmax_ce_grad(&logits, &labels);
+            let dl = dy.matmul_tn(&h);   // dYᵀ H -> (O, K)
+            let dh = dy.matmul(&fac.l);  // (B, K)
+            let dr = dh.matmul_tn(&xf);  // dHᵀ X -> (K, I)
+            fac.sgd_update(&dl, &dr, LR, 1e-4, true);
+            if s >= steps - 10 {
+                wsi_acc += acc / 10.0;
+            }
+        }
+        let wsi_decomp = svd_flops(CLASSES, DIM) + steps as f64 * wsi_flops(CLASSES, DIM, k);
+
+        // --- SVD strategy: dense training + truncated SVD every step ----
+        let mut w = w0.clone();
+        let mut task = VisionTask::new("pets-like", CLASSES, 32, 0.6, 10, 233);
+        let mut svd_acc = 0.0;
+        for s in 0..steps {
+            let (x, labels) = task.batch(batch);
+            let xf = project(&x, batch, &proj);
+            // decompose every step, run forward truncated to the SAME
+            // rank budget as WSI (matched-K comparison)
+            let d = svd(&w);
+            let trunc = d.reconstruct(k);
+            let logits = xf.matmul_nt(&trunc);
+            let (_, acc, dy) = softmax_ce_grad(&logits, &labels);
+            let dw = dy.matmul_tn(&xf); // dYᵀ X -> (O, I)
+            for (p, g) in w.data.iter_mut().zip(&dw.data) {
+                *p -= LR * (g + 1e-4 * *p);
+            }
+            if s >= steps - 10 {
+                svd_acc += acc / 10.0;
+            }
+        }
+        let svd_decomp = steps as f64 * svd_flops(CLASSES, DIM);
+        let ratio = svd_decomp / wsi_decomp;
+        ratios.push(ratio);
+        t.row([
+            format!("{eps}"),
+            k.to_string(),
+            format!("{:.3}", wsi_acc),
+            format!("{:.3}", svd_acc),
+            si(wsi_decomp),
+            si(svd_decomp),
+            format!("{ratio:.2}x"),
+        ]);
+    }
+    let mut body = t.render();
+    let mean_ratio = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    body.push_str(&format!(
+        "\nMean decomposition-FLOPs ratio (SVD/WSI): {mean_ratio:.2}x — paper Fig. 3b\n\
+         reports WSI needing ~1.36x fewer FLOPs at matched accuracy; accuracies\n\
+         above should be comparable between the two strategies at each eps.\n"
+    ));
+    Ok(body)
+}

@@ -1,0 +1,26 @@
+//! # wasi-train
+//!
+//! Production reproduction of *"Efficient Resource-Constrained Training
+//! of Transformers via Subspace Optimization"* (WASI — Weight-Activation
+//! Subspace Iteration) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L1** Pallas kernels (build-time Python, `python/compile/kernels/`)
+//! * **L2** JAX model + WASI math (build-time Python, lowered to HLO text)
+//! * **L3** this crate: PJRT runtime, on-device training coordinator,
+//!   native per-layer engine, baselines, cost model, device simulator,
+//!   and the evaluation harness regenerating every paper table/figure.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod device;
+pub mod eval;
+pub mod linalg;
+pub mod runtime;
+pub mod util;
+pub mod wasi;

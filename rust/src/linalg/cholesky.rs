@@ -1,0 +1,141 @@
+//! Cholesky decomposition + triangular solves.
+//!
+//! Needed by the SVD-LLM baseline's "truncation-aware data whitening"
+//! (Appendix A.4): S is the Cholesky factor of X Xᵀ and the whitened
+//! weight is W S with S⁻¹ applied on the way back.
+
+use anyhow::{bail, Result};
+
+use super::matrix::Mat;
+
+/// Lower-triangular L with L Lᵀ = A for symmetric positive-definite A.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    if a.rows != a.cols {
+        bail!("cholesky expects square, got {}x{}", a.rows, a.cols);
+    }
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= (l.at(i, k) as f64) * (l.at(j, k) as f64);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (s={s})");
+                }
+                *l.at_mut(i, j) = s.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (s / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L x = b for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut x = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= (l.at(i, k) as f64) * (x[k] as f64);
+        }
+        x[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Solve Lᵀ x = b for lower-triangular L (back substitution).
+pub fn solve_lower_t(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = b[i] as f64;
+        for k in (i + 1)..n {
+            s -= (l.at(k, i) as f64) * (x[k] as f64);
+        }
+        x[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Inverse of a lower-triangular matrix (column-by-column solves).
+pub fn invert_lower(l: &Mat) -> Mat {
+    let n = l.rows;
+    let mut inv = Mat::zeros(n, n);
+    for j in 0..n {
+        let mut e = vec![0.0f32; n];
+        e[j] = 1.0;
+        let col = solve_lower(l, &e);
+        inv.set_col(j, &col);
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let a = Mat::random(n, n + 4, &mut rng);
+        let mut g = a.matmul_nt(&a);
+        for i in 0..n {
+            *g.at_mut(i, i) += 0.1; // boost conditioning
+        }
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(10, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul_nt(&l);
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-2 * a.frob_norm());
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solves_are_inverses() {
+        let a = random_spd(8, 2);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Pcg64::new(3);
+        let b: Vec<f32> = rng.normal_vec(8);
+        let y = solve_lower(&l, &b);
+        // L y = b
+        let ly = l.matvec(&y);
+        for (p, q) in ly.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-4);
+        }
+        let z = solve_lower_t(&l, &b);
+        let ltz = l.transpose().matvec(&z);
+        for (p, q) in ltz.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn invert_lower_matches_identity() {
+        let a = random_spd(6, 4);
+        let l = cholesky(&a).unwrap();
+        let li = invert_lower(&l);
+        let prod = l.matmul(&li);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+}

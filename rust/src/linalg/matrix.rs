@@ -1,0 +1,355 @@
+//! Dense row-major f32 matrix with blocked, multi-threaded matmul.
+//!
+//! The native engine's hot path (see EXPERIMENTS.md §Perf): `matmul`
+//! splits output rows across threads and walks the k-dimension in the
+//! inner loop with an 8-wide accumulator pattern the compiler
+//! auto-vectorizes; `matmul_tn`/`matmul_nt` cover the transposed forms
+//! the backward pass needs without materializing transposes.
+
+use crate::util::threadpool::parallel_ranges;
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len(), "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut crate::data::rng::Pcg64) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn set_col(&mut self, c: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for r in 0..self.rows {
+            *self.at_mut(r, c) = v[r];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// C = A · B  (4-row register-blocked ikj, threaded).
+    ///
+    /// Each B row streamed from memory feeds FOUR output rows — 4x fewer
+    /// B loads and four independent FMA chains for the auto-vectorizer
+    /// (see EXPERIMENTS.md §Perf for the measured delta).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul inner dims");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        let a_data = &self.data;
+        let b_data = &b.data;
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        parallel_ranges(m, |lo, hi| {
+            let out_ptr = &out_ptr;
+            let mut i = lo;
+            while i + 4 <= hi {
+                let out4 = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), 4 * n)
+                };
+                let (o0, rest) = out4.split_at_mut(n);
+                let (o1, rest) = rest.split_at_mut(n);
+                let (o2, o3) = rest.split_at_mut(n);
+                for kk in 0..k {
+                    let a0 = a_data[i * k + kk];
+                    let a1 = a_data[(i + 1) * k + kk];
+                    let a2 = a_data[(i + 2) * k + kk];
+                    let a3 = a_data[(i + 3) * k + kk];
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b_data[kk * n..(kk + 1) * n];
+                    // zip-fused form: no bounds checks in the hot loop
+                    for ((((bv, p0), p1), p2), p3) in b_row
+                        .iter()
+                        .zip(o0.iter_mut())
+                        .zip(o1.iter_mut())
+                        .zip(o2.iter_mut())
+                        .zip(o3.iter_mut())
+                    {
+                        *p0 += a0 * bv;
+                        *p1 += a1 * bv;
+                        *p2 += a2 * bv;
+                        *p3 += a3 * bv;
+                    }
+                }
+                i += 4;
+            }
+            // remainder rows
+            for ii in i..hi {
+                let out_row = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(ii * n), n)
+                };
+                let a_row = &a_data[ii * k..(ii + 1) * k];
+                for (kk, &a_ik) in a_row.iter().enumerate() {
+                    if a_ik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b_data[kk * n..(kk + 1) * n];
+                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                        *o += a_ik * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// C = Aᵀ · B  without materializing Aᵀ.
+    pub fn matmul_tn(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "matmul_tn inner dims");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        let a_data = &self.data;
+        let b_data = &b.data;
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        parallel_ranges(m, |lo, hi| {
+            let out_ptr = &out_ptr;
+            for i in lo..hi {
+                let out_row = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n)
+                };
+                for kk in 0..k {
+                    let a_ki = a_data[kk * m + i];
+                    if a_ki == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b_data[kk * n..(kk + 1) * n];
+                    for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                        *o += a_ki * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// C = A · Bᵀ  without materializing Bᵀ (dot-product form).
+    pub fn matmul_nt(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_nt inner dims");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut out = Mat::zeros(m, n);
+        let a_data = &self.data;
+        let b_data = &b.data;
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        parallel_ranges(m, |lo, hi| {
+            let out_ptr = &out_ptr;
+            for i in lo..hi {
+                let out_row = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n)
+                };
+                let a_row = &a_data[i * k..(i + 1) * k];
+                for (j, o) in out_row.iter_mut().enumerate() {
+                    let b_row = &b_data[j * k..(j + 1) * k];
+                    *o = dot(a_row, b_row);
+                }
+            }
+        });
+        out
+    }
+
+    /// y = A · x for a vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|r| dot(self.row(r), x)).collect()
+    }
+}
+
+/// out += A · B over raw slices (A: m x k, B: k x n, out: m x n), using
+/// the same zip-fused streaming kernel as `Mat::matmul` but accumulating
+/// into caller-owned storage — the allocation-free form the f_LR
+/// contraction loop needs (EXPERIMENTS.md §Perf iteration 4).
+pub fn matmul_acc(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for (kk, &a_ik) in a_row.iter().enumerate() {
+            if a_ik == 0.0 {
+                continue;
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                *o += a_ik * bv;
+            }
+        }
+    }
+}
+
+/// Unrolled dot product (8-wide accumulators; auto-vectorizes).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for lane in 0..8 {
+            acc[lane] += a[i + lane] * b[i + lane];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Shareable raw pointer for scoped-thread row writes (each thread owns a
+/// disjoint row range, so no aliasing).
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::new(1);
+        for (m, k, n) in [(3, 4, 5), (17, 9, 13), (64, 128, 32), (1, 7, 1)] {
+            let a = Mat::random(m, k, &mut rng);
+            let b = Mat::random(k, n, &mut rng);
+            let c = a.matmul(&b);
+            let c2 = naive_matmul(&a, &b);
+            for (x, y) in c.data.iter().zip(&c2.data) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_forms_match() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::random(23, 11, &mut rng);
+        let b = Mat::random(23, 7, &mut rng);
+        let tn = a.matmul_tn(&b);
+        let direct = a.transpose().matmul(&b);
+        for (x, y) in tn.data.iter().zip(&direct.data) {
+            assert!((x - y).abs() < 1e-3);
+        }
+        let c = Mat::random(11, 9, &mut rng);
+        let d = Mat::random(14, 9, &mut rng);
+        let nt = c.matmul_nt(&d);
+        let direct = c.matmul(&d.transpose());
+        for (x, y) in nt.data.iter().zip(&direct.data) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::new(3);
+        let a = Mat::random(6, 6, &mut rng);
+        let c = a.matmul(&Mat::eye(6));
+        for (x, y) in c.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::new(4);
+        let a = Mat::random(5, 8, &mut rng);
+        let x: Vec<f32> = rng.normal_vec(8);
+        let xm = Mat::from_vec(8, 1, x.clone());
+        let y = a.matvec(&x);
+        let ym = a.matmul(&xm);
+        for (p, q) in y.iter().zip(&ym.data) {
+            assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(5);
+        let a = Mat::random(4, 9, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

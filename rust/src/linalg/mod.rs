@@ -1,0 +1,20 @@
+//! Dense linear algebra substrate (pure rust, f32).
+//!
+//! Implements everything the paper's method and baselines need — blocked
+//! threaded matmul, Gram-Schmidt / Householder QR, one-sided Jacobi SVD,
+//! Cholesky (for SVD-LLM's whitening), warm-started subspace iteration,
+//! and Tucker/HOSVD tensor ops — with no external BLAS/LAPACK.
+
+pub mod cholesky;
+pub mod matrix;
+pub mod qr;
+pub mod subspace;
+pub mod svd;
+pub mod tucker;
+
+pub use cholesky::cholesky;
+pub use matrix::Mat;
+pub use qr::{gram_schmidt, householder_qr};
+pub use subspace::{subspace_iterate, SubspaceState};
+pub use svd::{svd, Svd};
+pub use tucker::{hosvd, mode_product, unfold, Tensor};

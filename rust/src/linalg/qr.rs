@@ -1,0 +1,187 @@
+//! Orthogonalization: modified Gram-Schmidt (what Algorithm 1 calls for)
+//! and Householder QR (the numerically-bulletproof fallback used by the
+//! Jacobi SVD and baseline code).
+
+use super::matrix::{dot, Mat};
+
+/// Modified Gram-Schmidt with re-orthogonalization (CGS2).
+///
+/// Returns Q (rows x cols) with orthonormal columns spanning the column
+/// space of `a`.  Columns that collapse to numerical zero are replaced by
+/// unit basis vectors orthogonal to the rest (rank-deficient input).
+pub fn gram_schmidt(a: &Mat) -> Mat {
+    let (n, r) = (a.rows, a.cols);
+    let mut q = Mat::zeros(n, r);
+    let mut cols: Vec<Vec<f32>> = Vec::with_capacity(r);
+    for j in 0..r {
+        let mut v = a.col(j);
+        for _pass in 0..2 {
+            for qc in &cols {
+                let c = dot(qc, &v);
+                for (vi, qi) in v.iter_mut().zip(qc) {
+                    *vi -= c * qi;
+                }
+            }
+        }
+        let nrm = dot(&v, &v).sqrt();
+        if nrm < 1e-12 {
+            // Degenerate column: substitute an orthogonalized basis vector.
+            let mut e = vec![0.0f32; n];
+            e[j % n] = 1.0;
+            for qc in &cols {
+                let c = dot(qc, &e);
+                for (vi, qi) in e.iter_mut().zip(qc) {
+                    *vi -= c * qi;
+                }
+            }
+            let en = dot(&e, &e).sqrt().max(1e-12);
+            v = e.iter().map(|x| x / en).collect();
+        } else {
+            for vi in v.iter_mut() {
+                *vi /= nrm;
+            }
+        }
+        q.set_col(j, &v);
+        cols.push(v);
+    }
+    q
+}
+
+/// Householder QR: A (m x n, m >= n)  ->  (Q (m x n) thin, R (n x n)).
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "householder_qr expects tall matrix");
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build the Householder vector for column k below the diagonal.
+        let mut x = vec![0.0f32; m - k];
+        for i in k..m {
+            x[i - k] = r.at(i, k);
+        }
+        let alpha = -x[0].signum() * dot(&x, &x).sqrt();
+        let mut v = x.clone();
+        v[0] -= alpha;
+        let vn = dot(&v, &v).sqrt();
+        if vn > 1e-12 {
+            for vi in v.iter_mut() {
+                *vi /= vn;
+            }
+            // Apply H = I - 2vvᵀ to the trailing block of R.
+            for j in k..n {
+                let mut c = 0.0f32;
+                for i in k..m {
+                    c += v[i - k] * r.at(i, j);
+                }
+                c *= 2.0;
+                for i in k..m {
+                    *r.at_mut(i, j) -= c * v[i - k];
+                }
+            }
+        } else {
+            v = vec![0.0; m - k];
+        }
+        vs.push(v);
+    }
+
+    // Accumulate thin Q by applying the reflectors to the first n columns
+    // of the identity, in reverse.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q.data[j * n + j] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        if v.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for j in 0..n {
+            let mut c = 0.0f32;
+            for i in k..m {
+                c += v[i - k] * q.at(i, j);
+            }
+            c *= 2.0;
+            for i in k..m {
+                *q.at_mut(i, j) -= c * v[i - k];
+            }
+        }
+    }
+
+    // R is the upper-triangular n x n block.
+    let mut rr = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            *rr.at_mut(i, j) = r.at(i, j);
+        }
+    }
+    (q, rr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+
+    fn check_orthonormal(q: &Mat, tol: f32) {
+        let g = q.matmul_tn(q);
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (g.at(i, j) - want).abs() < tol,
+                    "G[{i},{j}] = {}",
+                    g.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gs_orthonormal() {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::random(50, 8, &mut rng);
+        let q = gram_schmidt(&a);
+        check_orthonormal(&q, 1e-4);
+    }
+
+    #[test]
+    fn gs_spans_input() {
+        // Q Qᵀ a == a when a's columns already lie in span(Q).
+        let mut rng = Pcg64::new(2);
+        let a = Mat::random(20, 5, &mut rng);
+        let q = gram_schmidt(&a);
+        let proj = q.matmul(&q.matmul_tn(&a));
+        for (x, y) in proj.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gs_handles_rank_deficiency() {
+        let mut rng = Pcg64::new(3);
+        let mut a = Mat::random(10, 4, &mut rng);
+        let c0 = a.col(0);
+        a.set_col(1, &c0); // duplicate column
+        let q = gram_schmidt(&a);
+        check_orthonormal(&q, 1e-3);
+    }
+
+    #[test]
+    fn householder_reconstructs() {
+        let mut rng = Pcg64::new(4);
+        let a = Mat::random(12, 6, &mut rng);
+        let (q, r) = householder_qr(&a);
+        check_orthonormal(&q, 1e-4);
+        let qr = q.matmul(&r);
+        for (x, y) in qr.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+        // R upper-triangular
+        for i in 0..r.rows {
+            for j in 0..i {
+                assert!(r.at(i, j).abs() < 1e-5);
+            }
+        }
+    }
+}

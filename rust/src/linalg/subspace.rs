@@ -1,0 +1,140 @@
+//! Warm-started subspace iteration (Stewart & Miller 1975; PowerSGD
+//! reuse, Vogels et al. 2019) — the compute core of both WSI and ASI.
+
+use crate::data::rng::Pcg64;
+
+use super::matrix::Mat;
+use super::qr::gram_schmidt;
+
+/// Persistent basis for one matrix stream (one layer-mode pair).
+#[derive(Debug, Clone)]
+pub struct SubspaceState {
+    pub u: Mat, // (a, r) orthonormal basis
+}
+
+impl SubspaceState {
+    /// Random-normal initialization, orthogonalized (Algorithm 2, t = 0).
+    pub fn random(a: usize, r: usize, rng: &mut Pcg64) -> Self {
+        let init = Mat::random(a, r, rng);
+        SubspaceState { u: gram_schmidt(&init) }
+    }
+
+    /// Initialization from a known basis (e.g. build-time HOSVD factors).
+    pub fn from_basis(u: Mat) -> Self {
+        SubspaceState { u }
+    }
+
+    /// One warm-started iteration on unfolding `a_m` (a, b):
+    /// V = A_mᵀ U;  U' = orth(A_m V).  Returns the projection A ≈ U U' ᵀ ...
+    pub fn step(&mut self, a_m: &Mat) {
+        let v = a_m.matmul_tn(&self.u); // (b, r)
+        let p = a_m.matmul(&v);         // (a, r)
+        self.u = gram_schmidt(&p);
+    }
+
+    pub fn rank(&self) -> usize {
+        self.u.cols
+    }
+}
+
+/// Run `iters` subspace iterations from a random start; returns the basis.
+/// With enough iterations this converges to the top-r left singular
+/// vectors of `a_m` — the property the unit tests pin down.
+pub fn subspace_iterate(a_m: &Mat, r: usize, iters: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    let mut st = SubspaceState::random(a_m.rows, r, &mut rng);
+    for _ in 0..iters {
+        st.step(a_m);
+    }
+    st.u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::svd;
+
+    #[test]
+    fn converges_to_dominant_subspace() {
+        // Construct a matrix with a strong rank-3 dominant subspace.
+        let mut rng = Pcg64::new(7);
+        let u = gram_schmidt(&Mat::random(30, 3, &mut rng));
+        let v = gram_schmidt(&Mat::random(40, 3, &mut rng));
+        let mut a = Mat::zeros(30, 40);
+        for (j, s) in [10.0f32, 8.0, 6.0].iter().enumerate() {
+            for i in 0..30 {
+                for k in 0..40 {
+                    *a.at_mut(i, k) += s * u.at(i, j) * v.at(k, j);
+                }
+            }
+        }
+        // small noise
+        let noise = Mat::random(30, 40, &mut rng);
+        let mut an = a.clone();
+        for (x, n) in an.data.iter_mut().zip(&noise.data) {
+            *x += 0.01 * n;
+        }
+        let basis = subspace_iterate(&an, 3, 10, 1);
+        // Projection of the true dominant space onto span(basis) ≈ identity.
+        let proj = basis.matmul_tn(&u); // (3, 3)
+        let d = svd(&proj);
+        for &s in &d.s {
+            assert!(s > 0.99, "principal angle cos {s}");
+        }
+    }
+
+    #[test]
+    fn warm_start_tracks_slow_changes() {
+        // A slowly-rotating low-rank matrix: a warm-started single step per
+        // "iteration" keeps up (the stability argument of §3.3/App. A.2).
+        let mut rng = Pcg64::new(9);
+        let u0 = gram_schmidt(&Mat::random(20, 2, &mut rng));
+        let v0 = gram_schmidt(&Mat::random(25, 2, &mut rng));
+        let build = |t: f32, u0: &Mat, v0: &Mat| -> Mat {
+            let mut a = Mat::zeros(20, 25);
+            let (c, s) = ((0.02 * t).cos(), (0.02 * t).sin());
+            for i in 0..20 {
+                for k in 0..25 {
+                    // rotate the two principal directions slightly over time
+                    let u1 = c * u0.at(i, 0) + s * u0.at(i, 1);
+                    let u2 = -s * u0.at(i, 0) + c * u0.at(i, 1);
+                    *a.at_mut(i, k) += 5.0 * u1 * v0.at(k, 0) + 3.0 * u2 * v0.at(k, 1);
+                }
+            }
+            a
+        };
+        let mut st = SubspaceState::random(20, 2, &mut rng);
+        // burn-in on the t=0 matrix
+        let a0 = build(0.0, &u0, &v0);
+        for _ in 0..8 {
+            st.step(&a0);
+        }
+        let mut worst = 1.0f32;
+        for t in 1..20 {
+            let a = build(t as f32, &u0, &v0);
+            st.step(&a); // ONE step per change
+            // residual of projecting a onto span(u)
+            let proj = st.u.matmul(&st.u.matmul_tn(&a));
+            let rel = proj.sub(&a).frob_norm() / a.frob_norm();
+            worst = worst.min(1.0 - rel);
+            assert!(rel < 0.05, "tracking residual {rel} at t={t}");
+        }
+    }
+
+    #[test]
+    fn basis_stays_orthonormal() {
+        let mut rng = Pcg64::new(11);
+        let a = Mat::random(15, 50, &mut rng);
+        let mut st = SubspaceState::random(15, 4, &mut rng);
+        for _ in 0..5 {
+            st.step(&a);
+            let g = st.u.matmul_tn(&st.u);
+            for i in 0..4 {
+                for j in 0..4 {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((g.at(i, j) - want).abs() < 1e-3);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! One-sided Jacobi SVD (no LAPACK).
+//!
+//! Rotates column pairs of A until all pairs are orthogonal; the column
+//! norms are then the singular values, the normalized columns are U, and
+//! V accumulates the rotations.  Plenty fast at the sizes this project
+//! decomposes (weight matrices up to ~512x512, unfoldings up to ~1k) and
+//! accurate to f32 roundoff.  Tall matrices are pre-reduced by QR.
+
+use super::matrix::{dot, Mat};
+use super::qr::householder_qr;
+
+/// Thin SVD result: a = u * diag(s) * vt, singular values descending.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Mat,  // (m, k)
+    pub s: Vec<f32>,
+    pub vt: Mat, // (k, n)
+}
+
+/// Compute the thin SVD of `a` (m x n), k = min(m, n).
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows >= 2 * a.cols {
+        // Tall: QR first, SVD of small R, then U = Q U_r.
+        let (q, r) = householder_qr(a);
+        let inner = jacobi_svd(&r);
+        return Svd {
+            u: q.matmul(&inner.u),
+            s: inner.s,
+            vt: inner.vt,
+        };
+    }
+    if a.cols > 2 * a.rows {
+        // Wide: SVD of the transpose, swap factors.
+        let t = svd(&a.transpose());
+        return Svd {
+            u: t.vt.transpose(),
+            s: t.s,
+            vt: t.u.transpose(),
+        };
+    }
+    jacobi_svd(a)
+}
+
+fn jacobi_svd(a: &Mat) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let k = m.min(n);
+    // Work on columns of a copy; accumulate V.
+    let mut w = a.clone();
+    let mut v = Mat::eye(n);
+    let eps = 1e-10f64;
+
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let cp = w.col(p);
+                let cq = w.col(q);
+                let apq = dot(&cp, &cq) as f64;
+                let app = dot(&cp, &cp) as f64;
+                let aqq = dot(&cq, &cq) as f64;
+                if apq.abs() <= eps * (app * aqq).sqrt() || app + aqq < 1e-30 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) inner product.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (c, s) = (c as f32, s as f32);
+                for i in 0..m {
+                    let wp = w.at(i, p);
+                    let wq = w.at(i, q);
+                    *w.at_mut(i, p) = c * wp - s * wq;
+                    *w.at_mut(i, q) = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    *v.at_mut(i, p) = c * vp - s * vq;
+                    *v.at_mut(i, q) = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+
+    // Singular values = column norms; sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f32> = (0..n).map(|j| dot(&w.col(j), &w.col(j)).sqrt()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Mat::zeros(m, k);
+    let mut s = vec![0.0f32; k];
+    let mut vt = Mat::zeros(k, n);
+    for (out_j, &j) in order.iter().take(k).enumerate() {
+        s[out_j] = norms[j];
+        let cj = w.col(j);
+        if norms[j] > 1e-12 {
+            for i in 0..m {
+                u.data[i * k + out_j] = cj[i] / norms[j];
+            }
+        } else {
+            u.data[(out_j % m) * k + out_j] = 1.0;
+        }
+        for i in 0..n {
+            vt.data[out_j * n + i] = v.at(i, j);
+        }
+    }
+    Svd { u, s, vt }
+}
+
+impl Svd {
+    /// Reconstruct the (possibly truncated) matrix u[:, :k] s[:k] vt[:k, :].
+    pub fn reconstruct(&self, k: usize) -> Mat {
+        let k = k.min(self.s.len());
+        let m = self.u.rows;
+        let n = self.vt.cols;
+        let mut out = Mat::zeros(m, n);
+        for j in 0..k {
+            let sj = self.s[j];
+            for i in 0..m {
+                let uij = self.u.at(i, j) * sj;
+                if uij == 0.0 {
+                    continue;
+                }
+                let vrow = &self.vt.data[j * n..(j + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += uij * vv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Smallest K with cumulative explained variance >= eps (paper §3.3).
+    pub fn rank_for_energy(&self, eps: f64) -> usize {
+        let total: f64 = self.s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if total <= 0.0 {
+            return 1;
+        }
+        let mut cum = 0.0;
+        for (j, &sj) in self.s.iter().enumerate() {
+            cum += (sj as f64) * (sj as f64);
+            if cum / total >= eps {
+                return j + 1;
+            }
+        }
+        self.s.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+
+    fn reconstruct_err(a: &Mat) -> f32 {
+        let d = svd(a);
+        let r = d.reconstruct(d.s.len());
+        r.sub(a).frob_norm() / a.frob_norm().max(1e-9)
+    }
+
+    #[test]
+    fn reconstructs_square() {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::random(16, 16, &mut rng);
+        assert!(reconstruct_err(&a) < 1e-4);
+    }
+
+    #[test]
+    fn reconstructs_tall_and_wide() {
+        let mut rng = Pcg64::new(2);
+        assert!(reconstruct_err(&Mat::random(64, 12, &mut rng)) < 1e-4);
+        assert!(reconstruct_err(&Mat::random(9, 40, &mut rng)) < 1e-4);
+    }
+
+    #[test]
+    fn singular_values_descending_and_orthonormal() {
+        let mut rng = Pcg64::new(3);
+        let a = Mat::random(20, 14, &mut rng);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5);
+        }
+        let g = d.u.matmul_tn(&d.u);
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_on_known_matrix() {
+        // diag(3, 2) embedded in 2x2.
+        let a = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, 2.0]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-5);
+        assert!((d.s[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn low_rank_matrix_detected() {
+        // rank-2 matrix: only 2 nonzero singular values.
+        let mut rng = Pcg64::new(4);
+        let u = Mat::random(20, 2, &mut rng);
+        let v = Mat::random(2, 15, &mut rng);
+        let a = u.matmul(&v);
+        let d = svd(&a);
+        assert!(d.s[2] < 1e-3 * d.s[0]);
+        assert_eq!(d.rank_for_energy(0.999), 2);
+    }
+
+    #[test]
+    fn rank_for_energy_monotone() {
+        let mut rng = Pcg64::new(5);
+        let a = Mat::random(30, 30, &mut rng);
+        let d = svd(&a);
+        let mut prev = 0;
+        for eps in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let k = d.rank_for_energy(eps);
+            assert!(k >= prev);
+            prev = k;
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Dense N-d tensor + Tucker/HOSVD operations (App. A.2).
+//!
+//! `unfold` / `mode_product` implement the i-mode algebra of Eq. 27;
+//! `hosvd` is the truncated HOSVD the AMC baseline runs every iteration
+//! (and that WASI's build-time calibration uses once).
+
+use super::matrix::Mat;
+use super::svd::svd;
+
+/// Dense row-major (C-order) tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt() as f32
+    }
+
+    /// Row-major strides.
+    fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+}
+
+/// Mode-m unfolding: (shape[m], prod(other dims)) with the other dims in
+/// their original relative order (matches `jnp.moveaxis(t, m, 0).reshape`).
+pub fn unfold(t: &Tensor, mode: usize) -> Mat {
+    let dm = t.shape[mode];
+    let rest: usize = t.numel() / dm;
+    let strides = t.strides();
+    let mut out = Mat::zeros(dm, rest);
+
+    // Iterate all elements once, computing target positions.
+    let ndim = t.shape.len();
+    let mut idx = vec![0usize; ndim];
+    for (lin, &v) in t.data.iter().enumerate() {
+        // decode row-major index (cheap incremental counter)
+        let _ = lin;
+        let i_m = idx[mode];
+        // column index = row-major index over dims != mode, preserving order
+        let mut col = 0usize;
+        for d in 0..ndim {
+            if d == mode {
+                continue;
+            }
+            col = col * t.shape[d] + idx[d];
+        }
+        out.data[i_m * rest + col] = v;
+        // increment counter
+        for d in (0..ndim).rev() {
+            idx[d] += 1;
+            if idx[d] < t.shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    let _ = strides;
+    out
+}
+
+/// Inverse of `unfold` for a given mode and full shape.
+pub fn fold(m: &Mat, mode: usize, shape: &[usize]) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    let ndim = shape.len();
+    let rest: usize = shape.iter().product::<usize>() / shape[mode];
+    let mut idx = vec![0usize; ndim];
+    for v in t.data.iter_mut() {
+        let i_m = idx[mode];
+        let mut col = 0usize;
+        for d in 0..ndim {
+            if d == mode {
+                continue;
+            }
+            col = col * shape[d] + idx[d];
+        }
+        *v = m.data[i_m * rest + col];
+        for d in (0..ndim).rev() {
+            idx[d] += 1;
+            if idx[d] < shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    t
+}
+
+/// i-mode product  T ×_mode M  with M (q, shape[mode])  (Eq. 27).
+pub fn mode_product(t: &Tensor, m: &Mat, mode: usize) -> Tensor {
+    assert_eq!(m.cols, t.shape[mode], "mode_product dims");
+    let unfolded = unfold(t, mode);           // (d_m, rest)
+    let prod = m.matmul(&unfolded);           // (q, rest)
+    let mut new_shape = t.shape.clone();
+    new_shape[mode] = m.rows;
+    fold(&prod, mode, &new_shape)
+}
+
+/// Truncated HOSVD: returns (core, factors) with factors[m] (d_m, r_m).
+pub fn hosvd(t: &Tensor, ranks: &[usize]) -> (Tensor, Vec<Mat>) {
+    assert_eq!(ranks.len(), t.shape.len());
+    let mut factors = Vec::with_capacity(ranks.len());
+    for (m, &r) in ranks.iter().enumerate() {
+        let a = unfold(t, m);
+        let d = svd(&a);
+        let r = r.min(d.u.cols);
+        let mut u = Mat::zeros(a.rows, r);
+        for i in 0..a.rows {
+            for j in 0..r {
+                u.data[i * r + j] = d.u.at(i, j);
+            }
+        }
+        factors.push(u);
+    }
+    let mut core = t.clone();
+    for (m, u) in factors.iter().enumerate() {
+        core = mode_product(&core, &u.transpose(), m);
+    }
+    (core, factors)
+}
+
+/// Reconstruct from Tucker form: core ×_0 U0 ×_1 U1 ...
+pub fn tucker_reconstruct(core: &Tensor, factors: &[Mat]) -> Tensor {
+    let mut out = core.clone();
+    for (m, u) in factors.iter().enumerate() {
+        out = mode_product(&out, u, m);
+    }
+    out
+}
+
+/// Per-mode explained-variance rank selection on a tensor (Fig. 4 study).
+pub fn energy_ranks(t: &Tensor, eps: f64) -> Vec<usize> {
+    (0..t.shape.len())
+        .map(|m| {
+            let a = unfold(t, m);
+            svd(&a).rank_for_energy(eps).min(a.rows)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+
+    fn random_tensor(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Pcg64::new(seed);
+        Tensor::from_vec(shape, rng.normal_vec(shape.iter().product()))
+    }
+
+    #[test]
+    fn unfold_fold_roundtrip() {
+        let t = random_tensor(&[3, 4, 5], 1);
+        for mode in 0..3 {
+            let m = unfold(&t, mode);
+            assert_eq!(m.rows, t.shape[mode]);
+            let back = fold(&m, mode, &t.shape);
+            assert_eq!(back.data, t.data);
+        }
+    }
+
+    #[test]
+    fn unfold_matches_manual_3d() {
+        // t[i,j,k] with shape (2,2,2), data 0..8 row-major.
+        let t = Tensor::from_vec(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        let m1 = unfold(&t, 1); // rows indexed by j, cols by (i,k)
+        // element (j=1, i=0, k=1) = t[0,1,1] = 3; col = i*2+k = 1
+        assert_eq!(m1.at(1, 1), 3.0);
+        let m0 = unfold(&t, 0);
+        assert_eq!(m0.row(0), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn mode_product_identity() {
+        let t = random_tensor(&[4, 3, 6], 2);
+        for mode in 0..3 {
+            let p = mode_product(&t, &Mat::eye(t.shape[mode]), mode);
+            assert_eq!(p.data, t.data);
+        }
+    }
+
+    #[test]
+    fn hosvd_exact_at_full_rank() {
+        let t = random_tensor(&[4, 5, 3], 3);
+        let (core, factors) = hosvd(&t, &[4, 5, 3]);
+        let rec = tucker_reconstruct(&core, &factors);
+        let err: f32 = rec
+            .data
+            .iter()
+            .zip(&t.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-3, "max err {err}");
+    }
+
+    #[test]
+    fn hosvd_compresses_lowrank_tensor() {
+        // Build a rank-(2,2,2) tensor exactly.
+        let mut rng = Pcg64::new(4);
+        let core = random_tensor(&[2, 2, 2], 5);
+        let u0 = Mat::random(6, 2, &mut rng);
+        let u1 = Mat::random(7, 2, &mut rng);
+        let u2 = Mat::random(8, 2, &mut rng);
+        let t = tucker_reconstruct(&core, &[u0, u1, u2]);
+        let (c2, f2) = hosvd(&t, &[2, 2, 2]);
+        let rec = tucker_reconstruct(&c2, &f2);
+        let rel = {
+            let mut d = 0.0f64;
+            for (a, b) in rec.data.iter().zip(&t.data) {
+                d += ((a - b) * (a - b)) as f64;
+            }
+            (d.sqrt() as f32) / t.frob_norm()
+        };
+        assert!(rel < 1e-3, "relative error {rel}");
+        assert_eq!(energy_ranks(&t, 0.999), vec![2, 2, 2]);
+    }
+}

@@ -1,0 +1,192 @@
+//! wasi-train CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train       fine-tune a model variant on a synthetic dataset preset
+//!   infer       run inference with a variant's initial params
+//!   plan-ranks  run the Eq. 30/32 rank-selection DP over the manifest's
+//!               perplexity table
+//!   eval        regenerate a paper exhibit (fig2..fig12, tab1..tab4, all)
+//!   cost-model  print the Fig. 2 analytic sweep
+//!   calibrate   measure this host's GFLOP/s + bandwidth
+//!   list        list artifact model variants
+
+use anyhow::{anyhow, Result};
+
+use wasi_train::coordinator::{FinetuneConfig, Session};
+use wasi_train::eval::{self, EvalCtx};
+use wasi_train::util::cli::Args;
+use wasi_train::util::table::Table;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "usage: wasi-train <train|infer|plan-ranks|eval|cost-model|calibrate|list> [options]\n\
+     common options: --artifacts DIR (default: artifacts)\n\
+     train:      --model NAME --dataset PRESET --steps N --samples N --seed S\n\
+     plan-ranks: --budget-kb N | --eps E\n\
+     eval:       <exhibit|all> --steps N --out DIR [--quick]\n"
+        .to_string()
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args, &artifacts),
+        Some("infer") => cmd_infer(&args, &artifacts),
+        Some("plan-ranks") => cmd_plan_ranks(&args, &artifacts),
+        Some("eval") => cmd_eval(&args, &artifacts),
+        Some("cost-model") => {
+            let pts = wasi_train::costmodel::curves::fig2_sweep(
+                128, 197, &[256, 512, 1024, 2048], &[16, 64, 256]);
+            let mut t = Table::new(["dim", "rank", "C_tr", "S_tr", "C_inf", "S_inf"]);
+            for p in pts {
+                t.row([
+                    p.dim.to_string(), p.rank.to_string(),
+                    format!("{:.2}", p.c_training), format!("{:.2}", p.s_training),
+                    format!("{:.2}", p.c_inference), format!("{:.2}", p.s_inference),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        Some("calibrate") => {
+            let prof = wasi_train::device::calibrate::host_profile();
+            println!(
+                "host: {:.1} GFLOP/s sustained matmul, {:.1} GB/s stream bandwidth",
+                prof.gflops, prof.mem_gbps
+            );
+            Ok(())
+        }
+        Some("list") => {
+            let session = Session::open(&artifacts)?;
+            let mut t = Table::new(["model", "eps", "params", "state", "batch", "trainable"]);
+            for m in session.manifest.models.values() {
+                t.row([
+                    m.name.clone(),
+                    m.eps.map(|e| e.to_string()).unwrap_or_else(|| "-".into()),
+                    m.params_len.to_string(),
+                    m.state_len.to_string(),
+                    m.batch.to_string(),
+                    if m.train_hlo.is_some() { "yes" } else { "infer-only" }.into(),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        _ => {
+            print!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
+    let session = Session::open(artifacts)?;
+    let cfg = FinetuneConfig {
+        model: args.get_or("model", "vit_wasi_eps80").to_string(),
+        dataset: args.get_or("dataset", "cifar10-like").to_string(),
+        samples: args.usize_or("samples", 512)?,
+        steps: args.usize_or("steps", 200)?,
+        seed: args.usize_or("seed", 233)? as u64,
+        verbose: !args.flag("silent"),
+    };
+    let report = session.finetune(&cfg)?;
+    println!("\nmodel {}  dataset {}", report.model, report.dataset);
+    println!("val accuracy     {:.3}", report.val_accuracy);
+    println!("final loss (ema) {:.4}", report.final_loss);
+    println!("mean step        {:.1} ms", report.mean_step_seconds * 1e3);
+    println!("train memory     {:.2} MB", report.memory.total_mb());
+    if let Some(out) = args.get("save-curve") {
+        let json = wasi_train::util::json::arr(report.loss_curve.iter().map(|(s, l)| {
+            wasi_train::util::json::obj(vec![
+                ("step", wasi_train::util::json::num(*s as f64)),
+                ("loss", wasi_train::util::json::num(*l as f64)),
+            ])
+        }));
+        std::fs::write(out, json.to_string())?;
+        println!("loss curve -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args, artifacts: &str) -> Result<()> {
+    let session = Session::open(artifacts)?;
+    let name = args.get_or("model", "vit_wasi_eps80");
+    let entry = session.manifest.model(name)?;
+    let step = wasi_train::runtime::TrainStep::load(&session.runtime, entry)?;
+    let infer = wasi_train::runtime::InferStep::load(&session.runtime, entry)?;
+    let mut task = wasi_train::data::synth::VisionTask::new(
+        "infer", entry.classes, 32, 0.7, 8, args.usize_or("seed", 233)? as u64);
+    let (x, _, labels) = task.batch_onehot(entry.batch);
+    let preds = infer.predict(&step.params, &x)?;
+    let correct = preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+    println!("batch accuracy (pre-finetune): {}/{}", correct, entry.batch);
+    Ok(())
+}
+
+fn cmd_plan_ranks(args: &Args, artifacts: &str) -> Result<()> {
+    let session = Session::open(artifacts)?;
+    let table = session
+        .manifest
+        .perplexity
+        .as_ref()
+        .ok_or_else(|| anyhow!("manifest has no perplexity table"))?;
+    if let Some(eps) = args.get("eps") {
+        let eps: f64 = eps.parse()?;
+        let plan = wasi_train::wasi::rank_select::plan_ranks_wasi(table, eps)?;
+        print_plan(table, &plan);
+    } else {
+        let kb = args.usize_or("budget-kb", 64)?;
+        let budget = kb * 1024 / 4;
+        let plan = wasi_train::wasi::rank_select::plan_ranks(table, budget, 4096)?;
+        println!("budget: {kb} KB ({budget} f32 elems)");
+        print_plan(table, &plan);
+    }
+    Ok(())
+}
+
+fn print_plan(table: &wasi_train::wasi::rank_select::PerplexityTable,
+              plan: &wasi_train::wasi::rank_select::RankPlan) {
+    let mut t = Table::new(["layer", "eps", "ranks", "mem elems", "perplexity"]);
+    for (l, &j) in plan.choice.iter().enumerate() {
+        t.row([
+            table.layers[l].clone(),
+            format!("{}", table.eps_grid[j]),
+            format!("{:?}", table.ranks[l][j]),
+            table.memory[l][j].to_string(),
+            format!("{:.4}", table.perplexity[l][j]),
+        ]);
+    }
+    t.print();
+    println!(
+        "total: {} elems ({:.1} KB), perplexity {:.4}",
+        plan.total_memory,
+        plan.total_memory as f64 * 4.0 / 1024.0,
+        plan.total_perplexity
+    );
+}
+
+fn cmd_eval(args: &Args, artifacts: &str) -> Result<()> {
+    let exhibit = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let quick = args.flag("quick");
+    let steps = args.usize_or("steps", if quick { 60 } else { 150 })?;
+    let out_dir = args.get_or("out", "eval_out");
+    let ctx = EvalCtx::open(artifacts, out_dir, steps, quick)?;
+    let body = if exhibit == "all" {
+        eval::run_all(&ctx)?
+    } else {
+        eval::run(&ctx, exhibit)?
+    };
+    println!("{body}");
+    Ok(())
+}

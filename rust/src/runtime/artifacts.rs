@@ -1,0 +1,301 @@
+//! Manifest loading: `artifacts/manifest.json` ties HLO files, initial
+//! parameter/state vectors, rank plans, spectra and the perplexity table
+//! together.  Written once by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+use crate::wasi::rank_select::PerplexityTable;
+
+/// One tensor in the flat parameter/state layout.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One model variant (vanilla or WASI at some ε).
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub train_hlo: Option<PathBuf>,
+    pub infer_hlo: PathBuf,
+    pub params_file: PathBuf,
+    pub state_file: Option<PathBuf>,
+    pub params_len: usize,
+    pub state_len: usize,
+    pub batch: usize,
+    pub input_dim: usize,
+    pub classes: usize,
+    pub eps: Option<f64>,
+    pub weight_ranks: BTreeMap<String, usize>,
+    pub asi_ranks: BTreeMap<String, Vec<usize>>,
+    /// name -> ((O, I), activation dims) for factored layers.
+    pub layer_dims: BTreeMap<String, (Vec<usize>, Vec<usize>)>,
+    pub param_spec: Vec<TensorSpec>,
+}
+
+/// A micro-kernel artifact for the L1 benches.
+#[derive(Debug, Clone)]
+pub struct KernelEntry {
+    pub name: String,
+    pub hlo: PathBuf,
+    pub shapes: BTreeMap<String, Vec<usize>>,
+}
+
+/// The parsed manifest.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub kernels: BTreeMap<String, KernelEntry>,
+    pub spectra: BTreeMap<String, Vec<f64>>,
+    pub perplexity: Option<PerplexityTable>,
+    pub eps_grid: Vec<f64>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("param_spec not an array"))?
+        .iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e.req("name")?.as_str().unwrap_or_default().to_string(),
+                shape: e.req("shape")?.usize_vec()?,
+                offset: e.req("offset")?.as_usize().unwrap_or(0),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().ok_or_else(|| anyhow!("models not an object"))? {
+            let get_path = |key: &str| -> Option<PathBuf> {
+                m.get(key).and_then(|v| v.as_str()).map(|s| dir.join(s))
+            };
+            let mut weight_ranks = BTreeMap::new();
+            if let Some(obj) = m.get("weight_ranks").and_then(|v| v.as_obj()) {
+                for (k, v) in obj {
+                    weight_ranks.insert(k.clone(), v.as_usize().unwrap_or(0));
+                }
+            }
+            let mut asi_ranks = BTreeMap::new();
+            if let Some(obj) = m.get("asi_ranks").and_then(|v| v.as_obj()) {
+                for (k, v) in obj {
+                    asi_ranks.insert(k.clone(), v.usize_vec().unwrap_or_default());
+                }
+            }
+            let mut layer_dims = BTreeMap::new();
+            if let Some(obj) = m.get("layer_dims").and_then(|v| v.as_obj()) {
+                for (k, v) in obj {
+                    let oi = v.get("out_in").map(|x| x.usize_vec().unwrap_or_default()).unwrap_or_default();
+                    let act = v.get("act").map(|x| x.usize_vec().unwrap_or_default()).unwrap_or_default();
+                    layer_dims.insert(k.clone(), (oi, act));
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    train_hlo: get_path("train_hlo"),
+                    infer_hlo: get_path("infer_hlo")
+                        .ok_or_else(|| anyhow!("model {name} missing infer_hlo"))?,
+                    params_file: get_path("params_file")
+                        .ok_or_else(|| anyhow!("model {name} missing params_file"))?,
+                    state_file: get_path("state_file"),
+                    params_len: m.req("params_len")?.as_usize().unwrap_or(0),
+                    state_len: m.req("state_len")?.as_usize().unwrap_or(0),
+                    batch: m.req("batch")?.as_usize().unwrap_or(0),
+                    input_dim: m.req("input_dim")?.as_usize().unwrap_or(0),
+                    classes: m.req("classes")?.as_usize().unwrap_or(0),
+                    eps: m.get("eps").and_then(|v| v.as_f64()),
+                    weight_ranks,
+                    asi_ranks,
+                    layer_dims,
+                    param_spec: m
+                        .get("param_spec")
+                        .map(tensor_specs)
+                        .transpose()?
+                        .unwrap_or_default(),
+                },
+            );
+        }
+
+        let mut kernels = BTreeMap::new();
+        if let Some(obj) = j.get("kernels").and_then(|v| v.as_obj()) {
+            for (name, k) in obj {
+                let mut shapes = BTreeMap::new();
+                if let Some(sh) = k.get("shapes").and_then(|v| v.as_obj()) {
+                    for (sn, sv) in sh {
+                        shapes.insert(sn.clone(), sv.usize_vec()?);
+                    }
+                }
+                kernels.insert(
+                    name.clone(),
+                    KernelEntry {
+                        name: name.clone(),
+                        hlo: dir.join(k.req("hlo")?.as_str().unwrap_or_default()),
+                        shapes,
+                    },
+                );
+            }
+        }
+
+        let mut spectra = BTreeMap::new();
+        if let Some(obj) = j.get("spectra").and_then(|v| v.as_obj()) {
+            for (k, v) in obj {
+                spectra.insert(k.clone(), v.f64_vec()?);
+            }
+        }
+
+        let perplexity = match j.get("perplexity") {
+            Some(p) => Some(parse_perplexity(p)?),
+            None => None,
+        };
+
+        let eps_grid = j
+            .get("eps_grid")
+            .map(|v| v.f64_vec())
+            .transpose()?
+            .unwrap_or_default();
+
+        Ok(Manifest { dir, models, kernels, spectra, perplexity, eps_grid })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest; available: {:?}",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// WASI ViT variants sorted by ε (the sweep most evals iterate).
+    pub fn vit_wasi_variants(&self) -> Vec<&ModelEntry> {
+        let mut v: Vec<&ModelEntry> = self
+            .models
+            .values()
+            .filter(|m| m.name.starts_with("vit_wasi_eps"))
+            .collect();
+        v.sort_by(|a, b| a.eps.partial_cmp(&b.eps).unwrap());
+        v
+    }
+}
+
+fn parse_perplexity(p: &Json) -> Result<PerplexityTable> {
+    let layers = p
+        .req("layers")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("layers"))?
+        .iter()
+        .map(|v| v.as_str().unwrap_or_default().to_string())
+        .collect();
+    let eps_grid = p.req("eps_grid")?.f64_vec()?;
+    let perplexity = p
+        .req("perplexity")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("perplexity"))?
+        .iter()
+        .map(|row| row.f64_vec())
+        .collect::<Result<Vec<_>>>()?;
+    let memory = p
+        .req("memory")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("memory"))?
+        .iter()
+        .map(|row| row.usize_vec())
+        .collect::<Result<Vec<_>>>()?;
+    let ranks = p
+        .req("ranks")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("ranks"))?
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .ok_or_else(|| anyhow!("ranks row"))?
+                .iter()
+                .map(|r| r.usize_vec())
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(PerplexityTable { layers, eps_grid, perplexity, memory, ranks })
+}
+
+/// Read a raw little-endian f32 file (params/state vectors).
+pub fn read_f32_file(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("f32 file length {} not divisible by 4", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a raw little-endian f32 file (checkpoints).
+pub fn write_f32_file(path: impl AsRef<Path>, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path.as_ref(), bytes)
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let tmp = std::env::temp_dir().join("wasi_train_f32_test.bin");
+        let data = vec![1.0f32, -2.5, 3.25e-8, f32::MAX];
+        write_f32_file(&tmp, &data).unwrap();
+        let back = read_f32_file(&tmp).unwrap();
+        assert_eq!(back, data);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn manifest_loads_if_built() {
+        // Integration: only runs when `make artifacts` has been executed.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("vit_vanilla"));
+        let vit = m.model("vit_vanilla").unwrap();
+        assert!(vit.params_len > 0);
+        assert_eq!(vit.input_dim, 32 * 32 * 3);
+        let wasi = m.vit_wasi_variants();
+        assert!(!wasi.is_empty());
+        for w in &wasi {
+            assert!(w.state_len > 0);
+            assert!(!w.weight_ranks.is_empty());
+        }
+        if let Some(p) = &m.perplexity {
+            p.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Thin, safe wrapper over the `xla` crate's PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A PJRT client plus a cache of compiled executables keyed by path.
+///
+/// Compilation of a train-step module takes O(seconds); callers ask for
+/// executables by artifact path and get the cached copy on repeat use.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, usize>>,
+    executables: Mutex<Vec<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            executables: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable<'_>> {
+        let path = path.as_ref().to_path_buf();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(&idx) = cache.get(&path) {
+                return Ok(Executable { runtime: self, idx });
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        let mut exes = self.executables.lock().unwrap();
+        exes.push(exe);
+        let idx = exes.len() - 1;
+        self.cache.lock().unwrap().insert(path, idx);
+        Ok(Executable { runtime: self, idx })
+    }
+}
+
+/// Handle to a compiled executable living in the runtime's cache.
+#[derive(Clone, Copy)]
+pub struct Executable<'a> {
+    runtime: &'a Runtime,
+    idx: usize,
+}
+
+impl Executable<'_> {
+    /// Execute with f32-vector inputs, shapes supplied per input.
+    ///
+    /// All artifacts emitted by `aot.py` take f32 tensors and return a
+    /// tuple of f32 tensors (lowered with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = if dims.is_empty() {
+                // rank-0 scalar
+                lit.reshape(&[]).map_err(|e| anyhow!("reshape scalar: {e:?}"))?
+            } else {
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let exes = self.runtime.executables.lock().unwrap();
+        let exe = &exes[self.idx];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // Artifacts are lowered with return_tuple=True: decompose the tuple.
+        let elems = out
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(elems.len());
+        for lit in elems {
+            vecs.push(
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow!("literal to_vec: {e:?}"))
+                    .context("artifact outputs must be f32")?,
+            );
+        }
+        Ok(vecs)
+    }
+}

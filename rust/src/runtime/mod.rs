@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched.  The interchange
+//! format is HLO *text* (jax >= 0.5 emits protos with 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! Python runs once at `make artifacts`; everything in here is pure rust
+//! on the request path.
+
+mod artifacts;
+mod client;
+mod step;
+
+pub use artifacts::{KernelEntry, Manifest, ModelEntry, TensorSpec};
+pub use client::{Executable, Runtime};
+pub use step::{InferStep, StepOutput, TrainStep};

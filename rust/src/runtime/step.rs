@@ -1,0 +1,137 @@
+//! Typed wrappers over the compiled train/infer executables.
+//!
+//! A train step is one `execute` of
+//!   (params, state, x, y_onehot, lr) -> (params', state', loss, acc)
+//! with params/state round-tripping host-side between calls (the
+//! coordinator owns them; see coordinator::trainer).
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::{read_f32_file, ModelEntry};
+use super::client::{Executable, Runtime};
+
+/// Output of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutput {
+    pub loss: f32,
+    pub accuracy: f32,
+}
+
+/// A compiled, ready-to-run training step for one model variant.
+pub struct TrainStep<'rt> {
+    exe: Executable<'rt>,
+    pub entry: ModelEntry,
+    pub params: Vec<f32>,
+    pub state: Vec<f32>,
+}
+
+impl<'rt> TrainStep<'rt> {
+    /// Compile the variant's train HLO and load its initial params/state.
+    pub fn load(rt: &'rt Runtime, entry: &ModelEntry) -> Result<Self> {
+        let hlo = entry
+            .train_hlo
+            .as_ref()
+            .ok_or_else(|| anyhow!("model {} has no train artifact", entry.name))?;
+        let exe = rt.load(hlo)?;
+        let params = read_f32_file(&entry.params_file)?;
+        if params.len() != entry.params_len {
+            return Err(anyhow!(
+                "params length {} != manifest {}",
+                params.len(),
+                entry.params_len
+            ));
+        }
+        let state = match &entry.state_file {
+            Some(p) => read_f32_file(p)?,
+            None => Vec::new(),
+        };
+        Ok(TrainStep { exe, entry: entry.clone(), params, state })
+    }
+
+    /// One SGD step on a batch.  `x` is (batch, input_dim) flat,
+    /// `y_onehot` is (batch, classes) flat.
+    pub fn step(&mut self, x: &[f32], y_onehot: &[f32], lr: f32) -> Result<StepOutput> {
+        let b = self.entry.batch;
+        if x.len() != b * self.entry.input_dim {
+            return Err(anyhow!(
+                "x length {} != batch {} * input_dim {}",
+                x.len(), b, self.entry.input_dim
+            ));
+        }
+        if y_onehot.len() != b * self.entry.classes {
+            return Err(anyhow!("y length {} mismatch", y_onehot.len()));
+        }
+        let lr_arr = [lr];
+        // XLA prunes the zero-length state parameter from the lowered
+        // signature (vanilla / adapter-only variants), so only feed it
+        // when the variant actually carries ASI state.
+        let p_shape = [self.entry.params_len];
+        let s_shape = [self.entry.state_len];
+        let x_shape = [b, self.entry.input_dim];
+        let y_shape = [b, self.entry.classes];
+        let scalar: [usize; 0] = [];
+        let mut inputs: Vec<(&[f32], &[usize])> = vec![(&self.params, &p_shape)];
+        if self.entry.state_len > 0 {
+            inputs.push((&self.state, &s_shape));
+        }
+        inputs.push((x, &x_shape));
+        inputs.push((y_onehot, &y_shape));
+        inputs.push((&lr_arr, &scalar));
+        let outputs = self.exe.run_f32(&inputs)?;
+        if outputs.len() != 4 {
+            return Err(anyhow!("train step returned {} outputs", outputs.len()));
+        }
+        self.params = outputs[0].clone();
+        self.state = outputs[1].clone();
+        Ok(StepOutput { loss: outputs[2][0], accuracy: outputs[3][0] })
+    }
+
+    /// Slice one named tensor out of the flat parameter vector.
+    pub fn tensor(&self, name: &str) -> Option<(&[f32], Vec<usize>)> {
+        let spec = self.entry.param_spec.iter().find(|t| t.name == name)?;
+        let n = spec.numel();
+        Some((&self.params[spec.offset..spec.offset + n], spec.shape.clone()))
+    }
+}
+
+/// A compiled inference step: (params, x) -> logits.
+pub struct InferStep<'rt> {
+    exe: Executable<'rt>,
+    pub entry: ModelEntry,
+}
+
+impl<'rt> InferStep<'rt> {
+    pub fn load(rt: &'rt Runtime, entry: &ModelEntry) -> Result<Self> {
+        let exe = rt.load(&entry.infer_hlo)?;
+        Ok(InferStep { exe, entry: entry.clone() })
+    }
+
+    /// Run on a batch with explicit params (usually TrainStep::params).
+    pub fn infer(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let b = self.entry.batch;
+        let outputs = self.exe.run_f32(&[
+            (params, &[self.entry.params_len]),
+            (x, &[b, self.entry.input_dim]),
+        ])?;
+        Ok(outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("infer returned no outputs"))?)
+    }
+
+    /// Argmax labels for a batch of logits.
+    pub fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<usize>> {
+        let logits = self.infer(params, x)?;
+        let c = self.entry.classes;
+        Ok(logits
+            .chunks(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,13 @@
+//! Dependency-free support layer: JSON, CLI parsing, ASCII tables,
+//! timing, statistics, a scoped thread pool, and a mini property-test
+//! harness.  These exist because the vendored crate set has no serde /
+//! clap / criterion / rayon / proptest — each is implemented from
+//! scratch at the size this project needs.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod timer;

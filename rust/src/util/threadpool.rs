@@ -1,0 +1,94 @@
+//! Scoped data-parallel helpers over std::thread (no rayon vendored).
+//!
+//! The native engine's matmuls and the eval sweeps use `parallel_chunks`
+//! to split row ranges across cores.  Work is partitioned statically —
+//! the workloads here are regular (dense linear algebra panels), so
+//! static partitioning beats a work-stealing queue and costs nothing.
+
+/// Number of worker threads to use (env `WASI_THREADS` overrides).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("WASI_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(chunk_start, chunk_end)` over `0..n` split into per-thread
+/// contiguous ranges.  `f` must be Sync; mutation happens through raw
+/// pointers or per-chunk output slices owned by the caller.
+pub fn parallel_ranges<F: Fn(usize, usize) + Sync>(n: usize, f: F) {
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n < 64 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Map a function over items in parallel, preserving order.
+pub fn parallel_map<T: Sync, U: Send, F: Fn(&T) -> U + Sync>(items: &[T], f: F) -> Vec<U> {
+    let threads = num_threads().min(items.len().max(1));
+    if threads <= 1 || items.len() < 2 {
+        return items.iter().map(&f).collect();
+    }
+    let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
+    let chunk = items.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for (i_chunk, out_chunk) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            let f = &f;
+            s.spawn(move || {
+                for (x, o) in i_chunk.iter().zip(out_chunk.iter_mut()) {
+                    *o = Some(f(x));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+
+    #[test]
+    fn ranges_cover_exactly_once() {
+        let count = AtomicUsize::new(0);
+        parallel_ranges(1000, |lo, hi| {
+            count.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = parallel_map(&items, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn small_n_runs_inline() {
+        let count = AtomicUsize::new(0);
+        parallel_ranges(3, |lo, hi| {
+            count.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+}

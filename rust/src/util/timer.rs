@@ -1,0 +1,51 @@
+//! Wallclock timing helpers.
+
+use std::time::Instant;
+
+/// Times a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simple scope timer that reports on drop when verbose.
+pub struct ScopeTimer {
+    label: String,
+    start: Instant,
+    verbose: bool,
+}
+
+impl ScopeTimer {
+    pub fn new(label: impl Into<String>, verbose: bool) -> Self {
+        ScopeTimer {
+            label: label.into(),
+            start: Instant::now(),
+            verbose,
+        }
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        if self.verbose {
+            eprintln!("[time] {}: {:.3}s", self.label, self.elapsed());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,289 @@
+//! f_LR — weight gradients computed entirely in the low-rank space
+//! (paper App. A.1, Eqs. 15-18 for 3D and Eqs. 22-26 for 4D).
+
+use crate::linalg::matrix::Mat;
+use crate::linalg::tucker::Tensor;
+
+/// 3D contraction chain (Eqs. 15-18).
+///
+/// Inputs: Tucker factors of the compressed activation
+/// (core (r1,r2,r3), u1 (B,r1), u2 (N,r2), u3 (I,r3)) and the output
+/// gradient dy (B,N,O) as a tensor.  Returns dW (O, I) with
+/// dW[o,i] = Σ_{b,n} dy[b,n,o] · X̃[b,n,i], never reconstructing X̃.
+pub fn lowrank_grad_3d(core: &Tensor, u1: &Mat, u2: &Mat, u3: &Mat, dy: &Tensor) -> Mat {
+    let (b, n, o) = (dy.shape[0], dy.shape[1], dy.shape[2]);
+    let (r1, r2, r3) = (core.shape[0], core.shape[1], core.shape[2]);
+    debug_assert_eq!(u1.rows, b);
+    debug_assert_eq!(u2.rows, n);
+    let i_dim = u3.rows;
+
+    // Eq. 15: Z1[n, o, p] = Σ_b dy[b,n,o] u1[b,p]
+    let mut z1 = vec![0.0f32; n * o * r1];
+    for bb in 0..b {
+        for nn in 0..n {
+            let dyrow = &dy.data[(bb * n + nn) * o..(bb * n + nn + 1) * o];
+            let u1row = u1.row(bb);
+            for (oo, &dv) in dyrow.iter().enumerate() {
+                if dv == 0.0 {
+                    continue;
+                }
+                let zrow = &mut z1[(nn * o + oo) * r1..(nn * o + oo + 1) * r1];
+                for (z, &u) in zrow.iter_mut().zip(u1row) {
+                    *z += dv * u;
+                }
+            }
+        }
+    }
+
+    // Eq. 16: Z2[p, s, n] = Σ_q core[p,q,s] u2[n,q]   (store as [p][n][s])
+    let mut z2 = vec![0.0f32; r1 * n * r3];
+    for p in 0..r1 {
+        for nn in 0..n {
+            let u2row = u2.row(nn);
+            let out = &mut z2[(p * n + nn) * r3..(p * n + nn + 1) * r3];
+            for q in 0..r2 {
+                let uq = u2row[q];
+                if uq == 0.0 {
+                    continue;
+                }
+                let crow = &core.data[(p * r2 + q) * r3..(p * r2 + q + 1) * r3];
+                for (o_, &cv) in out.iter_mut().zip(crow) {
+                    *o_ += uq * cv;
+                }
+            }
+        }
+    }
+
+    // Eq. 17: Z3[p, i, n] = Σ_s Z2[p,s,n] u3[i,s]  (stored [n][p][i] so the
+    // Eq. 18 contraction becomes one contiguous matmul per token)
+    let mut z3 = vec![0.0f32; n * r1 * i_dim];
+    for p in 0..r1 {
+        for nn in 0..n {
+            let zrow = &z2[(p * n + nn) * r3..(p * n + nn + 1) * r3];
+            let out = &mut z3[(nn * r1 + p) * i_dim..(nn * r1 + p + 1) * i_dim];
+            for ii in 0..i_dim {
+                let u3row = u3.row(ii);
+                let mut s = 0.0f32;
+                for (zv, uv) in zrow.iter().zip(u3row) {
+                    s += zv * uv;
+                }
+                out[ii] = s;
+            }
+        }
+    }
+
+    // Eq. 18: dW[o, i] = Σ_{n, p} Z1[n,o,p] Z3[n,p,i] — per token nn this
+    // is a (O x r1)·(r1 x I) matmul accumulated into dW (the dominant
+    // term of Eq. 38: r1·I·O·N FLOPs).  The n-loop runs INSIDE an output
+    // row block so each dW block stays cache-resident across all tokens
+    // instead of streaming the full O x I matrix N times from memory.
+    let mut dw = Mat::zeros(o, i_dim);
+    const ROW_BLOCK: usize = 64;
+    let mut oo0 = 0;
+    while oo0 < o {
+        let rows = ROW_BLOCK.min(o - oo0);
+        let dw_block = &mut dw.data[oo0 * i_dim..(oo0 + rows) * i_dim];
+        for nn in 0..n {
+            let z1_slab = &z1[(nn * o + oo0) * r1..(nn * o + oo0 + rows) * r1];
+            let z3_slab = &z3[nn * r1 * i_dim..(nn + 1) * r1 * i_dim];
+            crate::linalg::matrix::matmul_acc(z1_slab, rows, r1, z3_slab, i_dim, dw_block);
+        }
+        oo0 += rows;
+    }
+    dw
+}
+
+/// 4D contraction chain (Eqs. 22-26, the SwinLite path).
+///
+/// core (r1,r2,r3,r4); u1 (B,r1); u2 (H,r2); u3 (W,r3); u4 (I,r4);
+/// dy (B,H,W,O) -> dW (O, I).
+pub fn lowrank_grad_4d(core: &Tensor, u1: &Mat, u2: &Mat, u3: &Mat, u4: &Mat,
+                       dy: &Tensor) -> Mat {
+    let (b, h, w, o) = (dy.shape[0], dy.shape[1], dy.shape[2], dy.shape[3]);
+    let (r1, r2, r3, r4) = (core.shape[0], core.shape[1], core.shape[2], core.shape[3]);
+    let i_dim = u4.rows;
+
+    // Eq. 22: Z1[p,h,w,o] = Σ_b dy[b,h,w,o] u1[b,p]
+    let mut z1 = vec![0.0f32; r1 * h * w * o];
+    for bb in 0..b {
+        let u1row = u1.row(bb);
+        for hh in 0..h {
+            for ww in 0..w {
+                let dyrow = &dy.data[((bb * h + hh) * w + ww) * o..((bb * h + hh) * w + ww + 1) * o];
+                for (p, &up) in u1row.iter().enumerate() {
+                    if up == 0.0 {
+                        continue;
+                    }
+                    let zrow = &mut z1[((p * h + hh) * w + ww) * o..((p * h + hh) * w + ww + 1) * o];
+                    for (z, &dv) in zrow.iter_mut().zip(dyrow) {
+                        *z += up * dv;
+                    }
+                }
+            }
+        }
+    }
+
+    // Eq. 23: Z2[p,h,s,t] = Σ_q core[p,q,s,t] u2[h,q]
+    let mut z2 = vec![0.0f32; r1 * h * r3 * r4];
+    for p in 0..r1 {
+        for hh in 0..h {
+            let u2row = u2.row(hh);
+            for q in 0..r2 {
+                let uq = u2row[q];
+                if uq == 0.0 {
+                    continue;
+                }
+                let cbase = ((p * r2 + q) * r3) * r4;
+                let zbase = ((p * h + hh) * r3) * r4;
+                for st in 0..r3 * r4 {
+                    z2[zbase + st] += uq * core.data[cbase + st];
+                }
+            }
+        }
+    }
+
+    // Eq. 24: Z3[p,h,s,o] = Σ_w Z1[p,h,w,o] u3[w,s]
+    let mut z3 = vec![0.0f32; r1 * h * r3 * o];
+    for p in 0..r1 {
+        for hh in 0..h {
+            for ww in 0..w {
+                let u3row = u3.row(ww);
+                let z1row = &z1[((p * h + hh) * w + ww) * o..((p * h + hh) * w + ww + 1) * o];
+                for (s, &us) in u3row.iter().enumerate() {
+                    if us == 0.0 {
+                        continue;
+                    }
+                    let zrow = &mut z3[((p * h + hh) * r3 + s) * o..((p * h + hh) * r3 + s + 1) * o];
+                    for (z, &v) in zrow.iter_mut().zip(z1row) {
+                        *z += us * v;
+                    }
+                }
+            }
+        }
+    }
+
+    // Eq. 25: Z4[p,h,i,s] = Σ_t Z2[p,h,s,t] u4[i,t]   (stored [p][h][s][i])
+    let mut z4 = vec![0.0f32; r1 * h * r3 * i_dim];
+    for p in 0..r1 {
+        for hh in 0..h {
+            for s in 0..r3 {
+                let z2row = &z2[((p * h + hh) * r3 + s) * r4..((p * h + hh) * r3 + s + 1) * r4];
+                let zout = &mut z4[((p * h + hh) * r3 + s) * i_dim..((p * h + hh) * r3 + s + 1) * i_dim];
+                for ii in 0..i_dim {
+                    let u4row = u4.row(ii);
+                    let mut acc = 0.0f32;
+                    for (zv, uv) in z2row.iter().zip(u4row) {
+                        acc += zv * uv;
+                    }
+                    zout[ii] = acc;
+                }
+            }
+        }
+    }
+
+    // Eq. 26: dW[o,i] = Σ_{h,p,s} Z3[p,h,s,o] Z4[p,h,s,i]
+    let mut dw = Mat::zeros(o, i_dim);
+    for p in 0..r1 {
+        for hh in 0..h {
+            for s in 0..r3 {
+                let z3row = &z3[((p * h + hh) * r3 + s) * o..((p * h + hh) * r3 + s + 1) * o];
+                let z4row = &z4[((p * h + hh) * r3 + s) * i_dim..((p * h + hh) * r3 + s + 1) * i_dim];
+                for (oo, &zv) in z3row.iter().enumerate() {
+                    if zv == 0.0 {
+                        continue;
+                    }
+                    let dwrow = &mut dw.data[oo * i_dim..(oo + 1) * i_dim];
+                    for (d, &z4v) in dwrow.iter_mut().zip(z4row) {
+                        *d += zv * z4v;
+                    }
+                }
+            }
+        }
+    }
+    dw
+}
+
+/// Exact dense gradient dW = Σ dyᵀ x (Eq. 2), for tests and perplexity.
+pub fn dense_grad(x: &Tensor, dy: &Tensor) -> Mat {
+    let i_dim = *x.shape.last().unwrap();
+    let o_dim = *dy.shape.last().unwrap();
+    let rows = x.numel() / i_dim;
+    debug_assert_eq!(rows, dy.numel() / o_dim);
+    let xf = Mat::from_vec(rows, i_dim, x.data.clone());
+    let dyf = Mat::from_vec(rows, o_dim, dy.data.clone());
+    dyf.matmul_tn(&xf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+    use crate::linalg::tucker::hosvd;
+
+    #[test]
+    fn matches_dense_grad_on_reconstruction() {
+        // f_LR(compress(x), dy) == dense_grad(reconstruct(x), dy) exactly.
+        let mut rng = Pcg64::new(1);
+        let (b, n, i, o) = (4usize, 9, 12, 7);
+        let x = Tensor::from_vec(&[b, n, i], rng.normal_vec(b * n * i));
+        let dy = Tensor::from_vec(&[b, n, o], rng.normal_vec(b * n * o));
+        let ranks = [3usize, 5, 6];
+        let (core, factors) = hosvd(&x, &ranks);
+        let fast = lowrank_grad_3d(&core, &factors[0], &factors[1], &factors[2], &dy);
+        let rec = crate::linalg::tucker::tucker_reconstruct(&core, &factors);
+        let exact = dense_grad(&rec, &dy);
+        let mut max_err = 0.0f32;
+        for (a, bb) in fast.data.iter().zip(&exact.data) {
+            max_err = max_err.max((a - bb).abs());
+        }
+        let scale = exact.frob_norm().max(1e-6);
+        assert!(max_err / scale < 1e-4, "relative max err {}", max_err / scale);
+    }
+
+    #[test]
+    fn four_d_matches_dense_on_reconstruction() {
+        let mut rng = Pcg64::new(5);
+        let (b, h, w, i, o) = (3usize, 4, 5, 8, 6);
+        let x = Tensor::from_vec(&[b, h, w, i], rng.normal_vec(b * h * w * i));
+        let dy = Tensor::from_vec(&[b, h, w, o], rng.normal_vec(b * h * w * o));
+        let ranks = [2usize, 3, 3, 5];
+        let (core, f) = hosvd(&x, &ranks);
+        let fast = lowrank_grad_4d(&core, &f[0], &f[1], &f[2], &f[3], &dy);
+        let rec = crate::linalg::tucker::tucker_reconstruct(&core, &f);
+        let exact = dense_grad(&rec, &dy);
+        let scale = exact.frob_norm().max(1e-6);
+        let mut max_err = 0.0f32;
+        for (a, bb) in fast.data.iter().zip(&exact.data) {
+            max_err = max_err.max((a - bb).abs());
+        }
+        assert!(max_err / scale < 1e-4, "relative err {}", max_err / scale);
+    }
+
+    #[test]
+    fn four_d_full_rank_equals_exact() {
+        let mut rng = Pcg64::new(6);
+        let (b, h, w, i, o) = (2usize, 3, 3, 5, 4);
+        let x = Tensor::from_vec(&[b, h, w, i], rng.normal_vec(b * h * w * i));
+        let dy = Tensor::from_vec(&[b, h, w, o], rng.normal_vec(b * h * w * o));
+        let (core, f) = hosvd(&x, &[b, h, w, i]);
+        let fast = lowrank_grad_4d(&core, &f[0], &f[1], &f[2], &f[3], &dy);
+        let exact = dense_grad(&x, &dy);
+        for (a, bb) in fast.data.iter().zip(&exact.data) {
+            assert!((a - bb).abs() < 1e-3, "{a} vs {bb}");
+        }
+    }
+
+    #[test]
+    fn full_rank_equals_exact() {
+        let mut rng = Pcg64::new(2);
+        let (b, n, i, o) = (3usize, 5, 6, 4);
+        let x = Tensor::from_vec(&[b, n, i], rng.normal_vec(b * n * i));
+        let dy = Tensor::from_vec(&[b, n, o], rng.normal_vec(b * n * o));
+        let (core, f) = hosvd(&x, &[b, n, i]);
+        let fast = lowrank_grad_3d(&core, &f[0], &f[1], &f[2], &dy);
+        let exact = dense_grad(&x, &dy);
+        for (a, bb) in fast.data.iter().zip(&exact.data) {
+            assert!((a - bb).abs() < 1e-3, "{a} vs {bb}");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's contribution, native-rust engine: WSI (§3.3 Algorithm 1),
+//! ASI (§3.2 Algorithm 2), the f_LR low-rank gradient (App. A.1), and
+//! rank selection (App. A.2, Eqs. 29-32).
+//!
+//! Two engines exist on purpose:
+//! * the **AOT/HLO path** (runtime/ + coordinator/) — the deployed
+//!   three-layer system, compute graphs lowered from JAX;
+//! * this **native engine** — per-layer training in pure rust used by the
+//!   WSI-vs-SVD ablation (Fig. 3b), the latency tables (Tab. 2/3, Fig. 8)
+//!   where per-layer wallclock must be attributed, and the baselines that
+//!   have no HLO artifact (AMC, SVD-LLM, LoRA).
+//! Unit tests cross-check the two engines' math against each other via
+//! the shared oracles.
+
+pub mod asi;
+pub mod layer;
+pub mod lowrank_grad;
+pub mod rank_select;
+pub mod wsi;
+
+pub use asi::AsiCompressor;
+pub use layer::{DenseLayer, WasiLayer};
+pub use rank_select::{plan_ranks, PerplexityTable, RankPlan};
+pub use wsi::WsiFactors;

@@ -1,0 +1,288 @@
+//! Rank selection (paper App. A.2, Eqs. 29-32).
+//!
+//! Given the build-time perplexity table P ∈ R^{N×E} (Eq. 28) and the
+//! per-(layer, threshold) activation memories M (Eq. 31), pick one
+//! threshold index per layer:
+//!
+//! * **ASI / budgeted** (Eq. 30): minimize Σ perplexity subject to
+//!   Σ memory ≤ B.  The paper calls this "recursive backtracking"; we
+//!   implement it as a discretized-knapsack DP (exact on the discretized
+//!   budget grid) plus an exact branch-and-bound for small instances —
+//!   the §3.3(i) "search cost from exponential to linear" improvement.
+//! * **WASI / budget-free** (Eq. 32): per-layer independent minimization
+//!   of memory at the target pre-tuning perplexity (here: the caller's ε
+//!   index), which decomposes layer-by-layer — linear time.
+
+use anyhow::{bail, Result};
+
+/// The build-time table imported from the manifest.
+#[derive(Debug, Clone)]
+pub struct PerplexityTable {
+    pub layers: Vec<String>,
+    pub eps_grid: Vec<f64>,
+    /// perplexity[layer][eps_idx] (Eq. 28, Frobenius gradient gap).
+    pub perplexity: Vec<Vec<f64>>,
+    /// memory[layer][eps_idx] in elements (Eq. 31).
+    pub memory: Vec<Vec<usize>>,
+    /// ranks[layer][eps_idx] = per-mode activation ranks.
+    pub ranks: Vec<Vec<Vec<usize>>>,
+}
+
+/// A selection: one threshold index per layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankPlan {
+    pub choice: Vec<usize>,
+    pub total_perplexity: f64,
+    pub total_memory: usize,
+}
+
+impl PerplexityTable {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let n = self.layers.len();
+        let e = self.eps_grid.len();
+        if self.perplexity.len() != n || self.memory.len() != n || self.ranks.len() != n {
+            bail!("table rows inconsistent with layer count");
+        }
+        for l in 0..n {
+            if self.perplexity[l].len() != e || self.memory[l].len() != e {
+                bail!("layer {l} has wrong number of threshold entries");
+            }
+        }
+        Ok(())
+    }
+
+    fn plan_from_choice(&self, choice: Vec<usize>) -> RankPlan {
+        let total_perplexity = choice
+            .iter()
+            .enumerate()
+            .map(|(l, &j)| self.perplexity[l][j])
+            .sum();
+        let total_memory = choice
+            .iter()
+            .enumerate()
+            .map(|(l, &j)| self.memory[l][j])
+            .sum();
+        RankPlan { choice, total_perplexity, total_memory }
+    }
+}
+
+/// Eq. 30: budgeted selection.  DP over a discretized budget grid
+/// (resolution `grid` cells); exact for the discretization, and the unit
+/// tests cross-check against exhaustive search on small instances.
+pub fn plan_ranks(table: &PerplexityTable, budget_elems: usize, grid: usize) -> Result<RankPlan> {
+    table.validate()?;
+    let n = table.n_layers();
+    let e = table.eps_grid.len();
+    if n == 0 {
+        bail!("empty table");
+    }
+    // Feasibility: every layer must fit at its cheapest setting.
+    let min_total: usize = table.memory.iter().map(|row| row.iter().min().unwrap()).sum();
+    if min_total > budget_elems {
+        bail!("budget {budget_elems} elems infeasible (min {min_total})");
+    }
+
+    let cell = (budget_elems as f64 / grid as f64).max(1.0);
+    let cells = (budget_elems as f64 / cell).floor() as usize + 1;
+    const INF: f64 = f64::INFINITY;
+    // dp[c] = min perplexity using <= c cells of memory, with choice trace.
+    let mut dp = vec![INF; cells];
+    let mut trace: Vec<Vec<usize>> = vec![Vec::new(); cells];
+    dp[0] = 0.0;
+
+    for l in 0..n {
+        let mut ndp = vec![INF; cells];
+        let mut ntrace: Vec<Vec<usize>> = vec![Vec::new(); cells];
+        for c in 0..cells {
+            if dp[c] == INF {
+                continue;
+            }
+            for j in 0..e {
+                let mem_cells = (table.memory[l][j] as f64 / cell).ceil() as usize;
+                let nc = c + mem_cells;
+                if nc >= cells {
+                    continue;
+                }
+                let np = dp[c] + table.perplexity[l][j];
+                if np < ndp[nc] {
+                    ndp[nc] = np;
+                    let mut t = trace[c].clone();
+                    t.push(j);
+                    ntrace[nc] = t;
+                }
+            }
+        }
+        dp = ndp;
+        trace = ntrace;
+    }
+
+    let best = dp
+        .iter()
+        .enumerate()
+        .filter(|(_, &p)| p.is_finite())
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(c, _)| c);
+    match best {
+        Some(c) => Ok(table.plan_from_choice(trace[c].clone())),
+        None => bail!("no feasible plan under budget"),
+    }
+}
+
+/// Exhaustive search (small instances; used to verify the DP in tests
+/// and available for n_layers * E^n small enough).
+pub fn plan_ranks_exhaustive(table: &PerplexityTable, budget_elems: usize) -> Option<RankPlan> {
+    let n = table.n_layers();
+    let e = table.eps_grid.len();
+    let mut best: Option<RankPlan> = None;
+    let mut choice = vec![0usize; n];
+    loop {
+        let plan = table.plan_from_choice(choice.clone());
+        if plan.total_memory <= budget_elems {
+            let better = match &best {
+                None => true,
+                Some(b) => plan.total_perplexity < b.total_perplexity,
+            };
+            if better {
+                best = Some(plan);
+            }
+        }
+        // increment mixed-radix counter
+        let mut d = 0;
+        loop {
+            if d == n {
+                return best;
+            }
+            choice[d] += 1;
+            if choice[d] < e {
+                break;
+            }
+            choice[d] = 0;
+            d += 1;
+        }
+    }
+}
+
+/// Eq. 32: WASI budget-free selection — minimize memory at a uniform
+/// threshold index (the paper evaluates a shared ε across layers; the
+/// per-layer ranks then fall out of the table).  Linear time.
+pub fn plan_ranks_wasi(table: &PerplexityTable, eps: f64) -> Result<RankPlan> {
+    table.validate()?;
+    let j = table
+        .eps_grid
+        .iter()
+        .position(|&g| (g - eps).abs() < 1e-9)
+        .ok_or_else(|| anyhow::anyhow!("eps {eps} not in grid {:?}", table.eps_grid))?;
+    Ok(table.plan_from_choice(vec![j; table.n_layers()]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_table() -> PerplexityTable {
+        // 3 layers x 3 thresholds; perplexity falls as memory rises.
+        PerplexityTable {
+            layers: vec!["a".into(), "b".into(), "c".into()],
+            eps_grid: vec![0.4, 0.6, 0.8],
+            perplexity: vec![
+                vec![9.0, 4.0, 1.0],
+                vec![8.0, 5.0, 2.0],
+                vec![7.0, 3.0, 0.5],
+            ],
+            memory: vec![
+                vec![10, 20, 40],
+                vec![12, 25, 50],
+                vec![8, 18, 35],
+            ],
+            ranks: vec![vec![vec![1], vec![2], vec![3]]; 3],
+        }
+    }
+
+    #[test]
+    fn dp_matches_exhaustive() {
+        let t = toy_table();
+        for budget in [30usize, 50, 70, 90, 125] {
+            let dp = plan_ranks(&t, budget, 500).unwrap();
+            let ex = plan_ranks_exhaustive(&t, budget).unwrap();
+            assert!(
+                dp.total_perplexity <= ex.total_perplexity + 1e-9,
+                "budget {budget}: dp {} vs exhaustive {}",
+                dp.total_perplexity,
+                ex.total_perplexity
+            );
+            assert!(dp.total_memory <= budget);
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_errors() {
+        let t = toy_table();
+        assert!(plan_ranks(&t, 5, 100).is_err());
+    }
+
+    #[test]
+    fn bigger_budget_never_worse() {
+        let t = toy_table();
+        let mut prev = f64::INFINITY;
+        for budget in [30usize, 45, 60, 90, 130] {
+            let p = plan_ranks(&t, budget, 500).unwrap();
+            assert!(p.total_perplexity <= prev + 1e-9);
+            prev = p.total_perplexity;
+        }
+    }
+
+    #[test]
+    fn wasi_uniform_selection() {
+        let t = toy_table();
+        let p = plan_ranks_wasi(&t, 0.6).unwrap();
+        assert_eq!(p.choice, vec![1, 1, 1]);
+        assert_eq!(p.total_memory, 20 + 25 + 18);
+        assert!(plan_ranks_wasi(&t, 0.55).is_err());
+    }
+
+    #[test]
+    fn randomized_dp_vs_exhaustive() {
+        use crate::util::proptest::{check, Gen};
+        check("dp-optimal", 20, |g: &mut Gen| {
+            let n = g.usize_in(1, 4);
+            let e = g.usize_in(2, 4);
+            let mut table = PerplexityTable {
+                layers: (0..n).map(|i| format!("l{i}")).collect(),
+                eps_grid: (0..e).map(|j| 0.1 * (j + 1) as f64).collect(),
+                perplexity: Vec::new(),
+                memory: Vec::new(),
+                ranks: vec![vec![vec![1]; e]; n],
+            };
+            for _ in 0..n {
+                // decreasing perplexity, increasing memory across thresholds
+                let mut p: Vec<f64> = (0..e).map(|_| g.f32_in(0.1, 10.0) as f64).collect();
+                p.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                let mut m: Vec<usize> = (0..e).map(|_| g.usize_in(5, 60)).collect();
+                m.sort();
+                table.perplexity.push(p);
+                table.memory.push(m);
+            }
+            let budget = g.usize_in(20, 200);
+            let ex = plan_ranks_exhaustive(&table, budget);
+            let dp = plan_ranks(&table, budget, 2000);
+            match (ex, dp) {
+                (None, Err(_)) => Ok(()),
+                (Some(e_), Ok(d)) => {
+                    if d.total_perplexity <= e_.total_perplexity + 1e-6 {
+                        Ok(())
+                    } else {
+                        Err(format!(
+                            "dp {} worse than exhaustive {}",
+                            d.total_perplexity, e_.total_perplexity
+                        ))
+                    }
+                }
+                (e_, d) => Err(format!("feasibility mismatch: {e_:?} vs {d:?}")),
+            }
+        });
+    }
+}

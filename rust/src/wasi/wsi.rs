@@ -1,0 +1,213 @@
+//! WSI — Weight Subspace Iteration (paper §3.3, Algorithm 1).
+
+use crate::linalg::matrix::Mat;
+use crate::linalg::qr::gram_schmidt;
+use crate::linalg::svd::svd;
+
+/// Factored weight W ≈ L R with L (O, K), R (K, I).
+#[derive(Debug, Clone)]
+pub struct WsiFactors {
+    pub l: Mat,
+    pub r: Mat,
+}
+
+impl WsiFactors {
+    /// Step 1 (t = 0): truncated SVD at explained-variance threshold ε
+    /// (Eqs. 5-7).  Returns the factors and the full spectrum.
+    pub fn init_svd(w: &Mat, eps: f64) -> (Self, Vec<f32>) {
+        let d = svd(w);
+        let k = d.rank_for_energy(eps);
+        let (o, i) = (w.rows, w.cols);
+        let mut l = Mat::zeros(o, k);
+        for r in 0..o {
+            for j in 0..k {
+                l.data[r * k + j] = d.u.at(r, j) * d.s[j];
+            }
+        }
+        let mut rm = Mat::zeros(k, i);
+        for j in 0..k {
+            rm.data[j * i..(j + 1) * i].copy_from_slice(&d.vt.data[j * i..(j + 1) * i]);
+        }
+        (WsiFactors { l, r: rm }, d.s)
+    }
+
+    pub fn k(&self) -> usize {
+        self.l.cols
+    }
+
+    /// Materialize W = L R (test/inspection only — never on the hot path).
+    pub fn materialize(&self) -> Mat {
+        self.l.matmul(&self.r)
+    }
+
+    /// Algorithm 1, t > 0, factored form (DESIGN.md §2.1): one warm
+    /// subspace-iteration step on the implicit W = L R.
+    ///
+    ///   R'ᵀ = Wᵀ L = Rᵀ (LᵀL);   L' = orth_GS(W R'ᵀ) = orth_GS(L (R R'ᵀ));
+    ///   R'' = L'ᵀ W = (L'ᵀ L) R.
+    ///
+    /// Never materializes W; K×K-bounded except the two thin products.
+    pub fn refresh(&mut self) {
+        let ltl = self.l.matmul_tn(&self.l);        // (K, K)
+        let rp = ltl.matmul(&self.r);               // (K, I)
+        let rrt = self.r.matmul_nt(&rp);            // (K, K)
+        let lp = gram_schmidt(&self.l.matmul(&rrt)); // (O, K)
+        let lpl = lp.matmul_tn(&self.l);            // (K, K)
+        self.r = lpl.matmul(&self.r);
+        self.l = lp;
+    }
+
+    /// Algorithm 1 verbatim on a materialized W (the Fig. 3b ablation and
+    /// the WSI-vs-SVD comparison run through this):
+    ///   Rᵀ = Wᵀ L_{t-1};   L = orth_GS(W Rᵀ);   then re-project R = Lᵀ W
+    /// so that W̃ = L Lᵀ W is the best approximation within span(L).
+    pub fn refresh_materialized(w: &Mat, l_prev: &Mat) -> Self {
+        let r0 = l_prev.matmul_tn(w);             // Rᵀ = Wᵀ L  ⇔  R = Lᵀ W (K, I)
+        let l = gram_schmidt(&w.matmul_nt(&r0));  // L = orth(W Rᵀ) (O, K)
+        let r = l.matmul_tn(w);                   // (K, I)
+        WsiFactors { l, r }
+    }
+
+    /// SGD update of the factors with weight decay (Eq. 11 in factored
+    /// form), followed by the subspace refresh.
+    pub fn sgd_update(&mut self, dl: &Mat, dr: &Mat, lr: f32, weight_decay: f32,
+                      refresh: bool) {
+        for (p, g) in self.l.data.iter_mut().zip(&dl.data) {
+            *p -= lr * (g + weight_decay * *p);
+        }
+        for (p, g) in self.r.data.iter_mut().zip(&dr.data) {
+            *p -= lr * (g + weight_decay * *p);
+        }
+        if refresh {
+            self.refresh();
+        }
+    }
+}
+
+/// Random matrix with power-law singular spectrum s_j ∝ (j+1)^-alpha —
+/// the "pretrained weight" premise (Radiya-Dixit & Wang 2020; used by the
+/// eval harness for paper-scale layers and by tests).
+pub fn powerlaw(o: usize, i: usize, alpha: f32, seed: u64) -> Mat {
+    powerlaw_factored(o, i, alpha, seed, o.min(i)).2
+}
+
+/// Like [`powerlaw`] but also returns the exact rank-`k` WSI factors
+/// (L = U_k Σ_k, R = V_kᵀ) built from the same construction — this is
+/// what `init_svd` would compute, without paying a large-matrix SVD.
+/// Used by benches and paper-scale eval comparisons.
+pub fn powerlaw_factored(o: usize, i: usize, alpha: f32, seed: u64, k: usize)
+                         -> (Mat, Mat, Mat) {
+    let mut rng = crate::data::rng::Pcg64::new(seed);
+    let full = o.min(i);
+    let k = k.min(full);
+    let mut u = gram_schmidt(&Mat::random(o, full, &mut rng));
+    let v = gram_schmidt(&Mat::random(i, full, &mut rng));
+    // scale U's columns by the spectrum, then one threaded matmul:
+    // W = (U diag(s)) Vᵀ.
+    for r in 0..o {
+        let row = &mut u.data[r * full..(r + 1) * full];
+        for (j, x) in row.iter_mut().enumerate() {
+            *x *= ((j + 1) as f32).powf(-alpha);
+        }
+    }
+    let w = u.matmul_nt(&v);
+    // truncated factors
+    let mut l = Mat::zeros(o, k);
+    for r in 0..o {
+        l.data[r * k..(r + 1) * k].copy_from_slice(&u.data[r * full..r * full + k]);
+    }
+    let mut rt = Mat::zeros(k, i);
+    for j in 0..k {
+        for c in 0..i {
+            rt.data[j * i + c] = v.at(c, j);
+        }
+    }
+    (l, rt, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+
+    #[test]
+    fn init_svd_respects_energy() {
+        let w = powerlaw(40, 30, 1.0, 1);
+        let (f, s) = WsiFactors::init_svd(&w, 0.9);
+        assert!(f.k() < 30, "k = {}", f.k());
+        assert_eq!(s.len(), 30);
+        // reconstruction captures >= 90% energy
+        let rec = f.materialize();
+        let res = rec.sub(&w).frob_norm();
+        let rel = (res / w.frob_norm()).powi(2);
+        assert!(rel <= 0.1 + 1e-3, "residual energy {rel}");
+    }
+
+    #[test]
+    fn higher_eps_higher_rank() {
+        let w = powerlaw(40, 30, 0.8, 2);
+        let mut prev = 0;
+        for eps in [0.4, 0.6, 0.8, 0.9, 0.99] {
+            let (f, _) = WsiFactors::init_svd(&w, eps);
+            assert!(f.k() >= prev);
+            prev = f.k();
+        }
+    }
+
+    #[test]
+    fn refresh_preserves_product() {
+        let w = powerlaw(30, 20, 1.0, 3);
+        let (mut f, _) = WsiFactors::init_svd(&w, 0.8);
+        let before = f.materialize();
+        f.refresh();
+        let after = f.materialize();
+        let rel = after.sub(&before).frob_norm() / before.frob_norm();
+        assert!(rel < 1e-3, "product drift {rel}");
+        // L orthonormal after refresh
+        let g = f.l.matmul_tn(&f.l);
+        for i in 0..f.k() {
+            for j in 0..f.k() {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_tracks_gradient_updates() {
+        // Simulate fine-tuning drift: W moves slowly; factored refresh
+        // keeps L R close to the top-K SVD of the drifting W.
+        let mut w = powerlaw(30, 20, 1.2, 4);
+        let (mut f, _) = WsiFactors::init_svd(&w, 0.9);
+        let k = f.k();
+        let mut rng = Pcg64::new(5);
+        for _ in 0..10 {
+            // small random perturbation of W (stand-in for a grad step)
+            let dw = Mat::random(30, 20, &mut rng);
+            for (x, d) in w.data.iter_mut().zip(&dw.data) {
+                *x += 1e-3 * d;
+            }
+            // factored engine sees the same perturbation through L,R grads:
+            // dL = dW Rᵀ, dR = Lᵀ dW (chain rule of W = L R)
+            let dl = dw.matmul_nt(&f.r);
+            let dr2 = f.l.matmul_tn(&dw);
+            for (p, g) in f.l.data.iter_mut().zip(&dl.data) {
+                *p += 1e-3 * g * 0.5;
+            }
+            for (p, g) in f.r.data.iter_mut().zip(&dr2.data) {
+                *p += 1e-3 * g * 0.5;
+            }
+            f.refresh();
+        }
+        // compare against the true top-k approximation of the drifted W
+        let d = svd(&w);
+        let best = d.reconstruct(k);
+        let ours = f.materialize();
+        let best_err = best.sub(&w).frob_norm();
+        let our_err = ours.sub(&w).frob_norm();
+        assert!(
+            our_err <= best_err * 1.5 + 1e-4,
+            "ours {our_err} vs best {best_err}"
+        );
+    }
+}

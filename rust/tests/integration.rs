@@ -1,0 +1,227 @@
+//! Integration tests over the full three-layer stack: rust loads the
+//! AOT-compiled HLO artifacts and checks training/inference semantics and
+//! cross-engine numerics (Pallas kernel vs jnp reference, executed through
+//! PJRT from rust).
+//!
+//! These tests require `make artifacts`; they skip (pass with a notice)
+//! when the artifacts directory is absent so `cargo test` stays green on
+//! a fresh checkout.
+
+use wasi_train::coordinator::{CosineSchedule, FinetuneConfig, Session};
+use wasi_train::data::rng::Pcg64;
+use wasi_train::data::synth::VisionTask;
+use wasi_train::runtime::{InferStep, Manifest, Runtime, TrainStep};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("integration: artifacts not built; skipping");
+        None
+    }
+}
+
+#[test]
+fn wasi_train_step_converges() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.model("vit_wasi_eps80").unwrap();
+    let mut step = TrainStep::load(&rt, entry).unwrap();
+    let mut task = VisionTask::new("t", entry.classes, 32, 0.7, 8, 233);
+    let sched = CosineSchedule::paper_default(20);
+    let mut losses = Vec::new();
+    for s in 0..20 {
+        let (x, y, _) = task.batch_onehot(entry.batch);
+        let out = step.step(&x, &y, sched.lr(s)).unwrap();
+        assert!(out.loss.is_finite(), "loss must stay finite");
+        losses.push(out.loss);
+    }
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[15..].iter().sum::<f32>() / 5.0;
+    assert!(
+        tail < head,
+        "loss should fall: head {head} vs tail {tail} ({losses:?})"
+    );
+}
+
+#[test]
+fn state_vector_evolves_and_params_change() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.model("vit_wasi_eps80").unwrap();
+    let mut step = TrainStep::load(&rt, entry).unwrap();
+    let p0 = step.params.clone();
+    let s0 = step.state.clone();
+    let mut task = VisionTask::new("t", entry.classes, 32, 0.7, 8, 1);
+    let (x, y, _) = task.batch_onehot(entry.batch);
+    step.step(&x, &y, 0.05).unwrap();
+    assert_ne!(step.params, p0, "params must update");
+    assert_ne!(step.state, s0, "ASI warm-start state must update");
+    assert_eq!(step.params.len(), entry.params_len);
+    assert_eq!(step.state.len(), entry.state_len);
+}
+
+#[test]
+fn infer_is_deterministic_and_matches_classes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    for name in ["vit_vanilla", "vit_wasi_eps80"] {
+        let entry = manifest.model(name).unwrap();
+        let step = TrainStep::load(&rt, entry).unwrap();
+        let infer = InferStep::load(&rt, entry).unwrap();
+        let mut task = VisionTask::new("t", entry.classes, 32, 0.7, 8, 2);
+        let (x, _, _) = task.batch_onehot(entry.batch);
+        let a = infer.infer(&step.params, &x).unwrap();
+        let b = infer.infer(&step.params, &x).unwrap();
+        assert_eq!(a, b, "{name}: inference must be deterministic");
+        assert_eq!(a.len(), entry.batch * entry.classes);
+    }
+}
+
+#[test]
+fn pallas_kernel_matches_jnp_reference_through_pjrt() {
+    // The L1 cross-check executed from L3: the Pallas lowrank kernel HLO
+    // and the pure-jnp reference HLO must agree bitwise-closely on the
+    // same inputs.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let (Some(pk), Some(rk)) = (
+        manifest.kernels.get("lowrank_pallas"),
+        manifest.kernels.get("lowrank_ref"),
+    ) else {
+        eprintln!("kernel artifacts missing; skipping");
+        return;
+    };
+    let mut rng = Pcg64::new(7);
+    let shapes = &pk.shapes;
+    let x_shape = shapes.get("x").unwrap().clone();
+    let l_shape = shapes.get("l").unwrap().clone();
+    let r_shape = shapes.get("r").unwrap().clone();
+    let x: Vec<f32> = rng.normal_vec(x_shape.iter().product());
+    let l: Vec<f32> = rng.normal_vec(l_shape.iter().product());
+    let r: Vec<f32> = rng.normal_vec(r_shape.iter().product());
+    let inputs: Vec<(&[f32], &[usize])> = vec![
+        (&x, x_shape.as_slice()),
+        (&l, l_shape.as_slice()),
+        (&r, r_shape.as_slice()),
+    ];
+    let pallas = rt.load(&pk.hlo).unwrap().run_f32(&inputs).unwrap();
+    let reference = rt.load(&rk.hlo).unwrap().run_f32(&inputs).unwrap();
+    assert_eq!(pallas.len(), reference.len());
+    let scale = reference[0]
+        .iter()
+        .fold(1e-6f32, |m, v| m.max(v.abs()));
+    for (a, b) in pallas[0].iter().zip(&reference[0]) {
+        assert!(
+            (a - b).abs() <= 1e-4 * scale,
+            "pallas {a} vs ref {b} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn kernel_variant_trains_with_pallas_in_graph() {
+    // The vit_wasi_kernel_eps80 artifact has the Pallas kernels lowered
+    // INTO the train step — prove the composed stack executes and learns.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let Ok(entry) = manifest.model("vit_wasi_kernel_eps80") else {
+        eprintln!("kernel variant not built; skipping");
+        return;
+    };
+    let mut step = TrainStep::load(&rt, entry).unwrap();
+    let mut task = VisionTask::new("t", entry.classes, 32, 0.7, 8, 3);
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..6 {
+        let (x, y, _) = task.batch_onehot(entry.batch);
+        let out = step.step(&x, &y, 0.05).unwrap();
+        assert!(out.loss.is_finite());
+        first.get_or_insert(out.loss);
+        last = out.loss;
+    }
+    assert!(last < first.unwrap() * 1.5, "kernel variant must not diverge");
+}
+
+#[test]
+fn session_finetune_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let session = Session::open(dir.to_str().unwrap()).unwrap();
+    let report = session
+        .finetune(&FinetuneConfig {
+            model: "vit_wasi_eps80".into(),
+            dataset: "cifar10-like".into(),
+            samples: 128,
+            steps: 12,
+            seed: 233,
+            verbose: false,
+        })
+        .unwrap();
+    assert!(report.final_loss.is_finite());
+    assert!(report.val_accuracy >= 0.0 && report.val_accuracy <= 1.0);
+    assert!(report.memory.total() > 0);
+    assert!(!report.loss_curve.is_empty());
+}
+
+#[test]
+fn wasi_memory_below_vanilla_across_eps() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let vanilla = manifest.model("vit_vanilla").unwrap();
+    let v_weights = vanilla.params_len;
+    let mut prev_mem = 0usize;
+    for entry in manifest.vit_wasi_variants() {
+        let mem = entry.params_len + entry.state_len;
+        assert!(
+            mem < v_weights,
+            "{}: factored params+state {} should be below dense {}",
+            entry.name,
+            mem,
+            v_weights
+        );
+        assert!(mem >= prev_mem, "memory should grow with eps");
+        prev_mem = mem;
+    }
+}
+
+#[test]
+fn perplexity_table_drives_dp_planner() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let Some(table) = &manifest.perplexity else {
+        eprintln!("no perplexity table; skipping");
+        return;
+    };
+    table.validate().unwrap();
+    // WASI uniform plans: higher eps -> more memory, less perplexity.
+    let mut prev_mem = 0usize;
+    let mut prev_ppl = f64::INFINITY;
+    for &eps in &table.eps_grid {
+        let plan = wasi_train::wasi::rank_select::plan_ranks_wasi(table, eps).unwrap();
+        assert!(plan.total_memory >= prev_mem);
+        assert!(plan.total_perplexity <= prev_ppl + 1e-9);
+        prev_mem = plan.total_memory;
+        prev_ppl = plan.total_perplexity;
+    }
+    // Budgeted DP at the eps=0.9 memory point (plus one discretization
+    // cell per layer of slack — the DP ceils item sizes to keep its
+    // budget guarantee hard) should do at least as well as uniform 0.9.
+    let uniform = wasi_train::wasi::rank_select::plan_ranks_wasi(table, 0.9).unwrap();
+    let grid = 4096usize;
+    let slack = (uniform.total_memory / grid + 1) * table.layers.len();
+    let dp = wasi_train::wasi::rank_select::plan_ranks(
+        table, uniform.total_memory + slack, grid)
+        .unwrap();
+    assert!(
+        dp.total_perplexity <= uniform.total_perplexity + 1e-9,
+        "dp {} vs uniform {}",
+        dp.total_perplexity,
+        uniform.total_perplexity
+    );
+}
