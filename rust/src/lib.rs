@@ -6,12 +6,18 @@
 //!
 //! * **L1** Pallas kernels (build-time Python, `python/compile/kernels/`)
 //! * **L2** JAX model + WASI math (build-time Python, lowered to HLO text)
-//! * **L3** this crate: PJRT runtime, on-device training coordinator,
+//! * **L3** this crate: artifact runtime, on-device training coordinator,
 //!   native per-layer engine, baselines, cost model, device simulator,
 //!   and the evaluation harness regenerating every paper table/figure.
 //!
-//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! The artifact runtime ([`runtime::Runtime`]) has two backends behind
+//! one surface: a PJRT client over the `xla` crate (cargo feature
+//! `pjrt`, off by default) and an always-available pure-rust
+//! [`runtime::NativeRuntime`] fallback so the crate builds and runs
+//! offline with zero external dependencies.
+//!
+//! See `DESIGN.md` (repository root) for the architecture and
+//! `EXPERIMENTS.md` for the paper-vs-measured record.
 
 pub mod baselines;
 pub mod bench;

@@ -42,7 +42,7 @@ impl Tensor {
     }
 }
 
-/// Mode-m unfolding: (shape[m], prod(other dims)) with the other dims in
+/// Mode-m unfolding: (`shape[m]`, prod(other dims)) with the other dims in
 /// their original relative order (matches `jnp.moveaxis(t, m, 0).reshape`).
 pub fn unfold(t: &Tensor, mode: usize) -> Mat {
     let dm = t.shape[mode];
@@ -106,7 +106,7 @@ pub fn fold(m: &Mat, mode: usize, shape: &[usize]) -> Tensor {
     t
 }
 
-/// i-mode product  T ×_mode M  with M (q, shape[mode])  (Eq. 27).
+/// i-mode product  T ×_mode M  with M (q, `shape[mode]`)  (Eq. 27).
 pub fn mode_product(t: &Tensor, m: &Mat, mode: usize) -> Tensor {
     assert_eq!(m.cols, t.shape[mode], "mode_product dims");
     let unfolded = unfold(t, mode);           // (d_m, rest)
@@ -116,7 +116,7 @@ pub fn mode_product(t: &Tensor, m: &Mat, mode: usize) -> Tensor {
     fold(&prod, mode, &new_shape)
 }
 
-/// Truncated HOSVD: returns (core, factors) with factors[m] (d_m, r_m).
+/// Truncated HOSVD: returns (core, factors) with `factors[m]` (d_m, r_m).
 pub fn hosvd(t: &Tensor, ranks: &[usize]) -> (Tensor, Vec<Mat>) {
     assert_eq!(ranks.len(), t.shape.len());
     let mut factors = Vec::with_capacity(ranks.len());

@@ -1,4 +1,10 @@
 //! Thin, safe wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Only compiled with the `pjrt` cargo feature; this file is the only
+//! place the `xla` crate is touched.  The default build ships the
+//! vendored compile-time stub of `xla`, so `cargo check --features
+//! pjrt` works offline; executing HLO for real requires swapping in the
+//! upstream `xla` crate (see README).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -10,13 +16,13 @@ use anyhow::{anyhow, Context, Result};
 ///
 /// Compilation of a train-step module takes O(seconds); callers ask for
 /// executables by artifact path and get the cached copy on repeat use.
-pub struct Runtime {
+pub struct PjrtRuntime {
     client: xla::PjRtClient,
     cache: Mutex<HashMap<PathBuf, usize>>,
     executables: Mutex<Vec<xla::PjRtLoadedExecutable>>,
 }
 
-impl Runtime {
+impl PjrtRuntime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
@@ -32,12 +38,12 @@ impl Runtime {
     }
 
     /// Load + compile an HLO text artifact (cached).
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable<'_>> {
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<PjrtExecutable<'_>> {
         let path = path.as_ref().to_path_buf();
         {
             let cache = self.cache.lock().unwrap();
             if let Some(&idx) = cache.get(&path) {
-                return Ok(Executable { runtime: self, idx });
+                return Ok(PjrtExecutable { runtime: self, idx });
             }
         }
         let proto = xla::HloModuleProto::from_text_file(&path)
@@ -51,18 +57,18 @@ impl Runtime {
         exes.push(exe);
         let idx = exes.len() - 1;
         self.cache.lock().unwrap().insert(path, idx);
-        Ok(Executable { runtime: self, idx })
+        Ok(PjrtExecutable { runtime: self, idx })
     }
 }
 
 /// Handle to a compiled executable living in the runtime's cache.
 #[derive(Clone, Copy)]
-pub struct Executable<'a> {
-    runtime: &'a Runtime,
+pub struct PjrtExecutable<'a> {
+    runtime: &'a PjrtRuntime,
     idx: usize,
 }
 
-impl Executable<'_> {
+impl PjrtExecutable<'_> {
     /// Execute with f32-vector inputs, shapes supplied per input.
     ///
     /// All artifacts emitted by `aot.py` take f32 tensors and return a

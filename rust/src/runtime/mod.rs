@@ -1,16 +1,157 @@
-//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//! Artifact runtime: load AOT-compiled HLO text artifacts and execute
+//! them, through one of two backends behind a single surface.
 //!
-//! This is the only place the `xla` crate is touched.  The interchange
-//! format is HLO *text* (jax >= 0.5 emits protos with 64-bit instruction
-//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! * **PJRT** (`client` module, behind the off-by-default `pjrt` cargo
+//!   feature) — compiles and executes the HLO artifacts through the
+//!   `xla` crate's PJRT CPU client.  The interchange format is HLO
+//!   *text* (jax >= 0.5 emits protos with 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! * **Native** (`native` module, always available) — pure-rust
+//!   fallback on the `linalg` engine.  It executes the repository's own
+//!   kernel artifacts (lowrank forward, dense forward, power step) by
+//!   running their reference math natively, and returns a descriptive
+//!   error for full model HLO programs, which need PJRT.  This is what
+//!   keeps the crate buildable and testable in offline/edge CI with no
+//!   `xla` dependency at all.
 //!
-//! Python runs once at `make artifacts`; everything in here is pure rust
-//! on the request path.
+//! Python runs once at `make artifacts`; everything in here is pure
+//! rust on the request path.  See DESIGN.md for the backend split.
 
 mod artifacts;
+#[cfg(feature = "pjrt")]
 mod client;
+mod native;
 mod step;
 
-pub use artifacts::{KernelEntry, Manifest, ModelEntry, TensorSpec};
-pub use client::{Executable, Runtime};
+use std::path::Path;
+
+use anyhow::Result;
+
+pub use artifacts::{read_f32_file, write_f32_file, KernelEntry, Manifest, ModelEntry, TensorSpec};
+#[cfg(feature = "pjrt")]
+pub use client::{PjrtExecutable, PjrtRuntime};
+pub use native::{NativeExecutable, NativeRuntime};
 pub use step::{InferStep, StepOutput, TrainStep};
+
+/// Backend-dispatching runtime handle.
+///
+/// `Runtime::cpu()` prefers PJRT when the `pjrt` feature is enabled and
+/// a client can be created, and falls back to [`NativeRuntime`]
+/// otherwise — so `coordinator::Session` and the eval harness work (for
+/// the natively-executable subset) in every build configuration.
+pub enum Runtime {
+    /// PJRT CPU client (feature `pjrt`).
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtRuntime),
+    /// Pure-rust fallback engine.
+    Native(NativeRuntime),
+}
+
+impl Runtime {
+    /// Best available CPU runtime: PJRT when compiled in and usable,
+    /// the native fallback otherwise.  Never fails.
+    pub fn cpu() -> Result<Runtime> {
+        #[cfg(feature = "pjrt")]
+        {
+            match PjrtRuntime::cpu() {
+                Ok(rt) => return Ok(Runtime::Pjrt(rt)),
+                Err(e) => {
+                    eprintln!("wasi-train: PJRT unavailable ({e:#}); using native runtime")
+                }
+            }
+        }
+        Ok(Runtime::Native(NativeRuntime::new()))
+    }
+
+    /// The native fallback runtime, explicitly.
+    pub fn native() -> Runtime {
+        Runtime::Native(NativeRuntime::new())
+    }
+
+    /// Whether this runtime can execute full model HLO programs (i.e.
+    /// the PJRT backend is live).  The native fallback executes only
+    /// the repository's kernel artifacts.
+    pub fn can_execute_hlo(&self) -> bool {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Runtime::Pjrt(_) => true,
+            Runtime::Native(_) => false,
+        }
+    }
+
+    /// Platform name of the active backend (e.g. `cpu` under PJRT,
+    /// `native-cpu` for the fallback).
+    pub fn platform(&self) -> String {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Runtime::Pjrt(rt) => rt.platform(),
+            Runtime::Native(rt) => rt.platform(),
+        }
+    }
+
+    /// Load (and for PJRT, compile) an HLO text artifact.  Cached per
+    /// path within the runtime.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable<'_>> {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Runtime::Pjrt(rt) => Ok(Executable::Pjrt(rt.load(path)?)),
+            Runtime::Native(rt) => Ok(Executable::Native(rt.load(path)?)),
+        }
+    }
+}
+
+/// Handle to a loaded executable in either backend.
+#[derive(Clone, Copy)]
+pub enum Executable<'rt> {
+    /// Compiled PJRT executable (feature `pjrt`).
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtExecutable<'rt>),
+    /// Native program handle.
+    Native(NativeExecutable<'rt>),
+}
+
+impl Executable<'_> {
+    /// Execute with f32-vector inputs, shapes supplied per input.
+    ///
+    /// All artifacts emitted by `aot.py` take f32 tensors and return a
+    /// tuple of f32 tensors (lowered with `return_tuple=True`); the
+    /// result is one flat vector per tuple element.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Executable::Pjrt(exe) => exe.run_f32(inputs),
+            Executable::Native(exe) => exe.run_f32(inputs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_runtime_always_constructs() {
+        // With default features this is the native backend; with `pjrt`
+        // plus the vendored stub it falls back to native at runtime.
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn native_runtime_reports_platform() {
+        let rt = Runtime::native();
+        assert_eq!(rt.platform(), "native-cpu");
+    }
+
+    #[test]
+    fn load_of_missing_artifact_errors() {
+        let rt = Runtime::native();
+        let missing = std::env::temp_dir().join("wasi_no_such_artifact.hlo.txt");
+        let err = match rt.load(&missing) {
+            Ok(_) => panic!("load of a missing artifact must fail"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,350 @@
+//! Native fallback runtime: the `Runtime`/`Executable` surface with no
+//! PJRT, built on the `linalg` engine.
+//!
+//! The build-time pipeline emits two families of artifacts:
+//!
+//! * **kernel artifacts** (`kernel.*.hlo.txt`) — single-op programs
+//!   whose reference math is defined in this repository
+//!   (`python/compile/kernels/ref.py`): the WASI low-rank forward
+//!   `Y = X Rᵀ Lᵀ` (Eq. 8), the dense forward `Y = X Wᵀ` (Eq. 1), and
+//!   the un-orthogonalized power step `A (Aᵀ U)`.  The native backend
+//!   recognizes these by artifact name and executes the math directly
+//!   with [`Mat`] — it does **not** interpret HLO.  Inputs are matched
+//!   by shape, not position, because different call sites pass them in
+//!   different orders (manifest map order vs. test order).
+//! * **model artifacts** (train/infer steps) — full transformer
+//!   computation graphs lowered from JAX.  Executing those requires the
+//!   PJRT backend; the native runtime returns a descriptive error
+//!   pointing at the `pjrt` cargo feature.
+//!
+//! Loading is cheap (an existence check + classification), so
+//! `coordinator::Session` opens and every artifact-free code path —
+//! `cost-model`, `calibrate`, `list`, `plan-ranks`, and the native eval
+//! exhibits — runs in builds with zero external dependencies.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::matrix::Mat;
+
+/// Program classes the native backend knows how to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Program {
+    /// `Y = X Rᵀ Lᵀ` — kernel.lowrank_pallas / kernel.lowrank_ref.
+    LowrankLinear,
+    /// `Y = X Wᵀ` — kernel.dense.
+    DenseLinear,
+    /// `A (Aᵀ U)` — kernel.power_pallas.
+    PowerStep,
+    /// Anything else (model train/infer HLO): needs PJRT.
+    Opaque,
+}
+
+fn classify(path: &Path) -> Program {
+    let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+    if !name.starts_with("kernel.") {
+        return Program::Opaque;
+    }
+    if name.contains("lowrank") {
+        Program::LowrankLinear
+    } else if name.contains("power") {
+        Program::PowerStep
+    } else if name.contains("dense") {
+        Program::DenseLinear
+    } else {
+        Program::Opaque
+    }
+}
+
+struct NativeArtifact {
+    path: PathBuf,
+    program: Program,
+}
+
+/// Pure-rust runtime: same surface as the PJRT client, no `xla`.
+pub struct NativeRuntime {
+    cache: Mutex<HashMap<PathBuf, usize>>,
+    artifacts: Mutex<Vec<NativeArtifact>>,
+}
+
+impl NativeRuntime {
+    pub fn new() -> Self {
+        NativeRuntime {
+            cache: Mutex::new(HashMap::new()),
+            artifacts: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    /// Register an artifact (cached).  Verifies the file exists and
+    /// classifies it; execution strategy is decided here, errors about
+    /// non-executable programs are deferred to `run_f32` so that merely
+    /// loading a manifest's worth of artifacts never fails.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<NativeExecutable<'_>> {
+        let path = path.as_ref().to_path_buf();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(&idx) = cache.get(&path) {
+                return Ok(NativeExecutable { runtime: self, idx });
+            }
+        }
+        std::fs::metadata(&path).with_context(|| {
+            format!("artifact {} not found (run `make artifacts`)", path.display())
+        })?;
+        let program = classify(&path);
+        let mut arts = self.artifacts.lock().unwrap();
+        arts.push(NativeArtifact { path: path.clone(), program });
+        let idx = arts.len() - 1;
+        drop(arts);
+        self.cache.lock().unwrap().insert(path, idx);
+        Ok(NativeExecutable { runtime: self, idx })
+    }
+}
+
+impl Default for NativeRuntime {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Handle to a loaded native program.
+#[derive(Clone, Copy)]
+pub struct NativeExecutable<'rt> {
+    runtime: &'rt NativeRuntime,
+    idx: usize,
+}
+
+impl NativeExecutable<'_> {
+    /// Execute with f32-vector inputs, shapes supplied per input.
+    /// Output format matches the PJRT path: one flat vector per output
+    /// tuple element.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let (program, path) = {
+            let arts = self.runtime.artifacts.lock().unwrap();
+            let a = &arts[self.idx];
+            (a.program, a.path.clone())
+        };
+        match program {
+            Program::LowrankLinear => run_lowrank(inputs),
+            Program::DenseLinear => run_dense(inputs),
+            Program::PowerStep => run_power(inputs),
+            Program::Opaque => Err(anyhow!(
+                "native runtime cannot execute AOT HLO program {}; \
+                 rebuild with `cargo build --features pjrt` and the real \
+                 `xla` crate to run full model steps (see README)",
+                path.display()
+            )),
+        }
+    }
+}
+
+/// Flatten leading dims: an (..., I) input viewed as a (rows, I) matrix.
+fn as_matrix(data: &[f32], shape: &[usize]) -> Result<Mat> {
+    let cols = *shape.last().ok_or_else(|| anyhow!("rank-0 input where tensor expected"))?;
+    let numel: usize = shape.iter().product();
+    if numel != data.len() || cols == 0 {
+        bail!("input shape {shape:?} inconsistent with {} elements", data.len());
+    }
+    Ok(Mat::from_vec(numel / cols, cols, data.to_vec()))
+}
+
+/// `Y = X Rᵀ Lᵀ` with x (..., I), r (K, I), l (O, K); inputs matched by
+/// shape so argument order does not matter.
+fn run_lowrank(inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+    if inputs.len() != 3 {
+        bail!("lowrank kernel expects 3 inputs (x, l, r), got {}", inputs.len());
+    }
+    let xi = inputs
+        .iter()
+        .position(|(_, s)| s.len() >= 3)
+        .ok_or_else(|| anyhow!("lowrank kernel: no rank-3 activation input"))?;
+    let (x_data, x_shape) = inputs[xi];
+    let x = as_matrix(x_data, x_shape)?;
+    let others: Vec<&(&[f32], &[usize])> = inputs
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != xi)
+        .map(|(_, v)| v)
+        .collect();
+    let (a, b) = (others[0], others[1]);
+    if a.1.len() != 2 || b.1.len() != 2 {
+        bail!("lowrank kernel: factor inputs must be matrices");
+    }
+    // r has cols == I; l has cols == r.rows (== K).
+    let i_dim = x.cols;
+    let a_is_r = a.1[1] == i_dim && b.1[1] == a.1[0];
+    let b_is_r = b.1[1] == i_dim && a.1[1] == b.1[0];
+    let (r_in, l_in) = match (a_is_r, b_is_r) {
+        (true, false) => (a, b),
+        (false, true) => (b, a),
+        // Fully square factors fit both readings; guessing would return
+        // a numerically wrong product with Ok status, so refuse.
+        (true, true) => bail!(
+            "lowrank kernel: factor shapes {:?} and {:?} are ambiguous (square); \
+             cannot identify (l, r) by shape",
+            a.1, b.1
+        ),
+        (false, false) => bail!(
+            "lowrank kernel: cannot identify (l, r) from shapes {:?} and {:?} with I={i_dim}",
+            a.1, b.1
+        ),
+    };
+    let r = as_matrix(r_in.0, r_in.1)?;
+    let l = as_matrix(l_in.0, l_in.1)?;
+    let h = x.matmul_nt(&r); // (rows, K)
+    let y = h.matmul_nt(&l); // (rows, O)
+    Ok(vec![y.data])
+}
+
+/// `Y = X Wᵀ` with x (..., I), w (O, I).
+fn run_dense(inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+    if inputs.len() != 2 {
+        bail!("dense kernel expects 2 inputs (x, w), got {}", inputs.len());
+    }
+    let xi = inputs
+        .iter()
+        .position(|(_, s)| s.len() >= 3)
+        .ok_or_else(|| anyhow!("dense kernel: no rank-3 activation input"))?;
+    let (x_data, x_shape) = inputs[xi];
+    let x = as_matrix(x_data, x_shape)?;
+    let (w_data, w_shape) = inputs[1 - xi];
+    if w_shape.len() != 2 || w_shape[1] != x.cols {
+        bail!("dense kernel: weight shape {w_shape:?} does not match I={}", x.cols);
+    }
+    let w = as_matrix(w_data, w_shape)?;
+    Ok(vec![x.matmul_nt(&w).data])
+}
+
+/// Power step `A (Aᵀ U)` with a (D, M), u (D, R) — both matrices share
+/// their leading dim; u is the narrower one.
+fn run_power(inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+    if inputs.len() != 2 {
+        bail!("power kernel expects 2 inputs (a, u), got {}", inputs.len());
+    }
+    let (p, q) = (inputs[0], inputs[1]);
+    if p.1.len() != 2 || q.1.len() != 2 || p.1[0] != q.1[0] {
+        bail!("power kernel: inputs {:?} and {:?} must share a leading dim", p.1, q.1);
+    }
+    if p.1[1] == q.1[1] {
+        // A (Aᵀ U) and U (Uᵀ A) differ; equal widths make the roles
+        // undecidable by shape — refuse rather than silently guess.
+        bail!("power kernel: inputs {:?} and {:?} are ambiguous (equal widths)", p.1, q.1);
+    }
+    let (a_in, u_in) = if p.1[1] > q.1[1] { (p, q) } else { (q, p) };
+    let a = as_matrix(a_in.0, a_in.1)?;
+    let u = as_matrix(u_in.0, u_in.1)?;
+    let inner = a.matmul_tn(&u); // (M, R)
+    Ok(vec![a.matmul(&inner).data])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+
+    fn touch(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(name);
+        std::fs::write(&p, "HloModule stub\n").unwrap();
+        p
+    }
+
+    #[test]
+    fn classifies_by_artifact_name() {
+        assert_eq!(classify(Path::new("kernel.lowrank_pallas.hlo.txt")), Program::LowrankLinear);
+        assert_eq!(classify(Path::new("kernel.lowrank_ref.hlo.txt")), Program::LowrankLinear);
+        assert_eq!(classify(Path::new("kernel.dense.hlo.txt")), Program::DenseLinear);
+        assert_eq!(classify(Path::new("kernel.power_pallas.hlo.txt")), Program::PowerStep);
+        assert_eq!(classify(Path::new("vit_vanilla.train.hlo.txt")), Program::Opaque);
+    }
+
+    #[test]
+    fn lowrank_matches_direct_math_in_any_input_order() {
+        let rt = NativeRuntime::new();
+        let path = touch("kernel.lowrank_ref.hlo.txt");
+        let exe = rt.load(&path).unwrap();
+        let (b, n, i, k, o) = (2usize, 3, 5, 4, 6);
+        let mut rng = Pcg64::new(1);
+        let x = rng.normal_vec(b * n * i);
+        let l = rng.normal_vec(o * k);
+        let r = rng.normal_vec(k * i);
+        let x_shape = [b, n, i];
+        let l_shape = [o, k];
+        let r_shape = [k, i];
+        // integration-test order (x, l, r) and manifest order (l, r, x)
+        let out1 = exe
+            .run_f32(&[(&x, &x_shape), (&l, &l_shape), (&r, &r_shape)])
+            .unwrap();
+        let out2 = exe
+            .run_f32(&[(&l, &l_shape), (&r, &r_shape), (&x, &x_shape)])
+            .unwrap();
+        assert_eq!(out1, out2);
+        let xm = Mat::from_vec(b * n, i, x.clone());
+        let lm = Mat::from_vec(o, k, l.clone());
+        let rm = Mat::from_vec(k, i, r.clone());
+        let want = xm.matmul_nt(&rm).matmul_nt(&lm);
+        assert_eq!(out1.len(), 1);
+        for (a, w) in out1[0].iter().zip(&want.data) {
+            assert!((a - w).abs() < 1e-4, "{a} vs {w}");
+        }
+    }
+
+    #[test]
+    fn dense_and_power_execute() {
+        let rt = NativeRuntime::new();
+        let mut rng = Pcg64::new(2);
+
+        let dense = rt.load(touch("kernel.dense.hlo.txt")).unwrap();
+        let (b, n, i, o) = (2usize, 4, 6, 3);
+        let x = rng.normal_vec(b * n * i);
+        let w = rng.normal_vec(o * i);
+        let out = dense
+            .run_f32(&[(&w, &[o, i][..]), (&x, &[b, n, i][..])])
+            .unwrap();
+        let want = Mat::from_vec(b * n, i, x.clone()).matmul_nt(&Mat::from_vec(o, i, w.clone()));
+        assert_eq!(out[0].len(), b * n * o);
+        for (a, ww) in out[0].iter().zip(&want.data) {
+            assert!((a - ww).abs() < 1e-4);
+        }
+
+        let power = rt.load(touch("kernel.power_pallas.hlo.txt")).unwrap();
+        let (d, m, r) = (5usize, 9, 2);
+        let a = rng.normal_vec(d * m);
+        let u = rng.normal_vec(d * r);
+        let out = power
+            .run_f32(&[(&a, &[d, m][..]), (&u, &[d, r][..])])
+            .unwrap();
+        let am = Mat::from_vec(d, m, a.clone());
+        let um = Mat::from_vec(d, r, u.clone());
+        let want = am.matmul(&am.matmul_tn(&um));
+        assert_eq!(out[0].len(), d * r);
+        for (x_, w_) in out[0].iter().zip(&want.data) {
+            assert!((x_ - w_).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn model_hlo_requires_pjrt() {
+        let rt = NativeRuntime::new();
+        let exe = rt.load(touch("vit_vanilla.train.hlo.txt")).unwrap();
+        let x = [0.0f32; 4];
+        let err = exe.run_f32(&[(&x, &[4][..])]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn load_is_cached_per_path() {
+        let rt = NativeRuntime::new();
+        let path = touch("kernel.lowrank_cache_test.hlo.txt");
+        let a = rt.load(&path).unwrap();
+        let b = rt.load(&path).unwrap();
+        assert_eq!(a.idx, b.idx);
+        assert_eq!(rt.artifacts.lock().unwrap().len(), 1);
+    }
+}

@@ -8,7 +8,7 @@
 use anyhow::{anyhow, Result};
 
 use super::artifacts::{read_f32_file, ModelEntry};
-use super::client::{Executable, Runtime};
+use super::{Executable, Runtime};
 
 /// Output of one training step.
 #[derive(Debug, Clone, Copy)]

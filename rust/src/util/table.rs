@@ -45,7 +45,7 @@ impl Table {
         }
         let fmt_row = |cells: &[String]| -> String {
             let mut line = String::new();
-            for (i, w) in widths.iter().enumerate() {
+            for (i, &w) in widths.iter().enumerate() {
                 let cell = cells.get(i).map(|s| s.as_str()).unwrap_or("");
                 line.push_str(&format!("{cell:<w$}"));
                 if i + 1 < widths.len() {

@@ -20,11 +20,11 @@ use anyhow::{bail, Result};
 pub struct PerplexityTable {
     pub layers: Vec<String>,
     pub eps_grid: Vec<f64>,
-    /// perplexity[layer][eps_idx] (Eq. 28, Frobenius gradient gap).
+    /// `perplexity[layer][eps_idx]` (Eq. 28, Frobenius gradient gap).
     pub perplexity: Vec<Vec<f64>>,
-    /// memory[layer][eps_idx] in elements (Eq. 31).
+    /// `memory[layer][eps_idx]` in elements (Eq. 31).
     pub memory: Vec<Vec<usize>>,
-    /// ranks[layer][eps_idx] = per-mode activation ranks.
+    /// `ranks[layer][eps_idx]` = per-mode activation ranks.
     pub ranks: Vec<Vec<Vec<usize>>>,
 }
 

@@ -1,0 +1,97 @@
+//! Integration tests for the `wasi-train` binary's artifact-free
+//! surface: `cost-model`, `calibrate`, `list`, `plan-ranks`, and the
+//! usage screen.  These run with default features and no artifacts
+//! directory, so the whole CLI contract is exercised by plain
+//! `cargo test` in offline CI.
+
+use std::process::{Command, Output};
+
+fn run(args: &[&str]) -> Output {
+    // Run from a temp cwd so relative side-effect paths (eval_out/,
+    // default artifacts/) never touch the repository checkout.
+    Command::new(env!("CARGO_BIN_EXE_wasi-train"))
+        .args(args)
+        .current_dir(std::env::temp_dir())
+        .output()
+        .expect("spawn wasi-train binary")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn missing_artifacts_flagval() -> String {
+    std::env::temp_dir()
+        .join("wasi_cli_test_no_such_artifacts")
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn no_subcommand_prints_usage() {
+    let out = run(&[]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("usage: wasi-train"), "{s}");
+    for sub in ["train", "infer", "plan-ranks", "eval", "cost-model", "calibrate", "list"] {
+        assert!(s.contains(sub), "usage must mention {sub}: {s}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_prints_usage() {
+    let out = run(&["frobnicate"]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("usage: wasi-train"));
+}
+
+#[test]
+fn cost_model_prints_fig2_sweep() {
+    let out = run(&["cost-model"]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    for col in ["dim", "rank", "C_tr", "S_tr", "C_inf", "S_inf"] {
+        assert!(s.contains(col), "missing column {col}: {s}");
+    }
+    // 4 dims x 3 ranks = 12 sweep rows + header + rule.
+    assert!(s.lines().count() >= 14, "{s}");
+    assert!(s.contains("2048"), "largest dim row missing: {s}");
+}
+
+#[test]
+fn calibrate_reports_host_profile() {
+    let out = run(&["calibrate"]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("GFLOP/s"), "{s}");
+    assert!(s.contains("GB/s"), "{s}");
+}
+
+#[test]
+fn list_without_artifacts_says_make_artifacts() {
+    let out = run(&["list", "--artifacts", &missing_artifacts_flagval()]);
+    assert!(!out.status.success(), "list must fail without artifacts");
+    let err = stderr(&out);
+    assert!(err.contains("manifest.json"), "{err}");
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn plan_ranks_without_artifacts_fails_with_context() {
+    let out = run(&["plan-ranks", "--budget-kb", "64", "--artifacts", &missing_artifacts_flagval()]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("error:"), "{err}");
+    assert!(err.contains("manifest.json"), "{err}");
+}
+
+#[test]
+fn train_without_artifacts_fails_gracefully() {
+    let out = run(&["train", "--steps", "1", "--artifacts", &missing_artifacts_flagval()]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("error:"));
+}

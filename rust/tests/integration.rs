@@ -5,7 +5,10 @@
 //!
 //! These tests require `make artifacts`; they skip (pass with a notice)
 //! when the artifacts directory is absent so `cargo test` stays green on
-//! a fresh checkout.
+//! a fresh checkout.  Tests that execute full model HLO additionally
+//! require a live PJRT backend (`--features pjrt` with the real `xla`
+//! crate) and skip under the native fallback runtime; the kernel
+//! cross-check and the manifest-only tests run in every configuration.
 
 use wasi_train::coordinator::{CosineSchedule, FinetuneConfig, Session};
 use wasi_train::data::rng::Pcg64;
@@ -22,10 +25,21 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
     }
 }
 
+/// A runtime able to execute model train/infer HLO, or None (skip).
+fn model_runtime() -> Option<Runtime> {
+    let rt = Runtime::cpu().unwrap();
+    if rt.can_execute_hlo() {
+        Some(rt)
+    } else {
+        eprintln!("integration: model HLO execution needs a live PJRT backend; skipping");
+        None
+    }
+}
+
 #[test]
 fn wasi_train_step_converges() {
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = model_runtime() else { return };
     let manifest = Manifest::load(&dir).unwrap();
     let entry = manifest.model("vit_wasi_eps80").unwrap();
     let mut step = TrainStep::load(&rt, entry).unwrap();
@@ -49,7 +63,7 @@ fn wasi_train_step_converges() {
 #[test]
 fn state_vector_evolves_and_params_change() {
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = model_runtime() else { return };
     let manifest = Manifest::load(&dir).unwrap();
     let entry = manifest.model("vit_wasi_eps80").unwrap();
     let mut step = TrainStep::load(&rt, entry).unwrap();
@@ -67,7 +81,7 @@ fn state_vector_evolves_and_params_change() {
 #[test]
 fn infer_is_deterministic_and_matches_classes() {
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = model_runtime() else { return };
     let manifest = Manifest::load(&dir).unwrap();
     for name in ["vit_vanilla", "vit_wasi_eps80"] {
         let entry = manifest.model(name).unwrap();
@@ -86,7 +100,10 @@ fn infer_is_deterministic_and_matches_classes() {
 fn pallas_kernel_matches_jnp_reference_through_pjrt() {
     // The L1 cross-check executed from L3: the Pallas lowrank kernel HLO
     // and the pure-jnp reference HLO must agree bitwise-closely on the
-    // same inputs.
+    // same inputs.  Only PJRT makes this a true cross-check (it executes
+    // the two distinct HLO programs); under the native backend both
+    // artifacts dispatch to the same reference math, so the run reduces
+    // to a smoke test of the native kernel path.
     let Some(dir) = artifacts_dir() else { return };
     let rt = Runtime::cpu().unwrap();
     let manifest = Manifest::load(&dir).unwrap();
@@ -129,7 +146,7 @@ fn kernel_variant_trains_with_pallas_in_graph() {
     // The vit_wasi_kernel_eps80 artifact has the Pallas kernels lowered
     // INTO the train step — prove the composed stack executes and learns.
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = model_runtime() else { return };
     let manifest = Manifest::load(&dir).unwrap();
     let Ok(entry) = manifest.model("vit_wasi_kernel_eps80") else {
         eprintln!("kernel variant not built; skipping");
@@ -152,6 +169,9 @@ fn kernel_variant_trains_with_pallas_in_graph() {
 #[test]
 fn session_finetune_end_to_end() {
     let Some(dir) = artifacts_dir() else { return };
+    if model_runtime().is_none() {
+        return;
+    }
     let session = Session::open(dir.to_str().unwrap()).unwrap();
     let report = session
         .finetune(&FinetuneConfig {

@@ -1,0 +1,201 @@
+//! Vendored, dependency-free drop-in for the subset of the `anyhow` crate
+//! this workspace uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Exists so the default build needs **zero network access** (the target
+//! environments — edge CI, air-gapped boards — cannot reach crates.io).
+//! The API is call-compatible with real `anyhow` for everything the
+//! `wasi-train` crate does, so swapping back to the crates.io version is
+//! a one-line change in `rust/Cargo.toml`.
+//!
+//! Semantics mirrored from upstream:
+//! * `Display` prints the outermost message; `{:#}` (alternate) prints
+//!   the whole cause chain separated by `: `.
+//! * `Debug` prints the message plus a `Caused by:` list (what
+//!   `unwrap()` / `main() -> Result<()>` show).
+//! * A blanket `From<E: std::error::Error>` lets `?` lift any standard
+//!   error; `Error` itself deliberately does NOT implement
+//!   `std::error::Error` (same coherence trick as upstream).
+
+use std::fmt;
+
+/// Error type: a message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result<T, anyhow::Error>` with the same defaulted form as upstream.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a displayable message (what `anyhow!` calls).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The outermost message (without the cause chain).
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into our own, innermost first.
+        let mut msgs = vec![e.to_string()];
+        let mut cur = e.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        let mut built: Option<Box<Error>> = None;
+        for msg in msgs.into_iter().rev() {
+            built = Some(Box::new(Error { msg, source: built }));
+        }
+        *built.expect("at least one message")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad value {} at {}", 7, "site");
+        assert_eq!(e.to_string(), "bad value 7 at site");
+    }
+
+    #[test]
+    fn question_mark_lifts_std_errors() {
+        fn parse() -> Result<i32> {
+            let n: i32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing thing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u8, std::io::Error> = Ok(1);
+        let v = ok
+            .with_context(|| -> String { panic!("must not evaluate on Ok") })
+            .unwrap();
+        assert_eq!(v, 1);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).is_err());
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+    }
+}

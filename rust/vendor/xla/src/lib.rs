@@ -1,0 +1,129 @@
+//! Offline compile-time stub of the `xla` (PJRT) crate.
+//!
+//! Declares exactly the API surface `wasi-train`'s PJRT client uses —
+//! `PjRtClient`, `PjRtLoadedExecutable`, `PjRtBuffer`, `Literal`,
+//! `HloModuleProto`, `XlaComputation` — so `cargo check --features pjrt`
+//! type-checks the whole PJRT code path without network access or a
+//! libxla toolchain.  Every entry point returns
+//! [`Error::StubUnavailable`] at runtime; to actually execute HLO
+//! artifacts, replace the `xla` path dependency in `rust/Cargo.toml`
+//! with the real crates.io `xla` crate (see the repository README).
+
+use std::path::Path;
+
+const STUB_MSG: &str =
+    "stub xla crate: swap in the real `xla` crate (rust/Cargo.toml) for PJRT execution";
+
+/// Stub error: everything maps to `StubUnavailable`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Error {
+    /// The vendored stub cannot execute anything.
+    StubUnavailable(&'static str),
+}
+
+/// Stub result alias matching the real crate's shape.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::StubUnavailable(STUB_MSG))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Real crate: create a CPU PJRT client.  Stub: always errors, so
+    /// callers fall back to the native runtime.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    /// Platform name of the underlying PJRT device.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments; returns per-device output buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device-resident output buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Host tensor literal (stub).
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    /// Read the literal out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surfaces_errors_not_panics() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
