@@ -11,6 +11,7 @@
 
 use anyhow::Result;
 use wasi_train::coordinator::{FinetuneConfig, Session};
+use wasi_train::engine::EngineKind;
 
 fn main() -> Result<()> {
     let steps: usize = std::env::args()
@@ -18,6 +19,9 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
     let artifacts = std::env::var("WASI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine: EngineKind = std::env::var("WASI_ENGINE")
+        .unwrap_or_else(|_| "auto".into())
+        .parse()?;
     let session = Session::open(&artifacts)?;
 
     let mut summary = Vec::new();
@@ -30,7 +34,10 @@ fn main() -> Result<()> {
             steps,
             seed: 233,
             verbose: true,
+            engine,
+            ..FinetuneConfig::default()
         })?;
+        println!("engine: {}", report.engine);
         println!("\nloss curve ({model}):");
         for (s, l) in &report.loss_curve {
             println!("  step {s:>4}  loss {l:.4}");

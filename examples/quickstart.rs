@@ -6,9 +6,15 @@
 
 use anyhow::Result;
 use wasi_train::coordinator::{FinetuneConfig, Session};
+use wasi_train::engine::EngineKind;
 
 fn main() -> Result<()> {
     let artifacts = std::env::var("WASI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    // WASI_ENGINE=auto|hlo|native (auto falls back to the native
+    // full-model engine when the runtime cannot execute model HLO).
+    let engine: EngineKind = std::env::var("WASI_ENGINE")
+        .unwrap_or_else(|_| "auto".into())
+        .parse()?;
     println!("opening session over {artifacts}/ ...");
     let session = Session::open(&artifacts)?;
     println!("platform: {}", session.runtime.platform());
@@ -21,11 +27,14 @@ fn main() -> Result<()> {
         steps: 30,
         seed: 233,
         verbose: true,
+        engine,
+        ..FinetuneConfig::default()
     };
     println!("\nfine-tuning {} on {} for {} steps ...", cfg.model, cfg.dataset, cfg.steps);
     let report = session.finetune(&cfg)?;
 
     println!("\n=== quickstart report ===");
+    println!("engine                : {}", report.engine);
     println!("final (smoothed) loss : {:.4}", report.final_loss);
     println!("validation accuracy   : {:.3}", report.val_accuracy);
     println!("mean step time        : {:.1} ms", report.mean_step_seconds * 1e3);

@@ -6,7 +6,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::runtime::TrainStep;
+use crate::engine::TrainEngine;
 
 const MAGIC: u32 = 0x5741_5349; // "WASI"
 const VERSION: u32 = 1;
@@ -21,12 +21,13 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    pub fn from_train_step(step: &TrainStep, at_step: u64) -> Checkpoint {
+    /// Snapshot a live engine (either backend) at a step.
+    pub fn from_engine(engine: &dyn TrainEngine, at_step: u64) -> Checkpoint {
         Checkpoint {
-            model: step.entry.name.clone(),
+            model: engine.entry().name.clone(),
             step: at_step,
-            params: step.params.clone(),
-            state: step.state.clone(),
+            params: engine.params().to_vec(),
+            state: engine.state().to_vec(),
         }
     }
 
@@ -82,21 +83,18 @@ impl Checkpoint {
         Ok(Checkpoint { model, step, params, state })
     }
 
-    /// Restore into a live TrainStep (must be the same variant).
-    pub fn restore_into(&self, step: &mut TrainStep) -> Result<()> {
-        if step.entry.name != self.model {
+    /// Restore into a live engine (must be the same variant).
+    pub fn restore_into(&self, engine: &mut dyn TrainEngine) -> Result<()> {
+        if engine.entry().name != self.model {
             return Err(anyhow!(
-                "checkpoint is for {:?}, step is {:?}",
+                "checkpoint is for {:?}, engine is {:?}",
                 self.model,
-                step.entry.name
+                engine.entry().name
             ));
         }
-        if step.params.len() != self.params.len() || step.state.len() != self.state.len() {
-            return Err(anyhow!("checkpoint shape mismatch"));
-        }
-        step.params = self.params.clone();
-        step.state = self.state.clone();
-        Ok(())
+        engine
+            .restore(&self.params, &self.state)
+            .map_err(|e| anyhow!("checkpoint shape mismatch: {e:#}"))
     }
 }
 

@@ -88,6 +88,7 @@ mod tests {
             asi_ranks,
             layer_dims,
             param_spec: Vec::new(),
+            state_spec: Vec::new(),
         }
     }
 

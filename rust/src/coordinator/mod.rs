@@ -14,6 +14,7 @@ pub mod schedule;
 pub mod session;
 pub mod trainer;
 
+pub use checkpoint::Checkpoint;
 pub use schedule::CosineSchedule;
 pub use session::{FinetuneConfig, FinetuneReport, Session};
 pub use trainer::{TrainConfig, Trainer};

@@ -1,14 +1,15 @@
 //! High-level fine-tuning session: dataset + variant + budget -> report.
 //!
 //! This is the public API an application embeds (see examples/): pick a
-//! dataset preset and a model variant, fine-tune under the paper's
-//! recipe, and get back accuracy, loss curve, wallclock, and the memory
-//! breakdown.
+//! dataset preset, a model variant, and an execution engine, fine-tune
+//! under the paper's recipe, and get back accuracy, loss curve,
+//! wallclock, and the memory breakdown.
 
 use anyhow::Result;
 
 use crate::data::synth::VisionTask;
 use crate::data::Loader;
+use crate::engine::EngineKind;
 use crate::runtime::{Manifest, Runtime};
 
 use super::memory::{account, MemoryBreakdown};
@@ -23,6 +24,12 @@ pub struct FinetuneConfig {
     pub steps: usize,
     pub seed: u64,
     pub verbose: bool,
+    /// Initial learning rate of the cosine schedule (paper App. B.1).
+    pub lr0: f32,
+    /// Steps between verbose log lines; `None` = steps/10.
+    pub log_every: Option<usize>,
+    /// Execution engine (`auto` prefers HLO when the runtime can run it).
+    pub engine: EngineKind,
 }
 
 impl Default for FinetuneConfig {
@@ -34,6 +41,9 @@ impl Default for FinetuneConfig {
             steps: 200,
             seed: 233, // the paper's fixed seed (App. B.2)
             verbose: false,
+            lr0: 0.05, // paper App. B.1
+            log_every: None,
+            engine: EngineKind::Auto,
         }
     }
 }
@@ -43,6 +53,8 @@ impl Default for FinetuneConfig {
 pub struct FinetuneReport {
     pub model: String,
     pub dataset: String,
+    /// Engine that actually executed (`"hlo"` / `"native"`).
+    pub engine: &'static str,
     pub final_loss: f64,
     pub val_accuracy: f64,
     pub mean_step_seconds: f64,
@@ -70,18 +82,27 @@ impl Session {
         let entry = self.manifest.model(&cfg.model)?;
         let mut task = VisionTask::preset(&cfg.dataset, cfg.seed)
             .ok_or_else(|| anyhow::anyhow!("unknown dataset preset {:?}", cfg.dataset))?;
-        if task.classes != entry.classes {
-            // Artifacts are compiled for a fixed class count; presets with
-            // more classes are remapped modulo the head size (documented
-            // substitution: the head's class-count is an artifact constant).
-            task = VisionTask::new(&cfg.dataset, entry.classes, 32, 0.7, 8, cfg.seed);
+        if task.classes != entry.classes || task.dim != entry.input_dim {
+            // Artifacts are compiled for a fixed class count and image
+            // size; presets are re-instantiated to match (documented
+            // substitution: the head's class-count and the input
+            // resolution are artifact constants).
+            let side = entry.image_side().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "model {} is not an image model (input_dim {})",
+                    entry.name,
+                    entry.input_dim
+                )
+            })?;
+            task = VisionTask::new(&cfg.dataset, entry.classes, side, 0.7, 8, cfg.seed);
         }
         let mut loader = Loader::from_task(&mut task, cfg.samples, cfg.seed);
         let tcfg = TrainConfig {
             steps: cfg.steps,
-            lr0: 0.05,
-            log_every: (cfg.steps / 10).max(1),
+            lr0: cfg.lr0,
+            log_every: cfg.log_every.unwrap_or((cfg.steps / 10).max(1)),
             verbose: cfg.verbose,
+            engine: cfg.engine,
         };
         let mut trainer = Trainer::new(&self.runtime, entry, tcfg)?;
         trainer.run(&mut loader)?;
@@ -89,6 +110,7 @@ impl Session {
         Ok(FinetuneReport {
             model: cfg.model.clone(),
             dataset: cfg.dataset.clone(),
+            engine: trainer.engine.backend(),
             final_loss: trainer.metrics.smoothed_loss(),
             val_accuracy: val,
             mean_step_seconds: trainer.metrics.mean_step_seconds(),

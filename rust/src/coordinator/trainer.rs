@@ -1,11 +1,14 @@
-//! The training loop: drives an AOT-compiled train step over a Loader.
+//! The training loop: drives a [`TrainEngine`] over a Loader.  The
+//! engine may be the AOT/HLO step or the native full-model engine —
+//! the loop is identical (that is the point of the trait).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::data::loader::Loader;
-use crate::runtime::{InferStep, Runtime, TrainStep};
+use crate::engine::{infer_engine, train_engine, EngineKind, TrainEngine};
+use crate::runtime::Runtime;
 
 use super::metrics::{Metrics, StepRecord};
 use super::schedule::CosineSchedule;
@@ -17,37 +20,50 @@ pub struct TrainConfig {
     pub lr0: f32,
     pub log_every: usize,
     pub verbose: bool,
+    pub engine: EngineKind,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { steps: 200, lr0: 0.05, log_every: 20, verbose: false }
+        TrainConfig {
+            steps: 200,
+            lr0: 0.05,
+            log_every: 20,
+            verbose: false,
+            engine: EngineKind::Auto,
+        }
     }
 }
 
 /// A live trainer for one model variant.
 pub struct Trainer<'rt> {
-    pub step: TrainStep<'rt>,
+    pub engine: Box<dyn TrainEngine + 'rt>,
     pub metrics: Metrics,
     schedule: CosineSchedule,
     cfg: TrainConfig,
 }
 
 impl<'rt> Trainer<'rt> {
-    pub fn new(rt: &'rt Runtime, entry: &crate::runtime::ModelEntry, cfg: TrainConfig) -> Result<Self> {
-        let step = TrainStep::load(rt, entry)?;
+    pub fn new(
+        rt: &'rt Runtime,
+        entry: &crate::runtime::ModelEntry,
+        mut cfg: TrainConfig,
+    ) -> Result<Self> {
+        let engine = train_engine(rt, entry, cfg.engine)?;
         let schedule = CosineSchedule { lr0: cfg.lr0, total: cfg.steps };
-        Ok(Trainer { step, metrics: Metrics::default(), schedule, cfg })
+        // A zero interval would divide by zero in the logging check.
+        cfg.log_every = cfg.log_every.max(1);
+        Ok(Trainer { engine, metrics: Metrics::default(), schedule, cfg })
     }
 
     /// Run the configured number of steps against the loader.
     pub fn run(&mut self, loader: &mut Loader) -> Result<()> {
-        let batch = self.step.entry.batch;
+        let batch = self.engine.entry().batch;
         for s in 0..self.cfg.steps {
             let (x, y) = loader.next_batch(batch);
             let lr = self.schedule.lr(s);
             let t0 = Instant::now();
-            let out = self.step.step(&x, &y, lr)?;
+            let out = self.engine.step(&x, &y, lr)?;
             let dt = t0.elapsed().as_secs_f64();
             self.metrics.push(StepRecord {
                 step: s,
@@ -58,18 +74,26 @@ impl<'rt> Trainer<'rt> {
             });
             if self.cfg.verbose && (s % self.cfg.log_every == 0 || s + 1 == self.cfg.steps) {
                 eprintln!(
-                    "[train {}] step {s:>4} loss {:.4} acc {:.3} lr {:.4} ({:.0} ms)",
-                    self.step.entry.name, out.loss, out.accuracy, lr, dt * 1000.0
+                    "[train {} ({})] step {s:>4} loss {:.4} acc {:.3} lr {:.4} ({:.0} ms)",
+                    self.engine.entry().name,
+                    self.engine.backend(),
+                    out.loss,
+                    out.accuracy,
+                    lr,
+                    dt * 1000.0
                 );
             }
         }
         Ok(())
     }
 
-    /// Validation accuracy via the matching infer artifact.
+    /// Validation accuracy via the inference engine matching the
+    /// backend that actually trained (under `auto` the two could
+    /// otherwise resolve differently, and accuracies are not
+    /// comparable across engines — DESIGN.md §4).
     pub fn validate(&self, rt: &'rt Runtime, loader: &Loader) -> Result<f64> {
-        let infer = InferStep::load(rt, &self.step.entry)?;
-        let batch = self.step.entry.batch;
+        let infer = infer_engine(rt, self.engine.entry(), self.engine.kind())?;
+        let batch = self.engine.entry().batch;
         let n = loader.val_len();
         if n == 0 {
             return Ok(f64::NAN);
@@ -79,7 +103,7 @@ impl<'rt> Trainer<'rt> {
         let mut start = 0usize;
         while seen < n {
             let (x, labels) = loader.val_batch(start, batch);
-            let preds = infer.predict(&self.step.params, &x)?;
+            let preds = infer.predict(self.engine.params(), &x)?;
             let take = batch.min(n - seen);
             for i in 0..take {
                 if preds[i] == labels[i] {

@@ -1,0 +1,372 @@
+//! Pure-rust demo artifact generator: a tiny "pretrained" ViT written
+//! straight into the manifest format, so the default offline build can
+//! fine-tune end to end (`wasi-train demo --out DIR` then
+//! `wasi-train train --artifacts DIR --engine native`) without Python,
+//! JAX, or PJRT anywhere.
+//!
+//! The fixture mirrors `python/compile/aot.py`'s layout: a vanilla
+//! (dense) variant plus a WASI variant whose MLP linears are factored at
+//! explained-variance threshold ε from the *same* base weights, with
+//! ASI warm-start bases in the state vector.  Weights follow the
+//! power-law-spectrum "pretrained" premise (DESIGN.md §3).  No train
+//! HLO is emitted — `--engine auto` therefore routes training to the
+//! native engine in every build configuration — and the (manifest-
+//! required) infer HLO is a stub the native engine never reads.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::rng::Pcg64;
+use crate::linalg::matrix::Mat;
+use crate::linalg::subspace::SubspaceState;
+use crate::runtime::write_f32_file;
+use crate::util::json::{arr, num, str as jstr, Json};
+use crate::wasi::wsi::{powerlaw, WsiFactors};
+
+/// Shape of the generated demo model.
+#[derive(Debug, Clone)]
+pub struct DemoConfig {
+    pub image: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub mlp_ratio: usize,
+    pub classes: usize,
+    pub batch: usize,
+    /// Explained-variance threshold for the WASI variant's factorization.
+    pub eps: f64,
+    pub seed: u64,
+}
+
+impl Default for DemoConfig {
+    fn default() -> Self {
+        DemoConfig {
+            image: 16,
+            patch: 4,
+            dim: 32,
+            depth: 2,
+            mlp_ratio: 2,
+            classes: 10,
+            batch: 8,
+            eps: 0.8,
+            seed: 41,
+        }
+    }
+}
+
+impl DemoConfig {
+    pub fn tokens(&self) -> usize {
+        let g = self.image / self.patch;
+        g * g + 1
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch * self.patch * 3
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.dim * self.mlp_ratio
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.image * self.image * 3
+    }
+}
+
+/// A parameter dict packed exactly like the AOT pipeline packs one:
+/// name-sorted tensors concatenated into a flat f32 vector.
+struct FlatSet {
+    tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl FlatSet {
+    fn new() -> Self {
+        FlatSet { tensors: BTreeMap::new() }
+    }
+
+    fn add(&mut self, name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) {
+        let name = name.into();
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "tensor {name} shape/data mismatch"
+        );
+        self.tensors.insert(name, (shape, data));
+    }
+
+    /// (flat vector, manifest `param_spec`/`state_spec` JSON).
+    fn pack(&self) -> (Vec<f32>, Json) {
+        let mut flat = Vec::new();
+        let mut spec = Vec::new();
+        for (name, (shape, data)) in &self.tensors {
+            spec.push(Json::Obj(BTreeMap::from([
+                ("name".to_string(), jstr(name.clone())),
+                ("shape".to_string(), arr(shape.iter().map(|&d| num(d as f64)))),
+                ("offset".to_string(), num(flat.len() as f64)),
+            ])));
+            flat.extend_from_slice(data);
+        }
+        (flat, arr(spec))
+    }
+}
+
+/// Base "pretrained" dense parameter set (shared by both variants).
+fn base_params(cfg: &DemoConfig) -> FlatSet {
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut p = FlatSet::new();
+    let d = cfg.dim;
+    let mut seed = cfg.seed.wrapping_mul(977);
+    let mut next_seed = || {
+        seed = seed.wrapping_add(1);
+        seed
+    };
+    let mut linear = |p: &mut FlatSet, name: &str, o: usize, i: usize| {
+        p.add(format!("{name}.w"), vec![o, i], powerlaw(o, i, 0.8, next_seed()).data);
+        p.add(format!("{name}.b"), vec![o], vec![0.0; o]);
+    };
+    linear(&mut p, "embed", d, cfg.patch_dim());
+    p.add("cls", vec![1, 1, d], rng.normal_vec(d).iter().map(|v| 0.02 * v).collect());
+    p.add(
+        "pos",
+        vec![1, cfg.tokens(), d],
+        rng.normal_vec(cfg.tokens() * d).iter().map(|v| 0.02 * v).collect(),
+    );
+    for b in 0..cfg.depth {
+        linear(&mut p, &format!("blocks.{b}.attn.qkv"), 3 * d, d);
+        linear(&mut p, &format!("blocks.{b}.attn.proj"), d, d);
+        linear(&mut p, &format!("blocks.{b}.mlp.fc1"), cfg.hidden(), d);
+        linear(&mut p, &format!("blocks.{b}.mlp.fc2"), d, cfg.hidden());
+        for ln in ["ln1", "ln2"] {
+            p.add(format!("blocks.{b}.{ln}.g"), vec![d], vec![1.0; d]);
+            p.add(format!("blocks.{b}.{ln}.b"), vec![d], vec![0.0; d]);
+        }
+    }
+    p.add("norm.g", vec![d], vec![1.0; d]);
+    p.add("norm.b", vec![d], vec![0.0; d]);
+    linear(&mut p, "head", cfg.classes, d);
+    p
+}
+
+struct Variant {
+    name: String,
+    params: FlatSet,
+    state: FlatSet,
+    eps: Option<f64>,
+    weight_ranks: BTreeMap<String, usize>,
+    asi_ranks: BTreeMap<String, Vec<usize>>,
+    layer_dims: BTreeMap<String, (Vec<usize>, Vec<usize>)>,
+}
+
+/// Factor the MLP linears of the base set at ε (the WASI variant).
+fn wasi_variant(cfg: &DemoConfig, base: &FlatSet) -> Variant {
+    let mut params = FlatSet::new();
+    let mut state = FlatSet::new();
+    let mut weight_ranks = BTreeMap::new();
+    let mut asi_ranks = BTreeMap::new();
+    let mut layer_dims = BTreeMap::new();
+    let t = cfg.tokens();
+    let mut seed = cfg.seed.wrapping_mul(31);
+    for (name, (shape, data)) in &base.tensors {
+        let factored = name.contains(".mlp.fc") && name.ends_with(".w");
+        if !factored {
+            params.add(name.clone(), shape.clone(), data.clone());
+            continue;
+        }
+        let prefix = name.trim_end_matches(".w").to_string();
+        let (o, i) = (shape[0], shape[1]);
+        let w = Mat::from_vec(o, i, data.clone());
+        let (factors, _) = WsiFactors::init_svd(&w, cfg.eps);
+        let k = factors.k();
+        params.add(format!("{prefix}.l"), vec![o, k], factors.l.data);
+        params.add(format!("{prefix}.r"), vec![k, i], factors.r.data);
+        weight_ranks.insert(prefix.clone(), k);
+        let dims = [cfg.batch, t, i];
+        let ranks = vec![dims[0].min(4), dims[1].min(8), dims[2].min(12)];
+        for (m, (&dm, &rm)) in dims.iter().zip(&ranks).enumerate() {
+            seed = seed.wrapping_add(1);
+            let mut rng = Pcg64::new(seed);
+            let u = SubspaceState::random(dm, rm, &mut rng).u;
+            state.add(format!("{prefix}.u{}", m + 1), vec![dm, rm], u.data);
+        }
+        asi_ranks.insert(prefix.clone(), ranks);
+        layer_dims.insert(prefix.clone(), (vec![o, i], vec![t, i]));
+    }
+    let tag = format!("vit_demo_wasi_eps{}", (cfg.eps * 100.0).round() as usize);
+    Variant {
+        name: tag,
+        params,
+        state,
+        eps: Some(cfg.eps),
+        weight_ranks,
+        asi_ranks,
+        layer_dims,
+    }
+}
+
+fn variant_json(cfg: &DemoConfig, v: &Variant, dir: &Path) -> Result<Json> {
+    let (pflat, pspec) = v.params.pack();
+    let (sflat, sspec) = v.state.pack();
+    let params_file = format!("{}.params.f32", v.name);
+    write_f32_file(dir.join(&params_file), &pflat)?;
+    // No train_hlo on purpose: `--engine auto` then routes BOTH
+    // training and inference to the native engine even on a
+    // PJRT-capable build (the engine selectors' no-train-artifact
+    // rule), instead of compiling a stub.  infer_hlo is a required
+    // manifest key, so a stub file is still written; only a forced
+    // `--engine hlo` ever touches it.
+    let infer_hlo = format!("{}.infer.hlo.txt", v.name);
+    std::fs::write(dir.join(&infer_hlo), "HloModule native_demo_stub\n")
+        .with_context(|| format!("writing {infer_hlo}"))?;
+    let mut m = BTreeMap::from([
+        ("infer_hlo".to_string(), jstr(infer_hlo)),
+        ("params_file".to_string(), jstr(params_file)),
+        ("params_len".to_string(), num(pflat.len() as f64)),
+        ("state_len".to_string(), num(sflat.len() as f64)),
+        ("batch".to_string(), num(cfg.batch as f64)),
+        ("input_dim".to_string(), num(cfg.input_dim() as f64)),
+        ("classes".to_string(), num(cfg.classes as f64)),
+        ("param_spec".to_string(), pspec),
+        ("state_spec".to_string(), sspec),
+    ]);
+    if !sflat.is_empty() {
+        let state_file = format!("{}.state.f32", v.name);
+        write_f32_file(dir.join(&state_file), &sflat)?;
+        m.insert("state_file".to_string(), jstr(state_file));
+    }
+    if let Some(eps) = v.eps {
+        m.insert("eps".to_string(), num(eps));
+    }
+    if !v.weight_ranks.is_empty() {
+        m.insert(
+            "weight_ranks".to_string(),
+            Json::Obj(
+                v.weight_ranks
+                    .iter()
+                    .map(|(k, &r)| (k.clone(), num(r as f64)))
+                    .collect(),
+            ),
+        );
+    }
+    if !v.asi_ranks.is_empty() {
+        m.insert(
+            "asi_ranks".to_string(),
+            Json::Obj(
+                v.asi_ranks
+                    .iter()
+                    .map(|(k, r)| (k.clone(), arr(r.iter().map(|&x| num(x as f64)))))
+                    .collect(),
+            ),
+        );
+    }
+    if !v.layer_dims.is_empty() {
+        m.insert(
+            "layer_dims".to_string(),
+            Json::Obj(
+                v.layer_dims
+                    .iter()
+                    .map(|(k, (oi, act))| {
+                        (
+                            k.clone(),
+                            Json::Obj(BTreeMap::from([
+                                ("out_in".to_string(), arr(oi.iter().map(|&x| num(x as f64)))),
+                                ("act".to_string(), arr(act.iter().map(|&x| num(x as f64)))),
+                            ])),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    Ok(Json::Obj(m))
+}
+
+/// Write a complete demo artifact set (manifest + params/state + stub
+/// HLO) into `dir`.  Returns the generated model names
+/// (vanilla first, then the WASI variant).
+pub fn write_demo_artifacts(dir: impl AsRef<Path>, cfg: &DemoConfig) -> Result<Vec<String>> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let base = base_params(cfg);
+    let wasi = wasi_variant(cfg, &base);
+    let vanilla = Variant {
+        name: "vit_demo_vanilla".into(),
+        params: base,
+        state: FlatSet::new(),
+        eps: None,
+        weight_ranks: BTreeMap::new(),
+        asi_ranks: BTreeMap::new(),
+        layer_dims: BTreeMap::new(),
+    };
+
+    let mut models = BTreeMap::new();
+    let mut names = Vec::new();
+    for v in [&vanilla, &wasi] {
+        models.insert(v.name.clone(), variant_json(cfg, v, dir)?);
+        names.push(v.name.clone());
+    }
+    let manifest = Json::Obj(BTreeMap::from([
+        ("models".to_string(), Json::Obj(models)),
+        ("eps_grid".to_string(), arr([num(cfg.eps)])),
+        (
+            "demo_config".to_string(),
+            Json::Obj(BTreeMap::from([
+                ("image".to_string(), num(cfg.image as f64)),
+                ("patch".to_string(), num(cfg.patch as f64)),
+                ("dim".to_string(), num(cfg.dim as f64)),
+                ("depth".to_string(), num(cfg.depth as f64)),
+                ("classes".to_string(), num(cfg.classes as f64)),
+            ])),
+        ),
+    ]));
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())
+        .with_context(|| format!("writing {}/manifest.json", dir.display()))?;
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn demo_manifest_loads_and_validates() {
+        let dir = std::env::temp_dir().join("wasi_demo_gen_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let names = write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+        assert_eq!(names.len(), 2);
+        let m = Manifest::load(&dir).unwrap();
+        let van = m.model("vit_demo_vanilla").unwrap();
+        assert_eq!(van.input_dim, 16 * 16 * 3);
+        assert_eq!(van.state_len, 0);
+        assert!(van.params_len > 0);
+        let wasi = m.model("vit_demo_wasi_eps80").unwrap();
+        assert!(wasi.state_len > 0);
+        assert!(!wasi.state_spec.is_empty());
+        assert!(!wasi.weight_ranks.is_empty());
+        // Factored variant is strictly smaller than dense on the factored
+        // layers, so total params shrink.
+        assert!(wasi.params_len < van.params_len);
+        // Params load and match their manifest lengths.
+        assert_eq!(van.load_params().unwrap().len(), van.params_len);
+        assert_eq!(wasi.load_state().unwrap().len(), wasi.state_len);
+    }
+
+    #[test]
+    fn demo_generation_is_deterministic() {
+        let d1 = std::env::temp_dir().join("wasi_demo_det_1");
+        let d2 = std::env::temp_dir().join("wasi_demo_det_2");
+        for d in [&d1, &d2] {
+            let _ = std::fs::remove_dir_all(d);
+            write_demo_artifacts(d, &DemoConfig::default()).unwrap();
+        }
+        let p1 = std::fs::read(d1.join("vit_demo_vanilla.params.f32")).unwrap();
+        let p2 = std::fs::read(d2.join("vit_demo_vanilla.params.f32")).unwrap();
+        assert_eq!(p1, p2);
+        let m1 = std::fs::read_to_string(d1.join("manifest.json")).unwrap();
+        let m2 = std::fs::read_to_string(d2.join("manifest.json")).unwrap();
+        assert_eq!(m1, m2);
+    }
+}

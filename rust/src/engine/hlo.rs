@@ -1,0 +1,87 @@
+//! HLO engine: the AOT-compiled train/infer steps behind the engine
+//! traits.  Behavior-preserving wrappers over `runtime::TrainStep` /
+//! `runtime::InferStep` — all compute happens inside the lowered HLO
+//! program, executed by whichever runtime backend is live.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{InferStep, ModelEntry, Runtime, StepOutput, TrainStep};
+
+use super::{EngineKind, InferEngine, TrainEngine};
+
+/// Training through the variant's compiled train-step artifact.
+pub struct HloTrainEngine<'rt> {
+    step: TrainStep<'rt>,
+}
+
+impl<'rt> HloTrainEngine<'rt> {
+    pub fn load(rt: &'rt Runtime, entry: &ModelEntry) -> Result<Self> {
+        Ok(HloTrainEngine { step: TrainStep::load(rt, entry)? })
+    }
+}
+
+impl TrainEngine for HloTrainEngine<'_> {
+    fn entry(&self) -> &ModelEntry {
+        &self.step.entry
+    }
+
+    fn step(&mut self, x: &[f32], y_onehot: &[f32], lr: f32) -> Result<StepOutput> {
+        self.step.step(x, y_onehot, lr)
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.step.params
+    }
+
+    fn state(&self) -> &[f32] {
+        &self.step.state
+    }
+
+    fn restore(&mut self, params: &[f32], state: &[f32]) -> Result<()> {
+        if params.len() != self.step.params.len() || state.len() != self.step.state.len() {
+            return Err(anyhow!(
+                "restore shape mismatch: params {} (want {}), state {} (want {})",
+                params.len(),
+                self.step.params.len(),
+                state.len(),
+                self.step.state.len()
+            ));
+        }
+        self.step.params.copy_from_slice(params);
+        self.step.state.copy_from_slice(state);
+        Ok(())
+    }
+
+    fn backend(&self) -> &'static str {
+        "hlo"
+    }
+
+    fn kind(&self) -> EngineKind {
+        EngineKind::Hlo
+    }
+}
+
+/// Inference through the variant's compiled infer artifact.
+pub struct HloInferEngine<'rt> {
+    step: InferStep<'rt>,
+}
+
+impl<'rt> HloInferEngine<'rt> {
+    pub fn load(rt: &'rt Runtime, entry: &ModelEntry) -> Result<Self> {
+        Ok(HloInferEngine { step: InferStep::load(rt, entry)? })
+    }
+}
+
+impl InferEngine for HloInferEngine<'_> {
+    fn entry(&self) -> &ModelEntry {
+        &self.step.entry
+    }
+
+    fn infer(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        self.step.infer(params, x)
+    }
+
+    fn backend(&self) -> &'static str {
+        "hlo"
+    }
+}

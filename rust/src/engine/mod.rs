@@ -1,0 +1,221 @@
+//! Backend-agnostic execution engines: the one training/inference
+//! surface the coordinator, CLI, eval harness, and examples program
+//! against (DESIGN.md §4).
+//!
+//! Two implementations exist behind the [`TrainEngine`] / [`InferEngine`]
+//! traits:
+//!
+//! * [`HloTrainEngine`] / [`HloInferEngine`] (`hlo` module) — thin
+//!   wrappers over the AOT-compiled HLO steps (`runtime::TrainStep`,
+//!   `runtime::InferStep`), executed through whichever runtime backend
+//!   is live (PJRT, or the native kernel fallback).
+//! * [`NativeModelEngine`] / [`NativeInferEngine`] (`native` module) —
+//!   full-model training in pure rust: the ViT forward/backward is
+//!   reconstructed from the manifest's `param_spec` and chained from the
+//!   `wasi::layer` Dense/WASI layers, so the default (PJRT-free) build
+//!   fine-tunes end to end.
+//!
+//! [`EngineKind`] is the selection policy; `auto` prefers HLO when the
+//! runtime can execute model HLO and falls back to the native engine
+//! otherwise, which is what makes `--engine auto` work identically in
+//! every build configuration.
+
+pub mod demo;
+mod hlo;
+mod native;
+
+use std::str::FromStr;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{ModelEntry, Runtime, StepOutput};
+
+pub use hlo::{HloInferEngine, HloTrainEngine};
+pub use native::{LinearForm, LinearPlan, ModelPlan, NativeInferEngine, NativeModelEngine};
+
+/// One training backend for one model variant.
+///
+/// The contract matches the AOT train step:
+/// `(params, state, x, y_onehot, lr) -> (loss, acc)` with the flat
+/// params/state vectors owned by the engine and readable between steps
+/// (checkpointing, validation, tensor inspection).
+pub trait TrainEngine {
+    /// The manifest entry this engine was built from.
+    fn entry(&self) -> &ModelEntry;
+
+    /// One SGD step on a batch.  `x` is (batch, input_dim) flat,
+    /// `y_onehot` is (batch, classes) flat.
+    fn step(&mut self, x: &[f32], y_onehot: &[f32], lr: f32) -> Result<StepOutput>;
+
+    /// Current flat parameter vector (length `entry().params_len`).
+    fn params(&self) -> &[f32];
+
+    /// Current flat ASI state vector (length `entry().state_len`).
+    fn state(&self) -> &[f32];
+
+    /// Overwrite params/state (checkpoint restore).  Lengths must match.
+    fn restore(&mut self, params: &[f32], state: &[f32]) -> Result<()>;
+
+    /// Slice one named tensor out of the flat parameter vector.  `None`
+    /// for unknown names or specs that overrun the vector (corrupt
+    /// manifest) — never panics.
+    fn tensor(&self, name: &str) -> Option<(&[f32], Vec<usize>)> {
+        let spec = self.entry().param_tensor(name)?.clone();
+        let n = spec.numel();
+        let params = self.params();
+        if spec.offset + n > params.len() {
+            return None;
+        }
+        Some((&params[spec.offset..spec.offset + n], spec.shape))
+    }
+
+    /// Short backend label for logs/reports (`"hlo"` / `"native"`).
+    fn backend(&self) -> &'static str;
+
+    /// The concrete kind this engine implements — lets callers build a
+    /// matching inference engine without string-matching `backend()`.
+    fn kind(&self) -> EngineKind;
+}
+
+/// One inference backend for one model variant:
+/// `(params, x) -> logits`, params supplied explicitly so a live
+/// trainer's parameters can be validated without copies.
+pub trait InferEngine {
+    fn entry(&self) -> &ModelEntry;
+
+    /// Run on a batch with explicit params (usually `TrainEngine::params`).
+    fn infer(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>>;
+
+    /// Argmax labels for a batch (NaN-safe: a diverged run must surface
+    /// as bad accuracy, not a panic).
+    fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<usize>> {
+        let logits = self.infer(params, x)?;
+        let c = self.entry().classes;
+        Ok(logits
+            .chunks(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    fn backend(&self) -> &'static str;
+}
+
+/// Engine selection policy (the CLI's `--engine {auto|hlo|native}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Prefer HLO when the runtime can execute model HLO; fall back to
+    /// the native full-model engine otherwise.
+    #[default]
+    Auto,
+    /// Force the AOT/HLO path (errors without an HLO-capable backend).
+    Hlo,
+    /// Force the pure-rust full-model engine.
+    Native,
+}
+
+impl FromStr for EngineKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<EngineKind> {
+        match s {
+            "auto" => Ok(EngineKind::Auto),
+            "hlo" => Ok(EngineKind::Hlo),
+            "native" => Ok(EngineKind::Native),
+            other => Err(anyhow!(
+                "unknown engine {other:?}; expected auto, hlo, or native"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EngineKind::Auto => "auto",
+            EngineKind::Hlo => "hlo",
+            EngineKind::Native => "native",
+        })
+    }
+}
+
+impl EngineKind {
+    /// Resolve `Auto` against a concrete runtime: HLO when the backend
+    /// can execute model HLO programs, the native engine otherwise.
+    pub fn resolve(self, rt: &Runtime) -> EngineKind {
+        match self {
+            EngineKind::Auto => {
+                if rt.can_execute_hlo() {
+                    EngineKind::Hlo
+                } else {
+                    EngineKind::Native
+                }
+            }
+            k => k,
+        }
+    }
+}
+
+/// Build the selected training engine for one model variant.
+pub fn train_engine<'rt>(
+    rt: &'rt Runtime,
+    entry: &ModelEntry,
+    kind: EngineKind,
+) -> Result<Box<dyn TrainEngine + 'rt>> {
+    // `auto` also falls back to native when the variant ships no train
+    // artifact — the native engine trains from `param_spec` alone.
+    let resolved = match kind {
+        EngineKind::Auto if entry.train_hlo.is_none() => EngineKind::Native,
+        k => k.resolve(rt),
+    };
+    match resolved {
+        EngineKind::Hlo => Ok(Box::new(HloTrainEngine::load(rt, entry)?)),
+        _ => Ok(Box::new(NativeModelEngine::load(entry)?)),
+    }
+}
+
+/// Build the selected inference engine for one model variant.
+pub fn infer_engine<'rt>(
+    rt: &'rt Runtime,
+    entry: &ModelEntry,
+    kind: EngineKind,
+) -> Result<Box<dyn InferEngine + 'rt>> {
+    // Mirror train_engine's rule: a variant shipping no train artifact
+    // is a native-first artifact set (the AOT pipeline always emits
+    // train+infer pairs), so `auto` serves its inference natively too
+    // instead of compiling its placeholder infer HLO.
+    let resolved = match kind {
+        EngineKind::Auto if entry.train_hlo.is_none() => EngineKind::Native,
+        k => k.resolve(rt),
+    };
+    match resolved {
+        EngineKind::Hlo => Ok(Box::new(HloInferEngine::load(rt, entry)?)),
+        _ => Ok(Box::new(NativeInferEngine::load(entry)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!("auto".parse::<EngineKind>().unwrap(), EngineKind::Auto);
+        assert_eq!("hlo".parse::<EngineKind>().unwrap(), EngineKind::Hlo);
+        assert_eq!("native".parse::<EngineKind>().unwrap(), EngineKind::Native);
+        assert!("cuda".parse::<EngineKind>().is_err());
+    }
+
+    #[test]
+    fn auto_resolves_to_native_without_pjrt() {
+        let rt = Runtime::native();
+        assert_eq!(EngineKind::Auto.resolve(&rt), EngineKind::Native);
+        assert_eq!(EngineKind::Hlo.resolve(&rt), EngineKind::Hlo);
+        assert_eq!(EngineKind::Native.resolve(&rt), EngineKind::Native);
+    }
+}

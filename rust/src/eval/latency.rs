@@ -13,18 +13,21 @@ use crate::costmodel::{LayerDims, WasiRanks};
 use crate::device::energy::iteration_energy;
 use crate::device::latency::project_time;
 use crate::device::spec::{device, DeviceSpec};
-use crate::runtime::{InferStep, ModelEntry, TrainStep};
+use crate::engine::{infer_engine, train_engine};
+use crate::runtime::ModelEntry;
 use crate::util::table::Table;
 
 use super::EvalCtx;
 
 /// Measured per-iteration (infer_s, train_s) for a variant.
 pub fn measure_iteration(ctx: &EvalCtx, entry: &ModelEntry, reps: usize) -> Result<(f64, f64)> {
+    // Non-image input dims mean token ids (tinydec artifacts).
+    let side = entry.image_side();
+    let is_seq = side.is_none();
     let mut task = crate::data::synth::VisionTask::new(
-        "bench", entry.classes, 32, 0.7, 8, 233);
-    let is_seq = entry.input_dim < 512; // tinydec artifacts take token ids
-    let mut step = TrainStep::load(&ctx.session.runtime, entry)?;
-    let infer = InferStep::load(&ctx.session.runtime, entry)?;
+        "bench", entry.classes, side.unwrap_or(32), 0.7, 8, 233);
+    let mut step = train_engine(&ctx.session.runtime, entry, ctx.engine)?;
+    let infer = infer_engine(&ctx.session.runtime, entry, ctx.engine)?;
 
     let make_batch = |task: &mut crate::data::synth::VisionTask| -> (Vec<f32>, Vec<f32>) {
         if is_seq {
@@ -40,7 +43,7 @@ pub fn measure_iteration(ctx: &EvalCtx, entry: &ModelEntry, reps: usize) -> Resu
     // Warmup both paths (compilation already cached by Runtime).
     let (x, y) = make_batch(&mut task);
     step.step(&x, &y, 0.01)?;
-    infer.infer(&step.params, &x)?;
+    infer.infer(step.params(), &x)?;
 
     let mut train_t = Vec::new();
     let mut infer_t = Vec::new();
@@ -50,7 +53,7 @@ pub fn measure_iteration(ctx: &EvalCtx, entry: &ModelEntry, reps: usize) -> Resu
         step.step(&x, &y, 0.01)?;
         train_t.push(t0.elapsed().as_secs_f64());
         let t1 = Instant::now();
-        infer.infer(&step.params, &x)?;
+        infer.infer(step.params(), &x)?;
         infer_t.push(t1.elapsed().as_secs_f64());
     }
     Ok((

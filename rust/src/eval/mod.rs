@@ -16,6 +16,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::Session;
+use crate::engine::EngineKind;
 
 /// Shared evaluation context.
 pub struct EvalCtx {
@@ -27,6 +28,8 @@ pub struct EvalCtx {
     /// Samples per synthetic dataset.
     pub samples: usize,
     pub quick: bool,
+    /// Execution engine for the fine-tuning exhibits (`--engine`).
+    pub engine: EngineKind,
 }
 
 impl EvalCtx {
@@ -38,7 +41,14 @@ impl EvalCtx {
             steps,
             samples: if quick { 256 } else { 512 },
             quick,
+            engine: EngineKind::Auto,
         })
+    }
+
+    /// Select the execution engine for model exhibits.
+    pub fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
     }
 
     pub fn save(&self, name: &str, body: &str) -> Result<()> {

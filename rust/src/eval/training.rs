@@ -9,9 +9,10 @@ use crate::coordinator::memory::{account, vanilla_activations};
 use crate::coordinator::{FinetuneConfig, FinetuneReport};
 use crate::costmodel::layer_specs::{tinyllama, vit_b16};
 use crate::costmodel::{LayerDims, WasiRanks};
+use crate::engine::train_engine;
 use crate::linalg::matrix::Mat;
 use crate::linalg::svd::svd;
-use crate::runtime::{ModelEntry, TrainStep};
+use crate::runtime::ModelEntry;
 use crate::util::table::{si, Table};
 
 use super::analytic::paper_scale_ranks;
@@ -25,6 +26,8 @@ fn finetune(ctx: &EvalCtx, model: &str, dataset: &str, seed: u64) -> Result<Fine
         steps: ctx.steps,
         seed,
         verbose: false,
+        engine: ctx.engine,
+        ..FinetuneConfig::default()
     })
 }
 
@@ -57,7 +60,7 @@ fn measured_axes(entry: &ModelEntry) -> (f64, f64) {
 /// Fig. 3a: singular-value / rank stability across fine-tuning.
 pub fn fig3a(ctx: &EvalCtx) -> Result<String> {
     let entry = ctx.session.manifest.model("vit_vanilla")?;
-    let mut step = TrainStep::load(&ctx.session.runtime, entry)?;
+    let mut step = train_engine(&ctx.session.runtime, entry, ctx.engine)?;
     let task = crate::data::synth::VisionTask::preset("pets-like", 233).unwrap();
     let mut task = if task.classes != entry.classes {
         crate::data::synth::VisionTask::new("pets-like", entry.classes, 32, 0.6, 10, 233)
@@ -70,7 +73,10 @@ pub fn fig3a(ctx: &EvalCtx) -> Result<String> {
     let sched = crate::coordinator::CosineSchedule::paper_default(snapshots * steps_per);
 
     let mut t = Table::new(["snapshot", "K(eps=0.8)", "s1", "s2", "s3", "s4", "s8"])
-        .title(format!("Fig 3a — spectrum of {layer} while fine-tuning (vanilla HLO run)"));
+        .title(format!(
+            "Fig 3a — spectrum of {layer} while fine-tuning (vanilla, {} engine)",
+            step.backend()
+        ));
     let mut ranks = Vec::new();
     for snap in 0..snapshots {
         if snap > 0 {
@@ -272,7 +278,7 @@ pub fn fig7(ctx: &EvalCtx) -> Result<String> {
         let entry = ctx.session.manifest.model(name)?;
         // sequence task batches
         let mut task = crate::data::synth::SequenceTask::new(256, entry.input_dim, 233);
-        let mut step = TrainStep::load(&ctx.session.runtime, entry)?;
+        let mut step = train_engine(&ctx.session.runtime, entry, ctx.engine)?;
         let sched = crate::coordinator::CosineSchedule::paper_default(ctx.steps);
         let mut accs = Vec::new();
         let t0 = std::time::Instant::now();

@@ -10,6 +10,13 @@
 //!   native per-layer engine, baselines, cost model, device simulator,
 //!   and the evaluation harness regenerating every paper table/figure.
 //!
+//! Training and inference execute behind the [`engine::TrainEngine`] /
+//! [`engine::InferEngine`] traits with two implementations: the
+//! AOT/HLO engine over the artifact runtime, and the pure-rust
+//! [`engine::NativeModelEngine`] that reconstructs the model from the
+//! manifest's `param_spec` — so the default build fine-tunes end to
+//! end with no compiler runtime (`--engine {auto|hlo|native}`).
+//!
 //! The artifact runtime ([`runtime::Runtime`]) has two backends behind
 //! one surface: a PJRT client over the `xla` crate (cargo feature
 //! `pjrt`, off by default) and an always-available pure-rust
@@ -19,12 +26,25 @@
 //! See `DESIGN.md` (repository root) for the architecture and
 //! `EXPERIMENTS.md` for the paper-vs-measured record.
 
+// Style allowances for the whole crate: index loops intentionally
+// mirror the paper's equations (clippy would rewrite them into
+// iterator chains that obscure the math), and the numeric code uses
+// the paper's single-letter tensor names.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::type_complexity,
+    clippy::new_without_default
+)]
+
 pub mod baselines;
 pub mod bench;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
 pub mod device;
+pub mod engine;
 pub mod eval;
 pub mod linalg;
 pub mod runtime;

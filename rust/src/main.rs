@@ -9,10 +9,12 @@
 //!   cost-model  print the Fig. 2 analytic sweep
 //!   calibrate   measure this host's GFLOP/s + bandwidth
 //!   list        list artifact model variants
+//!   demo        generate a tiny pure-rust artifact set (no Python/PJRT)
 
 use anyhow::{anyhow, Result};
 
 use wasi_train::coordinator::{FinetuneConfig, Session};
+use wasi_train::engine::{self, EngineKind};
 use wasi_train::eval::{self, EvalCtx};
 use wasi_train::util::cli::Args;
 use wasi_train::util::table::Table;
@@ -25,12 +27,32 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: wasi-train <train|infer|plan-ranks|eval|cost-model|calibrate|list> [options]\n\
-     common options: --artifacts DIR (default: artifacts)\n\
-     train:      --model NAME --dataset PRESET --steps N --samples N --seed S\n\
-     plan-ranks: --budget-kb N | --eps E\n\
-     eval:       <exhibit|all> --steps N --out DIR [--quick]\n"
-        .to_string()
+    [
+        "usage: wasi-train <train|infer|plan-ranks|eval|cost-model|calibrate|list|demo> [options]",
+        "common options:",
+        "  --artifacts DIR   artifact directory (default: artifacts)",
+        "  --engine KIND     execution engine: auto|hlo|native (default: auto;",
+        "                    auto prefers HLO when the runtime can execute model",
+        "                    HLO and falls back to the native engine otherwise)",
+        "train:      --model NAME --dataset PRESET --steps N --samples N --seed S",
+        "            --lr LR0 (cosine schedule start, default 0.05)",
+        "            --save-curve FILE (write the loss curve as JSON)",
+        "            --silent (suppress per-step progress lines)",
+        "infer:      --model NAME --seed S (batch accuracy with initial params;",
+        "            works on infer-only variants, no train artifact needed)",
+        "plan-ranks: --budget-kb N | --eps E",
+        "eval:       <exhibit|all> --steps N --out DIR [--quick]",
+        "demo:       --out DIR (default: demo_artifacts) -- tiny ViT manifest +",
+        "            params generated in pure rust, so train/infer run offline:",
+        "            wasi-train demo --out D && wasi-train train --artifacts D \
+--engine native --model vit_demo_wasi_eps80",
+        "",
+    ]
+    .join("\n")
+}
+
+fn engine_kind(args: &Args) -> Result<EngineKind> {
+    args.get_or("engine", "auto").parse()
 }
 
 fn run() -> Result<()> {
@@ -39,6 +61,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args, &artifacts),
         Some("infer") => cmd_infer(&args, &artifacts),
+        Some("demo") => cmd_demo(&args),
         Some("plan-ranks") => cmd_plan_ranks(&args, &artifacts),
         Some("eval") => cmd_eval(&args, &artifacts),
         Some("cost-model") => {
@@ -87,6 +110,9 @@ fn run() -> Result<()> {
 }
 
 fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
+    // Validate flag values before touching the manifest so a typo'd
+    // --engine fails with its own message.
+    let engine = engine_kind(args)?;
     let session = Session::open(artifacts)?;
     let cfg = FinetuneConfig {
         model: args.get_or("model", "vit_wasi_eps80").to_string(),
@@ -95,9 +121,15 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         steps: args.usize_or("steps", 200)?,
         seed: args.usize_or("seed", 233)? as u64,
         verbose: !args.flag("silent"),
+        lr0: args.f64_or("lr", 0.05)? as f32,
+        log_every: None,
+        engine,
     };
     let report = session.finetune(&cfg)?;
-    println!("\nmodel {}  dataset {}", report.model, report.dataset);
+    println!(
+        "\nmodel {}  dataset {}  engine {}",
+        report.model, report.dataset, report.engine
+    );
     println!("val accuracy     {:.3}", report.val_accuracy);
     println!("final loss (ema) {:.4}", report.final_loss);
     println!("mean step        {:.1} ms", report.mean_step_seconds * 1e3);
@@ -119,14 +151,39 @@ fn cmd_infer(args: &Args, artifacts: &str) -> Result<()> {
     let session = Session::open(artifacts)?;
     let name = args.get_or("model", "vit_wasi_eps80");
     let entry = session.manifest.model(name)?;
-    let step = wasi_train::runtime::TrainStep::load(&session.runtime, entry)?;
-    let infer = wasi_train::runtime::InferStep::load(&session.runtime, entry)?;
+    // Initial params come straight off the manifest entry — inference
+    // must never require a train artifact (infer-only variants).
+    let params = entry.load_params()?;
+    let infer = engine::infer_engine(&session.runtime, entry, engine_kind(args)?)?;
+    let side = entry.image_side().ok_or_else(|| {
+        anyhow!("model {name} is not an image model (input_dim {})", entry.input_dim)
+    })?;
     let mut task = wasi_train::data::synth::VisionTask::new(
-        "infer", entry.classes, 32, 0.7, 8, args.usize_or("seed", 233)? as u64);
+        "infer", entry.classes, side, 0.7, 8, args.usize_or("seed", 233)? as u64);
     let (x, _, labels) = task.batch_onehot(entry.batch);
-    let preds = infer.predict(&step.params, &x)?;
+    let preds = infer.predict(&params, &x)?;
     let correct = preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
-    println!("batch accuracy (pre-finetune): {}/{}", correct, entry.batch);
+    println!(
+        "batch accuracy (pre-finetune, {} engine): {}/{}",
+        infer.backend(),
+        correct,
+        entry.batch
+    );
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "demo_artifacts");
+    let cfg = wasi_train::engine::demo::DemoConfig::default();
+    let names = wasi_train::engine::demo::write_demo_artifacts(out, &cfg)?;
+    println!("demo artifacts -> {out}/manifest.json");
+    for n in &names {
+        println!("  model {n}");
+    }
+    println!(
+        "try: wasi-train train --artifacts {out} --engine native --model {} --steps 50",
+        names.last().unwrap()
+    );
     Ok(())
 }
 
@@ -181,7 +238,7 @@ fn cmd_eval(args: &Args, artifacts: &str) -> Result<()> {
     let quick = args.flag("quick");
     let steps = args.usize_or("steps", if quick { 60 } else { 150 })?;
     let out_dir = args.get_or("out", "eval_out");
-    let ctx = EvalCtx::open(artifacts, out_dir, steps, quick)?;
+    let ctx = EvalCtx::open(artifacts, out_dir, steps, quick)?.with_engine(engine_kind(args)?);
     let body = if exhibit == "all" {
         eval::run_all(&ctx)?
     } else {

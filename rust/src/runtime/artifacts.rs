@@ -44,6 +44,65 @@ pub struct ModelEntry {
     /// name -> ((O, I), activation dims) for factored layers.
     pub layer_dims: BTreeMap<String, (Vec<usize>, Vec<usize>)>,
     pub param_spec: Vec<TensorSpec>,
+    /// Flat layout of the ASI warm-start state vector (`{layer}.u{m}`
+    /// bases); empty for vanilla variants.
+    pub state_spec: Vec<TensorSpec>,
+}
+
+impl ModelEntry {
+    /// Load the variant's initial flat parameter vector, validating the
+    /// manifest length.  This is the params path for inference and the
+    /// native engine — it never requires a train artifact.
+    pub fn load_params(&self) -> Result<Vec<f32>> {
+        let params = read_f32_file(&self.params_file)?;
+        if params.len() != self.params_len {
+            return Err(anyhow!(
+                "model {}: params length {} != manifest {}",
+                self.name,
+                params.len(),
+                self.params_len
+            ));
+        }
+        Ok(params)
+    }
+
+    /// Load the variant's initial ASI state vector (empty when the
+    /// variant carries no state file).
+    pub fn load_state(&self) -> Result<Vec<f32>> {
+        let state = match &self.state_file {
+            Some(p) => read_f32_file(p)?,
+            None => Vec::new(),
+        };
+        if state.len() != self.state_len {
+            return Err(anyhow!(
+                "model {}: state length {} != manifest {}",
+                self.name,
+                state.len(),
+                self.state_len
+            ));
+        }
+        Ok(state)
+    }
+
+    /// Look up one tensor's spec in the flat parameter layout.
+    pub fn param_tensor(&self, name: &str) -> Option<&TensorSpec> {
+        self.param_spec.iter().find(|t| t.name == name)
+    }
+
+    /// Edge length of the square RGB input this variant was compiled
+    /// for, or `None` when `input_dim` is not `side² · 3` (sequence
+    /// variants take token ids, not images).  The one place this
+    /// arithmetic lives, shared by the session's dataset
+    /// re-instantiation, the CLI's infer path, and the latency sweeps.
+    ///
+    /// Known limit: a sequence variant whose seq length happens to be
+    /// `3·s²` (48, 108, 192, …) would be misclassified; none of the
+    /// current model families hit this.  A dedicated manifest input-kind
+    /// field is the clean fix once the AOT pipeline emits one.
+    pub fn image_side(&self) -> Option<usize> {
+        let side = ((self.input_dim / 3) as f64).sqrt().round() as usize;
+        (side > 0 && side * side * 3 == self.input_dim).then_some(side)
+    }
 }
 
 /// A micro-kernel artifact for the L1 benches.
@@ -132,6 +191,11 @@ impl Manifest {
                     layer_dims,
                     param_spec: m
                         .get("param_spec")
+                        .map(tensor_specs)
+                        .transpose()?
+                        .unwrap_or_default(),
+                    state_spec: m
+                        .get("state_spec")
                         .map(tensor_specs)
                         .transpose()?
                         .unwrap_or_default(),

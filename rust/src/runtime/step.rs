@@ -7,7 +7,7 @@
 
 use anyhow::{anyhow, Result};
 
-use super::artifacts::{read_f32_file, ModelEntry};
+use super::artifacts::ModelEntry;
 use super::{Executable, Runtime};
 
 /// Output of one training step.
@@ -33,18 +33,8 @@ impl<'rt> TrainStep<'rt> {
             .as_ref()
             .ok_or_else(|| anyhow!("model {} has no train artifact", entry.name))?;
         let exe = rt.load(hlo)?;
-        let params = read_f32_file(&entry.params_file)?;
-        if params.len() != entry.params_len {
-            return Err(anyhow!(
-                "params length {} != manifest {}",
-                params.len(),
-                entry.params_len
-            ));
-        }
-        let state = match &entry.state_file {
-            Some(p) => read_f32_file(p)?,
-            None => Vec::new(),
-        };
+        let params = entry.load_params()?;
+        let state = entry.load_state()?;
         Ok(TrainStep { exe, entry: entry.clone(), params, state })
     }
 

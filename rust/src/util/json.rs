@@ -103,12 +103,8 @@ impl Json {
     }
 
     // -- writer --------------------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
+    // Serialization goes through `Display`, so `.to_string()` keeps
+    // working at every call site via the blanket `ToString` impl.
 
     fn write(&self, out: &mut String) {
         match self {
@@ -145,6 +141,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -37,8 +37,11 @@ fn no_subcommand_prints_usage() {
     assert!(out.status.success(), "stderr: {}", stderr(&out));
     let s = stdout(&out);
     assert!(s.contains("usage: wasi-train"), "{s}");
-    for sub in ["train", "infer", "plan-ranks", "eval", "cost-model", "calibrate", "list"] {
+    for sub in ["train", "infer", "plan-ranks", "eval", "cost-model", "calibrate", "list", "demo"] {
         assert!(s.contains(sub), "usage must mention {sub}: {s}");
+    }
+    for opt in ["--engine", "--lr", "--save-curve", "--silent", "infer:"] {
+        assert!(s.contains(opt), "usage must document {opt}: {s}");
     }
 }
 
@@ -94,4 +97,80 @@ fn train_without_artifacts_fails_gracefully() {
     let out = run(&["train", "--steps", "1", "--artifacts", &missing_artifacts_flagval()]);
     assert!(!out.status.success());
     assert!(stderr(&out).contains("error:"));
+}
+
+#[test]
+fn train_rejects_unknown_engine() {
+    let out = run(&["train", "--engine", "cuda", "--artifacts", &missing_artifacts_flagval()]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown engine"), "{}", stderr(&out));
+}
+
+/// The PJRT-free acceptance path: `demo` generates artifacts in pure
+/// rust, then `train --engine native` completes a full fine-tune with a
+/// decreasing loss and a printed report — no Python, no HLO execution.
+#[test]
+fn demo_then_native_train_full_finetune() {
+    let dir = std::env::temp_dir().join("wasi_cli_demo_e2e");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_string_lossy().into_owned();
+    let out = run(&["demo", "--out", &dirs]);
+    assert!(out.status.success(), "demo failed: {}", stderr(&out));
+    assert!(stdout(&out).contains("manifest.json"), "{}", stdout(&out));
+
+    let curve = dir.join("curve.json").to_string_lossy().into_owned();
+    let out = run(&[
+        "train", "--artifacts", &dirs, "--engine", "native",
+        "--model", "vit_demo_wasi_eps80", "--dataset", "cifar10-like",
+        "--steps", "60", "--samples", "64", "--lr", "0.1", "--silent",
+        "--save-curve", &curve,
+    ]);
+    assert!(out.status.success(), "train failed: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("engine native"), "{s}");
+    assert!(s.contains("val accuracy"), "{s}");
+    assert!(s.contains("final loss"), "{s}");
+
+    // Loss must decrease across the saved curve.
+    let json = std::fs::read_to_string(dir.join("curve.json")).unwrap();
+    let losses: Vec<f32> = json
+        .split("\"loss\":")
+        .skip(1)
+        .map(|chunk| {
+            chunk
+                .split(|c: char| c == ',' || c == '}')
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap()
+        })
+        .collect();
+    assert!(losses.len() >= 10, "{json}");
+    let n = losses.len().min(8);
+    let head: f32 = losses[..n].iter().sum::<f32>() / n as f32;
+    let tail: f32 = losses[losses.len() - n..].iter().sum::<f32>() / n as f32;
+    assert!(tail < head, "loss must fall under the native engine: {losses:?}");
+}
+
+#[test]
+fn infer_runs_without_train_artifact() {
+    // Demo variants ship no train HLO at all, so they exercise exactly
+    // the infer-only path: inference must work without ever touching a
+    // train artifact (the params path no longer goes through
+    // TrainStep::load).
+    let dir = std::env::temp_dir().join("wasi_cli_infer_only");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_string_lossy().into_owned();
+    assert!(run(&["demo", "--out", &dirs]).status.success());
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    assert!(!manifest.contains("train_hlo"), "demo must be train-artifact-free");
+
+    let out = run(&["list", "--artifacts", &dirs]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("infer-only"), "{}", stdout(&out));
+
+    let out = run(&["infer", "--artifacts", &dirs, "--engine", "native",
+                    "--model", "vit_demo_vanilla"]);
+    assert!(out.status.success(), "infer-only inference failed: {}", stderr(&out));
+    assert!(stdout(&out).contains("batch accuracy"), "{}", stdout(&out));
 }

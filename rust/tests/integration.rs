@@ -181,6 +181,7 @@ fn session_finetune_end_to_end() {
             steps: 12,
             seed: 233,
             verbose: false,
+            ..FinetuneConfig::default()
         })
         .unwrap();
     assert!(report.final_loss.is_finite());
