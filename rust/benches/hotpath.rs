@@ -57,12 +57,29 @@ fn native_layer_benches(results: &mut Vec<BenchResult>) {
 }
 
 fn linalg_benches(results: &mut Vec<BenchResult>) {
+    use wasi_train::util::threadpool::{num_threads, set_num_threads};
+
     let mut rng = Pcg64::new(7);
     let a256 = Mat::random(256, 256, &mut rng);
     let b256 = Mat::random(256, 256, &mut rng);
     results.push(bench("matmul 256x256x256", 1.0, || {
         let _ = a256.matmul(&b256);
     }));
+
+    // Kernel-layer thread sweep (results are bit-identical across
+    // counts — this measures the wall-clock win only).
+    let a512 = Mat::random(512, 512, &mut rng);
+    let b512 = Mat::random(512, 512, &mut rng);
+    set_num_threads(1);
+    results.push(bench("matmul 512x512x512 threads=1", 1.0, || {
+        let _ = a512.matmul(&b512);
+    }));
+    set_num_threads(0);
+    results.push(
+        bench(&format!("matmul 512x512x512 threads=auto({})", num_threads()), 1.0, || {
+            let _ = a512.matmul(&b512);
+        }),
+    );
     let tall = Mat::random(512, 32, &mut rng);
     results.push(bench("gram_schmidt 512x32", 0.5, || {
         let _ = gram_schmidt(&tall);
@@ -93,7 +110,7 @@ fn linalg_benches(results: &mut Vec<BenchResult>) {
 /// alternative to GS; mirrors python/compile/ops.py::orthogonalize_ns.
 fn newton_schulz(a: &Mat, steps: usize) -> Mat {
     let norm1 = (0..a.cols)
-        .map(|j| a.col(j).iter().map(|x| x.abs()).sum::<f32>())
+        .map(|j| a.col_view(j).iter().map(|x| x.abs()).sum::<f32>())
         .fold(0.0f32, f32::max);
     let norminf = (0..a.rows)
         .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())

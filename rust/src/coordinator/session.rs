@@ -30,6 +30,10 @@ pub struct FinetuneConfig {
     pub log_every: Option<usize>,
     /// Execution engine (`auto` prefers HLO when the runtime can run it).
     pub engine: EngineKind,
+    /// Kernel-layer worker threads (`None` = leave the process-global
+    /// setting alone; `Some(0)` = auto-detect).  Results are
+    /// bit-identical across thread counts — this trades wall-clock only.
+    pub threads: Option<usize>,
 }
 
 impl Default for FinetuneConfig {
@@ -44,6 +48,7 @@ impl Default for FinetuneConfig {
             lr0: 0.05, // paper App. B.1
             log_every: None,
             engine: EngineKind::Auto,
+            threads: None,
         }
     }
 }
@@ -79,6 +84,9 @@ impl Session {
 
     /// Fine-tune one variant on one dataset preset; returns the report.
     pub fn finetune(&self, cfg: &FinetuneConfig) -> Result<FinetuneReport> {
+        if let Some(t) = cfg.threads {
+            crate::util::threadpool::set_num_threads(t);
+        }
         let entry = self.manifest.model(&cfg.model)?;
         let mut task = VisionTask::preset(&cfg.dataset, cfg.seed)
             .ok_or_else(|| anyhow::anyhow!("unknown dataset preset {:?}", cfg.dataset))?;

@@ -1,0 +1,1492 @@
+//! The native layer-graph IR (DESIGN.md §4): plan-then-execute.
+//!
+//! **Plan** — [`ModelPlan::from_entry`] parses a manifest entry's flat
+//! `param_spec` back into the ViT-tiny architecture the AOT pipeline
+//! lowered (patch embed → CLS/pos → transformer blocks → final norm →
+//! head) and refuses any tensor name it does not recognize — a
+//! wrong-model manifest fails loudly instead of training garbage.
+//! [`LayerGraph::from_plan`] then emits the typed node program
+//! (`ops::Op` forward chain + `ops::UpdateOp` optimizer program) once.
+//!
+//! **Execute** — [`GraphExecutor`] resolves every node to concrete
+//! tensor offsets at construction (no per-step name formatting or map
+//! lookups) and runs forward/backward/update straight against the flat
+//! parameter vector through the shared kernel layer
+//! (`linalg::kernels`): weights are never copied into per-layer
+//! structs, dense weight gradients are GEMM'd directly into the flat
+//! gradient vector, and bias adds are fused into the GEMM epilogue.
+//! Per-node wallclock is accumulated when profiling is on, which is
+//! what `eval::latency::node_attribution` and `wasi-train bench` tag
+//! instead of re-deriving shapes.
+//!
+//! **Documented substitution (DESIGN.md §4):** inside each block the
+//! softmax attention matrix is replaced by the fixed doubly-stochastic
+//! mixing `(I + 11ᵀ/T)/2` applied to the value path
+//! (`qkv → v → mix → proj`) — an attention-shaped dense stack.  The
+//! trainable linears, their shapes, the residual structure, the
+//! activation-memory profile, and the patch→CLS information flow are
+//! identical to the lowered model; only the mixing weights (which the
+//! softmax computes from q/k and which carry no trainable parameters of
+//! their own) are fixed, so the q/k columns of `qkv.w` receive zero
+//! gradient.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::linalg::kernels::{self, Epilogue};
+use crate::linalg::matrix::Mat;
+use crate::linalg::tucker::Tensor;
+use crate::runtime::{ModelEntry, TensorSpec};
+use crate::wasi::asi::{AsiCompressor, CompressedActivation};
+use crate::wasi::lowrank_grad::lowrank_grad_3d;
+use crate::wasi::wsi::WsiFactors;
+
+use super::ops::{self, Op, UpdateOp};
+
+/// Mirrors the AOT pipeline's training hyperparameters
+/// (`python/compile/train.py`): global-norm clip and decoupled weight
+/// decay on `.w`/`.l`/`.r` tensors only.
+const GRAD_CLIP: f32 = 2.0;
+const WEIGHT_DECAY: f32 = 1e-4;
+
+// ---------------------------------------------------------------------------
+// Plan: param_spec -> architecture
+// ---------------------------------------------------------------------------
+
+/// How one linear layer is parameterized in the flat vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LinearForm {
+    /// `{prefix}.w` (O, I)
+    Dense,
+    /// `{prefix}.l` (O, K) + `{prefix}.r` (K, I)
+    Factored { k: usize },
+}
+
+/// One linear layer recovered from the spec.
+#[derive(Debug, Clone)]
+pub struct LinearPlan {
+    pub name: String,
+    pub form: LinearForm,
+    pub out_dim: usize,
+    pub in_dim: usize,
+}
+
+/// The ViT architecture reconstructed from a manifest entry's
+/// `param_spec` (see `python/compile/model.py::init_vit` for the
+/// authoritative naming).
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    pub dim: usize,
+    pub depth: usize,
+    pub tokens: usize,
+    pub patch: usize,
+    pub image: usize,
+    pub patch_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    /// Per block: qkv, proj, fc1, fc2.
+    pub blocks: Vec<[LinearPlan; 4]>,
+    specs: BTreeMap<String, TensorSpec>,
+}
+
+fn isqrt(n: usize) -> Option<usize> {
+    let r = (n as f64).sqrt().round() as usize;
+    (r * r == n).then_some(r)
+}
+
+impl ModelPlan {
+    /// Parse a `param_spec` back into the ViT layer graph.  Every tensor
+    /// name must be accounted for; unknown names (SwinLite stages,
+    /// TinyDec token embeddings, corrupt specs) are refused.
+    pub fn from_entry(entry: &ModelEntry) -> Result<ModelPlan> {
+        if entry.param_spec.is_empty() {
+            bail!(
+                "model {}: manifest entry has no param_spec; the native \
+                 engine cannot reconstruct the layer graph",
+                entry.name
+            );
+        }
+        let mut specs = BTreeMap::new();
+        for t in &entry.param_spec {
+            if t.offset + t.numel() > entry.params_len {
+                bail!(
+                    "model {}: tensor {} [{:?} @ {}] overruns params_len {}",
+                    entry.name, t.name, t.shape, t.offset, entry.params_len
+                );
+            }
+            if specs.insert(t.name.clone(), t.clone()).is_some() {
+                bail!("model {}: duplicate param_spec tensor {}", entry.name, t.name);
+            }
+        }
+        let get = |name: &str| -> Result<&TensorSpec> {
+            specs.get(name).ok_or_else(|| {
+                anyhow!("model {}: param_spec is missing tensor {name:?}", entry.name)
+            })
+        };
+
+        // Fixed scaffolding tensors.
+        let embed = get("embed.w")?;
+        if embed.shape.len() != 2 {
+            bail!("embed.w must be (D, patch_dim), got {:?}", embed.shape);
+        }
+        let (dim, patch_dim) = (embed.shape[0], embed.shape[1]);
+        let pos = get("pos")?;
+        if pos.shape.len() != 3 || pos.shape[0] != 1 || pos.shape[2] != dim {
+            bail!("pos must be (1, tokens, {dim}), got {:?}", pos.shape);
+        }
+        let tokens = pos.shape[1];
+        if tokens < 2 {
+            bail!("pos token count {tokens} too small for CLS + patches");
+        }
+        let cls = get("cls")?;
+        if cls.shape != [1, 1, dim] {
+            bail!("cls must be (1, 1, {dim}), got {:?}", cls.shape);
+        }
+        let head = get("head.w")?;
+        if head.shape.len() != 2 || head.shape[1] != dim {
+            bail!("head.w must be (classes, {dim}), got {:?}", head.shape);
+        }
+        let classes = head.shape[0];
+        if classes != entry.classes {
+            bail!("head.w rows {} != manifest classes {}", classes, entry.classes);
+        }
+        let patch = isqrt(patch_dim / 3)
+            .filter(|p| p * p * 3 == patch_dim)
+            .ok_or_else(|| anyhow!("patch_dim {patch_dim} is not 3·p²"))?;
+        let grid = isqrt(tokens - 1)
+            .ok_or_else(|| anyhow!("tokens {tokens} is not g²+1"))?;
+        let image = grid * patch;
+        if image * image * 3 != entry.input_dim {
+            bail!(
+                "reconstructed image {image}x{image}x3 != manifest input_dim {}",
+                entry.input_dim
+            );
+        }
+
+        // Blocks: contiguous indices, each with the full layer set.
+        let mut depth = 0;
+        for name in specs.keys() {
+            if let Some(rest) = name.strip_prefix("blocks.") {
+                let idx: usize = rest
+                    .split('.')
+                    .next()
+                    .unwrap_or("")
+                    .parse()
+                    .map_err(|_| anyhow!("bad block tensor name {name:?}"))?;
+                depth = depth.max(idx + 1);
+            }
+        }
+        if depth == 0 {
+            bail!("model {}: param_spec has no blocks.* tensors", entry.name);
+        }
+
+        let linear_plan = |prefix: &str, o: usize, i: usize| -> Result<LinearPlan> {
+            let b = get(&format!("{prefix}.b"))?;
+            if b.shape != [o] {
+                bail!("{prefix}.b must be ({o},), got {:?}", b.shape);
+            }
+            if let Some(w) = specs.get(&format!("{prefix}.w")) {
+                if w.shape != [o, i] {
+                    bail!("{prefix}.w must be ({o}, {i}), got {:?}", w.shape);
+                }
+                return Ok(LinearPlan {
+                    name: prefix.to_string(),
+                    form: LinearForm::Dense,
+                    out_dim: o,
+                    in_dim: i,
+                });
+            }
+            let l = get(&format!("{prefix}.l"))?;
+            let r = get(&format!("{prefix}.r"))?;
+            if l.shape.len() != 2 || r.shape.len() != 2 || l.shape[0] != o
+                || r.shape[1] != i || l.shape[1] != r.shape[0]
+            {
+                bail!(
+                    "{prefix}: factored shapes l {:?} / r {:?} inconsistent with ({o}, {i})",
+                    l.shape, r.shape
+                );
+            }
+            Ok(LinearPlan {
+                name: prefix.to_string(),
+                form: LinearForm::Factored { k: l.shape[1] },
+                out_dim: o,
+                in_dim: i,
+            })
+        };
+
+        let mut hidden = 0;
+        let mut blocks = Vec::with_capacity(depth);
+        for b in 0..depth {
+            let p = format!("blocks.{b}");
+            for ln in ["ln1", "ln2"] {
+                for gb in ["g", "b"] {
+                    let t = get(&format!("{p}.{ln}.{gb}"))?;
+                    if t.shape != [dim] {
+                        bail!("{p}.{ln}.{gb} must be ({dim},), got {:?}", t.shape);
+                    }
+                }
+            }
+            let fc1 = {
+                // hidden comes from the first block's fc1 output.
+                let probe = specs
+                    .get(&format!("{p}.mlp.fc1.w"))
+                    .or_else(|| specs.get(&format!("{p}.mlp.fc1.l")))
+                    .ok_or_else(|| anyhow!("{p}.mlp.fc1 has neither .w nor .l"))?;
+                let h = probe.shape.first().copied().unwrap_or(0);
+                if hidden == 0 {
+                    hidden = h;
+                }
+                linear_plan(&format!("{p}.mlp.fc1"), hidden, dim)?
+            };
+            blocks.push([
+                linear_plan(&format!("{p}.attn.qkv"), 3 * dim, dim)?,
+                linear_plan(&format!("{p}.attn.proj"), dim, dim)?,
+                fc1,
+                linear_plan(&format!("{p}.mlp.fc2"), dim, hidden)?,
+            ]);
+        }
+        for suffix in ["norm.g", "norm.b"] {
+            let t = get(suffix)?;
+            if t.shape != [dim] {
+                bail!("{suffix} must be ({dim},), got {:?}", t.shape);
+            }
+        }
+        let hb = get("head.b")?;
+        if hb.shape != [classes] {
+            bail!("head.b must be ({classes},), got {:?}", hb.shape);
+        }
+        let eb = get("embed.b")?;
+        if eb.shape != [dim] {
+            bail!("embed.b must be ({dim},), got {:?}", eb.shape);
+        }
+
+        // Grammar closure: the spec must contain exactly the tensors
+        // the reconstructed plan accounts for — the expected-name set is
+        // generated from the plan itself, so the grammar lives in one
+        // place.  (Missing tensors already failed above via `get`.)
+        let mut expected: std::collections::BTreeSet<String> = [
+            "embed.w", "embed.b", "cls", "pos", "norm.g", "norm.b", "head.w", "head.b",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        for (bi, blist) in blocks.iter().enumerate() {
+            for ln in ["ln1", "ln2"] {
+                for gb in ["g", "b"] {
+                    expected.insert(format!("blocks.{bi}.{ln}.{gb}"));
+                }
+            }
+            for lp in blist {
+                expected.insert(format!("{}.b", lp.name));
+                match lp.form {
+                    LinearForm::Dense => {
+                        expected.insert(format!("{}.w", lp.name));
+                    }
+                    LinearForm::Factored { .. } => {
+                        expected.insert(format!("{}.l", lp.name));
+                        expected.insert(format!("{}.r", lp.name));
+                    }
+                }
+            }
+        }
+        for name in specs.keys() {
+            if !expected.contains(name) {
+                bail!(
+                    "model {}: param_spec tensor {name:?} is not part of the \
+                     ViT layer grammar; the native engine refuses to guess \
+                     (only vit_* variants are reconstructable)",
+                    entry.name
+                );
+            }
+        }
+
+        Ok(ModelPlan {
+            dim, depth, tokens, patch, image, patch_dim, hidden, classes,
+            blocks,
+            specs,
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&TensorSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| anyhow!("no tensor {name:?} in plan"))
+    }
+
+    /// Find the block linear with this prefix (`blocks.N.mlp.fc1`, …).
+    pub fn linear(&self, name: &str) -> Option<&LinearPlan> {
+        self.blocks.iter().flatten().find(|lp| lp.name == name)
+    }
+}
+
+fn seed_from(name: &str) -> u64 {
+    // FNV-1a over the layer name: deterministic ASI init when the
+    // manifest ships no state vector.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// The planned graph
+// ---------------------------------------------------------------------------
+
+/// One planned forward node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    /// Trailing (feature) dimension this node outputs.
+    pub out_features: usize,
+}
+
+/// The planned node program: forward chain + optimizer program, built
+/// ONCE from the manifest (`plan-then-execute`).
+pub struct LayerGraph {
+    pub plan: ModelPlan,
+    pub nodes: Vec<Node>,
+    pub updates: Vec<UpdateOp>,
+}
+
+fn linear_op(lp: &LinearPlan) -> Op {
+    match lp.form {
+        LinearForm::Dense => Op::Dense { name: lp.name.clone() },
+        LinearForm::Factored { k } => Op::Wasi { name: lp.name.clone(), k },
+    }
+}
+
+impl LayerGraph {
+    pub fn from_entry(entry: &ModelEntry) -> Result<LayerGraph> {
+        Ok(Self::from_plan(ModelPlan::from_entry(entry)?))
+    }
+
+    /// Emit the node program for a reconstructed plan.
+    pub fn from_plan(plan: ModelPlan) -> LayerGraph {
+        let d = plan.dim;
+        let mut nodes: Vec<Node> = Vec::new();
+        let mut push = |op: Op, f: usize| nodes.push(Node { op, out_features: f });
+        push(Op::Patchify, plan.patch_dim);
+        push(Op::Dense { name: "embed".into() }, d);
+        push(Op::Assemble, d);
+        for (bi, blk) in plan.blocks.iter().enumerate() {
+            let base = format!("blocks.{bi}");
+            push(Op::ResidualSave, d);
+            push(Op::LayerNorm { name: format!("{base}.ln1") }, d);
+            push(linear_op(&blk[0]), 3 * d);
+            push(Op::SliceV, d);
+            push(Op::Mixing, d);
+            push(linear_op(&blk[1]), d);
+            push(Op::ResidualAdd, d);
+            push(Op::ResidualSave, d);
+            push(Op::LayerNorm { name: format!("{base}.ln2") }, d);
+            push(linear_op(&blk[2]), plan.hidden);
+            push(Op::Gelu, plan.hidden);
+            push(linear_op(&blk[3]), d);
+            push(Op::ResidualAdd, d);
+        }
+        push(Op::LayerNorm { name: "norm".into() }, d);
+        push(Op::TakeCls, d);
+        push(Op::Dense { name: "head".into() }, plan.classes);
+        push(Op::SoftmaxCe, plan.classes);
+
+        let mut updates = vec![UpdateOp::SgdClipDecay];
+        for blk in &plan.blocks {
+            for lp in blk {
+                if matches!(lp.form, LinearForm::Factored { .. }) {
+                    updates.push(UpdateOp::WsiRefresh { name: lp.name.clone() });
+                }
+            }
+        }
+        LayerGraph { plan, nodes, updates }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution: resolved bindings + per-node context
+// ---------------------------------------------------------------------------
+
+/// A node resolved to concrete flat-vector offsets (done once at
+/// executor construction — the hot loop never formats names or walks
+/// maps).
+enum Bind {
+    Patchify,
+    Assemble { cls: TensorSpec, pos: TensorSpec },
+    LayerNorm { g: TensorSpec, b: TensorSpec },
+    Dense { w: TensorSpec, b: TensorSpec, o: usize, i: usize, needs_dx: bool },
+    Wasi {
+        name: String,
+        l: TensorSpec,
+        r: TensorSpec,
+        b: TensorSpec,
+        o: usize,
+        k: usize,
+        i: usize,
+    },
+    SliceV,
+    Mixing,
+    Gelu,
+    ResidualSave,
+    ResidualAdd,
+    TakeCls,
+    SoftmaxCe,
+}
+
+/// What forward saved for backward.
+enum Saved {
+    None,
+    /// Linear input activation (dense layers).
+    X(Vec<f32>),
+    /// Layer norm normalization stats.
+    Ln { xhat: Vec<f32>, inv_std: Vec<f32> },
+    /// ASI-compressed input + rank-space intermediate (WASI layers).
+    Wasi { comp: CompressedActivation, h: Vec<f32> },
+    /// GELU pre-activation.
+    Gelu(Vec<f32>),
+}
+
+struct Slot {
+    label: String,
+    out_features: usize,
+    bind: Bind,
+    asi: Option<AsiCompressor>,
+    saved: Saved,
+    fwd_s: f64,
+    bwd_s: f64,
+    calls: usize,
+}
+
+/// Resolved optimizer step.
+enum UpdateStep {
+    Sgd { ranges: Vec<(usize, usize, f32)> },
+    Refresh { l: TensorSpec, r: TensorSpec, o: usize, k: usize, i: usize },
+}
+
+/// Per-node accumulated wallclock (the latency-attribution tags).
+#[derive(Debug, Clone)]
+pub struct NodeTiming {
+    pub label: String,
+    pub out_features: usize,
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub calls: usize,
+}
+
+fn build_asi(entry: &ModelEntry, plan: &ModelPlan, name: &str) -> Result<AsiCompressor> {
+    let lp = plan
+        .linear(name)
+        .ok_or_else(|| anyhow!("no linear plan for factored layer {name:?}"))?;
+    let dims = [entry.batch, plan.tokens, lp.in_dim];
+    // Rank source order: manifest asi_ranks, else the shipped state
+    // tensors' shapes (so warm-start bases always fit), else a fresh
+    // default.
+    let from_state = || -> Option<Vec<usize>> {
+        let rs: Vec<usize> = (1..=3usize)
+            .filter_map(|m| {
+                let key = format!("{name}.u{m}");
+                entry
+                    .state_spec
+                    .iter()
+                    .find(|t| t.name == key)
+                    .and_then(|t| t.shape.get(1).copied())
+            })
+            .collect();
+        (rs.len() == 3).then_some(rs)
+    };
+    let ranks: Vec<usize> = entry
+        .asi_ranks
+        .get(name)
+        .cloned()
+        .filter(|r| r.len() == 3)
+        .or_else(from_state)
+        .unwrap_or_else(|| vec![dims[0].min(4), dims[1].min(8), dims[2].min(16)]);
+    Ok(AsiCompressor::new(&dims, &ranks, seed_from(name)))
+}
+
+/// Executes a [`LayerGraph`] against flat parameter/gradient vectors
+/// through the shared kernel layer.
+pub struct GraphExecutor {
+    graph: LayerGraph,
+    slots: Vec<Slot>,
+    updates: Vec<UpdateStep>,
+    state_spec: Vec<TensorSpec>,
+    state_len: usize,
+    batch: usize,
+    input_dim: usize,
+    params_len: usize,
+    profiling: bool,
+}
+
+impl GraphExecutor {
+    /// Training executor: resolves bindings AND builds the per-layer
+    /// ASI compressors.
+    pub fn new(graph: LayerGraph, entry: &ModelEntry) -> Result<GraphExecutor> {
+        Self::build(graph, entry, true)
+    }
+
+    /// Inference-only executor: skips the (training-only) ASI
+    /// compressor construction.  `forward_train` on this executor
+    /// panics at the first factored layer; use [`GraphExecutor::infer`].
+    pub fn new_infer(graph: LayerGraph, entry: &ModelEntry) -> Result<GraphExecutor> {
+        Self::build(graph, entry, false)
+    }
+
+    fn build(graph: LayerGraph, entry: &ModelEntry, with_asi: bool) -> Result<GraphExecutor> {
+        let plan = &graph.plan;
+        let mut slots = Vec::with_capacity(graph.nodes.len());
+        let mut prev_op: Option<&Op> = None;
+        for node in &graph.nodes {
+            let bind = match &node.op {
+                Op::Patchify => Bind::Patchify,
+                Op::Assemble => Bind::Assemble {
+                    cls: plan.spec("cls")?.clone(),
+                    pos: plan.spec("pos")?.clone(),
+                },
+                Op::LayerNorm { name } => Bind::LayerNorm {
+                    g: plan.spec(&format!("{name}.g"))?.clone(),
+                    b: plan.spec(&format!("{name}.b"))?.clone(),
+                },
+                Op::Dense { name } => {
+                    let w = plan.spec(&format!("{name}.w"))?.clone();
+                    let b = plan.spec(&format!("{name}.b"))?.clone();
+                    let (o, i) = (w.shape[0], w.shape[1]);
+                    // The linear fed by Patchify needs no input grads.
+                    let needs_dx = !matches!(prev_op, Some(Op::Patchify));
+                    Bind::Dense { w, b, o, i, needs_dx }
+                }
+                Op::Wasi { name, k } => {
+                    let l = plan.spec(&format!("{name}.l"))?.clone();
+                    let r = plan.spec(&format!("{name}.r"))?.clone();
+                    let b = plan.spec(&format!("{name}.b"))?.clone();
+                    let (o, i) = (l.shape[0], r.shape[1]);
+                    Bind::Wasi { name: name.clone(), l, r, b, o, k: *k, i }
+                }
+                Op::SliceV => Bind::SliceV,
+                Op::Mixing => Bind::Mixing,
+                Op::Gelu => Bind::Gelu,
+                Op::ResidualSave => Bind::ResidualSave,
+                Op::ResidualAdd => Bind::ResidualAdd,
+                Op::TakeCls => Bind::TakeCls,
+                Op::SoftmaxCe => Bind::SoftmaxCe,
+            };
+            let asi = match &node.op {
+                Op::Wasi { name, .. } if with_asi => Some(build_asi(entry, plan, name)?),
+                _ => None,
+            };
+            slots.push(Slot {
+                label: node.op.label(),
+                out_features: node.out_features,
+                bind,
+                asi,
+                saved: Saved::None,
+                fwd_s: 0.0,
+                bwd_s: 0.0,
+                calls: 0,
+            });
+            prev_op = Some(&node.op);
+        }
+
+        let mut updates = Vec::with_capacity(graph.updates.len());
+        for u in &graph.updates {
+            match u {
+                UpdateOp::SgdClipDecay => {
+                    let mut ranges = Vec::with_capacity(graph.plan.specs.len());
+                    for spec in graph.plan.specs.values() {
+                        let decay = spec.name.ends_with(".w")
+                            || spec.name.ends_with(".l")
+                            || spec.name.ends_with(".r");
+                        let wd = if decay { WEIGHT_DECAY } else { 0.0 };
+                        ranges.push((spec.offset, spec.offset + spec.numel(), wd));
+                    }
+                    updates.push(UpdateStep::Sgd { ranges });
+                }
+                UpdateOp::WsiRefresh { name } => {
+                    let l = graph.plan.spec(&format!("{name}.l"))?.clone();
+                    let r = graph.plan.spec(&format!("{name}.r"))?.clone();
+                    let (o, k, i) = (l.shape[0], l.shape[1], r.shape[1]);
+                    updates.push(UpdateStep::Refresh { l, r, o, k, i });
+                }
+            }
+        }
+
+        Ok(GraphExecutor {
+            slots,
+            updates,
+            state_spec: entry.state_spec.clone(),
+            state_len: entry.state_len,
+            batch: entry.batch,
+            input_dim: entry.input_dim,
+            params_len: entry.params_len,
+            profiling: false,
+            graph,
+        })
+    }
+
+    pub fn plan(&self) -> &ModelPlan {
+        &self.graph.plan
+    }
+
+    pub fn graph(&self) -> &LayerGraph {
+        &self.graph
+    }
+
+    pub fn set_profiling(&mut self, on: bool) {
+        self.profiling = on;
+    }
+
+    pub fn reset_timings(&mut self) {
+        for s in &mut self.slots {
+            s.fwd_s = 0.0;
+            s.bwd_s = 0.0;
+            s.calls = 0;
+        }
+    }
+
+    pub fn node_timings(&self) -> Vec<NodeTiming> {
+        self.slots
+            .iter()
+            .map(|s| NodeTiming {
+                label: s.label.clone(),
+                out_features: s.out_features,
+                fwd_s: s.fwd_s,
+                bwd_s: s.bwd_s,
+                calls: s.calls,
+            })
+            .collect()
+    }
+
+    fn check_params(&self, params: &[f32]) -> Result<()> {
+        if params.len() != self.params_len {
+            bail!("params length {} != manifest {}", params.len(), self.params_len);
+        }
+        Ok(())
+    }
+
+    /// Training forward: runs the node program, saving what each node's
+    /// backward dual needs.  Returns the logits (batch × classes).
+    pub fn forward_train(&mut self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        self.check_params(params)?;
+        let b = self.batch;
+        if x.len() != b * self.input_dim {
+            bail!("x length {} != batch {} * input_dim {}", x.len(), b, self.input_dim);
+        }
+        let (t, d) = (self.graph.plan.tokens, self.graph.plan.dim);
+        let (image, patch) = (self.graph.plan.image, self.graph.plan.patch);
+        let profiling = self.profiling;
+        let mut cur: Vec<f32> = Vec::new();
+        let mut stack: Vec<Vec<f32>> = Vec::new();
+        for si in 0..self.slots.len() {
+            let t0 = profiling.then(Instant::now);
+            let slot = &mut self.slots[si];
+            match &slot.bind {
+                Bind::Patchify => {
+                    cur = ops::patchify(x, b, image, patch);
+                }
+                Bind::Dense { w, b: bs, o, i, .. } => {
+                    let rows = cur.len() / *i;
+                    let mut y = vec![0.0f32; rows * *o];
+                    kernels::gemm_nt(
+                        &cur,
+                        &params[w.offset..w.offset + w.numel()],
+                        rows,
+                        *i,
+                        *o,
+                        &mut y,
+                        Epilogue::Bias(&params[bs.offset..bs.offset + bs.numel()]),
+                    );
+                    slot.saved = Saved::X(std::mem::take(&mut cur));
+                    cur = y;
+                }
+                Bind::Wasi { l, r, b: bs, o, k, i, .. } => {
+                    let rows = cur.len() / *i;
+                    let mut h = vec![0.0f32; rows * *k];
+                    kernels::gemm_nt(
+                        &cur,
+                        &params[r.offset..r.offset + r.numel()],
+                        rows,
+                        *i,
+                        *k,
+                        &mut h,
+                        Epilogue::None,
+                    );
+                    let mut y = vec![0.0f32; rows * *o];
+                    kernels::gemm_nt(
+                        &h,
+                        &params[l.offset..l.offset + l.numel()],
+                        rows,
+                        *k,
+                        *o,
+                        &mut y,
+                        Epilogue::Bias(&params[bs.offset..bs.offset + bs.numel()]),
+                    );
+                    let n_tok = rows / b;
+                    let xt = Tensor::from_vec(&[b, n_tok, *i], std::mem::take(&mut cur));
+                    let comp = slot
+                        .asi
+                        .as_mut()
+                        .expect("wasi node without ASI compressor")
+                        .compress(&xt);
+                    slot.saved = Saved::Wasi { comp, h };
+                    cur = y;
+                }
+                Bind::Assemble { cls, pos } => {
+                    let clsv = &params[cls.offset..cls.offset + cls.numel()];
+                    let posv = &params[pos.offset..pos.offset + pos.numel()];
+                    let mut tok = vec![0.0f32; b * t * d];
+                    for bi in 0..b {
+                        tok[bi * t * d..bi * t * d + d].copy_from_slice(clsv);
+                        let src = &cur[bi * (t - 1) * d..(bi + 1) * (t - 1) * d];
+                        tok[bi * t * d + d..(bi + 1) * t * d].copy_from_slice(src);
+                        for (o, p) in tok[bi * t * d..(bi + 1) * t * d].iter_mut().zip(posv) {
+                            *o += p;
+                        }
+                    }
+                    cur = tok;
+                }
+                Bind::LayerNorm { g, b: bs } => {
+                    let gv = &params[g.offset..g.offset + g.numel()];
+                    let bv = &params[bs.offset..bs.offset + bs.numel()];
+                    let dd = g.numel();
+                    let rows = cur.len() / dd;
+                    let mut xhat = vec![0.0f32; cur.len()];
+                    let mut inv_std = vec![0.0f32; rows];
+                    let mut y = vec![0.0f32; cur.len()];
+                    for rr in 0..rows {
+                        let xi = &cur[rr * dd..(rr + 1) * dd];
+                        let mu = xi.iter().sum::<f32>() / dd as f32;
+                        let var =
+                            xi.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / dd as f32;
+                        let is = 1.0 / (var + ops::LN_EPS).sqrt();
+                        inv_std[rr] = is;
+                        for c in 0..dd {
+                            let hh = (xi[c] - mu) * is;
+                            xhat[rr * dd + c] = hh;
+                            y[rr * dd + c] = hh * gv[c] + bv[c];
+                        }
+                    }
+                    slot.saved = Saved::Ln { xhat, inv_std };
+                    cur = y;
+                }
+                Bind::SliceV => {
+                    let rows = cur.len() / (3 * d);
+                    let mut v = vec![0.0f32; rows * d];
+                    for row in 0..rows {
+                        v[row * d..(row + 1) * d]
+                            .copy_from_slice(&cur[row * 3 * d + 2 * d..(row + 1) * 3 * d]);
+                    }
+                    cur = v;
+                }
+                Bind::Mixing => {
+                    ops::uniform_mix(&mut cur, b, t, d);
+                }
+                Bind::Gelu => {
+                    let pre = std::mem::take(&mut cur);
+                    cur = pre.iter().map(|&v| kernels::gelu(v)).collect();
+                    slot.saved = Saved::Gelu(pre);
+                }
+                Bind::ResidualSave => {
+                    stack.push(cur.clone());
+                }
+                Bind::ResidualAdd => {
+                    let res = stack.pop().ok_or_else(|| anyhow!("residual stack underflow"))?;
+                    for (v, a) in cur.iter_mut().zip(&res) {
+                        *v += a;
+                    }
+                }
+                Bind::TakeCls => {
+                    let mut clstok = vec![0.0f32; b * d];
+                    for bi in 0..b {
+                        clstok[bi * d..(bi + 1) * d]
+                            .copy_from_slice(&cur[bi * t * d..bi * t * d + d]);
+                    }
+                    cur = clstok;
+                }
+                Bind::SoftmaxCe => {
+                    // Terminal: loss/accuracy/dlogits happen in
+                    // `loss_and_grad` (timed onto this node there).
+                }
+            }
+            if let Some(t0) = t0 {
+                slot.fwd_s += t0.elapsed().as_secs_f64();
+                slot.calls += 1;
+            }
+        }
+        Ok(cur)
+    }
+
+    /// Softmax cross-entropy head: loss, accuracy, dlogits.
+    pub fn loss_and_grad(&mut self, logits: &[f32], y_onehot: &[f32]) -> (f32, f32, Vec<f32>) {
+        let t0 = self.profiling.then(Instant::now);
+        let c = self.graph.plan.classes;
+        let b = self.batch;
+        let logp = ops::log_softmax_rows(logits, c);
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        let mut dl = vec![0.0f32; logits.len()];
+        for row in 0..b {
+            let lp = &logp[row * c..(row + 1) * c];
+            let y = &y_onehot[row * c..(row + 1) * c];
+            let mut row_loss = 0.0f32;
+            let mut label = 0usize;
+            for j in 0..c {
+                row_loss -= y[j] * lp[j];
+                if y[j] > y[label] {
+                    label = j;
+                }
+            }
+            loss += row_loss as f64;
+            let pred = (0..c)
+                .max_by(|&a, &bb| lp[a].total_cmp(&lp[bb]))
+                .unwrap_or(0);
+            if pred == label {
+                correct += 1;
+            }
+            for j in 0..c {
+                dl[row * c + j] = (lp[j].exp() - y[j]) / b as f32;
+            }
+        }
+        if let Some(t0) = t0 {
+            // fwd_s only: forward_train already counted this node's call.
+            if let Some(last) = self.slots.last_mut() {
+                last.fwd_s += t0.elapsed().as_secs_f64();
+            }
+        }
+        (
+            (loss / b as f64) as f32,
+            correct as f32 / b as f32,
+            dl,
+        )
+    }
+
+    /// Backward: runs the node program in reverse, writing the flat
+    /// gradient vector (caller passes it zeroed).
+    pub fn backward(&mut self, params: &[f32], dlogits: &[f32], grads: &mut [f32]) -> Result<()> {
+        self.check_params(params)?;
+        if grads.len() != self.params_len {
+            bail!("grads length {} != manifest {}", grads.len(), self.params_len);
+        }
+        let b = self.batch;
+        let (t, d) = (self.graph.plan.tokens, self.graph.plan.dim);
+        let profiling = self.profiling;
+        let mut dcur = dlogits.to_vec();
+        let mut dstack: Vec<Vec<f32>> = Vec::new();
+        for si in (0..self.slots.len()).rev() {
+            let t0 = profiling.then(Instant::now);
+            let slot = &mut self.slots[si];
+            match &slot.bind {
+                Bind::SoftmaxCe => {}
+                Bind::Dense { w, b: bs, o, i, needs_dx } => {
+                    let Saved::X(xsave) = std::mem::replace(&mut slot.saved, Saved::None)
+                    else {
+                        bail!("dense backward without a forward ({})", slot.label);
+                    };
+                    let rows = dcur.len() / *o;
+                    {
+                        let db = &mut grads[bs.offset..bs.offset + bs.numel()];
+                        for chunk in dcur.chunks(*o) {
+                            for (g, v) in db.iter_mut().zip(chunk) {
+                                *g += v;
+                            }
+                        }
+                    }
+                    // dW = dYᵀ·X GEMM'd straight into the flat grad
+                    // vector — no per-layer dW allocation.
+                    kernels::gemm_tn(
+                        &dcur,
+                        &xsave,
+                        *o,
+                        rows,
+                        *i,
+                        &mut grads[w.offset..w.offset + w.numel()],
+                        Epilogue::None,
+                    );
+                    if *needs_dx {
+                        let mut dx = vec![0.0f32; rows * *i];
+                        kernels::gemm_nn(
+                            &dcur,
+                            &params[w.offset..w.offset + w.numel()],
+                            rows,
+                            *o,
+                            *i,
+                            &mut dx,
+                            Epilogue::None,
+                        );
+                        dcur = dx;
+                    } else {
+                        dcur = Vec::new();
+                    }
+                }
+                Bind::Wasi { l, r, b: bs, o, k, i, .. } => {
+                    let Saved::Wasi { comp, h } = std::mem::replace(&mut slot.saved, Saved::None)
+                    else {
+                        bail!("wasi backward without a forward ({})", slot.label);
+                    };
+                    let rows = dcur.len() / *o;
+                    {
+                        let db = &mut grads[bs.offset..bs.offset + bs.numel()];
+                        for chunk in dcur.chunks(*o) {
+                            for (g, v) in db.iter_mut().zip(chunk) {
+                                *g += v;
+                            }
+                        }
+                    }
+                    // Eq. 10: dH = dY L (rank space), dX = dH R.
+                    let mut dh = vec![0.0f32; rows * *k];
+                    kernels::gemm_nn(
+                        &dcur,
+                        &params[l.offset..l.offset + l.numel()],
+                        rows,
+                        *o,
+                        *k,
+                        &mut dh,
+                        Epilogue::None,
+                    );
+                    // dL = dYᵀ·H straight into the flat grad vector.
+                    kernels::gemm_tn(
+                        &dcur,
+                        &h,
+                        *o,
+                        rows,
+                        *k,
+                        &mut grads[l.offset..l.offset + l.numel()],
+                        Epilogue::None,
+                    );
+                    let mut dx = vec![0.0f32; rows * *i];
+                    kernels::gemm_nn(
+                        &dh,
+                        &params[r.offset..r.offset + r.numel()],
+                        rows,
+                        *k,
+                        *i,
+                        &mut dx,
+                        Epilogue::None,
+                    );
+                    // dR via f_LR with dH in place of dY (DESIGN.md §2.2).
+                    let n_tok = rows / b;
+                    let dh_t = Tensor::from_vec(&[b, n_tok, *k], dh);
+                    let dr = lowrank_grad_3d(
+                        &comp.core,
+                        &comp.factors[0],
+                        &comp.factors[1],
+                        &comp.factors[2],
+                        &dh_t,
+                    );
+                    grads[r.offset..r.offset + r.numel()].copy_from_slice(&dr.data);
+                    dcur = dx;
+                }
+                Bind::LayerNorm { g, b: bs } => {
+                    let Saved::Ln { xhat, inv_std } =
+                        std::mem::replace(&mut slot.saved, Saved::None)
+                    else {
+                        bail!("layer-norm backward without a forward ({})", slot.label);
+                    };
+                    let gv = &params[g.offset..g.offset + g.numel()];
+                    let dd = g.numel();
+                    let rows = dcur.len() / dd;
+                    let mut dg = vec![0.0f32; dd];
+                    let mut db = vec![0.0f32; dd];
+                    let mut dx = vec![0.0f32; dcur.len()];
+                    for rr in 0..rows {
+                        let dyr = &dcur[rr * dd..(rr + 1) * dd];
+                        let xhr = &xhat[rr * dd..(rr + 1) * dd];
+                        let mut m1 = 0.0f32; // mean(dxhat)
+                        let mut m2 = 0.0f32; // mean(dxhat * xhat)
+                        for c in 0..dd {
+                            let dxh = dyr[c] * gv[c];
+                            m1 += dxh;
+                            m2 += dxh * xhr[c];
+                            dg[c] += dyr[c] * xhr[c];
+                            db[c] += dyr[c];
+                        }
+                        m1 /= dd as f32;
+                        m2 /= dd as f32;
+                        for c in 0..dd {
+                            let dxh = dyr[c] * gv[c];
+                            dx[rr * dd + c] = inv_std[rr] * (dxh - m1 - xhr[c] * m2);
+                        }
+                    }
+                    for (gs, v) in grads[g.offset..g.offset + dd].iter_mut().zip(&dg) {
+                        *gs += v;
+                    }
+                    for (gs, v) in grads[bs.offset..bs.offset + dd].iter_mut().zip(&db) {
+                        *gs += v;
+                    }
+                    dcur = dx;
+                }
+                Bind::Gelu => {
+                    let Saved::Gelu(pre) = std::mem::replace(&mut slot.saved, Saved::None)
+                    else {
+                        bail!("gelu backward without a forward");
+                    };
+                    for (dv, &pv) in dcur.iter_mut().zip(&pre) {
+                        *dv *= kernels::gelu_grad(pv);
+                    }
+                }
+                Bind::SliceV => {
+                    let rows = dcur.len() / d;
+                    let mut da = vec![0.0f32; rows * 3 * d];
+                    for row in 0..rows {
+                        da[row * 3 * d + 2 * d..(row + 1) * 3 * d]
+                            .copy_from_slice(&dcur[row * d..(row + 1) * d]);
+                    }
+                    dcur = da;
+                }
+                Bind::Mixing => {
+                    // (I + 11ᵀ/T)/2 is symmetric: backward is the same
+                    // operator.
+                    ops::uniform_mix(&mut dcur, b, t, d);
+                }
+                Bind::ResidualAdd => {
+                    dstack.push(dcur.clone());
+                }
+                Bind::ResidualSave => {
+                    let dres = dstack.pop().ok_or_else(|| anyhow!("residual dstack underflow"))?;
+                    for (v, a) in dcur.iter_mut().zip(&dres) {
+                        *v += a;
+                    }
+                }
+                Bind::TakeCls => {
+                    let mut dz = vec![0.0f32; b * t * d];
+                    for bi in 0..b {
+                        dz[bi * t * d..bi * t * d + d]
+                            .copy_from_slice(&dcur[bi * d..(bi + 1) * d]);
+                    }
+                    dcur = dz;
+                }
+                Bind::Assemble { cls, pos } => {
+                    {
+                        let dpos = &mut grads[pos.offset..pos.offset + pos.numel()];
+                        for bi in 0..b {
+                            for (g, v) in
+                                dpos.iter_mut().zip(&dcur[bi * t * d..(bi + 1) * t * d])
+                            {
+                                *g += v;
+                            }
+                        }
+                    }
+                    {
+                        let dcls = &mut grads[cls.offset..cls.offset + cls.numel()];
+                        for bi in 0..b {
+                            for (g, v) in
+                                dcls.iter_mut().zip(&dcur[bi * t * d..bi * t * d + d])
+                            {
+                                *g += v;
+                            }
+                        }
+                    }
+                    let mut demb = vec![0.0f32; b * (t - 1) * d];
+                    for bi in 0..b {
+                        demb[bi * (t - 1) * d..(bi + 1) * (t - 1) * d]
+                            .copy_from_slice(&dcur[bi * t * d + d..(bi + 1) * t * d]);
+                    }
+                    dcur = demb;
+                }
+                Bind::Patchify => {
+                    // Input gradients are never needed.
+                    dcur = Vec::new();
+                }
+            }
+            if let Some(t0) = t0 {
+                slot.bwd_s += t0.elapsed().as_secs_f64();
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the optimizer program: global-norm clip + decoupled weight
+    /// decay + SGD, then the per-layer WSI refreshes — all in flat
+    /// parameter space (mirrors the AOT step's update rule).
+    pub fn update(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        let norm = grads
+            .iter()
+            .map(|g| (*g as f64) * (*g as f64))
+            .sum::<f64>()
+            .sqrt() as f32;
+        let scale = if norm > GRAD_CLIP { GRAD_CLIP / norm } else { 1.0 };
+        for step in &self.updates {
+            match step {
+                UpdateStep::Sgd { ranges } => {
+                    for &(lo, hi, wd) in ranges {
+                        for (p, g) in params[lo..hi].iter_mut().zip(&grads[lo..hi]) {
+                            *p -= lr * (g * scale + wd * *p);
+                        }
+                    }
+                }
+                UpdateStep::Refresh { l, r, o, k, i } => {
+                    let mut f = WsiFactors {
+                        l: Mat::from_vec(
+                            *o,
+                            *k,
+                            params[l.offset..l.offset + l.numel()].to_vec(),
+                        ),
+                        r: Mat::from_vec(
+                            *k,
+                            *i,
+                            params[r.offset..r.offset + r.numel()].to_vec(),
+                        ),
+                    };
+                    f.refresh();
+                    params[l.offset..l.offset + l.numel()].copy_from_slice(&f.l.data);
+                    params[r.offset..r.offset + r.numel()].copy_from_slice(&f.r.data);
+                }
+            }
+        }
+    }
+
+    /// Copy ASI warm-start bases out of the flat state vector into the
+    /// node compressors (checkpoint restore / construction).
+    pub fn load_state(&mut self, state: &[f32]) -> Result<()> {
+        if state.len() != self.state_len {
+            bail!("state length {} != manifest {}", state.len(), self.state_len);
+        }
+        if self.state_spec.is_empty() {
+            return Ok(());
+        }
+        let specs: BTreeMap<&str, &TensorSpec> =
+            self.state_spec.iter().map(|t| (t.name.as_str(), t)).collect();
+        for slot in &mut self.slots {
+            let Bind::Wasi { name, .. } = &slot.bind else { continue };
+            let Some(asi) = slot.asi.as_mut() else { continue };
+            for (m, st) in asi.states.iter_mut().enumerate() {
+                let key = format!("{}.u{}", name, m + 1);
+                if let Some(spec) = specs.get(key.as_str()) {
+                    // Shipped warm-start bases must fit exactly; silently
+                    // training from random init instead would be the
+                    // quiet-garbage failure mode this engine refuses on
+                    // principle.
+                    if spec.shape != [st.u.rows, st.u.cols] {
+                        bail!(
+                            "state tensor {key} shape {:?} does not match the \
+                             ASI basis ({}, {})",
+                            spec.shape, st.u.rows, st.u.cols
+                        );
+                    }
+                    if spec.offset + spec.numel() > state.len() {
+                        bail!(
+                            "state tensor {key} [{:?} @ {}] overruns state_len {}",
+                            spec.shape, spec.offset, state.len()
+                        );
+                    }
+                    st.u.data
+                        .copy_from_slice(&state[spec.offset..spec.offset + spec.numel()]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pack the (forward-refreshed) ASI bases back into the flat state
+    /// vector.  State entries that belong to layers the graph keeps
+    /// dense pass through unchanged.
+    pub fn store_state(&self, state: &mut [f32]) {
+        if self.state_spec.is_empty() {
+            return;
+        }
+        let specs: BTreeMap<&str, &TensorSpec> =
+            self.state_spec.iter().map(|t| (t.name.as_str(), t)).collect();
+        for slot in &self.slots {
+            let Bind::Wasi { name, .. } = &slot.bind else { continue };
+            let Some(asi) = slot.asi.as_ref() else { continue };
+            for (m, st) in asi.states.iter().enumerate() {
+                let key = format!("{}.u{}", name, m + 1);
+                if let Some(spec) = specs.get(key.as_str()) {
+                    if spec.numel() == st.u.data.len()
+                        && spec.offset + spec.numel() <= state.len()
+                    {
+                        state[spec.offset..spec.offset + spec.numel()]
+                            .copy_from_slice(&st.u.data);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Inference walk: batch-size free, saves nothing, and fuses a
+    /// following GELU into the producing linear's epilogue.
+    pub fn infer(&self, params: &[f32], x: &[f32], b: usize) -> Result<Vec<f32>> {
+        self.check_params(params)?;
+        if b == 0 || x.len() != b * self.input_dim {
+            bail!(
+                "x length {} is not a positive multiple of input_dim {}",
+                x.len(),
+                self.input_dim
+            );
+        }
+        let (t, d) = (self.graph.plan.tokens, self.graph.plan.dim);
+        let (image, patch) = (self.graph.plan.image, self.graph.plan.patch);
+        let mut cur: Vec<f32> = Vec::new();
+        let mut stack: Vec<Vec<f32>> = Vec::new();
+        let mut si = 0;
+        while si < self.slots.len() {
+            let slot = &self.slots[si];
+            let fuse_gelu = matches!(slot.bind, Bind::Dense { .. } | Bind::Wasi { .. })
+                && matches!(self.slots.get(si + 1).map(|s| &s.bind), Some(Bind::Gelu));
+            match &slot.bind {
+                Bind::Patchify => {
+                    cur = ops::patchify(x, b, image, patch);
+                }
+                Bind::Dense { w, b: bs, o, i, .. } => {
+                    let rows = cur.len() / *i;
+                    let bias = &params[bs.offset..bs.offset + bs.numel()];
+                    let epi =
+                        if fuse_gelu { Epilogue::BiasGelu(bias) } else { Epilogue::Bias(bias) };
+                    let mut y = vec![0.0f32; rows * *o];
+                    kernels::gemm_nt(
+                        &cur,
+                        &params[w.offset..w.offset + w.numel()],
+                        rows,
+                        *i,
+                        *o,
+                        &mut y,
+                        epi,
+                    );
+                    cur = y;
+                }
+                Bind::Wasi { l, r, b: bs, o, k, i, .. } => {
+                    let rows = cur.len() / *i;
+                    let mut h = vec![0.0f32; rows * *k];
+                    kernels::gemm_nt(
+                        &cur,
+                        &params[r.offset..r.offset + r.numel()],
+                        rows,
+                        *i,
+                        *k,
+                        &mut h,
+                        Epilogue::None,
+                    );
+                    let bias = &params[bs.offset..bs.offset + bs.numel()];
+                    let epi =
+                        if fuse_gelu { Epilogue::BiasGelu(bias) } else { Epilogue::Bias(bias) };
+                    let mut y = vec![0.0f32; rows * *o];
+                    kernels::gemm_nt(
+                        &h,
+                        &params[l.offset..l.offset + l.numel()],
+                        rows,
+                        *k,
+                        *o,
+                        &mut y,
+                        epi,
+                    );
+                    cur = y;
+                }
+                Bind::Assemble { cls, pos } => {
+                    let clsv = &params[cls.offset..cls.offset + cls.numel()];
+                    let posv = &params[pos.offset..pos.offset + pos.numel()];
+                    let mut tok = vec![0.0f32; b * t * d];
+                    for bi in 0..b {
+                        tok[bi * t * d..bi * t * d + d].copy_from_slice(clsv);
+                        let src = &cur[bi * (t - 1) * d..(bi + 1) * (t - 1) * d];
+                        tok[bi * t * d + d..(bi + 1) * t * d].copy_from_slice(src);
+                        for (o, p) in tok[bi * t * d..(bi + 1) * t * d].iter_mut().zip(posv) {
+                            *o += p;
+                        }
+                    }
+                    cur = tok;
+                }
+                Bind::LayerNorm { g, b: bs } => {
+                    let gv = &params[g.offset..g.offset + g.numel()];
+                    let bv = &params[bs.offset..bs.offset + bs.numel()];
+                    ops::layer_norm_inplace(&mut cur, gv, bv, g.numel());
+                }
+                Bind::SliceV => {
+                    let rows = cur.len() / (3 * d);
+                    let mut v = vec![0.0f32; rows * d];
+                    for row in 0..rows {
+                        v[row * d..(row + 1) * d]
+                            .copy_from_slice(&cur[row * 3 * d + 2 * d..(row + 1) * 3 * d]);
+                    }
+                    cur = v;
+                }
+                Bind::Mixing => {
+                    ops::uniform_mix(&mut cur, b, t, d);
+                }
+                Bind::Gelu => {
+                    // Only reached when not fused into the linear above.
+                    for v in cur.iter_mut() {
+                        *v = kernels::gelu(*v);
+                    }
+                }
+                Bind::ResidualSave => {
+                    stack.push(cur.clone());
+                }
+                Bind::ResidualAdd => {
+                    let res = stack.pop().ok_or_else(|| anyhow!("residual stack underflow"))?;
+                    for (v, a) in cur.iter_mut().zip(&res) {
+                        *v += a;
+                    }
+                }
+                Bind::TakeCls => {
+                    let mut clstok = vec![0.0f32; b * d];
+                    for bi in 0..b {
+                        clstok[bi * d..(bi + 1) * d]
+                            .copy_from_slice(&cur[bi * t * d..bi * t * d + d]);
+                    }
+                    cur = clstok;
+                }
+                Bind::SoftmaxCe => break,
+            }
+            si += if fuse_gelu { 2 } else { 1 };
+        }
+        Ok(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::demo::{write_demo_artifacts, DemoConfig};
+    use super::*;
+    use crate::data::synth::VisionTask;
+    use crate::runtime::Manifest;
+
+    fn demo_manifest(tag: &str) -> Manifest {
+        let dir = std::env::temp_dir().join(format!("wasi_graph_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn plan_reconstructs_demo_vit() {
+        let m = demo_manifest("plan");
+        let entry = m.model("vit_demo_wasi_eps80").unwrap();
+        let plan = ModelPlan::from_entry(entry).unwrap();
+        assert_eq!(plan.image * plan.image * 3, entry.input_dim);
+        assert_eq!(plan.classes, entry.classes);
+        assert_eq!(plan.blocks.len(), plan.depth);
+        // mlp linears factored, attention dense in the demo fixture
+        for b in &plan.blocks {
+            assert_eq!(b[0].form, LinearForm::Dense);
+            assert!(matches!(b[2].form, LinearForm::Factored { .. }));
+            assert!(matches!(b[3].form, LinearForm::Factored { .. }));
+        }
+    }
+
+    #[test]
+    fn plan_refuses_unknown_tensor() {
+        let m = demo_manifest("refuse");
+        let mut entry = m.model("vit_demo_vanilla").unwrap().clone();
+        entry.param_spec.push(TensorSpec {
+            name: "blocks.0.frobnicator.w".into(),
+            shape: vec![1],
+            offset: 0,
+        });
+        let err = ModelPlan::from_entry(&entry).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("frobnicator"), "{msg}");
+    }
+
+    #[test]
+    fn plan_refuses_non_vit_spec() {
+        let m = demo_manifest("nonvit");
+        let mut entry = m.model("vit_demo_vanilla").unwrap().clone();
+        // TinyDec-style spec: no patch-embed scaffolding.
+        entry.param_spec = vec![TensorSpec {
+            name: "tok_embed".into(),
+            shape: vec![16, 8],
+            offset: 0,
+        }];
+        assert!(ModelPlan::from_entry(&entry).is_err());
+    }
+
+    #[test]
+    fn planner_emits_expected_node_program() {
+        let m = demo_manifest("nodes");
+        let entry = m.model("vit_demo_wasi_eps80").unwrap();
+        let graph = LayerGraph::from_entry(entry).unwrap();
+        let depth = graph.plan.depth;
+        // Patchify/embed/Assemble + 13 nodes per block + norm/cls/head/ce.
+        assert_eq!(graph.nodes.len(), 3 + 13 * depth + 4);
+        assert!(matches!(graph.nodes.first().unwrap().op, Op::Patchify));
+        assert!(matches!(graph.nodes.last().unwrap().op, Op::SoftmaxCe));
+        let wasi = graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Wasi { .. }))
+            .count();
+        assert_eq!(wasi, 2 * depth, "mlp fc1/fc2 factored per block");
+        let dense = graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Dense { .. }))
+            .count();
+        assert_eq!(dense, 2 * depth + 2, "qkv/proj per block + embed + head");
+        // Update program: one SGD pass + one WSI refresh per factored
+        // layer.
+        assert_eq!(graph.updates.len(), 1 + 2 * depth);
+        assert!(matches!(graph.updates[0], UpdateOp::SgdClipDecay));
+    }
+
+    #[test]
+    fn grads_match_finite_differences_through_graph_executor() {
+        let m = demo_manifest("fd");
+        let entry = m.model("vit_demo_vanilla").unwrap();
+        let graph = LayerGraph::from_entry(entry).unwrap();
+        let mut exec = GraphExecutor::new(graph, entry).unwrap();
+        let params = entry.load_params().unwrap();
+        let mut task = VisionTask::new("fd", entry.classes, 16, 0.5, 4, 3);
+        let (x, y, _) = task.batch_onehot(entry.batch);
+
+        let logits = exec.forward_train(&params, &x).unwrap();
+        let (_, _, dlogits) = exec.loss_and_grad(&logits, &y);
+        let mut grads = vec![0.0f32; entry.params_len];
+        exec.backward(&params, &dlogits, &mut grads).unwrap();
+
+        // Probe a spread of tensors: embed, attn, mlp, ln, cls/pos, head.
+        let probes = [
+            ("embed.w", 3usize),
+            ("blocks.0.mlp.fc1.w", 7),
+            ("blocks.1.attn.proj.w", 11),
+            ("blocks.0.ln2.g", 2),
+            ("cls", 5),
+            ("pos", 13),
+            ("head.w", 1),
+            ("head.b", 0),
+        ];
+        let h = 1e-2f32;
+        let specs: Vec<TensorSpec> = probes
+            .iter()
+            .map(|(name, _)| exec.plan().spec(name).unwrap().clone())
+            .collect();
+        let mut loss_of = |p: &[f32]| -> f32 {
+            let logits = exec.forward_train(p, &x).unwrap();
+            exec.loss_and_grad(&logits, &y).0
+        };
+        for ((name, kidx), spec) in probes.iter().zip(&specs) {
+            let idx = spec.offset + kidx.min(&(spec.numel() - 1));
+            let mut up = params.clone();
+            up[idx] += h;
+            let lp = loss_of(&up);
+            let mut dn = params.clone();
+            dn[idx] -= h;
+            let lm = loss_of(&dn);
+            let fd = (lp - lm) / (2.0 * h);
+            let an = grads[idx];
+            assert!(
+                (fd - an).abs() < 2e-2 * fd.abs().max(1.0),
+                "{name}[{kidx}]: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn infer_fused_epilogues_match_training_forward() {
+        let m = demo_manifest("fuse");
+        for model in ["vit_demo_vanilla", "vit_demo_wasi_eps80"] {
+            let entry = m.model(model).unwrap();
+            let graph = LayerGraph::from_entry(entry).unwrap();
+            let mut exec = GraphExecutor::new(graph, entry).unwrap();
+            let params = entry.load_params().unwrap();
+            let mut task = VisionTask::new("fuse", entry.classes, 16, 0.5, 4, 9);
+            let (x, _, _) = task.batch_onehot(entry.batch);
+            let train_logits = exec.forward_train(&params, &x).unwrap();
+            let infer_logits = exec.infer(&params, &x, entry.batch).unwrap();
+            assert_eq!(train_logits.len(), infer_logits.len());
+            for (a, b) in train_logits.iter().zip(&infer_logits) {
+                assert!((a - b).abs() < 1e-4, "{model}: {a} vs {b}");
+            }
+        }
+    }
+}

@@ -10,10 +10,11 @@
 //!   `runtime::InferStep`), executed through whichever runtime backend
 //!   is live (PJRT, or the native kernel fallback).
 //! * [`NativeModelEngine`] / [`NativeInferEngine`] (`native` module) —
-//!   full-model training in pure rust: the ViT forward/backward is
-//!   reconstructed from the manifest's `param_spec` and chained from the
-//!   `wasi::layer` Dense/WASI layers, so the default (PJRT-free) build
-//!   fine-tunes end to end.
+//!   full-model training in pure rust: the manifest's `param_spec` is
+//!   parsed into a typed layer-graph IR (`graph` module: plan → node
+//!   program → executor) whose nodes run against the flat parameter
+//!   vector through the shared kernel layer (`linalg::kernels`), so the
+//!   default (PJRT-free) build fine-tunes end to end.
 //!
 //! [`EngineKind`] is the selection policy; `auto` prefers HLO when the
 //! runtime can execute model HLO and falls back to the native engine
@@ -21,8 +22,10 @@
 //! every build configuration.
 
 pub mod demo;
+pub mod graph;
 mod hlo;
 mod native;
+pub mod ops;
 
 use std::str::FromStr;
 
@@ -30,8 +33,10 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::{ModelEntry, Runtime, StepOutput};
 
+pub use graph::{GraphExecutor, LayerGraph, LinearForm, LinearPlan, ModelPlan, Node, NodeTiming};
 pub use hlo::{HloInferEngine, HloTrainEngine};
-pub use native::{LinearForm, LinearPlan, ModelPlan, NativeInferEngine, NativeModelEngine};
+pub use native::{NativeInferEngine, NativeModelEngine};
+pub use ops::{Op, UpdateOp};
 
 /// One training backend for one model variant.
 ///

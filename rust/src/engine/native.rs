@@ -1,570 +1,33 @@
-//! Native full-model engine: ViT fine-tuning reconstructed in pure rust
-//! from the manifest's `param_spec`, with no HLO execution anywhere on
-//! the path.
+//! Native full-model engines: thin drivers over the layer-graph IR
+//! (`engine::graph`).
 //!
-//! [`ModelPlan::from_entry`] parses the flat parameter layout back into
-//! the ViT-tiny architecture the AOT pipeline lowered (patch embed →
-//! CLS/pos → transformer blocks → final norm → head) and refuses any
-//! tensor name it does not recognize — a wrong-model manifest fails
-//! loudly instead of training garbage.  [`NativeModelEngine`] then
-//! chains the existing `wasi::layer` engines (DenseLayer for dense
-//! linears, WasiLayer for factored ones, ASI state threaded through the
-//! flat state vector) into a full forward/backward with softmax
-//! cross-entropy, global-norm gradient clipping, decoupled weight decay
-//! on the matrix weights, SGD, and the per-step WSI refresh — the same
-//! `(params, state, x, y, lr) -> (loss, acc)` contract as the AOT train
-//! step.
+//! [`NativeModelEngine`] owns the flat parameter/state vectors and a
+//! [`GraphExecutor`]; one training step is
+//! `forward → softmax-CE → backward → update-program → state pack`,
+//! every stage executed by the graph against the flat vectors through
+//! the shared kernel layer (`linalg::kernels`).  [`NativeInferEngine`]
+//! is the batch-size-free inference walk of the same graph with fused
+//! bias/GELU epilogues.
 //!
-//! **Documented substitution (DESIGN.md §4):** inside each block the
-//! softmax attention matrix is replaced by the fixed doubly-stochastic
-//! mixing `(I + 11ᵀ/T)/2` applied to the value path
-//! (`qkv → v → mix → proj`) — an attention-shaped dense stack.  The
-//! trainable linears, their shapes, the residual structure, the
-//! activation-memory profile, and the patch→CLS information flow are
-//! identical to the lowered model; only the mixing weights (which the
-//! softmax computes from q/k and which carry no trainable parameters of
-//! their own) are fixed, so the q/k columns of `qkv.w` receive zero
-//! gradient.  Fine-tuning dynamics (loss descent, factored updates, ASI
-//! compression) are preserved; absolute accuracies are not comparable
-//! across engines.
+//! The architecture reconstruction (`ModelPlan`), the node program, and
+//! the documented attention-substitution argument live in
+//! `engine/graph.rs` (DESIGN.md §4).
 
-use std::collections::BTreeMap;
+use anyhow::{bail, Result};
 
-use anyhow::{anyhow, bail, Result};
+use crate::runtime::{ModelEntry, StepOutput};
 
-use crate::linalg::matrix::Mat;
-use crate::linalg::tucker::Tensor;
-use crate::runtime::{ModelEntry, StepOutput, TensorSpec};
-use crate::wasi::asi::AsiCompressor;
-use crate::wasi::layer::{DenseLayer, WasiLayer};
-use crate::wasi::wsi::WsiFactors;
-
+use super::graph::{GraphExecutor, LayerGraph, ModelPlan, NodeTiming};
 use super::{EngineKind, InferEngine, TrainEngine};
-
-/// Mirrors the AOT pipeline's training hyperparameters
-/// (`python/compile/train.py`): global-norm clip and decoupled weight
-/// decay on `.w`/`.l`/`.r` tensors only.
-const GRAD_CLIP: f32 = 2.0;
-const WEIGHT_DECAY: f32 = 1e-4;
-const LN_EPS: f32 = 1e-6;
-
-// ---------------------------------------------------------------------------
-// Plan: param_spec -> architecture
-// ---------------------------------------------------------------------------
-
-/// How one linear layer is parameterized in the flat vector.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum LinearForm {
-    /// `{prefix}.w` (O, I)
-    Dense,
-    /// `{prefix}.l` (O, K) + `{prefix}.r` (K, I)
-    Factored { k: usize },
-}
-
-/// One linear layer recovered from the spec.
-#[derive(Debug, Clone)]
-pub struct LinearPlan {
-    pub name: String,
-    pub form: LinearForm,
-    pub out_dim: usize,
-    pub in_dim: usize,
-}
-
-/// The ViT architecture reconstructed from a manifest entry's
-/// `param_spec` (see `python/compile/model.py::init_vit` for the
-/// authoritative naming).
-#[derive(Debug, Clone)]
-pub struct ModelPlan {
-    pub dim: usize,
-    pub depth: usize,
-    pub tokens: usize,
-    pub patch: usize,
-    pub image: usize,
-    pub patch_dim: usize,
-    pub hidden: usize,
-    pub classes: usize,
-    /// Per block: qkv, proj, fc1, fc2.
-    pub blocks: Vec<[LinearPlan; 4]>,
-    specs: BTreeMap<String, TensorSpec>,
-}
-
-fn isqrt(n: usize) -> Option<usize> {
-    let r = (n as f64).sqrt().round() as usize;
-    (r * r == n).then_some(r)
-}
-
-impl ModelPlan {
-    /// Parse a `param_spec` back into the ViT layer graph.  Every tensor
-    /// name must be accounted for; unknown names (SwinLite stages,
-    /// TinyDec token embeddings, corrupt specs) are refused.
-    pub fn from_entry(entry: &ModelEntry) -> Result<ModelPlan> {
-        if entry.param_spec.is_empty() {
-            bail!(
-                "model {}: manifest entry has no param_spec; the native \
-                 engine cannot reconstruct the layer graph",
-                entry.name
-            );
-        }
-        let mut specs = BTreeMap::new();
-        for t in &entry.param_spec {
-            if t.offset + t.numel() > entry.params_len {
-                bail!(
-                    "model {}: tensor {} [{:?} @ {}] overruns params_len {}",
-                    entry.name, t.name, t.shape, t.offset, entry.params_len
-                );
-            }
-            if specs.insert(t.name.clone(), t.clone()).is_some() {
-                bail!("model {}: duplicate param_spec tensor {}", entry.name, t.name);
-            }
-        }
-        let get = |name: &str| -> Result<&TensorSpec> {
-            specs.get(name).ok_or_else(|| {
-                anyhow!("model {}: param_spec is missing tensor {name:?}", entry.name)
-            })
-        };
-
-        // Fixed scaffolding tensors.
-        let embed = get("embed.w")?;
-        if embed.shape.len() != 2 {
-            bail!("embed.w must be (D, patch_dim), got {:?}", embed.shape);
-        }
-        let (dim, patch_dim) = (embed.shape[0], embed.shape[1]);
-        let pos = get("pos")?;
-        if pos.shape.len() != 3 || pos.shape[0] != 1 || pos.shape[2] != dim {
-            bail!("pos must be (1, tokens, {dim}), got {:?}", pos.shape);
-        }
-        let tokens = pos.shape[1];
-        if tokens < 2 {
-            bail!("pos token count {tokens} too small for CLS + patches");
-        }
-        let cls = get("cls")?;
-        if cls.shape != [1, 1, dim] {
-            bail!("cls must be (1, 1, {dim}), got {:?}", cls.shape);
-        }
-        let head = get("head.w")?;
-        if head.shape.len() != 2 || head.shape[1] != dim {
-            bail!("head.w must be (classes, {dim}), got {:?}", head.shape);
-        }
-        let classes = head.shape[0];
-        if classes != entry.classes {
-            bail!("head.w rows {} != manifest classes {}", classes, entry.classes);
-        }
-        let patch = isqrt(patch_dim / 3)
-            .filter(|p| p * p * 3 == patch_dim)
-            .ok_or_else(|| anyhow!("patch_dim {patch_dim} is not 3·p²"))?;
-        let grid = isqrt(tokens - 1)
-            .ok_or_else(|| anyhow!("tokens {tokens} is not g²+1"))?;
-        let image = grid * patch;
-        if image * image * 3 != entry.input_dim {
-            bail!(
-                "reconstructed image {image}x{image}x3 != manifest input_dim {}",
-                entry.input_dim
-            );
-        }
-
-        // Blocks: contiguous indices, each with the full layer set.
-        let mut depth = 0;
-        for name in specs.keys() {
-            if let Some(rest) = name.strip_prefix("blocks.") {
-                let idx: usize = rest
-                    .split('.')
-                    .next()
-                    .unwrap_or("")
-                    .parse()
-                    .map_err(|_| anyhow!("bad block tensor name {name:?}"))?;
-                depth = depth.max(idx + 1);
-            }
-        }
-        if depth == 0 {
-            bail!("model {}: param_spec has no blocks.* tensors", entry.name);
-        }
-
-        let linear_plan = |prefix: &str, o: usize, i: usize| -> Result<LinearPlan> {
-            let b = get(&format!("{prefix}.b"))?;
-            if b.shape != [o] {
-                bail!("{prefix}.b must be ({o},), got {:?}", b.shape);
-            }
-            if let Some(w) = specs.get(&format!("{prefix}.w")) {
-                if w.shape != [o, i] {
-                    bail!("{prefix}.w must be ({o}, {i}), got {:?}", w.shape);
-                }
-                return Ok(LinearPlan {
-                    name: prefix.to_string(),
-                    form: LinearForm::Dense,
-                    out_dim: o,
-                    in_dim: i,
-                });
-            }
-            let l = get(&format!("{prefix}.l"))?;
-            let r = get(&format!("{prefix}.r"))?;
-            if l.shape.len() != 2 || r.shape.len() != 2 || l.shape[0] != o
-                || r.shape[1] != i || l.shape[1] != r.shape[0]
-            {
-                bail!(
-                    "{prefix}: factored shapes l {:?} / r {:?} inconsistent with ({o}, {i})",
-                    l.shape, r.shape
-                );
-            }
-            Ok(LinearPlan {
-                name: prefix.to_string(),
-                form: LinearForm::Factored { k: l.shape[1] },
-                out_dim: o,
-                in_dim: i,
-            })
-        };
-
-        let mut hidden = 0;
-        let mut blocks = Vec::with_capacity(depth);
-        for b in 0..depth {
-            let p = format!("blocks.{b}");
-            for ln in ["ln1", "ln2"] {
-                for gb in ["g", "b"] {
-                    let t = get(&format!("{p}.{ln}.{gb}"))?;
-                    if t.shape != [dim] {
-                        bail!("{p}.{ln}.{gb} must be ({dim},), got {:?}", t.shape);
-                    }
-                }
-            }
-            let fc1 = {
-                // hidden comes from the first block's fc1 output.
-                let probe = specs
-                    .get(&format!("{p}.mlp.fc1.w"))
-                    .or_else(|| specs.get(&format!("{p}.mlp.fc1.l")))
-                    .ok_or_else(|| anyhow!("{p}.mlp.fc1 has neither .w nor .l"))?;
-                let h = probe.shape.first().copied().unwrap_or(0);
-                if hidden == 0 {
-                    hidden = h;
-                }
-                linear_plan(&format!("{p}.mlp.fc1"), hidden, dim)?
-            };
-            blocks.push([
-                linear_plan(&format!("{p}.attn.qkv"), 3 * dim, dim)?,
-                linear_plan(&format!("{p}.attn.proj"), dim, dim)?,
-                fc1,
-                linear_plan(&format!("{p}.mlp.fc2"), dim, hidden)?,
-            ]);
-        }
-        for suffix in ["norm.g", "norm.b"] {
-            let t = get(suffix)?;
-            if t.shape != [dim] {
-                bail!("{suffix} must be ({dim},), got {:?}", t.shape);
-            }
-        }
-        let hb = get("head.b")?;
-        if hb.shape != [classes] {
-            bail!("head.b must be ({classes},), got {:?}", hb.shape);
-        }
-        let eb = get("embed.b")?;
-        if eb.shape != [dim] {
-            bail!("embed.b must be ({dim},), got {:?}", eb.shape);
-        }
-
-        // Grammar closure: the spec must contain exactly the tensors
-        // the reconstructed plan accounts for — the expected-name set is
-        // generated from the plan itself, so the grammar lives in one
-        // place.  (Missing tensors already failed above via `get`.)
-        let mut expected: std::collections::BTreeSet<String> = [
-            "embed.w", "embed.b", "cls", "pos", "norm.g", "norm.b", "head.w", "head.b",
-        ]
-        .iter()
-        .map(|s| s.to_string())
-        .collect();
-        for (bi, blist) in blocks.iter().enumerate() {
-            for ln in ["ln1", "ln2"] {
-                for gb in ["g", "b"] {
-                    expected.insert(format!("blocks.{bi}.{ln}.{gb}"));
-                }
-            }
-            for lp in blist {
-                expected.insert(format!("{}.b", lp.name));
-                match lp.form {
-                    LinearForm::Dense => {
-                        expected.insert(format!("{}.w", lp.name));
-                    }
-                    LinearForm::Factored { .. } => {
-                        expected.insert(format!("{}.l", lp.name));
-                        expected.insert(format!("{}.r", lp.name));
-                    }
-                }
-            }
-        }
-        for name in specs.keys() {
-            if !expected.contains(name) {
-                bail!(
-                    "model {}: param_spec tensor {name:?} is not part of the \
-                     ViT layer grammar; the native engine refuses to guess \
-                     (only vit_* variants are reconstructable)",
-                    entry.name
-                );
-            }
-        }
-
-        Ok(ModelPlan {
-            dim, depth, tokens, patch, image, patch_dim, hidden, classes,
-            blocks,
-            specs,
-        })
-    }
-
-    pub fn spec(&self, name: &str) -> Result<&TensorSpec> {
-        self.specs
-            .get(name)
-            .ok_or_else(|| anyhow!("no tensor {name:?} in plan"))
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Layer building blocks
-// ---------------------------------------------------------------------------
-
-/// Per-token layer norm with saved normalization stats for backward.
-struct LayerNormSlot {
-    g: Vec<f32>,
-    b: Vec<f32>,
-    saved: Option<(Vec<f32>, Vec<f32>, Vec<usize>)>, // (xhat, inv_std, shape)
-}
-
-impl LayerNormSlot {
-    fn new(d: usize) -> Self {
-        LayerNormSlot { g: vec![1.0; d], b: vec![0.0; d], saved: None }
-    }
-
-    fn forward(&mut self, x: &Tensor) -> Tensor {
-        let d = *x.shape.last().unwrap();
-        let rows = x.numel() / d;
-        let mut xhat = vec![0.0f32; x.numel()];
-        let mut inv_std = vec![0.0f32; rows];
-        let mut y = vec![0.0f32; x.numel()];
-        for r in 0..rows {
-            let xi = &x.data[r * d..(r + 1) * d];
-            let mu = xi.iter().sum::<f32>() / d as f32;
-            let var = xi.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-            let is = 1.0 / (var + LN_EPS).sqrt();
-            inv_std[r] = is;
-            for c in 0..d {
-                let h = (xi[c] - mu) * is;
-                xhat[r * d + c] = h;
-                y[r * d + c] = h * self.g[c] + self.b[c];
-            }
-        }
-        self.saved = Some((xhat, inv_std, x.shape.clone()));
-        Tensor::from_vec(&x.shape, y)
-    }
-
-    /// Returns (dx, dg, db).
-    fn backward(&mut self, dy: &Tensor) -> (Tensor, Vec<f32>, Vec<f32>) {
-        let (xhat, inv_std, shape) = self.saved.take().expect("ln forward before backward");
-        let d = *shape.last().unwrap();
-        let rows = dy.numel() / d;
-        let mut dg = vec![0.0f32; d];
-        let mut db = vec![0.0f32; d];
-        let mut dx = vec![0.0f32; dy.numel()];
-        for r in 0..rows {
-            let dyr = &dy.data[r * d..(r + 1) * d];
-            let xhr = &xhat[r * d..(r + 1) * d];
-            let mut m1 = 0.0f32; // mean(dxhat)
-            let mut m2 = 0.0f32; // mean(dxhat * xhat)
-            for c in 0..d {
-                let dxh = dyr[c] * self.g[c];
-                m1 += dxh;
-                m2 += dxh * xhr[c];
-                dg[c] += dyr[c] * xhr[c];
-                db[c] += dyr[c];
-            }
-            m1 /= d as f32;
-            m2 /= d as f32;
-            for c in 0..d {
-                let dxh = dyr[c] * self.g[c];
-                dx[r * d + c] = inv_std[r] * (dxh - m1 - xhr[c] * m2);
-            }
-        }
-        (Tensor::from_vec(&shape, dx), dg, db)
-    }
-}
-
-/// Dense or WASI-factored linear with bias, backed by the wasi::layer
-/// engines.
-enum LinearKind {
-    Dense(DenseLayer),
-    Wasi(WasiLayer),
-}
-
-struct LinearSlot {
-    plan: LinearPlan,
-    kind: LinearKind,
-    bias: Vec<f32>,
-}
-
-impl LinearSlot {
-    fn forward(&mut self, x: &Tensor) -> Tensor {
-        let mut y = match &mut self.kind {
-            LinearKind::Dense(d) => d.forward(x),
-            LinearKind::Wasi(w) => w.forward(x),
-        };
-        let o = self.plan.out_dim;
-        for chunk in y.data.chunks_mut(o) {
-            for (v, b) in chunk.iter_mut().zip(&self.bias) {
-                *v += b;
-            }
-        }
-        y
-    }
-
-    /// Backward; writes this layer's weight/bias grads into the flat
-    /// gradient vector and returns dx.
-    fn backward(&mut self, dy: &Tensor, plan: &ModelPlan, grads: &mut [f32]) -> Result<Tensor> {
-        let o = self.plan.out_dim;
-        let bspec = plan.spec(&format!("{}.b", self.plan.name))?;
-        {
-            let db = &mut grads[bspec.offset..bspec.offset + o];
-            for chunk in dy.data.chunks(o) {
-                for (g, v) in db.iter_mut().zip(chunk) {
-                    *g += v;
-                }
-            }
-        }
-        match &mut self.kind {
-            LinearKind::Dense(d) => {
-                let (dx, dw) = d.backward(dy);
-                write_grad(grads, plan.spec(&format!("{}.w", self.plan.name))?, &dw.data);
-                Ok(dx)
-            }
-            LinearKind::Wasi(w) => {
-                let (dx, dl, dr) = w.backward(dy);
-                write_grad(grads, plan.spec(&format!("{}.l", self.plan.name))?, &dl.data);
-                write_grad(grads, plan.spec(&format!("{}.r", self.plan.name))?, &dr.data);
-                Ok(dx)
-            }
-        }
-    }
-}
-
-fn write_grad(grads: &mut [f32], spec: &TensorSpec, data: &[f32]) {
-    grads[spec.offset..spec.offset + data.len()].copy_from_slice(data);
-}
-
-struct BlockSlots {
-    ln1: LayerNormSlot,
-    qkv: LinearSlot,
-    proj: LinearSlot,
-    ln2: LayerNormSlot,
-    fc1: LinearSlot,
-    fc2: LinearSlot,
-    gelu_in: Option<Tensor>,
-}
-
-// ---------------------------------------------------------------------------
-// Activation math
-// ---------------------------------------------------------------------------
-
-const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
-const GELU_A: f32 = 0.044_715;
-
-fn gelu(x: f32) -> f32 {
-    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
-}
-
-fn gelu_grad(x: f32) -> f32 {
-    let inner = GELU_C * (x + GELU_A * x * x * x);
-    let t = inner.tanh();
-    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
-}
-
-/// (B, image²·3) flat images -> (B, grid², patch²·3) patch tokens
-/// (matches `model.py::patchify`'s reshape/transpose).
-fn patchify(x: &[f32], b: usize, image: usize, patch: usize) -> Tensor {
-    let grid = image / patch;
-    let pd = patch * patch * 3;
-    let mut out = vec![0.0f32; b * grid * grid * pd];
-    for bi in 0..b {
-        for gy in 0..grid {
-            for py in 0..patch {
-                for gx in 0..grid {
-                    for px in 0..patch {
-                        for c in 0..3 {
-                            let src = bi * image * image * 3
-                                + ((gy * patch + py) * image + gx * patch + px) * 3
-                                + c;
-                            let dst = ((bi * grid + gy) * grid + gx) * pd
-                                + (py * patch + px) * 3
-                                + c;
-                            out[dst] = x[src];
-                        }
-                    }
-                }
-            }
-        }
-    }
-    Tensor::from_vec(&[b, grid * grid, pd], out)
-}
-
-/// The fixed token mixing standing in for softmax attention:
-/// `out = ((I + 11ᵀ/T) / 2) · v` per batch element — half identity,
-/// half uniform attention.  Doubly stochastic, parameter-free, and
-/// symmetric (so backward applies the same operator).  This is what
-/// routes patch information to the CLS head without executing softmax
-/// attention (DESIGN.md §4 substitution).
-fn uniform_mix(v: &mut [f32], b: usize, t: usize, d: usize) {
-    let mut mean = vec![0.0f32; d];
-    for bi in 0..b {
-        mean.iter_mut().for_each(|m| *m = 0.0);
-        let batch = &v[bi * t * d..(bi + 1) * t * d];
-        for row in batch.chunks(d) {
-            for (m, x) in mean.iter_mut().zip(row) {
-                *m += x;
-            }
-        }
-        for m in mean.iter_mut() {
-            *m /= t as f32;
-        }
-        let batch = &mut v[bi * t * d..(bi + 1) * t * d];
-        for row in batch.chunks_mut(d) {
-            for (x, m) in row.iter_mut().zip(&mean) {
-                *x = 0.5 * *x + 0.5 * m;
-            }
-        }
-    }
-}
-
-fn log_softmax_rows(logits: &[f32], classes: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; logits.len()];
-    for (row, chunk) in logits.chunks(classes).enumerate() {
-        let m = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let lse = chunk.iter().map(|v| (v - m).exp()).sum::<f32>().ln() + m;
-        for (c, &v) in chunk.iter().enumerate() {
-            out[row * classes + c] = v - lse;
-        }
-    }
-    out
-}
-
-// ---------------------------------------------------------------------------
-// The engine
-// ---------------------------------------------------------------------------
 
 /// Pure-rust training engine for one ViT variant.
 pub struct NativeModelEngine {
     entry: ModelEntry,
-    plan: ModelPlan,
+    exec: GraphExecutor,
     flat_params: Vec<f32>,
     flat_state: Vec<f32>,
-    embed: LinearSlot,
-    cls: Vec<f32>,
-    pos: Vec<f32>,
-    blocks: Vec<BlockSlots>,
-    norm: LayerNormSlot,
-    head: LinearSlot,
-}
-
-fn seed_from(name: &str) -> u64 {
-    // FNV-1a over the layer name: deterministic ASI init when the
-    // manifest ships no state vector.
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for b in name.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x1000_0000_01b3);
-    }
-    h
+    /// Reused flat gradient buffer (zeroed each step).
+    grads: Vec<f32>,
 }
 
 impl NativeModelEngine {
@@ -584,483 +47,41 @@ impl NativeModelEngine {
         if state.len() != entry.state_len {
             bail!("state length {} != manifest {}", state.len(), entry.state_len);
         }
-        let plan = ModelPlan::from_entry(entry)?;
-        let dims = [entry.batch, plan.tokens, 0usize]; // last dim set per layer
-
-        let build_linear = |lp: &LinearPlan| -> Result<LinearSlot> {
-            let kind = match lp.form {
-                LinearForm::Dense => {
-                    LinearKind::Dense(DenseLayer::new(Mat::zeros(lp.out_dim, lp.in_dim)))
-                }
-                LinearForm::Factored { k } => {
-                    let mut ldims = dims;
-                    ldims[2] = lp.in_dim;
-                    // Rank source order: manifest asi_ranks, else the
-                    // shipped state tensors' shapes (so warm-start bases
-                    // always fit), else a fresh default.
-                    let from_state = || -> Option<Vec<usize>> {
-                        let rs: Vec<usize> = (1..=3usize)
-                            .filter_map(|m| {
-                                let key = format!("{}.u{m}", lp.name);
-                                entry
-                                    .state_spec
-                                    .iter()
-                                    .find(|t| t.name == key)
-                                    .and_then(|t| t.shape.get(1).copied())
-                            })
-                            .collect();
-                        (rs.len() == 3).then_some(rs)
-                    };
-                    let ranks: Vec<usize> = entry
-                        .asi_ranks
-                        .get(&lp.name)
-                        .cloned()
-                        .filter(|r| r.len() == 3)
-                        .or_else(from_state)
-                        .unwrap_or_else(|| {
-                            vec![ldims[0].min(4), ldims[1].min(8), ldims[2].min(16)]
-                        });
-                    let asi = AsiCompressor::new(&ldims, &ranks, seed_from(&lp.name));
-                    let factors = WsiFactors {
-                        l: Mat::zeros(lp.out_dim, k),
-                        r: Mat::zeros(k, lp.in_dim),
-                    };
-                    LinearKind::Wasi(WasiLayer::new(factors, asi))
-                }
-            };
-            Ok(LinearSlot { plan: lp.clone(), kind, bias: vec![0.0; lp.out_dim] })
-        };
-
-        let embed_plan = LinearPlan {
-            name: "embed".into(),
-            form: LinearForm::Dense,
-            out_dim: plan.dim,
-            in_dim: plan.patch_dim,
-        };
-        let head_plan = LinearPlan {
-            name: "head".into(),
-            form: LinearForm::Dense,
-            out_dim: plan.classes,
-            in_dim: plan.dim,
-        };
-        let mut blocks = Vec::with_capacity(plan.depth);
-        for bp in &plan.blocks {
-            blocks.push(BlockSlots {
-                ln1: LayerNormSlot::new(plan.dim),
-                qkv: build_linear(&bp[0])?,
-                proj: build_linear(&bp[1])?,
-                ln2: LayerNormSlot::new(plan.dim),
-                fc1: build_linear(&bp[2])?,
-                fc2: build_linear(&bp[3])?,
-                gelu_in: None,
-            });
-        }
-        let mut eng = NativeModelEngine {
+        let graph = LayerGraph::from_entry(entry)?;
+        let mut exec = GraphExecutor::new(graph, entry)?;
+        exec.load_state(&state)?;
+        Ok(NativeModelEngine {
             entry: entry.clone(),
-            cls: vec![0.0; plan.dim],
-            pos: vec![0.0; plan.tokens * plan.dim],
-            embed: build_linear(&embed_plan)?,
-            head: build_linear(&head_plan)?,
-            norm: LayerNormSlot::new(plan.dim),
-            blocks,
-            plan,
+            grads: vec![0.0; params.len()],
+            exec,
             flat_params: params,
             flat_state: state,
-        };
-        eng.sync_from_flat()?;
-        eng.state_into_layers()?;
-        Ok(eng)
+        })
     }
 
-    /// Copy all weights out of the flat vector into the layer structs.
-    fn sync_from_flat(&mut self) -> Result<()> {
-        fn slice<'a>(plan: &ModelPlan, flat: &'a [f32], name: &str) -> Result<&'a [f32]> {
-            let s = plan.spec(name)?;
-            Ok(&flat[s.offset..s.offset + s.numel()])
-        }
-
-        // Copies into the existing buffers (shapes are fixed at
-        // construction) — no per-step allocation on the hot path.
-        fn fill_slot(slot: &mut LinearSlot, plan: &ModelPlan, flat: &[f32]) -> Result<()> {
-            let name = slot.plan.name.clone();
-            slot.bias
-                .copy_from_slice(slice(plan, flat, &format!("{name}.b"))?);
-            match &mut slot.kind {
-                LinearKind::Dense(d) => {
-                    d.w.data
-                        .copy_from_slice(slice(plan, flat, &format!("{name}.w"))?);
-                }
-                LinearKind::Wasi(w) => {
-                    w.factors
-                        .l
-                        .data
-                        .copy_from_slice(slice(plan, flat, &format!("{name}.l"))?);
-                    w.factors
-                        .r
-                        .data
-                        .copy_from_slice(slice(plan, flat, &format!("{name}.r"))?);
-                }
-            }
-            Ok(())
-        }
-
-        self.cls
-            .copy_from_slice(slice(&self.plan, &self.flat_params, "cls")?);
-        self.pos
-            .copy_from_slice(slice(&self.plan, &self.flat_params, "pos")?);
-        self.norm
-            .g
-            .copy_from_slice(slice(&self.plan, &self.flat_params, "norm.g")?);
-        self.norm
-            .b
-            .copy_from_slice(slice(&self.plan, &self.flat_params, "norm.b")?);
-        fill_slot(&mut self.embed, &self.plan, &self.flat_params)?;
-        fill_slot(&mut self.head, &self.plan, &self.flat_params)?;
-        for (bi, b) in self.blocks.iter_mut().enumerate() {
-            let base = format!("blocks.{bi}");
-            b.ln1
-                .g
-                .copy_from_slice(slice(&self.plan, &self.flat_params, &format!("{base}.ln1.g"))?);
-            b.ln1
-                .b
-                .copy_from_slice(slice(&self.plan, &self.flat_params, &format!("{base}.ln1.b"))?);
-            b.ln2
-                .g
-                .copy_from_slice(slice(&self.plan, &self.flat_params, &format!("{base}.ln2.g"))?);
-            b.ln2
-                .b
-                .copy_from_slice(slice(&self.plan, &self.flat_params, &format!("{base}.ln2.b"))?);
-            fill_slot(&mut b.qkv, &self.plan, &self.flat_params)?;
-            fill_slot(&mut b.proj, &self.plan, &self.flat_params)?;
-            fill_slot(&mut b.fc1, &self.plan, &self.flat_params)?;
-            fill_slot(&mut b.fc2, &self.plan, &self.flat_params)?;
-        }
-        Ok(())
+    /// The reconstructed architecture plan.
+    pub fn plan(&self) -> &ModelPlan {
+        self.exec.plan()
     }
 
-    /// Copy ASI bases out of the flat state vector into the compressors.
-    fn state_into_layers(&mut self) -> Result<()> {
-        if self.entry.state_spec.is_empty() {
-            return Ok(());
-        }
-        let specs: BTreeMap<String, TensorSpec> = self
-            .entry
-            .state_spec
-            .iter()
-            .map(|t| (t.name.clone(), t.clone()))
-            .collect();
-        for b in &mut self.blocks {
-            for slot in [&mut b.qkv, &mut b.proj, &mut b.fc1, &mut b.fc2] {
-                if let LinearKind::Wasi(w) = &mut slot.kind {
-                    for (m, st) in w.asi.states.iter_mut().enumerate() {
-                        let key = format!("{}.u{}", slot.plan.name, m + 1);
-                        if let Some(spec) = specs.get(&key) {
-                            // Shipped warm-start bases must fit exactly;
-                            // silently training from random init instead
-                            // would be the quiet-garbage failure mode
-                            // this engine refuses on principle.
-                            if spec.shape != [st.u.rows, st.u.cols] {
-                                bail!(
-                                    "state tensor {key} shape {:?} does not match \
-                                     the ASI basis ({}, {})",
-                                    spec.shape, st.u.rows, st.u.cols
-                                );
-                            }
-                            if spec.offset + spec.numel() > self.flat_state.len() {
-                                bail!(
-                                    "state tensor {key} [{:?} @ {}] overruns state_len {}",
-                                    spec.shape, spec.offset,
-                                    self.flat_state.len()
-                                );
-                            }
-                            st.u.data.copy_from_slice(
-                                &self.flat_state[spec.offset..spec.offset + spec.numel()],
-                            );
-                        }
-                    }
-                }
-            }
-        }
-        Ok(())
+    /// Toggle per-node wallclock accumulation (latency attribution).
+    pub fn set_profiling(&mut self, on: bool) {
+        self.exec.set_profiling(on);
     }
 
-    /// Pack the (forward-refreshed) ASI bases back into the flat state
-    /// vector.  State entries that belong to layers the native engine
-    /// keeps dense (the ASI-only baseline) pass through unchanged.
-    fn state_from_layers(&mut self) {
-        if self.entry.state_spec.is_empty() {
-            return;
-        }
-        let specs: BTreeMap<String, TensorSpec> = self
-            .entry
-            .state_spec
-            .iter()
-            .map(|t| (t.name.clone(), t.clone()))
-            .collect();
-        for b in &self.blocks {
-            for slot in [&b.qkv, &b.proj, &b.fc1, &b.fc2] {
-                if let LinearKind::Wasi(w) = &slot.kind {
-                    for (m, st) in w.asi.states.iter().enumerate() {
-                        let key = format!("{}.u{}", slot.plan.name, m + 1);
-                        if let Some(spec) = specs.get(&key) {
-                            if spec.numel() == st.u.data.len() {
-                                self.flat_state[spec.offset..spec.offset + spec.numel()]
-                                    .copy_from_slice(&st.u.data);
-                            }
-                        }
-                    }
-                }
-            }
-        }
+    pub fn reset_timings(&mut self) {
+        self.exec.reset_timings();
     }
 
-    /// Forward pass to logits (B, classes), saving everything backward
-    /// needs inside the layer slots.
-    fn forward(&mut self, x: &[f32]) -> Result<Tensor> {
-        let b = self.entry.batch;
-        if x.len() != b * self.entry.input_dim {
-            bail!(
-                "x length {} != batch {} * input_dim {}",
-                x.len(), b, self.entry.input_dim
-            );
-        }
-        let (t, d) = (self.plan.tokens, self.plan.dim);
-        let patches = patchify(x, b, self.plan.image, self.plan.patch);
-        let emb = self.embed.forward(&patches); // (B, G², D)
-
-        let mut tok = vec![0.0f32; b * t * d];
-        for bi in 0..b {
-            tok[bi * t * d..bi * t * d + d].copy_from_slice(&self.cls);
-            let src = &emb.data[bi * (t - 1) * d..(bi + 1) * (t - 1) * d];
-            tok[bi * t * d + d..(bi + 1) * t * d].copy_from_slice(src);
-            for (o, p) in tok[bi * t * d..(bi + 1) * t * d].iter_mut().zip(&self.pos) {
-                *o += p;
-            }
-        }
-        let mut xcur = Tensor::from_vec(&[b, t, d], tok);
-
-        for blk in &mut self.blocks {
-            // Attention-shaped dense stack: value path through the fixed
-            // uniform token mixing (see module docs).
-            let h = blk.ln1.forward(&xcur);
-            let a = blk.qkv.forward(&h); // (B, T, 3D)
-            let mut v = vec![0.0f32; b * t * d];
-            for row in 0..b * t {
-                v[row * d..(row + 1) * d]
-                    .copy_from_slice(&a.data[row * 3 * d + 2 * d..(row + 1) * 3 * d]);
-            }
-            uniform_mix(&mut v, b, t, d);
-            let p = blk.proj.forward(&Tensor::from_vec(&[b, t, d], v));
-            for (o, pv) in xcur.data.iter_mut().zip(&p.data) {
-                *o += pv;
-            }
-            // MLP.
-            let h2 = blk.ln2.forward(&xcur);
-            let f = blk.fc1.forward(&h2); // (B, T, H)
-            let mut g = f.data.clone();
-            for v in g.iter_mut() {
-                *v = gelu(*v);
-            }
-            blk.gelu_in = Some(f.clone());
-            let m = blk.fc2.forward(&Tensor::from_vec(&f.shape, g));
-            for (o, mv) in xcur.data.iter_mut().zip(&m.data) {
-                *o += mv;
-            }
-        }
-
-        let z = self.norm.forward(&xcur);
-        let mut cls_tok = vec![0.0f32; b * d];
-        for bi in 0..b {
-            cls_tok[bi * d..(bi + 1) * d].copy_from_slice(&z.data[bi * t * d..bi * t * d + d]);
-        }
-        Ok(self.head.forward(&Tensor::from_vec(&[b, 1, d], cls_tok)))
-    }
-
-    /// Backward from dlogits to a flat gradient vector aligned with
-    /// `param_spec`.
-    fn backward(&mut self, dlogits: &Tensor) -> Result<Vec<f32>> {
-        let b = self.entry.batch;
-        let (t, d) = (self.plan.tokens, self.plan.dim);
-        // Field-disjoint borrows: the layer slots are mutated while the
-        // plan is only read, so no clone is needed on the hot path.
-        let plan = &self.plan;
-        let mut grads = vec![0.0f32; self.entry.params_len];
-
-        let dcls_tok = self.head.backward(dlogits, plan, &mut grads)?;
-
-        let mut dz = vec![0.0f32; b * t * d];
-        for bi in 0..b {
-            dz[bi * t * d..bi * t * d + d]
-                .copy_from_slice(&dcls_tok.data[bi * d..(bi + 1) * d]);
-        }
-        let (mut dx, dng, dnb) = self.norm.backward(&Tensor::from_vec(&[b, t, d], dz));
-        write_grad(&mut grads, plan.spec("norm.g")?, &dng);
-        write_grad(&mut grads, plan.spec("norm.b")?, &dnb);
-
-        for blk in self.blocks.iter_mut().rev() {
-            let base = blk.qkv.plan.name.trim_end_matches(".attn.qkv").to_string();
-            // MLP branch: x2 = x1 + fc2(gelu(fc1(ln2(x1))))
-            let f = blk.gelu_in.take().expect("forward before backward");
-            let dg_t = blk.fc2.backward(&dx, plan, &mut grads)?; // d(gelu out)
-            let mut df = dg_t;
-            for (v, fv) in df.data.iter_mut().zip(&f.data) {
-                *v *= gelu_grad(*fv);
-            }
-            let dh2 = blk.fc1.backward(&df, plan, &mut grads)?;
-            let (dx1_ln, dg2, db2) = blk.ln2.backward(&dh2);
-            write_grad(&mut grads, plan.spec(&format!("{base}.ln2.g"))?, &dg2);
-            write_grad(&mut grads, plan.spec(&format!("{base}.ln2.b"))?, &db2);
-            for (v, add) in dx.data.iter_mut().zip(&dx1_ln.data) {
-                *v += add;
-            }
-            // Attention branch: x1 = x + proj(mix(v(qkv(ln1(x)))))
-            let dv = blk.proj.backward(&dx, plan, &mut grads)?;
-            // The mixing matrix (I + 11ᵀ/T)/2 is symmetric, so its
-            // backward is the same operator.
-            let mut dv_data = dv.data;
-            uniform_mix(&mut dv_data, b, t, d);
-            let mut da = vec![0.0f32; b * t * 3 * d];
-            for row in 0..b * t {
-                da[row * 3 * d + 2 * d..(row + 1) * 3 * d]
-                    .copy_from_slice(&dv_data[row * d..(row + 1) * d]);
-            }
-            let dh = blk
-                .qkv
-                .backward(&Tensor::from_vec(&[b, t, 3 * d], da), plan, &mut grads)?;
-            let (dx_ln, dg1, db1) = blk.ln1.backward(&dh);
-            write_grad(&mut grads, plan.spec(&format!("{base}.ln1.g"))?, &dg1);
-            write_grad(&mut grads, plan.spec(&format!("{base}.ln1.b"))?, &db1);
-            for (v, add) in dx.data.iter_mut().zip(&dx_ln.data) {
-                *v += add;
-            }
-        }
-
-        // Token assembly: tok = concat(cls, embed) + pos.
-        {
-            let pos_spec = plan.spec("pos")?;
-            let dpos = &mut grads[pos_spec.offset..pos_spec.offset + pos_spec.numel()];
-            for bi in 0..b {
-                for (g, v) in dpos
-                    .iter_mut()
-                    .zip(&dx.data[bi * t * d..(bi + 1) * t * d])
-                {
-                    *g += v;
-                }
-            }
-        }
-        {
-            let cls_spec = plan.spec("cls")?;
-            let dcls = &mut grads[cls_spec.offset..cls_spec.offset + cls_spec.numel()];
-            for bi in 0..b {
-                for (g, v) in dcls.iter_mut().zip(&dx.data[bi * t * d..bi * t * d + d]) {
-                    *g += v;
-                }
-            }
-        }
-        let mut demb = vec![0.0f32; b * (t - 1) * d];
-        for bi in 0..b {
-            demb[bi * (t - 1) * d..(bi + 1) * (t - 1) * d]
-                .copy_from_slice(&dx.data[bi * t * d + d..(bi + 1) * t * d]);
-        }
-        self.embed
-            .backward(&Tensor::from_vec(&[b, t - 1, d], demb), plan, &mut grads)?;
-        Ok(grads)
-    }
-
-    /// Clip + weight-decay + SGD + WSI refresh, mutating the flat
-    /// parameter vector (mirrors the AOT step's update rule).
-    fn apply_update(&mut self, grads: &[f32], lr: f32) -> Result<()> {
-        let norm = grads
-            .iter()
-            .map(|g| (*g as f64) * (*g as f64))
-            .sum::<f64>()
-            .sqrt() as f32;
-        let scale = if norm > GRAD_CLIP { GRAD_CLIP / norm } else { 1.0 };
-        for spec in self.plan.specs.values() {
-            let decay = spec.name.ends_with(".w")
-                || spec.name.ends_with(".l")
-                || spec.name.ends_with(".r");
-            let wd = if decay { WEIGHT_DECAY } else { 0.0 };
-            let lo = spec.offset;
-            let hi = lo + spec.numel();
-            for (p, g) in self.flat_params[lo..hi].iter_mut().zip(&grads[lo..hi]) {
-                *p -= lr * (g * scale + wd * *p);
-            }
-        }
-        // WSI refresh (Algorithm 1) on every factored layer, in flat space.
-        for blist in &self.plan.blocks {
-            for lp in blist {
-                if let LinearForm::Factored { k } = lp.form {
-                    let ls = self.plan.spec(&format!("{}.l", lp.name))?;
-                    let rs = self.plan.spec(&format!("{}.r", lp.name))?;
-                    let mut f = WsiFactors {
-                        l: Mat::from_vec(
-                            lp.out_dim,
-                            k,
-                            self.flat_params[ls.offset..ls.offset + ls.numel()].to_vec(),
-                        ),
-                        r: Mat::from_vec(
-                            k,
-                            lp.in_dim,
-                            self.flat_params[rs.offset..rs.offset + rs.numel()].to_vec(),
-                        ),
-                    };
-                    f.refresh();
-                    self.flat_params[ls.offset..ls.offset + ls.numel()]
-                        .copy_from_slice(&f.l.data);
-                    self.flat_params[rs.offset..rs.offset + rs.numel()]
-                        .copy_from_slice(&f.r.data);
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Loss + accuracy + dlogits for a batch of logits.
-    fn loss_and_grad(&self, logits: &Tensor, y_onehot: &[f32]) -> (f32, f32, Tensor) {
-        let c = self.plan.classes;
-        let b = self.entry.batch;
-        let logp = log_softmax_rows(&logits.data, c);
-        let mut loss = 0.0f64;
-        let mut correct = 0usize;
-        let mut dl = vec![0.0f32; logits.data.len()];
-        for row in 0..b {
-            let lp = &logp[row * c..(row + 1) * c];
-            let y = &y_onehot[row * c..(row + 1) * c];
-            let mut row_loss = 0.0f32;
-            let mut label = 0usize;
-            for j in 0..c {
-                row_loss -= y[j] * lp[j];
-                if y[j] > y[label] {
-                    label = j;
-                }
-            }
-            loss += row_loss as f64;
-            let pred = (0..c)
-                .max_by(|&a, &bb| lp[a].total_cmp(&lp[bb]))
-                .unwrap_or(0);
-            if pred == label {
-                correct += 1;
-            }
-            for j in 0..c {
-                dl[row * c + j] = (lp[j].exp() - y[j]) / b as f32;
-            }
-        }
-        (
-            (loss / b as f64) as f32,
-            correct as f32 / b as f32,
-            Tensor::from_vec(&logits.shape, dl),
-        )
+    /// Per-node accumulated (fwd, bwd) wallclock since the last reset.
+    pub fn node_timings(&self) -> Vec<NodeTiming> {
+        self.exec.node_timings()
     }
 
     #[cfg(test)]
     fn loss_only(&mut self, x: &[f32], y_onehot: &[f32]) -> Result<f32> {
-        let logits = self.forward(x)?;
-        // Drop the saved activations so a later forward starts clean.
-        for blk in &mut self.blocks {
-            blk.gelu_in = None;
-        }
-        Ok(self.loss_and_grad(&logits, y_onehot).0)
+        let logits = self.exec.forward_train(&self.flat_params, x)?;
+        Ok(self.exec.loss_and_grad(&logits, y_onehot).0)
     }
 }
 
@@ -1070,16 +91,15 @@ impl TrainEngine for NativeModelEngine {
     }
 
     fn step(&mut self, x: &[f32], y_onehot: &[f32], lr: f32) -> Result<StepOutput> {
-        let b = self.entry.batch;
-        if y_onehot.len() != b * self.entry.classes {
+        if y_onehot.len() != self.entry.batch * self.entry.classes {
             bail!("y length {} mismatch", y_onehot.len());
         }
-        let logits = self.forward(x)?;
-        let (loss, accuracy, dlogits) = self.loss_and_grad(&logits, y_onehot);
-        let grads = self.backward(&dlogits)?;
-        self.apply_update(&grads, lr)?;
-        self.sync_from_flat()?;
-        self.state_from_layers();
+        let logits = self.exec.forward_train(&self.flat_params, x)?;
+        let (loss, accuracy, dlogits) = self.exec.loss_and_grad(&logits, y_onehot);
+        self.grads.fill(0.0);
+        self.exec.backward(&self.flat_params, &dlogits, &mut self.grads)?;
+        self.exec.update(&mut self.flat_params, &self.grads, lr);
+        self.exec.store_state(&mut self.flat_state);
         Ok(StepOutput { loss, accuracy })
     }
 
@@ -1103,8 +123,7 @@ impl TrainEngine for NativeModelEngine {
         }
         self.flat_params.copy_from_slice(params);
         self.flat_state.copy_from_slice(state);
-        self.sync_from_flat()?;
-        self.state_into_layers()
+        self.exec.load_state(&self.flat_state)
     }
 
     fn backend(&self) -> &'static str {
@@ -1121,16 +140,19 @@ impl TrainEngine for NativeModelEngine {
 // ---------------------------------------------------------------------------
 
 /// Pure-rust inference for one ViT variant: Eq. 8 only for factored
-/// layers (no ASI state, matching the lowered infer step), batch size
-/// free.
+/// layers (no ASI compression, matching the lowered infer step), batch
+/// size free, GELU fused into the fc1 epilogue.
 pub struct NativeInferEngine {
     entry: ModelEntry,
-    plan: ModelPlan,
+    exec: GraphExecutor,
 }
 
 impl NativeInferEngine {
     pub fn load(entry: &ModelEntry) -> Result<Self> {
-        Ok(NativeInferEngine { entry: entry.clone(), plan: ModelPlan::from_entry(entry)? })
+        let graph = LayerGraph::from_entry(entry)?;
+        // Inference never compresses activations: skip ASI construction.
+        let exec = GraphExecutor::new_infer(graph, entry)?;
+        Ok(NativeInferEngine { entry: entry.clone(), exec })
     }
 }
 
@@ -1140,119 +162,11 @@ impl InferEngine for NativeInferEngine {
     }
 
     fn infer(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
-        if params.len() != self.entry.params_len {
-            bail!("params length {} != manifest {}", params.len(), self.entry.params_len);
-        }
         if x.len() % self.entry.input_dim != 0 {
             bail!("x length {} not a multiple of input_dim {}", x.len(), self.entry.input_dim);
         }
         let b = x.len() / self.entry.input_dim;
-        let plan = &self.plan;
-        let (t, d) = (plan.tokens, plan.dim);
-        let get = |name: &str| -> Result<&[f32]> {
-            let s = plan.spec(name)?;
-            Ok(&params[s.offset..s.offset + s.numel()])
-        };
-        // Weights are copied out of the caller's flat vector per call
-        // (params may be a live trainer's, changing between calls, so
-        // nothing can be cached).  The copy is O(weight) while the
-        // matmul it feeds is O(weight · rows) — ≥2 orders of magnitude
-        // larger at any real batch — so per-call copies do not skew the
-        // latency exhibits measured through this path.
-        let linear = |lp: &LinearPlan, x: &Mat| -> Result<Mat> {
-            let mut y = match lp.form {
-                LinearForm::Dense => {
-                    let w = Mat::from_vec(lp.out_dim, lp.in_dim,
-                                          get(&format!("{}.w", lp.name))?.to_vec());
-                    x.matmul_nt(&w)
-                }
-                LinearForm::Factored { k } => {
-                    let l = Mat::from_vec(lp.out_dim, k, get(&format!("{}.l", lp.name))?.to_vec());
-                    let r = Mat::from_vec(k, lp.in_dim, get(&format!("{}.r", lp.name))?.to_vec());
-                    x.matmul_nt(&r).matmul_nt(&l)
-                }
-            };
-            let bias = get(&format!("{}.b", lp.name))?;
-            for chunk in y.data.chunks_mut(lp.out_dim) {
-                for (v, bv) in chunk.iter_mut().zip(bias) {
-                    *v += bv;
-                }
-            }
-            Ok(y)
-        };
-        let layer_norm = |x: &mut Mat, g: &[f32], bb: &[f32]| {
-            let dd = x.cols;
-            for row in x.data.chunks_mut(dd) {
-                let mu = row.iter().sum::<f32>() / dd as f32;
-                let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / dd as f32;
-                let is = 1.0 / (var + LN_EPS).sqrt();
-                for c in 0..dd {
-                    row[c] = (row[c] - mu) * is * g[c] + bb[c];
-                }
-            }
-        };
-
-        let patches = patchify(x, b, plan.image, plan.patch);
-        let embed_plan = LinearPlan {
-            name: "embed".into(),
-            form: LinearForm::Dense,
-            out_dim: d,
-            in_dim: plan.patch_dim,
-        };
-        let emb = linear(&embed_plan, &Mat::from_vec(b * (t - 1), plan.patch_dim,
-                                                     patches.data))?;
-        let cls = get("cls")?;
-        let pos = get("pos")?;
-        let mut tok = Mat::zeros(b * t, d);
-        for bi in 0..b {
-            tok.data[bi * t * d..bi * t * d + d].copy_from_slice(cls);
-            tok.data[bi * t * d + d..(bi + 1) * t * d]
-                .copy_from_slice(&emb.data[bi * (t - 1) * d..(bi + 1) * (t - 1) * d]);
-            for (o, p) in tok.data[bi * t * d..(bi + 1) * t * d].iter_mut().zip(pos) {
-                *o += p;
-            }
-        }
-
-        for (bi, bp) in plan.blocks.iter().enumerate() {
-            let base = format!("blocks.{bi}");
-            let mut h = tok.clone();
-            layer_norm(&mut h, get(&format!("{base}.ln1.g"))?, get(&format!("{base}.ln1.b"))?);
-            let a = linear(&bp[0], &h)?; // (rows, 3D)
-            let mut v = Mat::zeros(b * t, d);
-            for row in 0..b * t {
-                v.data[row * d..(row + 1) * d]
-                    .copy_from_slice(&a.data[row * 3 * d + 2 * d..(row + 1) * 3 * d]);
-            }
-            uniform_mix(&mut v.data, b, t, d);
-            let p = linear(&bp[1], &v)?;
-            for (o, pv) in tok.data.iter_mut().zip(&p.data) {
-                *o += pv;
-            }
-            let mut h2 = tok.clone();
-            layer_norm(&mut h2, get(&format!("{base}.ln2.g"))?, get(&format!("{base}.ln2.b"))?);
-            let mut f = linear(&bp[2], &h2)?;
-            for vv in f.data.iter_mut() {
-                *vv = gelu(*vv);
-            }
-            let m = linear(&bp[3], &f)?;
-            for (o, mv) in tok.data.iter_mut().zip(&m.data) {
-                *o += mv;
-            }
-        }
-
-        layer_norm(&mut tok, get("norm.g")?, get("norm.b")?);
-        let mut cls_tok = Mat::zeros(b, d);
-        for bi in 0..b {
-            cls_tok.data[bi * d..(bi + 1) * d]
-                .copy_from_slice(&tok.data[bi * t * d..bi * t * d + d]);
-        }
-        let head_plan = LinearPlan {
-            name: "head".into(),
-            form: LinearForm::Dense,
-            out_dim: plan.classes,
-            in_dim: d,
-        };
-        Ok(linear(&head_plan, &cls_tok)?.data)
+        self.exec.infer(params, x, b)
     }
 
     fn backend(&self) -> &'static str {
@@ -1275,49 +189,6 @@ mod tests {
     }
 
     #[test]
-    fn plan_reconstructs_demo_vit() {
-        let m = demo_manifest("plan");
-        let entry = m.model("vit_demo_wasi_eps80").unwrap();
-        let plan = ModelPlan::from_entry(entry).unwrap();
-        assert_eq!(plan.image * plan.image * 3, entry.input_dim);
-        assert_eq!(plan.classes, entry.classes);
-        assert_eq!(plan.blocks.len(), plan.depth);
-        // mlp linears factored, attention dense in the demo fixture
-        for b in &plan.blocks {
-            assert_eq!(b[0].form, LinearForm::Dense);
-            assert!(matches!(b[2].form, LinearForm::Factored { .. }));
-            assert!(matches!(b[3].form, LinearForm::Factored { .. }));
-        }
-    }
-
-    #[test]
-    fn plan_refuses_unknown_tensor() {
-        let m = demo_manifest("refuse");
-        let mut entry = m.model("vit_demo_vanilla").unwrap().clone();
-        entry.param_spec.push(TensorSpec {
-            name: "blocks.0.frobnicator.w".into(),
-            shape: vec![1],
-            offset: 0,
-        });
-        let err = ModelPlan::from_entry(&entry).unwrap_err();
-        let msg = format!("{err:#}");
-        assert!(msg.contains("frobnicator"), "{msg}");
-    }
-
-    #[test]
-    fn plan_refuses_non_vit_spec() {
-        let m = demo_manifest("nonvit");
-        let mut entry = m.model("vit_demo_vanilla").unwrap().clone();
-        // TinyDec-style spec: no patch-embed scaffolding.
-        entry.param_spec = vec![TensorSpec {
-            name: "tok_embed".into(),
-            shape: vec![16, 8],
-            offset: 0,
-        }];
-        assert!(ModelPlan::from_entry(&entry).is_err());
-    }
-
-    #[test]
     fn tensor_roundtrips_offsets_and_shapes() {
         let m = demo_manifest("roundtrip");
         let entry = m.model("vit_demo_wasi_eps80").unwrap();
@@ -1336,53 +207,6 @@ mod tests {
         eng.restore(&initial, &state).unwrap();
         assert_eq!(eng.params(), &initial[..]);
         assert_eq!(eng.state(), &state[..]);
-    }
-
-    #[test]
-    fn grads_match_finite_differences() {
-        let m = demo_manifest("fd");
-        let entry = m.model("vit_demo_vanilla").unwrap();
-        let mut eng = NativeModelEngine::load(entry).unwrap();
-        let mut task = VisionTask::new("fd", entry.classes, 16, 0.5, 4, 3);
-        let (x, y, _) = task.batch_onehot(entry.batch);
-
-        let logits = eng.forward(&x).unwrap();
-        let (_, _, dlogits) = eng.loss_and_grad(&logits, &y);
-        let grads = eng.backward(&dlogits).unwrap();
-
-        // Probe a spread of tensors: embed, attn value column, mlp, ln,
-        // cls/pos, head.
-        let probes = [
-            ("embed.w", 3usize),
-            ("blocks.0.mlp.fc1.w", 7),
-            ("blocks.1.attn.proj.w", 11),
-            ("blocks.0.ln2.g", 2),
-            ("cls", 5),
-            ("pos", 13),
-            ("head.w", 1),
-            ("head.b", 0),
-        ];
-        let h = 1e-2f32;
-        let base = eng.params().to_vec();
-        let state = eng.state().to_vec();
-        for (name, k) in probes {
-            let spec = eng.plan.spec(name).unwrap().clone();
-            let idx = spec.offset + k.min(spec.numel() - 1);
-            let mut up = base.clone();
-            up[idx] += h;
-            eng.restore(&up, &state).unwrap();
-            let lp = eng.loss_only(&x, &y).unwrap();
-            let mut dn = base.clone();
-            dn[idx] -= h;
-            eng.restore(&dn, &state).unwrap();
-            let lm = eng.loss_only(&x, &y).unwrap();
-            let fd = (lp - lm) / (2.0 * h);
-            let an = grads[idx];
-            assert!(
-                (fd - an).abs() < 2e-2 * fd.abs().max(1.0),
-                "{name}[{k}]: fd {fd} vs analytic {an}"
-            );
-        }
     }
 
     #[test]
@@ -1411,6 +235,18 @@ mod tests {
     }
 
     #[test]
+    fn loss_only_is_consistent_with_step_loss() {
+        let m = demo_manifest("lossonly");
+        let entry = m.model("vit_demo_vanilla").unwrap();
+        let mut eng = NativeModelEngine::load(entry).unwrap();
+        let mut task = VisionTask::new("l", entry.classes, 16, 0.5, 4, 5);
+        let (x, y, _) = task.batch_onehot(entry.batch);
+        let probe = eng.loss_only(&x, &y).unwrap();
+        let step = eng.step(&x, &y, 0.05).unwrap();
+        assert!((probe - step.loss).abs() < 1e-5, "{probe} vs {}", step.loss);
+    }
+
+    #[test]
     fn infer_matches_train_engine_forward_at_load() {
         let m = demo_manifest("infer");
         let entry = m.model("vit_demo_vanilla").unwrap();
@@ -1418,14 +254,30 @@ mod tests {
         let infer = NativeInferEngine::load(entry).unwrap();
         let mut task = VisionTask::new("i", entry.classes, 16, 0.5, 4, 9);
         let (x, _, _) = task.batch_onehot(entry.batch);
-        let train_logits = eng.forward(&x).unwrap();
-        for blk in &mut eng.blocks {
-            blk.gelu_in = None;
-        }
+        let params = eng.params().to_vec();
+        let train_logits = eng.exec.forward_train(&params, &x).unwrap();
         let infer_logits = infer.infer(eng.params(), &x).unwrap();
-        assert_eq!(train_logits.data.len(), infer_logits.len());
-        for (a, b) in train_logits.data.iter().zip(&infer_logits) {
+        assert_eq!(train_logits.len(), infer_logits.len());
+        for (a, b) in train_logits.iter().zip(&infer_logits) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn node_timings_accumulate_when_profiling() {
+        let m = demo_manifest("prof");
+        let entry = m.model("vit_demo_wasi_eps80").unwrap();
+        let mut eng = NativeModelEngine::load(entry).unwrap();
+        eng.set_profiling(true);
+        let mut task = VisionTask::new("p", entry.classes, 16, 0.5, 4, 7);
+        let (x, y, _) = task.batch_onehot(entry.batch);
+        eng.step(&x, &y, 0.05).unwrap();
+        let timings = eng.node_timings();
+        assert!(!timings.is_empty());
+        assert!(timings.iter().all(|t| t.fwd_s >= 0.0 && t.bwd_s >= 0.0));
+        assert!(timings.iter().any(|t| t.calls > 0));
+        assert!(timings.iter().any(|t| t.label.starts_with("wasi:")));
+        eng.reset_timings();
+        assert!(eng.node_timings().iter().all(|t| t.calls == 0));
     }
 }

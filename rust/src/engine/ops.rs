@@ -1,0 +1,211 @@
+//! The typed op vocabulary of the native layer-graph IR (DESIGN.md §4)
+//! plus the shared shaping/activation math both executors (training and
+//! inference) run.
+//!
+//! [`Op`] names every forward node the graph planner
+//! (`engine::graph::LayerGraph`) can emit; each op has a backward dual
+//! implemented by the graph executor.  [`UpdateOp`] names the
+//! optimizer-side program (SGD with clip + decay, per-layer WSI
+//! refresh) that runs after backward.  Latency attribution
+//! (`eval::latency::node_attribution`, `wasi-train bench`) tags these
+//! ops instead of re-deriving shapes.
+
+/// Per-token layer-norm epsilon (mirrors `python/compile/model.py`).
+pub const LN_EPS: f32 = 1e-6;
+
+/// One forward op of the layer graph.  `Dense`/`Wasi` carry the layer
+/// name they bind to in the flat parameter layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// (B, image²·3) flat images → (B, G², patch²·3) patch tokens.
+    Patchify,
+    /// CLS prepend + positional embedding: (B, G², D) → (B, T, D).
+    Assemble,
+    /// Per-token layer norm; `name` is the `{prefix}` of `.g`/`.b`.
+    LayerNorm { name: String },
+    /// Dense linear `y = x Wᵀ + b` (Eq. 1).
+    Dense { name: String },
+    /// WASI-factored linear `y = x Rᵀ Lᵀ + b` (Eq. 8) with ASI
+    /// activation compression on the saved input.
+    Wasi { name: String, k: usize },
+    /// qkv output (…, 3D) → value path (…, D).
+    SliceV,
+    /// The fixed doubly-stochastic token mixing `(I + 11ᵀ/T)/2`
+    /// standing in for softmax attention (DESIGN.md §4 substitution).
+    Mixing,
+    /// Elementwise GELU (pre-activation saved for backward; fused into
+    /// the preceding linear's epilogue on the inference path).
+    Gelu,
+    /// Push the current activation for a later residual add.
+    ResidualSave,
+    /// Pop the matching saved activation and add it.
+    ResidualAdd,
+    /// (B, T, D) → (B, D): keep token 0.
+    TakeCls,
+    /// Softmax cross-entropy head (loss + dlogits).
+    SoftmaxCe,
+}
+
+impl Op {
+    /// Stable short label for latency attribution and logs.
+    pub fn label(&self) -> String {
+        match self {
+            Op::Patchify => "patchify".into(),
+            Op::Assemble => "assemble".into(),
+            Op::LayerNorm { name } => format!("ln:{name}"),
+            Op::Dense { name } => format!("dense:{name}"),
+            Op::Wasi { name, k } => format!("wasi:{name}[K={k}]"),
+            Op::SliceV => "slice_v".into(),
+            Op::Mixing => "mixing".into(),
+            Op::Gelu => "gelu".into(),
+            Op::ResidualSave => "residual_save".into(),
+            Op::ResidualAdd => "residual_add".into(),
+            Op::TakeCls => "take_cls".into(),
+            Op::SoftmaxCe => "softmax_ce".into(),
+        }
+    }
+}
+
+/// One optimizer-side step of the graph's update program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum UpdateOp {
+    /// Global-norm gradient clip + decoupled weight decay + SGD over
+    /// the whole flat parameter vector (mirrors the AOT train step).
+    SgdClipDecay,
+    /// One warm subspace-iteration refresh of a factored layer's
+    /// `L`/`R` (Algorithm 1, factored form), in flat parameter space.
+    WsiRefresh { name: String },
+}
+
+impl UpdateOp {
+    pub fn label(&self) -> String {
+        match self {
+            UpdateOp::SgdClipDecay => "sgd_clip_decay".into(),
+            UpdateOp::WsiRefresh { name } => format!("wsi_refresh:{name}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared shaping/activation math (both executors)
+// ---------------------------------------------------------------------------
+
+/// (B, image²·3) flat images -> (B, grid², patch²·3) patch tokens
+/// (matches `model.py::patchify`'s reshape/transpose).
+pub fn patchify(x: &[f32], b: usize, image: usize, patch: usize) -> Vec<f32> {
+    let grid = image / patch;
+    let pd = patch * patch * 3;
+    let mut out = vec![0.0f32; b * grid * grid * pd];
+    for bi in 0..b {
+        for gy in 0..grid {
+            for py in 0..patch {
+                for gx in 0..grid {
+                    for px in 0..patch {
+                        for c in 0..3 {
+                            let src = bi * image * image * 3
+                                + ((gy * patch + py) * image + gx * patch + px) * 3
+                                + c;
+                            let dst = ((bi * grid + gy) * grid + gx) * pd
+                                + (py * patch + px) * 3
+                                + c;
+                            out[dst] = x[src];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The fixed token mixing standing in for softmax attention:
+/// `out = ((I + 11ᵀ/T) / 2) · v` per batch element — half identity,
+/// half uniform attention.  Doubly stochastic, parameter-free, and
+/// symmetric (so backward applies the same operator).
+pub fn uniform_mix(v: &mut [f32], b: usize, t: usize, d: usize) {
+    let mut mean = vec![0.0f32; d];
+    for bi in 0..b {
+        mean.iter_mut().for_each(|m| *m = 0.0);
+        let batch = &v[bi * t * d..(bi + 1) * t * d];
+        for row in batch.chunks(d) {
+            for (m, x) in mean.iter_mut().zip(row) {
+                *m += x;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= t as f32;
+        }
+        let batch = &mut v[bi * t * d..(bi + 1) * t * d];
+        for row in batch.chunks_mut(d) {
+            for (x, m) in row.iter_mut().zip(&mean) {
+                *x = 0.5 * *x + 0.5 * m;
+            }
+        }
+    }
+}
+
+/// Row-wise log-softmax over `classes`-wide rows.
+pub fn log_softmax_rows(logits: &[f32], classes: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; logits.len()];
+    for (row, chunk) in logits.chunks(classes).enumerate() {
+        let m = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = chunk.iter().map(|v| (v - m).exp()).sum::<f32>().ln() + m;
+        for (c, &v) in chunk.iter().enumerate() {
+            out[row * classes + c] = v - lse;
+        }
+    }
+    out
+}
+
+/// In-place per-row layer norm (the inference path, no stats saved).
+pub fn layer_norm_inplace(x: &mut [f32], g: &[f32], b: &[f32], d: usize) {
+    for row in x.chunks_mut(d) {
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let is = 1.0 / (var + LN_EPS).sqrt();
+        for c in 0..d {
+            row[c] = (row[c] - mu) * is * g[c] + b[c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Op::Dense { name: "embed".into() }.label(), "dense:embed");
+        assert_eq!(Op::Wasi { name: "x".into(), k: 7 }.label(), "wasi:x[K=7]");
+        assert_eq!(UpdateOp::WsiRefresh { name: "a.b".into() }.label(), "wsi_refresh:a.b");
+    }
+
+    #[test]
+    fn uniform_mix_is_doubly_stochastic_fixed_point() {
+        // A constant-over-tokens input is a fixed point of the mixing.
+        let (b, t, d) = (2usize, 4usize, 3usize);
+        let mut v = vec![0.0f32; b * t * d];
+        for bi in 0..b {
+            for tt in 0..t {
+                for dd in 0..d {
+                    v[(bi * t + tt) * d + dd] = (bi * d + dd) as f32;
+                }
+            }
+        }
+        let before = v.clone();
+        uniform_mix(&mut v, b, t, d);
+        for (x, y) in v.iter().zip(&before) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn log_softmax_rows_normalizes() {
+        let logits = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let lp = log_softmax_rows(&logits, 3);
+        for row in lp.chunks(3) {
+            let sum: f32 = row.iter().map(|v| v.exp()).sum();
+            assert!((sum - 1.0).abs() < 1e-5, "{sum}");
+        }
+    }
+}

@@ -13,7 +13,7 @@ use crate::costmodel::{LayerDims, WasiRanks};
 use crate::device::energy::iteration_energy;
 use crate::device::latency::project_time;
 use crate::device::spec::{device, DeviceSpec};
-use crate::engine::{infer_engine, train_engine};
+use crate::engine::{infer_engine, train_engine, NativeModelEngine, NodeTiming, TrainEngine};
 use crate::runtime::ModelEntry;
 use crate::util::table::Table;
 
@@ -147,7 +147,81 @@ pub fn fig8(ctx: &EvalCtx) -> Result<String> {
          The paper-scale check below uses the native engine at ViT-B dims:\n\n",
     );
     body.push_str(&native_vitb_comparison(ctx));
+    // Per-node attribution through the graph executor's tags, on the
+    // first variant the native engine can reconstruct (fall through to
+    // the next candidate when reconstruction fails).
+    for name in ["vit_wasi_eps80", "vit_vanilla"] {
+        let Ok(entry) = ctx.session.manifest.model(name) else { continue };
+        match node_attribution(entry, if ctx.quick { 2 } else { 4 }) {
+            Ok(table) => {
+                body.push('\n');
+                body.push_str(&table);
+                break;
+            }
+            Err(e) => {
+                body.push_str(&format!("\n(node attribution for {name} skipped: {e:#})\n"));
+            }
+        }
+    }
     Ok(body)
+}
+
+/// Run `steps` profiled training steps and return the graph executor's
+/// per-node wallclock tags — no shape re-derivation, the tags come
+/// straight from the layer-graph IR (`engine::graph`).  Shared by fig8
+/// and `wasi-train bench` (which also feeds the same timings into
+/// `BENCH_native.json`).
+pub fn profile_nodes(entry: &ModelEntry, steps: usize) -> Result<Vec<NodeTiming>> {
+    let mut eng = NativeModelEngine::load(entry)?;
+    eng.set_profiling(true);
+    let side = entry.image_side().ok_or_else(|| {
+        anyhow::anyhow!("model {} is not an image model", entry.name)
+    })?;
+    let mut task =
+        crate::data::synth::VisionTask::new("nodes", entry.classes, side, 0.7, 8, 233);
+    let (x, y, _) = task.batch_onehot(entry.batch);
+    eng.step(&x, &y, 0.01)?; // warmup
+    eng.reset_timings();
+    for _ in 0..steps.max(1) {
+        eng.step(&x, &y, 0.01)?;
+    }
+    Ok(eng.node_timings())
+}
+
+/// Render the per-node attribution table from profiled tags.
+pub fn render_node_table(model: &str, steps: usize, timings: &[NodeTiming]) -> String {
+    let steps = steps.max(1);
+    let mut t = Table::new(["node", "feat", "fwd ms/step", "bwd ms/step", "total ms/step"])
+        .title(format!("per-node latency attribution ({model}, {steps} steps)"));
+    let mut fwd_total = 0.0f64;
+    let mut bwd_total = 0.0f64;
+    for nt in timings {
+        let fwd = nt.fwd_s / steps as f64 * 1e3;
+        let bwd = nt.bwd_s / steps as f64 * 1e3;
+        fwd_total += fwd;
+        bwd_total += bwd;
+        t.row([
+            nt.label.clone(),
+            nt.out_features.to_string(),
+            format!("{fwd:.3}"),
+            format!("{bwd:.3}"),
+            format!("{:.3}", fwd + bwd),
+        ]);
+    }
+    t.row([
+        "TOTAL".into(),
+        "-".into(),
+        format!("{fwd_total:.3}"),
+        format!("{bwd_total:.3}"),
+        format!("{:.3}", fwd_total + bwd_total),
+    ]);
+    t.render()
+}
+
+/// Per-node latency attribution: profile + render in one call.
+pub fn node_attribution(entry: &ModelEntry, steps: usize) -> Result<String> {
+    let timings = profile_nodes(entry, steps)?;
+    Ok(render_node_table(&entry.name, steps, &timings))
 }
 
 /// Native-engine measured per-layer iteration time at ViT-B/16 fc1 dims —

@@ -8,6 +8,7 @@
 
 pub mod analytic;
 pub mod latency;
+pub mod perf;
 pub mod training;
 pub mod wsi_vs_svd;
 

@@ -1,0 +1,244 @@
+//! `wasi-train bench` — the perf-trajectory harness.
+//!
+//! Times the zero-dependency demo→train→infer pipeline on both engine
+//! kinds (the HLO engine is recorded as unavailable with its reason
+//! when no backend can execute model HLO — the demo set ships no train
+//! artifact on purpose), sweeps 1 vs N kernel-layer threads, and emits
+//! the machine-readable `BENCH_native.json` that seeds the repo's perf
+//! record (EXPERIMENTS.md §Perf).  Kernels are bit-deterministic across
+//! thread counts, so the sweep measures wall-clock only.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::synth::VisionTask;
+use crate::engine::demo::{write_demo_artifacts, DemoConfig};
+use crate::engine::{
+    train_engine, EngineKind, InferEngine, NativeInferEngine, NativeModelEngine, TrainEngine,
+};
+use crate::runtime::{Manifest, ModelEntry, Runtime};
+use crate::util::json::{arr, num, obj, str as jstr, Json};
+use crate::util::table::Table;
+use crate::util::threadpool::{num_threads, set_num_threads, thread_override};
+
+/// Bench configuration (`wasi-train bench [--quick] [--steps N]
+/// [--out FILE]`).
+pub struct BenchConfig {
+    pub quick: bool,
+    pub steps: usize,
+    pub out: PathBuf,
+}
+
+/// One thread arm's measurements.
+struct Arm {
+    threads: usize,
+    train_s: f64,
+    mean_step_ms: f64,
+    infer_s: f64,
+    infer_reps: usize,
+}
+
+fn bench_demo_config(quick: bool) -> DemoConfig {
+    if quick {
+        DemoConfig::default()
+    } else {
+        // Larger than the test fixture so the thread sweep has real
+        // GEMM panels to win on (rows = batch · tokens = 592).
+        DemoConfig {
+            image: 24,
+            patch: 4,
+            dim: 64,
+            depth: 3,
+            mlp_ratio: 2,
+            classes: 10,
+            batch: 16,
+            eps: 0.8,
+            seed: 41,
+        }
+    }
+}
+
+fn run_native_arm(
+    entry: &ModelEntry,
+    threads: usize,
+    steps: usize,
+    infer_reps: usize,
+) -> Result<Arm> {
+    set_num_threads(threads);
+    let mut eng = NativeModelEngine::load(entry)?;
+    let side = entry
+        .image_side()
+        .ok_or_else(|| anyhow::anyhow!("bench model is not an image model"))?;
+    let mut task = VisionTask::new("bench", entry.classes, side, 0.7, 8, 233);
+    let (x, y, _) = task.batch_onehot(entry.batch);
+    eng.step(&x, &y, 0.01)?; // warmup
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        eng.step(&x, &y, 0.01)?;
+    }
+    let train_s = t0.elapsed().as_secs_f64();
+
+    let infer = NativeInferEngine::load(entry)?;
+    infer.infer(eng.params(), &x)?; // warmup
+    let t1 = Instant::now();
+    for _ in 0..infer_reps {
+        infer.infer(eng.params(), &x)?;
+    }
+    let infer_s = t1.elapsed().as_secs_f64();
+    Ok(Arm {
+        threads,
+        train_s,
+        mean_step_ms: train_s / steps as f64 * 1e3,
+        infer_s,
+        infer_reps,
+    })
+}
+
+/// Run the bench, write `cfg.out`, and return a human-readable summary.
+/// The process-global thread override is restored on every exit path.
+pub fn run_bench(cfg: &BenchConfig) -> Result<String> {
+    let prior_override = thread_override();
+    let result = run_bench_inner(cfg);
+    set_num_threads(prior_override);
+    result
+}
+
+fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
+    let auto = {
+        set_num_threads(0);
+        num_threads()
+    };
+    let steps = cfg.steps.max(1);
+    let infer_reps = if cfg.quick { 5 } else { 20 };
+
+    // 1. demo artifact generation (timed — it is part of the offline
+    //    zero→train path the README advertises).
+    let dir = std::env::temp_dir().join(format!(
+        "wasi_bench_artifacts_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let t0 = Instant::now();
+    let names = write_demo_artifacts(&dir, &bench_demo_config(cfg.quick))?;
+    let demo_s = t0.elapsed().as_secs_f64();
+    let manifest = Manifest::load(&dir)?;
+    let model = names
+        .iter()
+        .find(|n| n.contains("wasi"))
+        .cloned()
+        .unwrap_or_else(|| names[0].clone());
+    let entry = manifest.model(&model)?.clone();
+
+    // 2. native engine: 1 thread vs auto.
+    let mut arm_threads = vec![1usize];
+    if auto > 1 {
+        arm_threads.push(auto);
+    }
+    let mut arms = Vec::new();
+    for &t in &arm_threads {
+        arms.push(run_native_arm(&entry, t, steps, infer_reps)?);
+    }
+    let speedup = if arms.len() == 2 { arms[0].train_s / arms[1].train_s } else { 1.0 };
+
+    // 3. per-node attribution at the auto thread count — ONE profiled
+    //    run feeds both the rendered table and the JSON record.
+    set_num_threads(0);
+    let prof_steps = if cfg.quick { 2usize } else { 4 };
+    let profiled = super::latency::profile_nodes(&entry, prof_steps);
+    let (node_table, node_json) = match &profiled {
+        Ok(timings) => {
+            let mut top: Vec<_> = timings.clone();
+            top.sort_by(|a, b| {
+                (b.fwd_s + b.bwd_s).partial_cmp(&(a.fwd_s + a.bwd_s)).unwrap()
+            });
+            let json = arr(top.iter().take(8).map(|t| {
+                obj(vec![
+                    ("node", jstr(t.label.clone())),
+                    ("fwd_ms_per_step", num(t.fwd_s / prof_steps as f64 * 1e3)),
+                    ("bwd_ms_per_step", num(t.bwd_s / prof_steps as f64 * 1e3)),
+                ])
+            }));
+            let table = super::latency::render_node_table(&model, prof_steps, timings);
+            (Some(table), json)
+        }
+        Err(_) => (None, arr([])),
+    };
+
+    // 4. the HLO engine on the same artifact set (expected unavailable
+    //    offline: the demo set ships no train artifact, and without
+    //    PJRT the runtime cannot execute model HLO).
+    let rt = Runtime::cpu()?;
+    let hlo_json = match train_engine(&rt, &entry, EngineKind::Hlo) {
+        Ok(_) => obj(vec![("engine", jstr("hlo")), ("available", Json::Bool(true))]),
+        Err(e) => obj(vec![
+            ("engine", jstr("hlo")),
+            ("available", Json::Bool(false)),
+            ("reason", jstr(format!("{e:#}"))),
+        ]),
+    };
+
+    let native_json = obj(vec![
+        ("engine", jstr("native")),
+        ("available", Json::Bool(true)),
+        (
+            "arms",
+            arr(arms.iter().map(|a| {
+                obj(vec![
+                    ("threads", num(a.threads as f64)),
+                    ("train_seconds", num(a.train_s)),
+                    ("mean_step_ms", num(a.mean_step_ms)),
+                    ("infer_seconds", num(a.infer_s)),
+                    ("infer_reps", num(a.infer_reps as f64)),
+                ])
+            })),
+        ),
+        ("thread_speedup", num(speedup)),
+    ]);
+    let out_json = obj(vec![
+        ("bench", jstr("wasi-train bench")),
+        ("quick", Json::Bool(cfg.quick)),
+        ("model", jstr(model.clone())),
+        ("steps", num(steps as f64)),
+        ("host_auto_threads", num(auto as f64)),
+        ("demo_seconds", num(demo_s)),
+        ("engines", arr([native_json, hlo_json])),
+        ("nodes", node_json),
+    ]);
+    std::fs::write(&cfg.out, out_json.to_string())
+        .with_context(|| format!("writing {}", cfg.out.display()))?;
+
+    // Human-readable summary.
+    let mut t = Table::new(["engine", "threads", "train s", "ms/step", "infer s"])
+        .title(format!("wasi-train bench — {model}, {steps} steps (demo gen {demo_s:.2}s)"));
+    for a in &arms {
+        t.row([
+            "native".to_string(),
+            a.threads.to_string(),
+            format!("{:.2}", a.train_s),
+            format!("{:.1}", a.mean_step_ms),
+            format!("{:.2}", a.infer_s),
+        ]);
+    }
+    let mut body = t.render();
+    if arms.len() == 2 {
+        body.push_str(&format!(
+            "thread speedup (1 -> {}): {speedup:.2}x\n",
+            arms[1].threads
+        ));
+    } else {
+        body.push_str("single-core host: no thread sweep\n");
+    }
+    match (&node_table, &profiled) {
+        (Some(table), _) => {
+            body.push('\n');
+            body.push_str(table);
+        }
+        (None, Err(e)) => body.push_str(&format!("(node attribution skipped: {e:#})\n")),
+        (None, Ok(_)) => {}
+    }
+    body.push_str(&format!("\nbench record -> {}\n", cfg.out.display()));
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(body)
+}

@@ -1,0 +1,413 @@
+//! The shared GEMM kernel layer — the ONE optimization site every
+//! matmul in the crate routes through (DESIGN.md §4): `Mat`'s operator
+//! methods, the `wasi::{layer, wsi, lowrank_grad}` math, the baselines,
+//! and the engine graph executor all end up in `gemm_nn` / `gemm_nt` /
+//! `gemm_tn` below.
+//!
+//! Design (EXPERIMENTS.md §Perf):
+//!
+//! * **Row-sliced threading** — output rows are split into disjoint
+//!   contiguous ranges across `util::threadpool::parallel_ranges`
+//!   workers.  Each output element is accumulated by exactly one thread
+//!   in ascending-k order, so results are **bit-identical for every
+//!   thread count** (pinned by `tests` below and the engine-parity
+//!   suite) — `--threads` trades wall-clock only.
+//! * **Cache blocking** — `gemm_nn`/`gemm_tn` walk k in `KC`-wide
+//!   panels so the active B panel stays cache-resident across a
+//!   thread's whole row range instead of streaming all of B once per
+//!   4-row block.
+//! * **Register blocking** — `gemm_nn` feeds each streamed B row into
+//!   FOUR output rows (4x fewer B loads, four independent FMA chains
+//!   for the auto-vectorizer); `gemm_nt` uses the 8-wide unrolled
+//!   [`dot`].
+//! * **Fused epilogues** — bias add and GELU run inside the parallel
+//!   region while the output panel is still hot ([`Epilogue`]), instead
+//!   of a second full sweep from memory after the join.
+
+use crate::util::threadpool::parallel_ranges;
+
+/// k-panel width for cache blocking (a KC x n B-panel of f32 at the
+/// model dims this crate runs stays within L2 alongside the output
+/// rows).
+const KC: usize = 128;
+
+pub const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
+pub const GELU_A: f32 = 0.044_715;
+
+/// tanh-approximation GELU (matches `python/compile/model.py`).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
+}
+
+/// d/dx of [`gelu`].
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    let inner = GELU_C * (x + GELU_A * x * x * x);
+    let t = inner.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
+}
+
+/// Unrolled dot product (8-wide accumulators; auto-vectorizes).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for lane in 0..8 {
+            acc[lane] += a[i + lane] * b[i + lane];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Epilogue fused into the GEMM's parallel region, applied per output
+/// row while the row is cache-hot.
+#[derive(Clone, Copy)]
+pub enum Epilogue<'a> {
+    /// Plain C = A·B.
+    None,
+    /// C = A·B + bias (bias broadcast over rows; `bias.len() == n`).
+    Bias(&'a [f32]),
+    /// C = gelu(A·B + bias) — the inference fc1 fusion.
+    BiasGelu(&'a [f32]),
+    /// C = gelu(A·B).
+    Gelu,
+}
+
+impl Epilogue<'_> {
+    #[inline]
+    fn apply(&self, row: &mut [f32]) {
+        match self {
+            Epilogue::None => {}
+            Epilogue::Bias(bias) => {
+                for (o, &bv) in row.iter_mut().zip(bias.iter()) {
+                    *o += bv;
+                }
+            }
+            Epilogue::BiasGelu(bias) => {
+                for (o, &bv) in row.iter_mut().zip(bias.iter()) {
+                    *o = gelu(*o + bv);
+                }
+            }
+            Epilogue::Gelu => {
+                for o in row.iter_mut() {
+                    *o = gelu(*o);
+                }
+            }
+        }
+    }
+}
+
+/// Shareable raw pointer for scoped-thread row writes (each thread owns
+/// a disjoint row range, so no aliasing).
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// C (m x n) = A (m x k) · B (k x n), then `epi`.  Overwrites `out`.
+pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], epi: Epilogue) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_ranges(m, |lo, hi| {
+        let panel =
+            unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo * n), (hi - lo) * n) };
+        panel.fill(0.0);
+        // k-panel loop OUTSIDE the row loop: the KC x n slab of B stays
+        // cache-resident across this thread's whole row range.  Each
+        // output element still accumulates in ascending-k order, so the
+        // result is independent of both KC and the thread partition.
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            let mut i = lo;
+            while i + 4 <= hi {
+                let out4 =
+                    unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), 4 * n) };
+                let (o0, rest) = out4.split_at_mut(n);
+                let (o1, rest) = rest.split_at_mut(n);
+                let (o2, o3) = rest.split_at_mut(n);
+                for kk in k0..k1 {
+                    let a0 = a[i * k + kk];
+                    let a1 = a[(i + 1) * k + kk];
+                    let a2 = a[(i + 2) * k + kk];
+                    let a3 = a[(i + 3) * k + kk];
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[kk * n..(kk + 1) * n];
+                    // zip-fused form: no bounds checks in the hot loop
+                    for ((((bv, p0), p1), p2), p3) in b_row
+                        .iter()
+                        .zip(o0.iter_mut())
+                        .zip(o1.iter_mut())
+                        .zip(o2.iter_mut())
+                        .zip(o3.iter_mut())
+                    {
+                        *p0 += a0 * bv;
+                        *p1 += a1 * bv;
+                        *p2 += a2 * bv;
+                        *p3 += a3 * bv;
+                    }
+                }
+                i += 4;
+            }
+            // remainder rows
+            for ii in i..hi {
+                let out_row =
+                    unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(ii * n), n) };
+                for kk in k0..k1 {
+                    let a_ik = a[ii * k + kk];
+                    if a_ik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                        *o += a_ik * bv;
+                    }
+                }
+            }
+            k0 = k1;
+        }
+        for i in lo..hi {
+            let row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+            epi.apply(row);
+        }
+    });
+}
+
+/// C (m x n) = A (m x k) · Bᵀ with B stored (n x k) — dot-product form,
+/// no transpose materialized.  Then `epi`.  Overwrites `out`.
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], epi: Epilogue) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_ranges(m, |lo, hi| {
+        for i in lo..hi {
+            let out_row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+            let a_row = &a[i * k..(i + 1) * k];
+            for (j, o) in out_row.iter_mut().enumerate() {
+                let b_row = &b[j * k..(j + 1) * k];
+                *o = dot(a_row, b_row);
+            }
+            epi.apply(out_row);
+        }
+    });
+}
+
+/// C (m x n) = Aᵀ · B with A stored (k x m) — no transpose materialized.
+/// Then `epi`.  Overwrites `out`.
+pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], epi: Epilogue) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_ranges(m, |lo, hi| {
+        let panel =
+            unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo * n), (hi - lo) * n) };
+        panel.fill(0.0);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            for i in lo..hi {
+                let out_row =
+                    unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+                for kk in k0..k1 {
+                    let a_ki = a[kk * m + i];
+                    if a_ki == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                        *o += a_ki * bv;
+                    }
+                }
+            }
+            k0 = k1;
+        }
+        for i in lo..hi {
+            let row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+            epi.apply(row);
+        }
+    });
+}
+
+/// out += A · B over raw slices (A: m x k, B: k x n, out: m x n) —
+/// the allocation-free accumulating form the f_LR Eq. 18 contraction
+/// loop needs.  Serial on purpose: its callers already sit inside a
+/// row-blocked outer loop (see `wasi::lowrank_grad`).
+pub fn gemm_nn_acc(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for (kk, &a_ik) in a_row.iter().enumerate() {
+            if a_ik == 0.0 {
+                continue;
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                *o += a_ik * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+    use crate::util::threadpool::set_num_threads;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    fn transpose(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut t = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = a[r * cols + c];
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn gemm_forms_match_naive() {
+        let mut rng = Pcg64::new(1);
+        for (m, k, n) in [(3, 4, 5), (17, 9, 13), (70, 150, 33), (1, 7, 1)] {
+            let a: Vec<f32> = rng.normal_vec(m * k);
+            let b: Vec<f32> = rng.normal_vec(k * n);
+            let want = naive(&a, &b, m, k, n);
+
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn(&a, &b, m, k, n, &mut c, Epilogue::None);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3, "nn {m}x{k}x{n}: {x} vs {y}");
+            }
+
+            let bt = transpose(&b, k, n); // (n, k)
+            gemm_nt(&a, &bt, m, k, n, &mut c, Epilogue::None);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3, "nt {m}x{k}x{n}: {x} vs {y}");
+            }
+
+            let at = transpose(&a, m, k); // (k, m)
+            gemm_tn(&at, &b, m, k, n, &mut c, Epilogue::None);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3, "tn {m}x{k}x{n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_single_thread_bitwise() {
+        // The deterministic row partition: every output element is
+        // accumulated by exactly one thread in ascending-k order, so
+        // thread count must not change a single bit.
+        let _guard = crate::util::threadpool::TEST_OVERRIDE_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut rng = Pcg64::new(2);
+        // Sizes straddle the 4-row blocking and the KC panel boundary,
+        // and exceed the n >= 64 threading threshold.
+        for (m, k, n) in [(97, 200, 65), (130, 129, 70), (68, 33, 90)] {
+            let a: Vec<f32> = rng.normal_vec(m * k);
+            let b: Vec<f32> = rng.normal_vec(k * n);
+            let bt = transpose(&b, k, n);
+            let at = transpose(&a, m, k);
+            let mut single = vec![0.0f32; m * n];
+            let mut multi = vec![0.0f32; m * n];
+            for (form, name) in [(0usize, "nn"), (1, "nt"), (2, "tn")] {
+                set_num_threads(1);
+                match form {
+                    0 => gemm_nn(&a, &b, m, k, n, &mut single, Epilogue::None),
+                    1 => gemm_nt(&a, &bt, m, k, n, &mut single, Epilogue::None),
+                    _ => gemm_tn(&at, &b, m, k, n, &mut single, Epilogue::None),
+                }
+                set_num_threads(7);
+                match form {
+                    0 => gemm_nn(&a, &b, m, k, n, &mut multi, Epilogue::None),
+                    1 => gemm_nt(&a, &bt, m, k, n, &mut multi, Epilogue::None),
+                    _ => gemm_tn(&at, &b, m, k, n, &mut multi, Epilogue::None),
+                }
+                set_num_threads(0);
+                assert_eq!(single, multi, "{name} {m}x{k}x{n} diverged across thread counts");
+            }
+        }
+    }
+
+    #[test]
+    fn epilogues_fuse_bias_and_gelu() {
+        let mut rng = Pcg64::new(3);
+        let (m, k, n) = (9, 11, 67);
+        let a: Vec<f32> = rng.normal_vec(m * k);
+        let b: Vec<f32> = rng.normal_vec(k * n);
+        let bias: Vec<f32> = rng.normal_vec(n);
+        let plain = naive(&a, &b, m, k, n);
+
+        let mut c = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, m, k, n, &mut c, Epilogue::Bias(&bias));
+        for (i, x) in c.iter().enumerate() {
+            let want = plain[i] + bias[i % n];
+            assert!((x - want).abs() < 1e-3, "bias: {x} vs {want}");
+        }
+
+        gemm_nn(&a, &b, m, k, n, &mut c, Epilogue::BiasGelu(&bias));
+        for (i, x) in c.iter().enumerate() {
+            let want = gelu(plain[i] + bias[i % n]);
+            assert!((x - want).abs() < 1e-3, "bias+gelu: {x} vs {want}");
+        }
+
+        gemm_nn(&a, &b, m, k, n, &mut c, Epilogue::Gelu);
+        for (i, x) in c.iter().enumerate() {
+            let want = gelu(plain[i]);
+            assert!((x - want).abs() < 1e-3, "gelu: {x} vs {want}");
+        }
+    }
+
+    #[test]
+    fn acc_accumulates() {
+        let mut rng = Pcg64::new(4);
+        let (m, k, n) = (6, 5, 4);
+        let a: Vec<f32> = rng.normal_vec(m * k);
+        let b: Vec<f32> = rng.normal_vec(k * n);
+        let mut out = vec![1.0f32; m * n];
+        gemm_nn_acc(&a, m, k, &b, n, &mut out);
+        let want = naive(&a, &b, m, k, n);
+        for (x, y) in out.iter().zip(&want) {
+            assert!((x - (y + 1.0)).abs() < 1e-4, "{x} vs {}", y + 1.0);
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_fd() {
+        for x in [-2.5f32, -0.7, 0.0, 0.3, 1.9] {
+            let h = 1e-3f32;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((fd - gelu_grad(x)).abs() < 1e-2, "x={x}: {fd} vs {}", gelu_grad(x));
+        }
+    }
+}

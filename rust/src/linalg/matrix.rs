@@ -1,12 +1,11 @@
-//! Dense row-major f32 matrix with blocked, multi-threaded matmul.
-//!
-//! The native engine's hot path (see EXPERIMENTS.md §Perf): `matmul`
-//! splits output rows across threads and walks the k-dimension in the
-//! inner loop with an 8-wide accumulator pattern the compiler
-//! auto-vectorizes; `matmul_tn`/`matmul_nt` cover the transposed forms
-//! the backward pass needs without materializing transposes.
+//! Dense row-major f32 matrix.  All matmul operator forms delegate to
+//! the shared kernel layer (`linalg::kernels`) — the ONE place GEMM
+//! performance work happens (threading, cache/register blocking, fused
+//! epilogues); see EXPERIMENTS.md §Perf.
 
-use crate::util::threadpool::parallel_ranges;
+use super::kernels::{self, Epilogue};
+
+pub use super::kernels::dot;
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -14,6 +13,63 @@ pub struct Mat {
     pub rows: usize,
     pub cols: usize,
     pub data: Vec<f32>,
+}
+
+/// Borrowed, stride-aware view of one matrix column — the allocation-free
+/// replacement for the old `Mat::col` (which built a fresh `Vec` per
+/// call on the Jacobi-SVD and Gram-Schmidt hot paths).
+#[derive(Clone, Copy)]
+pub struct ColView<'a> {
+    data: &'a [f32],
+    stride: usize,
+    len: usize,
+}
+
+impl<'a> ColView<'a> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        self.data[i * self.stride]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = f32> + 'a {
+        let (data, stride) = (self.data, self.stride);
+        (0..self.len).map(move |i| data[i * stride])
+    }
+
+    /// Strided dot product without materializing either column.
+    pub fn dot(&self, other: ColView<'_>) -> f32 {
+        debug_assert_eq!(self.len, other.len);
+        let mut s = 0.0f32;
+        for i in 0..self.len {
+            s += self.get(i) * other.get(i);
+        }
+        s
+    }
+
+    /// Squared Euclidean norm of the column.
+    pub fn sq_norm(&self) -> f32 {
+        let mut s = 0.0f32;
+        for i in 0..self.len {
+            let v = self.get(i);
+            s += v * v;
+        }
+        s
+    }
+
+    /// Materialize the column (callers that genuinely need ownership).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.iter().collect()
+    }
 }
 
 impl Mat {
@@ -52,8 +108,17 @@ impl Mat {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    pub fn col(&self, c: usize) -> Vec<f32> {
-        (0..self.rows).map(|r| self.at(r, c)).collect()
+    /// Borrowed stride-aware view of column `c` (no allocation).
+    pub fn col_view(&self, c: usize) -> ColView<'_> {
+        assert!(c < self.cols, "column {c} out of range ({})", self.cols);
+        ColView { data: &self.data[c..], stride: self.cols, len: self.rows }
+    }
+
+    /// Copy column `c` into a caller-owned buffer (reusable across
+    /// calls; clears and refills `out`).
+    pub fn col_into(&self, c: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(self.col_view(c).iter());
     }
 
     pub fn set_col(&mut self, c: usize, v: &[f32]) {
@@ -96,123 +161,33 @@ impl Mat {
         Mat { rows: self.rows, cols: self.cols, data }
     }
 
-    /// C = A · B  (4-row register-blocked ikj, threaded).
-    ///
-    /// Each B row streamed from memory feeds FOUR output rows — 4x fewer
-    /// B loads and four independent FMA chains for the auto-vectorizer
-    /// (see EXPERIMENTS.md §Perf for the measured delta).
+    /// C = A · B (kernel layer: threaded, cache/register blocked).
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul inner dims");
-        let (m, k, n) = (self.rows, self.cols, b.cols);
-        let mut out = Mat::zeros(m, n);
-        let a_data = &self.data;
-        let b_data = &b.data;
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
-        parallel_ranges(m, |lo, hi| {
-            let out_ptr = &out_ptr;
-            let mut i = lo;
-            while i + 4 <= hi {
-                let out4 = unsafe {
-                    std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), 4 * n)
-                };
-                let (o0, rest) = out4.split_at_mut(n);
-                let (o1, rest) = rest.split_at_mut(n);
-                let (o2, o3) = rest.split_at_mut(n);
-                for kk in 0..k {
-                    let a0 = a_data[i * k + kk];
-                    let a1 = a_data[(i + 1) * k + kk];
-                    let a2 = a_data[(i + 2) * k + kk];
-                    let a3 = a_data[(i + 3) * k + kk];
-                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
-                        continue;
-                    }
-                    let b_row = &b_data[kk * n..(kk + 1) * n];
-                    // zip-fused form: no bounds checks in the hot loop
-                    for ((((bv, p0), p1), p2), p3) in b_row
-                        .iter()
-                        .zip(o0.iter_mut())
-                        .zip(o1.iter_mut())
-                        .zip(o2.iter_mut())
-                        .zip(o3.iter_mut())
-                    {
-                        *p0 += a0 * bv;
-                        *p1 += a1 * bv;
-                        *p2 += a2 * bv;
-                        *p3 += a3 * bv;
-                    }
-                }
-                i += 4;
-            }
-            // remainder rows
-            for ii in i..hi {
-                let out_row = unsafe {
-                    std::slice::from_raw_parts_mut(out_ptr.0.add(ii * n), n)
-                };
-                let a_row = &a_data[ii * k..(ii + 1) * k];
-                for (kk, &a_ik) in a_row.iter().enumerate() {
-                    if a_ik == 0.0 {
-                        continue;
-                    }
-                    let b_row = &b_data[kk * n..(kk + 1) * n];
-                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                        *o += a_ik * bv;
-                    }
-                }
-            }
-        });
+        let mut out = Mat::zeros(self.rows, b.cols);
+        kernels::gemm_nn(
+            &self.data, &b.data, self.rows, self.cols, b.cols, &mut out.data, Epilogue::None,
+        );
         out
     }
 
     /// C = Aᵀ · B  without materializing Aᵀ.
     pub fn matmul_tn(&self, b: &Mat) -> Mat {
         assert_eq!(self.rows, b.rows, "matmul_tn inner dims");
-        let (k, m, n) = (self.rows, self.cols, b.cols);
-        let mut out = Mat::zeros(m, n);
-        let a_data = &self.data;
-        let b_data = &b.data;
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
-        parallel_ranges(m, |lo, hi| {
-            let out_ptr = &out_ptr;
-            for i in lo..hi {
-                let out_row = unsafe {
-                    std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n)
-                };
-                for kk in 0..k {
-                    let a_ki = a_data[kk * m + i];
-                    if a_ki == 0.0 {
-                        continue;
-                    }
-                    let b_row = &b_data[kk * n..(kk + 1) * n];
-                    for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
-                        *o += a_ki * bv;
-                    }
-                }
-            }
-        });
+        let mut out = Mat::zeros(self.cols, b.cols);
+        kernels::gemm_tn(
+            &self.data, &b.data, self.cols, self.rows, b.cols, &mut out.data, Epilogue::None,
+        );
         out
     }
 
     /// C = A · Bᵀ  without materializing Bᵀ (dot-product form).
     pub fn matmul_nt(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.cols, "matmul_nt inner dims");
-        let (m, k, n) = (self.rows, self.cols, b.rows);
-        let mut out = Mat::zeros(m, n);
-        let a_data = &self.data;
-        let b_data = &b.data;
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
-        parallel_ranges(m, |lo, hi| {
-            let out_ptr = &out_ptr;
-            for i in lo..hi {
-                let out_row = unsafe {
-                    std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n)
-                };
-                let a_row = &a_data[i * k..(i + 1) * k];
-                for (j, o) in out_row.iter_mut().enumerate() {
-                    let b_row = &b_data[j * k..(j + 1) * k];
-                    *o = dot(a_row, b_row);
-                }
-            }
-        });
+        let mut out = Mat::zeros(self.rows, b.rows);
+        kernels::gemm_nt(
+            &self.data, &b.data, self.rows, self.cols, b.rows, &mut out.data, Epilogue::None,
+        );
         out
     }
 
@@ -222,54 +197,6 @@ impl Mat {
         (0..self.rows).map(|r| dot(self.row(r), x)).collect()
     }
 }
-
-/// out += A · B over raw slices (A: m x k, B: k x n, out: m x n), using
-/// the same zip-fused streaming kernel as `Mat::matmul` but accumulating
-/// into caller-owned storage — the allocation-free form the f_LR
-/// contraction loop needs (EXPERIMENTS.md §Perf iteration 4).
-pub fn matmul_acc(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let a_row = &a[i * k..(i + 1) * k];
-        let out_row = &mut out[i * n..(i + 1) * n];
-        for (kk, &a_ik) in a_row.iter().enumerate() {
-            if a_ik == 0.0 {
-                continue;
-            }
-            let b_row = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
-                *o += a_ik * bv;
-            }
-        }
-    }
-}
-
-/// Unrolled dot product (8-wide accumulators; auto-vectorizes).
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 8;
-    let mut acc = [0.0f32; 8];
-    for c in 0..chunks {
-        let i = c * 8;
-        for lane in 0..8 {
-            acc[lane] += a[i + lane] * b[i + lane];
-        }
-    }
-    let mut s = acc.iter().sum::<f32>();
-    for i in chunks * 8..a.len() {
-        s += a[i] * b[i];
-    }
-    s
-}
-
-/// Shareable raw pointer for scoped-thread row writes (each thread owns a
-/// disjoint row range, so no aliasing).
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]
 mod tests {
@@ -351,5 +278,27 @@ mod tests {
         let mut rng = Pcg64::new(5);
         let a = Mat::random(4, 9, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn col_view_matches_materialized_column() {
+        let mut rng = Pcg64::new(6);
+        let a = Mat::random(7, 5, &mut rng);
+        for c in 0..a.cols {
+            let view = a.col_view(c);
+            assert_eq!(view.len(), a.rows);
+            for r in 0..a.rows {
+                assert_eq!(view.get(r), a.at(r, c));
+            }
+            let mut buf = Vec::new();
+            a.col_into(c, &mut buf);
+            assert_eq!(buf, view.to_vec());
+        }
+        // strided dot == dot of materialized columns
+        let p = a.col_view(1).to_vec();
+        let q = a.col_view(3).to_vec();
+        let want: f32 = p.iter().zip(&q).map(|(x, y)| x * y).sum();
+        assert!((a.col_view(1).dot(a.col_view(3)) - want).abs() < 1e-5);
+        assert!((a.col_view(2).sq_norm() - a.col_view(2).dot(a.col_view(2))).abs() < 1e-6);
     }
 }

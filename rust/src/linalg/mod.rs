@@ -1,11 +1,14 @@
 //! Dense linear algebra substrate (pure rust, f32).
 //!
-//! Implements everything the paper's method and baselines need — blocked
-//! threaded matmul, Gram-Schmidt / Householder QR, one-sided Jacobi SVD,
-//! Cholesky (for SVD-LLM's whitening), warm-started subspace iteration,
-//! and Tucker/HOSVD tensor ops — with no external BLAS/LAPACK.
+//! Implements everything the paper's method and baselines need — the
+//! shared multithreaded GEMM kernel layer (`kernels`, the one
+//! optimization site every matmul routes through), Gram-Schmidt /
+//! Householder QR, one-sided Jacobi SVD, Cholesky (for SVD-LLM's
+//! whitening), warm-started subspace iteration, and Tucker/HOSVD tensor
+//! ops — with no external BLAS/LAPACK.
 
 pub mod cholesky;
+pub mod kernels;
 pub mod matrix;
 pub mod qr;
 pub mod subspace;

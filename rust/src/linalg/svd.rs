@@ -6,7 +6,7 @@
 //! decomposes (weight matrices up to ~512x512, unfoldings up to ~1k) and
 //! accurate to f32 roundoff.  Tall matrices are pre-reduced by QR.
 
-use super::matrix::{dot, Mat};
+use super::matrix::Mat;
 use super::qr::householder_qr;
 
 /// Thin SVD result: a = u * diag(s) * vt, singular values descending.
@@ -53,11 +53,11 @@ fn jacobi_svd(a: &Mat) -> Svd {
         let mut off = 0.0f64;
         for p in 0..n {
             for q in (p + 1)..n {
-                let cp = w.col(p);
-                let cq = w.col(q);
-                let apq = dot(&cp, &cq) as f64;
-                let app = dot(&cp, &cp) as f64;
-                let aqq = dot(&cq, &cq) as f64;
+                // Stride-aware column views: the O(n² · sweeps) pair loop
+                // used to allocate two fresh Vecs per pair (`Mat::col`).
+                let apq = w.col_view(p).dot(w.col_view(q)) as f64;
+                let app = w.col_view(p).sq_norm() as f64;
+                let aqq = w.col_view(q).sq_norm() as f64;
                 if apq.abs() <= eps * (app * aqq).sqrt() || app + aqq < 1e-30 {
                     continue;
                 }
@@ -89,7 +89,7 @@ fn jacobi_svd(a: &Mat) -> Svd {
 
     // Singular values = column norms; sort descending.
     let mut order: Vec<usize> = (0..n).collect();
-    let norms: Vec<f32> = (0..n).map(|j| dot(&w.col(j), &w.col(j)).sqrt()).collect();
+    let norms: Vec<f32> = (0..n).map(|j| w.col_view(j).sq_norm().sqrt()).collect();
     order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
 
     let mut u = Mat::zeros(m, k);
@@ -97,10 +97,10 @@ fn jacobi_svd(a: &Mat) -> Svd {
     let mut vt = Mat::zeros(k, n);
     for (out_j, &j) in order.iter().take(k).enumerate() {
         s[out_j] = norms[j];
-        let cj = w.col(j);
+        let cj = w.col_view(j);
         if norms[j] > 1e-12 {
             for i in 0..m {
-                u.data[i * k + out_j] = cj[i] / norms[j];
+                u.data[i * k + out_j] = cj.get(i) / norms[j];
             }
         } else {
             u.data[(out_j % m) * k + out_j] = 1.0;

@@ -28,12 +28,14 @@ fn main() {
 
 fn usage() -> String {
     [
-        "usage: wasi-train <train|infer|plan-ranks|eval|cost-model|calibrate|list|demo> [options]",
+        "usage: wasi-train <train|infer|plan-ranks|eval|bench|cost-model|calibrate|list|demo> [options]",
         "common options:",
         "  --artifacts DIR   artifact directory (default: artifacts)",
         "  --engine KIND     execution engine: auto|hlo|native (default: auto;",
         "                    auto prefers HLO when the runtime can execute model",
         "                    HLO and falls back to the native engine otherwise)",
+        "  --threads N       kernel-layer worker threads (default: auto = all",
+        "                    cores; results are bit-identical across counts)",
         "train:      --model NAME --dataset PRESET --steps N --samples N --seed S",
         "            --lr LR0 (cosine schedule start, default 0.05)",
         "            --save-curve FILE (write the loss curve as JSON)",
@@ -42,6 +44,9 @@ fn usage() -> String {
         "            works on infer-only variants, no train artifact needed)",
         "plan-ranks: --budget-kb N | --eps E",
         "eval:       <exhibit|all> --steps N --out DIR [--quick]",
+        "bench:      [--quick] [--steps N] [--out FILE (default BENCH_native.json)]",
+        "            times demo->train->infer on both engines, sweeps 1 vs N",
+        "            threads, and writes the perf record JSON",
         "demo:       --out DIR (default: demo_artifacts) -- tiny ViT manifest +",
         "            params generated in pure rust, so train/infer run offline:",
         "            wasi-train demo --out D && wasi-train train --artifacts D \
@@ -57,10 +62,21 @@ fn engine_kind(args: &Args) -> Result<EngineKind> {
 
 fn run() -> Result<()> {
     let args = Args::parse();
+    // `--threads N|auto` applies process-wide before any kernel runs.
+    if let Some(v) = args.get("threads") {
+        let n = if v == "auto" {
+            0
+        } else {
+            v.parse::<usize>()
+                .map_err(|e| anyhow!("--threads expects an integer or 'auto', got {v:?}: {e}"))?
+        };
+        wasi_train::util::threadpool::set_num_threads(n);
+    }
     let artifacts = args.get_or("artifacts", "artifacts").to_string();
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args, &artifacts),
         Some("infer") => cmd_infer(&args, &artifacts),
+        Some("bench") => cmd_bench(&args),
         Some("demo") => cmd_demo(&args),
         Some("plan-ranks") => cmd_plan_ranks(&args, &artifacts),
         Some("eval") => cmd_eval(&args, &artifacts),
@@ -124,6 +140,8 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         lr0: args.f64_or("lr", 0.05)? as f32,
         log_every: None,
         engine,
+        // `--threads` is already applied process-wide in `run`.
+        threads: None,
     };
     let report = session.finetune(&cfg)?;
     println!(
@@ -169,6 +187,18 @@ fn cmd_infer(args: &Args, artifacts: &str) -> Result<()> {
         correct,
         entry.batch
     );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let cfg = wasi_train::eval::perf::BenchConfig {
+        quick,
+        steps: args.usize_or("steps", if quick { 10 } else { 50 })?,
+        out: std::path::PathBuf::from(args.get_or("out", "BENCH_native.json")),
+    };
+    let summary = wasi_train::eval::perf::run_bench(&cfg)?;
+    println!("{summary}");
     Ok(())
 }
 

@@ -1,20 +1,64 @@
 //! Scoped data-parallel helpers over std::thread (no rayon vendored).
 //!
-//! The native engine's matmuls and the eval sweeps use `parallel_chunks`
-//! to split row ranges across cores.  Work is partitioned statically —
-//! the workloads here are regular (dense linear algebra panels), so
-//! static partitioning beats a work-stealing queue and costs nothing.
+//! The kernel layer (`linalg::kernels`) and the eval sweeps use
+//! `parallel_ranges` to split row ranges across cores.  Work is
+//! partitioned statically — the workloads here are regular (dense linear
+//! algebra panels), so static partitioning beats a work-stealing queue
+//! and costs nothing.
+//!
+//! The worker count is process-global: `set_num_threads` (driven by the
+//! CLI `--threads` flag and `FinetuneConfig::threads`) overrides the
+//! auto-detected value; `WASI_THREADS` in the environment overrides the
+//! hardware default when no explicit override is set.
 
-/// Number of worker threads to use (env `WASI_THREADS` overrides).
-pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("WASI_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// 0 = no override (auto-detect).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Serializes unit tests that mutate the process-global override (lib
+/// tests run in parallel; kernel results are override-independent, but
+/// assertions ABOUT the override value itself must not interleave).
+#[cfg(test)]
+pub(crate) static TEST_OVERRIDE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn auto_threads() -> usize {
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        if let Ok(v) = std::env::var("WASI_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Override the worker-thread count for all kernel-layer parallelism
+/// (`0` resets to auto-detect).  Kernels partition output rows
+/// disjointly, so results are bit-identical across thread counts — this
+/// knob trades wall-clock only.
+pub fn set_num_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The raw override value (`0` = auto-detect) — lets a scope that
+/// sweeps thread counts (`wasi-train bench`) restore the caller's
+/// setting exactly.
+pub fn thread_override() -> usize {
+    THREAD_OVERRIDE.load(Ordering::Relaxed)
+}
+
+/// Number of worker threads to use (the `set_num_threads` override, else
+/// env `WASI_THREADS`, else the hardware parallelism).
+pub fn num_threads() -> usize {
+    match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+        0 => auto_threads(),
+        n => n,
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
 }
 
 /// Run `f(chunk_start, chunk_end)` over `0..n` split into per-thread
@@ -81,6 +125,15 @@ mod tests {
         let items: Vec<usize> = (0..257).collect();
         let out = parallel_map(&items, |x| x * 2);
         assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn thread_override_roundtrip() {
+        let _guard = TEST_OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_num_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_num_threads(0);
+        assert!(num_threads() >= 1);
     }
 
     #[test]

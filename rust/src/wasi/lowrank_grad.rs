@@ -86,7 +86,7 @@ pub fn lowrank_grad_3d(core: &Tensor, u1: &Mat, u2: &Mat, u3: &Mat, dy: &Tensor)
         for nn in 0..n {
             let z1_slab = &z1[(nn * o + oo0) * r1..(nn * o + oo0 + rows) * r1];
             let z3_slab = &z3[nn * r1 * i_dim..(nn + 1) * r1 * i_dim];
-            crate::linalg::matrix::matmul_acc(z1_slab, rows, r1, z3_slab, i_dim, dw_block);
+            crate::linalg::kernels::gemm_nn_acc(z1_slab, rows, r1, z3_slab, i_dim, dw_block);
         }
         oo0 += rows;
     }

@@ -152,6 +152,40 @@ fn demo_then_native_train_full_finetune() {
     assert!(tail < head, "loss must fall under the native engine: {losses:?}");
 }
 
+/// `bench --quick` must complete offline and emit a well-formed perf
+/// record (the CI smoke step asserts the same file).
+#[test]
+fn bench_quick_emits_wellformed_perf_record() {
+    let out_file = std::env::temp_dir().join("wasi_cli_bench.json");
+    let _ = std::fs::remove_file(&out_file);
+    let outs = out_file.to_string_lossy().into_owned();
+    let out = run(&["bench", "--quick", "--steps", "3", "--out", &outs]);
+    assert!(out.status.success(), "bench failed: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("wasi-train bench"), "{s}");
+    assert!(s.contains("native"), "{s}");
+
+    let json = std::fs::read_to_string(&out_file).unwrap();
+    let v = wasi_train::util::json::Json::parse(&json).unwrap();
+    assert_eq!(
+        v.get("bench").and_then(|b| b.as_str()),
+        Some("wasi-train bench")
+    );
+    let engines = v.get("engines").and_then(|e| e.as_arr()).unwrap();
+    assert_eq!(engines.len(), 2, "{json}");
+    let native = &engines[0];
+    assert_eq!(native.get("engine").and_then(|e| e.as_str()), Some("native"));
+    assert!(native.get("thread_speedup").and_then(|s| s.as_f64()).is_some());
+    let arms = native.get("arms").and_then(|a| a.as_arr()).unwrap();
+    assert!(!arms.is_empty());
+    for arm in arms {
+        assert!(arm.get("train_seconds").and_then(|x| x.as_f64()).unwrap() > 0.0);
+    }
+    // The HLO engine is recorded (available or not) rather than omitted.
+    assert_eq!(engines[1].get("engine").and_then(|e| e.as_str()), Some("hlo"));
+    assert!(v.get("nodes").and_then(|n| n.as_arr()).is_some());
+}
+
 #[test]
 fn infer_runs_without_train_artifact() {
     // Demo variants ship no train HLO at all, so they exercise exactly

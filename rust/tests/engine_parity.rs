@@ -4,11 +4,17 @@
 //! no PJRT, no `make artifacts`.
 //!
 //! What is pinned:
-//! * the native full-model engine completes a real fine-tune end to end
-//!   through `Session::finetune` with a decreasing loss;
+//! * the native full-model engine (the graph-IR executor since the
+//!   layer-graph split) completes a real fine-tune end to end through
+//!   `Session::finetune` with a decreasing loss — the same trajectory
+//!   contract the pre-split engine passed, so the graph rewrite is
+//!   pinned against the PR 2 behavior;
 //! * the factored (WASI) parameterization's loss trajectory tracks the
 //!   dense oracle at a near-lossless ε — the cross-parameterization
 //!   numerics check;
+//! * training trajectories are bit-identical across kernel-layer thread
+//!   counts (the deterministic row partition), so `--threads` is pure
+//!   wall-clock;
 //! * `--engine auto` falls back to the native engine exactly when the
 //!   runtime cannot execute model HLO, and forcing `hlo` there fails
 //!   with the documented error;
@@ -129,6 +135,55 @@ fn auto_selects_native_without_pjrt_and_hlo_errors() {
     let (x, _, _) = task.batch_onehot(entry.batch);
     let err = infer.infer(&params, &x).unwrap_err();
     assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+}
+
+#[test]
+fn trajectory_bit_identical_across_thread_counts() {
+    // The kernel layer partitions output rows disjointly and each
+    // element accumulates in ascending-k order, so the WHOLE training
+    // trajectory — forward, backward, WSI refresh, ASI compression —
+    // must not change a single bit between 1 and N threads.
+    let dir = demo_dir("threads", &DemoConfig::default());
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.model("vit_demo_wasi_eps80").unwrap();
+    let mut task = VisionTask::new("thr", entry.classes, 16, 0.5, 4, 11);
+    let (x, y, _) = task.batch_onehot(entry.batch);
+    let run = |threads: usize| -> (Vec<f32>, Vec<f32>) {
+        wasi_train::util::threadpool::set_num_threads(threads);
+        let mut eng = NativeModelEngine::load(entry).unwrap();
+        let losses = (0..6).map(|_| eng.step(&x, &y, 0.05).unwrap().loss).collect();
+        let params = eng.params().to_vec();
+        (losses, params)
+    };
+    let (losses1, params1) = run(1);
+    let (losses4, params4) = run(4);
+    wasi_train::util::threadpool::set_num_threads(0);
+    assert_eq!(losses1, losses4, "losses diverged across thread counts");
+    assert_eq!(params1, params4, "params diverged across thread counts");
+}
+
+#[test]
+fn session_finetunes_with_explicit_thread_count() {
+    // FinetuneConfig.threads plumbs through to the kernel layer; the
+    // run must behave exactly like the default (engine + descent).
+    let dir = demo_dir("threadcfg", &DemoConfig::default());
+    let session = Session::open(dir.to_str().unwrap()).unwrap();
+    let report = session
+        .finetune(&FinetuneConfig {
+            model: "vit_demo_wasi_eps80".into(),
+            dataset: "cifar10-like".into(),
+            samples: 32,
+            steps: 20,
+            seed: 233,
+            lr0: 0.1,
+            engine: EngineKind::Native,
+            threads: Some(2),
+            ..FinetuneConfig::default()
+        })
+        .unwrap();
+    wasi_train::util::threadpool::set_num_threads(0);
+    assert_eq!(report.engine, "native");
+    assert!(report.final_loss.is_finite());
 }
 
 #[test]
