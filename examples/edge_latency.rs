@@ -28,7 +28,7 @@ fn main() -> Result<()> {
         .title("Measured per-iteration time (host, PJRT CPU)");
     let mut measured = Vec::new();
     for name in ["vit_wasi_eps40", "vit_wasi_eps80", "vit_vanilla"] {
-        let Ok(entry) = ctx.session.manifest.model(name) else { continue };
+        let Ok(entry) = ctx.session.manifest().model(name) else { continue };
         let entry = entry.clone();
         let (inf, tr) = measure_iteration(&ctx, &entry, 3)?;
         t.row([name.to_string(), format!("{:.0}", inf * 1e3), format!("{:.0}", tr * 1e3)]);

@@ -1,0 +1,88 @@
+//! Multi-session serving example: the deployment shape the on-device
+//! personalization literature targets — a long-lived service running
+//! concurrent fine-tuning jobs while answering inference requests from
+//! the same shared model pool.
+//!
+//! Uses the pure-rust demo artifacts so it runs offline:
+//!     cargo run --release --example personalize_service
+
+use anyhow::Result;
+use wasi_train::coordinator::FinetuneConfig;
+use wasi_train::engine::demo::{write_demo_artifacts, DemoConfig};
+use wasi_train::engine::EngineKind;
+use wasi_train::serve::{InferRequest, JobEvent, JobSpec, Service, ServiceConfig};
+
+fn main() -> Result<()> {
+    let dir = std::env::temp_dir().join("wasi_personalize_service_demo");
+    let _ = std::fs::remove_dir_all(&dir);
+    write_demo_artifacts(&dir, &DemoConfig::default())?;
+    println!("demo artifacts -> {}", dir.display());
+
+    // A service with two workers: two personalization jobs train
+    // concurrently on different variants.
+    let service = Service::start(ServiceConfig { artifacts: dir, workers: 2 })?;
+    let mut jobs = Vec::new();
+    for (user, model) in [("alice", "vit_demo_wasi_eps80"), ("bob", "vit_demo_vanilla")] {
+        let cfg = FinetuneConfig::builder()
+            .model(model)
+            .samples(64)
+            .steps(40)
+            .lr0(0.1)
+            .engine(EngineKind::Native)
+            .build();
+        let id = service.submit(JobSpec::new(cfg))?;
+        println!("submitted job {id} ({user} -> {model})");
+        jobs.push((user, model, id));
+    }
+
+    // Inference interleaves with the running jobs (pretrained params).
+    let probe = InferRequest {
+        model: "vit_demo_vanilla".into(),
+        engine: EngineKind::Auto,
+        seed: 233,
+        x: None,
+    };
+    let out = service.infer(None, &probe, None)?;
+    println!(
+        "inference during training: {}/{} correct (pretrained params)",
+        out.correct.unwrap_or(0),
+        out.batch
+    );
+
+    // Stream one job's progress; wait for both.
+    let (user0, _, id0) = jobs[0];
+    if let Some(events) = service.take_events(id0) {
+        for ev in events {
+            if let JobEvent::Step { record, .. } = ev {
+                if record.step % 10 == 0 {
+                    println!("[{user0}] step {:>3} loss {:.4}", record.step, record.loss);
+                }
+            }
+        }
+    }
+    for (user, model, id) in &jobs {
+        let report = service.wait(*id)?;
+        println!(
+            "{user}: {model} fine-tuned, final loss {:.4}, val acc {:.3}",
+            report.final_loss, report.val_accuracy
+        );
+        // Personalized inference against the finished job's weights.
+        let personalized = service.infer(
+            None,
+            &InferRequest {
+                model: (*model).into(),
+                engine: EngineKind::Auto,
+                seed: 233,
+                x: None,
+            },
+            Some(*id),
+        )?;
+        println!(
+            "{user}: personalized inference {}/{} correct",
+            personalized.correct.unwrap_or(0),
+            personalized.batch
+        );
+    }
+    service.shutdown();
+    Ok(())
+}

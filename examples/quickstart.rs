@@ -17,19 +17,20 @@ fn main() -> Result<()> {
         .parse()?;
     println!("opening session over {artifacts}/ ...");
     let session = Session::open(&artifacts)?;
-    println!("platform: {}", session.runtime.platform());
-    println!("models:   {:?}", session.manifest.models.keys().collect::<Vec<_>>());
+    println!("platform: {}", session.runtime().platform());
+    println!("models:   {:?}", session.manifest().models.keys().collect::<Vec<_>>());
 
-    let cfg = FinetuneConfig {
-        model: "vit_wasi_eps80".into(),
-        dataset: "cifar10-like".into(),
-        samples: 256,
-        steps: 30,
-        seed: 233,
-        verbose: true,
-        engine,
-        ..FinetuneConfig::default()
-    };
+    // The builder is the stable embedding API (unset knobs keep the
+    // paper defaults).
+    let cfg = FinetuneConfig::builder()
+        .model("vit_wasi_eps80")
+        .dataset("cifar10-like")
+        .samples(256)
+        .steps(30)
+        .seed(233)
+        .verbose(true)
+        .engine(engine)
+        .build();
     println!("\nfine-tuning {} on {} for {} steps ...", cfg.model, cfg.dataset, cfg.steps);
     let report = session.finetune(&cfg)?;
 

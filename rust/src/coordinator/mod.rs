@@ -16,5 +16,5 @@ pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use schedule::CosineSchedule;
-pub use session::{FinetuneConfig, FinetuneReport, Session};
-pub use trainer::{TrainConfig, Trainer};
+pub use session::{FinetuneConfig, FinetuneConfigBuilder, FinetuneReport, Session};
+pub use trainer::{progress_line, RunStatus, TrainConfig, Trainer};

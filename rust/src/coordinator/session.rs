@@ -1,21 +1,35 @@
 //! High-level fine-tuning session: dataset + variant + budget -> report.
 //!
-//! This is the public API an application embeds (see examples/): pick a
-//! dataset preset, a model variant, and an execution engine, fine-tune
-//! under the paper's recipe, and get back accuracy, loss curve,
-//! wallclock, and the memory breakdown.
+//! This is the blocking public API an application embeds (see
+//! examples/): pick a dataset preset, a model variant, and an execution
+//! engine, fine-tune under the paper's recipe, and get back accuracy,
+//! loss curve, wallclock, and the memory breakdown.
+//!
+//! Since the job-service redesign a `Session` is a thin front over the
+//! shared serving core: it holds one [`PoolEntry`] (runtime + manifest,
+//! loaded once and shareable with a [`crate::serve::Service`]) and
+//! `finetune` runs one job synchronously through the same
+//! `serve::runner` code path the multi-session `wasi-train serve`
+//! workers execute.  Embedders that want queueing, cancellation, and
+//! streamed progress use [`crate::serve::Service`] directly.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::data::synth::VisionTask;
-use crate::data::Loader;
 use crate::engine::EngineKind;
 use crate::runtime::{Manifest, Runtime};
+use crate::serve::{runner, JobSpec, PoolEntry};
+use crate::util::json::{arr, finite_num as fnum, num, obj, str as jstr, Json};
 
-use super::memory::{account, MemoryBreakdown};
-use super::trainer::{TrainConfig, Trainer};
+use super::memory::MemoryBreakdown;
 
 /// What to fine-tune and how.
+///
+/// Construct via [`FinetuneConfig::builder`] (the stable embedding
+/// API — new knobs get builder methods without breaking callers) or
+/// struct-update syntax over `Default`.
 #[derive(Debug, Clone)]
 pub struct FinetuneConfig {
     pub model: String,
@@ -30,8 +44,9 @@ pub struct FinetuneConfig {
     pub log_every: Option<usize>,
     /// Execution engine (`auto` prefers HLO when the runtime can run it).
     pub engine: EngineKind,
-    /// Kernel-layer worker threads (`None` = leave the process-global
-    /// setting alone; `Some(0)` = auto-detect).  Results are
+    /// Kernel-layer worker threads for this run (`None` = leave the
+    /// process-global setting alone; `Some(0)` = auto-detect).  The
+    /// prior setting is restored when the run finishes.  Results are
     /// bit-identical across thread counts — this trades wall-clock only.
     pub threads: Option<usize>,
 }
@@ -53,6 +68,76 @@ impl Default for FinetuneConfig {
     }
 }
 
+impl FinetuneConfig {
+    /// Fluent builder starting from the paper defaults:
+    /// `FinetuneConfig::builder().model("vit_wasi_eps80").steps(100).build()`.
+    pub fn builder() -> FinetuneConfigBuilder {
+        FinetuneConfigBuilder { cfg: FinetuneConfig::default() }
+    }
+}
+
+/// Builder for [`FinetuneConfig`]; every method overrides one default.
+#[derive(Debug, Clone)]
+pub struct FinetuneConfigBuilder {
+    cfg: FinetuneConfig,
+}
+
+impl FinetuneConfigBuilder {
+    pub fn model(mut self, model: impl Into<String>) -> Self {
+        self.cfg.model = model.into();
+        self
+    }
+
+    pub fn dataset(mut self, dataset: impl Into<String>) -> Self {
+        self.cfg.dataset = dataset.into();
+        self
+    }
+
+    pub fn samples(mut self, samples: usize) -> Self {
+        self.cfg.samples = samples;
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.cfg.steps = steps;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn verbose(mut self, verbose: bool) -> Self {
+        self.cfg.verbose = verbose;
+        self
+    }
+
+    pub fn lr0(mut self, lr0: f32) -> Self {
+        self.cfg.lr0 = lr0;
+        self
+    }
+
+    pub fn log_every(mut self, every: usize) -> Self {
+        self.cfg.log_every = Some(every);
+        self
+    }
+
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.cfg.engine = engine;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = Some(threads);
+        self
+    }
+
+    pub fn build(self) -> FinetuneConfig {
+        self.cfg
+    }
+}
+
 /// Results of one session.
 #[derive(Debug, Clone)]
 pub struct FinetuneReport {
@@ -68,63 +153,158 @@ pub struct FinetuneReport {
     pub loss_curve: Vec<(usize, f32)>,
 }
 
-/// Owns the runtime + manifest and runs sessions.
+impl FinetuneReport {
+    /// JSON shape used by the serve protocol's `done` responses and the
+    /// bench record.  Non-finite metrics (NaN accuracy on an empty val
+    /// split, a diverged loss) serialize as `null` to stay valid JSON.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", jstr(self.model.clone())),
+            ("dataset", jstr(self.dataset.clone())),
+            ("engine", jstr(self.engine)),
+            ("final_loss", fnum(self.final_loss)),
+            ("val_accuracy", fnum(self.val_accuracy)),
+            ("mean_step_seconds", num(self.mean_step_seconds)),
+            ("total_seconds", num(self.total_seconds)),
+            ("memory_mb", num(self.memory.total_mb())),
+            (
+                "loss_curve",
+                arr(self
+                    .loss_curve
+                    .iter()
+                    .map(|(s, l)| arr([num(*s as f64), fnum(*l as f64)]))),
+            ),
+        ])
+    }
+}
+
+/// Owns (a shared handle to) the runtime + manifest and runs sessions.
 pub struct Session {
-    pub runtime: Runtime,
-    pub manifest: Manifest,
+    entry: Arc<PoolEntry>,
 }
 
 impl Session {
     pub fn open(artifacts_dir: &str) -> Result<Session> {
-        Ok(Session {
-            runtime: Runtime::cpu()?,
-            manifest: Manifest::load(artifacts_dir)?,
-        })
+        Ok(Session { entry: PoolEntry::open(artifacts_dir)? })
+    }
+
+    /// Wrap an already-loaded pool entry (shares the runtime/manifest
+    /// with a running service instead of loading the artifacts again).
+    pub fn from_pool(entry: Arc<PoolEntry>) -> Session {
+        Session { entry }
+    }
+
+    /// The artifact runtime backing this session.
+    pub fn runtime(&self) -> &Runtime {
+        &self.entry.runtime
+    }
+
+    /// The loaded artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.entry.manifest
+    }
+
+    /// The shared pool entry (hand this to `serve::Service` /
+    /// `Session::from_pool` to reuse the loaded artifacts).
+    pub fn pool_entry(&self) -> &Arc<PoolEntry> {
+        &self.entry
     }
 
     /// Fine-tune one variant on one dataset preset; returns the report.
+    ///
+    /// Blocking single-job front over the same `serve::runner` path the
+    /// job service executes — CLI, examples, and `serve` all train
+    /// through one code path.
     pub fn finetune(&self, cfg: &FinetuneConfig) -> Result<FinetuneReport> {
-        if let Some(t) = cfg.threads {
-            crate::util::threadpool::set_num_threads(t);
-        }
-        let entry = self.manifest.model(&cfg.model)?;
-        let mut task = VisionTask::preset(&cfg.dataset, cfg.seed)
-            .ok_or_else(|| anyhow::anyhow!("unknown dataset preset {:?}", cfg.dataset))?;
-        if task.classes != entry.classes || task.dim != entry.input_dim {
-            // Artifacts are compiled for a fixed class count and image
-            // size; presets are re-instantiated to match (documented
-            // substitution: the head's class-count and the input
-            // resolution are artifact constants).
-            let side = entry.image_side().ok_or_else(|| {
-                anyhow::anyhow!(
-                    "model {} is not an image model (input_dim {})",
-                    entry.name,
-                    entry.input_dim
-                )
-            })?;
-            task = VisionTask::new(&cfg.dataset, entry.classes, side, 0.7, 8, cfg.seed);
-        }
-        let mut loader = Loader::from_task(&mut task, cfg.samples, cfg.seed);
-        let tcfg = TrainConfig {
-            steps: cfg.steps,
-            lr0: cfg.lr0,
-            log_every: cfg.log_every.unwrap_or((cfg.steps / 10).max(1)),
-            verbose: cfg.verbose,
-            engine: cfg.engine,
+        let spec = JobSpec::new(cfg.clone());
+        let never = AtomicBool::new(false);
+        let outcome = runner::execute_job(&self.entry, &spec, &mut |_| {}, &never)?;
+        Ok(outcome.report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::demo::{write_demo_artifacts, DemoConfig};
+    use crate::util::threadpool::{set_num_threads, thread_override, TEST_OVERRIDE_LOCK};
+
+    #[test]
+    fn builder_overrides_defaults() {
+        let cfg = FinetuneConfig::builder()
+            .model("m")
+            .dataset("d")
+            .samples(32)
+            .steps(7)
+            .seed(9)
+            .lr0(0.125)
+            .log_every(2)
+            .engine(EngineKind::Native)
+            .threads(3)
+            .build();
+        assert_eq!(cfg.model, "m");
+        assert_eq!(cfg.dataset, "d");
+        assert_eq!(cfg.samples, 32);
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.lr0, 0.125);
+        assert_eq!(cfg.log_every, Some(2));
+        assert_eq!(cfg.engine, EngineKind::Native);
+        assert_eq!(cfg.threads, Some(3));
+        // Untouched knobs keep the paper defaults.
+        assert!(!cfg.verbose);
+    }
+
+    #[test]
+    fn report_json_is_wellformed() {
+        let report = FinetuneReport {
+            model: "m".into(),
+            dataset: "d".into(),
+            engine: "native",
+            final_loss: 1.5,
+            val_accuracy: 0.5,
+            mean_step_seconds: 0.01,
+            total_seconds: 0.1,
+            memory: MemoryBreakdown::default(),
+            loss_curve: vec![(0, 2.0), (10, 1.0)],
         };
-        let mut trainer = Trainer::new(&self.runtime, entry, tcfg)?;
-        trainer.run(&mut loader)?;
-        let val = trainer.validate(&self.runtime, &loader)?;
-        Ok(FinetuneReport {
-            model: cfg.model.clone(),
-            dataset: cfg.dataset.clone(),
-            engine: trainer.engine.backend(),
-            final_loss: trainer.metrics.smoothed_loss(),
-            val_accuracy: val,
-            mean_step_seconds: trainer.metrics.mean_step_seconds(),
-            total_seconds: trainer.metrics.total_seconds(),
-            memory: account(entry),
-            loss_curve: trainer.metrics.loss_curve(50),
-        })
+        let j = Json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(j.get("model").and_then(|v| v.as_str()), Some("m"));
+        assert_eq!(j.get("final_loss").and_then(|v| v.as_f64()), Some(1.5));
+        assert_eq!(
+            j.get("loss_curve").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn finetune_restores_prior_thread_setting() {
+        // Satellite contract: `FinetuneConfig::threads` must not leak
+        // into subsequent sessions in the same process.
+        let _guard = TEST_OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join("wasi_session_threads_restore");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+        let session = Session::open(dir.to_str().unwrap()).unwrap();
+        set_num_threads(5);
+        let report = session
+            .finetune(
+                &FinetuneConfig::builder()
+                    .model("vit_demo_wasi_eps80")
+                    .samples(32)
+                    .steps(4)
+                    .lr0(0.1)
+                    .engine(EngineKind::Native)
+                    .threads(2)
+                    .build(),
+            )
+            .unwrap();
+        assert_eq!(report.engine, "native");
+        assert_eq!(
+            thread_override(),
+            5,
+            "threads=2 leaked past the run instead of being restored"
+        );
+        set_num_threads(0);
     }
 }

@@ -1,7 +1,16 @@
 //! The training loop: drives a [`TrainEngine`] over a Loader.  The
 //! engine may be the AOT/HLO step or the native full-model engine —
 //! the loop is identical (that is the point of the trait).
+//!
+//! The loop is observable and interruptible: [`Trainer::run_observed`]
+//! reports every step to a caller-supplied observer (the job service
+//! turns these into streamed [`crate::serve::JobEvent`]s) and polls a
+//! cancellation flag between steps, which is what makes jobs
+//! cancellable without poisoning the engine.  It can also start at a
+//! nonzero step (checkpoint resume): the cosine schedule is indexed by
+//! absolute step, so a resumed run replays the exact LR tail.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -35,6 +44,30 @@ impl Default for TrainConfig {
     }
 }
 
+/// How a training run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunStatus {
+    /// All configured steps executed.
+    Completed,
+    /// The cancellation flag was observed between steps; the engine is
+    /// still consistent (a step is never torn).
+    Cancelled,
+}
+
+/// The one progress-line format, shared by the in-process verbose log
+/// and the CLI's event-stream printer so `wasi-train train` output is
+/// identical whichever path produced it.
+pub fn progress_line(model: &str, backend: &str, r: &StepRecord) -> String {
+    format!(
+        "[train {model} ({backend})] step {:>4} loss {:.4} acc {:.3} lr {:.4} ({:.0} ms)",
+        r.step,
+        r.loss,
+        r.accuracy,
+        r.lr,
+        r.seconds * 1000.0
+    )
+}
+
 /// A live trainer for one model variant.
 pub struct Trainer<'rt> {
     pub engine: Box<dyn TrainEngine + 'rt>,
@@ -58,40 +91,59 @@ impl<'rt> Trainer<'rt> {
 
     /// Run the configured number of steps against the loader.
     pub fn run(&mut self, loader: &mut Loader) -> Result<()> {
+        let never = AtomicBool::new(false);
+        self.run_observed(loader, 0, &mut |_| {}, &never).map(|_| ())
+    }
+
+    /// Run steps `start_step..cfg.steps`, reporting each step to
+    /// `observe` and polling `cancel` between steps.
+    ///
+    /// `start_step` is for checkpoint resume: the caller is responsible
+    /// for restoring the engine and fast-forwarding the loader to the
+    /// same position (see `serve::runner`), after which the trajectory
+    /// is bit-identical to an uninterrupted run — the schedule indexes
+    /// by absolute step.
+    pub fn run_observed(
+        &mut self,
+        loader: &mut Loader,
+        start_step: usize,
+        observe: &mut dyn FnMut(&StepRecord),
+        cancel: &AtomicBool,
+    ) -> Result<RunStatus> {
         let batch = self.engine.entry().batch;
-        for s in 0..self.cfg.steps {
+        for s in start_step..self.cfg.steps {
+            if cancel.load(Ordering::Relaxed) {
+                return Ok(RunStatus::Cancelled);
+            }
             let (x, y) = loader.next_batch(batch);
             let lr = self.schedule.lr(s);
             let t0 = Instant::now();
             let out = self.engine.step(&x, &y, lr)?;
             let dt = t0.elapsed().as_secs_f64();
-            self.metrics.push(StepRecord {
+            let record = StepRecord {
                 step: s,
                 loss: out.loss,
                 accuracy: out.accuracy,
                 lr,
                 seconds: dt,
-            });
+            };
+            self.metrics.push(record);
             if self.cfg.verbose && (s % self.cfg.log_every == 0 || s + 1 == self.cfg.steps) {
                 eprintln!(
-                    "[train {} ({})] step {s:>4} loss {:.4} acc {:.3} lr {:.4} ({:.0} ms)",
-                    self.engine.entry().name,
-                    self.engine.backend(),
-                    out.loss,
-                    out.accuracy,
-                    lr,
-                    dt * 1000.0
+                    "{}",
+                    progress_line(&self.engine.entry().name, self.engine.backend(), &record)
                 );
             }
+            observe(&record);
         }
-        Ok(())
+        Ok(RunStatus::Completed)
     }
 
     /// Validation accuracy via the inference engine matching the
     /// backend that actually trained (under `auto` the two could
     /// otherwise resolve differently, and accuracies are not
     /// comparable across engines — DESIGN.md §4).
-    pub fn validate(&self, rt: &'rt Runtime, loader: &Loader) -> Result<f64> {
+    pub fn validate(&self, rt: &Runtime, loader: &Loader) -> Result<f64> {
         let infer = infer_engine(rt, self.engine.entry(), self.engine.kind())?;
         let batch = self.engine.entry().batch;
         let n = loader.val_len();

@@ -44,7 +44,13 @@ pub use ops::{Op, UpdateOp};
 /// `(params, state, x, y_onehot, lr) -> (loss, acc)` with the flat
 /// params/state vectors owned by the engine and readable between steps
 /// (checkpointing, validation, tensor inspection).
-pub trait TrainEngine {
+///
+/// `Send` is a supertrait: the job service (`crate::serve`) hands train
+/// engines to worker threads, one engine exclusively per job.  Both
+/// implementations qualify — the native engine owns plain buffers, the
+/// HLO engine borrows a runtime whose backends are `Sync` (executable
+/// caches behind mutexes).
+pub trait TrainEngine: Send {
     /// The manifest entry this engine was built from.
     fn entry(&self) -> &ModelEntry;
 
@@ -85,7 +91,11 @@ pub trait TrainEngine {
 /// One inference backend for one model variant:
 /// `(params, x) -> logits`, params supplied explicitly so a live
 /// trainer's parameters can be validated without copies.
-pub trait InferEngine {
+///
+/// `Send + Sync` are supertraits: inference engines are stateless
+/// between calls (`infer` takes `&self`), so the job service shares one
+/// engine per variant across all concurrent requests.
+pub trait InferEngine: Send + Sync {
     fn entry(&self) -> &ModelEntry;
 
     /// Run on a batch with explicit params (usually `TrainEngine::params`).

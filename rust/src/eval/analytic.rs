@@ -40,7 +40,7 @@ pub fn fig2(_ctx: &EvalCtx) -> Result<String> {
 /// Fig. 4: explained variance of each activation mode (from the AOT
 /// calibration batch's spectra in the manifest).
 pub fn fig4(ctx: &EvalCtx) -> Result<String> {
-    let manifest_path = ctx.session.manifest.dir.join("manifest.json");
+    let manifest_path = ctx.session.manifest().dir.join("manifest.json");
     let text = std::fs::read_to_string(manifest_path)?;
     let j = crate::util::json::Json::parse(&text)?;
     let spectra = j
@@ -165,7 +165,7 @@ pub fn tab1(ctx: &EvalCtx) -> Result<String> {
     let mut body = t.render();
 
     // Measured counterpart on the tiny artifact, if present.
-    if let Ok(entry) = ctx.session.manifest.model("vit_wasi_attn_eps80") {
+    if let Ok(entry) = ctx.session.manifest().model("vit_wasi_attn_eps80") {
         let mem = crate::coordinator::memory::account(entry);
         body.push_str(&format!(
             "\nMeasured tiny-artifact counterpart (vit_wasi_attn_eps80):\n\

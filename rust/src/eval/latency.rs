@@ -26,8 +26,8 @@ pub fn measure_iteration(ctx: &EvalCtx, entry: &ModelEntry, reps: usize) -> Resu
     let is_seq = side.is_none();
     let mut task = crate::data::synth::VisionTask::new(
         "bench", entry.classes, side.unwrap_or(32), 0.7, 8, 233);
-    let mut step = train_engine(&ctx.session.runtime, entry, ctx.engine)?;
-    let infer = infer_engine(&ctx.session.runtime, entry, ctx.engine)?;
+    let mut step = train_engine(ctx.session.runtime(), entry, ctx.engine)?;
+    let infer = infer_engine(ctx.session.runtime(), entry, ctx.engine)?;
 
     let make_batch = |task: &mut crate::data::synth::VisionTask| -> (Vec<f32>, Vec<f32>) {
         if is_seq {
@@ -84,7 +84,7 @@ fn measure_sweep(ctx: &EvalCtx) -> Result<Vec<LatRow>> {
     let mut rows = Vec::new();
     let mut names: Vec<String> = ctx
         .session
-        .manifest
+        .manifest()
         .models
         .keys()
         .filter(|n| {
@@ -99,7 +99,7 @@ fn measure_sweep(ctx: &EvalCtx) -> Result<Vec<LatRow>> {
         names.retain(|n| n == "vit_vanilla" || n.ends_with("eps80"));
     }
     for name in names {
-        let entry = ctx.session.manifest.model(&name)?.clone();
+        let entry = ctx.session.manifest().model(&name)?.clone();
         let (i, t) = measure_iteration(ctx, &entry, reps)?;
         rows.push(LatRow {
             name,
@@ -151,7 +151,7 @@ pub fn fig8(ctx: &EvalCtx) -> Result<String> {
     // first variant the native engine can reconstruct (fall through to
     // the next candidate when reconstruction fails).
     for name in ["vit_wasi_eps80", "vit_vanilla"] {
-        let Ok(entry) = ctx.session.manifest.model(name) else { continue };
+        let Ok(entry) = ctx.session.manifest().model(name) else { continue };
         match node_attribution(entry, if ctx.quick { 2 } else { 4 }) {
             Ok(table) => {
                 body.push('\n');

@@ -8,18 +8,21 @@
 //! record (EXPERIMENTS.md §Perf).  Kernels are bit-deterministic across
 //! thread counts, so the sweep measures wall-clock only.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::FinetuneConfig;
 use crate::data::synth::VisionTask;
 use crate::engine::demo::{write_demo_artifacts, DemoConfig};
 use crate::engine::{
     train_engine, EngineKind, InferEngine, NativeInferEngine, NativeModelEngine, TrainEngine,
 };
 use crate::runtime::{Manifest, ModelEntry, Runtime};
+use crate::serve::{JobSpec, Service, ServiceConfig};
 use crate::util::json::{arr, num, obj, str as jstr, Json};
+use crate::util::stats::percentile;
 use crate::util::table::Table;
 use crate::util::threadpool::{num_threads, set_num_threads, thread_override};
 
@@ -96,6 +99,74 @@ fn run_native_arm(
     })
 }
 
+/// One serve arm: J jobs through a service with W workers.
+struct ServeArm {
+    workers: usize,
+    jobs: usize,
+    steps_per_job: usize,
+    total_s: f64,
+    jobs_per_sec: f64,
+    p50_s: f64,
+    p95_s: f64,
+}
+
+/// Bench the job service: submit `jobs` jobs (alternating variants so
+/// concurrent workers train distinct models) and measure per-job
+/// submit→done latency plus aggregate throughput, at 1 worker
+/// (sequential floor) vs `max_workers`.
+fn bench_serve(dir: &Path, models: &[String], quick: bool) -> Result<Vec<ServeArm>> {
+    let steps = if quick { 3 } else { 8 };
+    let jobs = if quick { 2 } else { 4 };
+    let max_workers = num_threads().clamp(1, 4);
+    let mut worker_arms = vec![1usize];
+    if max_workers > 1 {
+        worker_arms.push(max_workers);
+    }
+    let mut arms = Vec::new();
+    for workers in worker_arms {
+        let service = Service::start(ServiceConfig { artifacts: dir.to_path_buf(), workers })?;
+        let t0 = Instant::now();
+        let submitted: Vec<_> = (0..jobs)
+            .map(|j| {
+                let cfg = FinetuneConfig::builder()
+                    .model(&models[j % models.len()])
+                    .samples(32)
+                    .steps(steps)
+                    .seed(233 + j as u64)
+                    .engine(EngineKind::Native)
+                    .build();
+                Ok((service.submit(JobSpec::new(cfg))?, Instant::now()))
+            })
+            .collect::<Result<_>>()?;
+        // One watcher per job records its exact submit→done latency.
+        let latencies: Vec<f64> = std::thread::scope(|s| {
+            let service = &service;
+            let handles: Vec<_> = submitted
+                .iter()
+                .map(|(id, at)| {
+                    s.spawn(move || service.wait(*id).map(|_| at.elapsed().as_secs_f64()))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("watcher thread"))
+                .collect::<Result<_>>()
+        })?;
+        let total_s = t0.elapsed().as_secs_f64();
+        service.shutdown();
+        arms.push(ServeArm {
+            workers,
+            jobs,
+            steps_per_job: steps,
+            total_s,
+            jobs_per_sec: jobs as f64 / total_s,
+            p50_s: percentile(&latencies, 50.0),
+            p95_s: percentile(&latencies, 95.0),
+        });
+    }
+    Ok(arms)
+}
+
 /// Run the bench, write `cfg.out`, and return a human-readable summary.
 /// The process-global thread override is restored on every exit path.
 pub fn run_bench(cfg: &BenchConfig) -> Result<String> {
@@ -166,7 +237,13 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         Err(_) => (None, arr([])),
     };
 
-    // 4. the HLO engine on the same artifact set (expected unavailable
+    // 4. the job service over the same artifact set: jobs/sec and
+    //    submit→done latency at 1 worker vs N (distinct variants per
+    //    worker, so the concurrent arm exercises real parallel jobs).
+    set_num_threads(0);
+    let serve_arms = bench_serve(&dir, &names, cfg.quick)?;
+
+    // 5. the HLO engine on the same artifact set (expected unavailable
     //    offline: the demo set ships no train artifact, and without
     //    PJRT the runtime cannot execute model HLO).
     let rt = Runtime::cpu()?;
@@ -196,6 +273,17 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         ),
         ("thread_speedup", num(speedup)),
     ]);
+    let serve_json = arr(serve_arms.iter().map(|a| {
+        obj(vec![
+            ("workers", num(a.workers as f64)),
+            ("jobs", num(a.jobs as f64)),
+            ("steps_per_job", num(a.steps_per_job as f64)),
+            ("total_seconds", num(a.total_s)),
+            ("jobs_per_sec", num(a.jobs_per_sec)),
+            ("p50_submit_to_done_s", num(a.p50_s)),
+            ("p95_submit_to_done_s", num(a.p95_s)),
+        ])
+    }));
     let out_json = obj(vec![
         ("bench", jstr("wasi-train bench")),
         ("quick", Json::Bool(cfg.quick)),
@@ -204,6 +292,7 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         ("host_auto_threads", num(auto as f64)),
         ("demo_seconds", num(demo_s)),
         ("engines", arr([native_json, hlo_json])),
+        ("serve", serve_json),
         ("nodes", node_json),
     ]);
     std::fs::write(&cfg.out, out_json.to_string())
@@ -230,6 +319,20 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
     } else {
         body.push_str("single-core host: no thread sweep\n");
     }
+    let mut st = Table::new(["workers", "jobs", "steps/job", "jobs/s", "p50 s", "p95 s"])
+        .title("serve scheduler — submit->done latency".to_string());
+    for a in &serve_arms {
+        st.row([
+            a.workers.to_string(),
+            a.jobs.to_string(),
+            a.steps_per_job.to_string(),
+            format!("{:.2}", a.jobs_per_sec),
+            format!("{:.3}", a.p50_s),
+            format!("{:.3}", a.p95_s),
+        ]);
+    }
+    body.push('\n');
+    body.push_str(&st.render());
     match (&node_table, &profiled) {
         (Some(table), _) => {
             body.push('\n');

@@ -59,8 +59,8 @@ fn measured_axes(entry: &ModelEntry) -> (f64, f64) {
 
 /// Fig. 3a: singular-value / rank stability across fine-tuning.
 pub fn fig3a(ctx: &EvalCtx) -> Result<String> {
-    let entry = ctx.session.manifest.model("vit_vanilla")?;
-    let mut step = train_engine(&ctx.session.runtime, entry, ctx.engine)?;
+    let entry = ctx.session.manifest().model("vit_vanilla")?;
+    let mut step = train_engine(ctx.session.runtime(), entry, ctx.engine)?;
     let task = crate::data::synth::VisionTask::preset("pets-like", 233).unwrap();
     let mut task = if task.classes != entry.classes {
         crate::data::synth::VisionTask::new("pets-like", entry.classes, 32, 0.6, 10, 233)
@@ -122,7 +122,7 @@ pub fn fig5(ctx: &EvalCtx) -> Result<String> {
 }
 
 pub fn fig_vit_panel(ctx: &EvalCtx, dataset: &str, title: &str) -> Result<String> {
-    let m = &ctx.session.manifest;
+    let m = ctx.session.manifest();
     let mut rows: Vec<(String, f64, Option<FinetuneReport>, (f64, f64))> = Vec::new();
 
     let mut names: Vec<String> = Vec::new();
@@ -240,10 +240,10 @@ pub fn fig6(ctx: &EvalCtx) -> Result<String> {
         .title("Fig 6 — SwinLite (4D activations) across datasets");
     for ds in datasets {
         for name in ["swinlite_wasi_eps60", "swinlite_wasi_eps80", "swinlite_vanilla"] {
-            if !ctx.session.manifest.models.contains_key(name) {
+            if !ctx.session.manifest().models.contains_key(name) {
                 continue;
             }
-            let entry = ctx.session.manifest.model(name)?;
+            let entry = ctx.session.manifest().model(name)?;
             let r = finetune(ctx, name, ds, 233)?;
             let mem = account(entry);
             t.row([
@@ -272,13 +272,13 @@ pub fn fig7(ctx: &EvalCtx) -> Result<String> {
     let mut t = Table::new(["variant", "val acc", "TrainMem(MB)", "step ms"])
         .title("Fig 7 — TinyDec on BoolQ-like yes/no task (measured)");
     for name in ["tinydec_wasi_eps50", "tinydec_vanilla"] {
-        if !ctx.session.manifest.models.contains_key(name) {
+        if !ctx.session.manifest().models.contains_key(name) {
             continue;
         }
-        let entry = ctx.session.manifest.model(name)?;
+        let entry = ctx.session.manifest().model(name)?;
         // sequence task batches
         let mut task = crate::data::synth::SequenceTask::new(256, entry.input_dim, 233);
-        let mut step = train_engine(&ctx.session.runtime, entry, ctx.engine)?;
+        let mut step = train_engine(ctx.session.runtime(), entry, ctx.engine)?;
         let sched = crate::coordinator::CosineSchedule::paper_default(ctx.steps);
         let mut accs = Vec::new();
         let t0 = std::time::Instant::now();
@@ -392,10 +392,10 @@ pub fn fig11(ctx: &EvalCtx) -> Result<String> {
     let mut t = Table::new(["variant", "eps", "val acc", "TrainMem(MB)", "ActMem vs vanilla"])
         .title("Fig 11 — SwinLite method comparison on cifar10-like");
     for name in ["swinlite_wasi_eps60", "swinlite_wasi_eps80", "swinlite_vanilla"] {
-        if !ctx.session.manifest.models.contains_key(name) {
+        if !ctx.session.manifest().models.contains_key(name) {
             continue;
         }
-        let entry = ctx.session.manifest.model(name)?;
+        let entry = ctx.session.manifest().model(name)?;
         let r = finetune(ctx, name, "cifar10-like", 233)?;
         let mem = account(entry);
         let vanilla_act = vanilla_activations(entry).max(1);

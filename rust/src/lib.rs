@@ -23,6 +23,14 @@
 //! [`runtime::NativeRuntime`] fallback so the crate builds and runs
 //! offline with zero external dependencies.
 //!
+//! Serving is job-oriented ([`serve`]): a [`serve::ModelPool`] loads
+//! each artifact set once, a [`serve::Service`] schedules concurrent
+//! fine-tuning jobs over fixed worker threads with cancellation and
+//! streamed per-step events, and `wasi-train serve` exposes it all as
+//! a JSON-lines session protocol.  The blocking
+//! [`coordinator::Session`] API and the CLI are thin clients of the
+//! same core.
+//!
 //! See `DESIGN.md` (repository root) for the architecture and
 //! `EXPERIMENTS.md` for the paper-vs-measured record.
 
@@ -48,5 +56,6 @@ pub mod engine;
 pub mod eval;
 pub mod linalg;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod wasi;

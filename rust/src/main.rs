@@ -1,7 +1,8 @@
 //! wasi-train CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   train       fine-tune a model variant on a synthetic dataset preset
+//!   train       fine-tune a model variant (one job through the serve core)
+//!   serve       multi-session job service speaking JSON-lines on stdin/stdout
 //!   infer       run inference with a variant's initial params
 //!   plan-ranks  run the Eq. 30/32 rank-selection DP over the manifest's
 //!               perplexity table
@@ -10,12 +11,20 @@
 //!   calibrate   measure this host's GFLOP/s + bandwidth
 //!   list        list artifact model variants
 //!   demo        generate a tiny pure-rust artifact set (no Python/PJRT)
+//!
+//! Every subcommand rejects options outside its accepted set (a typo'd
+//! `--step 50` errors instead of silently training the default steps).
+
+use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
-use wasi_train::coordinator::{FinetuneConfig, Session};
-use wasi_train::engine::{self, EngineKind};
+use wasi_train::coordinator::{progress_line, FinetuneConfig, Session};
+use wasi_train::engine::EngineKind;
 use wasi_train::eval::{self, EvalCtx};
+use wasi_train::serve::{
+    serve_lines, InferRequest, JobEvent, JobSpec, JobState, Service, ServiceConfig,
+};
 use wasi_train::util::cli::Args;
 use wasi_train::util::table::Table;
 
@@ -28,7 +37,7 @@ fn main() {
 
 fn usage() -> String {
     [
-        "usage: wasi-train <train|infer|plan-ranks|eval|bench|cost-model|calibrate|list|demo> [options]",
+        "usage: wasi-train <train|serve|infer|plan-ranks|eval|bench|cost-model|calibrate|list|demo> [options]",
         "common options:",
         "  --artifacts DIR   artifact directory (default: artifacts)",
         "  --engine KIND     execution engine: auto|hlo|native (default: auto;",
@@ -36,17 +45,26 @@ fn usage() -> String {
         "                    HLO and falls back to the native engine otherwise)",
         "  --threads N       kernel-layer worker threads (default: auto = all",
         "                    cores; results are bit-identical across counts)",
+        "unknown --options are rejected per subcommand; the accepted sets are:",
         "train:      --model NAME --dataset PRESET --steps N --samples N --seed S",
         "            --lr LR0 (cosine schedule start, default 0.05)",
         "            --save-curve FILE (write the loss curve as JSON)",
+        "            --save-checkpoint FILE (save final params+state)",
+        "            --resume FILE (continue from a checkpoint, bit-identical)",
         "            --silent (suppress per-step progress lines)",
+        "            runs as one job through the same service core as `serve`",
+        "serve:      --workers N (default 2) -- long-lived JSON-lines service:",
+        "            {\"cmd\":\"submit\"|\"status\"|\"events\"|\"infer\"|\"cancel\"|\"forget\"|\"shutdown\"}",
+        "            per line on stdin; training jobs queue onto worker threads,",
+        "            infer requests answer inline (DESIGN.md \u{a7}serve)",
         "infer:      --model NAME --seed S (batch accuracy with initial params;",
         "            works on infer-only variants, no train artifact needed)",
         "plan-ranks: --budget-kb N | --eps E",
         "eval:       <exhibit|all> --steps N --out DIR [--quick]",
         "bench:      [--quick] [--steps N] [--out FILE (default BENCH_native.json)]",
         "            times demo->train->infer on both engines, sweeps 1 vs N",
-        "            threads, and writes the perf record JSON",
+        "            threads, benches the serve scheduler (jobs/sec, p50/p95",
+        "            submit->done at 1 vs N workers), and writes the perf JSON",
         "demo:       --out DIR (default: demo_artifacts) -- tiny ViT manifest +",
         "            params generated in pure rust, so train/infer run offline:",
         "            wasi-train demo --out D && wasi-train train --artifacts D \
@@ -60,8 +78,41 @@ fn engine_kind(args: &Args) -> Result<EngineKind> {
     args.get_or("engine", "auto").parse()
 }
 
+/// Per-subcommand accepted option/flag sets (satellite: unknown
+/// `--options` are rejected instead of silently ignored).  The usage
+/// screen's "common options" (`--artifacts`, `--engine`, `--threads`)
+/// are accepted by every subcommand — `--threads` applies process-wide
+/// before dispatch, the other two simply don't bind where a subcommand
+/// has no use for them — so help text and rejection never contradict.
+fn check_known_options(sub: &str, args: &Args) -> Result<()> {
+    let (specific, flags): (&[&str], &[&str]) = match sub {
+        "train" => (
+            &[
+                "model", "dataset", "steps", "samples", "seed", "lr", "save-curve",
+                "save-checkpoint", "resume",
+            ],
+            &["silent"],
+        ),
+        "serve" => (&["workers"], &[]),
+        "infer" => (&["model", "seed"], &[]),
+        "bench" => (&["steps", "out"], &["quick"]),
+        "demo" => (&["out"], &[]),
+        "plan-ranks" => (&["budget-kb", "eps"], &[]),
+        "eval" => (&["steps", "out"], &["quick"]),
+        "cost-model" | "calibrate" | "list" => (&[], &[]),
+        // Unknown subcommands fall through to the usage screen.
+        _ => return Ok(()),
+    };
+    let mut options: Vec<&str> = vec!["artifacts", "engine", "threads"];
+    options.extend_from_slice(specific);
+    args.reject_unknown(sub, &options, flags)
+}
+
 fn run() -> Result<()> {
     let args = Args::parse();
+    if let Some(sub) = args.subcommand.as_deref() {
+        check_known_options(sub, &args)?;
+    }
     // `--threads N|auto` applies process-wide before any kernel runs.
     if let Some(v) = args.get("threads") {
         let n = if v == "auto" {
@@ -75,6 +126,7 @@ fn run() -> Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts").to_string();
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args, &artifacts),
+        Some("serve") => cmd_serve(&args, &artifacts),
         Some("infer") => cmd_infer(&args, &artifacts),
         Some("bench") => cmd_bench(&args),
         Some("demo") => cmd_demo(&args),
@@ -105,7 +157,7 @@ fn run() -> Result<()> {
         Some("list") => {
             let session = Session::open(&artifacts)?;
             let mut t = Table::new(["model", "eps", "params", "state", "batch", "trainable"]);
-            for m in session.manifest.models.values() {
+            for m in session.manifest().models.values() {
                 t.row([
                     m.name.clone(),
                     m.eps.map(|e| e.to_string()).unwrap_or_else(|| "-".into()),
@@ -125,25 +177,57 @@ fn run() -> Result<()> {
     }
 }
 
+/// `train`: submit one job to an in-process service and stream its
+/// events — the exact code path `wasi-train serve` workers execute.
 fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     // Validate flag values before touching the manifest so a typo'd
     // --engine fails with its own message.
     let engine = engine_kind(args)?;
-    let session = Session::open(artifacts)?;
-    let cfg = FinetuneConfig {
-        model: args.get_or("model", "vit_wasi_eps80").to_string(),
-        dataset: args.get_or("dataset", "cifar10-like").to_string(),
-        samples: args.usize_or("samples", 512)?,
-        steps: args.usize_or("steps", 200)?,
-        seed: args.usize_or("seed", 233)? as u64,
-        verbose: !args.flag("silent"),
-        lr0: args.f64_or("lr", 0.05)? as f32,
-        log_every: None,
-        engine,
-        // `--threads` is already applied process-wide in `run`.
-        threads: None,
+    let cfg = FinetuneConfig::builder()
+        .model(args.get_or("model", "vit_wasi_eps80"))
+        .dataset(args.get_or("dataset", "cifar10-like"))
+        .samples(args.usize_or("samples", 512)?)
+        .steps(args.usize_or("steps", 200)?)
+        .seed(args.usize_or("seed", 233)? as u64)
+        .lr0(args.f64_or("lr", 0.05)? as f32)
+        .engine(engine)
+        // Progress is printed from the event stream below; --threads is
+        // already applied process-wide in `run`.
+        .build();
+    let verbose = !args.flag("silent");
+
+    let service = Service::start(ServiceConfig {
+        artifacts: PathBuf::from(artifacts),
+        workers: 1,
+    })?;
+    let mut spec = JobSpec::new(cfg.clone());
+    spec.resume_from = args.get("resume").map(PathBuf::from);
+    spec.checkpoint_to = args.get("save-checkpoint").map(PathBuf::from);
+    let job = service.submit(spec)?;
+    let events = service
+        .take_events(job)
+        .expect("a freshly submitted job exposes its event stream");
+    let log_every = (cfg.steps / 10).max(1);
+    let mut backend = "?";
+    for ev in events {
+        match ev {
+            JobEvent::Started { backend: b, .. } => backend = b,
+            JobEvent::Step { record, .. }
+                if verbose
+                    && (record.step % log_every == 0 || record.step + 1 == cfg.steps) =>
+            {
+                eprintln!("{}", progress_line(&cfg.model, backend, &record));
+            }
+            _ => {}
+        }
+    }
+    let report = match service.status(job) {
+        Some(JobState::Done(report)) => report,
+        Some(JobState::Failed(e)) => return Err(anyhow!(e)),
+        other => return Err(anyhow!("job ended without a terminal state: {other:?}")),
     };
-    let report = session.finetune(&cfg)?;
+    service.shutdown();
+
     println!(
         "\nmodel {}  dataset {}  engine {}",
         report.model, report.dataset, report.engine
@@ -152,6 +236,9 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     println!("final loss (ema) {:.4}", report.final_loss);
     println!("mean step        {:.1} ms", report.mean_step_seconds * 1e3);
     println!("train memory     {:.2} MB", report.memory.total_mb());
+    if let Some(out) = args.get("save-checkpoint") {
+        println!("checkpoint -> {out}");
+    }
     if let Some(out) = args.get("save-curve") {
         let json = wasi_train::util::json::arr(report.loss_curve.iter().map(|(s, l)| {
             wasi_train::util::json::obj(vec![
@@ -165,27 +252,44 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_infer(args: &Args, artifacts: &str) -> Result<()> {
-    let session = Session::open(artifacts)?;
-    let name = args.get_or("model", "vit_wasi_eps80");
-    let entry = session.manifest.model(name)?;
-    // Initial params come straight off the manifest entry — inference
-    // must never require a train artifact (infer-only variants).
-    let params = entry.load_params()?;
-    let infer = engine::infer_engine(&session.runtime, entry, engine_kind(args)?)?;
-    let side = entry.image_side().ok_or_else(|| {
-        anyhow!("model {name} is not an image model (input_dim {})", entry.input_dim)
+/// `serve`: the long-lived multi-session front-end — JSON-lines
+/// requests on stdin, responses on stdout, log chatter on stderr.
+fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
+    let workers = args.usize_or("workers", 2)?;
+    let service = Service::start(ServiceConfig {
+        artifacts: PathBuf::from(artifacts),
+        workers,
     })?;
-    let mut task = wasi_train::data::synth::VisionTask::new(
-        "infer", entry.classes, side, 0.7, 8, args.usize_or("seed", 233)? as u64);
-    let (x, _, labels) = task.batch_onehot(entry.batch);
-    let preds = infer.predict(&params, &x)?;
-    let correct = preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+    eprintln!(
+        "wasi-train serve: {} worker(s) over {artifacts}/ — JSON-lines on stdin \
+         (submit|status|events|infer|cancel|forget|shutdown)",
+        workers.max(1)
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    serve_lines(&service, stdin.lock(), stdout.lock())?;
+    service.shutdown();
+    Ok(())
+}
+
+fn cmd_infer(args: &Args, artifacts: &str) -> Result<()> {
+    let engine = engine_kind(args)?;
+    let session = Session::open(artifacts)?;
+    let req = InferRequest {
+        model: args.get_or("model", "vit_wasi_eps80").to_string(),
+        engine,
+        seed: args.usize_or("seed", 233)? as u64,
+        x: None,
+    };
+    // Initial params come straight off the pool cache — inference must
+    // never require a train artifact (infer-only variants).  Same
+    // `run_infer` path the serve protocol's `infer` command uses.
+    let out = wasi_train::serve::runner::run_infer(session.pool_entry(), &req, None)?;
     println!(
         "batch accuracy (pre-finetune, {} engine): {}/{}",
-        infer.backend(),
-        correct,
-        entry.batch
+        out.backend,
+        out.correct.unwrap_or(0),
+        out.batch
     );
     Ok(())
 }
@@ -220,7 +324,7 @@ fn cmd_demo(args: &Args) -> Result<()> {
 fn cmd_plan_ranks(args: &Args, artifacts: &str) -> Result<()> {
     let session = Session::open(artifacts)?;
     let table = session
-        .manifest
+        .manifest()
         .perplexity
         .as_ref()
         .ok_or_else(|| anyhow!("manifest has no perplexity table"))?;

@@ -1,0 +1,98 @@
+//! Job types: what a client submits ([`JobSpec`]), the handle it gets
+//! back ([`JobId`]), the lifecycle it observes ([`JobState`]), and the
+//! per-step stream it can subscribe to ([`JobEvent`]).
+
+use std::path::PathBuf;
+
+use crate::coordinator::metrics::StepRecord;
+use crate::coordinator::{FinetuneConfig, FinetuneReport};
+
+/// One fine-tuning job: a [`FinetuneConfig`] plus service-level knobs.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Artifact directory; `None` = the service's default directory.
+    pub artifacts: Option<PathBuf>,
+    /// The training recipe (variant, dataset, steps, engine, ...).
+    pub config: FinetuneConfig,
+    /// Restore this checkpoint before training and continue from its
+    /// step (the loader is fast-forwarded, the LR schedule indexes by
+    /// absolute step, so the resumed trajectory is bit-identical to an
+    /// uninterrupted run).
+    ///
+    /// Caller contract: the resuming `config` must repeat the
+    /// checkpointed run's recipe (dataset, samples, seed, lr0) with a
+    /// larger step count.  The v1 checkpoint format records only the
+    /// model name and step, so a mismatched recipe resumes on a
+    /// different data/LR stream without error — the model check is the
+    /// only one the file can back.
+    pub resume_from: Option<PathBuf>,
+    /// Save a checkpoint of the final params/state here on completion.
+    pub checkpoint_to: Option<PathBuf>,
+}
+
+impl JobSpec {
+    pub fn new(config: FinetuneConfig) -> JobSpec {
+        JobSpec { artifacts: None, config, resume_from: None, checkpoint_to: None }
+    }
+}
+
+/// Opaque job handle, unique within one service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Lifecycle of a job: `Queued -> Running{step, loss} -> Done(report)`
+/// or `Failed(error)`; cancellation surfaces as `Failed("cancelled")`.
+#[derive(Debug, Clone)]
+pub enum JobState {
+    Queued,
+    Running { step: usize, loss: f32 },
+    Done(FinetuneReport),
+    Failed(String),
+}
+
+impl JobState {
+    /// Terminal states never change again.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done(_) | JobState::Failed(_))
+    }
+
+    /// Protocol label (`queued` / `running` / `done` / `failed`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running { .. } => "running",
+            JobState::Done(_) => "done",
+            JobState::Failed(_) => "failed",
+        }
+    }
+}
+
+/// One entry in a job's streamed event channel.
+#[derive(Debug, Clone)]
+pub enum JobEvent {
+    /// The worker picked the job up and built its engine.
+    Started { job: JobId, model: String, backend: &'static str },
+    /// One training step completed.
+    Step { job: JobId, record: StepRecord },
+    /// Terminal: the job finished with a report.
+    Done { job: JobId, report: FinetuneReport },
+    /// Terminal: the job errored (or was cancelled).
+    Failed { job: JobId, error: String },
+}
+
+impl JobEvent {
+    pub fn job(&self) -> JobId {
+        match self {
+            JobEvent::Started { job, .. }
+            | JobEvent::Step { job, .. }
+            | JobEvent::Done { job, .. }
+            | JobEvent::Failed { job, .. } => *job,
+        }
+    }
+}

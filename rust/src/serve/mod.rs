@@ -1,0 +1,39 @@
+//! Multi-session job service: the concurrent serving core behind
+//! `wasi-train serve`, the CLI `train` subcommand, and every embedded
+//! [`crate::coordinator::Session`].
+//!
+//! The paper's deployment shape is a long-lived on-device process
+//! handling many personalization jobs (fine-tunes) while continuing to
+//! serve inference.  This module is that coordinator surface, cut into
+//! four layers:
+//!
+//! * [`pool`] — [`ModelPool`]: each artifact directory/variant loads
+//!   once; train engines are handed out exclusively per job, inference
+//!   engines are shared across requests;
+//! * [`job`] — the job API: [`JobSpec`] → [`JobId`] →
+//!   [`JobState`]`{Queued, Running{step, loss}, Done(report), Failed}`
+//!   plus the streamed [`JobEvent`] per-step progress channel;
+//! * [`service`] — [`Service`]: a fixed worker-thread scheduler with
+//!   FIFO queueing, cancellation, blocking waits, and pool inference
+//!   that interleaves with running jobs;
+//! * [`proto`] — the JSON-lines protocol (`submit` / `status` /
+//!   `events` / `infer` / `cancel` / `forget` / `shutdown`)
+//!   `wasi-train serve` speaks over stdin/stdout.
+//!
+//! [`runner`] holds the single job-execution path all of the above
+//! share — `Session::finetune` is "run one job synchronously", the
+//! service workers are "run queued jobs on N threads".  Determinism is
+//! preserved end to end: concurrent jobs produce trajectories
+//! bit-identical to sequential runs (pinned in `tests/serve.rs`).
+
+pub mod job;
+pub mod pool;
+pub mod proto;
+pub mod runner;
+pub mod service;
+
+pub use job::{JobEvent, JobId, JobSpec, JobState};
+pub use pool::{ModelPool, PoolEntry, PooledInfer};
+pub use proto::{handle_line, serve_lines, Flow};
+pub use runner::{InferOutput, InferRequest, RunnerEvent};
+pub use service::{Service, ServiceConfig};

@@ -1,0 +1,226 @@
+//! `ModelPool` — load each artifact directory once, hand out engines.
+//!
+//! Sharing rules (DESIGN.md §serve):
+//!
+//! * one [`PoolEntry`] per artifact directory: the runtime (with its
+//!   compiled-executable caches) and the parsed manifest are loaded
+//!   once and shared by every job, inference request, and `Session`
+//!   wrapping the entry;
+//! * **train engines are exclusive** — each carries mutable
+//!   params/state, so [`PoolEntry::train_engine`] constructs a fresh
+//!   one per job (the flat vectors are per-job state; the heavy shared
+//!   pieces — runtime caches, manifest — are behind the entry);
+//! * **infer engines are shared** — inference is stateless between
+//!   calls (`infer(&self, params, x)`), so the pool caches one native
+//!   engine per variant and every request borrows it concurrently.
+//!   HLO inference engines borrow the runtime (their executables live
+//!   in its cache), so they are constructed per call instead — the
+//!   compile cache makes that a map lookup.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{self, EngineKind, InferEngine, NativeInferEngine, TrainEngine};
+use crate::runtime::{Manifest, Runtime};
+
+/// One loaded artifact directory: runtime + manifest + shared caches.
+pub struct PoolEntry {
+    pub dir: PathBuf,
+    pub runtime: Runtime,
+    pub manifest: Manifest,
+    /// Initial flat parameter vectors, loaded once per variant (the
+    /// params served by pool inference when no job is referenced).
+    init_params: Mutex<BTreeMap<String, Arc<Vec<f32>>>>,
+    /// Shared native inference engines, one per variant.
+    infer_cache: Mutex<BTreeMap<String, Arc<NativeInferEngine>>>,
+}
+
+impl PoolEntry {
+    /// Load `<dir>/manifest.json` and construct the best available
+    /// runtime.  Called once per directory by [`ModelPool::open`].
+    pub fn open(dir: impl AsRef<Path>) -> Result<Arc<PoolEntry>> {
+        let dir = dir.as_ref().to_path_buf();
+        Ok(Arc::new(PoolEntry {
+            runtime: Runtime::cpu()?,
+            manifest: Manifest::load(&dir)?,
+            dir,
+            init_params: Mutex::new(BTreeMap::new()),
+            infer_cache: Mutex::new(BTreeMap::new()),
+        }))
+    }
+
+    /// A fresh, exclusive training engine for one variant (one per job).
+    pub fn train_engine(
+        &self,
+        model: &str,
+        kind: EngineKind,
+    ) -> Result<Box<dyn TrainEngine + '_>> {
+        engine::train_engine(&self.runtime, self.manifest.model(model)?, kind)
+    }
+
+    /// The variant's initial flat parameter vector, loaded once and
+    /// shared (pool inference for variants with no finished job).
+    pub fn initial_params(&self, model: &str) -> Result<Arc<Vec<f32>>> {
+        let mut cache = self.init_params.lock().unwrap();
+        if let Some(p) = cache.get(model) {
+            return Ok(p.clone());
+        }
+        let params = Arc::new(self.manifest.model(model)?.load_params()?);
+        cache.insert(model.to_string(), params.clone());
+        Ok(params)
+    }
+
+    /// An inference engine for one variant, shared when possible.
+    ///
+    /// Mirrors `engine::infer_engine`'s selection rule (`auto` on a
+    /// train-artifact-free variant is native); native engines come out
+    /// of the per-variant cache, HLO engines are built per call.
+    pub fn shared_infer(&self, model: &str, kind: EngineKind) -> Result<PooledInfer<'_>> {
+        let entry = self.manifest.model(model)?;
+        let resolved = match kind {
+            EngineKind::Auto if entry.train_hlo.is_none() => EngineKind::Native,
+            k => k.resolve(&self.runtime),
+        };
+        if resolved == EngineKind::Hlo {
+            return Ok(PooledInfer::PerCall(engine::infer_engine(
+                &self.runtime,
+                entry,
+                EngineKind::Hlo,
+            )?));
+        }
+        let mut cache = self.infer_cache.lock().unwrap();
+        if let Some(e) = cache.get(model) {
+            return Ok(PooledInfer::Shared(e.clone()));
+        }
+        let eng = Arc::new(NativeInferEngine::load(entry)?);
+        cache.insert(model.to_string(), eng.clone());
+        Ok(PooledInfer::Shared(eng))
+    }
+
+    /// Number of variants with a cached shared inference engine
+    /// (introspection for tests and the bench record).
+    pub fn cached_infer_engines(&self) -> usize {
+        self.infer_cache.lock().unwrap().len()
+    }
+}
+
+/// A pool inference engine handle: either the shared per-variant native
+/// engine or a per-call HLO wrapper (see [`PoolEntry::shared_infer`]).
+pub enum PooledInfer<'rt> {
+    Shared(Arc<NativeInferEngine>),
+    PerCall(Box<dyn InferEngine + 'rt>),
+}
+
+impl PooledInfer<'_> {
+    pub fn engine(&self) -> &dyn InferEngine {
+        match self {
+            PooledInfer::Shared(e) => e.as_ref(),
+            PooledInfer::PerCall(b) => b.as_ref(),
+        }
+    }
+}
+
+/// Artifact-directory → [`PoolEntry`] cache: the serving core loads
+/// each directory/variant once however many jobs and requests hit it.
+pub struct ModelPool {
+    entries: Mutex<BTreeMap<PathBuf, Arc<PoolEntry>>>,
+}
+
+impl ModelPool {
+    pub fn new() -> ModelPool {
+        ModelPool { entries: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The entry for an artifact directory, loading it on first use.
+    /// Keyed by the path as given (no canonicalization: serving across
+    /// spellings of one directory costs a duplicate load, never
+    /// correctness).
+    pub fn open(&self, dir: impl AsRef<Path>) -> Result<Arc<PoolEntry>> {
+        let key = dir.as_ref().to_path_buf();
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.get(&key) {
+            return Ok(e.clone());
+        }
+        let entry = PoolEntry::open(&key)
+            .map_err(|e| anyhow!("loading artifact dir {}: {e:#}", key.display()))?;
+        entries.insert(key, entry.clone());
+        Ok(entry)
+    }
+
+    /// Number of loaded artifact directories.
+    pub fn loaded_dirs(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::demo::{write_demo_artifacts, DemoConfig};
+
+    fn demo_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("wasi_pool_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+        dir
+    }
+
+    #[test]
+    fn pool_loads_each_dir_once() {
+        let dir = demo_dir("once");
+        let pool = ModelPool::new();
+        let a = pool.open(&dir).unwrap();
+        let b = pool.open(&dir).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second open must hit the cache");
+        assert_eq!(pool.loaded_dirs(), 1);
+    }
+
+    #[test]
+    fn pool_open_missing_dir_errors_with_path() {
+        let pool = ModelPool::new();
+        let missing = std::env::temp_dir().join("wasi_pool_no_such_dir");
+        let err = pool.open(&missing).unwrap_err();
+        assert!(format!("{err:#}").contains("wasi_pool_no_such_dir"), "{err:#}");
+    }
+
+    #[test]
+    fn infer_engines_are_shared_train_engines_are_not() {
+        let dir = demo_dir("share");
+        let entry = PoolEntry::open(&dir).unwrap();
+        let a = entry.shared_infer("vit_demo_vanilla", EngineKind::Auto).unwrap();
+        let b = entry.shared_infer("vit_demo_vanilla", EngineKind::Auto).unwrap();
+        match (&a, &b) {
+            (PooledInfer::Shared(x), PooledInfer::Shared(y)) => {
+                assert!(Arc::ptr_eq(x, y), "infer engines must be shared per variant")
+            }
+            _ => panic!("demo variants must resolve to the shared native engine"),
+        }
+        assert_eq!(entry.cached_infer_engines(), 1);
+
+        // Train engines are fresh per call: stepping one must not
+        // perturb the other (exclusive params/state).
+        let mut t1 = entry.train_engine("vit_demo_vanilla", EngineKind::Native).unwrap();
+        let t2 = entry.train_engine("vit_demo_vanilla", EngineKind::Native).unwrap();
+        let before = t2.params().to_vec();
+        let mut task =
+            crate::data::synth::VisionTask::new("pool", t1.entry().classes, 16, 0.5, 4, 3);
+        let (x, y, _) = task.batch_onehot(t1.entry().batch);
+        t1.step(&x, &y, 0.1).unwrap();
+        assert_eq!(t2.params(), &before[..], "train engines must be exclusive");
+    }
+
+    #[test]
+    fn initial_params_cached_and_length_checked() {
+        let dir = demo_dir("params");
+        let entry = PoolEntry::open(&dir).unwrap();
+        let p1 = entry.initial_params("vit_demo_vanilla").unwrap();
+        let p2 = entry.initial_params("vit_demo_vanilla").unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+        let want = entry.manifest.model("vit_demo_vanilla").unwrap().params_len;
+        assert_eq!(p1.len(), want);
+        assert!(entry.initial_params("no_such_model").is_err());
+    }
+}

@@ -1,0 +1,582 @@
+//! JSON-lines protocol for `wasi-train serve`: one request object per
+//! stdin line, one (or for streamed events, several) response object(s)
+//! per line on stdout.
+//!
+//! Requests: `{"cmd": "submit"|"status"|"events"|"infer"|"cancel"|
+//! "forget"|"shutdown", ...}`.  Every response carries `"ok"` plus
+//! either the payload or `"error"`.  See DESIGN.md §serve for the full
+//! schema and README for a transcript.
+
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::FinetuneConfig;
+use crate::util::json::{arr, finite_num as fnum, num, obj, str as jstr, Json};
+
+use super::job::{JobEvent, JobId, JobSpec, JobState};
+use super::runner::InferRequest;
+use super::service::Service;
+
+/// What the stdio loop should do after a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flow {
+    Continue,
+    Shutdown,
+}
+
+fn error_line(cmd: &str, e: &anyhow::Error) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("cmd", jstr(cmd)),
+        ("error", jstr(format!("{e:#}"))),
+    ])
+}
+
+fn state_fields(state: &JobState, fields: &mut Vec<(&'static str, Json)>) {
+    fields.push(("state", jstr(state.label())));
+    match state {
+        JobState::Queued => {}
+        JobState::Running { step, loss } => {
+            fields.push(("step", num(*step as f64)));
+            fields.push(("loss", fnum(*loss as f64)));
+        }
+        JobState::Done(report) => fields.push(("report", report.to_json())),
+        JobState::Failed(e) => fields.push(("error", jstr(e.clone()))),
+    }
+}
+
+fn event_json(ev: &JobEvent) -> Json {
+    let mut fields: Vec<(&'static str, Json)> = vec![
+        ("ok", Json::Bool(true)),
+        ("job", num(ev.job().0 as f64)),
+    ];
+    match ev {
+        JobEvent::Started { model, backend, .. } => {
+            fields.push(("event", jstr("started")));
+            fields.push(("model", jstr(model.clone())));
+            fields.push(("engine", jstr(*backend)));
+        }
+        JobEvent::Step { record, .. } => {
+            fields.push(("event", jstr("step")));
+            fields.push(("step", num(record.step as f64)));
+            fields.push(("loss", fnum(record.loss as f64)));
+            fields.push(("acc", fnum(record.accuracy as f64)));
+            fields.push(("lr", num(record.lr as f64)));
+            fields.push(("ms", num(record.seconds * 1e3)));
+        }
+        JobEvent::Done { report, .. } => {
+            fields.push(("event", jstr("done")));
+            fields.push(("report", report.to_json()));
+        }
+        JobEvent::Failed { error, .. } => {
+            fields.push(("event", jstr("failed")));
+            fields.push(("error", jstr(error.clone())));
+        }
+    }
+    obj(fields)
+}
+
+/// Reject request keys outside the command's accepted set — the
+/// protocol twin of the CLI's unknown-`--option` rejection, so a
+/// misspelled `"step"` errors instead of silently training the default
+/// step count.
+fn check_keys(req: &Json, cmd: &str, accepted: &[&str]) -> Result<()> {
+    let Some(m) = req.as_obj() else {
+        return Err(anyhow!("request must be a JSON object"));
+    };
+    for k in m.keys() {
+        if k != "cmd" && !accepted.contains(&k.as_str()) {
+            return Err(anyhow!(
+                "unknown key {k:?} for {cmd:?}; accepted: {}",
+                accepted.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn req_usize(req: &Json, key: &str) -> Result<Option<usize>> {
+    match req.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| Some(n as usize))
+            .ok_or_else(|| anyhow!("{key:?} must be a non-negative integer")),
+    }
+}
+
+fn req_job(req: &Json) -> Result<JobId> {
+    Ok(JobId(
+        req_usize(req, "job")?.ok_or_else(|| anyhow!("missing \"job\""))? as u64,
+    ))
+}
+
+/// Optional string-valued key as a path; a present-but-wrongly-typed
+/// value is an error, never a silent `None` (a mistyped `resume_from`
+/// must not silently train from scratch).
+fn req_path(req: &Json, key: &str) -> Result<Option<PathBuf>> {
+    match req.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(|s| Some(PathBuf::from(s)))
+            .ok_or_else(|| anyhow!("{key:?} must be a string")),
+    }
+}
+
+/// Optional boolean key, type-strict like [`req_path`].
+fn req_bool(req: &Json, key: &str) -> Result<bool> {
+    match req.get(key) {
+        None => Ok(false),
+        Some(v) => v.as_bool().ok_or_else(|| anyhow!("{key:?} must be a boolean")),
+    }
+}
+
+/// Parse a `submit` request into a [`JobSpec`] (defaults mirror
+/// `wasi-train train`, minus verbosity — serve streams events instead).
+fn parse_submit(req: &Json) -> Result<JobSpec> {
+    let model = req
+        .get("model")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("submit requires \"model\""))?;
+    let mut b = FinetuneConfig::builder().model(model);
+    if let Some(d) = req.get("dataset") {
+        b = b.dataset(d.as_str().ok_or_else(|| anyhow!("\"dataset\" must be a string"))?);
+    }
+    if let Some(steps) = req_usize(req, "steps")? {
+        b = b.steps(steps);
+    }
+    if let Some(samples) = req_usize(req, "samples")? {
+        b = b.samples(samples);
+    }
+    if let Some(seed) = req_usize(req, "seed")? {
+        b = b.seed(seed as u64);
+    }
+    if let Some(lr) = req.get("lr") {
+        b = b.lr0(lr.as_f64().ok_or_else(|| anyhow!("\"lr\" must be a number"))? as f32);
+    }
+    if let Some(engine) = req.get("engine") {
+        let s = engine.as_str().ok_or_else(|| anyhow!("\"engine\" must be a string"))?;
+        b = b.engine(s.parse()?);
+    }
+    let mut spec = JobSpec::new(b.build());
+    spec.artifacts = req_path(req, "artifacts")?;
+    spec.resume_from = req_path(req, "resume_from")?;
+    spec.checkpoint_to = req_path(req, "checkpoint_to")?;
+    Ok(spec)
+}
+
+fn parse_infer(req: &Json) -> Result<InferRequest> {
+    let model = req
+        .get("model")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("infer requires \"model\""))?;
+    let engine = match req.get("engine").and_then(|v| v.as_str()) {
+        Some(s) => s.parse()?,
+        None => crate::engine::EngineKind::Auto,
+    };
+    let x = match req.get("x") {
+        None => None,
+        Some(v) => Some(
+            v.f64_vec()
+                .map_err(|_| anyhow!("\"x\" must be an array of numbers"))?
+                .into_iter()
+                .map(|f| f as f32)
+                .collect::<Vec<f32>>(),
+        ),
+    };
+    Ok(InferRequest {
+        model: model.to_string(),
+        engine,
+        seed: req_usize(req, "seed")?.unwrap_or(233) as u64,
+        x,
+    })
+}
+
+/// Handle one request line, writing response line(s) to `out`.  Request
+/// errors become `{"ok":false,...}` lines; only I/O failures propagate.
+pub fn handle_line(svc: &Service, line: &str, out: &mut dyn Write) -> std::io::Result<Flow> {
+    let (cmd, response) = match Json::parse(line) {
+        Err(e) => ("?".to_string(), Err(anyhow!("bad request JSON: {e:#}"))),
+        Ok(req) => {
+            let cmd = req
+                .get("cmd")
+                .and_then(|v| v.as_str())
+                .unwrap_or("?")
+                .to_string();
+            let r = dispatch(svc, &cmd, &req, out)?;
+            (cmd, r)
+        }
+    };
+    // Only an ACCEPTED shutdown request stops the session — a rejected
+    // one (unknown key) was reported as an error and must not execute
+    // its side effect.
+    let accepted_shutdown = cmd == "shutdown" && response.is_ok();
+    match response {
+        Ok(Some(json)) => writeln!(out, "{json}")?,
+        Ok(None) => {} // streamed its own lines
+        Err(e) => writeln!(out, "{}", error_line(&cmd, &e))?,
+    }
+    Ok(if accepted_shutdown { Flow::Shutdown } else { Flow::Continue })
+}
+
+/// Dispatch one parsed request.  `Ok(Some(_))` = single response line,
+/// `Ok(None)` = the handler streamed lines itself, `Err` = request
+/// error (reported, not fatal).  The outer `io::Result` carries real
+/// write failures.
+fn dispatch(
+    svc: &Service,
+    cmd: &str,
+    req: &Json,
+    out: &mut dyn Write,
+) -> std::io::Result<Result<Option<Json>>> {
+    // Key validation runs only for KNOWN commands — a misspelled cmd
+    // must surface the unknown-cmd error below, not a misleading
+    // unknown-key complaint with an empty accepted set.
+    let accepted: Option<&[&str]> = match cmd {
+        "submit" => Some(&[
+            "model", "dataset", "steps", "samples", "seed", "lr", "engine", "artifacts",
+            "resume_from", "checkpoint_to",
+        ]),
+        "status" | "cancel" | "forget" => Some(&["job"]),
+        "events" => Some(&["job", "wait"]),
+        "infer" => Some(&["model", "engine", "seed", "x", "job", "artifacts"]),
+        "shutdown" => Some(&[]),
+        _ => None,
+    };
+    if let Some(accepted) = accepted {
+        if let Err(e) = check_keys(req, cmd, accepted) {
+            return Ok(Err(e));
+        }
+    }
+    let result: Result<Option<Json>> = match cmd {
+        "submit" => parse_submit(req).and_then(|spec| {
+            let id = svc.submit(spec)?;
+            Ok(Some(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("cmd", jstr("submit")),
+                ("job", num(id.0 as f64)),
+                ("state", jstr("queued")),
+            ])))
+        }),
+        "status" => req_job(req).and_then(|id| {
+            let state = svc.status(id).ok_or_else(|| anyhow!("unknown job {id}"))?;
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("cmd", jstr("status")),
+                ("job", num(id.0 as f64)),
+            ];
+            state_fields(&state, &mut fields);
+            Ok(Some(obj(fields)))
+        }),
+        "events" => {
+            match req_bool(req, "wait").and_then(|wait| req_job(req).map(|id| (id, wait))) {
+                Err(e) => Err(e),
+                Ok((id, true)) => {
+                    // Stream: claim the receiver and emit one line per
+                    // event until the job's terminal event disconnects
+                    // the channel, then a final status line.
+                    match svc.take_events(id) {
+                        None if svc.status(id).is_none() => Err(anyhow!("unknown job {id}")),
+                        None => Err(anyhow!(
+                            "job {id}'s event stream was already claimed; poll with \
+                             {{\"cmd\":\"status\"}} instead"
+                        )),
+                        Some(rx) => {
+                            for ev in rx.iter() {
+                                writeln!(out, "{}", event_json(&ev))?;
+                                out.flush()?;
+                            }
+                            match svc.status(id) {
+                                None => Err(anyhow!("job {id} vanished")),
+                                Some(state) => {
+                                    let mut fields = vec![
+                                        ("ok", Json::Bool(true)),
+                                        ("cmd", jstr("events")),
+                                        ("job", num(id.0 as f64)),
+                                    ];
+                                    state_fields(&state, &mut fields);
+                                    Ok(Some(obj(fields)))
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok((id, false)) => match svc.drain_events(id) {
+                    None if svc.status(id).is_none() => Err(anyhow!("unknown job {id}")),
+                    None => Err(anyhow!("job {id}'s event stream was already claimed")),
+                    Some(events) => {
+                        let state = svc.status(id).ok_or_else(|| anyhow!("job {id} vanished"))?;
+                        let mut fields = vec![
+                            ("ok", Json::Bool(true)),
+                            ("cmd", jstr("events")),
+                            ("job", num(id.0 as f64)),
+                            ("events", arr(events.iter().map(event_json))),
+                        ];
+                        state_fields(&state, &mut fields);
+                        Ok(Some(obj(fields)))
+                    }
+                },
+            }
+        }
+        "infer" => parse_infer(req).and_then(|ireq| {
+            let artifacts = req_path(req, "artifacts")?;
+            let job = req_usize(req, "job")?.map(|j| JobId(j as u64));
+            let infer_out = svc.infer(artifacts.as_deref(), &ireq, job)?;
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("cmd", jstr("infer")),
+                ("model", jstr(ireq.model.clone())),
+                ("engine", jstr(infer_out.backend.clone())),
+                ("batch", num(infer_out.batch as f64)),
+                (
+                    "preds",
+                    arr(infer_out.preds.iter().map(|p| num(*p as f64))),
+                ),
+            ];
+            if let Some(c) = infer_out.correct {
+                fields.push(("correct", num(c as f64)));
+            }
+            Ok(Some(obj(fields)))
+        }),
+        "cancel" => req_job(req).map(|id| {
+            let cancelled = svc.cancel(id);
+            Some(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("cmd", jstr("cancel")),
+                ("job", num(id.0 as f64)),
+                ("cancelled", Json::Bool(cancelled)),
+            ]))
+        }),
+        "forget" => req_job(req).map(|id| {
+            let forgotten = svc.forget(id);
+            Some(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("cmd", jstr("forget")),
+                ("job", num(id.0 as f64)),
+                ("forgotten", Json::Bool(forgotten)),
+            ]))
+        }),
+        "shutdown" => Ok(Some(obj(vec![
+            ("ok", Json::Bool(true)),
+            ("cmd", jstr("shutdown")),
+        ]))),
+        other => Err(anyhow!(
+            "unknown cmd {other:?}; expected submit|status|events|infer|cancel|forget|shutdown"
+        )),
+    };
+    Ok(result)
+}
+
+/// The serve loop: read JSON-lines requests until EOF or `shutdown`,
+/// writing responses to `out`.  Blank lines are skipped; request errors
+/// are reported in-band.  Used by `wasi-train serve` over real
+/// stdin/stdout and by tests over in-memory buffers.
+pub fn serve_lines(svc: &Service, input: impl BufRead, mut out: impl Write) -> Result<()> {
+    for line in input.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let flow = handle_line(svc, line, &mut out)?;
+        out.flush()?;
+        if flow == Flow::Shutdown {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::demo::{write_demo_artifacts, DemoConfig};
+    use crate::serve::service::ServiceConfig;
+
+    fn demo_service(tag: &str) -> Service {
+        let dir = std::env::temp_dir().join(format!("wasi_proto_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+        Service::start(ServiceConfig { artifacts: dir, workers: 1 }).unwrap()
+    }
+
+    fn run_session(svc: &Service, lines: &[&str]) -> Vec<Json> {
+        let input = lines.join("\n");
+        let mut out = Vec::new();
+        serve_lines(svc, input.as_bytes(), &mut out).unwrap();
+        String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).expect("every response line is JSON"))
+            .collect()
+    }
+
+    #[test]
+    fn submit_events_infer_shutdown_roundtrip() {
+        let svc = demo_service("roundtrip");
+        let responses = run_session(
+            &svc,
+            &[
+                r#"{"cmd":"submit","model":"vit_demo_wasi_eps80","steps":4,"samples":32,"engine":"native"}"#,
+                r#"{"cmd":"events","job":1,"wait":true}"#,
+                r#"{"cmd":"status","job":1}"#,
+                r#"{"cmd":"infer","model":"vit_demo_vanilla","seed":7}"#,
+                r#"{"cmd":"infer","model":"vit_demo_wasi_eps80","job":1}"#,
+                r#"{"cmd":"shutdown"}"#,
+            ],
+        );
+        svc.shutdown();
+        // submit ack.
+        assert_eq!(responses[0].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(responses[0].get("job").and_then(|v| v.as_usize()), Some(1));
+        // streamed events: started + 4 steps + done, then the final
+        // status line of the events command, then the status reply.
+        let started = &responses[1];
+        assert_eq!(started.get("event").and_then(|v| v.as_str()), Some("started"));
+        let step_lines: Vec<&Json> = responses
+            .iter()
+            .filter(|r| r.get("event").and_then(|v| v.as_str()) == Some("step"))
+            .collect();
+        assert_eq!(step_lines.len(), 4);
+        assert!(step_lines[0].get("loss").and_then(|v| v.as_f64()).is_some());
+        let done: Vec<&Json> = responses
+            .iter()
+            .filter(|r| r.get("event").and_then(|v| v.as_str()) == Some("done"))
+            .collect();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].get("report").and_then(|r| r.get("val_accuracy")).is_some());
+        // Both the events-final and status lines carry state=done.
+        let dones = responses
+            .iter()
+            .filter(|r| r.get("state").and_then(|v| v.as_str()) == Some("done"))
+            .count();
+        assert!(dones >= 2, "{responses:?}");
+        // infer on pretrained and on job-1 personalized params.
+        let infers: Vec<&Json> = responses
+            .iter()
+            .filter(|r| r.get("cmd").and_then(|v| v.as_str()) == Some("infer"))
+            .collect();
+        assert_eq!(infers.len(), 2);
+        for i in &infers {
+            assert_eq!(i.get("ok"), Some(&Json::Bool(true)));
+            assert!(i.get("preds").and_then(|v| v.as_arr()).map(|a| !a.is_empty()).unwrap_or(false));
+        }
+        assert!(infers[0].get("correct").and_then(|v| v.as_usize()).is_some());
+        // shutdown ack is the last line.
+        assert_eq!(
+            responses.last().unwrap().get("cmd").and_then(|v| v.as_str()),
+            Some("shutdown")
+        );
+    }
+
+    #[test]
+    fn request_errors_are_in_band_not_fatal() {
+        let svc = demo_service("errors");
+        let responses = run_session(
+            &svc,
+            &[
+                "this is not json",
+                r#"{"cmd":"frobnicate"}"#,
+                r#"{"cmd":"submit","steps":3}"#,
+                r#"{"cmd":"submit","model":"no_such_model","steps":3}"#,
+                r#"{"cmd":"status","job":99}"#,
+                r#"{"cmd":"cancel","job":99}"#,
+                r#"{"cmd":"events","job":99}"#,
+                r#"{"cmd":"submit","model":"vit_demo_vanilla","steps":"three"}"#,
+                r#"{"cmd":"shutdown"}"#,
+            ],
+        );
+        svc.shutdown();
+        // All but cancel + shutdown are errors; the loop survives them all.
+        assert_eq!(responses.len(), 9);
+        for (i, r) in responses.iter().enumerate() {
+            let ok = r.get("ok").and_then(|v| v.as_bool()).unwrap();
+            match i {
+                5 => {
+                    // cancel of an unknown job is ok:true, cancelled:false.
+                    assert!(ok, "{r}");
+                    assert_eq!(r.get("cancelled"), Some(&Json::Bool(false)));
+                }
+                8 => assert!(ok, "{r}"),
+                _ => {
+                    assert!(!ok, "line {i} should be an error: {r}");
+                    assert!(r.get("error").and_then(|v| v.as_str()).is_some());
+                }
+            }
+        }
+        assert!(responses[1]
+            .get("error")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .contains("unknown cmd"));
+    }
+
+    #[test]
+    fn unknown_request_keys_are_rejected() {
+        // The protocol twin of the CLI's `--step 50` rejection: a
+        // misspelled key must error, not silently train defaults.
+        let svc = demo_service("keys");
+        let responses = run_session(
+            &svc,
+            &[
+                r#"{"cmd":"submit","model":"vit_demo_vanilla","step":5}"#,
+                r#"{"cmd":"status","job":1,"wait":true}"#,
+                r#"{"cmd":"submit","model":"vit_demo_vanilla","resume_from":123}"#,
+                r#"{"cmd":"events","job":1,"wait":1}"#,
+                r#"{"cmd":"stat","job":1}"#,
+                r#"{"cmd":"shutdown","graceful":true}"#,
+                r#"{"cmd":"shutdown"}"#,
+            ],
+        );
+        svc.shutdown();
+        let err = responses[0].get("error").and_then(|v| v.as_str()).unwrap();
+        assert!(err.contains("unknown key \"step\""), "{err}");
+        assert!(err.contains("steps"), "accepted set must be listed: {err}");
+        // "wait" belongs to events, not status.
+        assert_eq!(responses[1].get("ok"), Some(&Json::Bool(false)));
+        // Accepted keys with the WRONG TYPE error too — a mistyped
+        // resume_from must not silently train from scratch, and a
+        // non-bool wait must not silently degrade to a drain.
+        let err = responses[2].get("error").and_then(|v| v.as_str()).unwrap();
+        assert!(err.contains("\"resume_from\" must be a string"), "{err}");
+        let err = responses[3].get("error").and_then(|v| v.as_str()).unwrap();
+        assert!(err.contains("\"wait\" must be a boolean"), "{err}");
+        // A misspelled cmd gets the unknown-CMD error, not a misleading
+        // unknown-key complaint with an empty accepted set.
+        let err = responses[4].get("error").and_then(|v| v.as_str()).unwrap();
+        assert!(err.contains("unknown cmd"), "{err}");
+        // A REJECTED shutdown (unknown key) must not stop the session —
+        // the clean shutdown after it still got processed.
+        assert_eq!(responses[5].get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(responses.len(), 7, "{responses:?}");
+        assert_eq!(
+            responses[6].get("cmd").and_then(|v| v.as_str()),
+            Some("shutdown")
+        );
+        assert_eq!(responses[6].get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn status_polling_sees_queued_then_terminal() {
+        let svc = demo_service("poll");
+        // Submit without waiting; drain events until the job is done.
+        let responses = run_session(
+            &svc,
+            &[r#"{"cmd":"submit","model":"vit_demo_vanilla","steps":3,"samples":32}"#],
+        );
+        assert_eq!(responses[0].get("state").and_then(|v| v.as_str()), Some("queued"));
+        let id = JobId(1);
+        svc.wait(id).unwrap();
+        let responses = run_session(&svc, &[r#"{"cmd":"events","job":1}"#]);
+        let r = &responses[0];
+        assert_eq!(r.get("state").and_then(|v| v.as_str()), Some("done"));
+        let events = r.get("events").and_then(|v| v.as_arr()).unwrap();
+        // started + 3 steps + done, all buffered.
+        assert_eq!(events.len(), 5, "{r}");
+        svc.shutdown();
+    }
+}

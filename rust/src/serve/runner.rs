@@ -1,0 +1,221 @@
+//! The one job-execution path: every fine-tune in the system —
+//! `Session::finetune` (CLI `train`, examples, eval exhibits) and the
+//! `wasi-train serve` workers — runs a [`JobSpec`] through
+//! [`execute_job`], so queueing/cancellation/streaming are features of
+//! the service, not a second training loop.
+
+use std::sync::atomic::AtomicBool;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::memory::account;
+use crate::coordinator::metrics::StepRecord;
+use crate::coordinator::{Checkpoint, FinetuneReport, RunStatus, TrainConfig, Trainer};
+use crate::data::synth::VisionTask;
+use crate::data::Loader;
+use crate::util::threadpool::ThreadCountGuard;
+
+use super::job::JobSpec;
+use super::pool::PoolEntry;
+
+/// Progress callbacks out of [`execute_job`]; the service maps these to
+/// [`super::JobEvent`]s, the blocking session path ignores them.
+#[derive(Debug, Clone, Copy)]
+pub enum RunnerEvent {
+    /// Engine built; training is about to start.
+    Started { backend: &'static str },
+    /// One training step completed.
+    Step(StepRecord),
+}
+
+/// Everything a finished job yields: the public report plus the final
+/// flat parameter vector (kept by the service so inference can run
+/// against a finished job's personalized weights).
+pub struct JobOutcome {
+    pub report: FinetuneReport,
+    pub final_params: Vec<f32>,
+}
+
+/// Run one job to completion on the caller's thread.
+///
+/// Cancellation: `cancel` is polled between steps; a cancelled job
+/// returns an error containing `"cancelled"` (the service maps it to
+/// `JobState::Failed`).  The engine is exclusive to this call, so
+/// cancellation can never tear shared state.
+pub fn execute_job(
+    pool: &PoolEntry,
+    spec: &JobSpec,
+    observe: &mut dyn FnMut(RunnerEvent),
+    cancel: &AtomicBool,
+) -> Result<JobOutcome> {
+    let cfg = &spec.config;
+    // Honor cfg.threads for this run only; the guard restores the
+    // caller's process-global setting on every exit path.
+    let _threads = ThreadCountGuard::apply(cfg.threads);
+
+    let entry = pool.manifest.model(&cfg.model)?;
+    let mut task = VisionTask::preset(&cfg.dataset, cfg.seed)
+        .ok_or_else(|| anyhow!("unknown dataset preset {:?}", cfg.dataset))?;
+    if task.classes != entry.classes || task.dim != entry.input_dim {
+        // Artifacts are compiled for a fixed class count and image
+        // size; presets are re-instantiated to match (documented
+        // substitution: the head's class-count and the input
+        // resolution are artifact constants).
+        let side = entry.image_side().ok_or_else(|| {
+            anyhow!(
+                "model {} is not an image model (input_dim {})",
+                entry.name,
+                entry.input_dim
+            )
+        })?;
+        task = VisionTask::new(&cfg.dataset, entry.classes, side, 0.7, 8, cfg.seed);
+    }
+    let mut loader = Loader::from_task(&mut task, cfg.samples, cfg.seed);
+    let tcfg = TrainConfig {
+        steps: cfg.steps,
+        lr0: cfg.lr0,
+        log_every: cfg.log_every.unwrap_or((cfg.steps / 10).max(1)),
+        verbose: cfg.verbose,
+        engine: cfg.engine,
+    };
+    let mut trainer = Trainer::new(&pool.runtime, entry, tcfg)?;
+
+    let mut start_step = 0usize;
+    if let Some(path) = &spec.resume_from {
+        let ckpt = Checkpoint::load(path)?;
+        ckpt.restore_into(trainer.engine.as_mut())?;
+        start_step = ckpt.step as usize;
+        if start_step >= cfg.steps {
+            bail!(
+                "checkpoint {} is at step {start_step}, which is not before \
+                 the configured {} steps — nothing to resume",
+                path.display(),
+                cfg.steps
+            );
+        }
+        // Fast-forward the (seed-deterministic) loader past the batches
+        // the checkpointed run consumed, so the resumed trajectory is
+        // bit-identical to the uninterrupted one — PROVIDED the spec
+        // repeats the checkpointed recipe (dataset/samples/seed/lr0);
+        // the v1 checkpoint records only model+step, so that part of
+        // the contract is the caller's (JobSpec::resume_from docs).
+        let batch = trainer.engine.entry().batch;
+        for _ in 0..start_step {
+            let _ = loader.next_batch(batch);
+        }
+    }
+
+    observe(RunnerEvent::Started { backend: trainer.engine.backend() });
+    let status = trainer.run_observed(
+        &mut loader,
+        start_step,
+        &mut |r| observe(RunnerEvent::Step(*r)),
+        cancel,
+    )?;
+    if status == RunStatus::Cancelled {
+        bail!("cancelled at client request");
+    }
+    let val = trainer.validate(&pool.runtime, &loader)?;
+    if let Some(path) = &spec.checkpoint_to {
+        Checkpoint::from_engine(trainer.engine.as_ref(), cfg.steps as u64).save(path)?;
+    }
+    let report = FinetuneReport {
+        model: cfg.model.clone(),
+        dataset: cfg.dataset.clone(),
+        engine: trainer.engine.backend(),
+        final_loss: trainer.metrics.smoothed_loss(),
+        val_accuracy: val,
+        mean_step_seconds: trainer.metrics.mean_step_seconds(),
+        total_seconds: trainer.metrics.total_seconds(),
+        memory: account(entry),
+        loss_curve: trainer.metrics.loss_curve(50),
+    };
+    Ok(JobOutcome { report, final_params: trainer.engine.params().to_vec() })
+}
+
+/// A pool inference request (shared by the service's `infer` command
+/// and the CLI's `wasi-train infer`).
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub model: String,
+    pub engine: crate::engine::EngineKind,
+    /// Seed for the synthetic probe batch when no input is supplied.
+    pub seed: u64,
+    /// Flat input rows (batch × input_dim); `None` = generate one
+    /// synthetic labelled batch and report its accuracy.
+    pub x: Option<Vec<f32>>,
+}
+
+/// Inference result: predictions, plus accuracy when the input was the
+/// labelled synthetic probe batch.
+#[derive(Debug, Clone)]
+pub struct InferOutput {
+    pub backend: String,
+    pub preds: Vec<usize>,
+    pub batch: usize,
+    pub correct: Option<usize>,
+}
+
+/// Run pool inference with explicit params (`None` = the variant's
+/// initial/pretrained params).  Shared by the service and the CLI.
+pub fn run_infer(
+    pool: &PoolEntry,
+    req: &InferRequest,
+    params: Option<&[f32]>,
+) -> Result<InferOutput> {
+    let entry = pool.manifest.model(&req.model)?;
+    let initial;
+    let params: &[f32] = match params {
+        Some(p) => p,
+        None => {
+            initial = pool.initial_params(&req.model)?;
+            &initial
+        }
+    };
+    if params.len() != entry.params_len {
+        bail!(
+            "params length {} does not match model {} ({} expected) — \
+             inference against a job from a different variant?",
+            params.len(),
+            entry.name,
+            entry.params_len
+        );
+    }
+    let pooled = pool.shared_infer(&req.model, req.engine)?;
+    let engine = pooled.engine();
+    let (x, labels) = match &req.x {
+        Some(x) => {
+            if x.is_empty() || x.len() % entry.input_dim != 0 {
+                bail!(
+                    "input length {} is not a positive multiple of input_dim {}",
+                    x.len(),
+                    entry.input_dim
+                );
+            }
+            (x.clone(), None)
+        }
+        None => {
+            let side = entry.image_side().ok_or_else(|| {
+                anyhow!(
+                    "model {} is not an image model (input_dim {}); \
+                     supply explicit inputs",
+                    entry.name,
+                    entry.input_dim
+                )
+            })?;
+            let mut task = VisionTask::new("infer", entry.classes, side, 0.7, 8, req.seed);
+            let (x, _, labels) = task.batch_onehot(entry.batch);
+            (x, Some(labels))
+        }
+    };
+    let preds = engine.predict(params, &x)?;
+    let correct = labels
+        .as_ref()
+        .map(|l| preds.iter().zip(l).filter(|(p, q)| p == q).count());
+    Ok(InferOutput {
+        backend: engine.backend().to_string(),
+        batch: preds.len(),
+        preds,
+        correct,
+    })
+}

@@ -1,0 +1,628 @@
+//! The job service: a fixed pool of worker threads executing
+//! [`JobSpec`]s from a FIFO queue over a shared [`ModelPool`], with
+//! per-job state tracking, cancellation, and streamed events.
+//!
+//! Concurrency model (DESIGN.md §serve):
+//!
+//! * `submit` validates the spec (artifact dir loads, variant exists),
+//!   allocates a [`JobId`], creates the job's event channel, and
+//!   enqueues — it never blocks on training;
+//! * N worker threads pop jobs FIFO; each builds an exclusive train
+//!   engine through the pool and runs `serve::runner::execute_job`;
+//! * inference requests run on the *caller's* thread against the
+//!   pool's shared infer engines, so they interleave freely with
+//!   running jobs;
+//! * determinism: jobs touch no shared mutable state besides the
+//!   runtime's executable cache (append-only) and the kernel-layer
+//!   thread count (bit-deterministic by construction), so concurrent
+//!   jobs produce trajectories bit-identical to sequential runs.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::FinetuneReport;
+
+use super::job::{JobEvent, JobId, JobSpec, JobState};
+use super::pool::{ModelPool, PoolEntry};
+use super::runner::{self, InferOutput, InferRequest, RunnerEvent};
+
+/// Service construction parameters.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Default artifact directory (jobs/requests may name another).
+    pub artifacts: PathBuf,
+    /// Fixed worker-thread count (clamped to ≥ 1).
+    pub workers: usize,
+}
+
+impl ServiceConfig {
+    pub fn new(artifacts: impl Into<PathBuf>) -> ServiceConfig {
+        ServiceConfig { artifacts: artifacts.into(), workers: 2 }
+    }
+}
+
+struct JobEntry {
+    spec: JobSpec,
+    state: JobState,
+    cancel: Arc<AtomicBool>,
+    /// Sender side of the event stream; dropped (set to `None`) at the
+    /// terminal transition so receivers observe disconnect.
+    tx: Option<Sender<JobEvent>>,
+    /// Receiver side, parked here until a client claims the stream.
+    rx: Option<Receiver<JobEvent>>,
+    /// Final flat params of a `Done` job (personalized inference).
+    final_params: Option<Arc<Vec<f32>>>,
+}
+
+struct Shared {
+    pool: ModelPool,
+    default_artifacts: PathBuf,
+    queue: Mutex<VecDeque<JobId>>,
+    queue_cond: Condvar,
+    jobs: Mutex<BTreeMap<u64, JobEntry>>,
+    /// Notified on every job state transition (`wait` blocks on this).
+    jobs_cond: Condvar,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    fn send_event(tx: &Option<Sender<JobEvent>>, ev: JobEvent) {
+        if let Some(tx) = tx {
+            // A receiver may have been dropped without draining; that
+            // must never fail the job itself.
+            let _ = tx.send(ev);
+        }
+    }
+
+    /// Execute one queued job on the current (worker) thread.
+    fn run_one(&self, id: JobId) {
+        let (spec, cancel, tx) = {
+            let mut jobs = self.jobs.lock().unwrap();
+            let Some(j) = jobs.get_mut(&id.0) else { return };
+            if !matches!(j.state, JobState::Queued) {
+                return; // cancelled while queued
+            }
+            j.state = JobState::Running { step: 0, loss: f32::NAN };
+            (j.spec.clone(), j.cancel.clone(), j.tx.clone())
+        };
+        self.jobs_cond.notify_all();
+
+        let outcome = (|| -> Result<runner::JobOutcome> {
+            let dir = spec
+                .artifacts
+                .clone()
+                .unwrap_or_else(|| self.default_artifacts.clone());
+            let entry = self.pool.open(dir)?;
+            runner::execute_job(
+                &entry,
+                &spec,
+                &mut |ev| match ev {
+                    RunnerEvent::Started { backend } => {
+                        Self::send_event(
+                            &tx,
+                            JobEvent::Started {
+                                job: id,
+                                model: spec.config.model.clone(),
+                                backend,
+                            },
+                        );
+                    }
+                    RunnerEvent::Step(record) => {
+                        {
+                            let mut jobs = self.jobs.lock().unwrap();
+                            if let Some(j) = jobs.get_mut(&id.0) {
+                                j.state = JobState::Running {
+                                    step: record.step,
+                                    loss: record.loss,
+                                };
+                            }
+                        }
+                        self.jobs_cond.notify_all();
+                        Self::send_event(&tx, JobEvent::Step { job: id, record });
+                    }
+                },
+                &cancel,
+            )
+        })();
+
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(j) = jobs.get_mut(&id.0) {
+            // Terminal states never change again — belt and braces
+            // against any path that could have failed the job while it
+            // ran (none should exist: cancel only fails Queued jobs).
+            if !j.state.is_terminal() {
+                match outcome {
+                    Ok(out) => {
+                        Self::send_event(
+                            &tx,
+                            JobEvent::Done { job: id, report: out.report.clone() },
+                        );
+                        j.final_params = Some(Arc::new(out.final_params));
+                        j.state = JobState::Done(out.report);
+                    }
+                    Err(e) => {
+                        let error = format!("{e:#}");
+                        Self::send_event(&tx, JobEvent::Failed { job: id, error: error.clone() });
+                        j.state = JobState::Failed(error);
+                    }
+                }
+            }
+            j.tx = None; // disconnect the stream (with the local clone below)
+        }
+        drop(jobs);
+        drop(tx);
+        self.jobs_cond.notify_all();
+    }
+
+    fn worker_loop(self: Arc<Self>) {
+        loop {
+            let id = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(id) = q.pop_front() {
+                        break id;
+                    }
+                    if self.shutdown.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    q = self.queue_cond.wait(q).unwrap();
+                }
+            };
+            self.run_one(id);
+        }
+    }
+
+    /// Fail a job that has not started running (shutdown drain / queued
+    /// cancel).  Strictly `Queued` → `Failed`: a job a worker already
+    /// picked up stays owned by that worker (its cancel flag, if set,
+    /// stops it at the next step), so terminal states are written by
+    /// exactly one party and never change again.  Caller must hold no
+    /// job/queue locks.
+    fn fail_if_queued(&self, id: JobId, error: &str) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(j) = jobs.get_mut(&id.0) {
+            if !matches!(j.state, JobState::Queued) {
+                return;
+            }
+            Self::send_event(&j.tx, JobEvent::Failed { job: id, error: error.to_string() });
+            j.state = JobState::Failed(error.to_string());
+            j.tx = None;
+        }
+        drop(jobs);
+        self.jobs_cond.notify_all();
+    }
+}
+
+/// A running multi-session job service.  Cheap handles are not
+/// clonable on purpose: ownership marks who is responsible for
+/// [`Service::shutdown`] (also invoked by `Drop`).
+pub struct Service {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Service {
+    /// Load the default artifact directory and spawn the worker pool.
+    pub fn start(cfg: ServiceConfig) -> Result<Service> {
+        let shared = Arc::new(Shared {
+            pool: ModelPool::new(),
+            default_artifacts: cfg.artifacts.clone(),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cond: Condvar::new(),
+            jobs: Mutex::new(BTreeMap::new()),
+            jobs_cond: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+        });
+        // Eager-load the default dir so a bad --artifacts fails at
+        // startup, not at first submit.
+        shared.pool.open(&cfg.artifacts)?;
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("wasi-serve-worker-{i}"))
+                    .spawn(move || shared.worker_loop())
+                    .expect("spawn service worker")
+            })
+            .collect();
+        Ok(Service { shared, workers: Mutex::new(workers) })
+    }
+
+    /// The service's model pool (shared runtime/manifest handles).
+    pub fn pool(&self) -> &ModelPool {
+        &self.shared.pool
+    }
+
+    /// The pool entry for the service's default artifact directory.
+    pub fn default_entry(&self) -> Result<Arc<PoolEntry>> {
+        self.shared.pool.open(&self.shared.default_artifacts)
+    }
+
+    /// Validate and enqueue a job; returns immediately with its id.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        // Validate up front so the client gets a synchronous error for
+        // a bad directory/variant instead of a failed job later.
+        let dir = spec
+            .artifacts
+            .clone()
+            .unwrap_or_else(|| self.shared.default_artifacts.clone());
+        let entry = self.shared.pool.open(dir)?;
+        entry.manifest.model(&spec.config.model)?;
+        if spec.config.steps == 0 {
+            return Err(anyhow!("job must run at least one step"));
+        }
+
+        let id = JobId(self.shared.next_id.fetch_add(1, Ordering::Relaxed));
+        let (tx, rx) = channel();
+        {
+            let mut jobs = self.shared.jobs.lock().unwrap();
+            jobs.insert(
+                id.0,
+                JobEntry {
+                    spec,
+                    state: JobState::Queued,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                    tx: Some(tx),
+                    rx: Some(rx),
+                    final_params: None,
+                },
+            );
+        }
+        {
+            // The shutdown flag is checked under the queue lock:
+            // `shutdown` sets it before draining under the same lock,
+            // so a job can never slip in after the drain and sit
+            // Queued forever with no worker left to run it.
+            let mut q = self.shared.queue.lock().unwrap();
+            if self.shared.shutdown.load(Ordering::Relaxed) {
+                drop(q);
+                self.shared.jobs.lock().unwrap().remove(&id.0);
+                return Err(anyhow!("service is shut down"));
+            }
+            q.push_back(id);
+        }
+        self.shared.queue_cond.notify_one();
+        Ok(id)
+    }
+
+    /// Current state of a job (`None` = unknown id).
+    pub fn status(&self, id: JobId) -> Option<JobState> {
+        self.shared.jobs.lock().unwrap().get(&id.0).map(|j| j.state.clone())
+    }
+
+    /// All job ids with their states, submission-ordered.
+    pub fn jobs(&self) -> Vec<(JobId, JobState)> {
+        self.shared
+            .jobs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, j)| (JobId(*id), j.state.clone()))
+            .collect()
+    }
+
+    /// Claim a job's event stream (single consumer; `None` if the id is
+    /// unknown or the stream was already claimed).  The stream yields
+    /// `Started`/`Step` events and ends with `Done`/`Failed`, after
+    /// which the channel disconnects.
+    pub fn take_events(&self, id: JobId) -> Option<Receiver<JobEvent>> {
+        self.shared.jobs.lock().unwrap().get_mut(&id.0).and_then(|j| j.rx.take())
+    }
+
+    /// Drain the events buffered since the last call without claiming
+    /// the stream (`None` = unknown id or stream claimed elsewhere).
+    pub fn drain_events(&self, id: JobId) -> Option<Vec<JobEvent>> {
+        let jobs = self.shared.jobs.lock().unwrap();
+        let rx = jobs.get(&id.0)?.rx.as_ref()?;
+        let mut out = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            out.push(ev);
+        }
+        Some(out)
+    }
+
+    /// Block until the job reaches a terminal state; `Done` yields the
+    /// report, `Failed` the error.
+    pub fn wait(&self, id: JobId) -> Result<FinetuneReport> {
+        let mut jobs = self.shared.jobs.lock().unwrap();
+        loop {
+            match jobs.get(&id.0) {
+                None => return Err(anyhow!("unknown job {id}")),
+                Some(j) => match &j.state {
+                    JobState::Done(report) => return Ok(report.clone()),
+                    JobState::Failed(e) => return Err(anyhow!("job {id} failed: {e}")),
+                    _ => {}
+                },
+            }
+            jobs = self.shared.jobs_cond.wait(jobs).unwrap();
+        }
+    }
+
+    /// Request cancellation.  A still-queued job fails immediately; a
+    /// running job observes the flag at its next step boundary and
+    /// fails from its own worker.  Returns false for unknown ids and
+    /// jobs already terminal.
+    pub fn cancel(&self, id: JobId) -> bool {
+        {
+            let jobs = self.shared.jobs.lock().unwrap();
+            match jobs.get(&id.0) {
+                None => return false,
+                Some(j) if j.state.is_terminal() => return false,
+                Some(j) => j.cancel.store(true, Ordering::Relaxed),
+            }
+        }
+        // Dequeue FIRST so no worker can pick the job up afterwards,
+        // then fail it only if it is still Queued — a worker that
+        // already popped it owns its state transitions (it either sees
+        // the Failed write below while still Queued and skips, or runs
+        // until the cancel flag stops it).  Exactly one party ever
+        // writes the terminal state.
+        self.shared.queue.lock().unwrap().retain(|q| *q != id);
+        self.shared.fail_if_queued(id, "cancelled at client request");
+        true
+    }
+
+    /// Drop a terminal job's record — report, buffered events, and the
+    /// retained final params.  Long-lived services call this (protocol
+    /// `forget`) once a job's results are consumed; without it every
+    /// finished job pins one model-sized param vector forever.  Returns
+    /// false for unknown ids and jobs that are still queued/running.
+    pub fn forget(&self, id: JobId) -> bool {
+        let mut jobs = self.shared.jobs.lock().unwrap();
+        match jobs.get(&id.0) {
+            Some(j) if j.state.is_terminal() => {
+                jobs.remove(&id.0);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Final flat params of a `Done` job (personalized inference).
+    pub fn job_params(&self, id: JobId) -> Option<Arc<Vec<f32>>> {
+        self.shared.jobs.lock().unwrap().get(&id.0).and_then(|j| j.final_params.clone())
+    }
+
+    /// Final params of a `Done` job, checked against the variant AND
+    /// artifact directory the caller wants to serve — a params-length
+    /// coincidence (same-named variant from another directory, or two
+    /// eps variants with equal shapes) must never silently serve the
+    /// wrong weights.
+    fn job_params_for_model(
+        &self,
+        id: JobId,
+        model: &str,
+        dir: &std::path::Path,
+    ) -> Result<Arc<Vec<f32>>> {
+        let jobs = self.shared.jobs.lock().unwrap();
+        let j = jobs
+            .get(&id.0)
+            .ok_or_else(|| anyhow!("unknown job {id}"))?;
+        if j.spec.config.model != model {
+            return Err(anyhow!(
+                "job {id} trained variant {:?}, not {model:?} — personalized \
+                 params are variant-specific",
+                j.spec.config.model
+            ));
+        }
+        let job_dir = j
+            .spec
+            .artifacts
+            .clone()
+            .unwrap_or_else(|| self.shared.default_artifacts.clone());
+        if job_dir != dir {
+            return Err(anyhow!(
+                "job {id} trained against artifacts {}, not {} — personalized \
+                 params are artifact-set-specific",
+                job_dir.display(),
+                dir.display()
+            ));
+        }
+        j.final_params.clone().ok_or_else(|| {
+            anyhow!("job {id} has no final params yet (state: {})", j.state.label())
+        })
+    }
+
+    /// Pool inference on the caller's thread; interleaves with running
+    /// jobs.  `artifacts`/`job` select whose params to serve: a `Done`
+    /// job's personalized weights, or the variant's pretrained params.
+    pub fn infer(
+        &self,
+        artifacts: Option<&std::path::Path>,
+        req: &InferRequest,
+        job: Option<JobId>,
+    ) -> Result<InferOutput> {
+        let dir = artifacts
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| self.shared.default_artifacts.clone());
+        let entry = self.shared.pool.open(&dir)?;
+        let job_params = match job {
+            None => None,
+            Some(id) => Some(self.job_params_for_model(id, &req.model, &dir)?),
+        };
+        runner::run_infer(&entry, req, job_params.as_ref().map(|p| p.as_slice()))
+    }
+
+    /// Stop accepting work, fail still-queued jobs, cancel running ones
+    /// at their next step boundary, and join the workers — shutdown is
+    /// prompt even mid-way through a long job.  Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        let drained: Vec<JobId> = {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.drain(..).collect()
+        };
+        for id in drained {
+            self.shared.fail_if_queued(id, "service shut down before the job ran");
+        }
+        // Running jobs stop at their next step boundary (their workers
+        // write the terminal Failed state), so the join below is
+        // bounded by one training step, not a whole job.
+        for j in self.shared.jobs.lock().unwrap().values() {
+            if !j.state.is_terminal() {
+                j.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+        self.shared.queue_cond.notify_all();
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FinetuneConfig;
+    use crate::engine::demo::{write_demo_artifacts, DemoConfig};
+    use crate::engine::EngineKind;
+
+    fn demo_service(tag: &str, workers: usize) -> Service {
+        let dir = std::env::temp_dir().join(format!("wasi_service_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+        Service::start(ServiceConfig { artifacts: dir, workers }).unwrap()
+    }
+
+    fn quick_cfg(model: &str, steps: usize) -> FinetuneConfig {
+        FinetuneConfig::builder()
+            .model(model)
+            .samples(32)
+            .steps(steps)
+            .lr0(0.1)
+            .engine(EngineKind::Native)
+            .build()
+    }
+
+    #[test]
+    fn submit_wait_done_with_events() {
+        let svc = demo_service("basic", 1);
+        let id = svc.submit(JobSpec::new(quick_cfg("vit_demo_wasi_eps80", 5))).unwrap();
+        let rx = svc.take_events(id).expect("fresh job exposes its stream");
+        assert!(svc.take_events(id).is_none(), "stream is single-consumer");
+        let report = svc.wait(id).unwrap();
+        assert_eq!(report.engine, "native");
+        let events: Vec<JobEvent> = rx.iter().collect();
+        assert!(matches!(events.first(), Some(JobEvent::Started { .. })), "{events:?}");
+        let steps = events.iter().filter(|e| matches!(e, JobEvent::Step { .. })).count();
+        assert_eq!(steps, 5);
+        assert!(matches!(events.last(), Some(JobEvent::Done { .. })));
+        assert!(matches!(svc.status(id), Some(JobState::Done(_))));
+        assert!(svc.job_params(id).is_some());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_validates_model_synchronously() {
+        let svc = demo_service("validate", 1);
+        let err = svc.submit(JobSpec::new(quick_cfg("no_such_model", 3))).unwrap_err();
+        assert!(format!("{err:#}").contains("no_such_model"), "{err:#}");
+        let err = svc.submit(JobSpec::new(quick_cfg("vit_demo_vanilla", 0))).unwrap_err();
+        assert!(format!("{err:#}").contains("at least one step"), "{err:#}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cancel_queued_job_fails_fast() {
+        // One worker busy with a long job -> the second job sits queued
+        // and must fail immediately on cancel.
+        let svc = demo_service("cancel", 1);
+        // Long enough that it is still running when cancelled below
+        // (cancellation is polled at step boundaries, so the cancel
+        // itself resolves fast).
+        let long = svc.submit(JobSpec::new(quick_cfg("vit_demo_vanilla", 5000))).unwrap();
+        let queued = svc.submit(JobSpec::new(quick_cfg("vit_demo_wasi_eps80", 50))).unwrap();
+        assert!(svc.cancel(queued));
+        match svc.wait(queued) {
+            Err(e) => assert!(format!("{e:#}").contains("cancelled"), "{e:#}"),
+            Ok(_) => panic!("cancelled queued job must not complete"),
+        }
+        // Cancel the running job too; it stops at a step boundary.
+        assert!(svc.cancel(long));
+        assert!(svc.wait(long).is_err());
+        assert!(!svc.cancel(long), "terminal jobs report not-cancellable");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn infer_interleaves_and_serves_job_params() {
+        let svc = demo_service("infer", 2);
+        let req = InferRequest {
+            model: "vit_demo_wasi_eps80".into(),
+            engine: EngineKind::Auto,
+            seed: 233,
+            x: None,
+        };
+        // Pretrained params while a job is running.
+        let id = svc.submit(JobSpec::new(quick_cfg("vit_demo_wasi_eps80", 30))).unwrap();
+        let out = svc.infer(None, &req, None).unwrap();
+        assert_eq!(out.backend, "native");
+        assert!(out.correct.is_some());
+        assert_eq!(out.batch, out.preds.len());
+        // Unknown-job params error before the job is done... (id+1 never exists)
+        assert!(svc.infer(None, &req, Some(JobId(id.0 + 1000))).is_err());
+        svc.wait(id).unwrap();
+        // ...and resolve after it finishes.
+        let personalized = svc.infer(None, &req, Some(id)).unwrap();
+        assert_eq!(personalized.batch, out.batch);
+        // A job's personalized params are variant-specific: asking a
+        // DIFFERENT model to serve them must error even if the flat
+        // lengths happened to coincide.
+        let cross = InferRequest { model: "vit_demo_vanilla".into(), ..req.clone() };
+        let err = svc.infer(None, &cross, Some(id)).unwrap_err();
+        assert!(format!("{err:#}").contains("variant"), "{err:#}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn forget_releases_terminal_jobs_only() {
+        let svc = demo_service("forget", 1);
+        // One worker busy on a long job keeps the second deterministically
+        // queued: a non-terminal job must not be forgettable.
+        let long = svc.submit(JobSpec::new(quick_cfg("vit_demo_vanilla", 5000))).unwrap();
+        let queued = svc.submit(JobSpec::new(quick_cfg("vit_demo_wasi_eps80", 3))).unwrap();
+        assert!(!svc.forget(queued), "queued jobs are not forgettable");
+        assert!(svc.cancel(long));
+        assert!(svc.wait(long).is_err());
+        let report = svc.wait(queued);
+        assert!(report.is_ok(), "{report:?}");
+        assert!(svc.forget(queued), "done jobs are forgettable");
+        assert!(svc.status(queued).is_none(), "forgotten job must vanish");
+        assert!(svc.job_params(queued).is_none());
+        assert!(!svc.forget(queued), "double forget reports false");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fails_queued_jobs_and_is_idempotent() {
+        let svc = demo_service("shutdown", 1);
+        // Two jobs, one worker: at most the first is running when
+        // shutdown drains the queue immediately after submit, so the
+        // second must fail without running (if the worker hadn't even
+        // popped the first yet, both drain — also fine).
+        let _first = svc.submit(JobSpec::new(quick_cfg("vit_demo_vanilla", 40))).unwrap();
+        let queued = svc.submit(JobSpec::new(quick_cfg("vit_demo_wasi_eps80", 40))).unwrap();
+        svc.shutdown();
+        svc.shutdown();
+        match svc.status(queued) {
+            Some(JobState::Failed(e)) => assert!(e.contains("shut down"), "{e}"),
+            other => panic!("queued job must fail on shutdown, got {other:?}"),
+        }
+        assert!(svc.submit(JobSpec::new(quick_cfg("vit_demo_vanilla", 3))).is_err());
+    }
+}

@@ -83,6 +83,42 @@ impl Args {
         self.get(name)
             .ok_or_else(|| anyhow!("missing required option --{name}"))
     }
+
+    /// Reject any `--option`/`--flag` not in the subcommand's accepted
+    /// set, so a typo (`--step 50`) errors instead of silently falling
+    /// back to a default.
+    ///
+    /// The two lists are checked as a union on both sides: the parser
+    /// classifies `--name` as an option or a flag by whether a value
+    /// token follows, so an accepted flag written with a value (or an
+    /// accepted option written trailing) must not be rejected here —
+    /// the per-subcommand handler still reads it through the accessor
+    /// that matches its kind.
+    pub fn reject_unknown(&self, subcommand: &str, options: &[&str], flags: &[&str]) -> Result<()> {
+        let known = |name: &str| options.contains(&name) || flags.contains(&name);
+        let unknown = self
+            .options
+            .keys()
+            .map(|k| k.as_str())
+            .chain(self.flags.iter().map(|f| f.as_str()))
+            .find(|name| !known(name));
+        let Some(name) = unknown else { return Ok(()) };
+        let mut accepted: Vec<&str> = options.iter().chain(flags).copied().collect();
+        accepted.sort_unstable();
+        let hint = accepted
+            .iter()
+            .find(|a| a.starts_with(name) || name.starts_with(**a))
+            .map(|a| format!(" (did you mean --{a}?)"))
+            .unwrap_or_default();
+        Err(anyhow!(
+            "unknown option --{name} for `{subcommand}`{hint}; accepted: {}",
+            accepted
+                .iter()
+                .map(|a| format!("--{a}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -121,5 +157,61 @@ mod tests {
     fn bad_number_errors() {
         let a = parse("x --steps nope");
         assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn key_value_vs_equals_vs_trailing_parse_identically_for_lookup() {
+        // `--key value`, `--key=value`, and a trailing `--flag` are the
+        // three parse shapes; pin where each lands.
+        let spaced = parse("train --steps 50");
+        let equals = parse("train --steps=50");
+        let trailing = parse("train --steps");
+        assert_eq!(spaced.get("steps"), Some("50"));
+        assert_eq!(equals.get("steps"), Some("50"));
+        assert_eq!(spaced.options, equals.options);
+        // A trailing `--steps` has no value token, so it parses as a
+        // flag — get() misses, flag() hits.
+        assert_eq!(trailing.get("steps"), None);
+        assert!(trailing.flag("steps"));
+        // `--key=value` never swallows the next token.
+        let mixed = parse("train --out=/tmp/x extra");
+        assert_eq!(mixed.get("out"), Some("/tmp/x"));
+        assert_eq!(mixed.positional, vec!["extra"]);
+        // A flag followed by another option stays a flag.
+        let flagged = parse("train --quick --steps 9");
+        assert!(flagged.flag("quick"));
+        assert_eq!(flagged.usize_or("steps", 0).unwrap(), 9);
+    }
+
+    #[test]
+    fn reject_unknown_accepts_known_and_rejects_typos() {
+        let a = parse("train --steps 50 --silent");
+        assert!(a.reject_unknown("train", &["steps"], &["silent"]).is_ok());
+
+        // The motivating bug: `--step 50` must error, not silently use
+        // the default step count — and suggest the close match.
+        let typo = parse("train --step 50");
+        let err = typo.reject_unknown("train", &["steps", "model"], &["silent"]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown option --step"), "{msg}");
+        assert!(msg.contains("did you mean --steps?"), "{msg}");
+        assert!(msg.contains("--model"), "accepted set must be listed: {msg}");
+
+        // Unknown flags (no value) are rejected too.
+        let flag = parse("train --frobnicate");
+        assert!(flag.reject_unknown("train", &["steps"], &["silent"]).is_err());
+    }
+
+    #[test]
+    fn reject_unknown_tolerates_kind_mismatch() {
+        // A declared flag written with a value parses as an option; a
+        // declared option written trailing parses as a flag.  Both must
+        // pass the known-name check (the accessor sorts it out).
+        let a = parse("train --silent extra");
+        assert_eq!(a.get("silent"), Some("extra"));
+        assert!(a.reject_unknown("train", &["steps"], &["silent"]).is_ok());
+        let b = parse("train --steps");
+        assert!(b.flag("steps"));
+        assert!(b.reject_unknown("train", &["steps"], &["silent"]).is_ok());
     }
 }

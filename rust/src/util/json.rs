@@ -165,6 +165,18 @@ pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// Number that degrades to `null` when not finite — `Json::Num`
+/// serializes NaN/inf as-is, which is not valid JSON, so any metric
+/// that can legitimately be NaN (a loss before the first step, an
+/// accuracy over an empty split) goes through this instead.
+pub fn finite_num(n: f64) -> Json {
+    if n.is_finite() {
+        Json::Num(n)
+    } else {
+        Json::Null
+    }
+}
+
 pub fn str(s: impl Into<String>) -> Json {
     Json::Str(s.into())
 }
@@ -392,5 +404,14 @@ mod tests {
     fn deterministic_output() {
         let v = obj(vec![("z", num(1.0)), ("a", num(2.0))]);
         assert_eq!(v.to_string(), r#"{"a":2,"z":1}"#);
+    }
+
+    #[test]
+    fn finite_num_degrades_to_null() {
+        assert_eq!(finite_num(1.5).to_string(), "1.5");
+        assert_eq!(finite_num(f64::NAN).to_string(), "null");
+        assert_eq!(finite_num(f64::INFINITY).to_string(), "null");
+        // The output stays parseable either way.
+        assert!(Json::parse(&finite_num(f64::NAN).to_string()).is_ok());
     }
 }

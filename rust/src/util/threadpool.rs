@@ -52,6 +52,37 @@ pub fn thread_override() -> usize {
     THREAD_OVERRIDE.load(Ordering::Relaxed)
 }
 
+/// Scoped thread-count override: applies `FinetuneConfig::threads` (or
+/// any explicit count) on construction and restores the caller's raw
+/// override on drop, so one session's `threads` setting never leaks
+/// into subsequent sessions in the same process.  `apply(None)` is a
+/// no-op guard (records and restores the current setting).
+///
+/// The override is process-global, so overlapping guards on different
+/// threads interleave arbitrarily; kernels are bit-deterministic across
+/// thread counts, so this only ever perturbs wall-clock (the job
+/// service documents that concurrent jobs should leave `threads` unset).
+#[must_use = "the guard restores the prior thread count when dropped"]
+pub struct ThreadCountGuard {
+    prior: usize,
+}
+
+impl ThreadCountGuard {
+    pub fn apply(threads: Option<usize>) -> ThreadCountGuard {
+        let prior = thread_override();
+        if let Some(n) = threads {
+            set_num_threads(n);
+        }
+        ThreadCountGuard { prior }
+    }
+}
+
+impl Drop for ThreadCountGuard {
+    fn drop(&mut self) {
+        set_num_threads(self.prior);
+    }
+}
+
 /// Number of worker threads to use (the `set_num_threads` override, else
 /// env `WASI_THREADS`, else the hardware parallelism).
 pub fn num_threads() -> usize {
@@ -134,6 +165,23 @@ mod tests {
         assert_eq!(num_threads(), 3);
         set_num_threads(0);
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn guard_restores_prior_override() {
+        let _guard = TEST_OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_num_threads(7);
+        {
+            let _g = ThreadCountGuard::apply(Some(2));
+            assert_eq!(num_threads(), 2);
+        }
+        assert_eq!(thread_override(), 7, "guard must restore the caller's setting");
+        {
+            let _g = ThreadCountGuard::apply(None);
+            assert_eq!(thread_override(), 7, "None leaves the setting alone");
+        }
+        assert_eq!(thread_override(), 7);
+        set_num_threads(0);
     }
 
     #[test]

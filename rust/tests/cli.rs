@@ -37,10 +37,10 @@ fn no_subcommand_prints_usage() {
     assert!(out.status.success(), "stderr: {}", stderr(&out));
     let s = stdout(&out);
     assert!(s.contains("usage: wasi-train"), "{s}");
-    for sub in ["train", "infer", "plan-ranks", "eval", "cost-model", "calibrate", "list", "demo"] {
+    for sub in ["train", "serve", "infer", "plan-ranks", "eval", "cost-model", "calibrate", "list", "demo"] {
         assert!(s.contains(sub), "usage must mention {sub}: {s}");
     }
-    for opt in ["--engine", "--lr", "--save-curve", "--silent", "infer:"] {
+    for opt in ["--engine", "--lr", "--save-curve", "--silent", "infer:", "--workers", "submit"] {
         assert!(s.contains(opt), "usage must document {opt}: {s}");
     }
 }
@@ -104,6 +104,35 @@ fn train_rejects_unknown_engine() {
     let out = run(&["train", "--engine", "cuda", "--artifacts", &missing_artifacts_flagval()]);
     assert!(!out.status.success());
     assert!(stderr(&out).contains("unknown engine"), "{}", stderr(&out));
+}
+
+/// Satellite contract: a typo'd option must error with the accepted
+/// set (before this PR `--step 50` silently trained the default 200
+/// steps).
+#[test]
+fn subcommands_reject_unknown_options() {
+    let out = run(&["train", "--step", "50", "--artifacts", &missing_artifacts_flagval()]);
+    assert!(!out.status.success(), "--step must be rejected");
+    let err = stderr(&out);
+    assert!(err.contains("unknown option --step"), "{err}");
+    assert!(err.contains("--steps"), "must list/suggest the real option: {err}");
+
+    let out = run(&["bench", "--workers", "2"]);
+    assert!(!out.status.success(), "bench takes no --workers");
+    assert!(stderr(&out).contains("unknown option --workers"), "{}", stderr(&out));
+
+    let out = run(&["eval", "--frobnicate", "--artifacts", &missing_artifacts_flagval()]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown option --frobnicate"), "{}", stderr(&out));
+
+    // The usage screen's common options are accepted everywhere —
+    // `demo --threads N` must keep working (threads applies
+    // process-wide before dispatch).
+    let dir = std::env::temp_dir().join("wasi_cli_demo_threads");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_string_lossy().into_owned();
+    let out = run(&["demo", "--out", &dirs, "--threads", "2"]);
+    assert!(out.status.success(), "common --threads rejected: {}", stderr(&out));
 }
 
 /// The PJRT-free acceptance path: `demo` generates artifacts in pure
@@ -184,6 +213,98 @@ fn bench_quick_emits_wellformed_perf_record() {
     // The HLO engine is recorded (available or not) rather than omitted.
     assert_eq!(engines[1].get("engine").and_then(|e| e.as_str()), Some("hlo"));
     assert!(v.get("nodes").and_then(|n| n.as_arr()).is_some());
+    // The serve scheduler section: at least the 1-worker arm, with
+    // throughput and latency percentiles recorded.
+    let serve = v.get("serve").and_then(|s| s.as_arr()).expect("serve section");
+    assert!(!serve.is_empty(), "{json}");
+    for arm in serve {
+        assert!(arm.get("workers").and_then(|x| x.as_usize()).unwrap() >= 1);
+        assert!(arm.get("jobs_per_sec").and_then(|x| x.as_f64()).unwrap() > 0.0);
+        let p50 = arm.get("p50_submit_to_done_s").and_then(|x| x.as_f64()).unwrap();
+        let p95 = arm.get("p95_submit_to_done_s").and_then(|x| x.as_f64()).unwrap();
+        assert!(p50 > 0.0 && p95 >= p50, "{json}");
+    }
+}
+
+/// The acceptance-path smoke: `demo` then a scripted JSON-lines session
+/// piped into `wasi-train serve` — a train-job submission interleaved
+/// with an infer request must come back with a `Done` report.
+#[test]
+fn serve_accepts_piped_jsonlines_session() {
+    use std::io::Write as _;
+
+    let dir = std::env::temp_dir().join("wasi_cli_serve_smoke");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_string_lossy().into_owned();
+    assert!(run(&["demo", "--out", &dirs]).status.success());
+
+    let script = [
+        r#"{"cmd":"submit","model":"vit_demo_wasi_eps80","steps":4,"samples":32,"engine":"native"}"#,
+        r#"{"cmd":"infer","model":"vit_demo_vanilla","seed":7}"#,
+        r#"{"cmd":"events","job":1,"wait":true}"#,
+        r#"{"cmd":"status","job":1}"#,
+        r#"{"cmd":"shutdown"}"#,
+    ]
+    .join("\n");
+    let mut child = Command::new(env!("CARGO_BIN_EXE_wasi-train"))
+        .args(["serve", "--artifacts", &dirs, "--workers", "1"])
+        .current_dir(std::env::temp_dir())
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn wasi-train serve");
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(script.as_bytes())
+        .expect("pipe the scripted session");
+    let out = child.wait_with_output().expect("serve must exit after shutdown");
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("\"cmd\":\"submit\"") && s.contains("\"job\":1"), "{s}");
+    assert!(s.contains("\"event\":\"started\""), "{s}");
+    assert!(s.contains("\"event\":\"done\""), "{s}");
+    assert!(s.contains("\"state\":\"done\""), "{s}");
+    assert!(s.contains("\"val_accuracy\""), "{s}");
+    // The interleaved infer answered with predictions.
+    assert!(s.contains("\"cmd\":\"infer\"") && s.contains("\"preds\""), "{s}");
+    assert!(s.contains("\"cmd\":\"shutdown\""), "{s}");
+    // Every stdout line is a JSON object.
+    for line in s.lines() {
+        assert!(
+            line.starts_with('{') && line.ends_with('}'),
+            "non-JSON response line: {line}"
+        );
+    }
+}
+
+/// `train --save-checkpoint` then `train --resume` through the CLI: the
+/// resumed run continues to the same step count and reports a result.
+#[test]
+fn train_checkpoint_resume_cli_roundtrip() {
+    let dir = std::env::temp_dir().join("wasi_cli_ckpt_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_string_lossy().into_owned();
+    assert!(run(&["demo", "--out", &dirs]).status.success());
+    let ckpt = dir.join("half.ckpt").to_string_lossy().into_owned();
+
+    let out = run(&[
+        "train", "--artifacts", &dirs, "--engine", "native",
+        "--model", "vit_demo_wasi_eps80", "--steps", "6", "--samples", "32",
+        "--silent", "--save-checkpoint", &ckpt,
+    ]);
+    assert!(out.status.success(), "train+checkpoint failed: {}", stderr(&out));
+    assert!(std::path::Path::new(&ckpt).exists(), "checkpoint file missing");
+
+    let out = run(&[
+        "train", "--artifacts", &dirs, "--engine", "native",
+        "--model", "vit_demo_wasi_eps80", "--steps", "12", "--samples", "32",
+        "--silent", "--resume", &ckpt,
+    ]);
+    assert!(out.status.success(), "resume failed: {}", stderr(&out));
+    assert!(stdout(&out).contains("val accuracy"), "{}", stdout(&out));
 }
 
 #[test]

