@@ -39,6 +39,7 @@ fn main() -> Result<()> {
     let probe = InferRequest {
         model: "vit_demo_vanilla".into(),
         engine: EngineKind::Auto,
+        precision: wasi_train::precision::Precision::F32,
         seed: 233,
         x: None,
     };
@@ -64,7 +65,8 @@ fn main() -> Result<()> {
         let report = service.wait(*id)?;
         println!(
             "{user}: {model} fine-tuned, final loss {:.4}, val acc {:.3}",
-            report.final_loss, report.val_accuracy
+            report.final_loss,
+            report.val_accuracy
         );
         // Personalized inference against the finished job's weights.
         let personalized = service.infer(
@@ -72,6 +74,7 @@ fn main() -> Result<()> {
             &InferRequest {
                 model: (*model).into(),
                 engine: EngineKind::Auto,
+                precision: wasi_train::precision::Precision::F32,
                 seed: 233,
                 x: None,
             },

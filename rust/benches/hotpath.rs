@@ -48,8 +48,10 @@ fn native_layer_benches(results: &mut Vec<BenchResult>) {
             let _ = wasi.backward(&dy);
         }));
 
-        let mut wasi2 = WasiLayer::new(WsiFactors { l: lmat, r: rmat },
-                                       AsiCompressor::new(&dims, &ranks, 3));
+        let mut wasi2 = WasiLayer::new(
+            WsiFactors { l: lmat, r: rmat },
+            AsiCompressor::new(&dims, &ranks, 3),
+        );
         results.push(bench(&format!("WASI refresh-only {tag}"), 0.5, || {
             wasi2.factors.refresh();
         }));

@@ -20,6 +20,16 @@ impl MemoryBreakdown {
     pub fn total_mb(&self) -> f64 {
         self.total() as f64 * 4.0 / (1024.0 * 1024.0)
     }
+
+    /// Total MB with the weight term priced at a storage precision
+    /// (`crate::precision`): activations and ASI state stay f32 (the
+    /// compute precision), weights shrink to 2 bytes at bf16 / 1 byte
+    /// at int8.  `total_mb_at(F32) == total_mb()`.
+    pub fn total_mb_at(&self, p: crate::precision::Precision) -> f64 {
+        let weight_bytes = self.weights as f64 * p.bytes_per_elem();
+        let rest_bytes = (self.activations + self.asi_state) as f64 * 4.0;
+        (weight_bytes + rest_bytes) / (1024.0 * 1024.0)
+    }
 }
 
 /// Account a model variant's training memory from its manifest entry.
@@ -109,5 +119,19 @@ mod tests {
         e.state_len = 0;
         let b = account(&e);
         assert_eq!(b.activations, 16 * 65 * 128);
+    }
+
+    #[test]
+    fn precision_prices_only_the_weight_term() {
+        use crate::precision::Precision;
+        let b = account(&entry());
+        assert!((b.total_mb_at(Precision::F32) - b.total_mb()).abs() < 1e-12);
+        let f32_mb = b.total_mb_at(Precision::F32);
+        let bf16_mb = b.total_mb_at(Precision::Bf16);
+        let i8_mb = b.total_mb_at(Precision::I8);
+        assert!(bf16_mb < f32_mb && i8_mb < bf16_mb);
+        let rest = (b.activations + b.asi_state) as f64 * 4.0 / (1024.0 * 1024.0);
+        let want_i8 = rest + b.weights as f64 / (1024.0 * 1024.0);
+        assert!((i8_mb - want_i8).abs() < 1e-12);
     }
 }

@@ -19,6 +19,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::engine::EngineKind;
+use crate::precision::Precision;
 use crate::runtime::{Manifest, Runtime};
 use crate::serve::{runner, JobSpec, PoolEntry};
 use crate::util::json::{arr, finite_num as fnum, num, obj, str as jstr, Json};
@@ -44,6 +45,10 @@ pub struct FinetuneConfig {
     pub log_every: Option<usize>,
     /// Execution engine (`auto` prefers HLO when the runtime can run it).
     pub engine: EngineKind,
+    /// Weight-storage precision (`--precision f32|bf16`): bf16 rounds
+    /// the stored parameter vector after every step (native engine
+    /// only); int8 is inference-only and rejected for training.
+    pub precision: Precision,
     /// Kernel-layer worker threads for this run (`None` = leave the
     /// process-global setting alone; `Some(0)` = auto-detect).  The
     /// prior setting is restored when the run finishes.  Results are
@@ -63,6 +68,7 @@ impl Default for FinetuneConfig {
             lr0: 0.05, // paper App. B.1
             log_every: None,
             engine: EngineKind::Auto,
+            precision: Precision::F32,
             threads: None,
         }
     }
@@ -128,6 +134,11 @@ impl FinetuneConfigBuilder {
         self
     }
 
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.cfg.precision = precision;
+        self
+    }
+
     pub fn threads(mut self, threads: usize) -> Self {
         self.cfg.threads = Some(threads);
         self
@@ -145,6 +156,8 @@ pub struct FinetuneReport {
     pub dataset: String,
     /// Engine that actually executed (`"hlo"` / `"native"`).
     pub engine: &'static str,
+    /// Weight-storage precision the run trained at.
+    pub precision: Precision,
     pub final_loss: f64,
     pub val_accuracy: f64,
     pub mean_step_seconds: f64,
@@ -162,11 +175,12 @@ impl FinetuneReport {
             ("model", jstr(self.model.clone())),
             ("dataset", jstr(self.dataset.clone())),
             ("engine", jstr(self.engine)),
+            ("precision", jstr(self.precision.to_string())),
             ("final_loss", fnum(self.final_loss)),
             ("val_accuracy", fnum(self.val_accuracy)),
             ("mean_step_seconds", num(self.mean_step_seconds)),
             ("total_seconds", num(self.total_seconds)),
-            ("memory_mb", num(self.memory.total_mb())),
+            ("memory_mb", num(self.memory.total_mb_at(self.precision))),
             (
                 "loss_curve",
                 arr(self
@@ -240,6 +254,7 @@ mod tests {
             .lr0(0.125)
             .log_every(2)
             .engine(EngineKind::Native)
+            .precision(Precision::Bf16)
             .threads(3)
             .build();
         assert_eq!(cfg.model, "m");
@@ -250,6 +265,7 @@ mod tests {
         assert_eq!(cfg.lr0, 0.125);
         assert_eq!(cfg.log_every, Some(2));
         assert_eq!(cfg.engine, EngineKind::Native);
+        assert_eq!(cfg.precision, Precision::Bf16);
         assert_eq!(cfg.threads, Some(3));
         // Untouched knobs keep the paper defaults.
         assert!(!cfg.verbose);
@@ -261,6 +277,7 @@ mod tests {
             model: "m".into(),
             dataset: "d".into(),
             engine: "native",
+            precision: Precision::F32,
             final_loss: 1.5,
             val_accuracy: 0.5,
             mean_step_seconds: 0.01,

@@ -16,7 +16,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::data::loader::Loader;
-use crate::engine::{infer_engine, train_engine, EngineKind, TrainEngine};
+use crate::engine::{infer_engine, train_engine_with, EngineKind, TrainEngine};
+use crate::precision::Precision;
 use crate::runtime::Runtime;
 
 use super::metrics::{Metrics, StepRecord};
@@ -30,6 +31,9 @@ pub struct TrainConfig {
     pub log_every: usize,
     pub verbose: bool,
     pub engine: EngineKind,
+    /// Weight-storage precision (bf16 requires the native engine; int8
+    /// is inference-only and rejected at engine construction).
+    pub precision: Precision,
 }
 
 impl Default for TrainConfig {
@@ -40,6 +44,7 @@ impl Default for TrainConfig {
             log_every: 20,
             verbose: false,
             engine: EngineKind::Auto,
+            precision: Precision::F32,
         }
     }
 }
@@ -82,7 +87,7 @@ impl<'rt> Trainer<'rt> {
         entry: &crate::runtime::ModelEntry,
         mut cfg: TrainConfig,
     ) -> Result<Self> {
-        let engine = train_engine(rt, entry, cfg.engine)?;
+        let engine = train_engine_with(rt, entry, cfg.engine, cfg.precision)?;
         let schedule = CosineSchedule { lr0: cfg.lr0, total: cfg.steps };
         // A zero interval would divide by zero in the logging check.
         cfg.log_every = cfg.log_every.max(1);

@@ -1,5 +1,11 @@
 //! Memory model (paper Eqs. 41-46).  Counts are ELEMENTS; multiply by 4
-//! for f32 bytes (helpers provided).
+//! for f32 bytes (helpers provided).  The precision-aware variants
+//! price the weight terms at a reduced storage format
+//! (`crate::precision`) — the low-memory edge-inference scenario the
+//! paper's 62× headline is about compounds the subspace compression
+//! with 2-byte bf16 or 1-byte int8 weights.
+
+use crate::precision::Precision;
 
 use super::flops::{LayerDims, WasiRanks};
 
@@ -38,6 +44,23 @@ impl LayerDims {
     /// Eq. 46: inference memory compression C_inference.
     pub fn c_inference(&self, k: usize) -> f64 {
         self.m_vanilla_w() / self.m_wasi_w(k)
+    }
+
+    /// Eq. 41 in BYTES at a weight-storage precision.
+    pub fn m_vanilla_w_bytes(&self, p: Precision) -> f64 {
+        self.m_vanilla_w() * p.bytes_per_elem()
+    }
+
+    /// Eq. 43 in BYTES at a weight-storage precision.
+    pub fn m_wasi_w_bytes(&self, k: usize, p: Precision) -> f64 {
+        self.m_wasi_w(k) * p.bytes_per_elem()
+    }
+
+    /// Eq. 46 against the f32 vanilla baseline with WASI weights stored
+    /// at precision `p`: the subspace compression and the storage-width
+    /// reduction compound (`c_inference_at(k, F32) == c_inference(k)`).
+    pub fn c_inference_at(&self, k: usize, p: Precision) -> f64 {
+        self.m_vanilla_w_bytes(Precision::F32) / self.m_wasi_w_bytes(k, p)
     }
 
     /// WASI training memory (elements) for this layer.
@@ -98,6 +121,20 @@ mod tests {
     #[test]
     fn mb_conversion() {
         assert!((elems_to_mb(1024.0 * 1024.0) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn precision_compounds_with_subspace_compression() {
+        assert!((L.c_inference_at(64, Precision::F32) - L.c_inference(64)).abs() < 1e-12);
+        assert!(
+            (L.c_inference_at(64, Precision::Bf16) - 2.0 * L.c_inference(64)).abs() < 1e-9,
+            "bf16 halves the weight bytes"
+        );
+        assert!(
+            (L.c_inference_at(64, Precision::I8) - 4.0 * L.c_inference(64)).abs() < 1e-9,
+            "int8 quarters the weight bytes"
+        );
+        assert_eq!(L.m_wasi_w_bytes(64, Precision::I8), L.m_wasi_w(64));
     }
 
     #[test]

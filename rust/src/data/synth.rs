@@ -30,8 +30,14 @@ pub struct VisionTask {
 }
 
 impl VisionTask {
-    pub fn new(name: &str, classes: usize, image: usize, sigma: f32,
-               template_rank: usize, seed: u64) -> Self {
+    pub fn new(
+        name: &str,
+        classes: usize,
+        image: usize,
+        sigma: f32,
+        template_rank: usize,
+        seed: u64,
+    ) -> Self {
         let dim = image * image * 3;
         let mut rng = Pcg64::new(seed);
         // templates = coefs (classes x rank) @ basis (rank x dim), unit RMS rows

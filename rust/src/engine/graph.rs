@@ -38,6 +38,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::linalg::kernels::{self, Epilogue};
 use crate::linalg::matrix::Mat;
 use crate::linalg::tucker::Tensor;
+use crate::precision::{self, Precision};
 use crate::runtime::{ModelEntry, TensorSpec};
 use crate::wasi::asi::{AsiCompressor, CompressedActivation};
 use crate::wasi::lowrank_grad::lowrank_grad_3d;
@@ -113,7 +114,11 @@ impl ModelPlan {
             if t.offset + t.numel() > entry.params_len {
                 bail!(
                     "model {}: tensor {} [{:?} @ {}] overruns params_len {}",
-                    entry.name, t.name, t.shape, t.offset, entry.params_len
+                    entry.name,
+                    t.name,
+                    t.shape,
+                    t.offset,
+                    entry.params_len
                 );
             }
             if specs.insert(t.name.clone(), t.clone()).is_some() {
@@ -205,7 +210,8 @@ impl ModelPlan {
             {
                 bail!(
                     "{prefix}: factored shapes l {:?} / r {:?} inconsistent with ({o}, {i})",
-                    l.shape, r.shape
+                    l.shape,
+                    r.shape
                 );
             }
             Ok(LinearPlan {
@@ -402,6 +408,200 @@ impl LayerGraph {
             }
         }
         LayerGraph { plan, nodes, updates }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed (reduced-precision) parameter sets
+// ---------------------------------------------------------------------------
+
+/// One int8-quantized weight tensor: per-tensor symmetric payload plus
+/// its dequantization scale (DESIGN.md §Precision).
+pub struct QuantTensor {
+    pub q: Vec<i8>,
+    pub scale: f32,
+}
+
+/// One tensor in a [`PackedParams`] set.
+pub enum StoredTensor {
+    F32(Vec<f32>),
+    /// bf16 bits (`crate::precision::bf16_to_f32` recovers the value).
+    Bf16(Vec<u16>),
+    I8(QuantTensor),
+}
+
+impl StoredTensor {
+    /// Payload bytes this tensor occupies in the packed representation.
+    pub fn bytes(&self) -> usize {
+        match self {
+            StoredTensor::F32(d) => d.len() * 4,
+            StoredTensor::Bf16(d) => d.len() * 2,
+            StoredTensor::I8(t) => t.q.len() + 4,
+        }
+    }
+}
+
+/// A packed parameter set for reduced-precision inference: every 2-D
+/// GEMM weight tensor (`.w` / `.l` / `.r`) is stored at the selected
+/// [`Precision`], everything else (biases, norms, cls/pos) stays f32.
+/// Built once per variant by quantize-on-load (`serve::pool`) so
+/// cached shared infer engines serve from the compact representation.
+pub struct PackedParams {
+    precision: Precision,
+    /// Tensors keyed by their flat-vector offset (the executor's
+    /// resolved bindings address tensors by offset).
+    tensors: BTreeMap<usize, StoredTensor>,
+    params_len: usize,
+}
+
+fn is_gemm_weight(spec: &TensorSpec) -> bool {
+    spec.shape.len() == 2
+        && (spec.name.ends_with(".w") || spec.name.ends_with(".l") || spec.name.ends_with(".r"))
+}
+
+impl PackedParams {
+    /// Pack a flat f32 parameter vector at `precision`.  `F32` packs
+    /// losslessly (useful for tests); `Bf16`/`I8` compress the GEMM
+    /// weight tensors.
+    pub fn pack(entry: &ModelEntry, params: &[f32], prec: Precision) -> Result<PackedParams> {
+        if params.len() != entry.params_len {
+            bail!(
+                "params length {} != manifest {} — packing another model's vector?",
+                params.len(),
+                entry.params_len
+            );
+        }
+        let mut tensors = BTreeMap::new();
+        for spec in &entry.param_spec {
+            let data = &params[spec.offset..spec.offset + spec.numel()];
+            let stored = if is_gemm_weight(spec) {
+                match prec {
+                    Precision::F32 => StoredTensor::F32(data.to_vec()),
+                    Precision::Bf16 => StoredTensor::Bf16(precision::pack_bf16(data)),
+                    Precision::I8 => {
+                        let (q, scale) = precision::quantize_i8(data);
+                        StoredTensor::I8(QuantTensor { q, scale })
+                    }
+                }
+            } else {
+                StoredTensor::F32(data.to_vec())
+            };
+            if tensors.insert(spec.offset, stored).is_some() {
+                bail!("model {}: param_spec offsets collide at {}", entry.name, spec.offset);
+            }
+        }
+        Ok(PackedParams { precision: prec, tensors, params_len: entry.params_len })
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn params_len(&self) -> usize {
+        self.params_len
+    }
+
+    /// Total payload bytes of the packed representation (the number the
+    /// memory accounting and the bench's precision section report).
+    pub fn bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.bytes()).sum()
+    }
+
+    fn stored(&self, spec: &TensorSpec) -> Result<&StoredTensor> {
+        self.tensors
+            .get(&spec.offset)
+            .ok_or_else(|| anyhow!("no packed tensor at offset {} ({})", spec.offset, spec.name))
+    }
+}
+
+/// A borrowed weight tensor as the inference walk sees it.
+pub enum WeightView<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+    I8(&'a [i8], f32),
+}
+
+/// The parameter source an inference walk reads from: the flat f32
+/// vector (training params, checkpoints) or a packed reduced-precision
+/// set.  Copyable so the walk threads it by value.
+#[derive(Clone, Copy)]
+pub enum ParamsView<'a> {
+    Flat(&'a [f32]),
+    Packed(&'a PackedParams),
+}
+
+impl<'a> ParamsView<'a> {
+    fn len(self) -> usize {
+        match self {
+            ParamsView::Flat(p) => p.len(),
+            ParamsView::Packed(p) => p.params_len,
+        }
+    }
+
+    /// An f32 tensor (biases, norms, cls/pos — never quantized).
+    fn floats(self, spec: &TensorSpec) -> Result<&'a [f32]> {
+        match self {
+            ParamsView::Flat(p) => Ok(&p[spec.offset..spec.offset + spec.numel()]),
+            ParamsView::Packed(p) => match p.stored(spec)? {
+                StoredTensor::F32(d) => Ok(d),
+                _ => bail!("tensor {} is packed at reduced precision, expected f32", spec.name),
+            },
+        }
+    }
+
+    /// A GEMM weight tensor at whatever precision it is stored.
+    fn weight(self, spec: &TensorSpec) -> Result<WeightView<'a>> {
+        match self {
+            ParamsView::Flat(p) => {
+                Ok(WeightView::F32(&p[spec.offset..spec.offset + spec.numel()]))
+            }
+            ParamsView::Packed(p) => Ok(match p.stored(spec)? {
+                StoredTensor::F32(d) => WeightView::F32(d),
+                StoredTensor::Bf16(d) => WeightView::Bf16(d),
+                StoredTensor::I8(t) => WeightView::I8(&t.q, t.scale),
+            }),
+        }
+    }
+}
+
+/// One linear layer forward for the inference walk: `out = x · Wᵀ`
+/// (+ bias, optionally fused GELU), dispatching on the weight's storage
+/// precision — f32 and bf16 dequantize in the inner loop at scale 1,
+/// int8 folds its per-tensor scale into the dequantizing epilogue.
+fn linear_nt(
+    w: WeightView,
+    x: &[f32],
+    rows: usize,
+    i: usize,
+    o: usize,
+    bias: Option<&[f32]>,
+    fuse_gelu: bool,
+    out: &mut [f32],
+) {
+    let plain_epi = match (bias, fuse_gelu) {
+        (Some(b), true) => Epilogue::BiasGelu(b),
+        (Some(b), false) => Epilogue::Bias(b),
+        (None, true) => Epilogue::Gelu,
+        (None, false) => Epilogue::None,
+    };
+    match w {
+        WeightView::F32(wf) => kernels::gemm_nt(x, wf, rows, i, o, out, plain_epi),
+        WeightView::Bf16(wq) => kernels::gemm_nt_deq(x, wq, rows, i, o, out, plain_epi),
+        WeightView::I8(wq, scale) => {
+            let epi = match (bias, fuse_gelu) {
+                (Some(b), true) => Epilogue::ScaleBiasGelu(scale, b),
+                (Some(b), false) => Epilogue::ScaleBias(scale, b),
+                (None, _) => Epilogue::Scale(scale),
+            };
+            kernels::gemm_nt_deq(x, wq, rows, i, o, out, epi);
+            if bias.is_none() && fuse_gelu {
+                // Not produced by the current graphs (GELU only fuses
+                // into biased linears); kept correct regardless.
+                for v in out.iter_mut() {
+                    *v = kernels::gelu(*v);
+                }
+            }
+        }
     }
 }
 
@@ -1161,13 +1361,17 @@ impl GraphExecutor {
                         bail!(
                             "state tensor {key} shape {:?} does not match the \
                              ASI basis ({}, {})",
-                            spec.shape, st.u.rows, st.u.cols
+                            spec.shape,
+                            st.u.rows,
+                            st.u.cols
                         );
                     }
                     if spec.offset + spec.numel() > state.len() {
                         bail!(
                             "state tensor {key} [{:?} @ {}] overruns state_len {}",
-                            spec.shape, spec.offset, state.len()
+                            spec.shape,
+                            spec.offset,
+                            state.len()
                         );
                     }
                     st.u.data
@@ -1207,7 +1411,20 @@ impl GraphExecutor {
     /// Inference walk: batch-size free, saves nothing, and fuses a
     /// following GELU into the producing linear's epilogue.
     pub fn infer(&self, params: &[f32], x: &[f32], b: usize) -> Result<Vec<f32>> {
-        self.check_params(params)?;
+        self.infer_view(ParamsView::Flat(params), x, b)
+    }
+
+    /// [`GraphExecutor::infer`] against a packed reduced-precision
+    /// parameter set (DESIGN.md §Precision): GEMM weights dequantize in
+    /// the kernel's inner loop / epilogue, everything else reads f32.
+    pub fn infer_packed(&self, packed: &PackedParams, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        self.infer_view(ParamsView::Packed(packed), x, b)
+    }
+
+    fn infer_view(&self, params: ParamsView, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        if params.len() != self.params_len {
+            bail!("params length {} != manifest {}", params.len(), self.params_len);
+        }
         if b == 0 || x.len() != b * self.input_dim {
             bail!(
                 "x length {} is not a positive multiple of input_dim {}",
@@ -1230,51 +1447,23 @@ impl GraphExecutor {
                 }
                 Bind::Dense { w, b: bs, o, i, .. } => {
                     let rows = cur.len() / *i;
-                    let bias = &params[bs.offset..bs.offset + bs.numel()];
-                    let epi =
-                        if fuse_gelu { Epilogue::BiasGelu(bias) } else { Epilogue::Bias(bias) };
+                    let bias = params.floats(bs)?;
                     let mut y = vec![0.0f32; rows * *o];
-                    kernels::gemm_nt(
-                        &cur,
-                        &params[w.offset..w.offset + w.numel()],
-                        rows,
-                        *i,
-                        *o,
-                        &mut y,
-                        epi,
-                    );
+                    linear_nt(params.weight(w)?, &cur, rows, *i, *o, Some(bias), fuse_gelu, &mut y);
                     cur = y;
                 }
                 Bind::Wasi { l, r, b: bs, o, k, i, .. } => {
                     let rows = cur.len() / *i;
                     let mut h = vec![0.0f32; rows * *k];
-                    kernels::gemm_nt(
-                        &cur,
-                        &params[r.offset..r.offset + r.numel()],
-                        rows,
-                        *i,
-                        *k,
-                        &mut h,
-                        Epilogue::None,
-                    );
-                    let bias = &params[bs.offset..bs.offset + bs.numel()];
-                    let epi =
-                        if fuse_gelu { Epilogue::BiasGelu(bias) } else { Epilogue::Bias(bias) };
+                    linear_nt(params.weight(r)?, &cur, rows, *i, *k, None, false, &mut h);
+                    let bias = params.floats(bs)?;
                     let mut y = vec![0.0f32; rows * *o];
-                    kernels::gemm_nt(
-                        &h,
-                        &params[l.offset..l.offset + l.numel()],
-                        rows,
-                        *k,
-                        *o,
-                        &mut y,
-                        epi,
-                    );
+                    linear_nt(params.weight(l)?, &h, rows, *k, *o, Some(bias), fuse_gelu, &mut y);
                     cur = y;
                 }
                 Bind::Assemble { cls, pos } => {
-                    let clsv = &params[cls.offset..cls.offset + cls.numel()];
-                    let posv = &params[pos.offset..pos.offset + pos.numel()];
+                    let clsv = params.floats(cls)?;
+                    let posv = params.floats(pos)?;
                     let mut tok = vec![0.0f32; b * t * d];
                     for bi in 0..b {
                         tok[bi * t * d..bi * t * d + d].copy_from_slice(clsv);
@@ -1287,8 +1476,8 @@ impl GraphExecutor {
                     cur = tok;
                 }
                 Bind::LayerNorm { g, b: bs } => {
-                    let gv = &params[g.offset..g.offset + g.numel()];
-                    let bv = &params[bs.offset..bs.offset + bs.numel()];
+                    let gv = params.floats(g)?;
+                    let bv = params.floats(bs)?;
                     ops::layer_norm_inplace(&mut cur, gv, bv, g.numel());
                 }
                 Bind::SliceV => {
@@ -1467,6 +1656,84 @@ mod tests {
             assert!(
                 (fd - an).abs() < 2e-2 * fd.abs().max(1.0),
                 "{name}[{kidx}]: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_f32_inference_is_bit_identical_to_flat() {
+        let m = demo_manifest("packf32");
+        for model in ["vit_demo_vanilla", "vit_demo_wasi_eps80"] {
+            let entry = m.model(model).unwrap();
+            let graph = LayerGraph::from_entry(entry).unwrap();
+            let exec = GraphExecutor::new_infer(graph, entry).unwrap();
+            let params = entry.load_params().unwrap();
+            let packed = PackedParams::pack(entry, &params, Precision::F32).unwrap();
+            assert_eq!(packed.params_len(), entry.params_len);
+            assert_eq!(packed.bytes(), entry.params_len * 4);
+            let mut task = VisionTask::new("pk", entry.classes, 16, 0.5, 4, 21);
+            let (x, _, _) = task.batch_onehot(entry.batch);
+            let flat = exec.infer(&params, &x, entry.batch).unwrap();
+            let pk = exec.infer_packed(&packed, &x, entry.batch).unwrap();
+            assert_eq!(
+                flat.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                pk.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{model}: F32 packing must be lossless"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_bf16_matches_rounded_flat_params_bitwise() {
+        // The bf16 dequantizing GEMM performs the identical operation
+        // sequence as the f32 GEMM over pre-rounded weights, so the two
+        // paths must agree bit for bit — the packed path is exactly
+        // "bf16 weight storage", not an approximation of it.
+        let m = demo_manifest("packbf16");
+        let entry = m.model("vit_demo_wasi_eps80").unwrap();
+        let graph = LayerGraph::from_entry(entry).unwrap();
+        let exec = GraphExecutor::new_infer(graph, entry).unwrap();
+        let params = entry.load_params().unwrap();
+        let packed = PackedParams::pack(entry, &params, Precision::Bf16).unwrap();
+        assert!(packed.bytes() < entry.params_len * 4, "bf16 packing must shrink weights");
+        let mut rounded = params.clone();
+        for spec in &entry.param_spec {
+            if is_gemm_weight(spec) {
+                let range = spec.offset..spec.offset + spec.numel();
+                crate::precision::round_bf16_inplace(&mut rounded[range]);
+            }
+        }
+        let mut task = VisionTask::new("pk16", entry.classes, 16, 0.5, 4, 22);
+        let (x, _, _) = task.batch_onehot(entry.batch);
+        let want = exec.infer(&rounded, &x, entry.batch).unwrap();
+        let got = exec.infer_packed(&packed, &x, entry.batch).unwrap();
+        assert_eq!(
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn packed_i8_inference_tracks_f32_logits() {
+        let m = demo_manifest("packi8");
+        let entry = m.model("vit_demo_vanilla").unwrap();
+        let graph = LayerGraph::from_entry(entry).unwrap();
+        let exec = GraphExecutor::new_infer(graph, entry).unwrap();
+        let params = entry.load_params().unwrap();
+        let packed = PackedParams::pack(entry, &params, Precision::I8).unwrap();
+        // Weight tensors dominate the demo ViT, so int8 packing should
+        // land well under half the f32 footprint.
+        assert!(packed.bytes() * 2 < entry.params_len * 4, "{}", packed.bytes());
+        let mut task = VisionTask::new("pk8", entry.classes, 16, 0.5, 4, 23);
+        let (x, _, _) = task.batch_onehot(entry.batch);
+        let f32_logits = exec.infer(&params, &x, entry.batch).unwrap();
+        let i8_logits = exec.infer_packed(&packed, &x, entry.batch).unwrap();
+        assert_eq!(f32_logits.len(), i8_logits.len());
+        let scale = f32_logits.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
+        for (a, q) in f32_logits.iter().zip(&i8_logits) {
+            assert!(
+                (a - q).abs() < 0.15 * scale,
+                "int8 logits drifted: {a} vs {q} (scale {scale})"
             );
         }
     }

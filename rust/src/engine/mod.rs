@@ -31,9 +31,13 @@ use std::str::FromStr;
 
 use anyhow::{anyhow, Result};
 
+use crate::precision::Precision;
 use crate::runtime::{ModelEntry, Runtime, StepOutput};
 
-pub use graph::{GraphExecutor, LayerGraph, LinearForm, LinearPlan, ModelPlan, Node, NodeTiming};
+pub use graph::{
+    GraphExecutor, LayerGraph, LinearForm, LinearPlan, ModelPlan, Node, NodeTiming, PackedParams,
+    QuantTensor, StoredTensor,
+};
 pub use hlo::{HloInferEngine, HloTrainEngine};
 pub use native::{NativeInferEngine, NativeModelEngine};
 pub use ops::{Op, UpdateOp};
@@ -105,17 +109,7 @@ pub trait InferEngine: Send + Sync {
     /// as bad accuracy, not a panic).
     fn predict(&self, params: &[f32], x: &[f32]) -> Result<Vec<usize>> {
         let logits = self.infer(params, x)?;
-        let c = self.entry().classes;
-        Ok(logits
-            .chunks(c)
-            .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i)
-                    .unwrap_or(0)
-            })
-            .collect())
+        Ok(ops::argmax_rows(&logits, self.entry().classes))
     }
 
     fn backend(&self) -> &'static str;
@@ -142,9 +136,7 @@ impl FromStr for EngineKind {
             "auto" => Ok(EngineKind::Auto),
             "hlo" => Ok(EngineKind::Hlo),
             "native" => Ok(EngineKind::Native),
-            other => Err(anyhow!(
-                "unknown engine {other:?}; expected auto, hlo, or native"
-            )),
+            other => Err(anyhow!("unknown engine {other:?}; expected auto, hlo, or native")),
         }
     }
 }
@@ -182,15 +174,33 @@ pub fn train_engine<'rt>(
     entry: &ModelEntry,
     kind: EngineKind,
 ) -> Result<Box<dyn TrainEngine + 'rt>> {
+    train_engine_with(rt, entry, kind, Precision::F32)
+}
+
+/// [`train_engine`] with an explicit weight-storage precision.  The
+/// HLO engine executes the AOT-lowered f32 step and cannot honor a
+/// reduced storage format, so bf16 requires the native engine; int8 is
+/// inference-only and refused by the native engine itself.
+pub fn train_engine_with<'rt>(
+    rt: &'rt Runtime,
+    entry: &ModelEntry,
+    kind: EngineKind,
+    precision: Precision,
+) -> Result<Box<dyn TrainEngine + 'rt>> {
     // `auto` also falls back to native when the variant ships no train
     // artifact — the native engine trains from `param_spec` alone.
     let resolved = match kind {
         EngineKind::Auto if entry.train_hlo.is_none() => EngineKind::Native,
+        EngineKind::Auto if precision != Precision::F32 => EngineKind::Native,
         k => k.resolve(rt),
     };
     match resolved {
+        EngineKind::Hlo if precision != Precision::F32 => Err(anyhow!(
+            "precision {precision} requires the native engine; the HLO step is f32-only \
+             (use --engine native or --engine auto)"
+        )),
         EngineKind::Hlo => Ok(Box::new(HloTrainEngine::load(rt, entry)?)),
-        _ => Ok(Box::new(NativeModelEngine::load(entry)?)),
+        _ => Ok(Box::new(NativeModelEngine::load_with(entry, precision)?)),
     }
 }
 

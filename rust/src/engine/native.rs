@@ -15,9 +15,10 @@
 
 use anyhow::{bail, Result};
 
+use crate::precision::{round_bf16_inplace, Precision};
 use crate::runtime::{ModelEntry, StepOutput};
 
-use super::graph::{GraphExecutor, LayerGraph, ModelPlan, NodeTiming};
+use super::graph::{GraphExecutor, LayerGraph, ModelPlan, NodeTiming, PackedParams};
 use super::{EngineKind, InferEngine, TrainEngine};
 
 /// Pure-rust training engine for one ViT variant.
@@ -28,24 +29,53 @@ pub struct NativeModelEngine {
     flat_state: Vec<f32>,
     /// Reused flat gradient buffer (zeroed each step).
     grads: Vec<f32>,
+    /// Weight storage precision: `Bf16` rounds the flat parameter
+    /// vector to bf16-representable values after load, restore, and
+    /// every optimizer step (DESIGN.md §Precision).  Compute stays f32.
+    precision: Precision,
 }
 
 impl NativeModelEngine {
     /// Build from a manifest entry, loading initial params/state from
-    /// the artifact files.
+    /// the artifact files (f32 weight storage).
     pub fn load(entry: &ModelEntry) -> Result<Self> {
+        Self::load_with(entry, Precision::F32)
+    }
+
+    /// [`NativeModelEngine::load`] with an explicit weight-storage
+    /// precision (`--precision`).  Int8 is inference-only and refused.
+    pub fn load_with(entry: &ModelEntry, precision: Precision) -> Result<Self> {
         let params = entry.load_params()?;
         let state = entry.load_state()?;
-        Self::from_flat(entry, params, state)
+        Self::from_flat_with(entry, params, state, precision)
     }
 
     /// Build from explicit flat vectors (checkpoint restore, tests).
     pub fn from_flat(entry: &ModelEntry, params: Vec<f32>, state: Vec<f32>) -> Result<Self> {
+        Self::from_flat_with(entry, params, state, Precision::F32)
+    }
+
+    /// [`NativeModelEngine::from_flat`] at an explicit precision.
+    pub fn from_flat_with(
+        entry: &ModelEntry,
+        mut params: Vec<f32>,
+        state: Vec<f32>,
+        precision: Precision,
+    ) -> Result<Self> {
+        if !precision.trainable() {
+            bail!(
+                "precision {precision} is inference-only; train with f32 or bf16 \
+                 and quantize the result for serving"
+            );
+        }
         if params.len() != entry.params_len {
             bail!("params length {} != manifest {}", params.len(), entry.params_len);
         }
         if state.len() != entry.state_len {
             bail!("state length {} != manifest {}", state.len(), entry.state_len);
+        }
+        if precision == Precision::Bf16 {
+            round_bf16_inplace(&mut params);
         }
         let graph = LayerGraph::from_entry(entry)?;
         let mut exec = GraphExecutor::new(graph, entry)?;
@@ -56,7 +86,13 @@ impl NativeModelEngine {
             exec,
             flat_params: params,
             flat_state: state,
+            precision,
         })
+    }
+
+    /// The weight-storage precision this engine maintains.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// The reconstructed architecture plan.
@@ -99,6 +135,11 @@ impl TrainEngine for NativeModelEngine {
         self.grads.fill(0.0);
         self.exec.backward(&self.flat_params, &dlogits, &mut self.grads)?;
         self.exec.update(&mut self.flat_params, &self.grads, lr);
+        if self.precision == Precision::Bf16 {
+            // bf16 weight storage: what persists between steps is the
+            // rounded vector, exactly as a 2-byte store would hold.
+            round_bf16_inplace(&mut self.flat_params);
+        }
         self.exec.store_state(&mut self.flat_state);
         Ok(StepOutput { loss, accuracy })
     }
@@ -122,6 +163,9 @@ impl TrainEngine for NativeModelEngine {
             );
         }
         self.flat_params.copy_from_slice(params);
+        if self.precision == Precision::Bf16 {
+            round_bf16_inplace(&mut self.flat_params);
+        }
         self.flat_state.copy_from_slice(state);
         self.exec.load_state(&self.flat_state)
     }
@@ -142,9 +186,16 @@ impl TrainEngine for NativeModelEngine {
 /// Pure-rust inference for one ViT variant: Eq. 8 only for factored
 /// layers (no ASI compression, matching the lowered infer step), batch
 /// size free, GELU fused into the fc1 epilogue.
+///
+/// A quantized engine ([`NativeInferEngine::load_quantized`])
+/// additionally holds a [`PackedParams`] set built from the variant's
+/// initial params at load time and serves `infer_quantized` straight
+/// from that compact representation — the pool caches one such engine
+/// per (variant, precision).
 pub struct NativeInferEngine {
     entry: ModelEntry,
     exec: GraphExecutor,
+    packed: Option<PackedParams>,
 }
 
 impl NativeInferEngine {
@@ -152,7 +203,69 @@ impl NativeInferEngine {
         let graph = LayerGraph::from_entry(entry)?;
         // Inference never compresses activations: skip ASI construction.
         let exec = GraphExecutor::new_infer(graph, entry)?;
-        Ok(NativeInferEngine { entry: entry.clone(), exec })
+        Ok(NativeInferEngine { entry: entry.clone(), exec, packed: None })
+    }
+
+    /// Quantize-on-load: build the engine AND pack the variant's
+    /// initial parameters at `precision` (f32 packs nothing and
+    /// behaves exactly like [`NativeInferEngine::load`]).
+    pub fn load_quantized(entry: &ModelEntry, precision: Precision) -> Result<Self> {
+        if precision == Precision::F32 {
+            return Self::load(entry);
+        }
+        let params = entry.load_params()?;
+        Self::load_quantized_from(entry, &params, precision)
+    }
+
+    /// [`NativeInferEngine::load_quantized`] over an already-loaded
+    /// flat parameter vector (the pool passes its cached initial
+    /// params instead of re-reading the artifact file).
+    pub fn load_quantized_from(
+        entry: &ModelEntry,
+        params: &[f32],
+        precision: Precision,
+    ) -> Result<Self> {
+        let mut eng = Self::load(entry)?;
+        if precision != Precision::F32 {
+            eng.packed = Some(PackedParams::pack(entry, params, precision)?);
+        }
+        Ok(eng)
+    }
+
+    /// The precision of the held packed set (`F32` when none).
+    pub fn precision(&self) -> Precision {
+        self.packed.as_ref().map(|p| p.precision()).unwrap_or(Precision::F32)
+    }
+
+    /// Payload bytes of the held packed set, if any.
+    pub fn packed_bytes(&self) -> Option<usize> {
+        self.packed.as_ref().map(|p| p.bytes())
+    }
+
+    /// Pack an explicit parameter vector (a finished job's personalized
+    /// weights) at `precision` for [`NativeInferEngine::infer_packed`].
+    pub fn pack_params(&self, params: &[f32], precision: Precision) -> Result<PackedParams> {
+        PackedParams::pack(&self.entry, params, precision)
+    }
+
+    /// Inference from the quantize-on-load packed set.  Errors on an
+    /// engine constructed without one (callers select the packed path
+    /// by precision, so this is a wiring bug, not a user mistake).
+    pub fn infer_quantized(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let packed = self
+            .packed
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("engine holds no packed params (f32 pool entry)"))?;
+        self.infer_packed(packed, x)
+    }
+
+    /// Inference from an explicit packed set (personalized params).
+    pub fn infer_packed(&self, packed: &PackedParams, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() % self.entry.input_dim != 0 {
+            bail!("x length {} not a multiple of input_dim {}", x.len(), self.entry.input_dim);
+        }
+        let b = x.len() / self.entry.input_dim;
+        self.exec.infer_packed(packed, x, b)
     }
 }
 

@@ -169,6 +169,22 @@ pub fn layer_norm_inplace(x: &mut [f32], g: &[f32], b: &[f32], d: usize) {
     }
 }
 
+/// Per-row argmax over a flat (rows × classes) logit buffer — the one
+/// prediction rule every inference path shares (NaN-safe via
+/// `total_cmp`: a diverged run surfaces as bad accuracy, not a panic).
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,5 +223,12 @@ mod tests {
             let sum: f32 = row.iter().map(|v| v.exp()).sum();
             assert!((sum - 1.0).abs() < 1e-5, "{sum}");
         }
+    }
+
+    #[test]
+    fn argmax_rows_is_nan_safe() {
+        let logits = vec![1.0f32, 3.0, 2.0, f32::NAN, 0.5, -1.0];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+        assert_eq!(argmax_rows(&[], 3), Vec::<usize>::new());
     }
 }

@@ -170,7 +170,9 @@ pub fn tab1(ctx: &EvalCtx) -> Result<String> {
         body.push_str(&format!(
             "\nMeasured tiny-artifact counterpart (vit_wasi_attn_eps80):\n\
              params {} elems, state {} elems, total train mem {:.2} MB\n",
-            entry.params_len, entry.state_len, mem.total_mb()
+            entry.params_len,
+            entry.state_len,
+            mem.total_mb()
         ));
     }
     body.push_str(

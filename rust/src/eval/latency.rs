@@ -257,8 +257,13 @@ fn native_vitb_comparison(ctx: &EvalCtx) -> String {
         }
         crate::util::stats::median(&ts)
     };
-    t.row(["dense".into(), "1.0".into(), "-".into(),
-           format!("{:.0}", dense_t * 1e3), "1.00x".into()]);
+    t.row([
+        "dense".into(),
+        "1.0".into(),
+        "-".into(),
+        format!("{:.0}", dense_t * 1e3),
+        "1.00x".into(),
+    ]);
 
     for eps in [0.4f64, 0.8] {
         let l = LayerDims { b, n, i, o };

@@ -3,10 +3,15 @@
 //! Times the zero-dependency demo→train→infer pipeline on both engine
 //! kinds (the HLO engine is recorded as unavailable with its reason
 //! when no backend can execute model HLO — the demo set ships no train
-//! artifact on purpose), sweeps 1 vs N kernel-layer threads, and emits
-//! the machine-readable `BENCH_native.json` that seeds the repo's perf
-//! record (EXPERIMENTS.md §Perf).  Kernels are bit-deterministic across
-//! thread counts, so the sweep measures wall-clock only.
+//! artifact on purpose), sweeps 1 vs N kernel-layer threads, measures
+//! the SIMD microkernels against the forced-scalar backend, times the
+//! {f32, bf16, i8} inference precisions (latency, weight bytes, top-1
+//! agreement with f32), and emits the machine-readable
+//! `BENCH_native.json` that feeds the repo's perf record
+//! (EXPERIMENTS.md §Perf) and the CI `bench-gate` comparison against
+//! the committed `BENCH_baseline.json`.  Kernels are bit-deterministic
+//! across thread counts AND SIMD backends, so both sweeps measure
+//! wall-clock only.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -19,6 +24,8 @@ use crate::engine::demo::{write_demo_artifacts, DemoConfig};
 use crate::engine::{
     train_engine, EngineKind, InferEngine, NativeInferEngine, NativeModelEngine, TrainEngine,
 };
+use crate::linalg::simd;
+use crate::precision::Precision;
 use crate::runtime::{Manifest, ModelEntry, Runtime};
 use crate::serve::{JobSpec, Service, ServiceConfig};
 use crate::util::json::{arr, num, obj, str as jstr, Json};
@@ -97,6 +104,96 @@ fn run_native_arm(
         infer_s,
         infer_reps,
     })
+}
+
+fn arm_json(a: &Arm) -> Json {
+    obj(vec![
+        ("threads", num(a.threads as f64)),
+        ("train_seconds", num(a.train_s)),
+        ("mean_step_ms", num(a.mean_step_ms)),
+        ("infer_seconds", num(a.infer_s)),
+        ("infer_reps", num(a.infer_reps as f64)),
+    ])
+}
+
+/// SIMD-vs-scalar arms at the auto thread count: the same
+/// train-and-infer workload with the kernel layer pinned to the scalar
+/// backend, then on the detected ISA.  Results are bit-identical (the
+/// parity pin), so this measures wall-clock only.
+fn bench_simd(entry: &ModelEntry, steps: usize, infer_reps: usize) -> Result<(Json, f64)> {
+    set_num_threads(0);
+    let auto = num_threads();
+    simd::set_force_scalar(true);
+    let scalar = run_native_arm(entry, auto, steps, infer_reps);
+    simd::set_force_scalar(false);
+    let scalar = scalar?;
+    let vector = run_native_arm(entry, auto, steps, infer_reps)?;
+    let train_speedup = scalar.train_s / vector.train_s;
+    let infer_speedup = scalar.infer_s / vector.infer_s;
+    let json = obj(vec![
+        ("isa", jstr(simd::isa_name())),
+        ("scalar", arm_json(&scalar)),
+        ("simd", arm_json(&vector)),
+        ("train_speedup", num(train_speedup)),
+        ("infer_speedup", num(infer_speedup)),
+    ]);
+    Ok((json, train_speedup))
+}
+
+/// One precision arm's measurements.
+struct PrecArm {
+    precision: Precision,
+    infer_s: f64,
+    infer_reps: usize,
+    weight_bytes: usize,
+    /// Fraction of top-1 predictions matching the f32 engine.
+    top1_agreement: f64,
+}
+
+/// Time inference at each weight-storage precision over the demo
+/// artifact and record weight bytes + top-1 agreement against f32.
+fn bench_precision(entry: &ModelEntry, infer_reps: usize) -> Result<Vec<PrecArm>> {
+    set_num_threads(0);
+    let f32_engine = NativeInferEngine::load(entry)?;
+    let params = entry.load_params()?;
+    let side = entry
+        .image_side()
+        .ok_or_else(|| anyhow::anyhow!("bench model is not an image model"))?;
+    let mut task = VisionTask::new("prec", entry.classes, side, 0.7, 8, 77);
+    let (x, _, _) = task.batch_onehot(entry.batch);
+    let f32_preds = f32_engine.predict(&params, &x)?;
+
+    let mut arms = Vec::new();
+    for precision in [Precision::F32, Precision::Bf16, Precision::I8] {
+        let (infer_s, preds, weight_bytes) = if precision == Precision::F32 {
+            f32_engine.infer(&params, &x)?; // warmup
+            let t0 = Instant::now();
+            for _ in 0..infer_reps {
+                f32_engine.infer(&params, &x)?;
+            }
+            (t0.elapsed().as_secs_f64(), f32_preds.clone(), entry.params_len * 4)
+        } else {
+            let eng = NativeInferEngine::load_quantized(entry, precision)?;
+            eng.infer_quantized(&x)?; // warmup
+            let t0 = Instant::now();
+            for _ in 0..infer_reps {
+                eng.infer_quantized(&x)?;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let logits = eng.infer_quantized(&x)?;
+            let preds = crate::engine::ops::argmax_rows(&logits, entry.classes);
+            (dt, preds, eng.packed_bytes().unwrap_or(entry.params_len * 4))
+        };
+        let agree = preds.iter().zip(&f32_preds).filter(|(a, b)| a == b).count();
+        arms.push(PrecArm {
+            precision,
+            infer_s,
+            infer_reps,
+            weight_bytes,
+            top1_agreement: agree as f64 / f32_preds.len().max(1) as f64,
+        });
+    }
+    Ok(arms)
 }
 
 /// One serve arm: J jobs through a service with W workers.
@@ -213,6 +310,35 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
     }
     let speedup = if arms.len() == 2 { arms[0].train_s / arms[1].train_s } else { 1.0 };
 
+    // 2b. SIMD vs forced-scalar at the auto thread count.
+    let (simd_json, simd_speedup) = bench_simd(&entry, steps, infer_reps)?;
+
+    // 2c. inference precisions: latency, weight bytes, f32 agreement.
+    let prec_arms = bench_precision(&entry, infer_reps)?;
+    let f32_arm = &prec_arms[0];
+    let i8_arm = prec_arms
+        .iter()
+        .find(|a| a.precision == Precision::I8)
+        .expect("precision sweep always includes i8");
+    let int8_vs_f32_speedup = f32_arm.infer_s / i8_arm.infer_s;
+    let int8_weight_compression = f32_arm.weight_bytes as f64 / i8_arm.weight_bytes as f64;
+    let precision_json = obj(vec![
+        (
+            "arms",
+            arr(prec_arms.iter().map(|a| {
+                obj(vec![
+                    ("precision", jstr(a.precision.to_string())),
+                    ("infer_seconds", num(a.infer_s)),
+                    ("infer_reps", num(a.infer_reps as f64)),
+                    ("weight_bytes", num(a.weight_bytes as f64)),
+                    ("top1_agreement", num(a.top1_agreement)),
+                ])
+            })),
+        ),
+        ("int8_vs_f32_speedup", num(int8_vs_f32_speedup)),
+        ("int8_weight_compression", num(int8_weight_compression)),
+    ]);
+
     // 3. per-node attribution at the auto thread count — ONE profiled
     //    run feeds both the rendered table and the JSON record.
     set_num_threads(0);
@@ -259,18 +385,7 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
     let native_json = obj(vec![
         ("engine", jstr("native")),
         ("available", Json::Bool(true)),
-        (
-            "arms",
-            arr(arms.iter().map(|a| {
-                obj(vec![
-                    ("threads", num(a.threads as f64)),
-                    ("train_seconds", num(a.train_s)),
-                    ("mean_step_ms", num(a.mean_step_ms)),
-                    ("infer_seconds", num(a.infer_s)),
-                    ("infer_reps", num(a.infer_reps as f64)),
-                ])
-            })),
-        ),
+        ("arms", arr(arms.iter().map(arm_json))),
         ("thread_speedup", num(speedup)),
     ]);
     let serve_json = arr(serve_arms.iter().map(|a| {
@@ -292,6 +407,8 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         ("host_auto_threads", num(auto as f64)),
         ("demo_seconds", num(demo_s)),
         ("engines", arr([native_json, hlo_json])),
+        ("simd", simd_json),
+        ("precision", precision_json),
         ("serve", serve_json),
         ("nodes", node_json),
     ]);
@@ -319,6 +436,26 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
     } else {
         body.push_str("single-core host: no thread sweep\n");
     }
+    body.push_str(&format!(
+        "simd train speedup (scalar -> {}): {simd_speedup:.2}x\n",
+        simd::isa_name()
+    ));
+    let mut pt = Table::new(["precision", "infer s", "weight MB", "top-1 vs f32"])
+        .title("inference precisions (native engine)".to_string());
+    for a in &prec_arms {
+        pt.row([
+            a.precision.to_string(),
+            format!("{:.3}", a.infer_s),
+            format!("{:.2}", a.weight_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{:.3}", a.top1_agreement),
+        ]);
+    }
+    body.push('\n');
+    body.push_str(&pt.render());
+    body.push_str(&format!(
+        "int8 vs f32: {int8_vs_f32_speedup:.2}x latency, \
+         {int8_weight_compression:.2}x weight compression\n"
+    ));
     let mut st = Table::new(["workers", "jobs", "steps/job", "jobs/s", "p50 s", "p95 s"])
         .title("serve scheduler — submit->done latency".to_string());
     for a in &serve_arms {

@@ -55,6 +55,7 @@ pub mod device;
 pub mod engine;
 pub mod eval;
 pub mod linalg;
+pub mod precision;
 pub mod runtime;
 pub mod serve;
 pub mod util;

@@ -1,10 +1,10 @@
 //! The shared GEMM kernel layer — the ONE optimization site every
-//! matmul in the crate routes through (DESIGN.md §4): `Mat`'s operator
-//! methods, the `wasi::{layer, wsi, lowrank_grad}` math, the baselines,
-//! and the engine graph executor all end up in `gemm_nn` / `gemm_nt` /
-//! `gemm_tn` below.
+//! matmul in the crate routes through (DESIGN.md §Kernels): `Mat`'s
+//! operator methods, the `wasi::{layer, wsi, lowrank_grad}` math, the
+//! baselines, and the engine graph executor all end up in `gemm_nn` /
+//! `gemm_nt` / `gemm_tn` below.
 //!
-//! Design (EXPERIMENTS.md §Perf):
+//! Design (DESIGN.md §Kernels, EXPERIMENTS.md §Perf):
 //!
 //! * **Row-sliced threading** — output rows are split into disjoint
 //!   contiguous ranges across `util::threadpool::parallel_ranges`
@@ -12,19 +12,37 @@
 //!   in ascending-k order, so results are **bit-identical for every
 //!   thread count** (pinned by `tests` below and the engine-parity
 //!   suite) — `--threads` trades wall-clock only.
-//! * **Cache blocking** — `gemm_nn`/`gemm_tn` walk k in `KC`-wide
-//!   panels so the active B panel stays cache-resident across a
-//!   thread's whole row range instead of streaming all of B once per
-//!   4-row block.
-//! * **Register blocking** — `gemm_nn` feeds each streamed B row into
-//!   FOUR output rows (4x fewer B loads, four independent FMA chains
-//!   for the auto-vectorizer); `gemm_nt` uses the 8-wide unrolled
+//! * **SIMD microkernels** — the inner loops run on the runtime-
+//!   dispatched 8-lane primitives in [`super::simd`] (AVX on x86_64,
+//!   NEON on aarch64, a scalar 8-lane fallback everywhere else).  The
+//!   primitives use multiply-then-add (never FMA) with lanes bound to
+//!   ascending element indices, so **scalar and SIMD results are
+//!   bit-identical** too (pinned by the parity tests below at shapes
+//!   with remainder lanes).
+//! * **Packed panels** — `gemm_nn`/`gemm_tn` walk k in `KC`-wide panels
+//!   and pack the active A tile into a contiguous register-blocked
+//!   layout (`apack[kk*4 + r]`), so the microkernel streams one
+//!   contiguous A stream and one contiguous B panel (`b[k0*n..k1*n]`
+//!   is already contiguous row-major — B needs no copy) instead of
+//!   striding across the source matrix per coefficient.
+//! * **Register blocking** — the packed microkernel feeds each
+//!   streamed B row into FOUR output rows (4x fewer B loads, four
+//!   independent accumulator chains); `gemm_nt` uses the 8-lane
 //!   [`dot`].
-//! * **Fused epilogues** — bias add and GELU run inside the parallel
-//!   region while the output panel is still hot ([`Epilogue`]), instead
-//!   of a second full sweep from memory after the join.
+//! * **Fused epilogues** — bias add, GELU, and the reduced-precision
+//!   dequantization run inside the parallel region while the output
+//!   panel is still hot ([`Epilogue`]), instead of a second full sweep
+//!   from memory after the join.
+//! * **Dequantizing GEMM** — [`gemm_nt_deq`] is `gemm_nt` over int8 or
+//!   bf16 weight payloads (`crate::precision`): weight rows dequantize
+//!   block-wise into a per-thread f32 panel (each element converts once
+//!   per thread, not once per output row), the dots run on the same
+//!   SIMD [`dot`] as the f32 path, and the int8 per-tensor scale folds
+//!   into the epilogue ([`Epilogue::ScaleBias`]).
 
 use crate::util::threadpool::parallel_ranges;
+
+use super::simd;
 
 /// k-panel width for cache blocking (a KC x n B-panel of f32 at the
 /// model dims this crate runs stays within L2 alongside the output
@@ -48,23 +66,34 @@ pub fn gelu_grad(x: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
 }
 
-/// Unrolled dot product (8-wide accumulators; auto-vectorizes).
+/// 8-lane dot product on the runtime-dispatched SIMD backend
+/// (bit-identical across backends; see `linalg::simd`).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 8;
-    let mut acc = [0.0f32; 8];
-    for c in 0..chunks {
-        let i = c * 8;
-        for lane in 0..8 {
-            acc[lane] += a[i + lane] * b[i + lane];
-        }
+    simd::dot(a, b)
+}
+
+/// A weight element the dequantizing GEMM can convert to f32 in its
+/// inner loop: int8 payloads (per-tensor scale applied by the
+/// epilogue) and raw bf16 bits (exact conversion).
+pub trait DequantElem: Copy + Send + Sync {
+    fn to_f32(self) -> f32;
+}
+
+impl DequantElem for i8 {
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self as f32
     }
-    let mut s = acc.iter().sum::<f32>();
-    for i in chunks * 8..a.len() {
-        s += a[i] * b[i];
+}
+
+/// bf16 bits (see `crate::precision::bf16_to_f32`).
+impl DequantElem for u16 {
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        crate::precision::bf16_to_f32(self)
     }
-    s
 }
 
 /// Epilogue fused into the GEMM's parallel region, applied per output
@@ -79,6 +108,13 @@ pub enum Epilogue<'a> {
     BiasGelu(&'a [f32]),
     /// C = gelu(A·B).
     Gelu,
+    /// C = s·(A·B) — int8 dequantization without a bias (the factored
+    /// rank-space product).
+    Scale(f32),
+    /// C = s·(A·B) + bias — the int8 dequantizing epilogue.
+    ScaleBias(f32, &'a [f32]),
+    /// C = gelu(s·(A·B) + bias) — dequantize + fc1 fusion in one pass.
+    ScaleBiasGelu(f32, &'a [f32]),
 }
 
 impl Epilogue<'_> {
@@ -101,6 +137,21 @@ impl Epilogue<'_> {
                     *o = gelu(*o);
                 }
             }
+            Epilogue::Scale(s) => {
+                for o in row.iter_mut() {
+                    *o *= s;
+                }
+            }
+            Epilogue::ScaleBias(s, bias) => {
+                for (o, &bv) in row.iter_mut().zip(bias.iter()) {
+                    *o = *o * s + bv;
+                }
+            }
+            Epilogue::ScaleBiasGelu(s, bias) => {
+                for (o, &bv) in row.iter_mut().zip(bias.iter()) {
+                    *o = gelu(*o * s + bv);
+                }
+            }
         }
     }
 }
@@ -118,62 +169,42 @@ pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
     debug_assert_eq!(out.len(), m * n);
     let out_ptr = SendPtr(out.as_mut_ptr());
     parallel_ranges(m, |lo, hi| {
-        let panel =
-            unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo * n), (hi - lo) * n) };
+        let panel = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo * n), (hi - lo) * n) };
         panel.fill(0.0);
+        // Packed A tile, reused across k-panels (4 rows x KC depths,
+        // interleaved so the microkernel reads one contiguous stream).
+        let mut apack = vec![0.0f32; 4 * KC];
         // k-panel loop OUTSIDE the row loop: the KC x n slab of B stays
         // cache-resident across this thread's whole row range.  Each
         // output element still accumulates in ascending-k order, so the
-        // result is independent of both KC and the thread partition.
+        // result is independent of KC, the thread partition, and the
+        // SIMD backend.
         let mut k0 = 0;
         while k0 < k {
             let k1 = (k0 + KC).min(k);
+            let kc = k1 - k0;
+            let bpanel = &b[k0 * n..k1 * n];
             let mut i = lo;
             while i + 4 <= hi {
-                let out4 =
-                    unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), 4 * n) };
+                // Pack row-by-row: each source row is read contiguously,
+                // the tile interleaves as apack[kk*4 + r].
+                for r in 0..4 {
+                    let a_row = &a[(i + r) * k + k0..(i + r) * k + k1];
+                    for (kk, &v) in a_row.iter().enumerate() {
+                        apack[kk * 4 + r] = v;
+                    }
+                }
+                let out4 = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), 4 * n) };
                 let (o0, rest) = out4.split_at_mut(n);
                 let (o1, rest) = rest.split_at_mut(n);
                 let (o2, o3) = rest.split_at_mut(n);
-                for kk in k0..k1 {
-                    let a0 = a[i * k + kk];
-                    let a1 = a[(i + 1) * k + kk];
-                    let a2 = a[(i + 2) * k + kk];
-                    let a3 = a[(i + 3) * k + kk];
-                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
-                        continue;
-                    }
-                    let b_row = &b[kk * n..(kk + 1) * n];
-                    // zip-fused form: no bounds checks in the hot loop
-                    for ((((bv, p0), p1), p2), p3) in b_row
-                        .iter()
-                        .zip(o0.iter_mut())
-                        .zip(o1.iter_mut())
-                        .zip(o2.iter_mut())
-                        .zip(o3.iter_mut())
-                    {
-                        *p0 += a0 * bv;
-                        *p1 += a1 * bv;
-                        *p2 += a2 * bv;
-                        *p3 += a3 * bv;
-                    }
-                }
+                simd::update4_panel(&apack[..kc * 4], bpanel, n, [o0, o1, o2, o3]);
                 i += 4;
             }
-            // remainder rows
+            // remainder rows: the A panel is already contiguous per row.
             for ii in i..hi {
-                let out_row =
-                    unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(ii * n), n) };
-                for kk in k0..k1 {
-                    let a_ik = a[ii * k + kk];
-                    if a_ik == 0.0 {
-                        continue;
-                    }
-                    let b_row = &b[kk * n..(kk + 1) * n];
-                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                        *o += a_ik * bv;
-                    }
-                }
+                let out_row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(ii * n), n) };
+                simd::update1_panel(&a[ii * k + k0..ii * k + k1], bpanel, n, out_row);
             }
             k0 = k1;
         }
@@ -204,6 +235,60 @@ pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
     });
 }
 
+/// Column-block width for the dequantizing GEMM: JB weight rows are
+/// converted to f32 once per thread and reused across the thread's
+/// whole row range, so each weight element converts `threads` times
+/// per call instead of `m` times, and the inner dot runs on the SIMD
+/// backend.
+const JB: usize = 8;
+
+/// [`gemm_nt`] against a reduced-precision B (int8 payloads or bf16
+/// bits): C (m x n) = A (m x k) · Bᵀ with B stored (n x k).  Weight
+/// rows dequantize block-wise into a per-thread f32 panel and the dot
+/// products run on the same SIMD [`dot`] as the f32 path, so results
+/// are bit-identical to `gemm_nt` over the dequantized tensor; the
+/// int8 per-tensor scale belongs in `epi` ([`Epilogue::Scale`] forms).
+/// The row partition matches `gemm_nt` exactly.
+pub fn gemm_nt_deq<E: DequantElem>(
+    a: &[f32],
+    b: &[E],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    epi: Epilogue,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_ranges(m, |lo, hi| {
+        let mut bconv = vec![0.0f32; JB * k];
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + JB).min(n);
+            for (jj, j) in (j0..j1).enumerate() {
+                let b_row = &b[j * k..(j + 1) * k];
+                for (dst, &e) in bconv[jj * k..(jj + 1) * k].iter_mut().zip(b_row) {
+                    *dst = e.to_f32();
+                }
+            }
+            for i in lo..hi {
+                let out_row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+                let a_row = &a[i * k..(i + 1) * k];
+                for (jj, j) in (j0..j1).enumerate() {
+                    out_row[j] = dot(a_row, &bconv[jj * k..(jj + 1) * k]);
+                }
+            }
+            j0 = j1;
+        }
+        for i in lo..hi {
+            let row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
+            epi.apply(row);
+        }
+    });
+}
+
 /// C (m x n) = Aᵀ · B with A stored (k x m) — no transpose materialized.
 /// Then `epi`.  Overwrites `out`.
 pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], epi: Epilogue) {
@@ -212,25 +297,39 @@ pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
     debug_assert_eq!(out.len(), m * n);
     let out_ptr = SendPtr(out.as_mut_ptr());
     parallel_ranges(m, |lo, hi| {
-        let panel =
-            unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo * n), (hi - lo) * n) };
+        let panel = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo * n), (hi - lo) * n) };
         panel.fill(0.0);
+        // A is stored (k x m): the per-row coefficient stream strides
+        // by m, so pack it — 4-row tiles interleaved for the
+        // register-blocked microkernel (the pack itself reads the
+        // contiguous 4-wide runs a[kk*m + i..i+4]), single rows
+        // contiguous per depth.
+        let mut apack = vec![0.0f32; 4 * KC];
         let mut k0 = 0;
         while k0 < k {
             let k1 = (k0 + KC).min(k);
-            for i in lo..hi {
-                let out_row =
-                    unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
-                for kk in k0..k1 {
-                    let a_ki = a[kk * m + i];
-                    if a_ki == 0.0 {
-                        continue;
-                    }
-                    let b_row = &b[kk * n..(kk + 1) * n];
-                    for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
-                        *o += a_ki * bv;
+            let kc = k1 - k0;
+            let bpanel = &b[k0 * n..k1 * n];
+            let mut i = lo;
+            while i + 4 <= hi {
+                for kk in 0..kc {
+                    for r in 0..4 {
+                        apack[kk * 4 + r] = a[(k0 + kk) * m + i + r];
                     }
                 }
+                let out4 = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), 4 * n) };
+                let (o0, rest) = out4.split_at_mut(n);
+                let (o1, rest) = rest.split_at_mut(n);
+                let (o2, o3) = rest.split_at_mut(n);
+                simd::update4_panel(&apack[..kc * 4], bpanel, n, [o0, o1, o2, o3]);
+                i += 4;
+            }
+            for ii in i..hi {
+                for kk in 0..kc {
+                    apack[kk] = a[(k0 + kk) * m + ii];
+                }
+                let out_row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(ii * n), n) };
+                simd::update1_panel(&apack[..kc], bpanel, n, out_row);
             }
             k0 = k1;
         }
@@ -244,7 +343,8 @@ pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
 /// out += A · B over raw slices (A: m x k, B: k x n, out: m x n) —
 /// the allocation-free accumulating form the f_LR Eq. 18 contraction
 /// loop needs.  Serial on purpose: its callers already sit inside a
-/// row-blocked outer loop (see `wasi::lowrank_grad`).
+/// row-blocked outer loop (see `wasi::lowrank_grad`); the row update
+/// still runs on the 8-lane SIMD primitive.
 pub fn gemm_nn_acc(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -252,15 +352,7 @@ pub fn gemm_nn_acc(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut
     for i in 0..m {
         let a_row = &a[i * k..(i + 1) * k];
         let out_row = &mut out[i * n..(i + 1) * n];
-        for (kk, &a_ik) in a_row.iter().enumerate() {
-            if a_ik == 0.0 {
-                continue;
-            }
-            let b_row = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
-                *o += a_ik * bv;
-            }
-        }
+        simd::update1_panel(a_row, b, n, out_row);
     }
 }
 
@@ -268,6 +360,8 @@ pub fn gemm_nn_acc(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut
 mod tests {
     use super::*;
     use crate::data::rng::Pcg64;
+    use crate::linalg::simd::{set_force_scalar, SIMD_TEST_LOCK};
+    use crate::precision::{f32_to_bf16, quantize_i8};
     use crate::util::threadpool::set_num_threads;
 
     fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -360,6 +454,64 @@ mod tests {
     }
 
     #[test]
+    fn simd_matches_forced_scalar_bitwise_at_odd_shapes() {
+        // The SIMD dispatch contract: multiply-then-add with lanes
+        // bound to ascending indices means the vectorized kernels must
+        // reproduce the scalar backend BIT FOR BIT, including remainder
+        // lanes (n % 8 != 0), remainder rows (m % 4 != 0), and k-panel
+        // tails (k % KC != 0).  On hosts without SIMD this degenerates
+        // to scalar-vs-scalar and still pins the packing rewrite.
+        let _simd = SIMD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Pcg64::new(9);
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 8, 9),
+            (5, 129, 17),
+            (13, 131, 33),
+            (97, 150, 65),
+        ];
+        for (m, k, n) in shapes {
+            let mut a: Vec<f32> = rng.normal_vec(m * k);
+            a[(m * k) / 2] = 0.0; // exercise the exact-zero skip
+            let b: Vec<f32> = rng.normal_vec(k * n);
+            let bt = transpose(&b, k, n);
+            let at = transpose(&a, m, k);
+            let bias: Vec<f32> = rng.normal_vec(n);
+            let mut scalar = vec![0.0f32; m * n];
+            let mut vector = vec![0.0f32; m * n];
+            let mut acc_scalar = vec![0.5f32; m * n];
+            let mut acc_vector = vec![0.5f32; m * n];
+            for (form, name) in [(0usize, "nn"), (1, "nt"), (2, "tn"), (3, "acc")] {
+                set_force_scalar(true);
+                match form {
+                    0 => gemm_nn(&a, &b, m, k, n, &mut scalar, Epilogue::BiasGelu(&bias)),
+                    1 => gemm_nt(&a, &bt, m, k, n, &mut scalar, Epilogue::Bias(&bias)),
+                    2 => gemm_tn(&at, &b, m, k, n, &mut scalar, Epilogue::None),
+                    _ => gemm_nn_acc(&a, m, k, &b, n, &mut acc_scalar),
+                }
+                set_force_scalar(false);
+                match form {
+                    0 => gemm_nn(&a, &b, m, k, n, &mut vector, Epilogue::BiasGelu(&bias)),
+                    1 => gemm_nt(&a, &bt, m, k, n, &mut vector, Epilogue::Bias(&bias)),
+                    2 => gemm_tn(&at, &b, m, k, n, &mut vector, Epilogue::None),
+                    _ => gemm_nn_acc(&a, m, k, &b, n, &mut acc_vector),
+                }
+                let (s, v) = if form == 3 {
+                    (&acc_scalar, &acc_vector)
+                } else {
+                    (&scalar, &vector)
+                };
+                assert_eq!(
+                    s.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{name} {m}x{k}x{n}: SIMD diverged from scalar"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn epilogues_fuse_bias_and_gelu() {
         let mut rng = Pcg64::new(3);
         let (m, k, n) = (9, 11, 67);
@@ -385,6 +537,69 @@ mod tests {
         for (i, x) in c.iter().enumerate() {
             let want = gelu(plain[i]);
             assert!((x - want).abs() < 1e-3, "gelu: {x} vs {want}");
+        }
+    }
+
+    #[test]
+    fn scale_epilogues_dequantize() {
+        let mut rng = Pcg64::new(8);
+        let (m, k, n) = (7, 13, 19);
+        let a: Vec<f32> = rng.normal_vec(m * k);
+        let b: Vec<f32> = rng.normal_vec(k * n);
+        let bias: Vec<f32> = rng.normal_vec(n);
+        let plain = naive(&a, &b, m, k, n);
+        let s = 0.037f32;
+
+        let mut c = vec![0.0f32; m * n];
+        gemm_nn(&a, &b, m, k, n, &mut c, Epilogue::Scale(s));
+        for (i, x) in c.iter().enumerate() {
+            assert!((x - plain[i] * s).abs() < 1e-4, "scale: {x}");
+        }
+        gemm_nn(&a, &b, m, k, n, &mut c, Epilogue::ScaleBias(s, &bias));
+        for (i, x) in c.iter().enumerate() {
+            let want = plain[i] * s + bias[i % n];
+            assert!((x - want).abs() < 1e-4, "scale+bias: {x} vs {want}");
+        }
+        gemm_nn(&a, &b, m, k, n, &mut c, Epilogue::ScaleBiasGelu(s, &bias));
+        for (i, x) in c.iter().enumerate() {
+            let want = gelu(plain[i] * s + bias[i % n]);
+            assert!((x - want).abs() < 1e-4, "scale+bias+gelu: {x} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dequantizing_gemm_matches_dequantized_f32_gemm() {
+        let mut rng = Pcg64::new(10);
+        let (m, k, n) = (6, 37, 11); // odd k: remainder lanes in the dot
+        let a: Vec<f32> = rng.normal_vec(m * k);
+        let w: Vec<f32> = rng.normal_vec(n * k); // (n, k) for the nt form
+        let bias: Vec<f32> = rng.normal_vec(n);
+
+        // bf16: gemm_nt_deq over raw bits must be BIT-identical to
+        // gemm_nt over the rounded f32 tensor (same operation order).
+        let wq16: Vec<u16> = w.iter().map(|&v| f32_to_bf16(v)).collect();
+        let wr: Vec<f32> = wq16.iter().map(|&b| crate::precision::bf16_to_f32(b)).collect();
+        let mut c16 = vec![0.0f32; m * n];
+        let mut cref = vec![0.0f32; m * n];
+        gemm_nt_deq(&a, &wq16, m, k, n, &mut c16, Epilogue::Bias(&bias));
+        gemm_nt(&a, &wr, m, k, n, &mut cref, Epilogue::Bias(&bias));
+        assert_eq!(
+            c16.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            cref.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "bf16 dequantizing GEMM must match the rounded-f32 GEMM bitwise"
+        );
+
+        // i8: raw accumulation x·qᵀ scaled in the epilogue must match
+        // the explicitly dequantized f32 GEMM closely (same math, the
+        // scale applied per-element vs per-sum differs only in
+        // rounding).
+        let (q, scale) = quantize_i8(&w);
+        let wdeq: Vec<f32> = q.iter().map(|&v| v as f32 * scale).collect();
+        let mut c8 = vec![0.0f32; m * n];
+        gemm_nt_deq(&a, &q, m, k, n, &mut c8, Epilogue::ScaleBias(scale, &bias));
+        gemm_nt(&a, &wdeq, m, k, n, &mut cref, Epilogue::Bias(&bias));
+        for (x, y) in c8.iter().zip(&cref) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "i8: {x} vs {y}");
         }
     }
 

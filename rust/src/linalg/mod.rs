@@ -11,6 +11,7 @@ pub mod cholesky;
 pub mod kernels;
 pub mod matrix;
 pub mod qr;
+pub mod simd;
 pub mod subspace;
 pub mod svd;
 pub mod tucker;

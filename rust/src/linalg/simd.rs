@@ -1,0 +1,534 @@
+//! Portable 8-lane f32 SIMD primitives for the kernel layer
+//! (DESIGN.md §Kernels).
+//!
+//! Three ISA backends sit behind one generic microkernel body:
+//!
+//! * **avx** (`x86_64`, runtime-detected via `is_x86_feature_detected!`),
+//! * **neon** (`aarch64`, baseline feature — always available),
+//! * **scalar** (`[f32; 8]` lanes, any target; also what
+//!   [`set_force_scalar`] pins for the scalar-vs-SIMD parity tests and
+//!   the `wasi-train bench` scalar arm).
+//!
+//! **Determinism contract:** every backend performs the *same* sequence
+//! of IEEE-754 single operations per output element — multiply then add
+//! (never FMA), lanes mapped to ascending element indices, horizontal
+//! sums reduced lane 0 → 7 — so scalar and SIMD results are
+//! **bit-identical**, and the kernel layer's bit-identical-across-
+//! thread-counts pin extends unchanged to the vectorized path.  SIMD
+//! here buys load/store and issue width, not reassociation.
+//!
+//! The primitives operate on the kernel layer's packed panels
+//! (`linalg::kernels`): `update4_panel` is the 4-row register-blocked
+//! microkernel over an interleaved packed A tile, `update1_panel` the
+//! single-row remainder form, `dot` the 8-accumulator dot product.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Force the scalar backend regardless of what the host supports
+/// (parity tests, the bench's scalar arm).  Process-global, like the
+/// kernel layer's thread override.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Serializes tests that toggle the process-global [`FORCE_SCALAR`]
+/// flag (results are backend-independent by construction, but a parity
+/// test must control which backend it is timing/comparing).
+#[cfg(test)]
+pub(crate) static SIMD_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Pin the scalar backend on (`true`) or restore runtime dispatch
+/// (`false`).  Results are bit-identical either way; this knob exists
+/// so parity tests and `wasi-train bench` can measure the difference.
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Whether the scalar backend is currently forced.
+pub fn force_scalar() -> bool {
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// The instruction set the dispatcher currently selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Isa {
+    if is_x86_feature_detected!("avx") {
+        Isa::Avx
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> Isa {
+    // NEON is part of the aarch64 baseline.
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> Isa {
+    Isa::Scalar
+}
+
+fn detected_isa() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+/// The backend the next kernel call will use (detection result unless
+/// the scalar backend is forced).
+pub fn active_isa() -> Isa {
+    if force_scalar() {
+        Isa::Scalar
+    } else {
+        detected_isa()
+    }
+}
+
+/// Short name of [`active_isa`] for logs and the bench record.
+pub fn isa_name() -> &'static str {
+    match active_isa() {
+        Isa::Scalar => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx => "avx",
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => "neon",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The generic 8-lane vocabulary
+// ---------------------------------------------------------------------------
+
+/// Eight f32 lanes.  Implementations must keep lane `l` bound to
+/// element index `base + l` through load/op/store so every backend
+/// computes the identical IEEE operation sequence (see module docs).
+trait F32x8: Copy {
+    type V: Copy;
+    /// # Safety
+    /// `p..p+8` must be readable.
+    unsafe fn load(p: *const f32) -> Self::V;
+    /// # Safety
+    /// `p..p+8` must be writable.
+    unsafe fn store(p: *mut f32, v: Self::V);
+    unsafe fn splat(v: f32) -> Self::V;
+    /// Lane-wise `a * b` (a plain multiply — never fused with the
+    /// following add, to preserve scalar bit-identity).
+    unsafe fn mul(a: Self::V, b: Self::V) -> Self::V;
+    unsafe fn add(a: Self::V, b: Self::V) -> Self::V;
+}
+
+#[derive(Clone, Copy)]
+struct ScalarIsa;
+
+impl F32x8 for ScalarIsa {
+    type V = [f32; 8];
+
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> [f32; 8] {
+        let mut v = [0.0f32; 8];
+        for (l, slot) in v.iter_mut().enumerate() {
+            *slot = *p.add(l);
+        }
+        v
+    }
+
+    #[inline(always)]
+    unsafe fn store(p: *mut f32, v: [f32; 8]) {
+        for (l, x) in v.iter().enumerate() {
+            *p.add(l) = *x;
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn splat(v: f32) -> [f32; 8] {
+        [v; 8]
+    }
+
+    #[inline(always)]
+    unsafe fn mul(a: [f32; 8], b: [f32; 8]) -> [f32; 8] {
+        let mut o = [0.0f32; 8];
+        for l in 0..8 {
+            o[l] = a[l] * b[l];
+        }
+        o
+    }
+
+    #[inline(always)]
+    unsafe fn add(a: [f32; 8], b: [f32; 8]) -> [f32; 8] {
+        let mut o = [0.0f32; 8];
+        for l in 0..8 {
+            o[l] = a[l] + b[l];
+        }
+        o
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx {
+    use std::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+    };
+
+    use super::F32x8;
+
+    #[derive(Clone, Copy)]
+    pub(super) struct AvxIsa;
+
+    impl F32x8 for AvxIsa {
+        type V = __m256;
+
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> __m256 {
+            _mm256_loadu_ps(p)
+        }
+
+        #[inline(always)]
+        unsafe fn store(p: *mut f32, v: __m256) {
+            _mm256_storeu_ps(p, v)
+        }
+
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> __m256 {
+            _mm256_set1_ps(v)
+        }
+
+        #[inline(always)]
+        unsafe fn mul(a: __m256, b: __m256) -> __m256 {
+            _mm256_mul_ps(a, b)
+        }
+
+        #[inline(always)]
+        unsafe fn add(a: __m256, b: __m256) -> __m256 {
+            _mm256_add_ps(a, b)
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        super::dot_impl::<AvxIsa>(a, b)
+    }
+
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn update1_panel(apanel: &[f32], bpanel: &[f32], n: usize, out: &mut [f32]) {
+        super::update1_panel_impl::<AvxIsa>(apanel, bpanel, n, out)
+    }
+
+    #[target_feature(enable = "avx")]
+    pub(super) unsafe fn update4_panel(
+        apack: &[f32],
+        bpanel: &[f32],
+        n: usize,
+        outs: [&mut [f32]; 4],
+    ) {
+        super::update4_panel_impl::<AvxIsa>(apack, bpanel, n, outs)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::{
+        float32x4_t, vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32,
+    };
+
+    use super::F32x8;
+
+    #[derive(Clone, Copy)]
+    pub(super) struct NeonIsa;
+
+    /// Two q-registers = 8 lanes; `.0` holds elements `base..base+4`,
+    /// `.1` holds `base+4..base+8`, matching the scalar lane order.
+    #[derive(Clone, Copy)]
+    pub(super) struct V8(float32x4_t, float32x4_t);
+
+    impl F32x8 for NeonIsa {
+        type V = V8;
+
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> V8 {
+            V8(vld1q_f32(p), vld1q_f32(p.add(4)))
+        }
+
+        #[inline(always)]
+        unsafe fn store(p: *mut f32, v: V8) {
+            vst1q_f32(p, v.0);
+            vst1q_f32(p.add(4), v.1);
+        }
+
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> V8 {
+            V8(vdupq_n_f32(v), vdupq_n_f32(v))
+        }
+
+        #[inline(always)]
+        unsafe fn mul(a: V8, b: V8) -> V8 {
+            V8(vmulq_f32(a.0, b.0), vmulq_f32(a.1, b.1))
+        }
+
+        #[inline(always)]
+        unsafe fn add(a: V8, b: V8) -> V8 {
+            V8(vaddq_f32(a.0, b.0), vaddq_f32(a.1, b.1))
+        }
+    }
+
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        super::dot_impl::<NeonIsa>(a, b)
+    }
+
+    pub(super) unsafe fn update1_panel(apanel: &[f32], bpanel: &[f32], n: usize, out: &mut [f32]) {
+        super::update1_panel_impl::<NeonIsa>(apanel, bpanel, n, out)
+    }
+
+    pub(super) unsafe fn update4_panel(
+        apack: &[f32],
+        bpanel: &[f32],
+        n: usize,
+        outs: [&mut [f32]; 4],
+    ) {
+        super::update4_panel_impl::<NeonIsa>(apack, bpanel, n, outs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generic microkernel bodies (monomorphized per backend)
+// ---------------------------------------------------------------------------
+
+/// 8-accumulator dot product: lane `l` accumulates elements `8c + l`,
+/// lanes reduce in ascending order, the tail is scalar — the exact
+/// operation sequence of the historical scalar `dot`, so every backend
+/// is bit-identical.
+#[inline(always)]
+unsafe fn dot_impl<S: F32x8>(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut lanes = [0.0f32; 8];
+    if chunks > 0 {
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = S::splat(0.0);
+        for c in 0..chunks {
+            let va = S::load(pa.add(c * 8));
+            let vb = S::load(pb.add(c * 8));
+            acc = S::add(acc, S::mul(va, vb));
+        }
+        S::store(lanes.as_mut_ptr(), acc);
+    }
+    let mut s = 0.0f32;
+    for lane in lanes {
+        s += lane;
+    }
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// One packed-panel row update: `out[j] += apanel[kk] * bpanel[kk*n+j]`
+/// for every `kk`, ascending, with the kernel layer's exact-zero skip.
+/// `apanel` is the row's contiguous A panel (length = panel depth),
+/// `bpanel` the matching contiguous B panel rows.
+#[inline(always)]
+unsafe fn update1_panel_impl<S: F32x8>(apanel: &[f32], bpanel: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(bpanel.len(), apanel.len() * n);
+    debug_assert_eq!(out.len(), n);
+    let chunks = n / 8;
+    let po = out.as_mut_ptr();
+    for (kk, &a) in apanel.iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        let b = &bpanel[kk * n..(kk + 1) * n];
+        let pb = b.as_ptr();
+        let va = S::splat(a);
+        for c in 0..chunks {
+            let off = c * 8;
+            let vb = S::load(pb.add(off));
+            let vo = S::add(S::load(po.add(off)), S::mul(va, vb));
+            S::store(po.add(off), vo);
+        }
+        for j in chunks * 8..n {
+            *po.add(j) += a * b[j];
+        }
+    }
+}
+
+/// The 4-row register-blocked microkernel: `apack` is the interleaved
+/// packed A tile (`apack[kk*4 + r]` = row `r`'s coefficient at panel
+/// depth `kk`), `bpanel` the contiguous B panel, `outs` the four output
+/// rows.  Four independent accumulator chains per B load.
+#[inline(always)]
+unsafe fn update4_panel_impl<S: F32x8>(
+    apack: &[f32],
+    bpanel: &[f32],
+    n: usize,
+    mut outs: [&mut [f32]; 4],
+) {
+    let kc = apack.len() / 4;
+    debug_assert_eq!(bpanel.len(), kc * n);
+    let chunks = n / 8;
+    let p0 = outs[0].as_mut_ptr();
+    let p1 = outs[1].as_mut_ptr();
+    let p2 = outs[2].as_mut_ptr();
+    let p3 = outs[3].as_mut_ptr();
+    for kk in 0..kc {
+        let a0 = apack[kk * 4];
+        let a1 = apack[kk * 4 + 1];
+        let a2 = apack[kk * 4 + 2];
+        let a3 = apack[kk * 4 + 3];
+        if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+            continue;
+        }
+        let b = &bpanel[kk * n..(kk + 1) * n];
+        let pb = b.as_ptr();
+        let (va0, va1, va2, va3) = (S::splat(a0), S::splat(a1), S::splat(a2), S::splat(a3));
+        for c in 0..chunks {
+            let off = c * 8;
+            let vb = S::load(pb.add(off));
+            S::store(p0.add(off), S::add(S::load(p0.add(off)), S::mul(va0, vb)));
+            S::store(p1.add(off), S::add(S::load(p1.add(off)), S::mul(va1, vb)));
+            S::store(p2.add(off), S::add(S::load(p2.add(off)), S::mul(va2, vb)));
+            S::store(p3.add(off), S::add(S::load(p3.add(off)), S::mul(va3, vb)));
+        }
+        for j in chunks * 8..n {
+            let bv = b[j];
+            *p0.add(j) += a0 * bv;
+            *p1.add(j) += a1 * bv;
+            *p2.add(j) += a2 * bv;
+            *p3.add(j) += a3 * bv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched entry points
+// ---------------------------------------------------------------------------
+
+/// Unrolled 8-lane dot product, dispatched to the active backend.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    match active_isa() {
+        Isa::Scalar => unsafe { dot_impl::<ScalarIsa>(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx => unsafe { avx::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot(a, b) },
+    }
+}
+
+/// Single-row packed-panel update, dispatched to the active backend:
+/// `out[j] += apanel[kk] * bpanel[kk*n + j]` for every `kk` ascending,
+/// with the kernel layer's exact-zero skip.
+#[inline]
+pub fn update1_panel(apanel: &[f32], bpanel: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(bpanel.len(), apanel.len() * n);
+    assert_eq!(out.len(), n);
+    match active_isa() {
+        Isa::Scalar => unsafe { update1_panel_impl::<ScalarIsa>(apanel, bpanel, n, out) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx => unsafe { avx::update1_panel(apanel, bpanel, n, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::update1_panel(apanel, bpanel, n, out) },
+    }
+}
+
+/// 4-row register-blocked microkernel over an interleaved packed A
+/// tile (`apack[kk*4 + r]`), dispatched to the active backend.
+#[inline]
+pub fn update4_panel(apack: &[f32], bpanel: &[f32], n: usize, outs: [&mut [f32]; 4]) {
+    assert_eq!(apack.len() % 4, 0);
+    assert_eq!(bpanel.len(), (apack.len() / 4) * n);
+    match active_isa() {
+        Isa::Scalar => unsafe { update4_panel_impl::<ScalarIsa>(apack, bpanel, n, outs) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx => unsafe { avx::update4_panel(apack, bpanel, n, outs) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::update4_panel(apack, bpanel, n, outs) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+
+    fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
+        unsafe { dot_impl::<ScalarIsa>(a, b) }
+    }
+
+    #[test]
+    fn dispatched_dot_is_bitwise_scalar() {
+        let _guard = SIMD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Pcg64::new(11);
+        for len in [0usize, 1, 7, 8, 9, 16, 63, 64, 65, 1000] {
+            let a: Vec<f32> = rng.normal_vec(len);
+            let b: Vec<f32> = rng.normal_vec(len);
+            let want = scalar_dot(&a, &b);
+            set_force_scalar(false);
+            let got = dot(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "len {len}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn panel_updates_match_scalar_bitwise() {
+        let _guard = SIMD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Pcg64::new(12);
+        for (kc, n) in [(1usize, 1usize), (3, 7), (5, 8), (4, 33), (16, 70)] {
+            let mut apanel: Vec<f32> = rng.normal_vec(kc);
+            apanel[kc / 2] = 0.0; // exercise the exact-zero skip
+            let bpanel: Vec<f32> = rng.normal_vec(kc * n);
+            let mut want: Vec<f32> = rng.normal_vec(n);
+            let mut got = want.clone();
+            unsafe { update1_panel_impl::<ScalarIsa>(&apanel, &bpanel, n, &mut want) };
+            set_force_scalar(false);
+            update1_panel(&apanel, &bpanel, n, &mut got);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "update1 kc={kc} n={n}"
+            );
+
+            let mut apack: Vec<f32> = rng.normal_vec(kc * 4);
+            apack[0] = 0.0;
+            let mut want4: Vec<f32> = rng.normal_vec(4 * n);
+            let mut got4 = want4.clone();
+            {
+                let (w0, rest) = want4.split_at_mut(n);
+                let (w1, rest) = rest.split_at_mut(n);
+                let (w2, w3) = rest.split_at_mut(n);
+                unsafe { update4_panel_impl::<ScalarIsa>(&apack, &bpanel, n, [w0, w1, w2, w3]) };
+            }
+            {
+                let (g0, rest) = got4.split_at_mut(n);
+                let (g1, rest) = rest.split_at_mut(n);
+                let (g2, g3) = rest.split_at_mut(n);
+                update4_panel(&apack, &bpanel, n, [g0, g1, g2, g3]);
+            }
+            assert_eq!(
+                got4.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want4.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "update4 kc={kc} n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn force_scalar_pins_the_scalar_backend() {
+        let _guard = SIMD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_force_scalar(true);
+        assert_eq!(active_isa(), Isa::Scalar);
+        assert_eq!(isa_name(), "scalar");
+        set_force_scalar(false);
+        // Detection is cached; whatever it picked, the name matches.
+        let name = isa_name();
+        assert!(["scalar", "avx", "neon"].contains(&name), "{name}");
+    }
+}

@@ -22,6 +22,7 @@ use anyhow::{anyhow, Result};
 use wasi_train::coordinator::{progress_line, FinetuneConfig, Session};
 use wasi_train::engine::EngineKind;
 use wasi_train::eval::{self, EvalCtx};
+use wasi_train::precision::Precision;
 use wasi_train::serve::{
     serve_lines, InferRequest, JobEvent, JobSpec, JobState, Service, ServiceConfig,
 };
@@ -45,6 +46,9 @@ fn usage() -> String {
         "                    HLO and falls back to the native engine otherwise)",
         "  --threads N       kernel-layer worker threads (default: auto = all",
         "                    cores; results are bit-identical across counts)",
+        "  --precision P     weight storage: f32|bf16|i8 (default f32; bf16",
+        "                    trains + serves at 2 bytes/weight, i8 is",
+        "                    inference-only per-tensor symmetric quantization)",
         "unknown --options are rejected per subcommand; the accepted sets are:",
         "train:      --model NAME --dataset PRESET --steps N --samples N --seed S",
         "            --lr LR0 (cosine schedule start, default 0.05)",
@@ -78,12 +82,17 @@ fn engine_kind(args: &Args) -> Result<EngineKind> {
     args.get_or("engine", "auto").parse()
 }
 
+fn precision_of(args: &Args) -> Result<Precision> {
+    args.get_or("precision", "f32").parse()
+}
+
 /// Per-subcommand accepted option/flag sets (satellite: unknown
 /// `--options` are rejected instead of silently ignored).  The usage
-/// screen's "common options" (`--artifacts`, `--engine`, `--threads`)
-/// are accepted by every subcommand — `--threads` applies process-wide
-/// before dispatch, the other two simply don't bind where a subcommand
-/// has no use for them — so help text and rejection never contradict.
+/// screen's "common options" (`--artifacts`, `--engine`, `--threads`,
+/// `--precision`) are accepted by every subcommand — `--threads`
+/// applies process-wide before dispatch, the others simply don't bind
+/// where a subcommand has no use for them — so help text and rejection
+/// never contradict.
 fn check_known_options(sub: &str, args: &Args) -> Result<()> {
     let (specific, flags): (&[&str], &[&str]) = match sub {
         "train" => (
@@ -103,7 +112,7 @@ fn check_known_options(sub: &str, args: &Args) -> Result<()> {
         // Unknown subcommands fall through to the usage screen.
         _ => return Ok(()),
     };
-    let mut options: Vec<&str> = vec!["artifacts", "engine", "threads"];
+    let mut options: Vec<&str> = vec!["artifacts", "engine", "threads", "precision"];
     options.extend_from_slice(specific);
     args.reject_unknown(sub, &options, flags)
 }
@@ -134,13 +143,20 @@ fn run() -> Result<()> {
         Some("eval") => cmd_eval(&args, &artifacts),
         Some("cost-model") => {
             let pts = wasi_train::costmodel::curves::fig2_sweep(
-                128, 197, &[256, 512, 1024, 2048], &[16, 64, 256]);
+                128,
+                197,
+                &[256, 512, 1024, 2048],
+                &[16, 64, 256],
+            );
             let mut t = Table::new(["dim", "rank", "C_tr", "S_tr", "C_inf", "S_inf"]);
             for p in pts {
                 t.row([
-                    p.dim.to_string(), p.rank.to_string(),
-                    format!("{:.2}", p.c_training), format!("{:.2}", p.s_training),
-                    format!("{:.2}", p.c_inference), format!("{:.2}", p.s_inference),
+                    p.dim.to_string(),
+                    p.rank.to_string(),
+                    format!("{:.2}", p.c_training),
+                    format!("{:.2}", p.s_training),
+                    format!("{:.2}", p.c_inference),
+                    format!("{:.2}", p.s_inference),
                 ]);
             }
             t.print();
@@ -150,7 +166,8 @@ fn run() -> Result<()> {
             let prof = wasi_train::device::calibrate::host_profile();
             println!(
                 "host: {:.1} GFLOP/s sustained matmul, {:.1} GB/s stream bandwidth",
-                prof.gflops, prof.mem_gbps
+                prof.gflops,
+                prof.mem_gbps
             );
             Ok(())
         }
@@ -183,6 +200,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     // Validate flag values before touching the manifest so a typo'd
     // --engine fails with its own message.
     let engine = engine_kind(args)?;
+    let precision = precision_of(args)?;
     let cfg = FinetuneConfig::builder()
         .model(args.get_or("model", "vit_wasi_eps80"))
         .dataset(args.get_or("dataset", "cifar10-like"))
@@ -191,6 +209,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         .seed(args.usize_or("seed", 233)? as u64)
         .lr0(args.f64_or("lr", 0.05)? as f32)
         .engine(engine)
+        .precision(precision)
         // Progress is printed from the event stream below; --threads is
         // already applied process-wide in `run`.
         .build();
@@ -229,13 +248,16 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     service.shutdown();
 
     println!(
-        "\nmodel {}  dataset {}  engine {}",
-        report.model, report.dataset, report.engine
+        "\nmodel {}  dataset {}  engine {}  precision {}",
+        report.model,
+        report.dataset,
+        report.engine,
+        report.precision
     );
     println!("val accuracy     {:.3}", report.val_accuracy);
     println!("final loss (ema) {:.4}", report.final_loss);
     println!("mean step        {:.1} ms", report.mean_step_seconds * 1e3);
-    println!("train memory     {:.2} MB", report.memory.total_mb());
+    println!("train memory     {:.2} MB", report.memory.total_mb_at(report.precision));
     if let Some(out) = args.get("save-checkpoint") {
         println!("checkpoint -> {out}");
     }
@@ -278,6 +300,7 @@ fn cmd_infer(args: &Args, artifacts: &str) -> Result<()> {
     let req = InferRequest {
         model: args.get_or("model", "vit_wasi_eps80").to_string(),
         engine,
+        precision: precision_of(args)?,
         seed: args.usize_or("seed", 233)? as u64,
         x: None,
     };
@@ -286,8 +309,9 @@ fn cmd_infer(args: &Args, artifacts: &str) -> Result<()> {
     // `run_infer` path the serve protocol's `infer` command uses.
     let out = wasi_train::serve::runner::run_infer(session.pool_entry(), &req, None)?;
     println!(
-        "batch accuracy (pre-finetune, {} engine): {}/{}",
+        "batch accuracy (pre-finetune, {} engine, {} weights): {}/{}",
         out.backend,
+        out.precision,
         out.correct.unwrap_or(0),
         out.batch
     );
@@ -342,8 +366,10 @@ fn cmd_plan_ranks(args: &Args, artifacts: &str) -> Result<()> {
     Ok(())
 }
 
-fn print_plan(table: &wasi_train::wasi::rank_select::PerplexityTable,
-              plan: &wasi_train::wasi::rank_select::RankPlan) {
+fn print_plan(
+    table: &wasi_train::wasi::rank_select::PerplexityTable,
+    plan: &wasi_train::wasi::rank_select::RankPlan,
+) {
     let mut t = Table::new(["layer", "eps", "ranks", "mem elems", "perplexity"]);
     for (l, &j) in plan.choice.iter().enumerate() {
         t.row([

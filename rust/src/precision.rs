@@ -1,0 +1,216 @@
+//! The precision subsystem (DESIGN.md §Precision): numeric storage
+//! formats for weights, selected per run via `--precision` /
+//! [`crate::coordinator::FinetuneConfig`].
+//!
+//! Three formats exist.  **f32** is the reference everything else is
+//! measured against.  **bf16** truncates weight storage to bfloat16
+//! (8-bit exponent, 7-bit mantissa — f32's dynamic range at half the
+//! bytes); training keeps f32 compute but rounds the stored parameter
+//! vector to bf16 values after every optimizer step, so the trajectory
+//! is exactly what a 2-byte weight store would produce.  **i8** is
+//! per-tensor symmetric int8 quantization for inference only: each 2-D
+//! GEMM weight tensor stores `round(w / s)` with one scale
+//! `s = max|w| / 127`, and the kernel layer dequantizes in the GEMM
+//! epilogue (`linalg::kernels::Epilogue::ScaleBias`).
+//!
+//! Legality matrix (enforced by `engine::train_engine_with` and
+//! `serve::pool`): training {f32, bf16}; inference {f32, bf16, i8};
+//! the HLO engine is f32-only — reduced precision requires the native
+//! engine, whose flat vectors this module rewrites.
+
+use std::str::FromStr;
+
+use anyhow::{anyhow, Result};
+
+/// Weight storage format for one run (CLI `--precision f32|bf16|i8`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Precision {
+    /// IEEE single precision — the reference format.
+    #[default]
+    F32,
+    /// bfloat16 weight storage, f32 compute (training + inference).
+    Bf16,
+    /// Per-tensor symmetric int8 weights (inference only).
+    I8,
+}
+
+impl Precision {
+    /// Bytes one stored weight element occupies in this format.
+    pub fn bytes_per_elem(self) -> f64 {
+        match self {
+            Precision::F32 => 4.0,
+            Precision::Bf16 => 2.0,
+            Precision::I8 => 1.0,
+        }
+    }
+
+    /// Whether the native train engine can store weights in this
+    /// format (int8 is inference-only: SGD updates underflow a 1-byte
+    /// grid long before the paper's LR schedule ends).
+    pub fn trainable(self) -> bool {
+        !matches!(self, Precision::I8)
+    }
+}
+
+impl FromStr for Precision {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "bf16" => Ok(Precision::Bf16),
+            "i8" | "int8" => Ok(Precision::I8),
+            other => Err(anyhow!("unknown precision {other:?}; expected f32, bf16, or i8")),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::I8 => "i8",
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bfloat16
+// ---------------------------------------------------------------------------
+
+/// f32 → bf16 bits with round-to-nearest-even (the hardware rounding
+/// mode); NaN is canonicalized so it stays NaN after truncation.
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        // Keep the sign, force a quiet-NaN mantissa bit that survives
+        // the truncation.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// bf16 bits → the exactly-representable f32.
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round every element to its nearest bf16 value, in place (bf16
+/// weight storage for the native train engine: values live in the f32
+/// vector but are exactly representable in 2 bytes).
+pub fn round_bf16_inplace(data: &mut [f32]) {
+    for v in data.iter_mut() {
+        *v = bf16_to_f32(f32_to_bf16(*v));
+    }
+}
+
+/// Pack a slice to bf16 bits (compact inference weight storage).
+pub fn pack_bf16(data: &[f32]) -> Vec<u16> {
+    data.iter().map(|&v| f32_to_bf16(v)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// int8 per-tensor symmetric quantization
+// ---------------------------------------------------------------------------
+
+/// Per-tensor symmetric int8 quantization: `q = round(v / scale)`
+/// clamped to `[-127, 127]`, `scale = max|v| / 127` (1.0 for an
+/// all-zero tensor so dequantization stays exact).  Round-trip error is
+/// bounded by `scale / 2` per element.
+pub fn quantize_i8(data: &[f32]) -> (Vec<i8>, f32) {
+    let maxabs = data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    let q = data
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (q, scale)
+}
+
+/// Dequantize int8 values back to f32 (`q * scale`).
+pub fn dequantize_i8(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg64;
+
+    #[test]
+    fn precision_parses_and_prints() {
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert_eq!("bf16".parse::<Precision>().unwrap(), Precision::Bf16);
+        assert_eq!("i8".parse::<Precision>().unwrap(), Precision::I8);
+        assert_eq!("int8".parse::<Precision>().unwrap(), Precision::I8);
+        assert!("fp64".parse::<Precision>().is_err());
+        for p in [Precision::F32, Precision::Bf16, Precision::I8] {
+            assert_eq!(p.to_string().parse::<Precision>().unwrap(), p);
+        }
+        assert!(Precision::Bf16.trainable());
+        assert!(!Precision::I8.trainable());
+    }
+
+    #[test]
+    fn bf16_round_trip_is_within_relative_bound() {
+        // 8 mantissa bits (7 stored + implicit) => relative error of
+        // round-to-nearest is at most 2^-8 for normal values.
+        let mut rng = Pcg64::new(5);
+        let data: Vec<f32> = rng.normal_vec(4096);
+        for &v in &data {
+            let r = bf16_to_f32(f32_to_bf16(v));
+            assert!(
+                (r - v).abs() <= v.abs() / 256.0 + 1e-30,
+                "{v} -> {r} exceeds the bf16 rounding bound"
+            );
+        }
+    }
+
+    #[test]
+    fn bf16_exact_values_round_trip_exactly() {
+        for v in [0.0f32, -0.0, 1.0, -2.0, 0.5, 1.5, 256.0, f32::INFINITY] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)).to_bits(), v.to_bits(), "{v}");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // Round-to-nearest-even: 1 + 2^-8 is exactly between two bf16
+        // values and must round to the even mantissa (1.0).
+        let tie = 1.0f32 + 1.0 / 256.0;
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie)), 1.0);
+        // Idempotence: a rounded value is a fixed point.
+        let mut data: Vec<f32> = Pcg64::new(6).normal_vec(128);
+        round_bf16_inplace(&mut data);
+        let again: Vec<f32> = {
+            let mut d = data.clone();
+            round_bf16_inplace(&mut d);
+            d
+        };
+        assert_eq!(data, again);
+    }
+
+    #[test]
+    fn i8_round_trip_is_within_half_scale() {
+        let mut rng = Pcg64::new(7);
+        let data: Vec<f32> = rng.normal_vec(2048);
+        let (q, scale) = quantize_i8(&data);
+        let deq = dequantize_i8(&q, scale);
+        let maxabs = data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!((scale - maxabs / 127.0).abs() < 1e-12);
+        for (v, d) in data.iter().zip(&deq) {
+            assert!(
+                (v - d).abs() <= scale * 0.5 + 1e-6,
+                "{v} -> {d} exceeds scale/2 = {}",
+                scale * 0.5
+            );
+        }
+    }
+
+    #[test]
+    fn i8_zero_tensor_quantizes_exactly() {
+        let (q, scale) = quantize_i8(&[0.0; 16]);
+        assert_eq!(scale, 1.0);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(dequantize_i8(&q, scale), vec![0.0f32; 16]);
+    }
+}

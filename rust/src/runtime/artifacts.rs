@@ -245,10 +245,12 @@ impl Manifest {
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
-        self.models
-            .get(name)
-            .ok_or_else(|| anyhow!("model {name:?} not in manifest; available: {:?}",
-                                   self.models.keys().collect::<Vec<_>>()))
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not in manifest; available: {:?}",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
     }
 
     /// WASI ViT variants sorted by ε (the sweep most evals iterate).

@@ -188,11 +188,13 @@ fn run_lowrank(inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
         (true, true) => bail!(
             "lowrank kernel: factor shapes {:?} and {:?} are ambiguous (square); \
              cannot identify (l, r) by shape",
-            a.1, b.1
+            a.1,
+            b.1
         ),
         (false, false) => bail!(
             "lowrank kernel: cannot identify (l, r) from shapes {:?} and {:?} with I={i_dim}",
-            a.1, b.1
+            a.1,
+            b.1
         ),
     };
     let r = as_matrix(r_in.0, r_in.1)?;

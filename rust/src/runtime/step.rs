@@ -45,7 +45,9 @@ impl<'rt> TrainStep<'rt> {
         if x.len() != b * self.entry.input_dim {
             return Err(anyhow!(
                 "x length {} != batch {} * input_dim {}",
-                x.len(), b, self.entry.input_dim
+                x.len(),
+                b,
+                self.entry.input_dim
             ));
         }
         if y_onehot.len() != b * self.entry.classes {

@@ -12,10 +12,14 @@
 //!   pieces — runtime caches, manifest — are behind the entry);
 //! * **infer engines are shared** — inference is stateless between
 //!   calls (`infer(&self, params, x)`), so the pool caches one native
-//!   engine per variant and every request borrows it concurrently.
-//!   HLO inference engines borrow the runtime (their executables live
-//!   in its cache), so they are constructed per call instead — the
-//!   compile cache makes that a map lookup.
+//!   engine per (variant, precision) and every request borrows it
+//!   concurrently.  Reduced-precision entries **quantize on load**
+//!   (DESIGN.md §Precision): the packed bf16/int8 weight set is built
+//!   once when the cache entry is created, so every subsequent request
+//!   serves from the compact representation.  HLO inference engines
+//!   borrow the runtime (their executables live in its cache), so they
+//!   are constructed per call instead — the compile cache makes that a
+//!   map lookup.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -24,6 +28,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, Result};
 
 use crate::engine::{self, EngineKind, InferEngine, NativeInferEngine, TrainEngine};
+use crate::precision::Precision;
 use crate::runtime::{Manifest, Runtime};
 
 /// One loaded artifact directory: runtime + manifest + shared caches.
@@ -34,8 +39,9 @@ pub struct PoolEntry {
     /// Initial flat parameter vectors, loaded once per variant (the
     /// params served by pool inference when no job is referenced).
     init_params: Mutex<BTreeMap<String, Arc<Vec<f32>>>>,
-    /// Shared native inference engines, one per variant.
-    infer_cache: Mutex<BTreeMap<String, Arc<NativeInferEngine>>>,
+    /// Shared native inference engines, one per (variant, precision);
+    /// reduced-precision entries hold their quantized-on-load weights.
+    infer_cache: Mutex<BTreeMap<(String, Precision), Arc<NativeInferEngine>>>,
 }
 
 impl PoolEntry {
@@ -73,30 +79,61 @@ impl PoolEntry {
         Ok(params)
     }
 
-    /// An inference engine for one variant, shared when possible.
+    /// An inference engine for one variant, shared when possible
+    /// (f32 storage — see [`PoolEntry::shared_infer_at`]).
+    pub fn shared_infer(&self, model: &str, kind: EngineKind) -> Result<PooledInfer<'_>> {
+        self.shared_infer_at(model, kind, Precision::F32)
+    }
+
+    /// An inference engine for one variant at a weight-storage
+    /// precision, shared when possible.
     ///
     /// Mirrors `engine::infer_engine`'s selection rule (`auto` on a
     /// train-artifact-free variant is native); native engines come out
-    /// of the per-variant cache, HLO engines are built per call.
-    pub fn shared_infer(&self, model: &str, kind: EngineKind) -> Result<PooledInfer<'_>> {
+    /// of the per-(variant, precision) cache — reduced-precision
+    /// entries quantize the variant's initial params on first load —
+    /// and HLO engines (f32-only) are built per call.
+    pub fn shared_infer_at(
+        &self,
+        model: &str,
+        kind: EngineKind,
+        precision: Precision,
+    ) -> Result<PooledInfer<'_>> {
         let entry = self.manifest.model(model)?;
         let resolved = match kind {
             EngineKind::Auto if entry.train_hlo.is_none() => EngineKind::Native,
+            EngineKind::Auto if precision != Precision::F32 => EngineKind::Native,
             k => k.resolve(&self.runtime),
         };
         if resolved == EngineKind::Hlo {
+            if precision != Precision::F32 {
+                return Err(anyhow!(
+                    "precision {precision} requires the native engine; the HLO \
+                     inference step is f32-only"
+                ));
+            }
             return Ok(PooledInfer::PerCall(engine::infer_engine(
                 &self.runtime,
                 entry,
                 EngineKind::Hlo,
             )?));
         }
-        let mut cache = self.infer_cache.lock().unwrap();
-        if let Some(e) = cache.get(model) {
+        let key = (model.to_string(), precision);
+        if let Some(e) = self.infer_cache.lock().unwrap().get(&key) {
             return Ok(PooledInfer::Shared(e.clone()));
         }
-        let eng = Arc::new(NativeInferEngine::load(entry)?);
-        cache.insert(model.to_string(), eng.clone());
+        // Build OUTSIDE the cache lock (graph construction + whole-model
+        // quantization must not block unrelated requests) from the
+        // already-cached initial params — no second disk read.  A racing
+        // builder is harmless: first insert wins, both engines are valid.
+        let eng = if precision == Precision::F32 {
+            Arc::new(NativeInferEngine::load(entry)?)
+        } else {
+            let params = self.initial_params(model)?;
+            Arc::new(NativeInferEngine::load_quantized_from(entry, &params, precision)?)
+        };
+        let mut cache = self.infer_cache.lock().unwrap();
+        let eng = cache.entry(key).or_insert(eng).clone();
         Ok(PooledInfer::Shared(eng))
     }
 
@@ -119,6 +156,15 @@ impl PooledInfer<'_> {
         match self {
             PooledInfer::Shared(e) => e.as_ref(),
             PooledInfer::PerCall(b) => b.as_ref(),
+        }
+    }
+
+    /// The concrete native engine, when shared — the reduced-precision
+    /// paths (`infer_quantized`, `pack_params`) live on it.
+    pub fn native(&self) -> Option<&NativeInferEngine> {
+        match self {
+            PooledInfer::Shared(e) => Some(e.as_ref()),
+            PooledInfer::PerCall(_) => None,
         }
     }
 }
@@ -210,6 +256,35 @@ mod tests {
         let (x, y, _) = task.batch_onehot(t1.entry().batch);
         t1.step(&x, &y, 0.1).unwrap();
         assert_eq!(t2.params(), &before[..], "train engines must be exclusive");
+    }
+
+    #[test]
+    fn quantized_infer_engines_cache_per_variant_and_precision() {
+        let dir = demo_dir("quant");
+        let entry = PoolEntry::open(&dir).unwrap();
+        let f = entry
+            .shared_infer_at("vit_demo_vanilla", EngineKind::Auto, Precision::F32)
+            .unwrap();
+        let a = entry
+            .shared_infer_at("vit_demo_vanilla", EngineKind::Auto, Precision::I8)
+            .unwrap();
+        let b = entry
+            .shared_infer_at("vit_demo_vanilla", EngineKind::Auto, Precision::I8)
+            .unwrap();
+        match (&a, &b) {
+            (PooledInfer::Shared(x), PooledInfer::Shared(y)) => {
+                assert!(Arc::ptr_eq(x, y), "int8 engines must share the quantized load")
+            }
+            _ => panic!("demo variants must resolve to shared native engines"),
+        }
+        // Distinct cache entries per precision; the quantized one holds
+        // its packed weights (quantize-on-load, not per request).
+        assert_eq!(entry.cached_infer_engines(), 2);
+        let native = a.native().expect("shared native engine");
+        assert_eq!(native.precision(), Precision::I8);
+        let entry_len = entry.manifest.model("vit_demo_vanilla").unwrap().params_len;
+        assert!(native.packed_bytes().unwrap() < entry_len * 4);
+        assert!(f.native().unwrap().packed_bytes().is_none());
     }
 
     #[test]

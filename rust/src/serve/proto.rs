@@ -162,6 +162,12 @@ fn parse_submit(req: &Json) -> Result<JobSpec> {
         let s = engine.as_str().ok_or_else(|| anyhow!("\"engine\" must be a string"))?;
         b = b.engine(s.parse()?);
     }
+    if let Some(precision) = req.get("precision") {
+        let s = precision
+            .as_str()
+            .ok_or_else(|| anyhow!("\"precision\" must be a string"))?;
+        b = b.precision(s.parse()?);
+    }
     let mut spec = JobSpec::new(b.build());
     spec.artifacts = req_path(req, "artifacts")?;
     spec.resume_from = req_path(req, "resume_from")?;
@@ -178,6 +184,13 @@ fn parse_infer(req: &Json) -> Result<InferRequest> {
         Some(s) => s.parse()?,
         None => crate::engine::EngineKind::Auto,
     };
+    let precision = match req.get("precision") {
+        None => crate::precision::Precision::F32,
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| anyhow!("\"precision\" must be a string"))?
+            .parse()?,
+    };
     let x = match req.get("x") {
         None => None,
         Some(v) => Some(
@@ -191,6 +204,7 @@ fn parse_infer(req: &Json) -> Result<InferRequest> {
     Ok(InferRequest {
         model: model.to_string(),
         engine,
+        precision,
         seed: req_usize(req, "seed")?.unwrap_or(233) as u64,
         x,
     })
@@ -238,12 +252,12 @@ fn dispatch(
     // unknown-key complaint with an empty accepted set.
     let accepted: Option<&[&str]> = match cmd {
         "submit" => Some(&[
-            "model", "dataset", "steps", "samples", "seed", "lr", "engine", "artifacts",
-            "resume_from", "checkpoint_to",
+            "model", "dataset", "steps", "samples", "seed", "lr", "engine", "precision",
+            "artifacts", "resume_from", "checkpoint_to",
         ]),
         "status" | "cancel" | "forget" => Some(&["job"]),
         "events" => Some(&["job", "wait"]),
-        "infer" => Some(&["model", "engine", "seed", "x", "job", "artifacts"]),
+        "infer" => Some(&["model", "engine", "precision", "seed", "x", "job", "artifacts"]),
         "shutdown" => Some(&[]),
         _ => None,
     };
@@ -331,6 +345,7 @@ fn dispatch(
                 ("cmd", jstr("infer")),
                 ("model", jstr(ireq.model.clone())),
                 ("engine", jstr(infer_out.backend.clone())),
+                ("precision", jstr(infer_out.precision.to_string())),
                 ("batch", num(infer_out.batch as f64)),
                 (
                     "preds",
@@ -463,7 +478,8 @@ mod tests {
         assert_eq!(infers.len(), 2);
         for i in &infers {
             assert_eq!(i.get("ok"), Some(&Json::Bool(true)));
-            assert!(i.get("preds").and_then(|v| v.as_arr()).map(|a| !a.is_empty()).unwrap_or(false));
+            let nonempty = i.get("preds").and_then(|v| v.as_arr()).map(|a| !a.is_empty());
+            assert!(nonempty.unwrap_or(false));
         }
         assert!(infers[0].get("correct").and_then(|v| v.as_usize()).is_some());
         // shutdown ack is the last line.

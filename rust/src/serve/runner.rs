@@ -13,6 +13,7 @@ use crate::coordinator::metrics::StepRecord;
 use crate::coordinator::{Checkpoint, FinetuneReport, RunStatus, TrainConfig, Trainer};
 use crate::data::synth::VisionTask;
 use crate::data::Loader;
+use crate::precision::Precision;
 use crate::util::threadpool::ThreadCountGuard;
 
 use super::job::JobSpec;
@@ -77,6 +78,7 @@ pub fn execute_job(
         log_every: cfg.log_every.unwrap_or((cfg.steps / 10).max(1)),
         verbose: cfg.verbose,
         engine: cfg.engine,
+        precision: cfg.precision,
     };
     let mut trainer = Trainer::new(&pool.runtime, entry, tcfg)?;
 
@@ -123,6 +125,7 @@ pub fn execute_job(
         model: cfg.model.clone(),
         dataset: cfg.dataset.clone(),
         engine: trainer.engine.backend(),
+        precision: cfg.precision,
         final_loss: trainer.metrics.smoothed_loss(),
         val_accuracy: val,
         mean_step_seconds: trainer.metrics.mean_step_seconds(),
@@ -139,6 +142,9 @@ pub fn execute_job(
 pub struct InferRequest {
     pub model: String,
     pub engine: crate::engine::EngineKind,
+    /// Weight precision to serve at: `Bf16`/`I8` route to the pool's
+    /// quantized-on-load shared engine (native only).
+    pub precision: Precision,
     /// Seed for the synthetic probe batch when no input is supplied.
     pub seed: u64,
     /// Flat input rows (batch × input_dim); `None` = generate one
@@ -151,6 +157,7 @@ pub struct InferRequest {
 #[derive(Debug, Clone)]
 pub struct InferOutput {
     pub backend: String,
+    pub precision: Precision,
     pub preds: Vec<usize>,
     pub batch: usize,
     pub correct: Option<usize>,
@@ -164,24 +171,18 @@ pub fn run_infer(
     params: Option<&[f32]>,
 ) -> Result<InferOutput> {
     let entry = pool.manifest.model(&req.model)?;
-    let initial;
-    let params: &[f32] = match params {
-        Some(p) => p,
-        None => {
-            initial = pool.initial_params(&req.model)?;
-            &initial
+    if let Some(p) = params {
+        if p.len() != entry.params_len {
+            bail!(
+                "params length {} does not match model {} ({} expected) — \
+                 inference against a job from a different variant?",
+                p.len(),
+                entry.name,
+                entry.params_len
+            );
         }
-    };
-    if params.len() != entry.params_len {
-        bail!(
-            "params length {} does not match model {} ({} expected) — \
-             inference against a job from a different variant?",
-            params.len(),
-            entry.name,
-            entry.params_len
-        );
     }
-    let pooled = pool.shared_infer(&req.model, req.engine)?;
+    let pooled = pool.shared_infer_at(&req.model, req.engine, req.precision)?;
     let engine = pooled.engine();
     let (x, labels) = match &req.x {
         Some(x) => {
@@ -208,12 +209,36 @@ pub fn run_infer(
             (x, Some(labels))
         }
     };
-    let preds = engine.predict(params, &x)?;
+    let preds = if req.precision == Precision::F32 {
+        let initial;
+        let p: &[f32] = match params {
+            Some(p) => p,
+            None => {
+                initial = pool.initial_params(&req.model)?;
+                &initial
+            }
+        };
+        engine.predict(p, &x)?
+    } else {
+        // Reduced precision resolves to the shared native engine
+        // (shared_infer_at rejects HLO): pool params serve from the
+        // quantized-on-load packed set, a finished job's personalized
+        // params are packed for this request.
+        let native = pooled
+            .native()
+            .ok_or_else(|| anyhow!("precision {} requires the native engine", req.precision))?;
+        let logits = match params {
+            Some(p) => native.infer_packed(&native.pack_params(p, req.precision)?, &x)?,
+            None => native.infer_quantized(&x)?,
+        };
+        crate::engine::ops::argmax_rows(&logits, entry.classes)
+    };
     let correct = labels
         .as_ref()
         .map(|l| preds.iter().zip(l).filter(|(p, q)| p == q).count());
     Ok(InferOutput {
         backend: engine.backend().to_string(),
+        precision: req.precision,
         batch: preds.len(),
         preds,
         correct,

@@ -565,6 +565,7 @@ mod tests {
         let req = InferRequest {
             model: "vit_demo_wasi_eps80".into(),
             engine: EngineKind::Auto,
+            precision: crate::precision::Precision::F32,
             seed: 233,
             x: None,
         };

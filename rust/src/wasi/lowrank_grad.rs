@@ -97,8 +97,14 @@ pub fn lowrank_grad_3d(core: &Tensor, u1: &Mat, u2: &Mat, u3: &Mat, dy: &Tensor)
 ///
 /// core (r1,r2,r3,r4); u1 (B,r1); u2 (H,r2); u3 (W,r3); u4 (I,r4);
 /// dy (B,H,W,O) -> dW (O, I).
-pub fn lowrank_grad_4d(core: &Tensor, u1: &Mat, u2: &Mat, u3: &Mat, u4: &Mat,
-                       dy: &Tensor) -> Mat {
+pub fn lowrank_grad_4d(
+    core: &Tensor,
+    u1: &Mat,
+    u2: &Mat,
+    u3: &Mat,
+    u4: &Mat,
+    dy: &Tensor,
+) -> Mat {
     let (b, h, w, o) = (dy.shape[0], dy.shape[1], dy.shape[2], dy.shape[3]);
     let (r1, r2, r3, r4) = (core.shape[0], core.shape[1], core.shape[2], core.shape[3]);
     let i_dim = u4.rows;

@@ -277,7 +277,8 @@ mod tests {
                     } else {
                         Err(format!(
                             "dp {} worse than exhaustive {}",
-                            d.total_perplexity, e_.total_perplexity
+                            d.total_perplexity,
+                            e_.total_perplexity
                         ))
                     }
                 }

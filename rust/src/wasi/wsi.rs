@@ -70,8 +70,7 @@ impl WsiFactors {
 
     /// SGD update of the factors with weight decay (Eq. 11 in factored
     /// form), followed by the subspace refresh.
-    pub fn sgd_update(&mut self, dl: &Mat, dr: &Mat, lr: f32, weight_decay: f32,
-                      refresh: bool) {
+    pub fn sgd_update(&mut self, dl: &Mat, dr: &Mat, lr: f32, weight_decay: f32, refresh: bool) {
         for (p, g) in self.l.data.iter_mut().zip(&dl.data) {
             *p -= lr * (g + weight_decay * *p);
         }
@@ -95,8 +94,7 @@ pub fn powerlaw(o: usize, i: usize, alpha: f32, seed: u64) -> Mat {
 /// (L = U_k Σ_k, R = V_kᵀ) built from the same construction — this is
 /// what `init_svd` would compute, without paying a large-matrix SVD.
 /// Used by benches and paper-scale eval comparisons.
-pub fn powerlaw_factored(o: usize, i: usize, alpha: f32, seed: u64, k: usize)
-                         -> (Mat, Mat, Mat) {
+pub fn powerlaw_factored(o: usize, i: usize, alpha: f32, seed: u64, k: usize) -> (Mat, Mat, Mat) {
     let mut rng = crate::data::rng::Pcg64::new(seed);
     let full = o.min(i);
     let k = k.min(full);

@@ -37,7 +37,10 @@ fn no_subcommand_prints_usage() {
     assert!(out.status.success(), "stderr: {}", stderr(&out));
     let s = stdout(&out);
     assert!(s.contains("usage: wasi-train"), "{s}");
-    for sub in ["train", "serve", "infer", "plan-ranks", "eval", "cost-model", "calibrate", "list", "demo"] {
+    let subs = [
+        "train", "serve", "infer", "plan-ranks", "eval", "cost-model", "calibrate", "list", "demo",
+    ];
+    for sub in subs {
         assert!(s.contains(sub), "usage must mention {sub}: {s}");
     }
     for opt in ["--engine", "--lr", "--save-curve", "--silent", "infer:", "--workers", "submit"] {
@@ -85,7 +88,9 @@ fn list_without_artifacts_says_make_artifacts() {
 
 #[test]
 fn plan_ranks_without_artifacts_fails_with_context() {
-    let out = run(&["plan-ranks", "--budget-kb", "64", "--artifacts", &missing_artifacts_flagval()]);
+    let out = run(&[
+        "plan-ranks", "--budget-kb", "64", "--artifacts", &missing_artifacts_flagval(),
+    ]);
     assert!(!out.status.success());
     let err = stderr(&out);
     assert!(err.contains("error:"), "{err}");
@@ -181,6 +186,44 @@ fn demo_then_native_train_full_finetune() {
     assert!(tail < head, "loss must fall under the native engine: {losses:?}");
 }
 
+/// `--precision` end to end on the CLI: a bf16 fine-tune trains and
+/// reports its precision, int8 inference serves from the quantized
+/// pool engine, and int8 training is refused with a helpful error.
+#[test]
+fn precision_flag_trains_bf16_and_serves_i8() {
+    let dir = std::env::temp_dir().join("wasi_cli_precision");
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_string_lossy().into_owned();
+    assert!(run(&["demo", "--out", &dirs]).status.success());
+
+    let out = run(&[
+        "train", "--artifacts", &dirs, "--engine", "native",
+        "--model", "vit_demo_wasi_eps80", "--steps", "12", "--samples", "32",
+        "--precision", "bf16", "--silent",
+    ]);
+    assert!(out.status.success(), "bf16 train failed: {}", stderr(&out));
+    assert!(stdout(&out).contains("precision bf16"), "{}", stdout(&out));
+
+    let out = run(&[
+        "infer", "--artifacts", &dirs, "--model", "vit_demo_vanilla",
+        "--precision", "i8",
+    ]);
+    assert!(out.status.success(), "i8 infer failed: {}", stderr(&out));
+    assert!(stdout(&out).contains("i8 weights"), "{}", stdout(&out));
+
+    let out = run(&[
+        "train", "--artifacts", &dirs, "--engine", "native",
+        "--model", "vit_demo_wasi_eps80", "--steps", "2", "--samples", "16",
+        "--precision", "i8", "--silent",
+    ]);
+    assert!(!out.status.success(), "i8 training must be refused");
+    assert!(stderr(&out).contains("inference-only"), "{}", stderr(&out));
+
+    let out = run(&["train", "--artifacts", &dirs, "--precision", "f64"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown precision"), "{}", stderr(&out));
+}
+
 /// `bench --quick` must complete offline and emit a well-formed perf
 /// record (the CI smoke step asserts the same file).
 #[test]
@@ -213,6 +256,33 @@ fn bench_quick_emits_wellformed_perf_record() {
     // The HLO engine is recorded (available or not) rather than omitted.
     assert_eq!(engines[1].get("engine").and_then(|e| e.as_str()), Some("hlo"));
     assert!(v.get("nodes").and_then(|n| n.as_arr()).is_some());
+    // SIMD-vs-scalar section: both arms plus the speedup ratios.
+    let simd = v.get("simd").expect("simd section");
+    assert!(simd.get("isa").and_then(|i| i.as_str()).is_some());
+    for key in ["scalar", "simd"] {
+        let arm = simd.get(key).expect(key);
+        assert!(arm.get("train_seconds").and_then(|x| x.as_f64()).unwrap() > 0.0);
+    }
+    assert!(simd.get("train_speedup").and_then(|x| x.as_f64()).unwrap() > 0.0);
+    // Precision section: f32/bf16/i8 arms with weight bytes strictly
+    // shrinking, plus the int8-vs-f32 headline ratios.
+    let prec = v.get("precision").expect("precision section");
+    let parms = prec.get("arms").and_then(|a| a.as_arr()).unwrap();
+    assert_eq!(parms.len(), 3, "{json}");
+    let bytes: Vec<f64> = parms
+        .iter()
+        .map(|a| a.get("weight_bytes").and_then(|x| x.as_f64()).unwrap())
+        .collect();
+    assert!(bytes[0] > bytes[1] && bytes[1] > bytes[2], "{bytes:?}");
+    for arm in parms {
+        let agree = arm.get("top1_agreement").and_then(|x| x.as_f64()).unwrap();
+        assert!((0.0..=1.0).contains(&agree), "{json}");
+    }
+    assert!(prec.get("int8_vs_f32_speedup").and_then(|x| x.as_f64()).unwrap() > 0.0);
+    assert!(
+        prec.get("int8_weight_compression").and_then(|x| x.as_f64()).unwrap() > 2.0,
+        "{json}"
+    );
     // The serve scheduler section: at least the 1-worker arm, with
     // throughput and latency percentiles recorded.
     let serve = v.get("serve").and_then(|s| s.as_arr()).expect("serve section");

@@ -1,0 +1,215 @@
+//! Integration pins for the precision subsystem (DESIGN.md
+//! §Precision): int8-vs-f32 top-1 agreement on the demo artifact, bf16
+//! weight-storage invariants through training, and reduced-precision
+//! serving through the job service protocol.
+
+use std::path::PathBuf;
+
+use wasi_train::data::synth::VisionTask;
+use wasi_train::engine::demo::{write_demo_artifacts, DemoConfig};
+use wasi_train::engine::{InferEngine, NativeInferEngine, NativeModelEngine, TrainEngine};
+use wasi_train::precision::{bf16_to_f32, f32_to_bf16, Precision};
+use wasi_train::runtime::Manifest;
+use wasi_train::serve::{serve_lines, Service, ServiceConfig};
+use wasi_train::util::json::Json;
+
+fn demo_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("wasi_precision_test_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+    dir
+}
+
+/// The agreement pin, margin-aware: quantized inference must
+/// reproduce the f32 engine's top-1 predictions on every sample with
+/// a decisive logit margin.  A flip is mathematically possible only
+/// when the f32 top-2 gap is within twice the quantization drift, so
+/// the pin (a) bounds the drift itself relative to the logit scale,
+/// (b) rejects any flip on a decisively-margined sample, and (c)
+/// bounds how many near-tie samples may flip at all.  (The demo net
+/// is untrained, so a few near-random margins in the probe batch are
+/// expected; an EXACT-equality pin would gate on coin flips.)
+fn assert_top1_agreement(
+    f32_logits: &[f32],
+    q_logits: &[f32],
+    classes: usize,
+    max_flips: usize,
+    max_rel_drift: f32,
+    label: &str,
+) {
+    let drift = f32_logits
+        .iter()
+        .zip(q_logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    let scale = f32_logits.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+    assert!(
+        drift <= max_rel_drift * scale,
+        "{label}: logit drift {drift} exceeds {max_rel_drift} of logit scale {scale}"
+    );
+    let f32_preds = wasi_train::engine::ops::argmax_rows(f32_logits, classes);
+    let q_preds = wasi_train::engine::ops::argmax_rows(q_logits, classes);
+    let mut flips = 0usize;
+    for (row, (pf, pq)) in f32_preds.iter().zip(&q_preds).enumerate() {
+        if pf == pq {
+            continue;
+        }
+        let base = &f32_logits[row * classes..(row + 1) * classes];
+        let gap = (base[*pf] - base[*pq]).abs();
+        assert!(
+            gap <= 2.0 * drift,
+            "{label}: sample {row} flipped a DECISIVE prediction (f32 gap {gap}, drift {drift})"
+        );
+        flips += 1;
+    }
+    assert!(
+        flips <= max_flips,
+        "{label}: {flips} near-tie flips exceed the allowed {max_flips} \
+         (preds {f32_preds:?} vs {q_preds:?})"
+    );
+}
+
+#[test]
+fn int8_top1_predictions_match_f32_on_demo_artifact() {
+    let dir = demo_dir("agree");
+    let manifest = Manifest::load(&dir).unwrap();
+    for model in ["vit_demo_vanilla", "vit_demo_wasi_eps80"] {
+        let entry = manifest.model(model).unwrap();
+        let f32_engine = NativeInferEngine::load(entry).unwrap();
+        let i8_engine = NativeInferEngine::load_quantized(entry, Precision::I8).unwrap();
+        assert_eq!(i8_engine.precision(), Precision::I8);
+        let params = entry.load_params().unwrap();
+        let mut task = VisionTask::new("agree", entry.classes, 16, 0.5, 4, 233);
+        let (x, _, _) = task.batch_onehot(entry.batch);
+        let f32_logits = f32_engine.infer(&params, &x).unwrap();
+        let i8_logits = i8_engine.infer_quantized(&x).unwrap();
+        assert_top1_agreement(&f32_logits, &i8_logits, entry.classes, 2, 0.15, model);
+    }
+}
+
+/// bf16 drift is an order of magnitude tighter than int8's, so at
+/// most one near-tie sample may move.
+#[test]
+fn bf16_top1_predictions_match_f32_on_demo_artifact() {
+    let dir = demo_dir("agree16");
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.model("vit_demo_wasi_eps80").unwrap();
+    let f32_engine = NativeInferEngine::load(entry).unwrap();
+    let bf16_engine = NativeInferEngine::load_quantized(entry, Precision::Bf16).unwrap();
+    let params = entry.load_params().unwrap();
+    let mut task = VisionTask::new("agree16", entry.classes, 16, 0.5, 4, 41);
+    let (x, _, _) = task.batch_onehot(entry.batch);
+    let f32_logits = f32_engine.infer(&params, &x).unwrap();
+    let bf16_logits = bf16_engine.infer_quantized(&x).unwrap();
+    assert_top1_agreement(&f32_logits, &bf16_logits, entry.classes, 1, 0.05, "bf16");
+}
+
+fn all_bf16_representable(data: &[f32]) -> bool {
+    data.iter().all(|&v| bf16_to_f32(f32_to_bf16(v)).to_bits() == v.to_bits())
+}
+
+/// bf16 weight storage through training: every stored parameter is
+/// exactly bf16-representable after load, after each step, and after a
+/// restore — and the run still descends.
+#[test]
+fn bf16_training_keeps_weights_bf16_representable_and_descends() {
+    let dir = demo_dir("train16");
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.model("vit_demo_wasi_eps80").unwrap();
+    let mut eng = NativeModelEngine::load_with(entry, Precision::Bf16).unwrap();
+    assert_eq!(eng.precision(), Precision::Bf16);
+    assert!(all_bf16_representable(eng.params()), "load must round to bf16");
+    // The f32 engine's params are NOT all bf16-representable — the
+    // invariant below is not vacuous.
+    let f32_eng = NativeModelEngine::load(entry).unwrap();
+    assert!(!all_bf16_representable(f32_eng.params()));
+
+    let mut task = VisionTask::new("t16", entry.classes, 16, 0.5, 4, 233);
+    let (x, y, _) = task.batch_onehot(entry.batch);
+    let mut losses = Vec::new();
+    for _ in 0..16 {
+        let out = eng.step(&x, &y, 0.1).unwrap();
+        assert!(out.loss.is_finite());
+        losses.push(out.loss);
+    }
+    assert!(all_bf16_representable(eng.params()), "steps must re-round to bf16");
+    let head: f32 = losses[..4].iter().sum::<f32>() / 4.0;
+    let tail: f32 = losses[12..].iter().sum::<f32>() / 4.0;
+    assert!(tail < head * 0.9, "bf16 training should still descend ({losses:?})");
+
+    // Restoring raw f32 values into a bf16 engine re-rounds them.
+    let state = eng.state().to_vec();
+    eng.restore(f32_eng.params(), &state).unwrap();
+    assert!(all_bf16_representable(eng.params()), "restore must round to bf16");
+}
+
+/// int8 is inference-only: the native train engine refuses it.
+#[test]
+fn i8_training_is_refused() {
+    let dir = demo_dir("refuse8");
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.model("vit_demo_vanilla").unwrap();
+    let err = NativeModelEngine::load_with(entry, Precision::I8).unwrap_err();
+    assert!(format!("{err:#}").contains("inference-only"), "{err:#}");
+}
+
+/// Reduced precision through the serve protocol: a bf16 job trains to
+/// Done, int8 pool inference answers with its precision echoed, and
+/// int8 inference against the finished job's personalized params works
+/// (packed per request).
+#[test]
+fn serve_protocol_supports_precision_jobs_and_quantized_infer() {
+    let dir = demo_dir("serve");
+    let svc = Service::start(ServiceConfig { artifacts: dir, workers: 1 }).unwrap();
+    let input = [
+        r#"{"cmd":"submit","model":"vit_demo_wasi_eps80","steps":4,"samples":32,"engine":"native","precision":"bf16"}"#,
+        r#"{"cmd":"events","job":1,"wait":true}"#,
+        r#"{"cmd":"infer","model":"vit_demo_vanilla","seed":7,"precision":"i8"}"#,
+        r#"{"cmd":"infer","model":"vit_demo_wasi_eps80","job":1,"precision":"i8"}"#,
+        r#"{"cmd":"infer","model":"vit_demo_vanilla","precision":"f16"}"#,
+        r#"{"cmd":"shutdown"}"#,
+    ]
+    .join("\n");
+    let mut out = Vec::new();
+    serve_lines(&svc, input.as_bytes(), &mut out).unwrap();
+    svc.shutdown();
+    let responses: Vec<Json> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).expect("every response line is JSON"))
+        .collect();
+
+    let done: Vec<&Json> = responses
+        .iter()
+        .filter(|r| r.get("event").and_then(|v| v.as_str()) == Some("done"))
+        .collect();
+    assert_eq!(done.len(), 1, "{responses:?}");
+    let report = done[0].get("report").unwrap();
+    assert_eq!(report.get("precision").and_then(|v| v.as_str()), Some("bf16"));
+
+    let infers: Vec<&Json> = responses
+        .iter()
+        .filter(|r| r.get("cmd").and_then(|v| v.as_str()) == Some("infer"))
+        .collect();
+    assert_eq!(infers.len(), 3, "{responses:?}");
+    for ok in &infers[..2] {
+        assert_eq!(ok.get("ok"), Some(&Json::Bool(true)), "{ok:?}");
+        assert_eq!(ok.get("precision").and_then(|v| v.as_str()), Some("i8"));
+        assert!(ok
+            .get("preds")
+            .and_then(|v| v.as_arr())
+            .map(|a| !a.is_empty())
+            .unwrap_or(false));
+    }
+    // Unknown precision is an in-band request error, not a crash.
+    assert_eq!(infers[2].get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        infers[2]
+            .get("error")
+            .and_then(|v| v.as_str())
+            .map(|e| e.contains("unknown precision"))
+            .unwrap_or(false),
+        "{:?}",
+        infers[2]
+    );
+}

@@ -1,0 +1,181 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: compare a fresh `wasi-train bench` record
+against the committed baseline (CI job `bench-gate`).
+
+    python3 scripts/bench_gate.py BENCH_baseline.json BENCH_native.json \
+        [--tolerance 0.25]
+
+Rules
+-----
+* **Structural keys match exactly**: the two records must have the same
+  recursive key sets and array lengths.  A missing section (simd,
+  precision, serve, ...) or a renamed key fails the gate even when the
+  baseline is provisional.
+* **Wallclock within tolerance**: every timing value (keys ending in
+  `_seconds`, `_ms`, `_s`, or `_ms_per_step`) must be within
+  ``(1 + tolerance)`` of the baseline in BOTH directions (a big speedup
+  is a stale baseline — commit the fresh record).  Values below the
+  noise floor (``--min-seconds``, default 0.05s / 50ms) in BOTH records
+  are checked for positivity only — shared-runner jitter on
+  millisecond-scale quick-mode timings is not a regression signal.
+  The per-node attribution under ``"nodes"`` is micro-timing noise and
+  is compared structurally only.
+* **Required non-empty sections**: the SIMD-vs-scalar and precision
+  (int8-vs-f32) sections must exist with their arms populated.
+* A baseline marked ``"provisional": true`` (seeded before a CI runner
+  ever measured it) downgrades wallclock violations to warnings so the
+  first run can mint the real numbers; CI uploads the fresh record as
+  an artifact — commit it (dropping the flag) to arm the gate fully.
+
+The committed baseline assumes a MULTI-CORE runner (GitHub's hosted
+runners): the bench emits second thread/serve arms only when more than
+one core is available, and a single-core host therefore fails the
+structural length check by design — re-seed the baseline from that
+host's own record if you need to gate there.
+"""
+
+import argparse
+import json
+import re
+import sys
+
+TIMING_KEY = re.compile(r"(_seconds|_ms|_s|_ms_per_step)$")
+
+# Top-level baseline bookkeeping keys absent from fresh records.
+BASELINE_ONLY_KEYS = {"provisional", "host"}
+
+
+def walk(base, fresh, path, errors, timings):
+    """Collect structural mismatches into `errors` and (path, base,
+    fresh) timing pairs into `timings`."""
+    if isinstance(base, dict) or isinstance(fresh, dict):
+        if not (isinstance(base, dict) and isinstance(fresh, dict)):
+            errors.append(f"{path}: type mismatch ({type(base).__name__} vs {type(fresh).__name__})")
+            return
+        bkeys = set(base) - (BASELINE_ONLY_KEYS if path == "$" else set())
+        fkeys = set(fresh)
+        for k in sorted(bkeys - fkeys):
+            errors.append(f"{path}.{k}: missing from fresh record")
+        for k in sorted(fkeys - bkeys):
+            errors.append(f"{path}.{k}: not in baseline")
+        for k in sorted(bkeys & fkeys):
+            walk(base[k], fresh[k], f"{path}.{k}", errors, timings)
+    elif isinstance(base, list) or isinstance(fresh, list):
+        if not (isinstance(base, list) and isinstance(fresh, list)):
+            errors.append(f"{path}: type mismatch ({type(base).__name__} vs {type(fresh).__name__})")
+            return
+        if len(base) != len(fresh):
+            errors.append(f"{path}: length {len(base)} vs {len(fresh)}")
+            return
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            walk(b, f, f"{path}[{i}]", errors, timings)
+    else:
+        key = path.rsplit(".", 1)[-1]
+        is_timing = bool(TIMING_KEY.search(key)) and ".nodes[" not in path
+        if is_timing and isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
+            timings.append((path, float(base), float(fresh)))
+
+
+def require(cond, msg, errors):
+    if not cond:
+        errors.append(msg)
+
+
+def check_sections(fresh, errors):
+    """The acceptance-criteria sections must be present and non-empty."""
+    simd = fresh.get("simd") or {}
+    require(
+        isinstance(simd.get("scalar"), dict) and isinstance(simd.get("simd"), dict),
+        "simd section must record scalar AND simd arms",
+        errors,
+    )
+    require("train_speedup" in simd, "simd section must record train_speedup", errors)
+    prec = fresh.get("precision") or {}
+    arms = prec.get("arms") or []
+    got = {a.get("precision") for a in arms if isinstance(a, dict)}
+    require(
+        got == {"f32", "bf16", "i8"},
+        f"precision section must cover f32/bf16/i8, got {sorted(got)}",
+        errors,
+    )
+    require(
+        "int8_vs_f32_speedup" in prec,
+        "precision section must record int8_vs_f32_speedup",
+        errors,
+    )
+    require(bool(fresh.get("serve")), "serve section must be non-empty", errors)
+    for a in arms:
+        require(
+            isinstance(a, dict) and a.get("weight_bytes", 0) > 0,
+            "precision arms must record weight_bytes",
+            errors,
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative wallclock deviation (default 0.25)")
+    ap.add_argument("--min-seconds", type=float, default=0.05,
+                    help="noise floor: timings below this (in their own unit — "
+                         "seconds for *_s keys, ms for *_ms keys) in both records "
+                         "are checked for positivity only (default 0.05 / 50)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    provisional = bool(base.get("provisional"))
+    errors, timings, violations = [], [], []
+    walk(base, fresh, "$", errors, timings)
+    check_sections(fresh, errors)
+
+    lo, hi = 1.0 / (1.0 + args.tolerance), 1.0 + args.tolerance
+    skipped = 0
+    for path, b, f in timings:
+        if b <= 0.0 or f <= 0.0:
+            violations.append(f"{path}: wallclock not positive ({b} vs {f})")
+            continue
+        # _ms keys carry milliseconds; scale the floor to the key's unit.
+        floor = args.min_seconds * (1000.0 if "_ms" in path.rsplit(".", 1)[-1] else 1.0)
+        if b < floor and f < floor:
+            skipped += 1
+            continue
+        ratio = f / b
+        if not (lo <= ratio <= hi):
+            violations.append(
+                f"{path}: {f:.4f} vs baseline {b:.4f} ({ratio:.2f}x, "
+                f"allowed [{lo:.2f}, {hi:.2f}])"
+            )
+
+    status = 0
+    if errors:
+        print(f"bench-gate: {len(errors)} structural violation(s):")
+        for e in errors:
+            print(f"  FAIL {e}")
+        status = 1
+    if violations:
+        label = "WARN" if provisional else "FAIL"
+        print(f"bench-gate: {len(violations)} wallclock deviation(s) "
+              f"({'provisional baseline — warning only' if provisional else 'regression'}):")
+        for v in violations:
+            print(f"  {label} {v}")
+        if not provisional:
+            status = 1
+    if provisional and not errors:
+        print("bench-gate: baseline is PROVISIONAL — commit the uploaded "
+              "BENCH_native.json as BENCH_baseline.json (drop \"provisional\") "
+              "to arm wallclock enforcement.")
+    if status == 0 and not violations:
+        print(f"bench-gate: OK ({len(timings) - skipped} wallclock values within "
+              f"±{args.tolerance * 100:.0f}%, {skipped} below the noise floor, "
+              "structure exact)")
+    sys.exit(status)
+
+
+if __name__ == "__main__":
+    main()
