@@ -20,7 +20,7 @@ fn main() -> Result<()> {
 
     // A service with two workers: two personalization jobs train
     // concurrently on different variants.
-    let service = Service::start(ServiceConfig { artifacts: dir, workers: 2 })?;
+    let service = Service::start(ServiceConfig::new(dir).with_workers(2))?;
     let mut jobs = Vec::new();
     for (user, model) in [("alice", "vit_demo_wasi_eps80"), ("bob", "vit_demo_vanilla")] {
         let cfg = FinetuneConfig::builder()

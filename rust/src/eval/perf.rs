@@ -28,7 +28,8 @@ use crate::linalg::simd;
 use crate::precision::Precision;
 use crate::runtime::{Manifest, ModelEntry, Runtime};
 use crate::serve::{JobSpec, Service, ServiceConfig};
-use crate::util::json::{arr, num, obj, str as jstr, Json};
+use crate::scenario::{run_soak, SoakConfig};
+use crate::util::json::{arr, finite_num, num, obj, str as jstr, Json};
 use crate::util::stats::percentile;
 use crate::util::table::Table;
 use crate::util::threadpool::{num_threads, set_num_threads, thread_override};
@@ -221,7 +222,7 @@ fn bench_serve(dir: &Path, models: &[String], quick: bool) -> Result<Vec<ServeAr
     }
     let mut arms = Vec::new();
     for workers in worker_arms {
-        let service = Service::start(ServiceConfig { artifacts: dir.to_path_buf(), workers })?;
+        let service = Service::start(ServiceConfig::new(dir.to_path_buf()).with_workers(workers))?;
         let t0 = Instant::now();
         let submitted: Vec<_> = (0..jobs)
             .map(|j| {
@@ -369,6 +370,27 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
     set_num_threads(0);
     let serve_arms = bench_serve(&dir, &names, cfg.quick)?;
 
+    // 4b. a tiny fixed-seed fault-free soak over the same artifact set:
+    //     the scenario harness (DESIGN.md §Scenario harness) under a
+    //     steady mixed workload, reduced to scalar telemetry.  Counts
+    //     are structure-gated only; the `_ms`/`_seconds` keys join the
+    //     wallclock gate like every other timing here.
+    let mut soak_cfg = SoakConfig::quick(&dir);
+    soak_cfg.events = if cfg.quick { 40 } else { 120 };
+    soak_cfg.max_seconds = if cfg.quick { 30.0 } else { 120.0 };
+    soak_cfg.variants = names.clone();
+    let soak = run_soak(&soak_cfg)?;
+    let soak_json = obj(vec![
+        ("events", num(soak.events_replayed as f64)),
+        ("jobs", num(soak.jobs.total() as f64)),
+        ("invariant_violations", num(soak.violations.len() as f64)),
+        ("queue_depth_max", num(soak.queue_depth_max() as f64)),
+        ("soak_seconds", num(soak.soak_seconds)),
+        ("p50_submit_to_done_ms", finite_num(soak.submit_to_done.p(50.0))),
+        ("p95_submit_to_done_ms", finite_num(soak.submit_to_done.p(95.0))),
+        ("infer_p50_ms", finite_num(soak.infer_roundtrip.p(50.0))),
+    ]);
+
     // 5. the HLO engine on the same artifact set (expected unavailable
     //    offline: the demo set ships no train artifact, and without
     //    PJRT the runtime cannot execute model HLO).
@@ -410,6 +432,7 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         ("simd", simd_json),
         ("precision", precision_json),
         ("serve", serve_json),
+        ("soak", soak_json),
         ("nodes", node_json),
     ]);
     std::fs::write(&cfg.out, out_json.to_string())
@@ -470,6 +493,15 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
     }
     body.push('\n');
     body.push_str(&st.render());
+    body.push_str(&format!(
+        "soak: {} events in {:.2}s, {} jobs, queue depth max {}, \
+         {} invariant violation(s)\n",
+        soak.events_replayed,
+        soak.soak_seconds,
+        soak.jobs.total(),
+        soak.queue_depth_max(),
+        soak.violations.len()
+    ));
     match (&node_table, &profiled) {
         (Some(table), _) => {
             body.push('\n');

@@ -29,7 +29,10 @@
 //! streamed per-step events, and `wasi-train serve` exposes it all as
 //! a JSON-lines session protocol.  The blocking
 //! [`coordinator::Session`] API and the CLI are thin clients of the
-//! same core.
+//! same core.  The [`scenario`] harness (`wasi-train soak`) drives
+//! that core with replayed or synthesized adversarial workloads —
+//! cancel storms, worker death, cache eviction, malformed frames —
+//! and checks the serving invariants under sustained load.
 //!
 //! See `DESIGN.md` (repository root) for the architecture and
 //! `EXPERIMENTS.md` for the paper-vs-measured record.
@@ -57,6 +60,7 @@ pub mod eval;
 pub mod linalg;
 pub mod precision;
 pub mod runtime;
+pub mod scenario;
 pub mod serve;
 pub mod util;
 pub mod wasi;

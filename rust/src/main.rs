@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train       fine-tune a model variant (one job through the serve core)
 //!   serve       multi-session job service speaking JSON-lines on stdin/stdout
+//!   soak        bounded adversarial workload soak over the serve core
 //!   infer       run inference with a variant's initial params
 //!   plan-ranks  run the Eq. 30/32 rank-selection DP over the manifest's
 //!               perplexity table
@@ -38,7 +39,7 @@ fn main() {
 
 fn usage() -> String {
     [
-        "usage: wasi-train <train|serve|infer|plan-ranks|eval|bench|cost-model|calibrate|list|demo> [options]",
+        "usage: wasi-train <train|serve|soak|infer|plan-ranks|eval|bench|cost-model|calibrate|list|demo> [options]",
         "common options:",
         "  --artifacts DIR   artifact directory (default: artifacts)",
         "  --engine KIND     execution engine: auto|hlo|native (default: auto;",
@@ -61,6 +62,12 @@ fn usage() -> String {
         "            {\"cmd\":\"submit\"|\"status\"|\"events\"|\"infer\"|\"cancel\"|\"forget\"|\"shutdown\"}",
         "            per line on stdin; training jobs queue onto worker threads,",
         "            infer requests answer inline (DESIGN.md \u{a7}serve)",
+        "soak:       [--quick] --events N --seconds S --seed S --workers N",
+        "            --faults LIST (cancel-storm,worker-death,evict,malformed|all|none)",
+        "            --trace FILE (replay a recorded trace) --record FILE (save it)",
+        "            --variants A,B --out FILE (default SOAK_report.json) [--pace]",
+        "            drives the serve core with a seeded adversarial workload,",
+        "            checks the serving invariants, exits non-zero on violations",
         "infer:      --model NAME --seed S (batch accuracy with initial params;",
         "            works on infer-only variants, no train artifact needed)",
         "plan-ranks: --budget-kb N | --eps E",
@@ -103,6 +110,13 @@ fn check_known_options(sub: &str, args: &Args) -> Result<()> {
             &["silent"],
         ),
         "serve" => (&["workers"], &[]),
+        "soak" => (
+            &[
+                "workers", "events", "seconds", "seed", "trace", "record", "out", "faults",
+                "variants",
+            ],
+            &["quick", "pace"],
+        ),
         "infer" => (&["model", "seed"], &[]),
         "bench" => (&["steps", "out"], &["quick"]),
         "demo" => (&["out"], &[]),
@@ -136,6 +150,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args, &artifacts),
         Some("serve") => cmd_serve(&args, &artifacts),
+        Some("soak") => cmd_soak(&args, &artifacts),
         Some("infer") => cmd_infer(&args, &artifacts),
         Some("bench") => cmd_bench(&args),
         Some("demo") => cmd_demo(&args),
@@ -215,10 +230,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
         .build();
     let verbose = !args.flag("silent");
 
-    let service = Service::start(ServiceConfig {
-        artifacts: PathBuf::from(artifacts),
-        workers: 1,
-    })?;
+    let service = Service::start(ServiceConfig::new(PathBuf::from(artifacts)).with_workers(1))?;
     let mut spec = JobSpec::new(cfg.clone());
     spec.resume_from = args.get("resume").map(PathBuf::from);
     spec.checkpoint_to = args.get("save-checkpoint").map(PathBuf::from);
@@ -278,10 +290,8 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
 /// requests on stdin, responses on stdout, log chatter on stderr.
 fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
     let workers = args.usize_or("workers", 2)?;
-    let service = Service::start(ServiceConfig {
-        artifacts: PathBuf::from(artifacts),
-        workers,
-    })?;
+    let service =
+        Service::start(ServiceConfig::new(PathBuf::from(artifacts)).with_workers(workers))?;
     eprintln!(
         "wasi-train serve: {} worker(s) over {artifacts}/ — JSON-lines on stdin \
          (submit|status|events|infer|cancel|forget|shutdown)",
@@ -292,6 +302,96 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
     serve_lines(&service, stdin.lock(), stdout.lock())?;
     service.shutdown();
     Ok(())
+}
+
+/// `soak`: drive the serve core with a seeded adversarial workload and
+/// hold it to the serving invariants (DESIGN.md §Scenario harness).
+/// Exits non-zero when any invariant is violated so CI can gate on it.
+fn cmd_soak(args: &Args, artifacts: &str) -> Result<()> {
+    use wasi_train::scenario::{run_soak_to, FaultPlan, SoakConfig};
+    let quick = args.flag("quick");
+    let mut cfg = SoakConfig::quick(artifacts);
+    cfg.workers = args.usize_or("workers", 2)?;
+    cfg.events = args.usize_or("events", if quick { 120 } else { 600 })?;
+    cfg.max_seconds = args.f64_or("seconds", if quick { 60.0 } else { 300.0 })?;
+    cfg.seed = args.usize_or("seed", 233)? as u64;
+    cfg.faults = FaultPlan::parse(args.get_or("faults", "none"))?;
+    cfg.trace_in = args.get("trace").map(PathBuf::from);
+    cfg.trace_out = args.get("record").map(PathBuf::from);
+    cfg.pace = args.flag("pace");
+    if let Some(v) = args.get("variants") {
+        cfg.variants = v.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    let out = PathBuf::from(args.get_or("out", "SOAK_report.json"));
+
+    let report = run_soak_to(&cfg, Some(&out))?;
+
+    println!(
+        "soak: {} of {} events in {:.1}s  (seed {}, faults {}, {} workers{})",
+        report.events_replayed,
+        report.events_total,
+        report.soak_seconds,
+        report.seed,
+        report.faults,
+        report.workers,
+        if report.truncated { ", TRUNCATED by wallclock cap" } else { "" },
+    );
+    println!(
+        "ops : {} submit  {} infer  {} cancel  {} forget  {} evict  {} frame",
+        report.ops.submits,
+        report.ops.infers,
+        report.ops.cancels,
+        report.ops.forgets,
+        report.ops.evicts,
+        report.ops.frames
+    );
+    println!(
+        "jobs: {} done  {} cancelled  {} panicked  {} shutdown  {} unexpected",
+        report.jobs.done,
+        report.jobs.cancelled,
+        report.jobs.panicked,
+        report.jobs.shutdown,
+        report.jobs.unexpected
+    );
+    println!(
+        "pool: {} loads  {} evictions  {} resident  |  queue depth max {}",
+        report.pool_loads,
+        report.pool_evictions,
+        report.pool_occupancy.len(),
+        report.queue_depth_max()
+    );
+    if report.submit_to_done.count() > 0 {
+        println!(
+            "submit→done  p50 {:.0} ms  p95 {:.0} ms  p99 {:.0} ms  ({} jobs)",
+            report.submit_to_done.p(50.0),
+            report.submit_to_done.p(95.0),
+            report.submit_to_done.p(99.0),
+            report.submit_to_done.count()
+        );
+    }
+    if report.infer_roundtrip.count() > 0 {
+        println!(
+            "infer trip   p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms  ({} calls)",
+            report.infer_roundtrip.p(50.0),
+            report.infer_roundtrip.p(95.0),
+            report.infer_roundtrip.p(99.0),
+            report.infer_roundtrip.count()
+        );
+    }
+    println!("report -> {}", out.display());
+
+    if report.violations.is_empty() {
+        println!("invariants: OK (0 violations)");
+        Ok(())
+    } else {
+        for v in &report.violations {
+            eprintln!("VIOLATION: {v}");
+        }
+        Err(anyhow!(
+            "soak finished with {} invariant violation(s)",
+            report.violations.len()
+        ))
+    }
 }
 
 fn cmd_infer(args: &Args, artifacts: &str) -> Result<()> {

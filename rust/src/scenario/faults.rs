@@ -1,0 +1,186 @@
+//! Fault plan: which adversarial behaviours a soak run injects, and
+//! the [`FaultHook`] implementation that delivers the service-side ones
+//! (cancel storms at step boundaries, worker death mid-job).
+//!
+//! Driver-side faults (pool eviction-under-use, malformed protocol
+//! frames) are *trace events* — the generator mixes them in when the
+//! plan enables them — so every fault a run experienced is visible in
+//! its recorded trace.  Service-side faults key off the **job id**
+//! (`id % N == k`), not pickup order, so which jobs get hit is a pure
+//! function of the trace, independent of worker scheduling.
+
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, Result};
+
+use crate::serve::{FaultAction, FaultHook, JobId};
+
+/// Which fault classes a soak run injects.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Cancel every 5th job (ids ≡ 3 mod 5) at its second step — a
+    /// deterministic cancel storm hitting jobs mid-run.
+    pub cancel_storm: bool,
+    /// Panic the worker of every 7th job (ids ≡ 4 mod 7) at its first
+    /// step — worker death mid-job; the service must contain it.
+    pub worker_death: bool,
+    /// Mix pool-eviction events into the generated trace.
+    pub evict: bool,
+    /// Mix malformed protocol frames into the generated trace.
+    pub malformed: bool,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn all() -> FaultPlan {
+        FaultPlan { cancel_storm: true, worker_death: true, evict: true, malformed: true }
+    }
+
+    /// Parse a comma-separated fault list: `cancel-storm`,
+    /// `worker-death`, `evict`, `malformed`, plus the shorthands `all`
+    /// and `none`.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::none();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            match part {
+                "cancel-storm" => plan.cancel_storm = true,
+                "worker-death" => plan.worker_death = true,
+                "evict" => plan.evict = true,
+                "malformed" => plan.malformed = true,
+                "all" => plan = FaultPlan::all(),
+                "none" => plan = FaultPlan::none(),
+                other => {
+                    return Err(anyhow!(
+                        "unknown fault {other:?}; expected cancel-storm, worker-death, \
+                         evict, malformed, all, or none"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan needs a [`FaultHook`] wired into the service.
+    pub fn service_side(&self) -> bool {
+        self.cancel_storm || self.worker_death
+    }
+
+    /// Would this plan cancel the given job? (The soak driver uses this
+    /// to classify a job's `cancelled` outcome as expected.)
+    pub fn storms_job(&self, id: JobId) -> bool {
+        self.cancel_storm && id.0 % 5 == 3
+    }
+
+    /// Would this plan kill the given job's worker?
+    pub fn kills_job(&self, id: JobId) -> bool {
+        self.worker_death && id.0 % 7 == 4
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut parts = Vec::new();
+        if self.cancel_storm {
+            parts.push("cancel-storm");
+        }
+        if self.worker_death {
+            parts.push("worker-death");
+        }
+        if self.evict {
+            parts.push("evict");
+        }
+        if self.malformed {
+            parts.push("malformed");
+        }
+        if parts.is_empty() {
+            f.write_str("none")
+        } else {
+            f.write_str(&parts.join(","))
+        }
+    }
+}
+
+/// The service-side [`FaultHook`] a soak run installs.  Worker death
+/// takes precedence over the storm when a job matches both schedules.
+pub struct PlanHook {
+    plan: FaultPlan,
+}
+
+impl PlanHook {
+    pub fn new(plan: FaultPlan) -> PlanHook {
+        PlanHook { plan }
+    }
+}
+
+impl FaultHook for PlanHook {
+    fn on_step(&self, job: JobId, step: usize) -> FaultAction {
+        if self.plan.kills_job(job) && step == 1 {
+            return FaultAction::Panic;
+        }
+        if self.plan.storms_job(job) && step == 2 {
+            return FaultAction::Cancel;
+        }
+        FaultAction::None
+    }
+}
+
+/// Install a process-wide panic hook that swallows the *injected*
+/// worker-death panics (their message carries "injected worker death")
+/// and forwards everything else to the previous hook.  Installed once
+/// and never removed — restoring a hook races with concurrent tests,
+/// and the filter is inert outside fault injection.
+pub fn silence_injected_panics() {
+    static INSTALLED: OnceLock<()> = OnceLock::new();
+    INSTALLED.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if !msg.contains("injected worker death") {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects_unknown() {
+        assert_eq!(FaultPlan::parse("none").unwrap(), FaultPlan::none());
+        assert_eq!(FaultPlan::parse("all").unwrap(), FaultPlan::all());
+        let p = FaultPlan::parse("cancel-storm, worker-death").unwrap();
+        assert!(p.cancel_storm && p.worker_death && !p.evict && !p.malformed);
+        assert_eq!(p.to_string(), "cancel-storm,worker-death");
+        assert_eq!(FaultPlan::parse(&FaultPlan::all().to_string()).unwrap(), FaultPlan::all());
+        assert_eq!(FaultPlan::none().to_string(), "none");
+        assert!(FaultPlan::parse("cancel_storm").is_err());
+    }
+
+    #[test]
+    fn schedules_are_deterministic_by_job_id() {
+        let plan = FaultPlan::all();
+        let hook = PlanHook::new(plan);
+        assert_eq!(hook.on_step(JobId(3), 2), FaultAction::Cancel);
+        assert_eq!(hook.on_step(JobId(3), 1), FaultAction::None);
+        assert_eq!(hook.on_step(JobId(4), 1), FaultAction::Panic);
+        assert_eq!(hook.on_step(JobId(5), 2), FaultAction::None);
+        // A job on both schedules dies rather than cancels (id 18 ≡ 3
+        // mod 5 and ≡ 4 mod 7) — precedence is fixed, not racy.
+        assert_eq!(hook.on_step(JobId(18), 1), FaultAction::Panic);
+        assert!(plan.storms_job(JobId(18)) && plan.kills_job(JobId(18)));
+        // No faults planned -> never fires.
+        let quiet = PlanHook::new(FaultPlan::none());
+        assert_eq!(quiet.on_step(JobId(3), 2), FaultAction::None);
+        assert_eq!(quiet.on_step(JobId(4), 1), FaultAction::None);
+    }
+}

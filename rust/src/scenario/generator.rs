@@ -1,0 +1,227 @@
+//! Deterministic workload synthesis: a seeded generator emits mixed
+//! submit/infer/cancel/forget trace events with exponential
+//! inter-arrival times over a Zipf-distributed population of
+//! (variant, precision) pairs — the "many users, few hot variants"
+//! shape of on-device personalization traffic.
+//!
+//! Everything is a pure function of [`GeneratorConfig`]: the same
+//! config (same seed) produces the same [`TraceEvent`] sequence,
+//! which is what makes a failing soak reproducible from its trace.
+
+use crate::data::rng::Pcg64;
+use crate::precision::Precision;
+
+use super::trace::{TraceEvent, TraceOp};
+
+/// Knobs for the synthetic workload.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    /// Number of events to emit.
+    pub events: usize,
+    /// PRNG seed; the whole trace is a pure function of this config.
+    pub seed: u64,
+    /// Variant names to spread load over (Zipf-ranked in this order).
+    pub variants: Vec<String>,
+    /// Mean gap between events in milliseconds (exponential arrivals).
+    pub mean_interarrival_ms: f64,
+    /// Zipf exponent over the variant × precision population (0 =
+    /// uniform; ~1 = classic "one hot user" skew).
+    pub zipf_exponent: f64,
+    /// Training steps per submitted job, sampled uniformly inclusive.
+    pub steps_range: (usize, usize),
+    /// Samples per job (fixed; the job's synthetic dataset size).
+    pub samples: usize,
+    /// Mix in pool-eviction events (the eviction-under-use fault).
+    pub evict: bool,
+    /// Mix in malformed protocol frames (the malformed-frame fault).
+    pub malformed: bool,
+}
+
+impl GeneratorConfig {
+    /// Defaults sized for the CI quick soak: small jobs, hot arrivals.
+    pub fn new(variants: Vec<String>, events: usize, seed: u64) -> GeneratorConfig {
+        GeneratorConfig {
+            events,
+            seed,
+            variants,
+            mean_interarrival_ms: 4.0,
+            zipf_exponent: 1.0,
+            steps_range: (3, 8),
+            samples: 32,
+            evict: false,
+            malformed: false,
+        }
+    }
+}
+
+/// Malformed frames cycled through by the generator (each must draw an
+/// in-band `ok:false`, pinned by the proto fuzz tests).
+const BAD_FRAMES: &[&str] = &[
+    "this is not json",
+    "{\"cmd\":\"submit\"",
+    "{\"cmd\":\"frobnicate\"}",
+    "{\"cmd\":\"submit\",\"model\":\"m\",\"step\":5}",
+    "{\"cmd\":\"infer\",\"model\":\"m\",\"x\":[1e999]}",
+    "{\"cmd\":\"status\",\"job\":-3}",
+];
+
+/// Generate a trace.  Cancel/forget events target earlier submits by
+/// ordinal; until the first submit exists they degrade to infers, so
+/// every emitted event is executable.
+pub fn generate(cfg: &GeneratorConfig) -> Vec<TraceEvent> {
+    assert!(!cfg.variants.is_empty(), "generator needs at least one variant");
+    let mut rng = Pcg64::new(cfg.seed);
+
+    // Zipf over the variant × {f32, bf16, i8} population: rank r gets
+    // weight (r+1)^-s; sampling walks the cumulative table.
+    let population: Vec<(usize, Precision)> = (0..cfg.variants.len())
+        .flat_map(|v| [Precision::F32, Precision::Bf16, Precision::I8].map(|p| (v, p)))
+        .collect();
+    let cdf: Vec<f64> = {
+        let weights: Vec<f64> = (0..population.len())
+            .map(|r| 1.0 / ((r + 1) as f64).powf(cfg.zipf_exponent))
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect()
+    };
+    let mut zipf = move |rng: &mut Pcg64| -> (usize, Precision) {
+        let u = rng.next_f64();
+        let idx = cdf.iter().position(|c| u < *c).unwrap_or(cdf.len() - 1);
+        population[idx]
+    };
+
+    let mut events = Vec::with_capacity(cfg.events);
+    let mut clock_ms = 0.0f64;
+    let mut submits = 0usize;
+    let mut bad_frame = 0usize;
+    for _ in 0..cfg.events {
+        // Exponential inter-arrival: -mean * ln(1 - u).
+        clock_ms += -cfg.mean_interarrival_ms * (1.0 - rng.next_f64()).ln();
+        // Op mix: 25% submit, 45% infer, 10% cancel, 10% forget, and
+        // (when enabled) 5% evict + 5% malformed frame; disabled fault
+        // mass folds into infer.
+        let roll = rng.next_f64();
+        let op = if roll < 0.25 {
+            let (v, p) = zipf(&mut rng);
+            submits += 1;
+            TraceOp::Submit {
+                model: cfg.variants[v].clone(),
+                steps: cfg.steps_range.0
+                    + rng.below(cfg.steps_range.1 - cfg.steps_range.0 + 1),
+                samples: cfg.samples,
+                seed: rng.next_u64() % 10_000,
+                // int8 is inference-only; training submits coerce to f32.
+                precision: if p == Precision::I8 { Precision::F32 } else { p },
+            }
+        } else if roll < 0.80 && submits > 0 && roll >= 0.70 {
+            if roll < 0.75 {
+                TraceOp::Cancel { submit: rng.below(submits) }
+            } else {
+                TraceOp::Forget { submit: rng.below(submits) }
+            }
+        } else if cfg.evict && (0.80..0.85).contains(&roll) {
+            let (v, p) = zipf(&mut rng);
+            TraceOp::Evict { model: cfg.variants[v].clone(), precision: p }
+        } else if cfg.malformed && (0.85..0.90).contains(&roll) {
+            bad_frame += 1;
+            TraceOp::Frame { line: BAD_FRAMES[bad_frame % BAD_FRAMES.len()].to_string() }
+        } else {
+            let (v, p) = zipf(&mut rng);
+            TraceOp::Infer {
+                model: cfg.variants[v].clone(),
+                precision: p,
+                seed: rng.next_u64() % 10_000,
+            }
+        };
+        events.push(TraceEvent { at_ms: clock_ms, op });
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_cfg(events: usize, seed: u64) -> GeneratorConfig {
+        GeneratorConfig::new(vec!["a".into(), "b".into()], events, seed)
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(&demo_cfg(200, 42));
+        let b = generate(&demo_cfg(200, 42));
+        assert_eq!(a, b);
+        let c = generate(&demo_cfg(200, 43));
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn mix_covers_all_ops_and_targets_are_valid() {
+        let mut cfg = demo_cfg(600, 7);
+        cfg.evict = true;
+        cfg.malformed = true;
+        let events = generate(&cfg);
+        assert_eq!(events.len(), 600);
+        let mut submits = 0usize;
+        let mut counts = [0usize; 6];
+        let mut last_ms = 0.0;
+        for ev in &events {
+            assert!(ev.at_ms >= last_ms, "timestamps must be monotone");
+            last_ms = ev.at_ms;
+            match &ev.op {
+                TraceOp::Submit { steps, precision, .. } => {
+                    assert!((3..=8).contains(steps));
+                    assert!(precision.trainable(), "submits must be trainable precisions");
+                    submits += 1;
+                    counts[0] += 1;
+                }
+                TraceOp::Infer { .. } => counts[1] += 1,
+                TraceOp::Cancel { submit } => {
+                    assert!(*submit < submits, "cancel must target an earlier submit");
+                    counts[2] += 1;
+                }
+                TraceOp::Forget { submit } => {
+                    assert!(*submit < submits);
+                    counts[3] += 1;
+                }
+                TraceOp::Evict { .. } => counts[4] += 1,
+                TraceOp::Frame { .. } => counts[5] += 1,
+            }
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert!(*c > 0, "op kind {i} never generated: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_skews_toward_first_variant() {
+        let events = generate(&demo_cfg(500, 9));
+        let first = events
+            .iter()
+            .filter(|e| matches!(&e.op, TraceOp::Infer { model, .. } if model == "a"))
+            .count();
+        let second = events
+            .iter()
+            .filter(|e| matches!(&e.op, TraceOp::Infer { model, .. } if model == "b"))
+            .count();
+        assert!(
+            first > second,
+            "zipf(1.0) must favor the rank-0 variant: {first} vs {second}"
+        );
+    }
+
+    #[test]
+    fn disabled_faults_never_appear() {
+        let events = generate(&demo_cfg(400, 11));
+        assert!(events
+            .iter()
+            .all(|e| !matches!(e.op, TraceOp::Evict { .. } | TraceOp::Frame { .. })));
+    }
+}

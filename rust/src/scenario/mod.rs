@@ -1,0 +1,33 @@
+//! Workload scenario harness: the correctness backstop for the serving
+//! core (`wasi-train soak`, DESIGN.md §Scenario harness).
+//!
+//! The paper's deployment story is a long-lived on-device process
+//! personalizing continuously while serving inference.  Production
+//! on-device stacks live or die by behaviour under *messy* workloads —
+//! cancel storms, interleaved train/infer traffic, cache pressure — so
+//! this module drives a [`crate::serve::Service`] with replayed or
+//! synthesized adversarial traffic and checks the serving invariants
+//! under load:
+//!
+//! * [`trace`] — the JSON-lines trace format (record + replay): any
+//!   failing run is reproducible from its trace file;
+//! * [`generator`] — deterministic seeded workload synthesis (Zipf
+//!   variant × precision mix, exponential arrivals);
+//! * [`faults`] — the [`FaultPlan`]: cancel storms and worker death
+//!   delivered through the service's [`crate::serve::FaultHook`],
+//!   pool eviction and malformed frames delivered as trace events;
+//! * [`telemetry`] — queue-depth series, pool occupancy, latency
+//!   histograms, and the [`SoakReport`] (`SOAK_report.json`);
+//! * [`soak`] — the bounded driver tying it together.
+
+pub mod faults;
+pub mod generator;
+pub mod soak;
+pub mod telemetry;
+pub mod trace;
+
+pub use faults::{FaultPlan, PlanHook};
+pub use generator::{generate, GeneratorConfig};
+pub use soak::{run_soak, run_soak_to, SoakConfig};
+pub use telemetry::{LatencyStats, SoakReport};
+pub use trace::{read_trace, write_trace, TraceEvent, TraceOp};

@@ -1,0 +1,409 @@
+//! The bounded soak driver: replay (or synthesize) a workload trace
+//! against a live [`Service`], inject the planned faults, check the
+//! serving invariants, and measure telemetry into a [`SoakReport`].
+//!
+//! Invariants checked (violations end up in `report.violations`; a
+//! healthy soak reports NONE):
+//!
+//! * every submitted job emits **exactly one** terminal event
+//!   (Done/Failed) on its stream — "exactly one party writes each
+//!   terminal state", under contention;
+//! * every job failure is an *expected* one: a cancellation (client
+//!   cancel or cancel storm), a contained worker-death panic on a job
+//!   the plan scheduled to die, or a shutdown kill on a truncated run;
+//! * pool inference never fails;
+//! * malformed protocol frames answer in-band (parseable `ok:false`
+//!   lines, never a dropped frame or a session kill);
+//! * the infer cache loads each (variant, precision) entry **exactly
+//!   once** (plus one rebuild per eviction when the eviction fault is
+//!   active);
+//! * the service drains to idle: empty queue, nothing running, after
+//!   the last job settles.
+//!
+//! Determinism: the event sequence is a pure function of the trace
+//! (itself a pure function of the seed when generated), and the
+//! invariant outcomes are timing-robust — which jobs *complete* vs
+//! *cancel* may vary with scheduling, but every outcome is classified
+//! against the plan, so a clean run is clean on every machine.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::FinetuneConfig;
+use crate::engine::EngineKind;
+use crate::precision::Precision;
+use crate::serve::{handle_line, Flow, InferRequest, JobId, JobSpec, Service, ServiceConfig};
+use crate::util::json::Json;
+
+use super::faults::{silence_injected_panics, FaultPlan, PlanHook};
+use super::generator::{generate, GeneratorConfig};
+use super::telemetry::SoakReport;
+use super::trace::{read_trace, write_trace, TraceEvent, TraceOp};
+
+/// One soak run's parameters.
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    /// Artifact directory the service serves from.
+    pub artifacts: PathBuf,
+    pub workers: usize,
+    /// Events to generate when no input trace is given.
+    pub events: usize,
+    /// Wallclock cap in seconds; hitting it truncates the run (marked
+    /// in the report) instead of hanging CI.
+    pub max_seconds: f64,
+    pub seed: u64,
+    /// Variants to spread load over; empty = the demo pair.
+    pub variants: Vec<String>,
+    pub faults: FaultPlan,
+    /// Replay this trace instead of generating one.
+    pub trace_in: Option<PathBuf>,
+    /// Record the (generated or replayed) trace here.
+    pub trace_out: Option<PathBuf>,
+    /// Honor the trace's `at_ms` gaps in real time; off = replay as
+    /// fast as the driver can issue events (CI quick mode).
+    pub pace: bool,
+}
+
+impl SoakConfig {
+    /// The CI quick soak: ~120 events, 2 workers, fixed seed.
+    pub fn quick(artifacts: impl Into<PathBuf>) -> SoakConfig {
+        SoakConfig {
+            artifacts: artifacts.into(),
+            workers: 2,
+            events: 120,
+            max_seconds: 60.0,
+            seed: 233,
+            variants: Vec::new(),
+            faults: FaultPlan::none(),
+            trace_in: None,
+            trace_out: None,
+            pace: false,
+        }
+    }
+}
+
+/// What one job's watcher thread observed from its event stream.
+struct JobWatch {
+    id: JobId,
+    terminals: usize,
+    done_latency_ms: Option<f64>,
+    error: Option<String>,
+}
+
+/// Run one soak to completion and return its report.  Errors are
+/// *setup* failures (bad artifact dir, unreadable trace); workload
+/// failures are violations inside the report, not `Err`s.
+pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
+    let variants: Vec<String> = if cfg.variants.is_empty() {
+        vec!["vit_demo_wasi_eps80".into(), "vit_demo_vanilla".into()]
+    } else {
+        cfg.variants.clone()
+    };
+    let trace: Vec<TraceEvent> = match &cfg.trace_in {
+        Some(path) => read_trace(path)?,
+        None => {
+            let mut gcfg = GeneratorConfig::new(variants, cfg.events, cfg.seed);
+            gcfg.evict = cfg.faults.evict;
+            gcfg.malformed = cfg.faults.malformed;
+            generate(&gcfg)
+        }
+    };
+    if let Some(path) = &cfg.trace_out {
+        write_trace(path, &trace)?;
+    }
+
+    if cfg.faults.worker_death {
+        silence_injected_panics();
+    }
+    let mut scfg = ServiceConfig::new(cfg.artifacts.clone()).with_workers(cfg.workers);
+    if cfg.faults.service_side() {
+        scfg = scfg.with_faults(std::sync::Arc::new(PlanHook::new(cfg.faults)));
+    }
+    let svc = Service::start(scfg)?;
+    let entry = svc.default_entry()?;
+
+    let mut report = SoakReport {
+        seed: cfg.seed,
+        faults: cfg.faults.to_string(),
+        workers: cfg.workers.max(1),
+        events_total: trace.len(),
+        ..SoakReport::default()
+    };
+    let start = Instant::now();
+    // (variant, precision) pairs pool inference actually touched — the
+    // exactly-once load invariant is checked against this set.
+    let mut infer_keys: BTreeSet<(String, Precision)> = BTreeSet::new();
+
+    let watches: Vec<JobWatch> = std::thread::scope(|s| {
+        let mut submit_ids: Vec<Option<JobId>> = Vec::new();
+        let mut watchers = Vec::new();
+        for ev in &trace {
+            let elapsed = start.elapsed().as_secs_f64();
+            if elapsed > cfg.max_seconds {
+                report.truncated = true;
+                break;
+            }
+            if cfg.pace {
+                let target_s = ev.at_ms / 1e3;
+                if target_s > elapsed {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        target_s - elapsed,
+                    ));
+                }
+            }
+            report
+                .queue_depth
+                .push((start.elapsed().as_secs_f64() * 1e3, svc.queue_depth()));
+            match &ev.op {
+                TraceOp::Submit { model, steps, samples, seed, precision } => {
+                    report.ops.submits += 1;
+                    let fcfg = FinetuneConfig::builder()
+                        .model(model.clone())
+                        .steps(*steps)
+                        .samples(*samples)
+                        .seed(*seed)
+                        .lr0(0.1)
+                        .engine(EngineKind::Native)
+                        .precision(*precision)
+                        .build();
+                    match svc.submit(JobSpec::new(fcfg)) {
+                        Err(e) => {
+                            submit_ids.push(None);
+                            report
+                                .violations
+                                .push(format!("submit of {model:?} rejected: {e:#}"));
+                        }
+                        Ok(id) => {
+                            submit_ids.push(Some(id));
+                            let rx = svc.take_events(id);
+                            let submitted = Instant::now();
+                            watchers.push(s.spawn(move || {
+                                let mut w = JobWatch {
+                                    id,
+                                    terminals: 0,
+                                    done_latency_ms: None,
+                                    error: None,
+                                };
+                                let Some(rx) = rx else { return w };
+                                for ev in rx.iter() {
+                                    match ev {
+                                        crate::serve::JobEvent::Done { .. } => {
+                                            w.terminals += 1;
+                                            w.done_latency_ms = Some(
+                                                submitted.elapsed().as_secs_f64() * 1e3,
+                                            );
+                                        }
+                                        crate::serve::JobEvent::Failed { error, .. } => {
+                                            w.terminals += 1;
+                                            w.error = Some(error);
+                                        }
+                                        _ => {}
+                                    }
+                                }
+                                w
+                            }));
+                        }
+                    }
+                }
+                TraceOp::Infer { model, precision, seed } => {
+                    report.ops.infers += 1;
+                    infer_keys.insert((model.clone(), *precision));
+                    let req = InferRequest {
+                        model: model.clone(),
+                        engine: EngineKind::Auto,
+                        precision: *precision,
+                        seed: *seed,
+                        x: None,
+                    };
+                    let t0 = Instant::now();
+                    match svc.infer(None, &req, None) {
+                        Ok(out) => {
+                            report
+                                .infer_roundtrip
+                                .push(t0.elapsed().as_secs_f64() * 1e3);
+                            if out.preds.is_empty() {
+                                report.violations.push(format!(
+                                    "infer on {model:?} ({precision}) returned no predictions"
+                                ));
+                            }
+                        }
+                        Err(e) => report.violations.push(format!(
+                            "infer on {model:?} ({precision}) failed: {e:#}"
+                        )),
+                    }
+                }
+                TraceOp::Cancel { submit } => {
+                    report.ops.cancels += 1;
+                    if let Some(Some(id)) = submit_ids.get(*submit) {
+                        let _ = svc.cancel(*id);
+                    }
+                }
+                TraceOp::Forget { submit } => {
+                    report.ops.forgets += 1;
+                    if let Some(Some(id)) = submit_ids.get(*submit) {
+                        let _ = svc.forget(*id);
+                    }
+                }
+                TraceOp::Evict { model, precision } => {
+                    report.ops.evicts += 1;
+                    let _ = entry.evict_infer(model, *precision);
+                }
+                TraceOp::Frame { line } => {
+                    report.ops.frames += 1;
+                    let mut sink: Vec<u8> = Vec::new();
+                    match handle_line(&svc, line.trim(), &mut sink) {
+                        Err(e) => report
+                            .violations
+                            .push(format!("frame {line:?} I/O error: {e}")),
+                        Ok(flow) => {
+                            if flow == Flow::Shutdown {
+                                report.violations.push(format!(
+                                    "frame {line:?} triggered a session shutdown"
+                                ));
+                            }
+                            let text = String::from_utf8_lossy(&sink);
+                            let lines: Vec<&str> =
+                                text.lines().filter(|l| !l.trim().is_empty()).collect();
+                            if lines.is_empty() {
+                                report.violations.push(format!(
+                                    "frame {line:?} was silently dropped (no response)"
+                                ));
+                            }
+                            for l in lines {
+                                let ok = Json::parse(l)
+                                    .ok()
+                                    .and_then(|v| v.get("ok").and_then(|o| o.as_bool()));
+                                if ok.is_none() {
+                                    report.violations.push(format!(
+                                        "frame {line:?} drew a non-protocol response {l:?}"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            report.events_replayed += 1;
+        }
+        if report.truncated {
+            // Cap hit: stop the service so in-flight jobs settle fast
+            // (their watchers observe the shutdown/cancel terminal).
+            svc.shutdown();
+        }
+        watchers
+            .into_iter()
+            .map(|h| h.join().unwrap_or(JobWatch {
+                id: JobId(0),
+                terminals: 0,
+                done_latency_ms: None,
+                error: Some("watcher thread panicked".into()),
+            }))
+            .collect()
+    });
+
+    // All watchers joined => every submitted job reached its terminal
+    // transition; classify outcomes and check exactly-one-terminal.
+    for w in &watches {
+        if w.terminals != 1 {
+            report.violations.push(format!(
+                "job {} emitted {} terminal events (exactly 1 required)",
+                w.id, w.terminals
+            ));
+        }
+        match (&w.error, w.done_latency_ms) {
+            (None, Some(ms)) => {
+                report.jobs.done += 1;
+                report.submit_to_done.push(ms);
+            }
+            (Some(e), _) if e.contains("cancelled") => report.jobs.cancelled += 1,
+            (Some(e), _) if e.contains("worker panicked") => {
+                report.jobs.panicked += 1;
+                if !cfg.faults.kills_job(w.id) {
+                    report.violations.push(format!(
+                        "job {} hit an UNPLANNED worker panic: {e}",
+                        w.id
+                    ));
+                }
+            }
+            (Some(e), _) if e.contains("shut down") => {
+                report.jobs.shutdown += 1;
+                if !report.truncated {
+                    report.violations.push(format!(
+                        "job {} was shutdown-killed in a non-truncated run: {e}",
+                        w.id
+                    ));
+                }
+            }
+            (Some(e), _) => {
+                report.jobs.unexpected += 1;
+                report
+                    .violations
+                    .push(format!("job {} failed unexpectedly: {e}", w.id));
+            }
+            (None, None) => {
+                report.jobs.unexpected += 1;
+                report.violations.push(format!(
+                    "job {} ended with neither report nor error",
+                    w.id
+                ));
+            }
+        }
+    }
+
+    // Drain-to-idle: with every job terminal, nothing may remain queued
+    // or running.
+    if svc.queue_depth() != 0 {
+        report
+            .violations
+            .push(format!("service did not drain: queue depth {}", svc.queue_depth()));
+    }
+    if svc.running_count() != 0 {
+        report.violations.push(format!(
+            "service did not drain: {} jobs still running",
+            svc.running_count()
+        ));
+    }
+
+    // Exactly-once loads: without evictions the pool must have built
+    // precisely one engine per touched (variant, precision); each
+    // eviction licenses at most one rebuild.
+    report.pool_loads = entry.infer_loads();
+    report.pool_evictions = entry.infer_evictions();
+    report.pool_occupancy = entry
+        .cached_infer_keys()
+        .into_iter()
+        .map(|(m, p)| (m, p.to_string()))
+        .collect();
+    let used = infer_keys.len() as u64;
+    if report.pool_evictions == 0 {
+        if report.pool_loads != used {
+            report.violations.push(format!(
+                "pool loaded {} engines for {} distinct (variant, precision) keys",
+                report.pool_loads, used
+            ));
+        }
+    } else if report.pool_loads > used + report.pool_evictions {
+        report.violations.push(format!(
+            "pool loaded {} engines for {} keys + {} evictions",
+            report.pool_loads, used, report.pool_evictions
+        ));
+    }
+
+    svc.shutdown();
+    report.soak_seconds = start.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Convenience used by `wasi-train bench` and the CLI: run and also
+/// write the JSON report when `out` is given.
+pub fn run_soak_to(cfg: &SoakConfig, out: Option<&std::path::Path>) -> Result<SoakReport> {
+    let report = run_soak(cfg)?;
+    if let Some(path) = out {
+        std::fs::write(path, format!("{}\n", report.to_json()))
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+    }
+    Ok(report)
+}

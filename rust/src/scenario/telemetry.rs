@@ -1,0 +1,265 @@
+//! Soak telemetry: latency histograms, queue-depth series, pool
+//! occupancy, and the [`SoakReport`] that serializes all of it as
+//! `SOAK_report.json` (field definitions in DESIGN.md §Scenario
+//! harness).
+
+use crate::util::json::{arr, finite_num, num, obj, str as jstr, Json};
+use crate::util::stats::percentile;
+
+/// Upper bucket edges (ms) of the fixed log2 latency histogram; one
+/// extra overflow bucket follows.  Fixed edges keep the report's
+/// structure host-independent — only counts vary with machine speed.
+const HIST_EDGES_MS: [f64; 17] = [
+    0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0,
+    2048.0, 4096.0, 8192.0, 16384.0,
+];
+
+/// A latency sample set with percentile + histogram serialization.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn push(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn p(&self, pct: f64) -> f64 {
+        percentile(&self.samples_ms, pct)
+    }
+
+    /// `{count, p50_ms, p95_ms, p99_ms, histogram: {le_ms, counts}}`;
+    /// empty sets serialize percentiles as null (never NaN — the file
+    /// must stay parseable JSON).
+    pub fn to_json(&self) -> Json {
+        let mut counts = vec![0u64; HIST_EDGES_MS.len() + 1];
+        for s in &self.samples_ms {
+            let idx = HIST_EDGES_MS
+                .iter()
+                .position(|e| s <= e)
+                .unwrap_or(HIST_EDGES_MS.len());
+            counts[idx] += 1;
+        }
+        obj(vec![
+            ("count", num(self.count() as f64)),
+            ("p50_ms", finite_num(self.p(50.0))),
+            ("p95_ms", finite_num(self.p(95.0))),
+            ("p99_ms", finite_num(self.p(99.0))),
+            (
+                "histogram",
+                obj(vec![
+                    ("le_ms", arr(HIST_EDGES_MS.iter().map(|e| num(*e)))),
+                    ("counts", arr(counts.iter().map(|c| num(*c as f64)))),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// How many of each trace op the driver executed.
+#[derive(Debug, Default, Clone)]
+pub struct OpCounts {
+    pub submits: usize,
+    pub infers: usize,
+    pub cancels: usize,
+    pub forgets: usize,
+    pub evicts: usize,
+    pub frames: usize,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> usize {
+        self.submits + self.infers + self.cancels + self.forgets + self.evicts + self.frames
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("submits", num(self.submits as f64)),
+            ("infers", num(self.infers as f64)),
+            ("cancels", num(self.cancels as f64)),
+            ("forgets", num(self.forgets as f64)),
+            ("evicts", num(self.evicts as f64)),
+            ("frames", num(self.frames as f64)),
+        ])
+    }
+}
+
+/// Terminal-outcome classification across all submitted jobs.
+#[derive(Debug, Default, Clone)]
+pub struct JobOutcomes {
+    pub done: usize,
+    /// Failed with a cancellation error (client cancel or cancel storm).
+    pub cancelled: usize,
+    /// Failed with a contained worker panic (worker-death fault).
+    pub panicked: usize,
+    /// Failed because the service shut down first (truncated runs).
+    pub shutdown: usize,
+    /// Any other failure — counted AND reported as a violation.
+    pub unexpected: usize,
+}
+
+impl JobOutcomes {
+    pub fn total(&self) -> usize {
+        self.done + self.cancelled + self.panicked + self.shutdown + self.unexpected
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("done", num(self.done as f64)),
+            ("cancelled", num(self.cancelled as f64)),
+            ("panicked", num(self.panicked as f64)),
+            ("shutdown", num(self.shutdown as f64)),
+            ("unexpected", num(self.unexpected as f64)),
+        ])
+    }
+}
+
+/// Everything a soak run measured, serialized as `SOAK_report.json`.
+#[derive(Debug, Default, Clone)]
+pub struct SoakReport {
+    pub seed: u64,
+    pub faults: String,
+    pub workers: usize,
+    /// Events in the trace vs. events actually executed (fewer when the
+    /// wallclock cap truncated the run).
+    pub events_total: usize,
+    pub events_replayed: usize,
+    pub truncated: bool,
+    pub soak_seconds: f64,
+    pub ops: OpCounts,
+    pub jobs: JobOutcomes,
+    /// (ms since start, queue depth) sampled before each event.
+    pub queue_depth: Vec<(f64, usize)>,
+    /// Final (variant, precision) keys resident in the infer cache.
+    pub pool_occupancy: Vec<(String, String)>,
+    pub pool_loads: u64,
+    pub pool_evictions: u64,
+    pub submit_to_done: LatencyStats,
+    pub infer_roundtrip: LatencyStats,
+    /// Invariant violations; a healthy soak ends with this EMPTY.
+    pub violations: Vec<String>,
+}
+
+impl SoakReport {
+    pub fn queue_depth_max(&self) -> usize {
+        self.queue_depth.iter().map(|(_, d)| *d).max().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        // Downsample the depth series to ~64 points (stride-sampled,
+        // deterministic for a given series) — the max is exact.
+        let stride = (self.queue_depth.len() / 64).max(1);
+        let series: Vec<Json> = self
+            .queue_depth
+            .iter()
+            .step_by(stride)
+            .map(|(ms, d)| arr([num(*ms), num(*d as f64)]))
+            .collect();
+        obj(vec![
+            ("seed", num(self.seed as f64)),
+            ("faults", jstr(self.faults.clone())),
+            ("workers", num(self.workers as f64)),
+            ("events_total", num(self.events_total as f64)),
+            ("events_replayed", num(self.events_replayed as f64)),
+            ("truncated", Json::Bool(self.truncated)),
+            ("soak_seconds", finite_num(self.soak_seconds)),
+            ("ops", self.ops.to_json()),
+            ("jobs", self.jobs.to_json()),
+            (
+                "queue_depth",
+                obj(vec![
+                    ("max", num(self.queue_depth_max() as f64)),
+                    ("samples", num(self.queue_depth.len() as f64)),
+                    ("series", Json::Arr(series)),
+                ]),
+            ),
+            (
+                "pool",
+                obj(vec![
+                    ("loads", num(self.pool_loads as f64)),
+                    ("evictions", num(self.pool_evictions as f64)),
+                    (
+                        "occupancy",
+                        arr(self.pool_occupancy.iter().map(|(m, p)| {
+                            obj(vec![("model", jstr(m.clone())), ("precision", jstr(p.clone()))])
+                        })),
+                    ),
+                ]),
+            ),
+            ("submit_to_done", self.submit_to_done.to_json()),
+            ("infer_roundtrip", self.infer_roundtrip.to_json()),
+            (
+                "violations",
+                arr(self.violations.iter().map(|v| jstr(v.clone()))),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_stats_histogram_and_percentiles() {
+        let mut l = LatencyStats::default();
+        for ms in [0.1, 0.3, 1.5, 3.0, 100.0, 20_000.0] {
+            l.push(ms);
+        }
+        let j = l.to_json();
+        assert_eq!(j.get("count").and_then(|v| v.as_usize()), Some(6));
+        assert!(j.get("p50_ms").and_then(|v| v.as_f64()).is_some());
+        let counts = j
+            .get("histogram")
+            .and_then(|h| h.get("counts"))
+            .unwrap()
+            .f64_vec()
+            .unwrap();
+        assert_eq!(counts.len(), HIST_EDGES_MS.len() + 1);
+        assert_eq!(counts.iter().sum::<f64>(), 6.0);
+        assert_eq!(counts[0], 1.0, "0.1ms lands in the first bucket");
+        assert_eq!(*counts.last().unwrap(), 1.0, "20s lands in overflow");
+    }
+
+    #[test]
+    fn empty_stats_serialize_null_not_nan() {
+        let j = LatencyStats::default().to_json();
+        assert_eq!(j.get("p50_ms"), Some(&Json::Null));
+        // The serialized form must be parseable JSON.
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn report_serializes_and_reparses() {
+        let mut r = SoakReport {
+            seed: 233,
+            faults: "cancel-storm,worker-death".into(),
+            workers: 2,
+            events_total: 10,
+            events_replayed: 10,
+            ..SoakReport::default()
+        };
+        r.queue_depth = (0..200).map(|i| (i as f64, i % 7)).collect();
+        r.pool_occupancy.push(("vit_demo_vanilla".into(), "i8".into()));
+        r.submit_to_done.push(12.0);
+        r.violations.push("example".into());
+        let j = r.to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("queue_depth").and_then(|q| q.get("max")).and_then(|v| v.as_usize()), Some(6));
+        let series = back
+            .get("queue_depth")
+            .and_then(|q| q.get("series"))
+            .and_then(|v| v.as_arr())
+            .unwrap();
+        assert!(series.len() <= 67, "downsampled series stays bounded");
+        assert_eq!(
+            back.get("violations").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(1)
+        );
+    }
+}

@@ -1,0 +1,247 @@
+//! Workload trace format: the JSON-lines record/replay layer of the
+//! scenario harness (DESIGN.md §Scenario harness).
+//!
+//! A trace is an ordered list of timestamped operations against a
+//! [`crate::serve::Service`].  Cancel/forget events target jobs by
+//! **submit ordinal** (the k-th submit in the trace, 0-based) rather
+//! than by `JobId`, so a recorded trace replays identically against a
+//! fresh service whose ids start over.  One JSON object per line:
+//!
+//! ```json
+//! {"at_ms":12.5,"op":"submit","model":"vit_demo_vanilla","steps":4,
+//!  "samples":32,"seed":7,"precision":"bf16"}
+//! {"at_ms":14.0,"op":"infer","model":"vit_demo_vanilla","precision":"i8","seed":3}
+//! {"at_ms":20.0,"op":"cancel","submit":0}
+//! ```
+//!
+//! `f64` timestamps round-trip exactly (Rust's float `Display` is
+//! shortest-roundtrip), so a written trace re-reads bit-identically.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::precision::Precision;
+use crate::util::json::{num, obj, str as jstr, Json};
+
+/// One operation against the service under soak.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceOp {
+    /// Enqueue a fine-tune job.
+    Submit { model: String, steps: usize, samples: usize, seed: u64, precision: Precision },
+    /// Pool inference on the driver thread.
+    Infer { model: String, precision: Precision, seed: u64 },
+    /// Cancel the job created by the trace's `submit`-th submit event.
+    Cancel { submit: usize },
+    /// Forget that job (a no-op unless it is already terminal).
+    Forget { submit: usize },
+    /// Evict a (variant, precision) entry from the shared infer cache
+    /// (the eviction-under-use fault).
+    Evict { model: String, precision: Precision },
+    /// Push a raw protocol frame through `serve::proto::handle_line`
+    /// (the malformed-frame fault; the response must be in-band).
+    Frame { line: String },
+}
+
+/// A timestamped [`TraceOp`]; `at_ms` is milliseconds since soak start
+/// (honored when pacing is enabled, recorded either way).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub at_ms: f64,
+    pub op: TraceOp,
+}
+
+impl TraceEvent {
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&'static str, Json)> = vec![("at_ms", num(self.at_ms))];
+        match &self.op {
+            TraceOp::Submit { model, steps, samples, seed, precision } => {
+                fields.push(("op", jstr("submit")));
+                fields.push(("model", jstr(model.clone())));
+                fields.push(("steps", num(*steps as f64)));
+                fields.push(("samples", num(*samples as f64)));
+                fields.push(("seed", num(*seed as f64)));
+                fields.push(("precision", jstr(precision.to_string())));
+            }
+            TraceOp::Infer { model, precision, seed } => {
+                fields.push(("op", jstr("infer")));
+                fields.push(("model", jstr(model.clone())));
+                fields.push(("precision", jstr(precision.to_string())));
+                fields.push(("seed", num(*seed as f64)));
+            }
+            TraceOp::Cancel { submit } => {
+                fields.push(("op", jstr("cancel")));
+                fields.push(("submit", num(*submit as f64)));
+            }
+            TraceOp::Forget { submit } => {
+                fields.push(("op", jstr("forget")));
+                fields.push(("submit", num(*submit as f64)));
+            }
+            TraceOp::Evict { model, precision } => {
+                fields.push(("op", jstr("evict")));
+                fields.push(("model", jstr(model.clone())));
+                fields.push(("precision", jstr(precision.to_string())));
+            }
+            TraceOp::Frame { line } => {
+                fields.push(("op", jstr("frame")));
+                fields.push(("line", jstr(line.clone())));
+            }
+        }
+        obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceEvent> {
+        let at_ms = v
+            .req("at_ms")?
+            .as_f64()
+            .ok_or_else(|| anyhow!("\"at_ms\" must be a number"))?;
+        let op_name = v
+            .req("op")?
+            .as_str()
+            .ok_or_else(|| anyhow!("\"op\" must be a string"))?;
+        let model = |key: &str| -> Result<String> {
+            Ok(v.req(key)?
+                .as_str()
+                .ok_or_else(|| anyhow!("{key:?} must be a string"))?
+                .to_string())
+        };
+        let uint = |key: &str| -> Result<usize> {
+            v.req(key)?
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as usize)
+                .ok_or_else(|| anyhow!("{key:?} must be a non-negative integer"))
+        };
+        let precision = || -> Result<Precision> {
+            v.req("precision")?
+                .as_str()
+                .ok_or_else(|| anyhow!("\"precision\" must be a string"))?
+                .parse()
+        };
+        let op = match op_name {
+            "submit" => TraceOp::Submit {
+                model: model("model")?,
+                steps: uint("steps")?,
+                samples: uint("samples")?,
+                seed: uint("seed")? as u64,
+                precision: precision()?,
+            },
+            "infer" => TraceOp::Infer {
+                model: model("model")?,
+                precision: precision()?,
+                seed: uint("seed")? as u64,
+            },
+            "cancel" => TraceOp::Cancel { submit: uint("submit")? },
+            "forget" => TraceOp::Forget { submit: uint("submit")? },
+            "evict" => TraceOp::Evict { model: model("model")?, precision: precision()? },
+            "frame" => TraceOp::Frame { line: model("line")? },
+            other => return Err(anyhow!("unknown trace op {other:?}")),
+        };
+        Ok(TraceEvent { at_ms, op })
+    }
+}
+
+/// Serialize a trace as JSON-lines text (one event per line).
+pub fn to_lines(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSON-lines trace (blank lines skipped); errors carry the
+/// offending line number.
+pub fn from_lines(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        events.push(
+            TraceEvent::from_json(&v).with_context(|| format!("trace line {}", i + 1))?,
+        );
+    }
+    Ok(events)
+}
+
+pub fn write_trace(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    std::fs::write(path, to_lines(events))
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+pub fn read_trace(path: &Path) -> Result<Vec<TraceEvent>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    from_lines(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                at_ms: 0.0,
+                op: TraceOp::Submit {
+                    model: "vit_demo_vanilla".into(),
+                    steps: 4,
+                    samples: 32,
+                    seed: 7,
+                    precision: Precision::Bf16,
+                },
+            },
+            TraceEvent {
+                at_ms: 1.25,
+                op: TraceOp::Infer {
+                    model: "vit_demo_wasi_eps80".into(),
+                    precision: Precision::I8,
+                    seed: 3,
+                },
+            },
+            TraceEvent { at_ms: 2.5000001, op: TraceOp::Cancel { submit: 0 } },
+            TraceEvent { at_ms: 3.0, op: TraceOp::Forget { submit: 0 } },
+            TraceEvent {
+                at_ms: 4.0,
+                op: TraceOp::Evict {
+                    model: "vit_demo_wasi_eps80".into(),
+                    precision: Precision::I8,
+                },
+            },
+            TraceEvent {
+                at_ms: 5.0,
+                op: TraceOp::Frame { line: "{\"cmd\":\"bogus\"}".into() },
+            },
+        ]
+    }
+
+    #[test]
+    fn trace_roundtrips_bit_exactly() {
+        let events = sample();
+        let text = to_lines(&events);
+        let back = from_lines(&text).unwrap();
+        assert_eq!(events, back);
+        // And a second serialization is byte-identical (f64 Display is
+        // shortest-roundtrip; objects serialize deterministically).
+        assert_eq!(text, to_lines(&back));
+    }
+
+    #[test]
+    fn trace_rejects_malformed_lines() {
+        assert!(from_lines("{\"at_ms\":0.0,\"op\":\"nope\"}\n").is_err());
+        assert!(from_lines("{\"op\":\"cancel\",\"submit\":0}\n").is_err()); // no at_ms
+        let err = from_lines("{}\nnot json\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 1"), "{err:#}");
+        // Negative ordinals and fractional steps are rejected.
+        assert!(from_lines("{\"at_ms\":0,\"op\":\"cancel\",\"submit\":-1}\n").is_err());
+        assert!(from_lines(
+            "{\"at_ms\":0,\"op\":\"submit\",\"model\":\"m\",\"steps\":1.5,\
+             \"samples\":32,\"seed\":1,\"precision\":\"f32\"}\n"
+        )
+        .is_err());
+    }
+}

@@ -36,4 +36,4 @@ pub use job::{JobEvent, JobId, JobSpec, JobState};
 pub use pool::{ModelPool, PoolEntry, PooledInfer};
 pub use proto::{handle_line, serve_lines, Flow};
 pub use runner::{InferOutput, InferRequest, RunnerEvent};
-pub use service::{Service, ServiceConfig};
+pub use service::{FaultAction, FaultHook, Service, ServiceConfig};

@@ -23,6 +23,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
@@ -41,8 +42,23 @@ pub struct PoolEntry {
     init_params: Mutex<BTreeMap<String, Arc<Vec<f32>>>>,
     /// Shared native inference engines, one per (variant, precision);
     /// reduced-precision entries hold their quantized-on-load weights.
-    infer_cache: Mutex<BTreeMap<(String, Precision), Arc<NativeInferEngine>>>,
+    /// Each key maps to a build *slot*: the outer lock only registers
+    /// slots (never held across a build), while the per-key slot lock
+    /// serializes builders of the SAME key so every entry is
+    /// constructed exactly once — concurrent mixed-precision requests
+    /// for one variant build their three entries in parallel, and a
+    /// racing pair on one key shares the single winner's engine.
+    infer_cache: Mutex<BTreeMap<(String, Precision), Arc<InferSlot>>>,
+    /// Completed engine builds (exactly-once telemetry: equals the
+    /// number of distinct keys ever built, counting rebuilds after
+    /// eviction).
+    infer_loads: AtomicU64,
+    /// Cache entries removed by [`PoolEntry::evict_infer`].
+    infer_evictions: AtomicU64,
 }
+
+/// A per-(variant, precision) build slot (see `infer_cache`).
+type InferSlot = Mutex<Option<Arc<NativeInferEngine>>>;
 
 impl PoolEntry {
     /// Load `<dir>/manifest.json` and construct the best available
@@ -55,6 +71,8 @@ impl PoolEntry {
             dir,
             init_params: Mutex::new(BTreeMap::new()),
             infer_cache: Mutex::new(BTreeMap::new()),
+            infer_loads: AtomicU64::new(0),
+            infer_evictions: AtomicU64::new(0),
         }))
     }
 
@@ -119,28 +137,81 @@ impl PoolEntry {
             )?));
         }
         let key = (model.to_string(), precision);
-        if let Some(e) = self.infer_cache.lock().unwrap().get(&key) {
+        // Register (or find) the key's build slot under the outer lock,
+        // then build while holding ONLY the slot lock: same-key racers
+        // queue behind the first builder and reuse its engine (each
+        // entry is loaded exactly once — the quantize-on-load work is
+        // never duplicated), while distinct keys build in parallel.
+        let slot = {
+            let mut cache = self.infer_cache.lock().unwrap();
+            cache.entry(key).or_insert_with(|| Arc::new(Mutex::new(None))).clone()
+        };
+        let mut filled = slot.lock().unwrap();
+        if let Some(e) = filled.as_ref() {
             return Ok(PooledInfer::Shared(e.clone()));
         }
-        // Build OUTSIDE the cache lock (graph construction + whole-model
-        // quantization must not block unrelated requests) from the
-        // already-cached initial params — no second disk read.  A racing
-        // builder is harmless: first insert wins, both engines are valid.
         let eng = if precision == Precision::F32 {
             Arc::new(NativeInferEngine::load(entry)?)
         } else {
             let params = self.initial_params(model)?;
             Arc::new(NativeInferEngine::load_quantized_from(entry, &params, precision)?)
         };
-        let mut cache = self.infer_cache.lock().unwrap();
-        let eng = cache.entry(key).or_insert(eng).clone();
+        *filled = Some(eng.clone());
+        self.infer_loads.fetch_add(1, Ordering::Relaxed);
         Ok(PooledInfer::Shared(eng))
+    }
+
+    /// Drop a cached (variant, precision) inference engine so the next
+    /// request rebuilds it (the scenario harness's eviction-under-use
+    /// fault).  In-flight holders of the shared `Arc` keep serving from
+    /// the old engine — eviction is a cache decision, never a
+    /// correctness hazard.  Returns false when nothing was cached.
+    pub fn evict_infer(&self, model: &str, precision: Precision) -> bool {
+        let slot = self
+            .infer_cache
+            .lock()
+            .unwrap()
+            .remove(&(model.to_string(), precision));
+        match slot {
+            Some(s) => {
+                // Only count slots that actually held a built engine;
+                // an un-built slot's racer re-registers harmlessly.
+                let had = s.lock().unwrap().is_some();
+                if had {
+                    self.infer_evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                had
+            }
+            None => false,
+        }
     }
 
     /// Number of variants with a cached shared inference engine
     /// (introspection for tests and the bench record).
     pub fn cached_infer_engines(&self) -> usize {
-        self.infer_cache.lock().unwrap().len()
+        self.cached_infer_keys().len()
+    }
+
+    /// The (variant, precision) keys with a BUILT cached engine —
+    /// pool-occupancy telemetry for the soak report.
+    pub fn cached_infer_keys(&self) -> Vec<(String, Precision)> {
+        self.infer_cache
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, slot)| slot.lock().unwrap().is_some())
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Completed engine builds since open (exactly-once telemetry).
+    pub fn infer_loads(&self) -> u64 {
+        self.infer_loads.load(Ordering::Relaxed)
+    }
+
+    /// Cache evictions since open ([`PoolEntry::evict_infer`]).
+    pub fn infer_evictions(&self) -> u64 {
+        self.infer_evictions.load(Ordering::Relaxed)
     }
 }
 
@@ -285,6 +356,38 @@ mod tests {
         let entry_len = entry.manifest.model("vit_demo_vanilla").unwrap().params_len;
         assert!(native.packed_bytes().unwrap() < entry_len * 4);
         assert!(f.native().unwrap().packed_bytes().is_none());
+    }
+
+    #[test]
+    fn evict_infer_rebuilds_and_counts() {
+        let dir = demo_dir("evict");
+        let entry = PoolEntry::open(&dir).unwrap();
+        let a = entry
+            .shared_infer_at("vit_demo_vanilla", EngineKind::Auto, Precision::I8)
+            .unwrap();
+        assert_eq!(entry.infer_loads(), 1);
+        assert_eq!(entry.cached_infer_keys(), vec![("vit_demo_vanilla".to_string(), Precision::I8)]);
+        // Evicting a missing key is a no-op...
+        assert!(!entry.evict_infer("vit_demo_vanilla", Precision::F32));
+        assert_eq!(entry.infer_evictions(), 0);
+        // ...evicting the cached one counts and empties the cache...
+        assert!(entry.evict_infer("vit_demo_vanilla", Precision::I8));
+        assert_eq!(entry.infer_evictions(), 1);
+        assert_eq!(entry.cached_infer_engines(), 0);
+        // ...while the in-flight handle keeps serving, and the next
+        // request rebuilds (a second exactly-once load).
+        let old = a.native().unwrap();
+        assert_eq!(old.precision(), Precision::I8);
+        let b = entry
+            .shared_infer_at("vit_demo_vanilla", EngineKind::Auto, Precision::I8)
+            .unwrap();
+        assert_eq!(entry.infer_loads(), 2);
+        match (&a, &b) {
+            (PooledInfer::Shared(x), PooledInfer::Shared(y)) => {
+                assert!(!Arc::ptr_eq(x, y), "evicted engine must be rebuilt")
+            }
+            _ => panic!("demo variants must resolve to shared native engines"),
+        }
     }
 
     #[test]

@@ -156,7 +156,13 @@ fn parse_submit(req: &Json) -> Result<JobSpec> {
         b = b.seed(seed as u64);
     }
     if let Some(lr) = req.get("lr") {
-        b = b.lr0(lr.as_f64().ok_or_else(|| anyhow!("\"lr\" must be a number"))? as f32);
+        let lr = lr.as_f64().ok_or_else(|| anyhow!("\"lr\" must be a number"))?;
+        // `1e999` parses to +inf; an infinite/NaN learning rate would
+        // silently destroy the params mid-train, so reject it here.
+        if !lr.is_finite() {
+            return Err(anyhow!("\"lr\" must be finite"));
+        }
+        b = b.lr0(lr as f32);
     }
     if let Some(engine) = req.get("engine") {
         let s = engine.as_str().ok_or_else(|| anyhow!("\"engine\" must be a string"))?;
@@ -193,13 +199,17 @@ fn parse_infer(req: &Json) -> Result<InferRequest> {
     };
     let x = match req.get("x") {
         None => None,
-        Some(v) => Some(
-            v.f64_vec()
-                .map_err(|_| anyhow!("\"x\" must be an array of numbers"))?
-                .into_iter()
-                .map(|f| f as f32)
-                .collect::<Vec<f32>>(),
-        ),
+        Some(v) => {
+            let xs = v
+                .f64_vec()
+                .map_err(|_| anyhow!("\"x\" must be an array of numbers"))?;
+            // NaN/inf inputs (e.g. `1e999`) would propagate through the
+            // forward pass into garbage predictions — error in-band.
+            if xs.iter().any(|f| !f.is_finite()) {
+                return Err(anyhow!("\"x\" values must all be finite"));
+            }
+            Some(xs.into_iter().map(|f| f as f32).collect::<Vec<f32>>())
+        }
     };
     Ok(InferRequest {
         model: model.to_string(),
@@ -388,22 +398,39 @@ fn dispatch(
 
 /// The serve loop: read JSON-lines requests until EOF or `shutdown`,
 /// writing responses to `out`.  Blank lines are skipped; request errors
-/// are reported in-band.  Used by `wasi-train serve` over real
+/// — including a line that is not valid UTF-8 — are reported in-band
+/// (a malformed frame must never kill the whole session; only real I/O
+/// failures propagate).  Used by `wasi-train serve` over real
 /// stdin/stdout and by tests over in-memory buffers.
-pub fn serve_lines(svc: &Service, input: impl BufRead, mut out: impl Write) -> Result<()> {
-    for line in input.lines() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
+pub fn serve_lines(svc: &Service, mut input: impl BufRead, mut out: impl Write) -> Result<()> {
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        if input.read_until(b'\n', &mut buf)? == 0 {
+            return Ok(()); // EOF
         }
-        let flow = handle_line(svc, line, &mut out)?;
+        let flow = match std::str::from_utf8(&buf) {
+            Err(e) => {
+                writeln!(
+                    out,
+                    "{}",
+                    error_line("?", &anyhow!("request line is not valid UTF-8: {e}"))
+                )?;
+                Flow::Continue
+            }
+            Ok(line) => {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                handle_line(svc, line, &mut out)?
+            }
+        };
         out.flush()?;
         if flow == Flow::Shutdown {
-            break;
+            return Ok(());
         }
     }
-    Ok(())
 }
 
 #[cfg(test)]
@@ -416,7 +443,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("wasi_proto_test_{tag}"));
         let _ = std::fs::remove_dir_all(&dir);
         write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
-        Service::start(ServiceConfig { artifacts: dir, workers: 1 }).unwrap()
+        Service::start(ServiceConfig::new(dir).with_workers(1)).unwrap()
     }
 
     fn run_session(svc: &Service, lines: &[&str]) -> Vec<Json> {
@@ -574,6 +601,144 @@ mod tests {
             Some("shutdown")
         );
         assert_eq!(responses[6].get("ok"), Some(&Json::Bool(true)));
+    }
+
+    /// Property-style fuzz (satellite of the scenario harness): every
+    /// adversarial frame — truncated, oversized, NaN/inf-bearing,
+    /// unknown-key, garbage — must produce at least one in-band JSON
+    /// response line (never a panic, never a silent drop), and the
+    /// session must stay alive afterwards.
+    #[test]
+    fn fuzzed_frames_always_answer_in_band() {
+        let svc = demo_service("fuzz");
+        // Templates reference models that do NOT exist so no frame can
+        // start real training (keeps 200 cases fast and non-blocking —
+        // `events wait:true` on an unknown job errors immediately).
+        let templates = [
+            r#"{"cmd":"submit","model":"m0","steps":3,"lr":0.1}"#,
+            r#"{"cmd":"status","job":7}"#,
+            r#"{"cmd":"events","job":7,"wait":true}"#,
+            r#"{"cmd":"infer","model":"m1","x":[0.5,1.5],"seed":3}"#,
+            r#"{"cmd":"cancel","job":2}"#,
+            r#"{"cmd":"forget","job":2}"#,
+        ];
+        crate::util::proptest::check("proto_fuzz", 200, |g| {
+            let base = templates[g.usize_in(0, templates.len() - 1)];
+            let frame: String = match g.usize_in(0, 4) {
+                // Truncate at a random char boundary.
+                0 => {
+                    let cut = g.usize_in(0, base.len());
+                    base.chars().take(cut).collect()
+                }
+                // Replace every number with an overflow literal (inf).
+                1 => {
+                    let mut s = String::new();
+                    for c in base.chars() {
+                        if c.is_ascii_digit() {
+                            s.push_str("1e999");
+                        } else {
+                            s.push(c);
+                        }
+                    }
+                    s
+                }
+                // Graft an unknown key (sometimes oversized).
+                2 => {
+                    let filler = "z".repeat(g.usize_in(1, 4096));
+                    format!(
+                        "{},\"{}\":\"{}\"}}",
+                        &base[..base.len() - 1],
+                        "bogus_key",
+                        filler
+                    )
+                }
+                // Oversized frame: a deep-ish array payload.
+                3 => {
+                    let n = g.usize_in(256, 2048);
+                    let xs: Vec<String> = (0..n).map(|i| format!("{i}")).collect();
+                    format!(r#"{{"cmd":"infer","model":"m1","x":[{}]}}"#, xs.join(","))
+                }
+                // Random ASCII garbage.
+                _ => {
+                    let n = g.usize_in(1, 64);
+                    (0..n)
+                        .map(|_| (g.usize_in(0x20, 0x7e) as u8) as char)
+                        .collect()
+                }
+            };
+            let mut out = Vec::new();
+            let flow = handle_line(&svc, frame.trim(), &mut out)
+                .map_err(|e| format!("I/O error escaped for frame {frame:?}: {e}"))?;
+            if flow != Flow::Continue {
+                return Err(format!("fuzz frame triggered shutdown: {frame:?}"));
+            }
+            let text = String::from_utf8(out).map_err(|e| e.to_string())?;
+            if frame.trim().is_empty() {
+                return Ok(()); // handle_line on "" answers bad-JSON below
+            }
+            let lines: Vec<&str> = text.lines().collect();
+            if lines.is_empty() {
+                return Err(format!("silent drop for frame {frame:?}"));
+            }
+            for l in &lines {
+                let v = Json::parse(l)
+                    .map_err(|e| format!("non-JSON response {l:?} for {frame:?}: {e}"))?;
+                if v.get("ok").and_then(|o| o.as_bool()).is_none() {
+                    return Err(format!("response without ok flag: {l}"));
+                }
+            }
+            Ok(())
+        });
+        // The session still works after 200 hostile frames.
+        let responses =
+            run_session(&svc, &[r#"{"cmd":"infer","model":"vit_demo_vanilla"}"#]);
+        assert_eq!(responses[0].get("ok"), Some(&Json::Bool(true)), "{responses:?}");
+        svc.shutdown();
+    }
+
+    /// Non-UTF8 and NaN/inf-bearing frames through the full byte-level
+    /// serve loop: each must answer `ok:false` in-band and the loop
+    /// must keep serving (only real I/O failures may end a session).
+    #[test]
+    fn non_utf8_and_nonfinite_frames_error_in_band() {
+        let svc = demo_service("utf8");
+        let mut input: Vec<u8> = Vec::new();
+        input.extend_from_slice(b"\xff\xfe garbage bytes\n");
+        input.extend_from_slice(br#"{"cmd":"infer","model":"vit_demo_vanilla","x":[1e999]}"#);
+        input.push(b'\n');
+        input.extend_from_slice(b"{\"cmd\":\"status\",\"job\":\xc3\x28}\n"); // overlong-ish UTF-8
+        input.extend_from_slice(
+            br#"{"cmd":"submit","model":"vit_demo_vanilla","steps":2,"lr":1e999}"#,
+        );
+        input.push(b'\n');
+        input.extend_from_slice(br#"{"cmd":"shutdown"}"#);
+        input.push(b'\n');
+        let mut out = Vec::new();
+        serve_lines(&svc, &input[..], &mut out).unwrap();
+        svc.shutdown();
+        let responses: Vec<Json> = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).expect("every response line is JSON"))
+            .collect();
+        assert_eq!(responses.len(), 5, "{responses:?}");
+        let errs: Vec<&str> = responses[..4]
+            .iter()
+            .map(|r| {
+                assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+                r.get("error").and_then(|v| v.as_str()).unwrap()
+            })
+            .collect();
+        assert!(errs[0].contains("not valid UTF-8"), "{}", errs[0]);
+        assert!(errs[1].contains("finite"), "{}", errs[1]);
+        assert!(errs[2].contains("not valid UTF-8"), "{}", errs[2]);
+        assert!(errs[3].contains("finite"), "{}", errs[3]);
+        // The shutdown ack still arrives — the session survived.
+        assert_eq!(responses[4].get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            responses[4].get("cmd").and_then(|v| v.as_str()),
+            Some("shutdown")
+        );
     }
 
     #[test]

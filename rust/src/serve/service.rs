@@ -32,18 +32,82 @@ use super::job::{JobEvent, JobId, JobSpec, JobState};
 use super::pool::{ModelPool, PoolEntry};
 use super::runner::{self, InferOutput, InferRequest, RunnerEvent};
 
+/// What a [`FaultHook`] tells a worker to do at an injection point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Proceed normally (the default everywhere).
+    None,
+    /// Set the job's cancel flag, as if a client cancelled it — the
+    /// runner observes the flag at its next step boundary.
+    Cancel,
+    /// Panic on the worker thread mid-job.  The service must contain
+    /// the panic (`catch_unwind`), fail the job terminally, and keep
+    /// the worker alive — the invariant the scenario harness pins.
+    Panic,
+}
+
+/// Test-only fault injection: the scenario harness implements this to
+/// perturb workers at deterministic points.  Hooks are called with NO
+/// service locks held, and `on_step` fires before each training step is
+/// applied (step index as the runner reports it, 1-based).
+pub trait FaultHook: Send + Sync {
+    /// Called on the worker thread right after a job leaves the queue.
+    fn on_job_start(&self, _job: JobId) -> FaultAction {
+        FaultAction::None
+    }
+    /// Called on the worker thread at each step boundary.
+    fn on_step(&self, _job: JobId, _step: usize) -> FaultAction {
+        FaultAction::None
+    }
+}
+
 /// Service construction parameters.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct ServiceConfig {
     /// Default artifact directory (jobs/requests may name another).
     pub artifacts: PathBuf,
     /// Fixed worker-thread count (clamped to ≥ 1).
     pub workers: usize,
+    /// Fault-injection hook (tests and the scenario harness only;
+    /// `None` in production paths).
+    pub faults: Option<Arc<dyn FaultHook>>,
+}
+
+impl std::fmt::Debug for ServiceConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServiceConfig")
+            .field("artifacts", &self.artifacts)
+            .field("workers", &self.workers)
+            .field("faults", &self.faults.is_some())
+            .finish()
+    }
 }
 
 impl ServiceConfig {
     pub fn new(artifacts: impl Into<PathBuf>) -> ServiceConfig {
-        ServiceConfig { artifacts: artifacts.into(), workers: 2 }
+        ServiceConfig { artifacts: artifacts.into(), workers: 2, faults: None }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> ServiceConfig {
+        self.workers = workers;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: Arc<dyn FaultHook>) -> ServiceConfig {
+        self.faults = Some(faults);
+        self
+    }
+}
+
+/// Best-effort text of a panic payload (`&str` / `String` payloads;
+/// anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -70,6 +134,8 @@ struct Shared {
     jobs_cond: Condvar,
     next_id: AtomicU64,
     shutdown: AtomicBool,
+    /// Fault-injection hook (scenario harness; `None` in production).
+    faults: Option<Arc<dyn FaultHook>>,
 }
 
 impl Shared {
@@ -78,6 +144,19 @@ impl Shared {
             // A receiver may have been dropped without draining; that
             // must never fail the job itself.
             let _ = tx.send(ev);
+        }
+    }
+
+    /// Apply a fault action at an injection point.  `Cancel` flips the
+    /// job's own cancel flag (the runner observes it at the next step
+    /// boundary); `Panic` unwinds — `run_one` contains it.
+    fn apply_fault(action: FaultAction, id: JobId, step: usize, cancel: &AtomicBool) {
+        match action {
+            FaultAction::None => {}
+            FaultAction::Cancel => cancel.store(true, Ordering::Relaxed),
+            FaultAction::Panic => {
+                panic!("injected worker death (job {id}, step {step})")
+            }
         }
     }
 
@@ -94,43 +173,67 @@ impl Shared {
         };
         self.jobs_cond.notify_all();
 
-        let outcome = (|| -> Result<runner::JobOutcome> {
-            let dir = spec
-                .artifacts
-                .clone()
-                .unwrap_or_else(|| self.default_artifacts.clone());
-            let entry = self.pool.open(dir)?;
-            runner::execute_job(
-                &entry,
-                &spec,
-                &mut |ev| match ev {
-                    RunnerEvent::Started { backend } => {
-                        Self::send_event(
-                            &tx,
-                            JobEvent::Started {
-                                job: id,
-                                model: spec.config.model.clone(),
-                                backend,
-                            },
-                        );
-                    }
-                    RunnerEvent::Step(record) => {
-                        {
-                            let mut jobs = self.jobs.lock().unwrap();
-                            if let Some(j) = jobs.get_mut(&id.0) {
-                                j.state = JobState::Running {
-                                    step: record.step,
-                                    loss: record.loss,
-                                };
+        // The job body runs under `catch_unwind`: a panicking worker
+        // (a kernel bug, or the fault hook's injected death) must fail
+        // THIS job terminally and leave the worker thread serving the
+        // queue — one bad job must never wedge the service.  The
+        // closure only touches lock guards transiently (never across
+        // the unwind edge), so AssertUnwindSafe is sound: a poisoned
+        // Mutex would abort via the unwrap in the next locker anyway.
+        let faults = self.faults.clone();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || -> Result<runner::JobOutcome> {
+                if let Some(h) = &faults {
+                    Self::apply_fault(h.on_job_start(id), id, 0, &cancel);
+                }
+                let dir = spec
+                    .artifacts
+                    .clone()
+                    .unwrap_or_else(|| self.default_artifacts.clone());
+                let entry = self.pool.open(dir)?;
+                runner::execute_job(
+                    &entry,
+                    &spec,
+                    &mut |ev| match ev {
+                        RunnerEvent::Started { backend } => {
+                            Self::send_event(
+                                &tx,
+                                JobEvent::Started {
+                                    job: id,
+                                    model: spec.config.model.clone(),
+                                    backend,
+                                },
+                            );
+                        }
+                        RunnerEvent::Step(record) => {
+                            {
+                                let mut jobs = self.jobs.lock().unwrap();
+                                if let Some(j) = jobs.get_mut(&id.0) {
+                                    j.state = JobState::Running {
+                                        step: record.step,
+                                        loss: record.loss,
+                                    };
+                                }
+                            }
+                            self.jobs_cond.notify_all();
+                            let step = record.step;
+                            Self::send_event(&tx, JobEvent::Step { job: id, record });
+                            if let Some(h) = &faults {
+                                Self::apply_fault(h.on_step(id, step), id, step, &cancel);
                             }
                         }
-                        self.jobs_cond.notify_all();
-                        Self::send_event(&tx, JobEvent::Step { job: id, record });
-                    }
-                },
-                &cancel,
-            )
-        })();
+                    },
+                    &cancel,
+                )
+            },
+        ));
+        let outcome: Result<runner::JobOutcome> = match outcome {
+            Ok(r) => r,
+            Err(payload) => Err(anyhow!(
+                "worker panicked mid-job: {}",
+                panic_message(payload.as_ref())
+            )),
+        };
 
         let mut jobs = self.jobs.lock().unwrap();
         if let Some(j) = jobs.get_mut(&id.0) {
@@ -220,6 +323,7 @@ impl Service {
             jobs_cond: Condvar::new(),
             next_id: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
+            faults: cfg.faults.clone(),
         });
         // Eager-load the default dir so a bad --artifacts fails at
         // startup, not at first submit.
@@ -291,6 +395,22 @@ impl Service {
         }
         self.shared.queue_cond.notify_one();
         Ok(id)
+    }
+
+    /// Number of jobs waiting in the FIFO queue (telemetry).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Number of jobs currently in the `Running` state (telemetry).
+    pub fn running_count(&self) -> usize {
+        self.shared
+            .jobs
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|j| matches!(j.state, JobState::Running { .. }))
+            .count()
     }
 
     /// Current state of a job (`None` = unknown id).
@@ -496,7 +616,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("wasi_service_test_{tag}"));
         let _ = std::fs::remove_dir_all(&dir);
         write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
-        Service::start(ServiceConfig { artifacts: dir, workers }).unwrap()
+        Service::start(ServiceConfig::new(dir).with_workers(workers)).unwrap()
     }
 
     fn quick_cfg(model: &str, steps: usize) -> FinetuneConfig {
@@ -606,6 +726,49 @@ mod tests {
         assert!(svc.status(queued).is_none(), "forgotten job must vanish");
         assert!(svc.job_params(queued).is_none());
         assert!(!svc.forget(queued), "double forget reports false");
+        svc.shutdown();
+    }
+
+    /// A worker panic mid-job (injected via the fault hook) must fail
+    /// that job terminally and leave the worker thread alive for the
+    /// next job — the containment invariant the soak harness pins.
+    #[test]
+    fn worker_panic_is_contained_and_worker_survives() {
+        struct PanicSecondStep;
+        impl FaultHook for PanicSecondStep {
+            fn on_step(&self, job: JobId, step: usize) -> FaultAction {
+                // Kill only the first job, at its second step.
+                if job.0 == 1 && step == 2 {
+                    FaultAction::Panic
+                } else {
+                    FaultAction::None
+                }
+            }
+        }
+        let dir = std::env::temp_dir().join("wasi_service_test_panic");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+        let svc = Service::start(
+            ServiceConfig::new(dir)
+                .with_workers(1)
+                .with_faults(Arc::new(PanicSecondStep)),
+        )
+        .unwrap();
+        // Silence the default panic-hook backtrace for the injected
+        // death (process-wide filter; real panics still print).
+        crate::scenario::faults::silence_injected_panics();
+        let doomed = svc.submit(JobSpec::new(quick_cfg("vit_demo_vanilla", 10))).unwrap();
+        let err = svc.wait(doomed).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("worker panicked mid-job"),
+            "{err:#}"
+        );
+        assert!(format!("{err:#}").contains("injected worker death"), "{err:#}");
+        // The single worker survived the unwind: a second job runs.
+        let next = svc.submit(JobSpec::new(quick_cfg("vit_demo_wasi_eps80", 3))).unwrap();
+        svc.wait(next).unwrap();
+        assert_eq!(svc.queue_depth(), 0);
+        assert_eq!(svc.running_count(), 0);
         svc.shutdown();
     }
 

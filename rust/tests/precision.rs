@@ -160,7 +160,7 @@ fn i8_training_is_refused() {
 #[test]
 fn serve_protocol_supports_precision_jobs_and_quantized_infer() {
     let dir = demo_dir("serve");
-    let svc = Service::start(ServiceConfig { artifacts: dir, workers: 1 }).unwrap();
+    let svc = Service::start(ServiceConfig::new(dir).with_workers(1)).unwrap();
     let input = [
         r#"{"cmd":"submit","model":"vit_demo_wasi_eps80","steps":4,"samples":32,"engine":"native","precision":"bf16"}"#,
         r#"{"cmd":"events","job":1,"wait":true}"#,

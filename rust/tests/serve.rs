@@ -53,7 +53,7 @@ fn concurrent_jobs_match_sequential_bit_for_bit() {
     let alone_b = session.finetune(&cfg_b).unwrap();
 
     // The same two specs, concurrently on a 2-worker service.
-    let svc = Service::start(ServiceConfig { artifacts: dir, workers: 2 }).unwrap();
+    let svc = Service::start(ServiceConfig::new(dir).with_workers(2)).unwrap();
     let id_a = svc.submit(JobSpec::new(cfg_a)).unwrap();
     let id_b = svc.submit(JobSpec::new(cfg_b)).unwrap();
     let conc_a = svc.wait(id_a).unwrap();
@@ -80,7 +80,7 @@ fn concurrent_jobs_match_sequential_bit_for_bit() {
 #[test]
 fn checkpoint_resume_through_job_api_is_bit_identical() {
     let dir = demo_dir("resume");
-    let svc = Service::start(ServiceConfig { artifacts: dir.clone(), workers: 1 }).unwrap();
+    let svc = Service::start(ServiceConfig::new(dir.clone()).with_workers(1)).unwrap();
     let full_ckpt = dir.join("full.ckpt");
     let half_ckpt = dir.join("half.ckpt");
     let resumed_ckpt = dir.join("resumed.ckpt");
@@ -126,7 +126,7 @@ fn checkpoint_resume_through_job_api_is_bit_identical() {
 #[test]
 fn resume_past_configured_steps_errors() {
     let dir = demo_dir("resume_err");
-    let svc = Service::start(ServiceConfig { artifacts: dir.clone(), workers: 1 }).unwrap();
+    let svc = Service::start(ServiceConfig::new(dir.clone()).with_workers(1)).unwrap();
     let ckpt = dir.join("done.ckpt");
     let mut spec = JobSpec::new(cfg("vit_demo_vanilla", 5, 1));
     spec.checkpoint_to = Some(ckpt.clone());

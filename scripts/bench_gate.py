@@ -21,7 +21,13 @@ Rules
   The per-node attribution under ``"nodes"`` is micro-timing noise and
   is compared structurally only.
 * **Required non-empty sections**: the SIMD-vs-scalar and precision
-  (int8-vs-f32) sections must exist with their arms populated.
+  (int8-vs-f32) sections must exist with their arms populated, and the
+  ``soak`` section (the bench's embedded scenario-harness run) must
+  report ``invariant_violations == 0`` — a serving-invariant violation
+  fails the gate even when every wallclock is in range.  Every missing
+  requirement is reported by its exact key path
+  (``$.soak.invariant_violations: required key missing``), never as a
+  raw KeyError traceback.
 * A baseline marked ``"provisional": true`` (seeded before a CI runner
   ever measured it) downgrades wallclock violations to warnings so the
   first run can mint the real numbers; CI uploads the fresh record as
@@ -81,35 +87,84 @@ def require(cond, msg, errors):
         errors.append(msg)
 
 
+class MissingKey:
+    """Sentinel for a failed `lookup` — falsy, prints its path."""
+
+    def __init__(self, path):
+        self.path = path
+
+    def __bool__(self):
+        return False
+
+    def __repr__(self):
+        return f"<missing {self.path}>"
+
+
+def lookup(record, path, errors=None):
+    """Walk a dotted/indexed path (``precision.arms[0].weight_bytes``)
+    through a parsed record.  On a dead end, append one actionable
+    error naming the exact key path that is missing (never a raw
+    KeyError/IndexError traceback) and return a falsy ``MissingKey``."""
+    node, walked = record, "$"
+    for part in re.findall(r"[^.\[\]]+|\[\d+\]", path):
+        if part.startswith("["):
+            idx = int(part[1:-1])
+            if not isinstance(node, list) or idx >= len(node):
+                kind = "not an array" if not isinstance(node, list) else f"has only {len(node)} item(s)"
+                if errors is not None:
+                    errors.append(f"{walked}{part}: required but {walked} is {kind}")
+                return MissingKey(f"{walked}{part}")
+            node, walked = node[idx], f"{walked}{part}"
+        else:
+            if not isinstance(node, dict) or part not in node:
+                kind = "missing" if isinstance(node, dict) else f"unreachable ({walked} is {type(node).__name__}, not an object)"
+                if errors is not None:
+                    errors.append(f"{walked}.{part}: required key {kind}")
+                return MissingKey(f"{walked}.{part}")
+            node, walked = node[part], f"{walked}.{part}"
+    return node
+
+
 def check_sections(fresh, errors):
-    """The acceptance-criteria sections must be present and non-empty."""
-    simd = fresh.get("simd") or {}
+    """The acceptance-criteria sections must be present and non-empty —
+    every failure names the exact key path it expected."""
     require(
-        isinstance(simd.get("scalar"), dict) and isinstance(simd.get("simd"), dict),
+        isinstance(lookup(fresh, "simd.scalar", errors), dict)
+        and isinstance(lookup(fresh, "simd.simd", errors), dict),
         "simd section must record scalar AND simd arms",
         errors,
     )
-    require("train_speedup" in simd, "simd section must record train_speedup", errors)
-    prec = fresh.get("precision") or {}
-    arms = prec.get("arms") or []
+    lookup(fresh, "simd.train_speedup", errors)
+    arms = lookup(fresh, "precision.arms", errors)
+    if not isinstance(arms, list):
+        arms = []
     got = {a.get("precision") for a in arms if isinstance(a, dict)}
     require(
         got == {"f32", "bf16", "i8"},
-        f"precision section must cover f32/bf16/i8, got {sorted(got)}",
+        f"$.precision.arms must cover f32/bf16/i8, got {sorted(x for x in got if x)}",
         errors,
     )
-    require(
-        "int8_vs_f32_speedup" in prec,
-        "precision section must record int8_vs_f32_speedup",
-        errors,
-    )
-    require(bool(fresh.get("serve")), "serve section must be non-empty", errors)
-    for a in arms:
+    lookup(fresh, "precision.int8_vs_f32_speedup", errors)
+    require(bool(fresh.get("serve")), "$.serve section must be non-empty", errors)
+    for i, a in enumerate(arms):
         require(
             isinstance(a, dict) and a.get("weight_bytes", 0) > 0,
-            "precision arms must record weight_bytes",
+            f"$.precision.arms[{i}].weight_bytes must be present and positive",
             errors,
         )
+    # The soak section (scenario harness, DESIGN.md §Scenario harness)
+    # must exist and report a CLEAN run — invariant violations in the
+    # bench's embedded soak fail the gate regardless of wallclock.
+    violations = lookup(fresh, "soak.invariant_violations", errors)
+    if not isinstance(violations, MissingKey):
+        require(
+            violations == 0,
+            f"$.soak.invariant_violations must be 0, got {violations}",
+            errors,
+        )
+    for key in ("soak.events", "soak.queue_depth_max", "soak.soak_seconds",
+                "soak.p50_submit_to_done_ms"):
+        lookup(fresh, key, errors)
 
 
 def main():
@@ -124,10 +179,19 @@ def main():
                          "are checked for positivity only (default 0.05 / 50)")
     args = ap.parse_args()
 
-    with open(args.baseline) as f:
-        base = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
+    def load(label, path):
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except OSError as e:
+            sys.exit(f"bench-gate: cannot read {label} record {path!r}: {e}")
+        except json.JSONDecodeError as e:
+            sys.exit(f"bench-gate: {label} record {path!r} is not valid JSON: {e}")
+
+    base = load("baseline", args.baseline)
+    fresh = load("fresh", args.fresh)
+    if not isinstance(base, dict) or not isinstance(fresh, dict):
+        sys.exit("bench-gate: both records must be JSON objects at top level")
 
     provisional = bool(base.get("provisional"))
     errors, timings, violations = [], [], []

@@ -1,0 +1,193 @@
+"""Tests for scripts/bench_gate.py (CI job `bench-gate`, satellite of
+the scenario-harness PR): the gate must pass a faithful record, fail a
+wallclock regression, and fail a missing section with an error naming
+the exact key path — never a raw KeyError traceback.
+
+Run: python3 -m pytest scripts/test_bench_gate.py -q
+"""
+
+import copy
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+GATE = Path(__file__).resolve().parent / "bench_gate.py"
+
+
+def baseline_record():
+    """A minimal but structurally complete bench record."""
+    return {
+        "bench": "wasi-train bench",
+        "quick": True,
+        "model": "vit_demo_wasi_eps80",
+        "steps": 10,
+        "host_auto_threads": 4,
+        "demo_seconds": 0.06,
+        "engines": [
+            {
+                "engine": "native",
+                "available": True,
+                "arms": [
+                    {"threads": 1, "train_seconds": 0.09, "mean_step_ms": 9.0,
+                     "infer_seconds": 0.01, "infer_reps": 5},
+                    {"threads": 4, "train_seconds": 0.07, "mean_step_ms": 7.0,
+                     "infer_seconds": 0.008, "infer_reps": 5},
+                ],
+                "thread_speedup": 1.3,
+            },
+            {"engine": "hlo", "available": False, "reason": "offline"},
+        ],
+        "simd": {
+            "isa": "avx",
+            "scalar": {"threads": 4, "train_seconds": 0.10, "mean_step_ms": 10.0,
+                       "infer_seconds": 0.012, "infer_reps": 5},
+            "simd": {"threads": 4, "train_seconds": 0.07, "mean_step_ms": 7.0,
+                     "infer_seconds": 0.008, "infer_reps": 5},
+            "train_speedup": 1.4,
+            "infer_speedup": 1.5,
+        },
+        "precision": {
+            "arms": [
+                {"precision": "f32", "infer_seconds": 0.010, "infer_reps": 5,
+                 "weight_bytes": 150000, "top1_agreement": 1.0},
+                {"precision": "bf16", "infer_seconds": 0.011, "infer_reps": 5,
+                 "weight_bytes": 80000, "top1_agreement": 1.0},
+                {"precision": "i8", "infer_seconds": 0.011, "infer_reps": 5,
+                 "weight_bytes": 45000, "top1_agreement": 1.0},
+            ],
+            "int8_vs_f32_speedup": 0.95,
+            "int8_weight_compression": 3.4,
+        },
+        "serve": [
+            {"workers": 1, "jobs": 2, "steps_per_job": 3, "total_seconds": 0.2,
+             "jobs_per_sec": 10.0, "p50_submit_to_done_s": 0.1,
+             "p95_submit_to_done_s": 0.18},
+        ],
+        "soak": {
+            "events": 40,
+            "jobs": 10,
+            "invariant_violations": 0,
+            "queue_depth_max": 3,
+            "soak_seconds": 1.5,
+            "p50_submit_to_done_ms": 120.0,
+            "p95_submit_to_done_ms": 250.0,
+            "infer_p50_ms": 10.0,
+        },
+        "nodes": [
+            {"node": "dense:embed", "fwd_ms_per_step": 0.2, "bwd_ms_per_step": 0.3},
+        ],
+    }
+
+
+def run_gate(tmp_path, base, fresh, *extra):
+    bpath = tmp_path / "baseline.json"
+    fpath = tmp_path / "fresh.json"
+    bpath.write_text(json.dumps(base))
+    fpath.write_text(json.dumps(fresh))
+    return subprocess.run(
+        [sys.executable, str(GATE), str(bpath), str(fpath), *extra],
+        capture_output=True, text=True,
+    )
+
+
+def test_identical_records_pass(tmp_path):
+    base = baseline_record()
+    res = run_gate(tmp_path, base, copy.deepcopy(base))
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "bench-gate: OK" in res.stdout
+
+
+def test_wallclock_regression_fails_with_ratio(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    # 3x slower training on the single-thread arm: a real regression,
+    # well above the noise floor (0.09s baseline < 0.05s? no: raise it).
+    base["engines"][0]["arms"][0]["train_seconds"] = 1.0
+    fresh["engines"][0]["arms"][0]["train_seconds"] = 3.0
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "wallclock deviation" in res.stdout
+    assert "$.engines[0].arms[0].train_seconds" in res.stdout
+    assert "3.00x" in res.stdout
+
+
+def test_provisional_baseline_downgrades_wallclock_to_warning(tmp_path):
+    base = baseline_record()
+    base["provisional"] = True
+    fresh = copy.deepcopy(baseline_record())
+    base["engines"][0]["arms"][0]["train_seconds"] = 1.0
+    fresh["engines"][0]["arms"][0]["train_seconds"] = 3.0
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "WARN" in res.stdout
+    assert "PROVISIONAL" in res.stdout
+
+
+def test_missing_soak_section_names_key_path(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    del fresh["soak"]
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    # Both the structural walk and the section check name the path.
+    assert "$.soak" in res.stdout
+    assert "KeyError" not in res.stdout + res.stderr
+    assert "Traceback" not in res.stderr
+
+
+def test_missing_nested_key_names_full_path(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    del fresh["soak"]["invariant_violations"]
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.soak.invariant_violations" in res.stdout
+    assert "KeyError" not in res.stdout + res.stderr
+
+
+def test_soak_violations_fail_even_when_wallclock_clean(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["soak"]["invariant_violations"] = 2
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.soak.invariant_violations must be 0, got 2" in res.stdout
+
+
+def test_wrong_section_type_is_actionable_not_traceback(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["precision"] = "oops"          # object replaced by a scalar
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.precision" in res.stdout
+    assert "Traceback" not in res.stderr
+
+
+def test_unreadable_record_is_actionable(tmp_path):
+    base = baseline_record()
+    bpath = tmp_path / "baseline.json"
+    bpath.write_text(json.dumps(base))
+    res = subprocess.run(
+        [sys.executable, str(GATE), str(bpath), str(tmp_path / "nope.json")],
+        capture_output=True, text=True,
+    )
+    assert res.returncode != 0
+    assert "cannot read fresh record" in res.stderr
+    assert "Traceback" not in res.stderr
+
+
+def test_invalid_json_is_actionable(tmp_path):
+    base = baseline_record()
+    bpath = tmp_path / "baseline.json"
+    fpath = tmp_path / "fresh.json"
+    bpath.write_text(json.dumps(base))
+    fpath.write_text("{not json")
+    res = subprocess.run(
+        [sys.executable, str(GATE), str(bpath), str(fpath)],
+        capture_output=True, text=True,
+    )
+    assert res.returncode != 0
+    assert "not valid JSON" in res.stderr
+    assert "Traceback" not in res.stderr
