@@ -68,6 +68,58 @@ pub fn vanilla_activations(entry: &ModelEntry) -> usize {
         .sum()
 }
 
+/// Elements one variant-store delta record holds for this model: the
+/// factored layers' `.l` (O, K) + `.r` (K, I) tensors — all the
+/// per-user state a subspace-trained job produces (DESIGN.md §Variant
+/// store).  Priced from `param_spec` when present (exact), else from
+/// `weight_ranks` × `layer_dims` (the planning path before artifacts
+/// exist).
+pub fn delta_elems(entry: &ModelEntry) -> usize {
+    let from_spec: usize = entry
+        .weight_ranks
+        .keys()
+        .flat_map(|prefix| {
+            ["l", "r"].into_iter().filter_map(|suffix| {
+                entry.param_tensor(&format!("{prefix}.{suffix}")).map(|t| t.numel())
+            })
+        })
+        .sum();
+    if from_spec > 0 {
+        return from_spec;
+    }
+    entry
+        .weight_ranks
+        .iter()
+        .filter_map(|(prefix, &k)| {
+            entry.layer_dims.get(prefix).map(|(oi, _act)| {
+                let (o, i) = (oi.first().copied().unwrap_or(0), oi.get(1).copied().unwrap_or(0));
+                k * (o + i)
+            })
+        })
+        .sum()
+}
+
+/// Bytes one resident delta record charges against the store budget
+/// (factors are served f32: the overlay path feeds them straight to
+/// the f32 kernel walk).
+pub fn delta_bytes(entry: &ModelEntry) -> usize {
+    delta_elems(entry) * 4
+}
+
+/// Personalized users per GB of resident memory when each holds a full
+/// parameter copy vs only a delta record — the fleet-scale
+/// personalization headline (EXPERIMENTS.md §Perf iteration 11).
+/// Returns `(full, delta)` user counts; 0 when the model has no
+/// subspace.
+pub fn users_per_gb(entry: &ModelEntry) -> (usize, usize) {
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    let full_bytes = entry.params_len as f64 * 4.0;
+    let d_bytes = delta_bytes(entry) as f64;
+    let full = if full_bytes > 0.0 { (GB / full_bytes) as usize } else { 0 };
+    let delta = if d_bytes > 0.0 { (GB / d_bytes) as usize } else { 0 };
+    (full, delta)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +171,29 @@ mod tests {
         e.state_len = 0;
         let b = account(&e);
         assert_eq!(b.activations, 16 * 65 * 128);
+    }
+
+    #[test]
+    fn delta_pricing_prefers_spec_and_falls_back_to_ranks() {
+        use crate::runtime::TensorSpec;
+        let mut e = entry();
+        // Planning path: no param_spec — price k·(o+i) from the ranks.
+        e.weight_ranks.insert("l1".to_string(), 6);
+        assert_eq!(delta_elems(&e), 6 * (256 + 128));
+        assert_eq!(delta_bytes(&e), 6 * (256 + 128) * 4);
+        // Artifact path: the spec's exact factor shapes win.
+        e.param_spec = vec![
+            TensorSpec { name: "l1.l".into(), shape: vec![256, 5], offset: 0 },
+            TensorSpec { name: "l1.r".into(), shape: vec![5, 128], offset: 256 * 5 },
+        ];
+        assert_eq!(delta_elems(&e), 5 * (256 + 128));
+        let (full, delta) = users_per_gb(&e);
+        assert!(delta > full, "delta records must fit more users per GB");
+        // No subspace — no delta users.
+        e.weight_ranks.clear();
+        e.param_spec.clear();
+        assert_eq!(delta_elems(&e), 0);
+        assert_eq!(users_per_gb(&e).1, 0);
     }
 
     #[test]

@@ -34,6 +34,11 @@ pub struct TrainConfig {
     /// Weight-storage precision (bf16 requires the native engine; int8
     /// is inference-only and rejected at engine construction).
     pub precision: Precision,
+    /// Restrict SGD updates to the WASI subspace (`persist:"delta"`
+    /// jobs): only factored `.l`/`.r` tensors train, every other tensor
+    /// stays bit-identical to the loaded base so the finished job can
+    /// be persisted as a variant-store delta record.
+    pub subspace_only: bool,
 }
 
 impl Default for TrainConfig {
@@ -45,6 +50,7 @@ impl Default for TrainConfig {
             verbose: false,
             engine: EngineKind::Auto,
             precision: Precision::F32,
+            subspace_only: false,
         }
     }
 }
@@ -87,7 +93,10 @@ impl<'rt> Trainer<'rt> {
         entry: &crate::runtime::ModelEntry,
         mut cfg: TrainConfig,
     ) -> Result<Self> {
-        let engine = train_engine_with(rt, entry, cfg.engine, cfg.precision)?;
+        let mut engine = train_engine_with(rt, entry, cfg.engine, cfg.precision)?;
+        if cfg.subspace_only {
+            engine.restrict_to_subspace()?;
+        }
         let schedule = CosineSchedule { lr0: cfg.lr0, total: cfg.steps };
         // A zero interval would divide by zero in the logging check.
         cfg.log_every = cfg.log_every.max(1);

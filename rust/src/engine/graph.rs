@@ -325,6 +325,26 @@ impl ModelPlan {
     pub fn linear(&self, name: &str) -> Option<&LinearPlan> {
         self.blocks.iter().flatten().find(|lp| lp.name == name)
     }
+
+    /// The `param_spec` entries that live inside the WASI subspace —
+    /// the factored linears' `.l`/`.r` tensors, in flat-offset order.
+    /// These are exactly the tensors a variant-store delta record
+    /// persists (DESIGN.md §Variant store); every other tensor belongs
+    /// to the shared frozen base.
+    pub fn subspace_specs(&self) -> Vec<TensorSpec> {
+        let mut out = Vec::new();
+        for lp in self.blocks.iter().flatten() {
+            if matches!(lp.form, LinearForm::Factored { .. }) {
+                for suffix in ["l", "r"] {
+                    if let Some(spec) = self.specs.get(&format!("{}.{suffix}", lp.name)) {
+                        out.push(spec.clone());
+                    }
+                }
+            }
+        }
+        out.sort_unstable_by_key(|s| s.offset);
+        out
+    }
 }
 
 fn seed_from(name: &str) -> u64 {
@@ -521,13 +541,61 @@ pub enum WeightView<'a> {
     I8(&'a [i8], f32),
 }
 
+/// A zero-copy personalized parameter view: the shared frozen base
+/// with a variant's subspace factor tensors overlaid (DESIGN.md
+/// §Variant store).  Tensors are keyed by flat-vector offset, the same
+/// addressing the executor's resolved bindings use, so the inference
+/// walk reads factors from the overlay and everything else straight
+/// from the base — the full personalized vector is never materialized.
+pub struct DeltaOverlay<'a> {
+    base: &'a [f32],
+    tensors: BTreeMap<usize, &'a [f32]>,
+}
+
+impl<'a> DeltaOverlay<'a> {
+    /// Build an overlay after bounds-checking every tensor against the
+    /// base vector (a record from another model's store would otherwise
+    /// read garbage offsets).
+    pub fn new(
+        base: &'a [f32],
+        tensors: BTreeMap<usize, &'a [f32]>,
+    ) -> Result<DeltaOverlay<'a>> {
+        for (offset, data) in &tensors {
+            if offset + data.len() > base.len() {
+                bail!(
+                    "overlay tensor [{} @ {offset}] overruns base params_len {}",
+                    data.len(),
+                    base.len()
+                );
+            }
+        }
+        Ok(DeltaOverlay { base, tensors })
+    }
+
+    fn slice(&self, spec: &TensorSpec) -> Result<&'a [f32]> {
+        match self.tensors.get(&spec.offset) {
+            Some(d) if d.len() == spec.numel() => Ok(d),
+            Some(d) => bail!(
+                "overlay tensor at offset {} has {} elements, spec {} wants {}",
+                spec.offset,
+                d.len(),
+                spec.name,
+                spec.numel()
+            ),
+            None => Ok(&self.base[spec.offset..spec.offset + spec.numel()]),
+        }
+    }
+}
+
 /// The parameter source an inference walk reads from: the flat f32
-/// vector (training params, checkpoints) or a packed reduced-precision
-/// set.  Copyable so the walk threads it by value.
+/// vector (training params, checkpoints), a packed reduced-precision
+/// set, or the frozen base with a delta overlay.  Copyable so the walk
+/// threads it by value.
 #[derive(Clone, Copy)]
 pub enum ParamsView<'a> {
     Flat(&'a [f32]),
     Packed(&'a PackedParams),
+    Overlay(&'a DeltaOverlay<'a>),
 }
 
 impl<'a> ParamsView<'a> {
@@ -535,6 +603,7 @@ impl<'a> ParamsView<'a> {
         match self {
             ParamsView::Flat(p) => p.len(),
             ParamsView::Packed(p) => p.params_len,
+            ParamsView::Overlay(o) => o.base.len(),
         }
     }
 
@@ -546,6 +615,7 @@ impl<'a> ParamsView<'a> {
                 StoredTensor::F32(d) => Ok(d),
                 _ => bail!("tensor {} is packed at reduced precision, expected f32", spec.name),
             },
+            ParamsView::Overlay(o) => o.slice(spec),
         }
     }
 
@@ -560,6 +630,7 @@ impl<'a> ParamsView<'a> {
                 StoredTensor::Bf16(d) => WeightView::Bf16(d),
                 StoredTensor::I8(t) => WeightView::I8(&t.q, t.scale),
             }),
+            ParamsView::Overlay(o) => Ok(WeightView::F32(o.slice(spec)?)),
         }
     }
 }
@@ -718,6 +789,10 @@ pub struct GraphExecutor {
     input_dim: usize,
     params_len: usize,
     profiling: bool,
+    /// When set ([`GraphExecutor::restrict_to_subspace`]) the SGD pass
+    /// touches only the factored layers' `.l`/`.r` ranges and the clip
+    /// norm is computed over those ranges alone.
+    subspace_only: bool,
 }
 
 impl GraphExecutor {
@@ -821,8 +896,37 @@ impl GraphExecutor {
             input_dim: entry.input_dim,
             params_len: entry.params_len,
             profiling: false,
+            subspace_only: false,
             graph,
         })
+    }
+
+    /// Restrict training to the WASI subspace: after this call the SGD
+    /// pass updates ONLY the factored layers' `.l`/`.r` tensors (the
+    /// WSI refreshes already stay inside the subspace), so every other
+    /// tensor remains bit-identical to the loaded base — the contract
+    /// the variant store's delta records rely on (`persist:"delta"`,
+    /// DESIGN.md §Variant store).  Returns the trainable element count.
+    pub fn restrict_to_subspace(&mut self) -> Result<usize> {
+        let specs = self.graph.plan.subspace_specs();
+        if specs.is_empty() {
+            bail!(
+                "model has no factored (subspace) layers; subspace-only \
+                 training requires a wasi variant"
+            );
+        }
+        let ranges: Vec<(usize, usize, f32)> = specs
+            .iter()
+            .map(|s| (s.offset, s.offset + s.numel(), WEIGHT_DECAY))
+            .collect();
+        let trainable = ranges.iter().map(|(lo, hi, _)| hi - lo).sum();
+        for step in &mut self.updates {
+            if let UpdateStep::Sgd { ranges: r } = step {
+                r.clone_from(&ranges);
+            }
+        }
+        self.subspace_only = true;
+        Ok(trainable)
     }
 
     pub fn plan(&self) -> &ModelPlan {
@@ -1300,11 +1404,30 @@ impl GraphExecutor {
     /// decay + SGD, then the per-layer WSI refreshes — all in flat
     /// parameter space (mirrors the AOT step's update rule).
     pub fn update(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
-        let norm = grads
-            .iter()
-            .map(|g| (*g as f64) * (*g as f64))
-            .sum::<f64>()
-            .sqrt() as f32;
+        let norm = if self.subspace_only {
+            // Subspace-only training: frozen tensors receive no update,
+            // so their gradients must not dilute the clip norm — the
+            // trainable ranges are the whole parameter set as far as
+            // the optimizer is concerned.
+            let mut acc = 0.0f64;
+            for step in &self.updates {
+                if let UpdateStep::Sgd { ranges } = step {
+                    for &(lo, hi, _) in ranges {
+                        acc += grads[lo..hi]
+                            .iter()
+                            .map(|g| (*g as f64) * (*g as f64))
+                            .sum::<f64>();
+                    }
+                }
+            }
+            acc.sqrt() as f32
+        } else {
+            grads
+                .iter()
+                .map(|g| (*g as f64) * (*g as f64))
+                .sum::<f64>()
+                .sqrt() as f32
+        };
         let scale = if norm > GRAD_CLIP { GRAD_CLIP / norm } else { 1.0 };
         for step in &self.updates {
             match step {
@@ -1419,6 +1542,15 @@ impl GraphExecutor {
     /// the kernel's inner loop / epilogue, everything else reads f32.
     pub fn infer_packed(&self, packed: &PackedParams, x: &[f32], b: usize) -> Result<Vec<f32>> {
         self.infer_view(ParamsView::Packed(packed), x, b)
+    }
+
+    /// [`GraphExecutor::infer`] with a variant's subspace factors
+    /// overlaid on the shared frozen base (delta-apply serving,
+    /// DESIGN.md §Variant store).  Bit-identical to the same call on
+    /// the materialized vector: both feed the same f32 values through
+    /// the same kernel walk.
+    pub fn infer_overlay(&self, overlay: &DeltaOverlay, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        self.infer_view(ParamsView::Overlay(overlay), x, b)
     }
 
     fn infer_view(&self, params: ParamsView, x: &[f32], b: usize) -> Result<Vec<f32>> {

@@ -35,8 +35,8 @@ use crate::precision::Precision;
 use crate::runtime::{ModelEntry, Runtime, StepOutput};
 
 pub use graph::{
-    GraphExecutor, LayerGraph, LinearForm, LinearPlan, ModelPlan, Node, NodeTiming, PackedParams,
-    QuantTensor, StoredTensor,
+    DeltaOverlay, GraphExecutor, LayerGraph, LinearForm, LinearPlan, ModelPlan, Node, NodeTiming,
+    PackedParams, QuantTensor, StoredTensor,
 };
 pub use hlo::{HloInferEngine, HloTrainEngine};
 pub use native::{NativeInferEngine, NativeModelEngine};
@@ -90,6 +90,19 @@ pub trait TrainEngine: Send {
     /// The concrete kind this engine implements — lets callers build a
     /// matching inference engine without string-matching `backend()`.
     fn kind(&self) -> EngineKind;
+
+    /// Restrict training to the WASI subspace (`persist:"delta"` jobs,
+    /// DESIGN.md §Variant store): only the factored layers' `.l`/`.r`
+    /// tensors update, everything else stays bit-identical to the
+    /// loaded base.  Returns the trainable element count.  The default
+    /// refuses — only the native engine controls its optimizer ranges.
+    fn restrict_to_subspace(&mut self) -> Result<usize> {
+        Err(anyhow!(
+            "the {} engine cannot restrict training to the subspace; \
+             delta persistence requires --engine native (or auto)",
+            self.backend()
+        ))
+    }
 }
 
 /// One inference backend for one model variant:

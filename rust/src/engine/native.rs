@@ -18,7 +18,7 @@ use anyhow::{bail, Result};
 use crate::precision::{round_bf16_inplace, Precision};
 use crate::runtime::{ModelEntry, StepOutput};
 
-use super::graph::{GraphExecutor, LayerGraph, ModelPlan, NodeTiming, PackedParams};
+use super::graph::{DeltaOverlay, GraphExecutor, LayerGraph, ModelPlan, NodeTiming, PackedParams};
 use super::{EngineKind, InferEngine, TrainEngine};
 
 /// Pure-rust training engine for one ViT variant.
@@ -177,6 +177,10 @@ impl TrainEngine for NativeModelEngine {
     fn kind(&self) -> EngineKind {
         EngineKind::Native
     }
+
+    fn restrict_to_subspace(&mut self) -> Result<usize> {
+        self.exec.restrict_to_subspace()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -266,6 +270,17 @@ impl NativeInferEngine {
         }
         let b = x.len() / self.entry.input_dim;
         self.exec.infer_packed(packed, x, b)
+    }
+
+    /// Inference with a variant's subspace factors overlaid on the
+    /// shared frozen base (delta-apply serving, DESIGN.md §Variant
+    /// store) — the personalized vector is never materialized.
+    pub fn infer_overlay(&self, overlay: &DeltaOverlay, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() % self.entry.input_dim != 0 {
+            bail!("x length {} not a multiple of input_dim {}", x.len(), self.entry.input_dim);
+        }
+        let b = x.len() / self.entry.input_dim;
+        self.exec.infer_overlay(overlay, x, b)
     }
 }
 

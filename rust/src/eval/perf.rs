@@ -6,7 +6,9 @@
 //! artifact on purpose), sweeps 1 vs N kernel-layer threads, measures
 //! the SIMD microkernels against the forced-scalar backend, times the
 //! {f32, bf16, i8} inference precisions (latency, weight bytes, top-1
-//! agreement with f32), and emits the machine-readable
+//! agreement with f32), pages a Zipf population of per-user subspace
+//! deltas through the variant store (compression, hit rate,
+//! evict→reload latency + bit-identity), and emits the machine-readable
 //! `BENCH_native.json` that feeds the repo's perf record
 //! (EXPERIMENTS.md §Perf) and the CI `bench-gate` comparison against
 //! the committed `BENCH_baseline.json`.  Kernels are bit-deterministic
@@ -265,6 +267,146 @@ fn bench_serve(dir: &Path, models: &[String], quick: bool) -> Result<Vec<ServeAr
     Ok(arms)
 }
 
+/// Variant-store paging bench (DESIGN.md §Variant store): N synthetic
+/// personalized users — the base's own subspace factors plus per-user
+/// deterministic noise — paged under a budget sized for N/10 residents,
+/// swept with Zipf-popular `get` traffic.  Records delta-vs-full
+/// compression, hit rate, evict→reload latency, and the bit-identity
+/// pin across a forced evict-everything pass.  Uses its own dim-128
+/// demo set so factor compression reflects a realistically wide MLP,
+/// not the tiny test fixture.
+fn bench_store(quick: bool) -> Result<(Json, String)> {
+    use crate::data::rng::Pcg64;
+    use crate::store::{extract_delta, VariantStore};
+
+    let dir = std::env::temp_dir().join(format!("wasi_bench_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let demo = DemoConfig {
+        image: 16,
+        patch: 4,
+        dim: 128,
+        depth: 2,
+        mlp_ratio: 2,
+        classes: 10,
+        batch: 8,
+        eps: 0.8,
+        seed: 41,
+    };
+    let names = write_demo_artifacts(&dir, &demo)?;
+    let manifest = Manifest::load(&dir)?;
+    let model = names
+        .iter()
+        .find(|n| n.contains("wasi"))
+        .cloned()
+        .unwrap_or_else(|| names[0].clone());
+    let entry = manifest.model(&model)?.clone();
+    let base = entry.load_params()?;
+
+    // Template record: the base's own factor tensors (a zero delta);
+    // each user perturbs the factor values, never the frozen region.
+    let template = extract_delta(&entry, &base, &base, Precision::F32)?;
+    let users = if quick { 40 } else { 100 };
+    let residents = (users / 10).max(1);
+    let budget_bytes = residents * template.bytes();
+    let store = VariantStore::open(&dir.join("store"), budget_bytes)?;
+    for u in 0..users {
+        let mut rec = template.clone();
+        let mut rng = Pcg64::new(0x5702 + u as u64);
+        for t in &mut rec.tensors {
+            for v in &mut t.data {
+                *v += (rng.next_f64() as f32 - 0.5) * 0.02;
+            }
+        }
+        store.put(&format!("user-{u:04}"), rec)?;
+    }
+
+    // Zipf(1.1) get sweep; reload latency is measured on misses only.
+    let requests = if quick { 400 } else { 2000 };
+    let weights: Vec<f64> = (0..users).map(|r| 1.0 / ((r + 1) as f64).powf(1.1)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    let cum: Vec<f64> = weights
+        .iter()
+        .map(|w| {
+            acc += w / total;
+            acc
+        })
+        .collect();
+    let before = store.stats()?;
+    let mut reload_ms = Vec::new();
+    let mut rng = Pcg64::new(99);
+    for _ in 0..requests {
+        let roll = rng.next_f64();
+        let rank = cum.iter().position(|c| roll <= *c).unwrap_or(users - 1);
+        let key = format!("user-{rank:04}");
+        let was_resident = store.is_resident(&key);
+        let t0 = Instant::now();
+        store.get(&key)?;
+        if !was_resident {
+            reload_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    let after = store.stats()?;
+    // hits/misses/reloads describe the sweep; evictions are the store
+    // lifetime total (paging starts during the put phase already).
+    let hits = after.hits - before.hits;
+    let misses = after.misses - before.misses;
+    let reloads = after.reloads - before.reloads;
+    let hit_rate = hits as f64 / requests as f64;
+
+    // Bit-identity pin: the zero-copy overlay against the materialized
+    // full vector, then again after evicting everything — the reloaded
+    // record must reproduce the same logits bit for bit.
+    let infer = NativeInferEngine::load(&entry)?;
+    let side = entry
+        .image_side()
+        .ok_or_else(|| anyhow::anyhow!("store bench model is not an image model"))?;
+    let mut task = VisionTask::new("store", entry.classes, side, 0.7, 8, 55);
+    let (x, _, _) = task.batch_onehot(entry.batch);
+    let key = "user-0000";
+    let rec = store.get(key)?;
+    let full = rec.apply(&base)?;
+    let bits = |v: Vec<f32>| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+    let want = bits(infer.infer(&full, &x)?);
+    let got = bits(infer.infer_overlay(&rec.overlay(&base)?, &x)?);
+    store.evict_all();
+    let again = bits(infer.infer_overlay(&store.get(key)?.overlay(&base)?, &x)?);
+    let reload_bit_identical = want == got && want == again;
+
+    let delta_bytes = template.bytes();
+    let full_bytes = entry.params_len * 4;
+    let (upg_full, upg_delta) = crate::coordinator::memory::users_per_gb(&entry);
+    let compression = full_bytes as f64 / delta_bytes.max(1) as f64;
+    let json = obj(vec![
+        ("model", jstr(model.clone())),
+        ("users", num(users as f64)),
+        ("budget_residents", num(residents as f64)),
+        ("budget_bytes", num(budget_bytes as f64)),
+        ("requests", num(requests as f64)),
+        ("hit_rate", num(hit_rate)),
+        ("hits", num(hits as f64)),
+        ("misses", num(misses as f64)),
+        ("reloads", num(reloads as f64)),
+        ("evictions", num(after.evictions as f64)),
+        ("delta_bytes", num(delta_bytes as f64)),
+        ("full_bytes", num(full_bytes as f64)),
+        ("compression_ratio", num(compression)),
+        ("users_per_gb_delta", num(upg_delta as f64)),
+        ("users_per_gb_full", num(upg_full as f64)),
+        ("reload_p50_ms", num(percentile(&reload_ms, 50.0))),
+        ("reload_p95_ms", num(percentile(&reload_ms, 95.0))),
+        ("reload_bit_identical", Json::Bool(reload_bit_identical)),
+    ]);
+    let summary = format!(
+        "store: {users} users, {delta_bytes} B delta vs {full_bytes} B full ({compression:.1}x), \
+         budget {residents} residents, hit rate {hit_rate:.2}, reload p95 {:.2} ms, \
+         bit-identical across evict→reload: {reload_bit_identical}\n",
+        percentile(&reload_ms, 95.0)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok((json, summary))
+}
+
 /// Run the bench, write `cfg.out`, and return a human-readable summary.
 /// The process-global thread override is restored on every exit path.
 pub fn run_bench(cfg: &BenchConfig) -> Result<String> {
@@ -391,6 +533,11 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         ("infer_p50_ms", finite_num(soak.infer_roundtrip.p(50.0))),
     ]);
 
+    // 4c. the variant store: delta compression, LRU hit rate under a
+    //     Zipf user population, evict→reload latency + bit-identity.
+    set_num_threads(0);
+    let (store_json, store_summary) = bench_store(cfg.quick)?;
+
     // 5. the HLO engine on the same artifact set (expected unavailable
     //    offline: the demo set ships no train artifact, and without
     //    PJRT the runtime cannot execute model HLO).
@@ -433,6 +580,7 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         ("precision", precision_json),
         ("serve", serve_json),
         ("soak", soak_json),
+        ("store", store_json),
         ("nodes", node_json),
     ]);
     std::fs::write(&cfg.out, out_json.to_string())
@@ -502,6 +650,7 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         soak.queue_depth_max(),
         soak.violations.len()
     ));
+    body.push_str(&store_summary);
     match (&node_table, &profiled) {
         (Some(table), _) => {
             body.push('\n');

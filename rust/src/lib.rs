@@ -32,7 +32,11 @@
 //! same core.  The [`scenario`] harness (`wasi-train soak`) drives
 //! that core with replayed or synthesized adversarial workloads —
 //! cancel storms, worker death, cache eviction, malformed frames —
-//! and checks the serving invariants under sustained load.
+//! and checks the serving invariants under sustained load.  Finished
+//! personalized jobs persist as subspace delta records in a
+//! [`store::VariantStore`] — factor tensors over the shared frozen
+//! base, paged by LRU under a costmodel-driven memory budget
+//! (`wasi-train store`, `serve --store`).
 //!
 //! See `DESIGN.md` (repository root) for the architecture and
 //! `EXPERIMENTS.md` for the paper-vs-measured record.
@@ -62,5 +66,6 @@ pub mod precision;
 pub mod runtime;
 pub mod scenario;
 pub mod serve;
+pub mod store;
 pub mod util;
 pub mod wasi;

@@ -4,6 +4,7 @@
 //!   train       fine-tune a model variant (one job through the serve core)
 //!   serve       multi-session job service speaking JSON-lines on stdin/stdout
 //!   soak        bounded adversarial workload soak over the serve core
+//!   store       inspect a variant-store directory (ls | gc | show KEY)
 //!   infer       run inference with a variant's initial params
 //!   plan-ranks  run the Eq. 30/32 rank-selection DP over the manifest's
 //!               perplexity table
@@ -39,7 +40,7 @@ fn main() {
 
 fn usage() -> String {
     [
-        "usage: wasi-train <train|serve|soak|infer|plan-ranks|eval|bench|cost-model|calibrate|list|demo> [options]",
+        "usage: wasi-train <train|serve|soak|store|infer|plan-ranks|eval|bench|cost-model|calibrate|list|demo> [options]",
         "common options:",
         "  --artifacts DIR   artifact directory (default: artifacts)",
         "  --engine KIND     execution engine: auto|hlo|native (default: auto;",
@@ -59,15 +60,26 @@ fn usage() -> String {
         "            --silent (suppress per-step progress lines)",
         "            runs as one job through the same service core as `serve`",
         "serve:      --workers N (default 2) -- long-lived JSON-lines service:",
-        "            {\"cmd\":\"submit\"|\"status\"|\"events\"|\"infer\"|\"cancel\"|\"forget\"|\"shutdown\"}",
-        "            per line on stdin; training jobs queue onto worker threads,",
-        "            infer requests answer inline (DESIGN.md \u{a7}serve)",
+        "            {\"cmd\":\"submit\"|\"status\"|\"events\"|\"infer\"|\"cancel\"|\"forget\"",
+        "             |\"store\"|\"store-stats\"|\"shutdown\"} per line on stdin; training",
+        "            jobs queue onto worker threads, infer requests answer inline",
+        "            (DESIGN.md \u{a7}serve)",
+        "            --store DIR attaches a variant store: submit accepts",
+        "            \"persist\":\"delta\" and finished jobs keep only their subspace",
+        "            factors (DESIGN.md \u{a7}Variant store)",
+        "            --memory-budget-mb N caps the resident delta set (0 = unbounded)",
         "soak:       [--quick] --events N --seconds S --seed S --workers N",
-        "            --faults LIST (cancel-storm,worker-death,evict,malformed|all|none)",
+        "            --faults LIST (cancel-storm,worker-death,evict,malformed,evict-budget|all|none)",
         "            --trace FILE (replay a recorded trace) --record FILE (save it)",
         "            --variants A,B --out FILE (default SOAK_report.json) [--pace]",
+        "            --store DIR --memory-budget-mb N (variant store for delta jobs;",
+        "            auto-provisioned under a tight budget when --faults includes",
+        "            evict-budget)",
         "            drives the serve core with a seeded adversarial workload,",
         "            checks the serving invariants, exits non-zero on violations",
+        "store:      <ls|gc|show KEY> --store DIR (default: store) -- offline",
+        "            variant-store inspection: ls lists delta records, gc drops",
+        "            undecodable ones, show prints a record's factor metadata",
         "infer:      --model NAME --seed S (batch accuracy with initial params;",
         "            works on infer-only variants, no train artifact needed)",
         "plan-ranks: --budget-kb N | --eps E",
@@ -109,14 +121,15 @@ fn check_known_options(sub: &str, args: &Args) -> Result<()> {
             ],
             &["silent"],
         ),
-        "serve" => (&["workers"], &[]),
+        "serve" => (&["workers", "store", "memory-budget-mb"], &[]),
         "soak" => (
             &[
                 "workers", "events", "seconds", "seed", "trace", "record", "out", "faults",
-                "variants",
+                "variants", "store", "memory-budget-mb",
             ],
             &["quick", "pace"],
         ),
+        "store" => (&["store"], &[]),
         "infer" => (&["model", "seed"], &[]),
         "bench" => (&["steps", "out"], &["quick"]),
         "demo" => (&["out"], &[]),
@@ -151,6 +164,7 @@ fn run() -> Result<()> {
         Some("train") => cmd_train(&args, &artifacts),
         Some("serve") => cmd_serve(&args, &artifacts),
         Some("soak") => cmd_soak(&args, &artifacts),
+        Some("store") => cmd_store(&args),
         Some("infer") => cmd_infer(&args, &artifacts),
         Some("bench") => cmd_bench(&args),
         Some("demo") => cmd_demo(&args),
@@ -290,11 +304,22 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
 /// requests on stdin, responses on stdout, log chatter on stderr.
 fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
     let workers = args.usize_or("workers", 2)?;
-    let service =
-        Service::start(ServiceConfig::new(PathBuf::from(artifacts)).with_workers(workers))?;
+    let mut cfg = ServiceConfig::new(PathBuf::from(artifacts)).with_workers(workers);
+    if let Some(dir) = args.get("store") {
+        let mb = args.usize_or("memory-budget-mb", 0)?;
+        cfg = cfg.with_store(PathBuf::from(dir), mb << 20);
+    } else if args.get("memory-budget-mb").is_some() {
+        return Err(anyhow!("--memory-budget-mb requires --store DIR"));
+    }
+    let store_note = cfg
+        .store
+        .as_ref()
+        .map(|d| format!(", variant store {}", d.display()))
+        .unwrap_or_default();
+    let service = Service::start(cfg)?;
     eprintln!(
-        "wasi-train serve: {} worker(s) over {artifacts}/ — JSON-lines on stdin \
-         (submit|status|events|infer|cancel|forget|shutdown)",
+        "wasi-train serve: {} worker(s) over {artifacts}/{store_note} — JSON-lines on stdin \
+         (submit|status|events|infer|cancel|forget|store|store-stats|shutdown)",
         workers.max(1)
     );
     let stdin = std::io::stdin();
@@ -319,6 +344,8 @@ fn cmd_soak(args: &Args, artifacts: &str) -> Result<()> {
     cfg.trace_in = args.get("trace").map(PathBuf::from);
     cfg.trace_out = args.get("record").map(PathBuf::from);
     cfg.pace = args.flag("pace");
+    cfg.store = args.get("store").map(PathBuf::from);
+    cfg.memory_budget_mb = args.usize_or("memory-budget-mb", 0)?;
     if let Some(v) = args.get("variants") {
         cfg.variants = v.split(',').map(|s| s.trim().to_string()).collect();
     }
@@ -360,6 +387,18 @@ fn cmd_soak(args: &Args, artifacts: &str) -> Result<()> {
         report.pool_occupancy.len(),
         report.queue_depth_max()
     );
+    if let Some(s) = &report.store {
+        println!(
+            "store: {} puts  {} hits  {} misses  {} reloads  {} evictions  \
+             {} bit-identity verified",
+            s.puts,
+            s.hits,
+            s.misses,
+            s.reloads,
+            s.evictions,
+            report.store_verified
+        );
+    }
     if report.submit_to_done.count() > 0 {
         println!(
             "submit→done  p50 {:.0} ms  p95 {:.0} ms  p99 {:.0} ms  ({} jobs)",
@@ -392,6 +431,57 @@ fn cmd_soak(args: &Args, artifacts: &str) -> Result<()> {
             report.violations.len()
         ))
     }
+}
+
+/// `store`: offline inspection of a variant-store directory — the same
+/// records `serve --store DIR` pages, without starting a service.
+fn cmd_store(args: &Args) -> Result<()> {
+    use wasi_train::store::VariantStore;
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("ls");
+    let dir = PathBuf::from(args.get_or("store", "store"));
+    // Budget 0 = unbounded: inspection never needs to page anything out.
+    let store = VariantStore::open(&dir, 0)?;
+    match action {
+        "ls" => {
+            let records = store.list()?;
+            let mut t = Table::new(["key", "bytes"]);
+            let mut total = 0u64;
+            for (key, bytes) in &records {
+                total += bytes;
+                t.row([key.clone(), bytes.to_string()]);
+            }
+            t.print();
+            println!("{} record(s), {} bytes in {}", records.len(), total, dir.display());
+        }
+        "gc" => {
+            let dropped = store.gc()?;
+            for key in &dropped {
+                println!("dropped {key}");
+            }
+            println!("gc: {} undecodable record(s) dropped", dropped.len());
+        }
+        "show" => {
+            let key = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("store show needs a KEY (see `wasi-train store ls`)"))?;
+            let rec = store.get(key)?;
+            println!("key             {key}");
+            println!("model           {}", rec.model);
+            println!("train precision {}", rec.train_precision);
+            println!("base hash       {:016x}", rec.base_hash);
+            println!("delta payload   {} elems ({} bytes)", rec.elems(), rec.bytes());
+            let mut t = Table::new(["tensor", "shape", "offset"]);
+            for ten in &rec.tensors {
+                t.row([ten.name.clone(), format!("{:?}", ten.shape), ten.offset.to_string()]);
+            }
+            t.print();
+        }
+        other => {
+            return Err(anyhow!("unknown store action {other:?}; expected ls | gc | show KEY"))
+        }
+    }
+    Ok(())
 }
 
 fn cmd_infer(args: &Args, artifacts: &str) -> Result<()> {

@@ -28,6 +28,13 @@ pub struct FaultPlan {
     pub evict: bool,
     /// Mix malformed protocol frames into the generated trace.
     pub malformed: bool,
+    /// Run the variant store under budget pressure: delta-persist every
+    /// factored-variant job, size the resident budget below the job
+    /// count, and assert the paging invariants — no request fails
+    /// because of an eviction, reloads never exceed evictions, and
+    /// predictions are bit-identical before and after a forced
+    /// evict-everything pass.
+    pub evict_budget: bool,
 }
 
 impl FaultPlan {
@@ -36,12 +43,18 @@ impl FaultPlan {
     }
 
     pub fn all() -> FaultPlan {
-        FaultPlan { cancel_storm: true, worker_death: true, evict: true, malformed: true }
+        FaultPlan {
+            cancel_storm: true,
+            worker_death: true,
+            evict: true,
+            malformed: true,
+            evict_budget: true,
+        }
     }
 
     /// Parse a comma-separated fault list: `cancel-storm`,
-    /// `worker-death`, `evict`, `malformed`, plus the shorthands `all`
-    /// and `none`.
+    /// `worker-death`, `evict`, `malformed`, `evict-budget`, plus the
+    /// shorthands `all` and `none`.
     pub fn parse(s: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan::none();
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
@@ -50,12 +63,13 @@ impl FaultPlan {
                 "worker-death" => plan.worker_death = true,
                 "evict" => plan.evict = true,
                 "malformed" => plan.malformed = true,
+                "evict-budget" => plan.evict_budget = true,
                 "all" => plan = FaultPlan::all(),
                 "none" => plan = FaultPlan::none(),
                 other => {
                     return Err(anyhow!(
                         "unknown fault {other:?}; expected cancel-storm, worker-death, \
-                         evict, malformed, all, or none"
+                         evict, malformed, evict-budget, all, or none"
                     ))
                 }
             }
@@ -94,6 +108,9 @@ impl std::fmt::Display for FaultPlan {
         }
         if self.malformed {
             parts.push("malformed");
+        }
+        if self.evict_budget {
+            parts.push("evict-budget");
         }
         if parts.is_empty() {
             f.write_str("none")
@@ -160,7 +177,11 @@ mod tests {
         assert_eq!(FaultPlan::parse("all").unwrap(), FaultPlan::all());
         let p = FaultPlan::parse("cancel-storm, worker-death").unwrap();
         assert!(p.cancel_storm && p.worker_death && !p.evict && !p.malformed);
+        assert!(!p.evict_budget);
         assert_eq!(p.to_string(), "cancel-storm,worker-death");
+        let p = FaultPlan::parse("evict-budget").unwrap();
+        assert!(p.evict_budget && !p.cancel_storm && !p.evict);
+        assert_eq!(p.to_string(), "evict-budget");
         assert_eq!(FaultPlan::parse(&FaultPlan::all().to_string()).unwrap(), FaultPlan::all());
         assert_eq!(FaultPlan::none().to_string(), "none");
         assert!(FaultPlan::parse("cancel_storm").is_err());

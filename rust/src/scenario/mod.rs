@@ -15,7 +15,12 @@
 //!   variant × precision mix, exponential arrivals);
 //! * [`faults`] — the [`FaultPlan`]: cancel storms and worker death
 //!   delivered through the service's [`crate::serve::FaultHook`],
-//!   pool eviction and malformed frames delivered as trace events;
+//!   pool eviction and malformed frames delivered as trace events,
+//!   and variant-store budget pressure (`evict-budget`) driven by the
+//!   soak itself: delta-persist every factored-variant job under a
+//!   resident budget far below the job count, then assert the paging
+//!   invariants (no eviction-caused failures, exactly-once reloads,
+//!   bit-identical predictions across evict→reload);
 //! * [`telemetry`] — queue-depth series, pool occupancy, latency
 //!   histograms, and the [`SoakReport`] (`SOAK_report.json`);
 //! * [`soak`] — the bounded driver tying it together.
@@ -28,6 +33,6 @@ pub mod trace;
 
 pub use faults::{FaultPlan, PlanHook};
 pub use generator::{generate, GeneratorConfig};
-pub use soak::{run_soak, run_soak_to, SoakConfig};
+pub use soak::{run_soak, run_soak_to, SoakConfig, EVICT_BUDGET_RESIDENTS};
 pub use telemetry::{LatencyStats, SoakReport};
 pub use trace::{read_trace, write_trace, TraceEvent, TraceOp};

@@ -32,10 +32,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::memory::delta_bytes;
 use crate::coordinator::FinetuneConfig;
 use crate::engine::EngineKind;
 use crate::precision::Precision;
-use crate::serve::{handle_line, Flow, InferRequest, JobId, JobSpec, Service, ServiceConfig};
+use crate::runtime::Manifest;
+use crate::serve::{
+    handle_line, Flow, InferRequest, JobId, JobSpec, JobState, Service, ServiceConfig,
+};
 use crate::util::json::Json;
 
 use super::faults::{silence_injected_panics, FaultPlan, PlanHook};
@@ -65,7 +69,19 @@ pub struct SoakConfig {
     /// Honor the trace's `at_ms` gaps in real time; off = replay as
     /// fast as the driver can issue events (CI quick mode).
     pub pace: bool,
+    /// Variant-store directory for delta persistence; `None` with the
+    /// evict-budget fault armed auto-provisions `<artifacts>/soak_store`.
+    pub store: Option<PathBuf>,
+    /// Store resident budget in MiB (0 = derive a pressure budget of
+    /// [`EVICT_BUDGET_RESIDENTS`] delta records when evict-budget is
+    /// armed, unbounded otherwise).
+    pub memory_budget_mb: usize,
 }
+
+/// Resident-set capacity (in delta records) the evict-budget fault
+/// derives when no explicit `--memory-budget-mb` is given — far below
+/// the delta jobs a soak persists, so paging MUST happen.
+pub const EVICT_BUDGET_RESIDENTS: usize = 4;
 
 impl SoakConfig {
     /// The CI quick soak: ~120 events, 2 workers, fixed seed.
@@ -81,6 +97,8 @@ impl SoakConfig {
             trace_in: None,
             trace_out: None,
             pace: false,
+            store: None,
+            memory_budget_mb: 0,
         }
     }
 }
@@ -118,12 +136,58 @@ pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
     if cfg.faults.worker_death {
         silence_injected_panics();
     }
+    // Variant-store setup: an explicit dir, or (evict-budget fault) an
+    // auto-provisioned one under the artifact directory.
+    let store_dir: Option<PathBuf> = match cfg.store.clone() {
+        Some(dir) => Some(dir),
+        None if cfg.faults.evict_budget => {
+            let dir = cfg.artifacts.join("soak_store");
+            // Auto-provisioned: start from a clean slate so counters
+            // and disk stats reflect THIS run only.
+            let _ = std::fs::remove_dir_all(&dir);
+            Some(dir)
+        }
+        None => None,
+    };
+    // Bytes one delta record of the largest factored variant charges —
+    // the unit the pressure budget and the capacity checks price in.
+    let mut record_bytes = 0usize;
     let mut scfg = ServiceConfig::new(cfg.artifacts.clone()).with_workers(cfg.workers);
+    if let Some(dir) = &store_dir {
+        let manifest = Manifest::load(&cfg.artifacts)?;
+        record_bytes = variants
+            .iter()
+            .filter_map(|v| manifest.model(v).ok())
+            .map(delta_bytes)
+            .max()
+            .unwrap_or(0);
+        let budget_bytes = if cfg.memory_budget_mb > 0 {
+            cfg.memory_budget_mb << 20
+        } else if cfg.faults.evict_budget {
+            record_bytes * EVICT_BUDGET_RESIDENTS
+        } else {
+            0
+        };
+        scfg = scfg.with_store(dir, budget_bytes);
+    }
     if cfg.faults.service_side() {
         scfg = scfg.with_faults(std::sync::Arc::new(PlanHook::new(cfg.faults)));
     }
     let svc = Service::start(scfg)?;
     let entry = svc.default_entry()?;
+    // Variants with a subspace — the only ones a delta job can persist.
+    let factored: BTreeSet<String> = variants
+        .iter()
+        .filter(|v| {
+            entry
+                .manifest
+                .model(v)
+                .map(|m| !m.weight_ranks.is_empty())
+                .unwrap_or(false)
+        })
+        .cloned()
+        .collect();
+    let persist_deltas = svc.store().is_some();
 
     let mut report = SoakReport {
         seed: cfg.seed,
@@ -136,6 +200,9 @@ pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
     // (variant, precision) pairs pool inference actually touched — the
     // exactly-once load invariant is checked against this set.
     let mut infer_keys: BTreeSet<(String, Precision)> = BTreeSet::new();
+    // Jobs submitted with persist:"delta" — the evict-budget post-pass
+    // verifies each finished one bit-identical across evict→reload.
+    let mut delta_jobs: Vec<(JobId, String)> = Vec::new();
 
     let watches: Vec<JobWatch> = std::thread::scope(|s| {
         let mut submit_ids: Vec<Option<JobId>> = Vec::new();
@@ -169,7 +236,13 @@ pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
                         .engine(EngineKind::Native)
                         .precision(*precision)
                         .build();
-                    match svc.submit(JobSpec::new(fcfg)) {
+                    let mut spec = JobSpec::new(fcfg);
+                    // With a store attached, every factored-variant job
+                    // persists as a delta record (vanilla variants have
+                    // no subspace and keep the retained-full path).
+                    spec.persist_delta = persist_deltas && factored.contains(model);
+                    let persisted = spec.persist_delta;
+                    match svc.submit(spec) {
                         Err(e) => {
                             submit_ids.push(None);
                             report
@@ -178,6 +251,9 @@ pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
                         }
                         Ok(id) => {
                             submit_ids.push(Some(id));
+                            if persisted {
+                                delta_jobs.push((id, model.clone()));
+                            }
                             let rx = svc.take_events(id);
                             let submitted = Instant::now();
                             watchers.push(s.spawn(move || {
@@ -390,6 +466,73 @@ pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
             "pool loaded {} engines for {} keys + {} evictions",
             report.pool_loads, used, report.pool_evictions
         ));
+    }
+
+    // Variant-store invariants (DESIGN.md §Variant store): the budget
+    // actually paged, no request fails because of an eviction, and
+    // every finished delta job predicts bit-identically across a forced
+    // evict-everything pass.
+    if let Some(store) = svc.store() {
+        if let Ok(s) = store.stats() {
+            if record_bytes > 0 && store.budget_bytes() > 0 {
+                let capacity = (store.budget_bytes() / record_bytes).max(1);
+                if s.puts as usize > capacity && s.evictions == 0 {
+                    report.violations.push(format!(
+                        "store accepted {} puts with a {}-record budget but never evicted",
+                        s.puts, capacity
+                    ));
+                }
+                if s.resident > capacity {
+                    report.violations.push(format!(
+                        "store resident set ({} records) exceeds the budget capacity ({})",
+                        s.resident, capacity
+                    ));
+                }
+            }
+        }
+        for (id, model) in &delta_jobs {
+            if !matches!(svc.status(*id), Some(JobState::Done(_))) {
+                continue; // cancelled/killed/forgotten jobs have no record
+            }
+            let req = InferRequest {
+                model: model.clone(),
+                engine: EngineKind::Auto,
+                precision: Precision::F32,
+                seed: 97,
+                x: None,
+            };
+            let before = match svc.infer(None, &req, Some(*id)) {
+                Ok(out) => out,
+                Err(e) => {
+                    report
+                        .violations
+                        .push(format!("delta infer on job {id} failed: {e:#}"));
+                    continue;
+                }
+            };
+            store.evict_all();
+            match svc.infer(None, &req, Some(*id)) {
+                Err(e) => report.violations.push(format!(
+                    "delta infer on job {id} failed after eviction: {e:#}"
+                )),
+                Ok(after) if after.preds != before.preds => {
+                    report.violations.push(format!(
+                        "job {id} predictions changed across evict→reload"
+                    ))
+                }
+                Ok(_) => report.store_verified += 1,
+            }
+        }
+        if let Ok(s) = store.stats() {
+            if s.reloads > s.evictions {
+                report.violations.push(format!(
+                    "store reloaded {} times but only evicted {} — a key was \
+                     loaded more than exactly-once per eviction",
+                    s.reloads, s.evictions
+                ));
+            }
+            report.store = Some(s);
+        }
     }
 
     svc.shutdown();

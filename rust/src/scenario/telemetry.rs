@@ -141,6 +141,12 @@ pub struct SoakReport {
     pub pool_evictions: u64,
     pub submit_to_done: LatencyStats,
     pub infer_roundtrip: LatencyStats,
+    /// Variant-store counters at end of run (`None` = no store
+    /// attached; the `store` key is then absent from the JSON).
+    pub store: Option<crate::store::StoreStats>,
+    /// Delta jobs whose predictions were verified bit-identical across
+    /// a forced evict-everything pass (evict-budget fault).
+    pub store_verified: usize,
     /// Invariant violations; a healthy soak ends with this EMPTY.
     pub violations: Vec<String>,
 }
@@ -160,7 +166,7 @@ impl SoakReport {
             .step_by(stride)
             .map(|(ms, d)| arr([num(*ms), num(*d as f64)]))
             .collect();
-        obj(vec![
+        let mut fields = vec![
             ("seed", num(self.seed as f64)),
             ("faults", jstr(self.faults.clone())),
             ("workers", num(self.workers as f64)),
@@ -193,11 +199,17 @@ impl SoakReport {
             ),
             ("submit_to_done", self.submit_to_done.to_json()),
             ("infer_roundtrip", self.infer_roundtrip.to_json()),
-            (
-                "violations",
-                arr(self.violations.iter().map(|v| jstr(v.clone()))),
-            ),
-        ])
+        ];
+        if let Some(s) = &self.store {
+            let mut store = crate::serve::store_stat_fields(s);
+            store.push(("verified_jobs", num(self.store_verified as f64)));
+            fields.push(("store", obj(store)));
+        }
+        fields.push((
+            "violations",
+            arr(self.violations.iter().map(|v| jstr(v.clone()))),
+        ));
+        obj(fields)
     }
 }
 
@@ -261,5 +273,17 @@ mod tests {
             back.get("violations").and_then(|v| v.as_arr()).map(|a| a.len()),
             Some(1)
         );
+        assert!(back.get("store").is_none(), "no store attached, no store key");
+        r.store = Some(crate::store::StoreStats {
+            puts: 3,
+            evictions: 2,
+            ..Default::default()
+        });
+        r.store_verified = 1;
+        let back = Json::parse(&r.to_json().to_string()).unwrap();
+        let s = back.get("store").unwrap();
+        assert_eq!(s.get("puts").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(s.get("evictions").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(s.get("verified_jobs").and_then(|v| v.as_usize()), Some(1));
     }
 }

@@ -28,11 +28,24 @@ pub struct JobSpec {
     pub resume_from: Option<PathBuf>,
     /// Save a checkpoint of the final params/state here on completion.
     pub checkpoint_to: Option<PathBuf>,
+    /// Persist the finished job as a variant-store delta record
+    /// (`persist:"delta"`): training is restricted to the WASI
+    /// subspace, and on completion only the factor tensors are kept —
+    /// the service retains NO full parameter copy for the job
+    /// (DESIGN.md §Variant store).  Requires a factored variant and an
+    /// attached store.
+    pub persist_delta: bool,
 }
 
 impl JobSpec {
     pub fn new(config: FinetuneConfig) -> JobSpec {
-        JobSpec { artifacts: None, config, resume_from: None, checkpoint_to: None }
+        JobSpec {
+            artifacts: None,
+            config,
+            resume_from: None,
+            checkpoint_to: None,
+            persist_delta: false,
+        }
     }
 }
 

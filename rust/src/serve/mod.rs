@@ -17,8 +17,15 @@
 //!   FIFO queueing, cancellation, blocking waits, and pool inference
 //!   that interleaves with running jobs;
 //! * [`proto`] — the JSON-lines protocol (`submit` / `status` /
-//!   `events` / `infer` / `cancel` / `forget` / `shutdown`)
-//!   `wasi-train serve` speaks over stdin/stdout.
+//!   `events` / `infer` / `cancel` / `forget` / `store` /
+//!   `store-stats` / `shutdown`) `wasi-train serve` speaks over
+//!   stdin/stdout.
+//!
+//! A service started with `--store DIR` additionally persists
+//! `persist:"delta"` jobs to a [`crate::store::VariantStore`]: only the
+//! subspace factor record is kept (no full parameter copy per user),
+//! and personalized inference applies it against the pool's shared
+//! frozen base at request time (DESIGN.md §Variant store).
 //!
 //! [`runner`] holds the single job-execution path all of the above
 //! share — `Session::finetune` is "run one job synchronously", the
@@ -34,6 +41,6 @@ pub mod service;
 
 pub use job::{JobEvent, JobId, JobSpec, JobState};
 pub use pool::{ModelPool, PoolEntry, PooledInfer};
-pub use proto::{handle_line, serve_lines, Flow};
-pub use runner::{InferOutput, InferRequest, RunnerEvent};
-pub use service::{FaultAction, FaultHook, Service, ServiceConfig};
+pub use proto::{handle_line, serve_lines, store_stat_fields, Flow};
+pub use runner::{run_infer, run_infer_with, InferOutput, InferParams, InferRequest, RunnerEvent};
+pub use service::{delta_key, FaultAction, FaultHook, Service, ServiceConfig};

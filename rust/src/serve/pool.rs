@@ -31,6 +31,7 @@ use anyhow::{anyhow, Result};
 use crate::engine::{self, EngineKind, InferEngine, NativeInferEngine, TrainEngine};
 use crate::precision::Precision;
 use crate::runtime::{Manifest, Runtime};
+use crate::store::VariantStore;
 
 /// One loaded artifact directory: runtime + manifest + shared caches.
 pub struct PoolEntry {
@@ -55,6 +56,9 @@ pub struct PoolEntry {
     infer_loads: AtomicU64,
     /// Cache entries removed by [`PoolEntry::evict_infer`].
     infer_evictions: AtomicU64,
+    /// The attached variant store, when serving personalized deltas
+    /// (`serve --store`, DESIGN.md §Variant store).
+    variant_store: Mutex<Option<Arc<VariantStore>>>,
 }
 
 /// A per-(variant, precision) build slot (see `infer_cache`).
@@ -73,7 +77,19 @@ impl PoolEntry {
             infer_cache: Mutex::new(BTreeMap::new()),
             infer_loads: AtomicU64::new(0),
             infer_evictions: AtomicU64::new(0),
+            variant_store: Mutex::new(None),
         }))
+    }
+
+    /// Attach a variant store so delta-persisted jobs can be served
+    /// and `forget` can drop their records.
+    pub fn attach_store(&self, store: Arc<VariantStore>) {
+        *self.variant_store.lock().unwrap() = Some(store);
+    }
+
+    /// The attached variant store, if any.
+    pub fn variant_store(&self) -> Option<Arc<VariantStore>> {
+        self.variant_store.lock().unwrap().clone()
     }
 
     /// A fresh, exclusive training engine for one variant (one per job).

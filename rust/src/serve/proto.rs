@@ -3,9 +3,9 @@
 //! per line on stdout.
 //!
 //! Requests: `{"cmd": "submit"|"status"|"events"|"infer"|"cancel"|
-//! "forget"|"shutdown", ...}`.  Every response carries `"ok"` plus
-//! either the payload or `"error"`.  See DESIGN.md §serve for the full
-//! schema and README for a transcript.
+//! "forget"|"store"|"store-stats"|"shutdown", ...}`.  Every response
+//! carries `"ok"` plus either the payload or `"error"`.  See DESIGN.md
+//! §serve for the full schema and README for a transcript.
 
 use std::io::{BufRead, Write};
 use std::path::PathBuf;
@@ -178,6 +178,17 @@ fn parse_submit(req: &Json) -> Result<JobSpec> {
     spec.artifacts = req_path(req, "artifacts")?;
     spec.resume_from = req_path(req, "resume_from")?;
     spec.checkpoint_to = req_path(req, "checkpoint_to")?;
+    // `persist:"delta"` restricts training to the subspace and keeps
+    // only the factor record (DESIGN.md §Variant store); "full" is the
+    // default retained-params behavior, accepted for explicitness.
+    match req.get("persist") {
+        None => {}
+        Some(v) => match v.as_str() {
+            Some("full") => {}
+            Some("delta") => spec.persist_delta = true,
+            _ => return Err(anyhow!("\"persist\" must be \"delta\" or \"full\"")),
+        },
+    }
     Ok(spec)
 }
 
@@ -218,6 +229,31 @@ fn parse_infer(req: &Json) -> Result<InferRequest> {
         seed: req_usize(req, "seed")?.unwrap_or(233) as u64,
         x,
     })
+}
+
+/// The attached variant store, or the in-band error every store command
+/// answers when the service was started without `--store`.
+fn no_store_err(svc: &Service) -> Result<std::sync::Arc<crate::store::VariantStore>> {
+    svc.store().ok_or_else(|| {
+        anyhow!("no variant store attached; start the service with --store DIR")
+    })
+}
+
+/// [`crate::store::StoreStats`] as protocol/report JSON fields (shared
+/// with the soak report and `wasi-train store`).
+pub fn store_stat_fields(s: &crate::store::StoreStats) -> Vec<(&'static str, Json)> {
+    vec![
+        ("resident", num(s.resident as f64)),
+        ("resident_bytes", num(s.resident_bytes as f64)),
+        ("budget_bytes", num(s.budget_bytes as f64)),
+        ("disk_records", num(s.disk_records as f64)),
+        ("disk_bytes", num(s.disk_bytes as f64)),
+        ("hits", num(s.hits as f64)),
+        ("misses", num(s.misses as f64)),
+        ("reloads", num(s.reloads as f64)),
+        ("evictions", num(s.evictions as f64)),
+        ("puts", num(s.puts as f64)),
+    ]
 }
 
 /// Handle one request line, writing response line(s) to `out`.  Request
@@ -263,11 +299,12 @@ fn dispatch(
     let accepted: Option<&[&str]> = match cmd {
         "submit" => Some(&[
             "model", "dataset", "steps", "samples", "seed", "lr", "engine", "precision",
-            "artifacts", "resume_from", "checkpoint_to",
+            "artifacts", "resume_from", "checkpoint_to", "persist",
         ]),
         "status" | "cancel" | "forget" => Some(&["job"]),
         "events" => Some(&["job", "wait"]),
         "infer" => Some(&["model", "engine", "precision", "seed", "x", "job", "artifacts"]),
+        "store" | "store-stats" => Some(&[]),
         "shutdown" => Some(&[]),
         _ => None,
     };
@@ -385,12 +422,39 @@ fn dispatch(
                 ("forgotten", Json::Bool(forgotten)),
             ]))
         }),
+        "store" => no_store_err(svc).and_then(|store| {
+            let records = store.list()?;
+            let resident: std::collections::BTreeSet<String> =
+                store.resident_keys().into_iter().collect();
+            Ok(Some(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("cmd", jstr("store")),
+                ("dir", jstr(store.dir().display().to_string())),
+                (
+                    "records",
+                    arr(records.iter().map(|(k, bytes)| {
+                        obj(vec![
+                            ("key", jstr(k.clone())),
+                            ("bytes", num(*bytes as f64)),
+                            ("resident", Json::Bool(resident.contains(k))),
+                        ])
+                    })),
+                ),
+            ])))
+        }),
+        "store-stats" => no_store_err(svc).and_then(|store| {
+            let s = store.stats()?;
+            let mut fields = vec![("ok", Json::Bool(true)), ("cmd", jstr("store-stats"))];
+            fields.extend(store_stat_fields(&s));
+            Ok(Some(obj(fields)))
+        }),
         "shutdown" => Ok(Some(obj(vec![
             ("ok", Json::Bool(true)),
             ("cmd", jstr("shutdown")),
         ]))),
         other => Err(anyhow!(
-            "unknown cmd {other:?}; expected submit|status|events|infer|cancel|forget|shutdown"
+            "unknown cmd {other:?}; expected submit|status|events|infer|cancel|forget\
+             |store|store-stats|shutdown"
         )),
     };
     Ok(result)
@@ -514,6 +578,70 @@ mod tests {
             responses.last().unwrap().get("cmd").and_then(|v| v.as_str()),
             Some("shutdown")
         );
+    }
+
+    #[test]
+    fn persist_delta_round_trip_and_store_commands() {
+        let dir = std::env::temp_dir().join("wasi_proto_test_store");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+        let store_dir = dir.join("store");
+        let svc = Service::start(
+            ServiceConfig::new(dir).with_workers(1).with_store(&store_dir, 64 << 20),
+        )
+        .unwrap();
+        let responses = run_session(
+            &svc,
+            &[
+                concat!(
+                    r#"{"cmd":"submit","model":"vit_demo_wasi_eps80","#,
+                    r#""steps":4,"samples":32,"persist":"delta"}"#
+                ),
+                r#"{"cmd":"events","job":1,"wait":true}"#,
+                r#"{"cmd":"infer","model":"vit_demo_wasi_eps80","job":1}"#,
+                r#"{"cmd":"store"}"#,
+                r#"{"cmd":"store-stats"}"#,
+                r#"{"cmd":"forget","job":1}"#,
+                r#"{"cmd":"store"}"#,
+                r#"{"cmd":"submit","model":"vit_demo_wasi_eps80","persist":"sideways"}"#,
+                r#"{"cmd":"shutdown"}"#,
+            ],
+        );
+        svc.shutdown();
+        // The delta job served personalized inference...
+        let infer = responses
+            .iter()
+            .find(|r| r.get("cmd").and_then(|v| v.as_str()) == Some("infer"))
+            .unwrap();
+        assert_eq!(infer.get("ok"), Some(&Json::Bool(true)), "{infer}");
+        // ...its record shows up in `store` (resident, nonzero bytes)...
+        let stores: Vec<&Json> = responses
+            .iter()
+            .filter(|r| r.get("cmd").and_then(|v| v.as_str()) == Some("store"))
+            .collect();
+        assert_eq!(stores.len(), 2, "{responses:?}");
+        let records = stores[0].get("records").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(records.len(), 1, "{}", stores[0]);
+        assert_eq!(records[0].get("key").and_then(|v| v.as_str()), Some("job-1"));
+        assert_eq!(records[0].get("resident"), Some(&Json::Bool(true)));
+        assert!(records[0].get("bytes").and_then(|v| v.as_usize()).unwrap() > 0);
+        // ...store-stats counted the put...
+        let stats = responses
+            .iter()
+            .find(|r| r.get("cmd").and_then(|v| v.as_str()) == Some("store-stats"))
+            .unwrap();
+        assert_eq!(stats.get("puts").and_then(|v| v.as_usize()), Some(1), "{stats}");
+        // ...forget dropped it from the store...
+        let records = stores[1].get("records").and_then(|v| v.as_arr()).unwrap();
+        assert!(records.is_empty(), "{}", stores[1]);
+        // ...and a bogus persist mode errors in-band.
+        let bad = &responses[responses.len() - 2];
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)), "{bad}");
+        assert!(bad
+            .get("error")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .contains("persist"));
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::coordinator::{Checkpoint, FinetuneReport, RunStatus, TrainConfig, Tra
 use crate::data::synth::VisionTask;
 use crate::data::Loader;
 use crate::precision::Precision;
+use crate::store::{extract_delta, DeltaRecord};
 use crate::util::threadpool::ThreadCountGuard;
 
 use super::job::JobSpec;
@@ -31,10 +32,14 @@ pub enum RunnerEvent {
 
 /// Everything a finished job yields: the public report plus the final
 /// flat parameter vector (kept by the service so inference can run
-/// against a finished job's personalized weights).
+/// against a finished job's personalized weights).  A `persist_delta`
+/// job additionally carries its extracted subspace delta record — the
+/// service stores THAT and drops `final_params` instead of retaining a
+/// full copy per user.
 pub struct JobOutcome {
     pub report: FinetuneReport,
     pub final_params: Vec<f32>,
+    pub delta: Option<DeltaRecord>,
 }
 
 /// Run one job to completion on the caller's thread.
@@ -79,6 +84,9 @@ pub fn execute_job(
         verbose: cfg.verbose,
         engine: cfg.engine,
         precision: cfg.precision,
+        // Delta persistence requires the frozen region to stay
+        // bit-identical to the base: train subspace-only.
+        subspace_only: spec.persist_delta,
     };
     let mut trainer = Trainer::new(&pool.runtime, entry, tcfg)?;
 
@@ -133,7 +141,16 @@ pub fn execute_job(
         memory: account(entry),
         loss_curve: trainer.metrics.loss_curve(50),
     };
-    Ok(JobOutcome { report, final_params: trainer.engine.params().to_vec() })
+    let delta = if spec.persist_delta {
+        // Extraction verifies bit-exactly that the frozen region still
+        // equals the (precision-adjusted) base; a drifted job fails
+        // loudly instead of persisting a lossy record.
+        let base = pool.initial_params(&cfg.model)?;
+        Some(extract_delta(entry, &base, trainer.engine.params(), cfg.precision)?)
+    } else {
+        None
+    };
+    Ok(JobOutcome { report, final_params: trainer.engine.params().to_vec(), delta })
 }
 
 /// A pool inference request (shared by the service's `infer` command
@@ -163,6 +180,18 @@ pub struct InferOutput {
     pub correct: Option<usize>,
 }
 
+/// The parameter source a pool inference reads from.
+pub enum InferParams<'a> {
+    /// The variant's initial/pretrained params.
+    Base,
+    /// A finished job's retained full parameter vector.
+    Full(&'a [f32]),
+    /// A finished delta-persisted job's record, applied against the
+    /// pool's shared frozen base at request time (DESIGN.md §Variant
+    /// store) — the f32 path serves zero-copy via the overlay view.
+    Delta(&'a DeltaRecord),
+}
+
 /// Run pool inference with explicit params (`None` = the variant's
 /// initial/pretrained params).  Shared by the service and the CLI.
 pub fn run_infer(
@@ -170,8 +199,21 @@ pub fn run_infer(
     req: &InferRequest,
     params: Option<&[f32]>,
 ) -> Result<InferOutput> {
+    match params {
+        Some(p) => run_infer_with(pool, req, InferParams::Full(p)),
+        None => run_infer_with(pool, req, InferParams::Base),
+    }
+}
+
+/// [`run_infer`] generalized over the parameter source, including the
+/// delta-apply path.
+pub fn run_infer_with(
+    pool: &PoolEntry,
+    req: &InferRequest,
+    source: InferParams<'_>,
+) -> Result<InferOutput> {
     let entry = pool.manifest.model(&req.model)?;
-    if let Some(p) = params {
+    if let InferParams::Full(p) = &source {
         if p.len() != entry.params_len {
             bail!(
                 "params length {} does not match model {} ({} expected) — \
@@ -179,6 +221,16 @@ pub fn run_infer(
                 p.len(),
                 entry.name,
                 entry.params_len
+            );
+        }
+    }
+    if let InferParams::Delta(rec) = &source {
+        if rec.model != entry.name {
+            bail!(
+                "delta record is for model {}, request is for {} — refusing \
+                 a cross-variant apply",
+                rec.model,
+                entry.name
             );
         }
     }
@@ -210,15 +262,32 @@ pub fn run_infer(
         }
     };
     let preds = if req.precision == Precision::F32 {
-        let initial;
-        let p: &[f32] = match params {
-            Some(p) => p,
-            None => {
-                initial = pool.initial_params(&req.model)?;
-                &initial
+        match &source {
+            InferParams::Full(p) => engine.predict(p, &x)?,
+            InferParams::Base => {
+                let initial = pool.initial_params(&req.model)?;
+                engine.predict(&initial, &x)?
             }
-        };
-        engine.predict(p, &x)?
+            InferParams::Delta(rec) => {
+                let base = pool.initial_params(&req.model)?;
+                if rec.train_precision == Precision::F32 {
+                    if let Some(native) = pooled.native() {
+                        // Zero-copy delta apply: factors overlay the
+                        // shared base inside the walk — bit-identical
+                        // to predicting on the materialized vector.
+                        let overlay = rec.overlay(&base)?;
+                        let logits = native.infer_overlay(&overlay, &x)?;
+                        crate::engine::ops::argmax_rows(&logits, entry.classes)
+                    } else {
+                        engine.predict(&rec.apply(&base)?, &x)?
+                    }
+                } else {
+                    // A bf16-trained job's frozen region is the rounded
+                    // base; apply() reproduces it exactly, transiently.
+                    engine.predict(&rec.apply(&base)?, &x)?
+                }
+            }
+        }
     } else {
         // Reduced precision resolves to the shared native engine
         // (shared_infer_at rejects HLO): pool params serve from the
@@ -227,9 +296,19 @@ pub fn run_infer(
         let native = pooled
             .native()
             .ok_or_else(|| anyhow!("precision {} requires the native engine", req.precision))?;
-        let logits = match params {
-            Some(p) => native.infer_packed(&native.pack_params(p, req.precision)?, &x)?,
-            None => native.infer_quantized(&x)?,
+        let logits = match &source {
+            InferParams::Full(p) => {
+                native.infer_packed(&native.pack_params(p, req.precision)?, &x)?
+            }
+            InferParams::Base => native.infer_quantized(&x)?,
+            InferParams::Delta(rec) => {
+                // Transiently materialize, then pack exactly as the
+                // retained-full path would — the packed views are
+                // bit-identical because the inputs are.
+                let base = pool.initial_params(&req.model)?;
+                let p = rec.apply(&base)?;
+                native.infer_packed(&native.pack_params(&p, req.precision)?, &x)?
+            }
         };
         crate::engine::ops::argmax_rows(&logits, entry.classes)
     };

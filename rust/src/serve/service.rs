@@ -27,10 +27,16 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::FinetuneReport;
+use crate::store::VariantStore;
 
 use super::job::{JobEvent, JobId, JobSpec, JobState};
 use super::pool::{ModelPool, PoolEntry};
-use super::runner::{self, InferOutput, InferRequest, RunnerEvent};
+use super::runner::{self, InferOutput, InferParams, InferRequest, RunnerEvent};
+
+/// The variant-store key a job's delta record persists under.
+pub fn delta_key(id: JobId) -> String {
+    format!("job-{id}")
+}
 
 /// What a [`FaultHook`] tells a worker to do at an injection point.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,6 +77,13 @@ pub struct ServiceConfig {
     /// Fault-injection hook (tests and the scenario harness only;
     /// `None` in production paths).
     pub faults: Option<Arc<dyn FaultHook>>,
+    /// Variant-store directory (`serve --store DIR`).  `None` disables
+    /// delta persistence: `persist:"delta"` submissions are rejected.
+    pub store: Option<PathBuf>,
+    /// Resident-set byte budget for the variant store
+    /// (`--memory-budget-mb` × 2²⁰; 0 = unbounded).  Ignored without
+    /// `store`.
+    pub memory_budget_bytes: usize,
 }
 
 impl std::fmt::Debug for ServiceConfig {
@@ -79,13 +92,21 @@ impl std::fmt::Debug for ServiceConfig {
             .field("artifacts", &self.artifacts)
             .field("workers", &self.workers)
             .field("faults", &self.faults.is_some())
+            .field("store", &self.store)
+            .field("memory_budget_bytes", &self.memory_budget_bytes)
             .finish()
     }
 }
 
 impl ServiceConfig {
     pub fn new(artifacts: impl Into<PathBuf>) -> ServiceConfig {
-        ServiceConfig { artifacts: artifacts.into(), workers: 2, faults: None }
+        ServiceConfig {
+            artifacts: artifacts.into(),
+            workers: 2,
+            faults: None,
+            store: None,
+            memory_budget_bytes: 0,
+        }
     }
 
     pub fn with_workers(mut self, workers: usize) -> ServiceConfig {
@@ -95,6 +116,14 @@ impl ServiceConfig {
 
     pub fn with_faults(mut self, faults: Arc<dyn FaultHook>) -> ServiceConfig {
         self.faults = Some(faults);
+        self
+    }
+
+    /// Attach a variant store at `dir` with a resident budget of
+    /// `budget_bytes` (0 = unbounded).
+    pub fn with_store(mut self, dir: impl Into<PathBuf>, budget_bytes: usize) -> ServiceConfig {
+        self.store = Some(dir.into());
+        self.memory_budget_bytes = budget_bytes;
         self
     }
 }
@@ -109,6 +138,14 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     } else {
         "non-string panic payload".to_string()
     }
+}
+
+/// How a finished job's personalized weights are served: the retained
+/// full parameter vector, or (delta-persisted jobs) the variant-store
+/// key of the subspace record to apply over the shared frozen base.
+enum JobSource {
+    Full(Arc<Vec<f32>>),
+    Delta(String),
 }
 
 struct JobEntry {
@@ -136,6 +173,9 @@ struct Shared {
     shutdown: AtomicBool,
     /// Fault-injection hook (scenario harness; `None` in production).
     faults: Option<Arc<dyn FaultHook>>,
+    /// Variant store for delta-persisted jobs (`None` = persistence
+    /// disabled).  Also attached to the default pool entry.
+    store: Option<Arc<VariantStore>>,
 }
 
 impl Shared {
@@ -234,6 +274,21 @@ impl Shared {
                 panic_message(payload.as_ref())
             )),
         };
+        // Persist a delta job's record BEFORE the terminal transition
+        // (disk I/O outside the jobs lock): a failed write fails the
+        // job — a Done delta job whose record is not on disk would have
+        // nothing to serve.  The full parameter vector is dropped here;
+        // the store is the job's only retained state.
+        let outcome = outcome.and_then(|mut out| {
+            if let Some(rec) = out.delta.take() {
+                let store = self.store.as_ref().ok_or_else(|| {
+                    anyhow!("delta job finished but the service has no variant store attached")
+                })?;
+                store.put(&delta_key(id), rec)?;
+                out.final_params = Vec::new();
+            }
+            Ok(out)
+        });
 
         let mut jobs = self.jobs.lock().unwrap();
         if let Some(j) = jobs.get_mut(&id.0) {
@@ -247,7 +302,11 @@ impl Shared {
                             &tx,
                             JobEvent::Done { job: id, report: out.report.clone() },
                         );
-                        j.final_params = Some(Arc::new(out.final_params));
+                        j.final_params = if j.spec.persist_delta {
+                            None // the variant store holds the delta record
+                        } else {
+                            Some(Arc::new(out.final_params))
+                        };
                         j.state = JobState::Done(out.report);
                     }
                     Err(e) => {
@@ -314,6 +373,11 @@ pub struct Service {
 impl Service {
     /// Load the default artifact directory and spawn the worker pool.
     pub fn start(cfg: ServiceConfig) -> Result<Service> {
+        let store = cfg
+            .store
+            .as_ref()
+            .map(|dir| VariantStore::open(dir, cfg.memory_budget_bytes).map(Arc::new))
+            .transpose()?;
         let shared = Arc::new(Shared {
             pool: ModelPool::new(),
             default_artifacts: cfg.artifacts.clone(),
@@ -324,10 +388,14 @@ impl Service {
             next_id: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
             faults: cfg.faults.clone(),
+            store,
         });
         // Eager-load the default dir so a bad --artifacts fails at
         // startup, not at first submit.
-        shared.pool.open(&cfg.artifacts)?;
+        let entry = shared.pool.open(&cfg.artifacts)?;
+        if let Some(store) = &shared.store {
+            entry.attach_store(store.clone());
+        }
         let workers = (0..cfg.workers.max(1))
             .map(|i| {
                 let shared = shared.clone();
@@ -359,9 +427,36 @@ impl Service {
             .clone()
             .unwrap_or_else(|| self.shared.default_artifacts.clone());
         let entry = self.shared.pool.open(dir)?;
-        entry.manifest.model(&spec.config.model)?;
+        let model = entry.manifest.model(&spec.config.model)?;
         if spec.config.steps == 0 {
             return Err(anyhow!("job must run at least one step"));
+        }
+        if spec.persist_delta {
+            // Delta persistence needs (a) an attached store, (b) the
+            // service's default artifact set (store keys are scoped to
+            // one artifact directory), and (c) a factored variant —
+            // a vanilla model has no subspace to restrict training to.
+            if self.shared.store.is_none() {
+                return Err(anyhow!(
+                    "persist:\"delta\" requires a variant store; start the \
+                     service with --store DIR"
+                ));
+            }
+            if let Some(d) = spec.artifacts.as_deref() {
+                if d != self.shared.default_artifacts {
+                    return Err(anyhow!(
+                        "persist:\"delta\" jobs must train against the service's \
+                         default artifact directory (the store serves one shared base)"
+                    ));
+                }
+            }
+            if model.weight_ranks.is_empty() {
+                return Err(anyhow!(
+                    "model {} has no factored (subspace) layers; delta \
+                     persistence requires a WASI variant",
+                    model.name
+                ));
+            }
         }
 
         let id = JobId(self.shared.next_id.fetch_add(1, Ordering::Relaxed));
@@ -490,20 +585,33 @@ impl Service {
         true
     }
 
-    /// Drop a terminal job's record — report, buffered events, and the
-    /// retained final params.  Long-lived services call this (protocol
-    /// `forget`) once a job's results are consumed; without it every
-    /// finished job pins one model-sized param vector forever.  Returns
-    /// false for unknown ids and jobs that are still queued/running.
+    /// Drop a terminal job's record — report, buffered events, the
+    /// retained final params, AND (delta-persisted jobs) the job's
+    /// variant-store record, both resident and on disk.  Long-lived
+    /// services call this (protocol `forget`) once a job's results are
+    /// consumed; without it every finished job pins one model-sized
+    /// param vector (or one delta record) forever.  Returns false for
+    /// unknown ids and jobs that are still queued/running.
     pub fn forget(&self, id: JobId) -> bool {
-        let mut jobs = self.shared.jobs.lock().unwrap();
-        match jobs.get(&id.0) {
-            Some(j) if j.state.is_terminal() => {
-                jobs.remove(&id.0);
-                true
+        let persisted = {
+            let mut jobs = self.shared.jobs.lock().unwrap();
+            match jobs.get(&id.0) {
+                Some(j) if j.state.is_terminal() => {
+                    let persisted = j.spec.persist_delta;
+                    jobs.remove(&id.0);
+                    persisted
+                }
+                _ => return false,
             }
-            _ => false,
+        };
+        if persisted {
+            if let Some(store) = &self.shared.store {
+                // Best-effort: a Failed delta job never wrote a record,
+                // and forget must still drop its bookkeeping.
+                let _ = store.remove(&delta_key(id));
+            }
         }
+        true
     }
 
     /// Final flat params of a `Done` job (personalized inference).
@@ -511,17 +619,18 @@ impl Service {
         self.shared.jobs.lock().unwrap().get(&id.0).and_then(|j| j.final_params.clone())
     }
 
-    /// Final params of a `Done` job, checked against the variant AND
-    /// artifact directory the caller wants to serve — a params-length
-    /// coincidence (same-named variant from another directory, or two
-    /// eps variants with equal shapes) must never silently serve the
-    /// wrong weights.
-    fn job_params_for_model(
+    /// Parameter source of a `Done` job, checked against the variant
+    /// AND artifact directory the caller wants to serve — a
+    /// params-length coincidence (same-named variant from another
+    /// directory, or two eps variants with equal shapes) must never
+    /// silently serve the wrong weights.  A delta-persisted job yields
+    /// its store key; everything else yields the retained full vector.
+    fn job_source_for_model(
         &self,
         id: JobId,
         model: &str,
         dir: &std::path::Path,
-    ) -> Result<Arc<Vec<f32>>> {
+    ) -> Result<JobSource> {
         let jobs = self.shared.jobs.lock().unwrap();
         let j = jobs
             .get(&id.0)
@@ -546,14 +655,29 @@ impl Service {
                 dir.display()
             ));
         }
-        j.final_params.clone().ok_or_else(|| {
-            anyhow!("job {id} has no final params yet (state: {})", j.state.label())
-        })
+        if j.spec.persist_delta {
+            return match &j.state {
+                JobState::Done(_) => Ok(JobSource::Delta(delta_key(id))),
+                other => Err(anyhow!(
+                    "job {id} has no delta record yet (state: {})",
+                    other.label()
+                )),
+            };
+        }
+        j.final_params
+            .clone()
+            .map(JobSource::Full)
+            .ok_or_else(|| {
+                anyhow!("job {id} has no final params yet (state: {})", j.state.label())
+            })
     }
 
     /// Pool inference on the caller's thread; interleaves with running
     /// jobs.  `artifacts`/`job` select whose params to serve: a `Done`
-    /// job's personalized weights, or the variant's pretrained params.
+    /// job's personalized weights (a retained full vector, or a delta
+    /// record fetched from the variant store and applied against the
+    /// shared frozen base at request time), or the variant's pretrained
+    /// params.
     pub fn infer(
         &self,
         artifacts: Option<&std::path::Path>,
@@ -564,11 +688,28 @@ impl Service {
             .map(|p| p.to_path_buf())
             .unwrap_or_else(|| self.shared.default_artifacts.clone());
         let entry = self.shared.pool.open(&dir)?;
-        let job_params = match job {
-            None => None,
-            Some(id) => Some(self.job_params_for_model(id, &req.model, &dir)?),
-        };
-        runner::run_infer(&entry, req, job_params.as_ref().map(|p| p.as_slice()))
+        match job {
+            None => runner::run_infer_with(&entry, req, InferParams::Base),
+            Some(id) => match self.job_source_for_model(id, &req.model, &dir)? {
+                JobSource::Full(p) => {
+                    runner::run_infer_with(&entry, req, InferParams::Full(&p))
+                }
+                JobSource::Delta(key) => {
+                    let store = self.shared.store.as_ref().ok_or_else(|| {
+                        anyhow!("job {id} persisted a delta but no store is attached")
+                    })?;
+                    // `get` reloads from disk if the record was paged
+                    // out — eviction must never fail a request.
+                    let rec = store.get(&key)?;
+                    runner::run_infer_with(&entry, req, InferParams::Delta(&rec))
+                }
+            },
+        }
+    }
+
+    /// The service's variant store, when one is attached.
+    pub fn store(&self) -> Option<Arc<VariantStore>> {
+        self.shared.store.clone()
     }
 
     /// Stop accepting work, fail still-queued jobs, cancel running ones
@@ -726,6 +867,55 @@ mod tests {
         assert!(svc.status(queued).is_none(), "forgotten job must vanish");
         assert!(svc.job_params(queued).is_none());
         assert!(!svc.forget(queued), "double forget reports false");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn delta_jobs_persist_to_store_and_forget_drops_the_record() {
+        let dir = std::env::temp_dir().join("wasi_service_test_delta");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+        let store_dir = dir.join("store");
+        let svc = Service::start(
+            ServiceConfig::new(dir).with_workers(1).with_store(&store_dir, 64 << 20),
+        )
+        .unwrap();
+        // A vanilla variant has no subspace to persist...
+        let mut bad = JobSpec::new(quick_cfg("vit_demo_vanilla", 3));
+        bad.persist_delta = true;
+        let err = svc.submit(bad).unwrap_err();
+        assert!(format!("{err:#}").contains("no factored"), "{err:#}");
+        // ...a WASI variant persists only its factors.
+        let mut spec = JobSpec::new(quick_cfg("vit_demo_wasi_eps80", 5));
+        spec.persist_delta = true;
+        let id = svc.submit(spec).unwrap();
+        svc.wait(id).unwrap();
+        assert!(svc.job_params(id).is_none(), "delta jobs retain no full params");
+        let store = svc.store().unwrap();
+        assert!(store.is_resident(&delta_key(id)), "record lands resident");
+        let req = InferRequest {
+            model: "vit_demo_wasi_eps80".into(),
+            engine: EngineKind::Auto,
+            precision: crate::precision::Precision::F32,
+            seed: 233,
+            x: None,
+        };
+        let out = svc.infer(None, &req, Some(id)).unwrap();
+        assert_eq!(out.batch, out.preds.len());
+        // Eviction must be transparent: page everything out, infer again.
+        store.evict_all();
+        let after = svc.infer(None, &req, Some(id)).unwrap();
+        assert_eq!(out.preds, after.preds, "reload must be bit-identical");
+        assert!(svc.forget(id));
+        assert!(store.list().unwrap().is_empty(), "forget drops the disk record");
+        svc.shutdown();
+
+        // Without an attached store, delta submissions are rejected.
+        let svc = demo_service("delta_nostore", 1);
+        let mut spec = JobSpec::new(quick_cfg("vit_demo_wasi_eps80", 3));
+        spec.persist_delta = true;
+        let err = svc.submit(spec).unwrap_err();
+        assert!(format!("{err:#}").contains("--store"), "{err:#}");
         svc.shutdown();
     }
 

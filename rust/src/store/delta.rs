@@ -1,0 +1,496 @@
+//! Delta records: a personalized variant persisted as ONLY its WASI
+//! subspace factors (DESIGN.md §Variant store).
+//!
+//! A finished `persist:"delta"` job trained with subspace-only SGD
+//! (`GraphExecutor::restrict_to_subspace`) differs from the shared
+//! frozen base in exactly the factored layers' `.l`/`.r` tensors, so
+//! those tensors — a few percent of the full vector — are all the
+//! store writes.  [`extract_delta`] verifies that contract bit-exactly
+//! before persisting anything: a job whose frozen region drifted from
+//! the base is refused, never silently truncated.
+//!
+//! On-disk format (versioned, self-checking):
+//!
+//! ```text
+//! magic "WSID" | u32 LE version | u32 LE header_len | header JSON
+//!   | payload (tensor f32 data, LE, table order) | u64 LE FNV-1a hash
+//! ```
+//!
+//! The header JSON carries the model name, training precision, the
+//! base-params content hash (hex — u64 does not fit f64 exactly), and
+//! the tensor table (name/shape/offset).  The trailing FNV-1a hash
+//! covers every preceding byte; decode refuses corrupt records and
+//! unknown versions with actionable messages.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::engine::{DeltaOverlay, ModelPlan};
+use crate::precision::{round_bf16_inplace, Precision};
+use crate::runtime::ModelEntry;
+use crate::util::json::{self, Json};
+
+/// On-disk magic for delta records.
+pub const DELTA_MAGIC: [u8; 4] = *b"WSID";
+/// Current on-disk format version.
+pub const DELTA_VERSION: u32 = 1;
+
+/// FNV-1a over the little-endian bytes of an f32 slice — the
+/// content hash identifying the frozen base a delta applies to.
+pub fn params_hash(data: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in data {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+fn fnv_bytes(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in data {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// One subspace factor tensor inside a delta record.
+#[derive(Debug, Clone)]
+pub struct DeltaTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in the model's flat parameter vector (the executor's
+    /// addressing; `DeltaOverlay` keys on it).
+    pub offset: usize,
+    pub data: Vec<f32>,
+}
+
+impl DeltaTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// A personalized variant reduced to its subspace factors.
+#[derive(Debug, Clone)]
+pub struct DeltaRecord {
+    /// Manifest model name the record applies to.
+    pub model: String,
+    /// Precision the job trained at: a bf16 job's frozen region is the
+    /// bf16-ROUNDED base, and [`DeltaRecord::apply`] reproduces exactly
+    /// that.
+    pub train_precision: Precision,
+    /// [`params_hash`] of the RAW shared base the delta was extracted
+    /// against (the pool's cached `initial_params`).
+    pub base_hash: u64,
+    pub tensors: Vec<DeltaTensor>,
+}
+
+impl DeltaRecord {
+    /// Total factor elements.
+    pub fn elems(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+
+    /// Resident payload bytes (what the LRU budget charges per record).
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4
+    }
+
+    /// Refuse a base vector that is not the one this delta was
+    /// extracted against.
+    pub fn check_base(&self, base: &[f32]) -> Result<()> {
+        let h = params_hash(base);
+        if h != self.base_hash {
+            bail!(
+                "delta record for model {} was extracted against base {:016x}, \
+                 got {:016x} — the shared frozen base changed",
+                self.model,
+                self.base_hash,
+                h
+            );
+        }
+        Ok(())
+    }
+
+    /// Materialize the full personalized vector: base, rounded to the
+    /// training storage grid when the job trained at bf16, with the
+    /// factor tensors overlaid.  Bit-identical to the params the
+    /// finished job held.
+    pub fn apply(&self, base: &[f32]) -> Result<Vec<f32>> {
+        self.check_base(base)?;
+        let mut out = base.to_vec();
+        if self.train_precision == Precision::Bf16 {
+            round_bf16_inplace(&mut out);
+        }
+        for t in &self.tensors {
+            if t.offset + t.data.len() > out.len() {
+                bail!(
+                    "delta tensor {} [{} @ {}] overruns params_len {}",
+                    t.name,
+                    t.data.len(),
+                    t.offset,
+                    out.len()
+                );
+            }
+            out[t.offset..t.offset + t.data.len()].copy_from_slice(&t.data);
+        }
+        Ok(out)
+    }
+
+    /// Zero-copy overlay over the raw base for the f32 serving path.
+    /// Only valid for f32-trained records: a bf16 job's frozen region
+    /// is the rounded base, which an overlay over the raw base cannot
+    /// represent — materialize via [`DeltaRecord::apply`] instead.
+    pub fn overlay<'a>(&'a self, base: &'a [f32]) -> Result<DeltaOverlay<'a>> {
+        if self.train_precision != Precision::F32 {
+            bail!(
+                "delta record trained at {} cannot overlay the raw base; \
+                 materialize with apply() instead",
+                self.train_precision
+            );
+        }
+        self.check_base(base)?;
+        let mut tensors: BTreeMap<usize, &[f32]> = BTreeMap::new();
+        for t in &self.tensors {
+            if tensors.insert(t.offset, &t.data).is_some() {
+                bail!("delta record tensors collide at offset {}", t.offset);
+            }
+        }
+        DeltaOverlay::new(base, tensors)
+    }
+
+    /// Encode to the versioned on-disk format.
+    pub fn encode(&self) -> Vec<u8> {
+        let tensors: Vec<Json> = self
+            .tensors
+            .iter()
+            .map(|t| {
+                json::obj(vec![
+                    ("name", json::str(t.name.clone())),
+                    ("shape", json::arr(t.shape.iter().map(|&s| json::num(s as f64)))),
+                    ("offset", json::num(t.offset as f64)),
+                ])
+            })
+            .collect();
+        let header = json::obj(vec![
+            ("base_hash", json::str(format!("{:016x}", self.base_hash))),
+            ("model", json::str(self.model.clone())),
+            ("tensors", Json::Arr(tensors)),
+            ("train_precision", json::str(self.train_precision.to_string())),
+        ])
+        .to_string();
+        let mut out = Vec::with_capacity(16 + header.len() + self.bytes());
+        out.extend_from_slice(&DELTA_MAGIC);
+        out.extend_from_slice(&DELTA_VERSION.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for t in &self.tensors {
+            for v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let h = fnv_bytes(&out);
+        out.extend_from_slice(&h.to_le_bytes());
+        out
+    }
+
+    /// Decode a record, refusing truncation, corruption (trailing hash
+    /// mismatch), and unknown format versions.
+    pub fn decode(bytes: &[u8]) -> Result<DeltaRecord> {
+        if bytes.len() < 20 {
+            bail!("delta record truncated ({} bytes)", bytes.len());
+        }
+        if bytes[..4] != DELTA_MAGIC {
+            bail!("not a delta record (bad magic)");
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != DELTA_VERSION {
+            bail!(
+                "delta record format version {version} is not supported \
+                 (this build reads version {DELTA_VERSION}); re-persist the \
+                 variant with a matching build or drop it with `store gc`"
+            );
+        }
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let body = &bytes[..bytes.len() - 8];
+        let actual = fnv_bytes(body);
+        if stored != actual {
+            bail!(
+                "delta record corrupt: content hash {actual:016x} != stored {stored:016x}"
+            );
+        }
+        let header_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        if 12 + header_len > body.len() {
+            bail!("delta record header overruns payload");
+        }
+        let header_text = std::str::from_utf8(&bytes[12..12 + header_len])
+            .context("delta record header is not UTF-8")?;
+        let header = Json::parse(header_text).context("delta record header is not JSON")?;
+        let model = header
+            .req("model")?
+            .as_str()
+            .ok_or_else(|| anyhow!("header model must be a string"))?
+            .to_string();
+        let precision_text = header
+            .req("train_precision")?
+            .as_str()
+            .ok_or_else(|| anyhow!("header train_precision must be a string"))?;
+        let train_precision: Precision = precision_text.parse()?;
+        let hash_hex = header
+            .req("base_hash")?
+            .as_str()
+            .ok_or_else(|| anyhow!("header base_hash must be a string"))?;
+        let base_hash = u64::from_str_radix(hash_hex, 16)
+            .map_err(|e| anyhow!("bad base_hash {hash_hex:?}: {e}"))?;
+        let table = header
+            .req("tensors")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("header tensors must be an array"))?;
+        let payload = &body[12 + header_len..];
+        let mut tensors = Vec::with_capacity(table.len());
+        let mut cursor = 0usize;
+        for t in table {
+            let name = t
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("tensor name must be a string"))?
+                .to_string();
+            let shape = t.req("shape")?.usize_vec()?;
+            let offset = t
+                .req("offset")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("tensor offset must be a number"))?;
+            let numel = shape.iter().product::<usize>().max(1);
+            if cursor + numel * 4 > payload.len() {
+                bail!("delta tensor {name} overruns the payload");
+            }
+            let data: Vec<f32> = payload[cursor..cursor + numel * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            cursor += numel * 4;
+            tensors.push(DeltaTensor { name, shape, offset, data });
+        }
+        if cursor != payload.len() {
+            bail!(
+                "delta record payload has {} trailing bytes after the tensor table",
+                payload.len() - cursor
+            );
+        }
+        Ok(DeltaRecord { model, train_precision, base_hash, tensors })
+    }
+
+    /// Write to `path` atomically (temp file + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("delta.tmp");
+        std::fs::write(&tmp, self.encode())
+            .with_context(|| format!("writing delta record {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("installing delta record {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Read and decode a record from `path`.
+    pub fn load(path: &Path) -> Result<DeltaRecord> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading delta record {}", path.display()))?;
+        Self::decode(&bytes).with_context(|| format!("decoding {}", path.display()))
+    }
+}
+
+/// Extract a finished job's delta record: the subspace factor tensors
+/// from `trained`, after verifying bit-exactly that every frozen tensor
+/// equals the expected base (the raw base for f32 jobs, the
+/// bf16-rounded base for bf16 jobs).  A job whose frozen region drifted
+/// — trained without `restrict_to_subspace`, or against another base —
+/// is refused rather than persisted lossily.
+pub fn extract_delta(
+    entry: &ModelEntry,
+    base: &[f32],
+    trained: &[f32],
+    train_precision: Precision,
+) -> Result<DeltaRecord> {
+    if base.len() != entry.params_len || trained.len() != entry.params_len {
+        bail!(
+            "extract_delta: params lengths {}/{} != manifest {}",
+            base.len(),
+            trained.len(),
+            entry.params_len
+        );
+    }
+    let plan = ModelPlan::from_entry(entry)?;
+    let specs = plan.subspace_specs();
+    if specs.is_empty() {
+        bail!(
+            "model {} has no factored (subspace) layers; nothing to persist \
+             as a delta — use full persistence for vanilla variants",
+            entry.name
+        );
+    }
+    let mut in_subspace = vec![false; entry.params_len];
+    for s in &specs {
+        for flag in &mut in_subspace[s.offset..s.offset + s.numel()] {
+            *flag = true;
+        }
+    }
+    let expected: Vec<f32> = if train_precision == Precision::Bf16 {
+        let mut e = base.to_vec();
+        round_bf16_inplace(&mut e);
+        e
+    } else {
+        base.to_vec()
+    };
+    for (i, (t, e)) in trained.iter().zip(&expected).enumerate() {
+        if !in_subspace[i] && t.to_bits() != e.to_bits() {
+            bail!(
+                "model {}: frozen parameter at flat offset {i} drifted from the \
+                 shared base ({e} -> {t}); the job did not train subspace-only, \
+                 refusing to persist a lossy delta",
+                entry.name
+            );
+        }
+    }
+    let tensors = specs
+        .iter()
+        .map(|s| DeltaTensor {
+            name: s.name.clone(),
+            shape: s.shape.clone(),
+            offset: s.offset,
+            data: trained[s.offset..s.offset + s.numel()].to_vec(),
+        })
+        .collect();
+    Ok(DeltaRecord {
+        model: entry.name.clone(),
+        train_precision,
+        base_hash: params_hash(base),
+        tensors,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::demo::{write_demo_artifacts, DemoConfig};
+    use crate::runtime::Manifest;
+
+    fn demo_manifest(tag: &str) -> Manifest {
+        let dir = std::env::temp_dir().join(format!("wasi_store_delta_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    fn perturbed_delta(tag: &str) -> (crate::runtime::ModelEntry, Vec<f32>, DeltaRecord) {
+        let m = demo_manifest(tag);
+        let entry = m.model("vit_demo_wasi_eps80").unwrap().clone();
+        let base = entry.load_params().unwrap();
+        let plan = ModelPlan::from_entry(&entry).unwrap();
+        let mut trained = base.clone();
+        for s in plan.subspace_specs() {
+            for v in &mut trained[s.offset..s.offset + s.numel()] {
+                *v += 0.25;
+            }
+        }
+        let rec = extract_delta(&entry, &base, &trained, Precision::F32).unwrap();
+        (entry, base, rec)
+    }
+
+    #[test]
+    fn encode_decode_round_trips_bitwise() {
+        let (_, base, rec) = perturbed_delta("roundtrip");
+        let back = DeltaRecord::decode(&rec.encode()).unwrap();
+        assert_eq!(back.model, rec.model);
+        assert_eq!(back.train_precision, rec.train_precision);
+        assert_eq!(back.base_hash, rec.base_hash);
+        assert_eq!(back.tensors.len(), rec.tensors.len());
+        for (a, b) in rec.tensors.iter().zip(&back.tensors) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.offset, b.offset);
+            let ab: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "{}", a.name);
+        }
+        // Applying the decoded record reproduces the trained vector.
+        let applied = back.apply(&base).unwrap();
+        let direct = rec.apply(&base).unwrap();
+        let lb: Vec<u32> = applied.iter().map(|v| v.to_bits()).collect();
+        let rb: Vec<u32> = direct.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(lb, rb);
+    }
+
+    #[test]
+    fn decode_refuses_version_mismatch_and_corruption() {
+        let (_, _, rec) = perturbed_delta("refuse");
+        let good = rec.encode();
+        // Future version.
+        let mut versioned = good.clone();
+        versioned[4..8].copy_from_slice(&(DELTA_VERSION + 1).to_le_bytes());
+        let err = DeltaRecord::decode(&versioned).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        // Flipped payload byte: hash check fires.
+        let mut corrupt = good.clone();
+        let mid = corrupt.len() / 2;
+        corrupt[mid] ^= 0xff;
+        let err = DeltaRecord::decode(&corrupt).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "{err:#}");
+        // Truncation.
+        assert!(DeltaRecord::decode(&good[..10]).is_err());
+        assert!(DeltaRecord::decode(b"JUNK").is_err());
+    }
+
+    #[test]
+    fn extract_refuses_frozen_drift_and_wrong_base() {
+        let m = demo_manifest("drift");
+        let entry = m.model("vit_demo_wasi_eps80").unwrap().clone();
+        let base = entry.load_params().unwrap();
+        let mut trained = base.clone();
+        // Perturb a frozen tensor (embed.w sits outside the subspace).
+        trained[0] += 1.0;
+        let err = extract_delta(&entry, &base, &trained, Precision::F32).unwrap_err();
+        assert!(format!("{err:#}").contains("drifted"), "{err:#}");
+        // A record refuses to apply against a different base.
+        let (_, base2, rec) = perturbed_delta("wrongbase");
+        let mut other = base2.clone();
+        other[0] += 1.0;
+        assert!(rec.apply(&other).is_err());
+    }
+
+    #[test]
+    fn vanilla_variant_has_no_subspace() {
+        let m = demo_manifest("vanilla");
+        let entry = m.model("vit_demo_vanilla").unwrap().clone();
+        let base = entry.load_params().unwrap();
+        let err = extract_delta(&entry, &base, &base, Precision::F32).unwrap_err();
+        assert!(format!("{err:#}").contains("no factored"), "{err:#}");
+    }
+
+    #[test]
+    fn bf16_record_applies_over_rounded_base() {
+        let m = demo_manifest("bf16");
+        let entry = m.model("vit_demo_wasi_eps80").unwrap().clone();
+        let base = entry.load_params().unwrap();
+        let plan = ModelPlan::from_entry(&entry).unwrap();
+        // A bf16 job's params: rounded base with trained factors.
+        let mut trained = base.clone();
+        round_bf16_inplace(&mut trained);
+        for s in plan.subspace_specs() {
+            for v in &mut trained[s.offset..s.offset + s.numel()] {
+                *v += 0.125;
+            }
+        }
+        let rec = extract_delta(&entry, &base, &trained, Precision::Bf16).unwrap();
+        let applied = rec.apply(&base).unwrap();
+        let ab: Vec<u32> = applied.iter().map(|v| v.to_bits()).collect();
+        let tb: Vec<u32> = trained.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, tb);
+        // The zero-copy overlay path is f32-only by design.
+        assert!(rec.overlay(&base).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! The variant store (DESIGN.md §Variant store): per-user subspace
+//! deltas over a shared frozen base, with on-disk persistence and
+//! budget-driven LRU paging.
+//!
+//! The paper's resource-constrained thesis applied to serving: all
+//! per-user state a personalized job produced lives in the WASI
+//! subspace (`delta` module — factor tensors + metadata + content
+//! hash, versioned binary format), so a pool fronts orders of
+//! magnitude more users than full-model copies would allow.  Requests
+//! apply a delta against the pool's cached frozen base at serve time —
+//! zero-copy for the f32 path ([`crate::engine::DeltaOverlay`]), a
+//! transient materialization for reduced-precision serving — and the
+//! resident set pages under a costmodel-driven byte budget (`paging`
+//! module), spilling cold users to disk and reloading them
+//! transparently, exactly once, on the next request.
+
+pub mod delta;
+pub mod paging;
+
+pub use delta::{extract_delta, params_hash, DeltaRecord, DeltaTensor, DELTA_VERSION};
+pub use paging::{StoreStats, VariantStore};

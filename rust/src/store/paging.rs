@@ -1,0 +1,387 @@
+//! The variant store: write-through delta persistence plus an
+//! in-memory resident set under a costmodel-driven byte budget, paged
+//! by LRU (DESIGN.md §Variant store).
+//!
+//! Semantics the soak harness asserts as invariants (`--faults
+//! evict-budget`):
+//!
+//! * **Write-through** — `put` installs the record on disk (atomic
+//!   temp-file rename) before it becomes resident, so eviction is
+//!   memory-only and can never lose a variant.
+//! * **Exactly-once reload** — `get` holds the resident-set lock across
+//!   the disk load, so concurrent requests for an evicted key perform
+//!   one reload, not a thundering herd.
+//! * **Never evict the working record** — the key being inserted or
+//!   served is exempt from eviction, so a single record larger than the
+//!   whole budget still serves (the budget degrades to
+//!   one-resident-at-a-time, not to failure).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::delta::DeltaRecord;
+
+/// Counters + occupancy snapshot (`store-stats`, bench, soak report).
+#[derive(Debug, Clone, Default)]
+pub struct StoreStats {
+    /// Records currently resident in memory.
+    pub resident: usize,
+    /// Payload bytes of the resident set.
+    pub resident_bytes: usize,
+    /// The configured byte budget (0 = unlimited).
+    pub budget_bytes: usize,
+    /// Records on disk.
+    pub disk_records: usize,
+    /// Total on-disk bytes.
+    pub disk_bytes: u64,
+    /// `get` calls served from the resident set.
+    pub hits: u64,
+    /// `get` calls that had to touch disk.
+    pub misses: u64,
+    /// Disk loads performed (exactly-once per evicted key per miss).
+    pub reloads: u64,
+    /// Records paged out of the resident set.
+    pub evictions: u64,
+    /// Records installed via `put`.
+    pub puts: u64,
+}
+
+struct Resident {
+    map: BTreeMap<String, Arc<DeltaRecord>>,
+    /// LRU order, coldest first.
+    order: Vec<String>,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    reloads: u64,
+    evictions: u64,
+    puts: u64,
+}
+
+impl Resident {
+    fn touch(&mut self, key: &str) {
+        self.order.retain(|k| k != key);
+        self.order.push(key.to_string());
+    }
+
+    fn drop_key(&mut self, key: &str) -> bool {
+        if let Some(rec) = self.map.remove(key) {
+            self.bytes -= rec.bytes();
+            self.order.retain(|k| k != key);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Page out coldest-first until within budget; `protect` (the key
+    /// being installed or served) is exempt.
+    fn evict_over_budget(&mut self, budget: usize, protect: &str) {
+        if budget == 0 {
+            return;
+        }
+        while self.bytes > budget {
+            let Some(victim) = self.order.iter().find(|k| k.as_str() != protect).cloned()
+            else {
+                break;
+            };
+            self.drop_key(&victim);
+            self.evictions += 1;
+        }
+    }
+}
+
+/// Per-user subspace deltas over a shared frozen base, persisted to a
+/// directory of `<key>.delta` files with an LRU-paged resident set.
+pub struct VariantStore {
+    dir: PathBuf,
+    budget_bytes: usize,
+    inner: Mutex<Resident>,
+}
+
+/// Keys become file names: restrict to a charset that cannot traverse
+/// paths or collide with the `.delta` suffix handling.
+fn check_key(key: &str) -> Result<()> {
+    if key.is_empty()
+        || !key
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+    {
+        bail!(
+            "invalid store key {key:?}: keys are nonempty [A-Za-z0-9_-] \
+             (they become file names)"
+        );
+    }
+    Ok(())
+}
+
+impl VariantStore {
+    /// Open (creating if needed) a store directory with a resident-set
+    /// byte budget (`0` = unlimited).
+    pub fn open(dir: &Path, budget_bytes: usize) -> Result<VariantStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating store directory {}", dir.display()))?;
+        Ok(VariantStore {
+            dir: dir.to_path_buf(),
+            budget_bytes,
+            inner: Mutex::new(Resident {
+                map: BTreeMap::new(),
+                order: Vec::new(),
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+                reloads: 0,
+                evictions: 0,
+                puts: 0,
+            }),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.delta"))
+    }
+
+    /// Persist a record (write-through: disk first, then resident).
+    pub fn put(&self, key: &str, rec: DeltaRecord) -> Result<()> {
+        check_key(key)?;
+        rec.save(&self.path_for(key))?;
+        let rec = Arc::new(rec);
+        let mut inner = self.inner.lock().unwrap();
+        // Replacing a resident record is not an eviction.
+        let _ = inner.drop_key(key);
+        inner.bytes += rec.bytes();
+        inner.map.insert(key.to_string(), rec);
+        inner.touch(key);
+        inner.puts += 1;
+        inner.evict_over_budget(self.budget_bytes, key);
+        Ok(())
+    }
+
+    /// Fetch a record: resident-set hit, or a transparent exactly-once
+    /// reload from disk (the lock is held across the load).
+    pub fn get(&self, key: &str) -> Result<Arc<DeltaRecord>> {
+        check_key(key)?;
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.map.get(key).cloned() {
+            inner.hits += 1;
+            inner.touch(key);
+            return Ok(rec);
+        }
+        inner.misses += 1;
+        let path = self.path_for(key);
+        if !path.exists() {
+            bail!("no delta record {key:?} in store {}", self.dir.display());
+        }
+        let rec = Arc::new(DeltaRecord::load(&path)?);
+        inner.reloads += 1;
+        inner.bytes += rec.bytes();
+        inner.map.insert(key.to_string(), rec.clone());
+        inner.touch(key);
+        inner.evict_over_budget(self.budget_bytes, key);
+        Ok(rec)
+    }
+
+    /// Whether `key` is currently resident (tests, soak invariants).
+    pub fn is_resident(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().map.contains_key(key)
+    }
+
+    /// Drop a record everywhere: resident set AND disk (`forget`).
+    /// Returns whether anything existed.
+    pub fn remove(&self, key: &str) -> Result<bool> {
+        check_key(key)?;
+        let mut inner = self.inner.lock().unwrap();
+        let was_resident = inner.drop_key(key);
+        drop(inner);
+        let path = self.path_for(key);
+        if path.exists() {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("removing delta record {}", path.display()))?;
+            return Ok(true);
+        }
+        Ok(was_resident)
+    }
+
+    /// All on-disk records as `(key, file_bytes)`, sorted by key.
+    pub fn list(&self) -> Result<Vec<(String, u64)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing store {}", self.dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(key) = name.strip_suffix(".delta") else { continue };
+            out.push((key.to_string(), entry.metadata()?.len()));
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Drop undecodable on-disk records (corruption, format-version
+    /// mismatch) and their resident entries.  Returns the dropped keys.
+    pub fn gc(&self) -> Result<Vec<String>> {
+        let mut dropped = Vec::new();
+        for (key, _) in self.list()? {
+            if DeltaRecord::load(&self.path_for(&key)).is_err() {
+                self.remove(&key)?;
+                dropped.push(key);
+            }
+        }
+        Ok(dropped)
+    }
+
+    /// Page out the entire resident set (each drop counts as an
+    /// eviction).  The soak's bit-identity post-pass uses this to force
+    /// the evict→reload path for every key.
+    pub fn evict_all(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let keys: Vec<String> = inner.order.clone();
+        for key in keys {
+            if inner.drop_key(&key) {
+                inner.evictions += 1;
+            }
+        }
+    }
+
+    /// Resident keys, coldest first.
+    pub fn resident_keys(&self) -> Vec<String> {
+        self.inner.lock().unwrap().order.clone()
+    }
+
+    /// Counter + occupancy snapshot (scans the directory for the disk
+    /// side).
+    pub fn stats(&self) -> Result<StoreStats> {
+        let disk = self.list()?;
+        let inner = self.inner.lock().unwrap();
+        Ok(StoreStats {
+            resident: inner.map.len(),
+            resident_bytes: inner.bytes,
+            budget_bytes: self.budget_bytes,
+            disk_records: disk.len(),
+            disk_bytes: disk.iter().map(|(_, b)| *b).sum(),
+            hits: inner.hits,
+            misses: inner.misses,
+            reloads: inner.reloads,
+            evictions: inner.evictions,
+            puts: inner.puts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::delta::{DeltaRecord, DeltaTensor};
+    use super::*;
+    use crate::precision::Precision;
+
+    fn record(seed: f32, elems: usize) -> DeltaRecord {
+        DeltaRecord {
+            model: "test".into(),
+            train_precision: Precision::F32,
+            base_hash: 7,
+            tensors: vec![DeltaTensor {
+                name: "blocks.0.mlp.fc1.l".into(),
+                shape: vec![elems],
+                offset: 0,
+                data: (0..elems).map(|i| seed + i as f32).collect(),
+            }],
+        }
+    }
+
+    fn tmp_store(tag: &str, budget: usize) -> VariantStore {
+        let dir = std::env::temp_dir().join(format!("wasi_store_paging_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        VariantStore::open(&dir, budget).unwrap()
+    }
+
+    #[test]
+    fn lru_evicts_coldest_and_reloads_exactly_once() {
+        // Budget fits two 16-element records (64 B each).
+        let store = tmp_store("lru", 128);
+        store.put("u1", record(1.0, 16)).unwrap();
+        store.put("u2", record(2.0, 16)).unwrap();
+        store.put("u3", record(3.0, 16)).unwrap();
+        // u1 was coldest and paged out; u2/u3 resident.
+        assert!(!store.is_resident("u1"));
+        assert!(store.is_resident("u2") && store.is_resident("u3"));
+        let s = store.stats().unwrap();
+        assert_eq!((s.puts, s.evictions, s.disk_records), (3, 1, 3));
+        // Reload u1: one miss, one reload, and the new coldest (u2)
+        // pages out.
+        let rec = store.get("u1").unwrap();
+        assert_eq!(rec.tensors[0].data[0], 1.0);
+        assert!(!store.is_resident("u2"));
+        let s = store.stats().unwrap();
+        assert_eq!((s.misses, s.reloads, s.evictions), (1, 1, 2));
+        // Hits do not touch disk.
+        store.get("u1").unwrap();
+        let s = store.stats().unwrap();
+        assert_eq!((s.hits, s.reloads), (1, 1));
+    }
+
+    #[test]
+    fn oversized_record_stays_resident() {
+        // One record is bigger than the whole budget: it must still
+        // serve (the protect rule), alone.
+        let store = tmp_store("oversize", 32);
+        store.put("big", record(0.0, 64)).unwrap();
+        assert!(store.is_resident("big"));
+        store.put("big2", record(1.0, 64)).unwrap();
+        assert!(store.is_resident("big2"));
+        assert!(!store.is_resident("big"));
+        assert_eq!(store.get("big").unwrap().tensors[0].data[0], 0.0);
+    }
+
+    #[test]
+    fn remove_drops_disk_and_resident() {
+        let store = tmp_store("remove", 0);
+        store.put("u1", record(1.0, 8)).unwrap();
+        assert!(store.remove("u1").unwrap());
+        assert!(!store.is_resident("u1"));
+        assert!(store.get("u1").is_err());
+        assert!(!store.remove("u1").unwrap());
+    }
+
+    #[test]
+    fn gc_drops_corrupt_records() {
+        let store = tmp_store("gc", 0);
+        store.put("good", record(1.0, 8)).unwrap();
+        std::fs::write(store.dir().join("bad.delta"), b"garbage").unwrap();
+        let dropped = store.gc().unwrap();
+        assert_eq!(dropped, vec!["bad".to_string()]);
+        assert_eq!(store.list().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn keys_are_validated() {
+        let store = tmp_store("keys", 0);
+        assert!(store.put("../evil", record(0.0, 4)).is_err());
+        assert!(store.get("").is_err());
+        assert!(store.remove("a/b").is_err());
+    }
+
+    #[test]
+    fn evict_all_counts_evictions() {
+        let store = tmp_store("evictall", 0);
+        store.put("u1", record(1.0, 8)).unwrap();
+        store.put("u2", record(2.0, 8)).unwrap();
+        store.evict_all();
+        assert_eq!(store.resident_keys().len(), 0);
+        let s = store.stats().unwrap();
+        assert_eq!(s.evictions, 2);
+        // Transparent reload after a full page-out.
+        assert!(store.get("u1").is_ok());
+    }
+}

@@ -1,0 +1,235 @@
+//! Variant-store integration tests (tier-1, artifact-free): per-user
+//! subspace deltas over the shared frozen base (DESIGN.md §Variant
+//! store), over the pure-rust demo artifacts.
+//!
+//! What is pinned:
+//! * serving a finished job from its delta record matches serving it
+//!   from the retained full parameter vector at EVERY serving precision
+//!   (f32 zero-copy overlay, bf16/i8 transient materialize-then-pack);
+//! * a bf16-trained job's record reproduces the job's exact final
+//!   params (frozen region = bf16-rounded base) and refuses the
+//!   raw-base overlay;
+//! * the f32 overlay path produces logits bit-identical to inference
+//!   over the materialized vector;
+//! * paging is exactly-once: a one-record budget forces an eviction per
+//!   install, a `get` of the evicted key reloads from disk exactly
+//!   once, and predictions are bit-identical across the round trip;
+//! * an unknown on-disk format version is refused with an actionable
+//!   error (and `gc` drops exactly that record);
+//! * extraction refuses a job whose frozen region drifted from the
+//!   shared base, and refuses variants with no subspace at all.
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+
+use wasi_train::coordinator::FinetuneConfig;
+use wasi_train::data::synth::VisionTask;
+use wasi_train::engine::demo::{write_demo_artifacts, DemoConfig};
+use wasi_train::engine::{EngineKind, InferEngine, NativeInferEngine};
+use wasi_train::precision::Precision;
+use wasi_train::serve::{runner, InferParams, InferRequest, JobSpec, PoolEntry};
+use wasi_train::store::{extract_delta, DeltaRecord, VariantStore, DELTA_VERSION};
+
+const MODEL: &str = "vit_demo_wasi_eps80";
+
+fn demo_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("wasi_store_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+    dir
+}
+
+/// Run one delta-persisted job to completion and return its extracted
+/// record alongside the full final params the retained-full path would
+/// have kept.
+fn delta_job(pool: &PoolEntry, precision: Precision, seed: u64) -> (DeltaRecord, Vec<f32>) {
+    let cfg = FinetuneConfig::builder()
+        .model(MODEL)
+        .samples(48)
+        .steps(6)
+        .seed(seed)
+        .lr0(0.1)
+        .engine(EngineKind::Native)
+        .precision(precision)
+        .build();
+    let mut spec = JobSpec::new(cfg);
+    spec.persist_delta = true;
+    let out = runner::execute_job(pool, &spec, &mut |_| {}, &AtomicBool::new(false)).unwrap();
+    (out.delta.expect("a persist_delta job must yield a record"), out.final_params)
+}
+
+fn infer_req(precision: Precision) -> InferRequest {
+    InferRequest {
+        model: MODEL.to_string(),
+        engine: EngineKind::Auto,
+        precision,
+        seed: 7,
+        x: None,
+    }
+}
+
+fn bitwise(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// The core parity pin: the delta-apply serving path must agree with
+/// the retained-full path at every serving precision.
+#[test]
+fn delta_apply_matches_retained_full_across_serving_precisions() {
+    let dir = demo_dir("parity");
+    let pool = PoolEntry::open(&dir).unwrap();
+    let (rec, full_params) = delta_job(&pool, Precision::F32, 233);
+    assert_eq!(rec.train_precision, Precision::F32);
+    // The record is the point: a small fraction of the full vector.
+    assert!(
+        rec.elems() * 4 < full_params.len(),
+        "delta holds {} of {} params — not a small subspace",
+        rec.elems(),
+        full_params.len()
+    );
+    for precision in [Precision::F32, Precision::Bf16, Precision::I8] {
+        let req = infer_req(precision);
+        let full = runner::run_infer_with(&pool, &req, InferParams::Full(&full_params)).unwrap();
+        let delta = runner::run_infer_with(&pool, &req, InferParams::Delta(&rec)).unwrap();
+        assert_eq!(
+            full.preds,
+            delta.preds,
+            "{precision}: delta-apply diverged from retained-full"
+        );
+        assert_eq!(full.correct, delta.correct, "{precision}: accuracy diverged");
+    }
+}
+
+/// A bf16-trained job's frozen region is the bf16-rounded base:
+/// `apply()` must rebuild the job's exact final params bit for bit, and
+/// the raw-base overlay (which cannot represent the rounding) must be
+/// refused.
+#[test]
+fn bf16_trained_delta_reproduces_the_jobs_exact_params() {
+    let dir = demo_dir("bf16");
+    let pool = PoolEntry::open(&dir).unwrap();
+    let (rec, full_params) = delta_job(&pool, Precision::Bf16, 97);
+    assert_eq!(rec.train_precision, Precision::Bf16);
+    let base = pool.initial_params(MODEL).unwrap();
+    let err = rec.overlay(&base).err().expect("bf16 overlay over the raw base must be refused");
+    assert!(format!("{err:#}").contains("apply()"), "{err:#}");
+    let applied = rec.apply(&base).unwrap();
+    assert_eq!(
+        bitwise(&applied),
+        bitwise(&full_params),
+        "apply() must reproduce the finished job's params exactly"
+    );
+    for precision in [Precision::F32, Precision::Bf16, Precision::I8] {
+        let req = infer_req(precision);
+        let full = runner::run_infer_with(&pool, &req, InferParams::Full(&full_params)).unwrap();
+        let delta = runner::run_infer_with(&pool, &req, InferParams::Delta(&rec)).unwrap();
+        assert_eq!(full.preds, delta.preds, "{precision}: bf16 delta path diverged");
+    }
+}
+
+/// The zero-copy overlay serves logits bit-identical to inference over
+/// the materialized personalized vector — delta-apply is not an
+/// approximation of full personalization at any bit.
+#[test]
+fn overlay_logits_are_bitwise_identical_to_materialized() {
+    let dir = demo_dir("overlay");
+    let pool = PoolEntry::open(&dir).unwrap();
+    let (rec, full_params) = delta_job(&pool, Precision::F32, 233);
+    let entry = pool.manifest.model(MODEL).unwrap();
+    let base = pool.initial_params(MODEL).unwrap();
+    let applied = rec.apply(&base).unwrap();
+    assert_eq!(bitwise(&applied), bitwise(&full_params));
+    let engine = NativeInferEngine::load(entry).unwrap();
+    let side = entry.image_side().unwrap();
+    let mut task = VisionTask::new("ov", entry.classes, side, 0.7, 8, 3);
+    let (x, _, _) = task.batch_onehot(entry.batch);
+    let want = bitwise(&engine.infer(&applied, &x).unwrap());
+    let overlay = rec.overlay(&base).unwrap();
+    let got = bitwise(&engine.infer_overlay(&overlay, &x).unwrap());
+    assert_eq!(want, got, "overlay logits must be bit-identical to the full vector");
+}
+
+/// Exactly-once paging under a one-record budget: installs evict, a
+/// `get` of the evicted key reloads from disk exactly once, and the
+/// served predictions are bit-identical across the round trip.
+#[test]
+fn evict_reload_round_trip_is_exactly_once_and_bit_identical() {
+    let dir = demo_dir("page");
+    let pool = PoolEntry::open(&dir).unwrap();
+    let (rec_a, _) = delta_job(&pool, Precision::F32, 11);
+    let (rec_b, _) = delta_job(&pool, Precision::F32, 22);
+    let req = infer_req(Precision::F32);
+    let want = runner::run_infer_with(&pool, &req, InferParams::Delta(&rec_a)).unwrap();
+
+    let store = VariantStore::open(&dir.join("store"), rec_a.bytes()).unwrap();
+    store.put("user-a", rec_a).unwrap();
+    store.put("user-b", rec_b).unwrap();
+    assert!(!store.is_resident("user-a"), "one-record budget must page user-a out");
+    assert!(store.is_resident("user-b"));
+
+    let reloaded = store.get("user-a").unwrap();
+    let after = runner::run_infer_with(&pool, &req, InferParams::Delta(&reloaded)).unwrap();
+    assert_eq!(want.preds, after.preds, "predictions changed across evict→reload");
+
+    let s = store.stats().unwrap();
+    assert_eq!(s.puts, 2);
+    assert_eq!(s.misses, 1);
+    assert_eq!(s.reloads, 1, "a miss reloads exactly once");
+    assert_eq!(s.evictions, 2, "user-a paged out by user-b's put, user-b by the reload");
+    assert_eq!(s.resident, 1);
+    assert_eq!(s.disk_records, 2, "eviction never deletes the on-disk record");
+
+    // A second get is a pure hit: no extra disk load.
+    store.get("user-a").unwrap();
+    let s = store.stats().unwrap();
+    assert_eq!(s.hits, 1);
+    assert_eq!(s.reloads, 1, "a resident key must not reload");
+}
+
+/// A record from a future (or corrupted-to-unknown) format version is
+/// refused with an actionable error, never misread — and `gc` drops
+/// exactly that record.
+#[test]
+fn unknown_format_version_is_refused_and_gc_drops_it() {
+    let dir = demo_dir("version");
+    let pool = PoolEntry::open(&dir).unwrap();
+    let (rec, _) = delta_job(&pool, Precision::F32, 5);
+    let mut bytes = rec.encode();
+    let round = DeltaRecord::decode(&bytes).unwrap();
+    assert_eq!(round.model, rec.model);
+    assert_eq!(round.base_hash, rec.base_hash);
+
+    bytes[4] = (DELTA_VERSION + 1) as u8;
+    let err = DeltaRecord::decode(&bytes).unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("format version"), "{text}");
+    assert!(text.contains("store gc"), "the error must point at the remedy: {text}");
+
+    let store = VariantStore::open(&dir.join("store"), 0).unwrap();
+    std::fs::write(store.dir().join("future.delta"), &bytes).unwrap();
+    assert!(store.get("future").is_err(), "an unreadable record must not serve");
+    assert_eq!(store.gc().unwrap(), vec!["future".to_string()]);
+    assert!(store.list().unwrap().is_empty());
+}
+
+/// Extraction is refusal-first: a job whose frozen region drifted from
+/// the shared base is rejected (persisting it as a delta would be
+/// lossy), as is a variant with no subspace at all.
+#[test]
+fn extraction_refuses_drifted_or_unfactored_jobs() {
+    let dir = demo_dir("drift");
+    let pool = PoolEntry::open(&dir).unwrap();
+    let entry = pool.manifest.model(MODEL).unwrap();
+    let base = entry.load_params().unwrap();
+    let mut trained = base.clone();
+    // Flat offset 0 is the patch-embed weight — never part of a
+    // subspace factor, so this simulates full (non-restricted) training.
+    trained[0] += 1.0;
+    let err = extract_delta(entry, &base, &trained, Precision::F32).unwrap_err();
+    assert!(format!("{err:#}").contains("frozen"), "{err:#}");
+
+    let vanilla = pool.manifest.model("vit_demo_vanilla").unwrap();
+    let vbase = vanilla.load_params().unwrap();
+    let err = extract_delta(vanilla, &vbase, &vbase, Precision::F32).unwrap_err();
+    assert!(format!("{err:#}").contains("no factored"), "{err:#}");
+}

@@ -21,10 +21,13 @@ Rules
   The per-node attribution under ``"nodes"`` is micro-timing noise and
   is compared structurally only.
 * **Required non-empty sections**: the SIMD-vs-scalar and precision
-  (int8-vs-f32) sections must exist with their arms populated, and the
+  (int8-vs-f32) sections must exist with their arms populated, the
   ``soak`` section (the bench's embedded scenario-harness run) must
-  report ``invariant_violations == 0`` — a serving-invariant violation
-  fails the gate even when every wallclock is in range.  Every missing
+  report ``invariant_violations == 0``, and the ``store`` section (the
+  variant-store paging sweep) must report ``reload_bit_identical: true``
+  with nonzero ``evictions`` and ``compression_ratio >= 10`` — a
+  serving-invariant violation or a lossy/underpaged store run fails the
+  gate even when every wallclock is in range.  Every missing
   requirement is reported by its exact key path
   (``$.soak.invariant_violations: required key missing``), never as a
   raw KeyError traceback.
@@ -164,6 +167,25 @@ def check_sections(fresh, errors):
         )
     for key in ("soak.events", "soak.queue_depth_max", "soak.soak_seconds",
                 "soak.p50_submit_to_done_ms"):
+        lookup(fresh, key, errors)
+    # The store section (variant-store paging, DESIGN.md §Variant store)
+    # must show REAL paging under budget pressure — predictions stay bit
+    # identical across evict→reload, eviction actually happened, and the
+    # delta records carry the paper's headline compression (>= 10x
+    # smaller than full personalized params).
+    ident = lookup(fresh, "store.reload_bit_identical", errors)
+    if not isinstance(ident, MissingKey):
+        require(ident is True,
+                f"$.store.reload_bit_identical must be true, got {ident}", errors)
+    evictions = lookup(fresh, "store.evictions", errors)
+    if not isinstance(evictions, MissingKey):
+        require(isinstance(evictions, (int, float)) and evictions > 0,
+                f"$.store.evictions must be nonzero, got {evictions}", errors)
+    ratio = lookup(fresh, "store.compression_ratio", errors)
+    if not isinstance(ratio, MissingKey):
+        require(isinstance(ratio, (int, float)) and ratio >= 10,
+                f"$.store.compression_ratio must be >= 10, got {ratio}", errors)
+    for key in ("store.hit_rate", "store.delta_bytes", "store.full_bytes"):
         lookup(fresh, key, errors)
 
 

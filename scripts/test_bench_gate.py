@@ -74,6 +74,26 @@ def baseline_record():
             "p95_submit_to_done_ms": 250.0,
             "infer_p50_ms": 10.0,
         },
+        "store": {
+            "model": "vit_demo_wasi_eps80",
+            "users": 40,
+            "budget_residents": 4,
+            "budget_bytes": 172032,
+            "requests": 400,
+            "hit_rate": 0.6,
+            "hits": 240,
+            "misses": 160,
+            "reloads": 160,
+            "evictions": 196,
+            "delta_bytes": 43008,
+            "full_bytes": 620000,
+            "compression_ratio": 14.4,
+            "users_per_gb_delta": 24966,
+            "users_per_gb_full": 1732,
+            "reload_p50_ms": 0.3,
+            "reload_p95_ms": 0.8,
+            "reload_bit_identical": True,
+        },
         "nodes": [
             {"node": "dense:embed", "fwd_ms_per_step": 0.2, "bwd_ms_per_step": 0.3},
         ],
@@ -153,6 +173,46 @@ def test_soak_violations_fail_even_when_wallclock_clean(tmp_path):
     res = run_gate(tmp_path, base, fresh)
     assert res.returncode == 1, res.stdout + res.stderr
     assert "$.soak.invariant_violations must be 0, got 2" in res.stdout
+
+
+def test_missing_store_section_names_key_path(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    del fresh["store"]
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.store" in res.stdout
+    assert "KeyError" not in res.stdout + res.stderr
+    assert "Traceback" not in res.stderr
+
+
+def test_store_reload_bit_identity_is_required(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["store"]["reload_bit_identical"] = False
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.store.reload_bit_identical must be true" in res.stdout
+
+
+def test_store_without_evictions_fails(tmp_path):
+    # A store sweep that never paged measured nothing: the budget must
+    # actually be under pressure for the section to count.
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["store"]["evictions"] = 0
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.store.evictions must be nonzero" in res.stdout
+
+
+def test_store_compression_floor_is_enforced(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["store"]["compression_ratio"] = 7.0
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.store.compression_ratio must be >= 10, got 7.0" in res.stdout
 
 
 def test_wrong_section_type_is_actionable_not_traceback(tmp_path):
