@@ -85,6 +85,17 @@ pub fn elems_to_mb(elems: f64) -> f64 {
     elems * BYTES_PER_ELEM / (1024.0 * 1024.0)
 }
 
+/// Arena-reuse ratio of the pass pipeline's planned program: the summed
+/// no-reuse buffer footprint over the liveness-packed arena size
+/// (both in elements).  > 1 means the liveness plan shares storage;
+/// the `plan` subcommand and the bench's `passes` section report it.
+pub fn arena_reuse_ratio(sum_elems: usize, arena_elems: usize) -> f64 {
+    if arena_elems == 0 {
+        return 1.0;
+    }
+    sum_elems as f64 / arena_elems as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +132,13 @@ mod tests {
     #[test]
     fn mb_conversion() {
         assert!((elems_to_mb(1024.0 * 1024.0) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arena_reuse_ratio_is_safe_and_ordered() {
+        assert_eq!(arena_reuse_ratio(0, 0), 1.0);
+        assert!((arena_reuse_ratio(300, 100) - 3.0).abs() < 1e-12);
+        assert!(arena_reuse_ratio(100, 100) >= 1.0);
     }
 
     #[test]

@@ -30,12 +30,13 @@
 //! their own) are fixed, so the q/k columns of `qkv.w` receive zero
 //! gradient.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::linalg::kernels::{self, Epilogue};
+use crate::linalg::kernels::{self, Epilogue, PackedPanel};
 use crate::linalg::matrix::Mat;
 use crate::linalg::tucker::Tensor;
 use crate::precision::{self, Precision};
@@ -45,6 +46,7 @@ use crate::wasi::lowrank_grad::lowrank_grad_3d;
 use crate::wasi::wsi::WsiFactors;
 
 use super::ops::{self, Op, UpdateOp};
+use super::passes::{self, BufRange, Interval, Liveness, PassSet};
 
 /// Mirrors the AOT pipeline's training hyperparameters
 /// (`python/compile/train.py`): global-norm clip and decoupled weight
@@ -472,6 +474,15 @@ pub struct PackedParams {
     /// resolved bindings address tensors by offset).
     tensors: BTreeMap<usize, StoredTensor>,
     params_len: usize,
+    /// Prepacked f32 panels for reduced-precision GEMM weights, keyed
+    /// by flat offset (the `prepack` pass — built once at pack time so
+    /// the inference hot path never re-dequantizes a B panel).
+    panels: BTreeMap<usize, PackedPanel>,
+    /// The `fold` pass's precomputed `cls + pos` assembly constant
+    /// (`pos`-shaped; the first `dim` elements carry the folded CLS
+    /// row).  Both tensors are frozen in a packed set, so the fold is
+    /// exact: the runtime add it replaces is the same single f32 add.
+    assemble_const: Option<Vec<f32>>,
 }
 
 fn is_gemm_weight(spec: &TensorSpec) -> bool {
@@ -484,6 +495,20 @@ impl PackedParams {
     /// losslessly (useful for tests); `Bf16`/`I8` compress the GEMM
     /// weight tensors.
     pub fn pack(entry: &ModelEntry, params: &[f32], prec: Precision) -> Result<PackedParams> {
+        Self::pack_with(entry, params, prec, passes::current_passes()?)
+    }
+
+    /// [`PackedParams::pack`] with an explicit pass set: `prepack`
+    /// controls whether f32 panels are built for reduced-precision
+    /// weights, `fold` whether the `cls + pos` assembly constant is
+    /// precomputed.  Both representations are bit-exact alternates, so
+    /// disabling a pass only changes where the work happens.
+    pub fn pack_with(
+        entry: &ModelEntry,
+        params: &[f32],
+        prec: Precision,
+        passes: PassSet,
+    ) -> Result<PackedParams> {
         if params.len() != entry.params_len {
             bail!(
                 "params length {} != manifest {} — packing another model's vector?",
@@ -492,6 +517,7 @@ impl PackedParams {
             );
         }
         let mut tensors = BTreeMap::new();
+        let mut panels = BTreeMap::new();
         for spec in &entry.param_spec {
             let data = &params[spec.offset..spec.offset + spec.numel()];
             let stored = if is_gemm_weight(spec) {
@@ -506,11 +532,51 @@ impl PackedParams {
             } else {
                 StoredTensor::F32(data.to_vec())
             };
+            if passes.prepack() && is_gemm_weight(spec) {
+                let (n, k) = (spec.shape[0], spec.shape[1]);
+                match &stored {
+                    StoredTensor::Bf16(d) => {
+                        panels.insert(spec.offset, PackedPanel::pack(d, n, k, None));
+                    }
+                    StoredTensor::I8(t) => {
+                        panels.insert(spec.offset, PackedPanel::pack(&t.q, n, k, Some(t.scale)));
+                    }
+                    // f32 weights feed `gemm_nt` directly (B rows are
+                    // already contiguous f32) — nothing to prepack.
+                    StoredTensor::F32(_) => {}
+                }
+            }
             if tensors.insert(spec.offset, stored).is_some() {
                 bail!("model {}: param_spec offsets collide at {}", entry.name, spec.offset);
             }
         }
-        Ok(PackedParams { precision: prec, tensors, params_len: entry.params_len })
+        let assemble_const = if passes.fold() {
+            let cls = entry.param_spec.iter().find(|s| s.name == "cls");
+            let pos = entry.param_spec.iter().find(|s| s.name == "pos");
+            match (cls, pos) {
+                (Some(c), Some(p)) if c.numel() <= p.numel() => {
+                    // folded[j] = cls[j] + pos[j] for the CLS row, the
+                    // remaining rows keep pos verbatim — exactly the add
+                    // the runtime Assemble performs.
+                    let mut v = params[p.offset..p.offset + p.numel()].to_vec();
+                    let cv = &params[c.offset..c.offset + c.numel()];
+                    for (o, a) in v.iter_mut().zip(cv) {
+                        *o = *a + *o;
+                    }
+                    Some(v)
+                }
+                _ => None,
+            }
+        } else {
+            None
+        };
+        Ok(PackedParams {
+            precision: prec,
+            tensors,
+            params_len: entry.params_len,
+            panels,
+            assemble_const,
+        })
     }
 
     pub fn precision(&self) -> Precision {
@@ -527,6 +593,23 @@ impl PackedParams {
         self.tensors.values().map(|t| t.bytes()).sum()
     }
 
+    /// Bytes held by prepacked f32 panels (the `prepack` pass's memory
+    /// cost, reported by the bench's passes section).  Zero when the
+    /// pass is disabled or the precision is f32.
+    pub fn panel_bytes(&self) -> usize {
+        self.panels.values().map(|p| p.bytes()).sum()
+    }
+
+    /// Number of prepacked panels in this set.
+    pub fn panel_count(&self) -> usize {
+        self.panels.len()
+    }
+
+    /// Whether the `fold` pass precomputed the Assemble constant.
+    pub fn has_folded_assemble(&self) -> bool {
+        self.assemble_const.is_some()
+    }
+
     fn stored(&self, spec: &TensorSpec) -> Result<&StoredTensor> {
         self.tensors
             .get(&spec.offset)
@@ -539,6 +622,10 @@ pub enum WeightView<'a> {
     F32(&'a [f32]),
     Bf16(&'a [u16]),
     I8(&'a [i8], f32),
+    /// A prepacked f32 dequantization image of a reduced-precision
+    /// weight (the `prepack` pass) — carries its own dims and, for
+    /// int8, the epilogue scale.
+    Panel(&'a PackedPanel),
 }
 
 /// A zero-copy personalized parameter view: the shared frozen base
@@ -625,11 +712,16 @@ impl<'a> ParamsView<'a> {
             ParamsView::Flat(p) => {
                 Ok(WeightView::F32(&p[spec.offset..spec.offset + spec.numel()]))
             }
-            ParamsView::Packed(p) => Ok(match p.stored(spec)? {
-                StoredTensor::F32(d) => WeightView::F32(d),
-                StoredTensor::Bf16(d) => WeightView::Bf16(d),
-                StoredTensor::I8(t) => WeightView::I8(&t.q, t.scale),
-            }),
+            ParamsView::Packed(p) => {
+                if let Some(panel) = p.panels.get(&spec.offset) {
+                    return Ok(WeightView::Panel(panel));
+                }
+                Ok(match p.stored(spec)? {
+                    StoredTensor::F32(d) => WeightView::F32(d),
+                    StoredTensor::Bf16(d) => WeightView::Bf16(d),
+                    StoredTensor::I8(t) => WeightView::I8(&t.q, t.scale),
+                })
+            }
             ParamsView::Overlay(o) => Ok(WeightView::F32(o.slice(spec)?)),
         }
     }
@@ -673,6 +765,27 @@ fn linear_nt(
                 }
             }
         }
+        WeightView::Panel(p) => match p.scale() {
+            // bf16 panel: already the exact f32 image `gemm_nt_deq`
+            // would reconstruct — same epilogues as the f32 path.
+            None => kernels::gemm_nt_prepacked(x, p, rows, out, plain_epi),
+            // int8 panel: raw quantized magnitudes with the dequant
+            // scale folded into the epilogue, exactly like the
+            // repacking path above.
+            Some(s) => {
+                let epi = match (bias, fuse_gelu) {
+                    (Some(b), true) => Epilogue::ScaleBiasGelu(s, b),
+                    (Some(b), false) => Epilogue::ScaleBias(s, b),
+                    (None, _) => Epilogue::Scale(s),
+                };
+                kernels::gemm_nt_prepacked(x, p, rows, out, epi);
+                if bias.is_none() && fuse_gelu {
+                    for v in out.iter_mut() {
+                        *v = kernels::gelu(*v);
+                    }
+                }
+            }
+        },
     }
 }
 
@@ -777,6 +890,307 @@ fn build_asi(entry: &ModelEntry, plan: &ModelPlan, name: &str) -> Result<AsiComp
     Ok(AsiCompressor::new(&dims, &ranks, seed_from(name)))
 }
 
+// ---------------------------------------------------------------------------
+// Pass pipeline: planned buffer programs (the `arena` pass)
+// ---------------------------------------------------------------------------
+
+/// One planned step's arena ranges, in elements.  Meaning is per-op:
+/// `src` is the walk's current buffer at entry, `out` at exit (equal
+/// for in-place ops), `a`/`b` are op-specific extras (rank-space
+/// intermediates, norm stats, residual copies).  Zero-length ranges
+/// mean "not used by this op".
+#[derive(Clone, Copy)]
+struct StepBufs {
+    src: BufRange,
+    out: BufRange,
+    a: BufRange,
+    b: BufRange,
+}
+
+const NOB: BufRange = BufRange { off: 0, len: 0 };
+
+/// A planned buffer program: the mechanical mirror of one executor walk
+/// with every transient `Vec` replaced by an offset into one arena.
+/// The planner simulates the walk exactly (same size formulas, same
+/// stack discipline), so the runtime mirror performs the identical
+/// kernel calls in the identical order on identically-sized buffers —
+/// which is the bit-identity argument (DESIGN.md §Pass pipeline).
+struct PlannedProgram {
+    /// Per-slot forward ranges (for inference: per batch element).
+    steps: Vec<StepBufs>,
+    /// Per-slot backward ranges (training programs only).
+    bwd: Vec<StepBufs>,
+    /// Backward's incoming dlogits buffer (training programs only).
+    dl0: BufRange,
+    /// The walk's result buffer (logits).
+    out: BufRange,
+    /// Total arena length.
+    arena_elems: usize,
+    /// Sum of all interval lengths (the no-reuse footprint).
+    sum_elems: usize,
+    intervals: Vec<Interval>,
+    offsets: Vec<usize>,
+}
+
+fn elems_of(lv: &Liveness, id: Option<usize>) -> usize {
+    id.map(|i| lv.intervals()[i].elems).unwrap_or(0)
+}
+
+/// Liveness-plan one executor walk.  `train` plans forward + backward
+/// on the executor's fixed batch with saved activations pinned across
+/// the loss boundary; `!train` plans the inference walk per batch
+/// element (every inference buffer scales linearly with `b`, so the
+/// runtime multiplies offsets by the call's batch).
+fn plan_program(
+    slots: &[Slot],
+    plan: &ModelPlan,
+    batch: usize,
+    train: bool,
+) -> Result<PlannedProgram> {
+    let n = slots.len();
+    let b = if train { batch } else { 1 };
+    let (t, d) = (plan.tokens, plan.dim);
+    let pd = plan.patch_dim;
+    let classes = plan.classes;
+    // Timeline: forward slot si at time si, loss at n, backward slot si
+    // at 2n - si (reverse order, after the loss) — saved activations
+    // get `touch`ed at their backward time so they stay live across the
+    // whole round trip.
+    let bwd_t = |si: usize| 2 * n - si;
+    let mut lv = Liveness::new();
+    let mut fwd_ids: Vec<[Option<usize>; 4]> = vec![[None; 4]; n];
+    let mut bwd_ids: Vec<[Option<usize>; 4]> = vec![[None; 4]; n];
+    let mut cur: Option<usize> = None;
+    let mut rows = 0usize; // token-row count of `cur`
+    let mut stack: Vec<usize> = Vec::new();
+    for (si, slot) in slots.iter().enumerate() {
+        let prev = cur;
+        let src_of = |p: Option<usize>| {
+            p.ok_or_else(|| anyhow!("planner: {} has no input buffer", slot.label))
+        };
+        match &slot.bind {
+            Bind::Patchify => {
+                cur = Some(lv.alloc(si, b * (t - 1) * pd));
+                rows = b * (t - 1);
+            }
+            Bind::Dense { o, .. } => {
+                let src = src_of(prev)?;
+                lv.touch(src, si);
+                if train {
+                    lv.touch(src, bwd_t(si)); // saved X
+                }
+                cur = Some(lv.alloc(si, rows * o));
+            }
+            Bind::Wasi { o, k, .. } => {
+                let src = src_of(prev)?;
+                lv.touch(src, si);
+                let h = lv.alloc(si, rows * k);
+                if train {
+                    lv.touch(h, bwd_t(si)); // saved rank-space intermediate
+                }
+                fwd_ids[si][2] = Some(h);
+                cur = Some(lv.alloc(si, rows * o));
+            }
+            Bind::Assemble { .. } => {
+                lv.touch(src_of(prev)?, si);
+                cur = Some(lv.alloc(si, b * t * d));
+                rows = b * t;
+            }
+            Bind::LayerNorm { g, .. } => {
+                let src = src_of(prev)?;
+                lv.touch(src, si);
+                let dd = g.numel();
+                if train {
+                    let xhat = lv.alloc(si, rows * dd);
+                    lv.touch(xhat, bwd_t(si));
+                    let inv = lv.alloc(si, rows);
+                    lv.touch(inv, bwd_t(si));
+                    fwd_ids[si][2] = Some(xhat);
+                    fwd_ids[si][3] = Some(inv);
+                    cur = Some(lv.alloc(si, rows * dd));
+                }
+                // Inference normalizes in place.
+            }
+            Bind::SliceV => {
+                lv.touch(src_of(prev)?, si);
+                cur = Some(lv.alloc(si, rows * d));
+            }
+            Bind::Mixing => {
+                lv.touch(src_of(prev)?, si); // in place
+            }
+            Bind::Gelu => {
+                let src = src_of(prev)?;
+                lv.touch(src, si);
+                if train {
+                    lv.touch(src, bwd_t(si)); // saved pre-activation
+                    let len = lv.intervals()[src].elems;
+                    cur = Some(lv.alloc(si, len));
+                }
+                // Inference applies GELU in place (or fuses it away).
+            }
+            Bind::ResidualSave => {
+                let src = src_of(prev)?;
+                lv.touch(src, si);
+                let cpy = lv.alloc(si, lv.intervals()[src].elems);
+                stack.push(cpy);
+                fwd_ids[si][2] = Some(cpy);
+            }
+            Bind::ResidualAdd => {
+                lv.touch(src_of(prev)?, si);
+                let res = stack
+                    .pop()
+                    .ok_or_else(|| anyhow!("planner: residual stack underflow"))?;
+                lv.touch(res, si);
+                fwd_ids[si][2] = Some(res);
+            }
+            Bind::TakeCls => {
+                lv.touch(src_of(prev)?, si);
+                cur = Some(lv.alloc(si, b * d));
+                rows = b;
+            }
+            Bind::SoftmaxCe => {
+                lv.touch(src_of(prev)?, si);
+            }
+        }
+        fwd_ids[si][0] = prev;
+        fwd_ids[si][1] = cur;
+    }
+    let out_id = cur.ok_or_else(|| anyhow!("planner: empty node program"))?;
+    lv.touch(out_id, n); // logits are read out after the walk
+
+    let mut dl0_id = None;
+    if train {
+        let dl = lv.alloc(n + 1, b * classes);
+        dl0_id = Some(dl);
+        let mut dcur: Option<usize> = Some(dl);
+        let mut dstack: Vec<usize> = Vec::new();
+        for si in (0..n).rev() {
+            let tt = bwd_t(si);
+            let dprev = dcur;
+            if let Some(id) = dcur {
+                lv.touch(id, tt);
+            }
+            match &slots[si].bind {
+                Bind::SoftmaxCe | Bind::Gelu | Bind::Mixing => {} // in place
+                Bind::Dense { needs_dx, .. } => {
+                    if *needs_dx {
+                        dcur = Some(lv.alloc(tt, elems_of(&lv, fwd_ids[si][0])));
+                    } else {
+                        dcur = None;
+                    }
+                }
+                Bind::Wasi { .. } => {
+                    let dh = lv.alloc(tt, elems_of(&lv, fwd_ids[si][2]));
+                    bwd_ids[si][2] = Some(dh);
+                    dcur = Some(lv.alloc(tt, elems_of(&lv, fwd_ids[si][0])));
+                }
+                Bind::LayerNorm { g, .. } => {
+                    let dd = g.numel();
+                    let dg = lv.alloc(tt, dd);
+                    let db = lv.alloc(tt, dd);
+                    bwd_ids[si][2] = Some(dg);
+                    bwd_ids[si][3] = Some(db);
+                    dcur = Some(lv.alloc(tt, elems_of(&lv, dprev)));
+                }
+                Bind::SliceV | Bind::TakeCls | Bind::Assemble { .. } => {
+                    dcur = Some(lv.alloc(tt, elems_of(&lv, fwd_ids[si][0])));
+                }
+                Bind::ResidualAdd => {
+                    let cpy = lv.alloc(tt, elems_of(&lv, dprev));
+                    dstack.push(cpy);
+                    bwd_ids[si][2] = Some(cpy);
+                }
+                Bind::ResidualSave => {
+                    let dres = dstack
+                        .pop()
+                        .ok_or_else(|| anyhow!("planner: residual dstack underflow"))?;
+                    lv.touch(dres, tt);
+                    bwd_ids[si][2] = Some(dres);
+                }
+                Bind::Patchify => {
+                    dcur = None;
+                }
+            }
+            bwd_ids[si][0] = dprev;
+            bwd_ids[si][1] = dcur;
+        }
+    }
+
+    let intervals = lv.intervals().to_vec();
+    let layout = passes::assign_offsets(&intervals);
+    passes::check_disjoint(&intervals, &layout)?;
+    let mk = |id: Option<usize>| {
+        id.map(|i| BufRange { off: layout.offsets[i], len: intervals[i].elems })
+            .unwrap_or(NOB)
+    };
+    let to_bufs = |ids: &[[Option<usize>; 4]]| -> Vec<StepBufs> {
+        ids.iter()
+            .map(|s| StepBufs { src: mk(s[0]), out: mk(s[1]), a: mk(s[2]), b: mk(s[3]) })
+            .collect()
+    };
+    Ok(PlannedProgram {
+        steps: to_bufs(&fwd_ids),
+        bwd: if train { to_bufs(&bwd_ids) } else { Vec::new() },
+        dl0: mk(dl0_id),
+        out: mk(Some(out_id)),
+        arena_elems: layout.total,
+        sum_elems: intervals.iter().map(|iv| iv.elems).sum(),
+        offsets: layout.offsets,
+        intervals,
+    })
+}
+
+/// The executor's planned programs (present when the `arena` pass is
+/// enabled).
+struct OptPrograms {
+    /// Training round trip; `None` on inference-only executors.
+    train: Option<PlannedProgram>,
+    infer: PlannedProgram,
+}
+
+/// A planned program's reportable shape (the `plan` subcommand and the
+/// bench's passes section).
+#[derive(Debug, Clone)]
+pub struct ProgramReport {
+    /// Arena length in elements (for inference: per batch element).
+    pub arena_elems: usize,
+    /// Sum of all planned buffer lengths — what one walk would touch
+    /// without arena reuse.
+    pub sum_elems: usize,
+    /// Number of planned buffers.
+    pub buffers: usize,
+    /// `(def, last, elems, offset)` per buffer, in allocation order.
+    pub intervals: Vec<(usize, usize, usize, usize)>,
+}
+
+/// What [`GraphExecutor::plan_report`] exposes about the pass pipeline.
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub passes: PassSet,
+    pub train: Option<ProgramReport>,
+    pub infer: Option<ProgramReport>,
+}
+
+// Unchecked arena views.  Safety: every (write, read) pair a planned
+// arm materializes comes from one planned program whose pairwise
+// disjointness `passes::check_disjoint` verified at construction, and
+// the unbound lifetime never escapes the executing method, where the
+// arena is held alive by a local.
+unsafe fn ar<'a>(p: *const f32, r: BufRange) -> &'a [f32] {
+    std::slice::from_raw_parts(p.add(r.off), r.len)
+}
+unsafe fn aw<'a>(p: *mut f32, r: BufRange) -> &'a mut [f32] {
+    std::slice::from_raw_parts_mut(p.add(r.off), r.len)
+}
+
+thread_local! {
+    /// Per-thread inference arena: the infer walk is `&self` on shared
+    /// (pool-cached) engines, so its arena cannot live in the executor.
+    static INFER_ARENA: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread mixing scratch for the planned infer walk.
+    static INFER_MEAN: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
 /// Executes a [`LayerGraph`] against flat parameter/gradient vectors
 /// through the shared kernel layer.
 pub struct GraphExecutor {
@@ -793,23 +1207,60 @@ pub struct GraphExecutor {
     /// touches only the factored layers' `.l`/`.r` ranges and the clip
     /// norm is computed over those ranges alone.
     subspace_only: bool,
+    /// The optimization passes this executor was planned with.
+    passes: PassSet,
+    /// Planned buffer programs (`arena` pass); `None` disables the
+    /// planned walks entirely.
+    opt: Option<OptPrograms>,
+    /// `true` while a planned forward's saved state sits in the arena —
+    /// backward must then take the planned path regardless of profiling
+    /// (the two paths store saved activations differently).
+    fwd_was_planned: bool,
+    /// Training arena + reusable scratch (ASI input / dH tensor
+    /// staging, mixing mean).  Capacity is retained across steps, so
+    /// steady-state training allocates nothing here.
+    train_arena: Vec<f32>,
+    scratch_x: Vec<f32>,
+    scratch_dh: Vec<f32>,
+    scratch_mean: Vec<f32>,
 }
 
 impl GraphExecutor {
     /// Training executor: resolves bindings AND builds the per-layer
-    /// ASI compressors.
+    /// ASI compressors.  Plans under the process-wide pass set
+    /// ([`passes::current_passes`]).
     pub fn new(graph: LayerGraph, entry: &ModelEntry) -> Result<GraphExecutor> {
-        Self::build(graph, entry, true)
+        Self::build(graph, entry, true, passes::current_passes()?)
     }
 
     /// Inference-only executor: skips the (training-only) ASI
     /// compressor construction.  `forward_train` on this executor
     /// panics at the first factored layer; use [`GraphExecutor::infer`].
     pub fn new_infer(graph: LayerGraph, entry: &ModelEntry) -> Result<GraphExecutor> {
-        Self::build(graph, entry, false)
+        Self::build(graph, entry, false, passes::current_passes()?)
     }
 
-    fn build(graph: LayerGraph, entry: &ModelEntry, with_asi: bool) -> Result<GraphExecutor> {
+    /// [`GraphExecutor::new`] with an explicit pass set (tests pin
+    /// optimized-vs-unoptimized bit-identity through this).
+    pub fn new_with(graph: LayerGraph, entry: &ModelEntry, ps: PassSet) -> Result<GraphExecutor> {
+        Self::build(graph, entry, true, ps)
+    }
+
+    /// [`GraphExecutor::new_infer`] with an explicit pass set.
+    pub fn new_infer_with(
+        graph: LayerGraph,
+        entry: &ModelEntry,
+        ps: PassSet,
+    ) -> Result<GraphExecutor> {
+        Self::build(graph, entry, false, ps)
+    }
+
+    fn build(
+        graph: LayerGraph,
+        entry: &ModelEntry,
+        with_asi: bool,
+        ps: PassSet,
+    ) -> Result<GraphExecutor> {
         let plan = &graph.plan;
         let mut slots = Vec::with_capacity(graph.nodes.len());
         let mut prev_op: Option<&Op> = None;
@@ -887,7 +1338,8 @@ impl GraphExecutor {
             }
         }
 
-        Ok(GraphExecutor {
+        let scratch_mean = vec![0.0f32; graph.plan.dim];
+        let mut exec = GraphExecutor {
             slots,
             updates,
             state_spec: entry.state_spec.clone(),
@@ -897,8 +1349,55 @@ impl GraphExecutor {
             params_len: entry.params_len,
             profiling: false,
             subspace_only: false,
+            passes: ps,
+            opt: None,
+            fwd_was_planned: false,
+            train_arena: Vec::new(),
+            scratch_x: Vec::new(),
+            scratch_dh: Vec::new(),
+            scratch_mean,
             graph,
-        })
+        };
+        if ps.arena() {
+            let infer = plan_program(&exec.slots, &exec.graph.plan, exec.batch, false)?;
+            let train = if with_asi {
+                Some(plan_program(&exec.slots, &exec.graph.plan, exec.batch, true)?)
+            } else {
+                None
+            };
+            exec.opt = Some(OptPrograms { train, infer });
+        }
+        Ok(exec)
+    }
+
+    fn train_prog(&self) -> Option<&PlannedProgram> {
+        self.opt.as_ref().and_then(|o| o.train.as_ref())
+    }
+
+    /// The pass set this executor was planned with.
+    pub fn passes(&self) -> PassSet {
+        self.passes
+    }
+
+    /// Reportable shape of the planned programs (the `plan` subcommand
+    /// and the bench's passes section); `train`/`infer` are `None` when
+    /// the `arena` pass is disabled or the executor is inference-only.
+    pub fn plan_report(&self) -> PlanReport {
+        let mk = |p: &PlannedProgram| ProgramReport {
+            arena_elems: p.arena_elems,
+            sum_elems: p.sum_elems,
+            buffers: p.intervals.len(),
+            intervals: p
+                .intervals
+                .iter()
+                .map(|iv| (iv.def, iv.last, iv.elems, p.offsets[iv.id]))
+                .collect(),
+        };
+        PlanReport {
+            passes: self.passes,
+            train: self.train_prog().map(mk),
+            infer: self.opt.as_ref().map(|o| mk(&o.infer)),
+        }
     }
 
     /// Restrict training to the WASI subspace: after this call the SGD
@@ -977,6 +1476,12 @@ impl GraphExecutor {
         if x.len() != b * self.input_dim {
             bail!("x length {} != batch {} * input_dim {}", x.len(), b, self.input_dim);
         }
+        // Planned (arena) walk unless profiling wants per-node timers —
+        // the original per-Vec path keeps the latency attribution.
+        if !self.profiling && self.train_prog().is_some() {
+            return self.forward_train_planned(params, x);
+        }
+        self.fwd_was_planned = false;
         let (t, d) = (self.graph.plan.tokens, self.graph.plan.dim);
         let (image, patch) = (self.graph.plan.image, self.graph.plan.patch);
         let profiling = self.profiling;
@@ -1121,6 +1626,168 @@ impl GraphExecutor {
         Ok(cur)
     }
 
+    /// [`GraphExecutor::forward_train`]'s arena-planned mirror: the
+    /// same kernel calls in the same order on identically-sized
+    /// buffers, with every transient `Vec` replaced by a planned arena
+    /// range — bit-identical by construction, zero steady-state heap
+    /// allocation (the returned logits `Vec` is the one boundary copy).
+    fn forward_train_planned(&mut self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch;
+        let (t, d) = (self.graph.plan.tokens, self.graph.plan.dim);
+        let (image, patch) = (self.graph.plan.image, self.graph.plan.patch);
+        let (arena_elems, out_r) = {
+            let tp = self.train_prog().expect("planned forward without a train program");
+            (tp.arena_elems, tp.out)
+        };
+        let mut arena = std::mem::take(&mut self.train_arena);
+        if arena.len() != arena_elems {
+            arena.resize(arena_elems, 0.0);
+        }
+        let ap = arena.as_mut_ptr();
+        for si in 0..self.slots.len() {
+            let sb = self.train_prog().expect("checked above").steps[si];
+            let slot = &mut self.slots[si];
+            match &slot.bind {
+                Bind::Patchify => {
+                    let out = unsafe { aw(ap, sb.out) };
+                    ops::patchify_into(x, b, image, patch, out);
+                }
+                Bind::Dense { w, b: bs, o, i, .. } => {
+                    let (y, xs) = unsafe { (aw(ap, sb.out), ar(ap, sb.src)) };
+                    let rows = xs.len() / *i;
+                    kernels::gemm_nt(
+                        xs,
+                        &params[w.offset..w.offset + w.numel()],
+                        rows,
+                        *i,
+                        *o,
+                        y,
+                        Epilogue::Bias(&params[bs.offset..bs.offset + bs.numel()]),
+                    );
+                }
+                Bind::Wasi { l, r, b: bs, o, k, i, .. } => {
+                    {
+                        let (h, xs) = unsafe { (aw(ap, sb.a), ar(ap, sb.src)) };
+                        let rows = xs.len() / *i;
+                        kernels::gemm_nt(
+                            xs,
+                            &params[r.offset..r.offset + r.numel()],
+                            rows,
+                            *i,
+                            *k,
+                            h,
+                            Epilogue::None,
+                        );
+                    }
+                    {
+                        let (y, h) = unsafe { (aw(ap, sb.out), ar(ap, sb.a)) };
+                        let rows = h.len() / *k;
+                        kernels::gemm_nt(
+                            h,
+                            &params[l.offset..l.offset + l.numel()],
+                            rows,
+                            *k,
+                            *o,
+                            y,
+                            Epilogue::Bias(&params[bs.offset..bs.offset + bs.numel()]),
+                        );
+                    }
+                    // ASI compresses a tensor-shaped copy of the input;
+                    // the scratch vector's capacity is reclaimed from
+                    // the consumed Tensor every step.
+                    let xs = unsafe { ar(ap, sb.src) };
+                    let rows = xs.len() / *i;
+                    let n_tok = rows / b;
+                    let mut scratch = std::mem::take(&mut self.scratch_x);
+                    scratch.clear();
+                    scratch.extend_from_slice(xs);
+                    let xt = Tensor::from_vec(&[b, n_tok, *i], scratch);
+                    let comp = slot
+                        .asi
+                        .as_mut()
+                        .expect("wasi node without ASI compressor")
+                        .compress(&xt);
+                    slot.saved = Saved::Wasi { comp, h: Vec::new() };
+                    self.scratch_x = xt.data;
+                }
+                Bind::Assemble { cls, pos } => {
+                    let clsv = &params[cls.offset..cls.offset + cls.numel()];
+                    let posv = &params[pos.offset..pos.offset + pos.numel()];
+                    let (tok, src) = unsafe { (aw(ap, sb.out), ar(ap, sb.src)) };
+                    for bi in 0..b {
+                        tok[bi * t * d..bi * t * d + d].copy_from_slice(clsv);
+                        let srow = &src[bi * (t - 1) * d..(bi + 1) * (t - 1) * d];
+                        tok[bi * t * d + d..(bi + 1) * t * d].copy_from_slice(srow);
+                        for (o, p) in tok[bi * t * d..(bi + 1) * t * d].iter_mut().zip(posv) {
+                            *o += p;
+                        }
+                    }
+                }
+                Bind::LayerNorm { g, b: bs } => {
+                    let gv = &params[g.offset..g.offset + g.numel()];
+                    let bv = &params[bs.offset..bs.offset + bs.numel()];
+                    let dd = g.numel();
+                    let (y, src) = unsafe { (aw(ap, sb.out), ar(ap, sb.src)) };
+                    let (xhat, inv_std) = unsafe { (aw(ap, sb.a), aw(ap, sb.b)) };
+                    let rows = src.len() / dd;
+                    for rr in 0..rows {
+                        let xi = &src[rr * dd..(rr + 1) * dd];
+                        let mu = xi.iter().sum::<f32>() / dd as f32;
+                        let var =
+                            xi.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / dd as f32;
+                        let is = 1.0 / (var + ops::LN_EPS).sqrt();
+                        inv_std[rr] = is;
+                        for c in 0..dd {
+                            let hh = (xi[c] - mu) * is;
+                            xhat[rr * dd + c] = hh;
+                            y[rr * dd + c] = hh * gv[c] + bv[c];
+                        }
+                    }
+                }
+                Bind::SliceV => {
+                    let (v, src) = unsafe { (aw(ap, sb.out), ar(ap, sb.src)) };
+                    let rows = src.len() / (3 * d);
+                    for row in 0..rows {
+                        v[row * d..(row + 1) * d]
+                            .copy_from_slice(&src[row * 3 * d + 2 * d..(row + 1) * 3 * d]);
+                    }
+                }
+                Bind::Mixing => {
+                    let cur = unsafe { aw(ap, sb.out) };
+                    ops::uniform_mix_scratch(cur, b, t, d, &mut self.scratch_mean);
+                }
+                Bind::Gelu => {
+                    let (y, pre) = unsafe { (aw(ap, sb.out), ar(ap, sb.src)) };
+                    for (o, &v) in y.iter_mut().zip(pre) {
+                        *o = kernels::gelu(v);
+                    }
+                }
+                Bind::ResidualSave => {
+                    let (cpy, src) = unsafe { (aw(ap, sb.a), ar(ap, sb.src)) };
+                    cpy.copy_from_slice(src);
+                }
+                Bind::ResidualAdd => {
+                    let (cur, res) = unsafe { (aw(ap, sb.out), ar(ap, sb.a)) };
+                    for (v, a) in cur.iter_mut().zip(res) {
+                        *v += a;
+                    }
+                }
+                Bind::TakeCls => {
+                    let (cl, src) = unsafe { (aw(ap, sb.out), ar(ap, sb.src)) };
+                    for bi in 0..b {
+                        cl[bi * d..(bi + 1) * d]
+                            .copy_from_slice(&src[bi * t * d..bi * t * d + d]);
+                    }
+                }
+                Bind::SoftmaxCe => {}
+            }
+        }
+        let logits = unsafe { ar(ap, out_r) }.to_vec();
+        self.train_arena = arena;
+        self.fwd_was_planned = true;
+        Ok(logits)
+    }
+
     /// Softmax cross-entropy head: loss, accuracy, dlogits.
     pub fn loss_and_grad(&mut self, logits: &[f32], y_onehot: &[f32]) -> (f32, f32, Vec<f32>) {
         let t0 = self.profiling.then(Instant::now);
@@ -1171,6 +1838,11 @@ impl GraphExecutor {
         self.check_params(params)?;
         if grads.len() != self.params_len {
             bail!("grads length {} != manifest {}", grads.len(), self.params_len);
+        }
+        if self.fwd_was_planned {
+            // The planned forward saved its activations in the arena;
+            // only the planned backward knows how to read them.
+            return self.backward_planned(params, dlogits, grads);
         }
         let b = self.batch;
         let (t, d) = (self.graph.plan.tokens, self.graph.plan.dim);
@@ -1400,6 +2072,256 @@ impl GraphExecutor {
         Ok(())
     }
 
+    /// [`GraphExecutor::backward`]'s arena-planned mirror: reverse walk
+    /// over the same kernels in the same order, reading saved
+    /// activations straight out of the forward's arena ranges instead
+    /// of per-slot `Saved` vectors.
+    fn backward_planned(
+        &mut self,
+        params: &[f32],
+        dlogits: &[f32],
+        grads: &mut [f32],
+    ) -> Result<()> {
+        let b = self.batch;
+        let (t, d) = (self.graph.plan.tokens, self.graph.plan.dim);
+        let (arena_elems, dl0) = {
+            let tp = self.train_prog().expect("planned backward without a train program");
+            (tp.arena_elems, tp.dl0)
+        };
+        if dlogits.len() != dl0.len {
+            bail!("dlogits length {} != planned {}", dlogits.len(), dl0.len);
+        }
+        let mut arena = std::mem::take(&mut self.train_arena);
+        if arena.len() != arena_elems {
+            arena.resize(arena_elems, 0.0);
+        }
+        let ap = arena.as_mut_ptr();
+        unsafe { aw(ap, dl0) }.copy_from_slice(dlogits);
+        for si in (0..self.slots.len()).rev() {
+            let (sb, fb) = {
+                let tp = self.train_prog().expect("checked above");
+                (tp.bwd[si], tp.steps[si])
+            };
+            let slot = &mut self.slots[si];
+            match &slot.bind {
+                Bind::SoftmaxCe => {}
+                Bind::Dense { w, b: bs, o, i, needs_dx } => {
+                    let (dcur, xsave) = unsafe { (ar(ap, sb.src), ar(ap, fb.src)) };
+                    let rows = dcur.len() / *o;
+                    {
+                        let db = &mut grads[bs.offset..bs.offset + bs.numel()];
+                        for chunk in dcur.chunks(*o) {
+                            for (g, v) in db.iter_mut().zip(chunk) {
+                                *g += v;
+                            }
+                        }
+                    }
+                    kernels::gemm_tn(
+                        dcur,
+                        xsave,
+                        *o,
+                        rows,
+                        *i,
+                        &mut grads[w.offset..w.offset + w.numel()],
+                        Epilogue::None,
+                    );
+                    if *needs_dx {
+                        let dx = unsafe { aw(ap, sb.out) };
+                        kernels::gemm_nn(
+                            dcur,
+                            &params[w.offset..w.offset + w.numel()],
+                            rows,
+                            *o,
+                            *i,
+                            dx,
+                            Epilogue::None,
+                        );
+                    }
+                }
+                Bind::Wasi { l, r, b: bs, o, k, i, .. } => {
+                    let Saved::Wasi { comp, .. } =
+                        std::mem::replace(&mut slot.saved, Saved::None)
+                    else {
+                        bail!("wasi backward without a forward ({})", slot.label);
+                    };
+                    let dcur = unsafe { ar(ap, sb.src) };
+                    let rows = dcur.len() / *o;
+                    {
+                        let db = &mut grads[bs.offset..bs.offset + bs.numel()];
+                        for chunk in dcur.chunks(*o) {
+                            for (g, v) in db.iter_mut().zip(chunk) {
+                                *g += v;
+                            }
+                        }
+                    }
+                    // Eq. 10: dH = dY L (rank space), dX = dH R.
+                    {
+                        let dh = unsafe { aw(ap, sb.a) };
+                        kernels::gemm_nn(
+                            dcur,
+                            &params[l.offset..l.offset + l.numel()],
+                            rows,
+                            *o,
+                            *k,
+                            dh,
+                            Epilogue::None,
+                        );
+                    }
+                    // dL = dYᵀ·H straight into the flat grad vector; H
+                    // is the forward's arena range.
+                    let h = unsafe { ar(ap, fb.a) };
+                    kernels::gemm_tn(
+                        dcur,
+                        h,
+                        *o,
+                        rows,
+                        *k,
+                        &mut grads[l.offset..l.offset + l.numel()],
+                        Epilogue::None,
+                    );
+                    {
+                        let (dx, dh) = unsafe { (aw(ap, sb.out), ar(ap, sb.a)) };
+                        kernels::gemm_nn(
+                            dh,
+                            &params[r.offset..r.offset + r.numel()],
+                            rows,
+                            *k,
+                            *i,
+                            dx,
+                            Epilogue::None,
+                        );
+                    }
+                    // dR via f_LR with dH in place of dY (DESIGN.md
+                    // §2.2); the scratch vector round-trips through the
+                    // Tensor exactly like the forward's ASI copy.
+                    let n_tok = rows / b;
+                    let mut scratch = std::mem::take(&mut self.scratch_dh);
+                    scratch.clear();
+                    scratch.extend_from_slice(unsafe { ar(ap, sb.a) });
+                    let dh_t = Tensor::from_vec(&[b, n_tok, *k], scratch);
+                    let dr = lowrank_grad_3d(
+                        &comp.core,
+                        &comp.factors[0],
+                        &comp.factors[1],
+                        &comp.factors[2],
+                        &dh_t,
+                    );
+                    grads[r.offset..r.offset + r.numel()].copy_from_slice(&dr.data);
+                    self.scratch_dh = dh_t.data;
+                }
+                Bind::LayerNorm { g, b: bs } => {
+                    let gv = &params[g.offset..g.offset + g.numel()];
+                    let dd = g.numel();
+                    let (dcur, xhat) = unsafe { (ar(ap, sb.src), ar(ap, fb.a)) };
+                    let inv_std = unsafe { ar(ap, fb.b) };
+                    let rows = dcur.len() / dd;
+                    let (dx, dg) = unsafe { (aw(ap, sb.out), aw(ap, sb.a)) };
+                    let db = unsafe { aw(ap, sb.b) };
+                    dg.fill(0.0);
+                    db.fill(0.0);
+                    for rr in 0..rows {
+                        let dyr = &dcur[rr * dd..(rr + 1) * dd];
+                        let xhr = &xhat[rr * dd..(rr + 1) * dd];
+                        let mut m1 = 0.0f32; // mean(dxhat)
+                        let mut m2 = 0.0f32; // mean(dxhat * xhat)
+                        for c in 0..dd {
+                            let dxh = dyr[c] * gv[c];
+                            m1 += dxh;
+                            m2 += dxh * xhr[c];
+                            dg[c] += dyr[c] * xhr[c];
+                            db[c] += dyr[c];
+                        }
+                        m1 /= dd as f32;
+                        m2 /= dd as f32;
+                        for c in 0..dd {
+                            let dxh = dyr[c] * gv[c];
+                            dx[rr * dd + c] = inv_std[rr] * (dxh - m1 - xhr[c] * m2);
+                        }
+                    }
+                    for (gs, v) in grads[g.offset..g.offset + dd].iter_mut().zip(&*dg) {
+                        *gs += v;
+                    }
+                    for (gs, v) in grads[bs.offset..bs.offset + dd].iter_mut().zip(&*db) {
+                        *gs += v;
+                    }
+                }
+                Bind::Gelu => {
+                    let (dcur, pre) = unsafe { (aw(ap, sb.out), ar(ap, fb.src)) };
+                    for (dv, &pv) in dcur.iter_mut().zip(pre) {
+                        *dv *= kernels::gelu_grad(pv);
+                    }
+                }
+                Bind::SliceV => {
+                    let (da, dcur) = unsafe { (aw(ap, sb.out), ar(ap, sb.src)) };
+                    da.fill(0.0);
+                    let rows = dcur.len() / d;
+                    for row in 0..rows {
+                        da[row * 3 * d + 2 * d..(row + 1) * 3 * d]
+                            .copy_from_slice(&dcur[row * d..(row + 1) * d]);
+                    }
+                }
+                Bind::Mixing => {
+                    // (I + 11ᵀ/T)/2 is symmetric: backward is the same
+                    // operator.
+                    let dcur = unsafe { aw(ap, sb.out) };
+                    ops::uniform_mix_scratch(dcur, b, t, d, &mut self.scratch_mean);
+                }
+                Bind::ResidualAdd => {
+                    let (cpy, dcur) = unsafe { (aw(ap, sb.a), ar(ap, sb.src)) };
+                    cpy.copy_from_slice(dcur);
+                }
+                Bind::ResidualSave => {
+                    let (cur, res) = unsafe { (aw(ap, sb.out), ar(ap, sb.a)) };
+                    for (v, a) in cur.iter_mut().zip(res) {
+                        *v += a;
+                    }
+                }
+                Bind::TakeCls => {
+                    let (dz, dcur) = unsafe { (aw(ap, sb.out), ar(ap, sb.src)) };
+                    dz.fill(0.0);
+                    for bi in 0..b {
+                        dz[bi * t * d..bi * t * d + d]
+                            .copy_from_slice(&dcur[bi * d..(bi + 1) * d]);
+                    }
+                }
+                Bind::Assemble { cls, pos } => {
+                    let dcur = unsafe { ar(ap, sb.src) };
+                    {
+                        let dpos = &mut grads[pos.offset..pos.offset + pos.numel()];
+                        for bi in 0..b {
+                            for (g, v) in
+                                dpos.iter_mut().zip(&dcur[bi * t * d..(bi + 1) * t * d])
+                            {
+                                *g += v;
+                            }
+                        }
+                    }
+                    {
+                        let dcls = &mut grads[cls.offset..cls.offset + cls.numel()];
+                        for bi in 0..b {
+                            for (g, v) in
+                                dcls.iter_mut().zip(&dcur[bi * t * d..bi * t * d + d])
+                            {
+                                *g += v;
+                            }
+                        }
+                    }
+                    let demb = unsafe { aw(ap, sb.out) };
+                    for bi in 0..b {
+                        demb[bi * (t - 1) * d..(bi + 1) * (t - 1) * d]
+                            .copy_from_slice(&dcur[bi * t * d + d..(bi + 1) * t * d]);
+                    }
+                }
+                Bind::Patchify => {
+                    // Input gradients are never needed.
+                }
+            }
+        }
+        self.train_arena = arena;
+        self.fwd_was_planned = false;
+        Ok(())
+    }
+
     /// Run the optimizer program: global-norm clip + decoupled weight
     /// decay + SGD, then the per-layer WSI refreshes — all in flat
     /// parameter space (mirrors the AOT step's update rule).
@@ -1564,14 +2486,19 @@ impl GraphExecutor {
                 self.input_dim
             );
         }
+        if self.opt.is_some() {
+            return self.infer_view_planned(params, x, b);
+        }
         let (t, d) = (self.graph.plan.tokens, self.graph.plan.dim);
         let (image, patch) = (self.graph.plan.image, self.graph.plan.patch);
+        let folded = self.folded_const(params);
         let mut cur: Vec<f32> = Vec::new();
         let mut stack: Vec<Vec<f32>> = Vec::new();
         let mut si = 0;
         while si < self.slots.len() {
             let slot = &self.slots[si];
-            let fuse_gelu = matches!(slot.bind, Bind::Dense { .. } | Bind::Wasi { .. })
+            let fuse_gelu = self.passes.fuse()
+                && matches!(slot.bind, Bind::Dense { .. } | Bind::Wasi { .. })
                 && matches!(self.slots.get(si + 1).map(|s| &s.bind), Some(Bind::Gelu));
             match &slot.bind {
                 Bind::Patchify => {
@@ -1594,15 +2521,31 @@ impl GraphExecutor {
                     cur = y;
                 }
                 Bind::Assemble { cls, pos } => {
-                    let clsv = params.floats(cls)?;
-                    let posv = params.floats(pos)?;
                     let mut tok = vec![0.0f32; b * t * d];
-                    for bi in 0..b {
-                        tok[bi * t * d..bi * t * d + d].copy_from_slice(clsv);
-                        let src = &cur[bi * (t - 1) * d..(bi + 1) * (t - 1) * d];
-                        tok[bi * t * d + d..(bi + 1) * t * d].copy_from_slice(src);
-                        for (o, p) in tok[bi * t * d..(bi + 1) * t * d].iter_mut().zip(posv) {
-                            *o += p;
+                    if let Some(fv) = folded {
+                        // Folded cls+pos constant (`fold` pass): row 0
+                        // is precomputed with the identical single add,
+                        // rows 1.. add pos verbatim — bitwise the same.
+                        for bi in 0..b {
+                            tok[bi * t * d..bi * t * d + d].copy_from_slice(&fv[..d]);
+                            let src = &cur[bi * (t - 1) * d..(bi + 1) * (t - 1) * d];
+                            tok[bi * t * d + d..(bi + 1) * t * d].copy_from_slice(src);
+                            for (o, p) in
+                                tok[bi * t * d + d..(bi + 1) * t * d].iter_mut().zip(&fv[d..])
+                            {
+                                *o += p;
+                            }
+                        }
+                    } else {
+                        let clsv = params.floats(cls)?;
+                        let posv = params.floats(pos)?;
+                        for bi in 0..b {
+                            tok[bi * t * d..bi * t * d + d].copy_from_slice(clsv);
+                            let src = &cur[bi * (t - 1) * d..(bi + 1) * (t - 1) * d];
+                            tok[bi * t * d + d..(bi + 1) * t * d].copy_from_slice(src);
+                            for (o, p) in tok[bi * t * d..(bi + 1) * t * d].iter_mut().zip(posv) {
+                                *o += p;
+                            }
                         }
                     }
                     cur = tok;
@@ -1652,6 +2595,158 @@ impl GraphExecutor {
             si += if fuse_gelu { 2 } else { 1 };
         }
         Ok(cur)
+    }
+
+    /// The `fold` pass's precomputed cls+pos constant, when this
+    /// executor folds and the parameter source carries one.
+    fn folded_const<'a>(&self, params: ParamsView<'a>) -> Option<&'a [f32]> {
+        if !self.passes.fold() {
+            return None;
+        }
+        match params {
+            ParamsView::Packed(p) => p.assemble_const.as_deref(),
+            _ => None,
+        }
+    }
+
+    /// [`GraphExecutor::infer_view`]'s arena-planned mirror.  The plan
+    /// is per batch element; every range is scaled by the call's `b`
+    /// (scaling preserves disjointness).  The walk is `&self` on
+    /// pool-shared engines, so the arena is thread-local rather than
+    /// executor-owned.
+    fn infer_view_planned(&self, params: ParamsView, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        let ip = match &self.opt {
+            Some(o) => &o.infer,
+            None => bail!("planned inference without a program"),
+        };
+        let (t, d) = (self.graph.plan.tokens, self.graph.plan.dim);
+        let (image, patch) = (self.graph.plan.image, self.graph.plan.patch);
+        let folded = self.folded_const(params);
+        let sc = |r: BufRange| BufRange { off: r.off * b, len: r.len * b };
+        INFER_ARENA.with(|cell| {
+            let mut arena = cell.take();
+            let need = ip.arena_elems * b;
+            if arena.len() < need {
+                arena.resize(need, 0.0);
+            }
+            let ap = arena.as_mut_ptr();
+            let mut mean = INFER_MEAN.with(|m| m.take());
+            if mean.len() != d {
+                mean = vec![0.0f32; d];
+            }
+            let mut out = Vec::new();
+            let mut si = 0;
+            while si < self.slots.len() {
+                let slot = &self.slots[si];
+                let sb = ip.steps[si];
+                let fuse_gelu = self.passes.fuse()
+                    && matches!(slot.bind, Bind::Dense { .. } | Bind::Wasi { .. })
+                    && matches!(self.slots.get(si + 1).map(|s| &s.bind), Some(Bind::Gelu));
+                match &slot.bind {
+                    Bind::Patchify => {
+                        let y = unsafe { aw(ap, sc(sb.out)) };
+                        ops::patchify_into(x, b, image, patch, y);
+                    }
+                    Bind::Dense { w, b: bs, o, i, .. } => {
+                        let bias = params.floats(bs)?;
+                        let (y, xs) = unsafe { (aw(ap, sc(sb.out)), ar(ap, sc(sb.src))) };
+                        let rows = xs.len() / *i;
+                        linear_nt(params.weight(w)?, xs, rows, *i, *o, Some(bias), fuse_gelu, y);
+                    }
+                    Bind::Wasi { l, r, b: bs, o, k, i, .. } => {
+                        {
+                            let (h, xs) = unsafe { (aw(ap, sc(sb.a)), ar(ap, sc(sb.src))) };
+                            let rows = xs.len() / *i;
+                            linear_nt(params.weight(r)?, xs, rows, *i, *k, None, false, h);
+                        }
+                        let bias = params.floats(bs)?;
+                        let (y, h) = unsafe { (aw(ap, sc(sb.out)), ar(ap, sc(sb.a))) };
+                        let rows = h.len() / *k;
+                        linear_nt(params.weight(l)?, h, rows, *k, *o, Some(bias), fuse_gelu, y);
+                    }
+                    Bind::Assemble { cls, pos } => {
+                        let (tok, src) = unsafe { (aw(ap, sc(sb.out)), ar(ap, sc(sb.src))) };
+                        if let Some(fv) = folded {
+                            for bi in 0..b {
+                                tok[bi * t * d..bi * t * d + d].copy_from_slice(&fv[..d]);
+                                let srow = &src[bi * (t - 1) * d..(bi + 1) * (t - 1) * d];
+                                tok[bi * t * d + d..(bi + 1) * t * d].copy_from_slice(srow);
+                                for (o, p) in tok[bi * t * d + d..(bi + 1) * t * d]
+                                    .iter_mut()
+                                    .zip(&fv[d..])
+                                {
+                                    *o += p;
+                                }
+                            }
+                        } else {
+                            let clsv = params.floats(cls)?;
+                            let posv = params.floats(pos)?;
+                            for bi in 0..b {
+                                tok[bi * t * d..bi * t * d + d].copy_from_slice(clsv);
+                                let srow = &src[bi * (t - 1) * d..(bi + 1) * (t - 1) * d];
+                                tok[bi * t * d + d..(bi + 1) * t * d].copy_from_slice(srow);
+                                for (o, p) in
+                                    tok[bi * t * d..(bi + 1) * t * d].iter_mut().zip(posv)
+                                {
+                                    *o += p;
+                                }
+                            }
+                        }
+                    }
+                    Bind::LayerNorm { g, b: bs } => {
+                        let gv = params.floats(g)?;
+                        let bv = params.floats(bs)?;
+                        let cur = unsafe { aw(ap, sc(sb.out)) };
+                        ops::layer_norm_inplace(cur, gv, bv, g.numel());
+                    }
+                    Bind::SliceV => {
+                        let (v, src) = unsafe { (aw(ap, sc(sb.out)), ar(ap, sc(sb.src))) };
+                        let rows = src.len() / (3 * d);
+                        for row in 0..rows {
+                            v[row * d..(row + 1) * d]
+                                .copy_from_slice(&src[row * 3 * d + 2 * d..(row + 1) * 3 * d]);
+                        }
+                    }
+                    Bind::Mixing => {
+                        let cur = unsafe { aw(ap, sc(sb.out)) };
+                        ops::uniform_mix_scratch(cur, b, t, d, &mut mean);
+                    }
+                    Bind::Gelu => {
+                        // Only reached when not fused into the linear
+                        // above.
+                        let cur = unsafe { aw(ap, sc(sb.out)) };
+                        for v in cur.iter_mut() {
+                            *v = kernels::gelu(*v);
+                        }
+                    }
+                    Bind::ResidualSave => {
+                        let (cpy, src) = unsafe { (aw(ap, sc(sb.a)), ar(ap, sc(sb.src))) };
+                        cpy.copy_from_slice(src);
+                    }
+                    Bind::ResidualAdd => {
+                        let (cur, res) = unsafe { (aw(ap, sc(sb.out)), ar(ap, sc(sb.a))) };
+                        for (v, a) in cur.iter_mut().zip(res) {
+                            *v += a;
+                        }
+                    }
+                    Bind::TakeCls => {
+                        let (cl, src) = unsafe { (aw(ap, sc(sb.out)), ar(ap, sc(sb.src))) };
+                        for bi in 0..b {
+                            cl[bi * d..(bi + 1) * d]
+                                .copy_from_slice(&src[bi * t * d..bi * t * d + d]);
+                        }
+                    }
+                    Bind::SoftmaxCe => {
+                        out = unsafe { ar(ap, sc(sb.src)) }.to_vec();
+                        break;
+                    }
+                }
+                si += if fuse_gelu { 2 } else { 1 };
+            }
+            INFER_MEAN.with(|m| m.replace(mean));
+            cell.replace(arena);
+            Ok(out)
+        })
     }
 }
 

@@ -26,6 +26,7 @@ pub mod graph;
 mod hlo;
 mod native;
 pub mod ops;
+pub mod passes;
 
 use std::str::FromStr;
 
@@ -36,7 +37,7 @@ use crate::runtime::{ModelEntry, Runtime, StepOutput};
 
 pub use graph::{
     DeltaOverlay, GraphExecutor, LayerGraph, LinearForm, LinearPlan, ModelPlan, Node, NodeTiming,
-    PackedParams, QuantTensor, StoredTensor,
+    PackedParams, PlanReport, ProgramReport, QuantTensor, StoredTensor,
 };
 pub use hlo::{HloInferEngine, HloTrainEngine};
 pub use native::{NativeInferEngine, NativeModelEngine};

@@ -96,6 +96,16 @@ pub fn patchify(x: &[f32], b: usize, image: usize, patch: usize) -> Vec<f32> {
     let grid = image / patch;
     let pd = patch * patch * 3;
     let mut out = vec![0.0f32; b * grid * grid * pd];
+    patchify_into(x, b, image, patch, &mut out);
+    out
+}
+
+/// [`patchify`] into a caller-provided buffer (the arena pass's planned
+/// walks).  Every element of `out` is written.
+pub fn patchify_into(x: &[f32], b: usize, image: usize, patch: usize, out: &mut [f32]) {
+    let grid = image / patch;
+    let pd = patch * patch * 3;
+    debug_assert_eq!(out.len(), b * grid * grid * pd);
     for bi in 0..b {
         for gy in 0..grid {
             for py in 0..patch {
@@ -115,7 +125,6 @@ pub fn patchify(x: &[f32], b: usize, image: usize, patch: usize) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// The fixed token mixing standing in for softmax attention:
@@ -124,6 +133,15 @@ pub fn patchify(x: &[f32], b: usize, image: usize, patch: usize) -> Vec<f32> {
 /// symmetric (so backward applies the same operator).
 pub fn uniform_mix(v: &mut [f32], b: usize, t: usize, d: usize) {
     let mut mean = vec![0.0f32; d];
+    uniform_mix_scratch(v, b, t, d, &mut mean);
+}
+
+/// [`uniform_mix`] with a caller-provided `d`-length mean scratch (the
+/// arena pass's planned walks reuse it across steps).  The scratch is
+/// re-zeroed per batch element exactly as [`uniform_mix`] does, so the
+/// two are bit-identical.
+pub fn uniform_mix_scratch(v: &mut [f32], b: usize, t: usize, d: usize, mean: &mut [f32]) {
+    debug_assert_eq!(mean.len(), d);
     for bi in 0..b {
         mean.iter_mut().for_each(|m| *m = 0.0);
         let batch = &v[bi * t * d..(bi + 1) * t * d];

@@ -1,0 +1,496 @@
+//! Optimization-pass pipeline over the layer-graph IR (DESIGN.md
+//! §Pass pipeline).
+//!
+//! The planner (`engine::graph`) transforms the node program before
+//! execution; this module holds the pass *vocabulary* and the generic
+//! machinery the planner runs:
+//!
+//! * [`PassSet`] — which passes are enabled (`--passes all|none|<list>`,
+//!   `WASI_PASSES` env), every pass individually disableable;
+//! * [`Liveness`] — first-def/last-use interval collection over the
+//!   simulated executor walk;
+//! * [`assign_offsets`] — first-fit arena offset assignment with
+//!   free-hole coalescing, turning the interval set into one pre-sized
+//!   arena per executor;
+//! * [`check_disjoint`] — the independent verifier that rejects any
+//!   assignment where two simultaneously-live buffers overlap.
+//!
+//! Every pass preserves bit-identity with the unoptimized program: the
+//! arena pass only changes *where* each intermediate lives (same kernel
+//! calls, same deterministic partitioning, same accumulation order),
+//! prepack stores the exact f32 image the dequantizing GEMM would have
+//! materialized per call, folding precomputes a value with the same
+//! single-operation arithmetic the runtime would have used, and fusion
+//! selects epilogue forms that are algebraically *and* bitwise the same
+//! as the split ops (`gelu(y + b)` either way).  `tests/passes.rs`
+//! pins all of this against the unoptimized walk at every precision.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use anyhow::{bail, Result};
+
+/// Bit for [`PassSet`]: constant folding of frozen-base subgraphs
+/// (pack-time precompute of the CLS+positional assemble constant).
+const FOLD: u8 = 1 << 0;
+/// Bit for [`PassSet`]: epilogue fusion of adjacent scale/bias/GELU
+/// into the GEMM epilogue (`linalg::kernels::Epilogue`).
+const FUSE: u8 = 1 << 1;
+/// Bit for [`PassSet`]: buffer-liveness analysis + arena reuse (the
+/// planned executors that drive per-step heap allocation to ~zero).
+const ARENA: u8 = 1 << 2;
+/// Bit for [`PassSet`]: pre-packed weight panels for quantized weights
+/// (`linalg::kernels::PackedPanel`), packed once at plan time.
+const PREPACK: u8 = 1 << 3;
+
+const ALL: u8 = FOLD | FUSE | ARENA | PREPACK;
+
+/// The enabled optimization passes, as threaded through
+/// `--passes all|none|fold,fuse,arena,prepack` and the `WASI_PASSES`
+/// environment variable.  The default is *all* passes on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PassSet {
+    bits: u8,
+}
+
+impl PassSet {
+    /// Every pass enabled (the default).
+    pub fn all() -> Self {
+        PassSet { bits: ALL }
+    }
+
+    /// No passes: the executor runs the original unoptimized walks.
+    pub fn none() -> Self {
+        PassSet { bits: 0 }
+    }
+
+    /// Parse `all`, `none`, or a comma-separated subset of
+    /// `fold,fuse,arena,prepack`.  Unknown names are refused with the
+    /// valid vocabulary (refusal-first, like the artifact parsers).
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("all") {
+            return Ok(Self::all());
+        }
+        if s.eq_ignore_ascii_case("none") || s.is_empty() {
+            return Ok(Self::none());
+        }
+        let mut bits = 0u8;
+        for name in s.split(',') {
+            bits |= match name.trim() {
+                "fold" => FOLD,
+                "fuse" => FUSE,
+                "arena" => ARENA,
+                "prepack" => PREPACK,
+                other => bail!(
+                    "unknown pass {other:?} (valid: all, none, or a comma list \
+                     of fold, fuse, arena, prepack)"
+                ),
+            };
+        }
+        Ok(PassSet { bits })
+    }
+
+    /// Constant folding of frozen-base subgraphs enabled?
+    pub fn fold(&self) -> bool {
+        self.bits & FOLD != 0
+    }
+
+    /// Epilogue fusion enabled?
+    pub fn fuse(&self) -> bool {
+        self.bits & FUSE != 0
+    }
+
+    /// Arena-planned buffer reuse enabled?
+    pub fn arena(&self) -> bool {
+        self.bits & ARENA != 0
+    }
+
+    /// Pre-packed weight panels enabled?
+    pub fn prepack(&self) -> bool {
+        self.bits & PREPACK != 0
+    }
+
+    /// This set minus one named pass (test helper for per-pass pins).
+    pub fn without(&self, name: &str) -> Result<Self> {
+        let mask = Self::parse(name)?;
+        Ok(PassSet { bits: self.bits & !mask.bits })
+    }
+}
+
+impl fmt::Display for PassSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.bits == ALL {
+            return write!(f, "all");
+        }
+        if self.bits == 0 {
+            return write!(f, "none");
+        }
+        let mut names = Vec::new();
+        if self.fold() {
+            names.push("fold");
+        }
+        if self.fuse() {
+            names.push("fuse");
+        }
+        if self.arena() {
+            names.push("arena");
+        }
+        if self.prepack() {
+            names.push("prepack");
+        }
+        write!(f, "{}", names.join(","))
+    }
+}
+
+/// Process-global pass override (same idiom as
+/// `util::threadpool::set_num_threads`): `0xFF` = unset, otherwise the
+/// `PassSet` bits.  Set once at CLI startup from `--passes`; executors
+/// capture the resolved set at construction.
+static PASS_OVERRIDE: AtomicU8 = AtomicU8::new(UNSET);
+const UNSET: u8 = 0xFF;
+
+/// Install a process-global pass set (CLI `--passes`).  Takes
+/// precedence over the `WASI_PASSES` environment variable.
+pub fn set_passes(p: PassSet) {
+    PASS_OVERRIDE.store(p.bits, Ordering::SeqCst);
+}
+
+/// The pass set new executors capture: the [`set_passes`] override if
+/// one was installed, else `WASI_PASSES` (refusing a malformed value),
+/// else all passes.
+pub fn current_passes() -> Result<PassSet> {
+    let bits = PASS_OVERRIDE.load(Ordering::SeqCst);
+    if bits != UNSET {
+        return Ok(PassSet { bits });
+    }
+    match std::env::var("WASI_PASSES") {
+        Ok(s) => PassSet::parse(&s)
+            .map_err(|e| anyhow::anyhow!("WASI_PASSES: {e}")),
+        Err(std::env::VarError::NotPresent) => Ok(PassSet::all()),
+        Err(std::env::VarError::NotUnicode(_)) => {
+            bail!("WASI_PASSES is not valid unicode")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Buffer liveness + arena assignment
+// ---------------------------------------------------------------------------
+
+/// A planned slice of the executor arena: `arena[off .. off + len]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufRange {
+    /// Element offset into the arena.
+    pub off: usize,
+    /// Length in elements.
+    pub len: usize,
+}
+
+/// One intermediate buffer's lifetime over the simulated walk:
+/// first defined at timestep `def`, last read at timestep `last`
+/// (inclusive), `elems` f32 elements wide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    /// Buffer id (index into [`ArenaLayout::offsets`]).
+    pub id: usize,
+    /// Timestep of the defining write.
+    pub def: usize,
+    /// Timestep of the last read (inclusive).
+    pub last: usize,
+    /// Size in f32 elements.
+    pub elems: usize,
+}
+
+/// Interval collector: the planner replays the executor walk, calling
+/// [`Liveness::alloc`] at each buffer definition and
+/// [`Liveness::touch`] at each later use; the finished interval set
+/// feeds [`assign_offsets`].
+#[derive(Debug, Default)]
+pub struct Liveness {
+    intervals: Vec<Interval>,
+}
+
+impl Liveness {
+    pub fn new() -> Self {
+        Liveness { intervals: Vec::new() }
+    }
+
+    /// Record a buffer defined at `time`, returning its id.
+    pub fn alloc(&mut self, time: usize, elems: usize) -> usize {
+        let id = self.intervals.len();
+        self.intervals.push(Interval { id, def: time, last: time, elems });
+        id
+    }
+
+    /// Record a use of buffer `id` at `time`, extending its lifetime.
+    pub fn touch(&mut self, id: usize, time: usize) {
+        let iv = &mut self.intervals[id];
+        if time > iv.last {
+            iv.last = time;
+        }
+    }
+
+    /// The collected intervals, in definition order.
+    pub fn intervals(&self) -> &[Interval] {
+        &self.intervals
+    }
+
+    /// Sum of all buffer sizes — what per-step allocation would touch
+    /// without reuse (the denominator of the arena-savings metric).
+    pub fn sum_elems(&self) -> usize {
+        self.intervals.iter().map(|iv| iv.elems).sum()
+    }
+}
+
+/// The arena assignment produced by [`assign_offsets`]: one element
+/// offset per interval id, plus the total arena length.
+#[derive(Debug, Clone)]
+pub struct ArenaLayout {
+    /// Element offset per buffer id.
+    pub offsets: Vec<usize>,
+    /// Total arena length in elements.
+    pub total: usize,
+}
+
+/// Return `layout.offsets[iv.id]` as a [`BufRange`].
+pub fn range_of(layout: &ArenaLayout, iv: &Interval) -> BufRange {
+    BufRange { off: layout.offsets[iv.id], len: iv.elems }
+}
+
+/// First-fit arena assignment over liveness intervals.
+///
+/// Intervals are processed in definition order; a buffer whose last
+/// use precedes the current definition returns its range to a sorted,
+/// coalesced free list, and each new buffer takes the first hole that
+/// fits (extending the arena when none does).  Two buffers share an
+/// offset range only when their lifetimes are provably disjoint —
+/// [`check_disjoint`] re-verifies that property independently.
+pub fn assign_offsets(intervals: &[Interval]) -> ArenaLayout {
+    let mut order: Vec<usize> = (0..intervals.len()).collect();
+    order.sort_by_key(|&i| (intervals[i].def, intervals[i].id));
+    let mut offsets = vec![0usize; intervals.len()];
+    // (offset, len) holes, sorted by offset, adjacent holes coalesced.
+    let mut free: Vec<(usize, usize)> = Vec::new();
+    // (last, offset, len) of currently-live placements.
+    let mut active: Vec<(usize, usize, usize)> = Vec::new();
+    let mut total = 0usize;
+    for &i in &order {
+        let iv = &intervals[i];
+        // Expire buffers whose last use is strictly before this def:
+        // a buffer read at the same timestep a new one is written must
+        // NOT share storage (GEMM src/dst overlap).
+        let mut j = 0;
+        while j < active.len() {
+            if active[j].0 < iv.def {
+                let (_, off, len) = active.swap_remove(j);
+                release(&mut free, off, len);
+            } else {
+                j += 1;
+            }
+        }
+        let mut found = None;
+        for (fi, &(off, len)) in free.iter().enumerate() {
+            if len >= iv.elems {
+                found = Some((fi, off));
+                break;
+            }
+        }
+        let off = match found {
+            Some((fi, off)) => {
+                let (hole_off, hole_len) = free[fi];
+                if hole_len == iv.elems {
+                    free.remove(fi);
+                } else {
+                    free[fi] = (hole_off + iv.elems, hole_len - iv.elems);
+                }
+                off
+            }
+            None => {
+                let off = total;
+                total += iv.elems;
+                off
+            }
+        };
+        offsets[iv.id] = off;
+        if iv.elems > 0 {
+            active.push((iv.last, off, iv.elems));
+        }
+    }
+    ArenaLayout { offsets, total }
+}
+
+/// Return a hole to the sorted free list, coalescing with neighbors.
+fn release(free: &mut Vec<(usize, usize)>, off: usize, len: usize) {
+    if len == 0 {
+        return;
+    }
+    let pos = free.partition_point(|&(o, _)| o < off);
+    free.insert(pos, (off, len));
+    if pos + 1 < free.len() && free[pos].0 + free[pos].1 == free[pos + 1].0 {
+        free[pos].1 += free[pos + 1].1;
+        free.remove(pos + 1);
+    }
+    if pos > 0 && free[pos - 1].0 + free[pos - 1].1 == free[pos].0 {
+        free[pos - 1].1 += free[pos].1;
+        free.remove(pos);
+    }
+}
+
+/// Independent verifier: any two intervals whose lifetimes overlap in
+/// time must occupy disjoint arena ranges.  Run by the planner on
+/// every layout it produces (a violated assignment is a planner bug
+/// that would silently corrupt activations, so it fails loudly).
+pub fn check_disjoint(intervals: &[Interval], layout: &ArenaLayout) -> Result<()> {
+    if layout.offsets.len() != intervals.len() {
+        bail!(
+            "layout has {} offsets for {} intervals",
+            layout.offsets.len(),
+            intervals.len()
+        );
+    }
+    for a in intervals {
+        let (ao, ae) = (layout.offsets[a.id], a.elems);
+        if ae > 0 && ao + ae > layout.total {
+            bail!(
+                "buffer {} range [{ao}, {}) exceeds arena total {}",
+                a.id,
+                ao + ae,
+                layout.total
+            );
+        }
+        for b in intervals {
+            if b.id <= a.id || a.elems == 0 || b.elems == 0 {
+                continue;
+            }
+            let lifetimes_overlap = a.def <= b.last && b.def <= a.last;
+            if !lifetimes_overlap {
+                continue;
+            }
+            let (bo, be) = (layout.offsets[b.id], b.elems);
+            let ranges_overlap = ao < bo + be && bo < ao + ae;
+            if ranges_overlap {
+                bail!(
+                    "live buffers {} (t[{}..={}], [{ao}, {})) and {} \
+                     (t[{}..={}], [{bo}, {})) overlap in the arena",
+                    a.id,
+                    a.def,
+                    a.last,
+                    ao + ae,
+                    b.id,
+                    b.def,
+                    b.last,
+                    bo + be
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_refuses_unknown() {
+        assert_eq!(PassSet::parse("all").unwrap(), PassSet::all());
+        assert_eq!(PassSet::parse("none").unwrap(), PassSet::none());
+        let p = PassSet::parse("arena,prepack").unwrap();
+        assert!(p.arena() && p.prepack() && !p.fold() && !p.fuse());
+        assert_eq!(p.to_string(), "arena,prepack");
+        assert_eq!(PassSet::parse("fold,fuse,arena,prepack").unwrap(), PassSet::all());
+        assert_eq!(PassSet::all().to_string(), "all");
+        assert_eq!(PassSet::none().to_string(), "none");
+        let err = PassSet::parse("arena,banana").unwrap_err().to_string();
+        assert!(err.contains("banana"), "{err}");
+        assert!(!PassSet::all().without("arena").unwrap().arena());
+        assert!(PassSet::all().without("arena").unwrap().prepack());
+    }
+
+    #[test]
+    fn liveness_intervals_extend_with_touch() {
+        let mut lv = Liveness::new();
+        let a = lv.alloc(0, 10);
+        let b = lv.alloc(1, 20);
+        lv.touch(a, 3);
+        lv.touch(a, 2); // non-monotone touch must not shrink
+        assert_eq!(lv.intervals()[a], Interval { id: a, def: 0, last: 3, elems: 10 });
+        assert_eq!(lv.intervals()[b], Interval { id: b, def: 1, last: 1, elems: 20 });
+        assert_eq!(lv.sum_elems(), 30);
+    }
+
+    #[test]
+    fn assign_offsets_reuses_dead_ranges() {
+        // a: t0..t1, b: t1..t2 (overlaps a at t1), c: t3.. (a and b dead).
+        let mut lv = Liveness::new();
+        let a = lv.alloc(0, 8);
+        let b = lv.alloc(1, 8);
+        lv.touch(a, 1);
+        lv.touch(b, 2);
+        let c = lv.alloc(3, 12);
+        lv.touch(c, 4);
+        let layout = assign_offsets(lv.intervals());
+        check_disjoint(lv.intervals(), &layout).unwrap();
+        assert_ne!(layout.offsets[a], layout.offsets[b], "a and b are simultaneously live");
+        // c fits into the coalesced hole left by a+b: no arena growth.
+        assert_eq!(layout.total, 16, "{layout:?}");
+        assert!(layout.offsets[c] + 12 <= 16);
+    }
+
+    #[test]
+    fn check_disjoint_rejects_overlapping_assignment() {
+        let mut lv = Liveness::new();
+        let a = lv.alloc(0, 8);
+        let b = lv.alloc(1, 8);
+        lv.touch(a, 2);
+        lv.touch(b, 2);
+        let mut layout = assign_offsets(lv.intervals());
+        check_disjoint(lv.intervals(), &layout).unwrap();
+        // Hand-corrupt: collide b onto a while both are live.
+        layout.offsets[b] = layout.offsets[a] + 4;
+        let err = check_disjoint(lv.intervals(), &layout).unwrap_err().to_string();
+        assert!(err.contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn zero_length_buffers_never_collide() {
+        let mut lv = Liveness::new();
+        let a = lv.alloc(0, 0);
+        let b = lv.alloc(0, 16);
+        lv.touch(a, 5);
+        lv.touch(b, 5);
+        let layout = assign_offsets(lv.intervals());
+        check_disjoint(lv.intervals(), &layout).unwrap();
+        assert_eq!(layout.total, 16);
+    }
+
+    #[test]
+    fn first_fit_prefers_lowest_hole() {
+        // Two dead holes [0,4) and [8,16); a 3-elem buffer should land
+        // at offset 0, not 8.
+        let mut lv = Liveness::new();
+        let a = lv.alloc(0, 4);
+        let b = lv.alloc(0, 4); // live past everything: pins [4, 8)
+        let c = lv.alloc(0, 8);
+        lv.touch(b, 10);
+        lv.touch(a, 1);
+        lv.touch(c, 1);
+        let d = lv.alloc(3, 3);
+        lv.touch(d, 4);
+        let layout = assign_offsets(lv.intervals());
+        check_disjoint(lv.intervals(), &layout).unwrap();
+        assert_eq!(layout.offsets[d], layout.offsets[a]);
+        assert_eq!(layout.total, 16);
+    }
+
+    #[test]
+    fn current_passes_honors_override() {
+        // NOTE: touches the process-global override; keep this the only
+        // test that does (parallel test threads share it).
+        set_passes(PassSet::parse("fuse").unwrap());
+        assert_eq!(current_passes().unwrap().to_string(), "fuse");
+        set_passes(PassSet::all());
+        assert_eq!(current_passes().unwrap(), PassSet::all());
+    }
+}

@@ -407,6 +407,167 @@ fn bench_store(quick: bool) -> Result<(Json, String)> {
     Ok((json, summary))
 }
 
+/// Pass-pipeline bench (DESIGN.md §Pass pipeline).  Optimized vs
+/// unoptimized executors over the vanilla demo variant at ONE kernel
+/// thread — a single thread keeps the parallel layer inline, so the
+/// counting global allocator (`util::alloc`, installed by `main.rs`)
+/// sees only the executor's own heap traffic — plus the arena's
+/// liveness footprint, prepacked weight-panel inference against
+/// dequantize-on-the-fly at int8 on the wasi variant, and the serve
+/// pool's packed-job cache hit rate.  Every arm is bit-identical to its
+/// counterpart (the `tests/passes.rs` pins), so the `_ms` rows measure
+/// wall-clock only; the allocation counts are structural and join the
+/// gate's no-regress check.
+fn bench_passes(
+    dir: &Path,
+    manifest: &Manifest,
+    names: &[String],
+    wasi_entry: &ModelEntry,
+    steps: usize,
+    infer_reps: usize,
+) -> Result<(Json, String)> {
+    use crate::engine::passes::PassSet;
+    use crate::engine::{GraphExecutor, LayerGraph, PackedParams};
+    use crate::util::alloc::allocation_count;
+
+    set_num_threads(1);
+    let vanilla = names
+        .iter()
+        .find(|n| !n.contains("wasi"))
+        .cloned()
+        .unwrap_or_else(|| names[0].clone());
+    let entry = manifest.model(&vanilla)?.clone();
+    let side = entry
+        .image_side()
+        .ok_or_else(|| anyhow::anyhow!("passes bench model is not an image model"))?;
+    let mut task = VisionTask::new("passes", entry.classes, side, 0.7, 8, 311);
+    let (x, y, _) = task.batch_onehot(entry.batch);
+
+    // One full training step per iteration, driven exactly like
+    // `NativeModelEngine::step` minus persistence; two warmup steps let
+    // the arena and scratch buffers reach steady state first.
+    let train_arm = |ps: PassSet| -> Result<(f64, f64)> {
+        let mut exec = GraphExecutor::new_with(LayerGraph::from_entry(&entry)?, &entry, ps)?;
+        let mut params = entry.load_params()?;
+        let mut grads = vec![0.0f32; params.len()];
+        for _ in 0..2 {
+            let logits = exec.forward_train(&params, &x)?;
+            let (_, _, dlogits) = exec.loss_and_grad(&logits, &y);
+            grads.fill(0.0);
+            exec.backward(&params, &dlogits, &mut grads)?;
+            exec.update(&mut params, &grads, 0.01);
+        }
+        let a0 = allocation_count();
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            let logits = exec.forward_train(&params, &x)?;
+            let (_, _, dlogits) = exec.loss_and_grad(&logits, &y);
+            grads.fill(0.0);
+            exec.backward(&params, &dlogits, &mut grads)?;
+            exec.update(&mut params, &grads, 0.01);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let allocs = (allocation_count() - a0) as f64 / steps as f64;
+        Ok((dt / steps as f64 * 1e3, allocs))
+    };
+    let (train_opt_ms, allocs_step_opt) = train_arm(PassSet::all())?;
+    let (train_ref_ms, allocs_step_ref) = train_arm(PassSet::none())?;
+
+    let infer_arm = |ps: PassSet| -> Result<(f64, f64)> {
+        let exec = GraphExecutor::new_infer_with(LayerGraph::from_entry(&entry)?, &entry, ps)?;
+        let params = entry.load_params()?;
+        exec.infer(&params, &x, entry.batch)?; // warmup sizes the arena
+        let a0 = allocation_count();
+        let t0 = Instant::now();
+        for _ in 0..infer_reps {
+            exec.infer(&params, &x, entry.batch)?;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let allocs = (allocation_count() - a0) as f64 / infer_reps as f64;
+        Ok((dt / infer_reps as f64 * 1e3, allocs))
+    };
+    let (infer_opt_ms, allocs_inf_opt) = infer_arm(PassSet::all())?;
+    let (infer_ref_ms, allocs_inf_ref) = infer_arm(PassSet::none())?;
+
+    // Liveness footprint of the optimized training program.
+    let planned = GraphExecutor::new_with(LayerGraph::from_entry(&entry)?, &entry, PassSet::all())?;
+    let report = planned
+        .plan_report()
+        .train
+        .ok_or_else(|| anyhow::anyhow!("arena pass produced no training program"))?;
+    let reuse = crate::costmodel::memory::arena_reuse_ratio(report.sum_elems, report.arena_elems);
+
+    // Prepacked panels vs dequantize-on-the-fly: the wasi variant at
+    // int8 (factor tensors are the GEMM weights there), same packed
+    // record shape either way so only the panel path differs.
+    let wparams = wasi_entry.load_params()?;
+    let winfer = NativeInferEngine::load(wasi_entry)?;
+    let wside = wasi_entry
+        .image_side()
+        .ok_or_else(|| anyhow::anyhow!("passes bench model is not an image model"))?;
+    let mut wtask = VisionTask::new("panels", wasi_entry.classes, wside, 0.7, 8, 313);
+    let (wx, _, _) = wtask.batch_onehot(wasi_entry.batch);
+    let packed_on = PackedParams::pack_with(wasi_entry, &wparams, Precision::I8, PassSet::all())?;
+    let packed_off = PackedParams::pack_with(wasi_entry, &wparams, Precision::I8, PassSet::none())?;
+    let time_packed = |p: &PackedParams| -> Result<f64> {
+        winfer.infer_packed(p, &wx)?; // warmup
+        let t0 = Instant::now();
+        for _ in 0..infer_reps {
+            winfer.infer_packed(p, &wx)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() / infer_reps as f64 * 1e3)
+    };
+    let prepacked_ms = time_packed(&packed_on)?;
+    let repack_ms = time_packed(&packed_off)?;
+    let prepack_speedup = repack_ms / prepacked_ms;
+
+    // Packed-job cache (serve/pool.rs): 1 build + 7 reuses per key.
+    let pool_entry = crate::serve::PoolEntry::open(dir)?;
+    for _ in 0..8 {
+        pool_entry.packed_for("bench-job", Precision::I8, || {
+            PackedParams::pack(wasi_entry, &wparams, Precision::I8)
+        })?;
+    }
+    let hits = pool_entry.prepack_hits() as f64;
+    let misses = pool_entry.prepack_misses() as f64;
+    let hit_rate = hits / (hits + misses).max(1.0);
+
+    set_num_threads(0);
+    let json = obj(vec![
+        ("enabled", jstr(PassSet::all().to_string())),
+        ("model", jstr(vanilla.clone())),
+        ("arena_bytes", num(report.arena_elems as f64 * 4.0)),
+        ("sum_buffer_bytes", num(report.sum_elems as f64 * 4.0)),
+        ("arena_reuse_ratio", num(reuse)),
+        ("intervals", num(report.buffers as f64)),
+        ("allocations_per_step_optimized", num(allocs_step_opt)),
+        ("allocations_per_step_unoptimized", num(allocs_step_ref)),
+        ("allocations_per_infer_optimized", num(allocs_inf_opt)),
+        ("allocations_per_infer_unoptimized", num(allocs_inf_ref)),
+        ("train_step_optimized_ms", num(train_opt_ms)),
+        ("train_step_unoptimized_ms", num(train_ref_ms)),
+        ("infer_optimized_ms", num(infer_opt_ms)),
+        ("infer_unoptimized_ms", num(infer_ref_ms)),
+        ("infer_prepacked_ms", num(prepacked_ms)),
+        ("infer_repack_ms", num(repack_ms)),
+        ("prepack_infer_speedup", num(prepack_speedup)),
+        ("prepack_panel_count", num(packed_on.panel_count() as f64)),
+        ("prepack_panel_bytes", num(packed_on.panel_bytes() as f64)),
+        ("prepack_cache_hit_rate", num(hit_rate)),
+    ]);
+    let summary = format!(
+        "passes: arena {:.2} MB vs {:.2} MB unshared ({reuse:.2}x reuse, {} buffers), \
+         allocs/step {allocs_step_opt:.0} vs {allocs_step_ref:.0}, \
+         step {train_opt_ms:.1} vs {train_ref_ms:.1} ms, \
+         prepacked int8 infer {prepacked_ms:.2} vs {repack_ms:.2} ms \
+         ({prepack_speedup:.2}x), packed-job cache hit rate {hit_rate:.2}\n",
+        crate::costmodel::memory::elems_to_mb(report.arena_elems as f64),
+        crate::costmodel::memory::elems_to_mb(report.sum_elems as f64),
+        report.buffers,
+    );
+    Ok((json, summary))
+}
+
 /// Run the bench, write `cfg.out`, and return a human-readable summary.
 /// The process-global thread override is restored on every exit path.
 pub fn run_bench(cfg: &BenchConfig) -> Result<String> {
@@ -538,6 +699,11 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
     set_num_threads(0);
     let (store_json, store_summary) = bench_store(cfg.quick)?;
 
+    // 4d. the optimization-pass pipeline: arena reuse, allocations per
+    //     step, prepacked panels vs repacking, packed-job cache.
+    let (passes_json, passes_summary) =
+        bench_passes(&dir, &manifest, &names, &entry, steps, infer_reps)?;
+
     // 5. the HLO engine on the same artifact set (expected unavailable
     //    offline: the demo set ships no train artifact, and without
     //    PJRT the runtime cannot execute model HLO).
@@ -581,6 +747,7 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         ("serve", serve_json),
         ("soak", soak_json),
         ("store", store_json),
+        ("passes", passes_json),
         ("nodes", node_json),
     ]);
     std::fs::write(&cfg.out, out_json.to_string())
@@ -651,6 +818,7 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         soak.violations.len()
     ));
     body.push_str(&store_summary);
+    body.push_str(&passes_summary);
     match (&node_table, &profiled) {
         (Some(table), _) => {
             body.push('\n');

@@ -289,6 +289,73 @@ pub fn gemm_nt_deq<E: DequantElem>(
     });
 }
 
+/// A pre-packed B-side panel for [`gemm_nt_prepacked`]: the dequantized
+/// f32 image of an `(n x k)` reduced-precision weight tensor, packed
+/// ONCE at plan time instead of per GEMM call (DESIGN.md §Pass
+/// pipeline, prepack pass).
+///
+/// The layout is deliberately the same row-major `(n x k)` the f32
+/// `gemm_nt` consumes — NOT the interleaved `apack` tile layout — so
+/// the prepacked product runs the identical [`dot`] calls in the
+/// identical order as [`gemm_nt_deq`] over the same payload, and the
+/// bitwise-identity contract of the kernel layer survives the pass.
+/// (An interleaved B layout would reorder the accumulation and is
+/// exactly the renegotiation ROADMAP item 3's true-int8 microkernels
+/// will make; this panel is its staging format.)  Int8 payloads pack
+/// as RAW quantized magnitudes with the per-tensor scale carried
+/// alongside for the epilogue, matching the deq path's `Scale` forms.
+pub struct PackedPanel {
+    /// Dequantized `(n x k)` row-major f32 image.
+    data: Vec<f32>,
+    /// Output features (B rows).
+    n: usize,
+    /// Reduction depth (B cols).
+    k: usize,
+    /// Int8 per-tensor scale to fold into the epilogue (`None` for
+    /// payloads whose values are already final, e.g. bf16).
+    scale: Option<f32>,
+}
+
+impl PackedPanel {
+    /// Pack an `(n x k)` reduced-precision tensor into its f32 image.
+    pub fn pack<E: DequantElem>(b: &[E], n: usize, k: usize, scale: Option<f32>) -> PackedPanel {
+        debug_assert_eq!(b.len(), n * k);
+        PackedPanel { data: b.iter().map(|e| e.to_f32()).collect(), n, k, scale }
+    }
+
+    /// Output features (B rows).
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    /// Reduction depth (B cols).
+    pub fn cols(&self) -> usize {
+        self.k
+    }
+
+    /// The int8 per-tensor scale the caller must fold into the
+    /// epilogue (`None`: values are final).
+    pub fn scale(&self) -> Option<f32> {
+        self.scale
+    }
+
+    /// Resident bytes of the packed image (the prepack pass trades
+    /// this memory for zero per-call conversion work).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// [`gemm_nt`] against a [`PackedPanel`]: C (m x n) = A (m x k) · Bᵀ
+/// with B pre-dequantized at plan time.  Delegates to the f32
+/// [`gemm_nt`] over the panel's image — same row partition, same
+/// [`dot`] order — so the result is bit-identical to [`gemm_nt_deq`]
+/// over the original payload (pinned below).  As with the deq path,
+/// an int8 panel's `scale()` belongs in `epi`.
+pub fn gemm_nt_prepacked(a: &[f32], b: &PackedPanel, m: usize, out: &mut [f32], epi: Epilogue) {
+    gemm_nt(a, &b.data, m, b.k, b.n, out, epi);
+}
+
 /// C (m x n) = Aᵀ · B with A stored (k x m) — no transpose materialized.
 /// Then `epi`.  Overwrites `out`.
 pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], epi: Epilogue) {
@@ -601,6 +668,42 @@ mod tests {
         for (x, y) in c8.iter().zip(&cref) {
             assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "i8: {x} vs {y}");
         }
+    }
+
+    #[test]
+    fn prepacked_gemm_matches_dequantizing_gemm_bitwise() {
+        // The prepack pass contract: packing once at plan time must
+        // not change a single output bit vs converting per call.
+        let mut rng = Pcg64::new(11);
+        let (m, k, n) = (5, 37, 13);
+        let a: Vec<f32> = rng.normal_vec(m * k);
+        let w: Vec<f32> = rng.normal_vec(n * k);
+        let bias: Vec<f32> = rng.normal_vec(n);
+
+        let wq16: Vec<u16> = w.iter().map(|&v| f32_to_bf16(v)).collect();
+        let panel16 = PackedPanel::pack(&wq16, n, k, None);
+        assert_eq!((panel16.rows(), panel16.cols()), (n, k));
+        assert_eq!(panel16.bytes(), n * k * 4);
+        let mut c_pre = vec![0.0f32; m * n];
+        let mut c_deq = vec![0.0f32; m * n];
+        gemm_nt_prepacked(&a, &panel16, m, &mut c_pre, Epilogue::Bias(&bias));
+        gemm_nt_deq(&a, &wq16, m, k, n, &mut c_deq, Epilogue::Bias(&bias));
+        assert_eq!(
+            c_pre.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            c_deq.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "bf16 prepacked GEMM diverged from the dequantizing GEMM"
+        );
+
+        let (q, scale) = quantize_i8(&w);
+        let panel8 = PackedPanel::pack(&q, n, k, Some(scale));
+        assert_eq!(panel8.scale(), Some(scale));
+        gemm_nt_prepacked(&a, &panel8, m, &mut c_pre, Epilogue::ScaleBias(scale, &bias));
+        gemm_nt_deq(&a, &q, m, k, n, &mut c_deq, Epilogue::ScaleBias(scale, &bias));
+        assert_eq!(
+            c_pre.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            c_deq.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "i8 prepacked GEMM diverged from the dequantizing GEMM"
+        );
     }
 
     #[test]

@@ -31,6 +31,13 @@ use wasi_train::serve::{
 use wasi_train::util::cli::Args;
 use wasi_train::util::table::Table;
 
+/// Count heap allocations process-wide so `wasi-train bench` can pin
+/// the arena pass's allocations-per-step number (`util::alloc`).  The
+/// counter is one relaxed atomic add per alloc — noise-level cost.
+#[global_allocator]
+static ALLOC: wasi_train::util::alloc::CountingAllocator =
+    wasi_train::util::alloc::CountingAllocator;
+
 fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
@@ -40,7 +47,7 @@ fn main() {
 
 fn usage() -> String {
     [
-        "usage: wasi-train <train|serve|soak|store|infer|plan-ranks|eval|bench|cost-model|calibrate|list|demo> [options]",
+        "usage: wasi-train <train|serve|soak|store|infer|plan|plan-ranks|eval|bench|cost-model|calibrate|list|demo> [options]",
         "common options:",
         "  --artifacts DIR   artifact directory (default: artifacts)",
         "  --engine KIND     execution engine: auto|hlo|native (default: auto;",
@@ -51,6 +58,11 @@ fn usage() -> String {
         "  --precision P     weight storage: f32|bf16|i8 (default f32; bf16",
         "                    trains + serves at 2 bytes/weight, i8 is",
         "                    inference-only per-tensor symmetric quantization)",
+        "  --passes LIST     optimization passes: all|none|comma-list of",
+        "                    fold,fuse,arena,prepack (default all; every pass is",
+        "                    bit-identical to the unoptimized walk, so this is a",
+        "                    perf/debug knob, never a results knob; env",
+        "                    WASI_PASSES is the fallback when the flag is absent)",
         "unknown --options are rejected per subcommand; the accepted sets are:",
         "train:      --model NAME --dataset PRESET --steps N --samples N --seed S",
         "            --lr LR0 (cosine schedule start, default 0.05)",
@@ -82,6 +94,9 @@ fn usage() -> String {
         "            undecodable ones, show prints a record's factor metadata",
         "infer:      --model NAME --seed S (batch accuracy with initial params;",
         "            works on infer-only variants, no train artifact needed)",
+        "plan:       [--model NAME] -- dump the pass pipeline's optimized node",
+        "            program per variant: liveness intervals, arena offsets,",
+        "            arena size vs sum-of-buffers, prepacked panel footprint",
         "plan-ranks: --budget-kb N | --eps E",
         "eval:       <exhibit|all> --steps N --out DIR [--quick]",
         "bench:      [--quick] [--steps N] [--out FILE (default BENCH_native.json)]",
@@ -131,6 +146,7 @@ fn check_known_options(sub: &str, args: &Args) -> Result<()> {
         ),
         "store" => (&["store"], &[]),
         "infer" => (&["model", "seed"], &[]),
+        "plan" => (&["model"], &[]),
         "bench" => (&["steps", "out"], &["quick"]),
         "demo" => (&["out"], &[]),
         "plan-ranks" => (&["budget-kb", "eps"], &[]),
@@ -139,7 +155,7 @@ fn check_known_options(sub: &str, args: &Args) -> Result<()> {
         // Unknown subcommands fall through to the usage screen.
         _ => return Ok(()),
     };
-    let mut options: Vec<&str> = vec!["artifacts", "engine", "threads", "precision"];
+    let mut options: Vec<&str> = vec!["artifacts", "engine", "threads", "precision", "passes"];
     options.extend_from_slice(specific);
     args.reject_unknown(sub, &options, flags)
 }
@@ -159,6 +175,11 @@ fn run() -> Result<()> {
         };
         wasi_train::util::threadpool::set_num_threads(n);
     }
+    // `--passes LIST` applies process-wide before any executor is
+    // planned (falls back to env WASI_PASSES, then all-on).
+    if let Some(v) = args.get("passes") {
+        wasi_train::engine::passes::set_passes(wasi_train::engine::passes::PassSet::parse(v)?);
+    }
     let artifacts = args.get_or("artifacts", "artifacts").to_string();
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args, &artifacts),
@@ -166,6 +187,7 @@ fn run() -> Result<()> {
         Some("soak") => cmd_soak(&args, &artifacts),
         Some("store") => cmd_store(&args),
         Some("infer") => cmd_infer(&args, &artifacts),
+        Some("plan") => cmd_plan(&args, &artifacts),
         Some("bench") => cmd_bench(&args),
         Some("demo") => cmd_demo(&args),
         Some("plan-ranks") => cmd_plan_ranks(&args, &artifacts),
@@ -505,6 +527,100 @@ fn cmd_infer(args: &Args, artifacts: &str) -> Result<()> {
         out.correct.unwrap_or(0),
         out.batch
     );
+    Ok(())
+}
+
+/// `plan`: make the pass pipeline inspectable without a debugger —
+/// dump the optimized node program, the liveness intervals with their
+/// arena offsets, the arena size vs the no-reuse footprint, and the
+/// prepacked panel summary, per variant.
+fn cmd_plan(args: &Args, artifacts: &str) -> Result<()> {
+    use wasi_train::costmodel::memory::{arena_reuse_ratio, elems_to_mb};
+    use wasi_train::engine::{GraphExecutor, LayerGraph, PackedParams, ProgramReport};
+
+    let session = Session::open(artifacts)?;
+    let filter = args.get("model");
+    let mut shown = 0usize;
+    for entry in session.manifest().models.values() {
+        if let Some(name) = filter {
+            if entry.name != *name {
+                continue;
+            }
+        }
+        shown += 1;
+        let graph = match LayerGraph::from_entry(entry) {
+            Ok(g) => g,
+            Err(e) => {
+                println!("model {}: not plannable by the native IR ({e:#})\n", entry.name);
+                continue;
+            }
+        };
+        // Train executor when the variant supports it, else infer-only
+        // (the plan differs: training pins saved activations across the
+        // loss boundary, inference re-plans per batch element).
+        let exec = match GraphExecutor::new(graph, entry) {
+            Ok(x) => x,
+            Err(_) => GraphExecutor::new_infer(LayerGraph::from_entry(entry)?, entry)?,
+        };
+        let rep = exec.plan_report();
+        println!("model {}  (passes: {})", entry.name, rep.passes);
+        let mut nodes = Table::new(["#", "node", "out features"]);
+        for (i, nt) in exec.node_timings().iter().enumerate() {
+            nodes.row([i.to_string(), nt.label.clone(), nt.out_features.to_string()]);
+        }
+        nodes.print();
+        let sections: [(&str, Option<&ProgramReport>); 2] = [
+            ("train (fwd+bwd round trip)", rep.train.as_ref()),
+            ("infer (per batch element)", rep.infer.as_ref()),
+        ];
+        for (tag, pr) in sections {
+            match pr {
+                Some(p) => {
+                    println!(
+                        "{tag}: arena {} elems ({:.2} MB) for {} buffers; \
+                         sum-of-buffers {} elems ({:.2} MB); reuse {:.2}x",
+                        p.arena_elems,
+                        elems_to_mb(p.arena_elems as f64),
+                        p.buffers,
+                        p.sum_elems,
+                        elems_to_mb(p.sum_elems as f64),
+                        arena_reuse_ratio(p.sum_elems, p.arena_elems),
+                    );
+                    let mut t = Table::new(["buf", "def", "last use", "elems", "offset"]);
+                    for (i, (def, last, elems, off)) in p.intervals.iter().enumerate() {
+                        t.row([
+                            i.to_string(),
+                            def.to_string(),
+                            last.to_string(),
+                            elems.to_string(),
+                            off.to_string(),
+                        ]);
+                    }
+                    t.print();
+                }
+                None => println!("{tag}: arena pass disabled — unplanned per-Vec walk"),
+            }
+        }
+        let params = entry.load_params()?;
+        for prec in [Precision::Bf16, Precision::I8] {
+            match PackedParams::pack(entry, &params, prec) {
+                Ok(p) => println!(
+                    "prepack @ {prec}: {} panels, {} panel bytes{}",
+                    p.panel_count(),
+                    p.panel_bytes(),
+                    if p.has_folded_assemble() { ", assemble folded" } else { "" },
+                ),
+                Err(e) => println!("prepack @ {prec}: unavailable ({e:#})"),
+            }
+        }
+        println!();
+    }
+    if shown == 0 {
+        return Err(anyhow!(
+            "no variant matched {:?}; see `wasi-train list`",
+            filter.unwrap_or("<all>")
+        ));
+    }
     Ok(())
 }
 

@@ -42,5 +42,7 @@ pub mod service;
 pub use job::{JobEvent, JobId, JobSpec, JobState};
 pub use pool::{ModelPool, PoolEntry, PooledInfer};
 pub use proto::{handle_line, serve_lines, store_stat_fields, Flow};
-pub use runner::{run_infer, run_infer_with, InferOutput, InferParams, InferRequest, RunnerEvent};
+pub use runner::{
+    run_infer, run_infer_keyed, run_infer_with, InferOutput, InferParams, InferRequest, RunnerEvent,
+};
 pub use service::{delta_key, FaultAction, FaultHook, Service, ServiceConfig};

@@ -56,6 +56,15 @@ pub struct PoolEntry {
     infer_loads: AtomicU64,
     /// Cache entries removed by [`PoolEntry::evict_infer`].
     infer_evictions: AtomicU64,
+    /// Packed reduced-precision parameter sets for finished
+    /// personalized jobs, keyed by (job key, precision) — repeated
+    /// `infer` requests against the same Done job reuse one
+    /// quantize+pack instead of re-packing per request (ISSUE 8
+    /// satellite; invalidated by `forget`).
+    packed_jobs: Mutex<BTreeMap<(String, Precision), Arc<crate::engine::PackedParams>>>,
+    /// [`PoolEntry::packed_for`] cache hits / misses (bench telemetry).
+    prepack_hits: AtomicU64,
+    prepack_misses: AtomicU64,
     /// The attached variant store, when serving personalized deltas
     /// (`serve --store`, DESIGN.md §Variant store).
     variant_store: Mutex<Option<Arc<VariantStore>>>,
@@ -77,6 +86,9 @@ impl PoolEntry {
             infer_cache: Mutex::new(BTreeMap::new()),
             infer_loads: AtomicU64::new(0),
             infer_evictions: AtomicU64::new(0),
+            packed_jobs: Mutex::new(BTreeMap::new()),
+            prepack_hits: AtomicU64::new(0),
+            prepack_misses: AtomicU64::new(0),
             variant_store: Mutex::new(None),
         }))
     }
@@ -220,6 +232,44 @@ impl PoolEntry {
             .collect()
     }
 
+    /// The cached packed parameter set for a finished job at one
+    /// precision, building (and caching) it on first use.  The builder
+    /// runs under the map lock: packs of one job are serialized, which
+    /// is exactly the exactly-once guarantee the cache exists for, and
+    /// pack time is small against a request round trip.
+    pub fn packed_for(
+        &self,
+        key: &str,
+        precision: Precision,
+        build: impl FnOnce() -> Result<crate::engine::PackedParams>,
+    ) -> Result<Arc<crate::engine::PackedParams>> {
+        let mut cache = self.packed_jobs.lock().unwrap();
+        if let Some(p) = cache.get(&(key.to_string(), precision)) {
+            self.prepack_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(p.clone());
+        }
+        self.prepack_misses.fetch_add(1, Ordering::Relaxed);
+        let packed = Arc::new(build()?);
+        cache.insert((key.to_string(), precision), packed.clone());
+        Ok(packed)
+    }
+
+    /// Drop every cached packed set for one job key (`forget`, or a
+    /// re-run job landing on the same key with new params).
+    pub fn invalidate_packed(&self, key: &str) {
+        self.packed_jobs.lock().unwrap().retain(|(k, _), _| k != key);
+    }
+
+    /// [`PoolEntry::packed_for`] cache hits since open.
+    pub fn prepack_hits(&self) -> u64 {
+        self.prepack_hits.load(Ordering::Relaxed)
+    }
+
+    /// [`PoolEntry::packed_for`] cache misses (= builds) since open.
+    pub fn prepack_misses(&self) -> u64 {
+        self.prepack_misses.load(Ordering::Relaxed)
+    }
+
     /// Completed engine builds since open (exactly-once telemetry).
     pub fn infer_loads(&self) -> u64 {
         self.infer_loads.load(Ordering::Relaxed)
@@ -281,6 +331,13 @@ impl ModelPool {
             .map_err(|e| anyhow!("loading artifact dir {}: {e:#}", key.display()))?;
         entries.insert(key, entry.clone());
         Ok(entry)
+    }
+
+    /// The entry for an artifact directory ONLY if already loaded —
+    /// cache-invalidation paths (`forget`) must not load a directory
+    /// just to clear caches that cannot exist.
+    pub fn peek(&self, dir: impl AsRef<Path>) -> Option<Arc<PoolEntry>> {
+        self.entries.lock().unwrap().get(dir.as_ref()).cloned()
     }
 
     /// Number of loaded artifact directories.
@@ -404,6 +461,31 @@ mod tests {
             }
             _ => panic!("demo variants must resolve to shared native engines"),
         }
+    }
+
+    #[test]
+    fn packed_job_cache_hits_and_invalidates() {
+        let dir = demo_dir("packcache");
+        let entry = PoolEntry::open(&dir).unwrap();
+        let pooled = entry
+            .shared_infer_at("vit_demo_vanilla", EngineKind::Auto, Precision::I8)
+            .unwrap();
+        let native = pooled.native().unwrap();
+        let params = entry.initial_params("vit_demo_vanilla").unwrap();
+        let a = entry
+            .packed_for("job-1", Precision::I8, || native.pack_params(&params, Precision::I8))
+            .unwrap();
+        let b = entry
+            .packed_for("job-1", Precision::I8, || native.pack_params(&params, Precision::I8))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second request must reuse the packed set");
+        assert_eq!((entry.prepack_hits(), entry.prepack_misses()), (1, 1));
+        entry.invalidate_packed("job-1");
+        let c = entry
+            .packed_for("job-1", Precision::I8, || native.pack_params(&params, Precision::I8))
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "forget must drop the cached pack");
+        assert_eq!(entry.prepack_misses(), 2);
     }
 
     #[test]

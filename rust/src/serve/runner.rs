@@ -212,6 +212,20 @@ pub fn run_infer_with(
     req: &InferRequest,
     source: InferParams<'_>,
 ) -> Result<InferOutput> {
+    run_infer_keyed(pool, req, source, None)
+}
+
+/// [`run_infer_with`] plus an optional cache key for the packed
+/// reduced-precision parameter set.  The service passes a finished
+/// job's key so repeated personalized requests reuse one quantize+pack
+/// ([`PoolEntry::packed_for`]); `None` (ad-hoc params) packs
+/// transiently as before.
+pub fn run_infer_keyed(
+    pool: &PoolEntry,
+    req: &InferRequest,
+    source: InferParams<'_>,
+    cache_key: Option<&str>,
+) -> Result<InferOutput> {
     let entry = pool.manifest.model(&req.model)?;
     if let InferParams::Full(p) = &source {
         if p.len() != entry.params_len {
@@ -298,7 +312,13 @@ pub fn run_infer_with(
             .ok_or_else(|| anyhow!("precision {} requires the native engine", req.precision))?;
         let logits = match &source {
             InferParams::Full(p) => {
-                native.infer_packed(&native.pack_params(p, req.precision)?, &x)?
+                let packed = match cache_key {
+                    Some(key) => pool.packed_for(key, req.precision, || {
+                        native.pack_params(p, req.precision)
+                    })?,
+                    None => std::sync::Arc::new(native.pack_params(p, req.precision)?),
+                };
+                native.infer_packed(&packed, &x)?
             }
             InferParams::Base => native.infer_quantized(&x)?,
             InferParams::Delta(rec) => {
@@ -306,8 +326,15 @@ pub fn run_infer_with(
                 // retained-full path would — the packed views are
                 // bit-identical because the inputs are.
                 let base = pool.initial_params(&req.model)?;
-                let p = rec.apply(&base)?;
-                native.infer_packed(&native.pack_params(&p, req.precision)?, &x)?
+                let packed = match cache_key {
+                    Some(key) => pool.packed_for(key, req.precision, || {
+                        native.pack_params(&rec.apply(&base)?, req.precision)
+                    })?,
+                    None => {
+                        std::sync::Arc::new(native.pack_params(&rec.apply(&base)?, req.precision)?)
+                    }
+                };
+                native.infer_packed(&packed, &x)?
             }
         };
         crate::engine::ops::argmax_rows(&logits, entry.classes)

@@ -593,17 +593,27 @@ impl Service {
     /// param vector (or one delta record) forever.  Returns false for
     /// unknown ids and jobs that are still queued/running.
     pub fn forget(&self, id: JobId) -> bool {
-        let persisted = {
+        let (persisted, dir) = {
             let mut jobs = self.shared.jobs.lock().unwrap();
             match jobs.get(&id.0) {
                 Some(j) if j.state.is_terminal() => {
                     let persisted = j.spec.persist_delta;
+                    let dir = j
+                        .spec
+                        .artifacts
+                        .clone()
+                        .unwrap_or_else(|| self.shared.default_artifacts.clone());
                     jobs.remove(&id.0);
-                    persisted
+                    (persisted, dir)
                 }
                 _ => return false,
             }
         };
+        // Drop the job's cached packed inference params (if its pool
+        // entry is even loaded) — a forgotten job must pin nothing.
+        if let Some(entry) = self.shared.pool.peek(&dir) {
+            entry.invalidate_packed(&delta_key(id));
+        }
         if persisted {
             if let Some(store) = &self.shared.store {
                 // Best-effort: a Failed delta job never wrote a record,
@@ -690,20 +700,34 @@ impl Service {
         let entry = self.shared.pool.open(&dir)?;
         match job {
             None => runner::run_infer_with(&entry, req, InferParams::Base),
-            Some(id) => match self.job_source_for_model(id, &req.model, &dir)? {
-                JobSource::Full(p) => {
-                    runner::run_infer_with(&entry, req, InferParams::Full(&p))
+            Some(id) => {
+                // A job's key doubles as the packed-params cache key:
+                // repeated reduced-precision requests against one Done
+                // job quantize+pack once (invalidated by `forget`).
+                let cache_key = delta_key(id);
+                match self.job_source_for_model(id, &req.model, &dir)? {
+                    JobSource::Full(p) => runner::run_infer_keyed(
+                        &entry,
+                        req,
+                        InferParams::Full(&p),
+                        Some(&cache_key),
+                    ),
+                    JobSource::Delta(key) => {
+                        let store = self.shared.store.as_ref().ok_or_else(|| {
+                            anyhow!("job {id} persisted a delta but no store is attached")
+                        })?;
+                        // `get` reloads from disk if the record was paged
+                        // out — eviction must never fail a request.
+                        let rec = store.get(&key)?;
+                        runner::run_infer_keyed(
+                            &entry,
+                            req,
+                            InferParams::Delta(&rec),
+                            Some(&cache_key),
+                        )
+                    }
                 }
-                JobSource::Delta(key) => {
-                    let store = self.shared.store.as_ref().ok_or_else(|| {
-                        anyhow!("job {id} persisted a delta but no store is attached")
-                    })?;
-                    // `get` reloads from disk if the record was paged
-                    // out — eviction must never fail a request.
-                    let rec = store.get(&key)?;
-                    runner::run_infer_with(&entry, req, InferParams::Delta(&rec))
-                }
-            },
+            }
         }
     }
 

@@ -1,0 +1,47 @@
+//! A counting wrapper around the system allocator.
+//!
+//! The bench's `passes` section pins "per-step heap allocations in
+//! steady state are ~zero" with a real number: `wasi-train`'s `main.rs`
+//! installs [`CountingAllocator`] as the `#[global_allocator]`, and the
+//! bench reads [`allocation_count`] around a timed region.  The counter
+//! is a single relaxed atomic increment per `alloc` — cheap enough to
+//! leave on unconditionally, and `dealloc`/`realloc` pass straight
+//! through.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator plus a process-wide allocation counter.
+pub struct CountingAllocator;
+
+// SAFETY: defers entirely to `System`; the counter does not allocate.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Heap allocations performed by this process so far.  Monotone; bench
+/// code diffs two reads around a region.  Reads 0 forever unless the
+/// binary installed [`CountingAllocator`] (unit tests run under the
+/// default allocator, so tests must not assert non-zero counts).
+pub fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}

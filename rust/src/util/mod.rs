@@ -4,6 +4,7 @@
 //! clap / criterion / rayon / proptest — each is implemented from
 //! scratch at the size this project needs.
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod proptest;

@@ -1,0 +1,275 @@
+//! Pass-pipeline pins (tier-1, artifact-free): the optimization passes
+//! (`engine/passes.rs` — frozen-subgraph folding, epilogue fusion,
+//! arena-planned buffers, pre-packed weight panels) must be invisible
+//! to the numerics.  Every pin here is BITWISE: the optimized executor
+//! runs the same kernels in the same order on the same values as the
+//! unoptimized one, so `--passes` is pure wall-clock/allocation — never
+//! a results knob.
+//!
+//! What is pinned:
+//! * training trajectories (per-step logits AND parameters) are
+//!   bit-identical between `--passes all` and `--passes none`, on both
+//!   the dense and the factored (WASI) demo variant, at f32 and under
+//!   bf16 weight storage, and with each pass disabled individually;
+//! * gradients out of the arena-planned backward are bit-identical to
+//!   the unoptimized backward, and match finite differences;
+//! * inference logits are bit-identical across every pass subset at
+//!   f32, and across {panels, folding} on/off at bf16 and int8;
+//! * the liveness checker refuses an arena layout with overlapping
+//!   live ranges (the safety net under the planner's unsafe views);
+//! * `PassSet` parsing/printing round-trips and `without` subsets work.
+//!
+//! Tests construct executors with explicit `new_with`/`new_infer_with`
+//! and records with `pack_with` — never `set_passes` (process-global,
+//! and the harness runs tests in parallel).
+
+use std::path::PathBuf;
+
+use wasi_train::data::synth::VisionTask;
+use wasi_train::engine::demo::{write_demo_artifacts, DemoConfig};
+use wasi_train::engine::passes::{assign_offsets, check_disjoint, ArenaLayout, Liveness, PassSet};
+use wasi_train::engine::{GraphExecutor, LayerGraph, PackedParams};
+use wasi_train::precision::{round_bf16_inplace, Precision};
+use wasi_train::runtime::{Manifest, ModelEntry};
+
+const VANILLA: &str = "vit_demo_vanilla";
+const WASI: &str = "vit_demo_wasi_eps80";
+
+fn demo_manifest(tag: &str) -> (PathBuf, Manifest) {
+    let dir = std::env::temp_dir().join(format!("wasi_passes_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    (dir, manifest)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Drive `steps` full training steps exactly like
+/// `NativeModelEngine::step` and return the bit pattern of every
+/// per-step logit vector and parameter vector.
+fn trajectory(entry: &ModelEntry, ps: PassSet, steps: usize, bf16: bool) -> Vec<u32> {
+    let graph = LayerGraph::from_entry(entry).unwrap();
+    let mut exec = GraphExecutor::new_with(graph, entry, ps).unwrap();
+    let mut params = entry.load_params().unwrap();
+    if bf16 {
+        round_bf16_inplace(&mut params);
+    }
+    let mut grads = vec![0.0f32; params.len()];
+    let side = entry.image_side().unwrap();
+    let mut task = VisionTask::new("traj", entry.classes, side, 0.5, 4, 9);
+    let mut out = Vec::new();
+    for _ in 0..steps {
+        let (x, y, _) = task.batch_onehot(entry.batch);
+        let logits = exec.forward_train(&params, &x).unwrap();
+        let (_, _, dlogits) = exec.loss_and_grad(&logits, &y);
+        grads.fill(0.0);
+        exec.backward(&params, &dlogits, &mut grads).unwrap();
+        exec.update(&mut params, &grads, 0.05);
+        if bf16 {
+            round_bf16_inplace(&mut params);
+        }
+        out.extend(bits(&logits));
+        out.extend(bits(&params));
+    }
+    out
+}
+
+#[test]
+fn train_trajectory_bit_identical_across_passes() {
+    let (_dir, m) = demo_manifest("traj");
+    for model in [VANILLA, WASI] {
+        let entry = m.model(model).unwrap();
+        let want = trajectory(entry, PassSet::none(), 5, false);
+        assert_eq!(
+            trajectory(entry, PassSet::all(), 5, false),
+            want,
+            "{model}: optimized trajectory diverged from unoptimized"
+        );
+        for pass in ["fold", "fuse", "arena", "prepack"] {
+            let ps = PassSet::all().without(pass).unwrap();
+            assert_eq!(
+                trajectory(entry, ps, 5, false),
+                want,
+                "{model}: trajectory diverged with {pass} disabled"
+            );
+        }
+    }
+}
+
+#[test]
+fn train_trajectory_bit_identical_under_bf16_storage() {
+    let (_dir, m) = demo_manifest("trajbf16");
+    let entry = m.model(WASI).unwrap();
+    assert_eq!(
+        trajectory(entry, PassSet::all(), 5, true),
+        trajectory(entry, PassSet::none(), 5, true),
+        "bf16-rounded trajectory diverged across passes"
+    );
+}
+
+#[test]
+fn gradients_bit_identical_and_match_finite_differences() {
+    let (_dir, m) = demo_manifest("fd");
+    let entry = m.model(VANILLA).unwrap();
+    let params = entry.load_params().unwrap();
+    let mut task = VisionTask::new("fd", entry.classes, 16, 0.5, 4, 3);
+    let (x, y, _) = task.batch_onehot(entry.batch);
+
+    let grads_with = |ps: PassSet| -> (GraphExecutor, Vec<f32>) {
+        let graph = LayerGraph::from_entry(entry).unwrap();
+        let mut exec = GraphExecutor::new_with(graph, entry, ps).unwrap();
+        let logits = exec.forward_train(&params, &x).unwrap();
+        let (_, _, dlogits) = exec.loss_and_grad(&logits, &y);
+        let mut grads = vec![0.0f32; entry.params_len];
+        exec.backward(&params, &dlogits, &mut grads).unwrap();
+        (exec, grads)
+    };
+    let (mut exec, grads) = grads_with(PassSet::all());
+    let (_, reference) = grads_with(PassSet::none());
+    assert_eq!(
+        bits(&grads),
+        bits(&reference),
+        "arena-planned backward diverged from the unoptimized backward"
+    );
+
+    // FD through the ARENA-PLANNED executor itself: loss_of re-enters
+    // the planned forward, so the probe exercises the optimized path.
+    let probes = [
+        ("embed.w", 3usize),
+        ("blocks.0.mlp.fc1.w", 7),
+        ("blocks.1.attn.proj.w", 11),
+        ("blocks.0.ln2.g", 2),
+        ("cls", 5),
+        ("pos", 13),
+        ("head.w", 1),
+    ];
+    let h = 1e-2f32;
+    let mut loss_of = |p: &[f32]| -> f32 {
+        let logits = exec.forward_train(p, &x).unwrap();
+        exec.loss_and_grad(&logits, &y).0
+    };
+    for (name, kidx) in probes {
+        let spec = {
+            let s = exec.plan().spec(name).unwrap();
+            (s.offset, s.numel())
+        };
+        let idx = spec.0 + kidx.min(spec.1 - 1);
+        let mut up = params.clone();
+        up[idx] += h;
+        let lp = loss_of(&up);
+        let mut dn = params.clone();
+        dn[idx] -= h;
+        let lm = loss_of(&dn);
+        let fd = (lp - lm) / (2.0 * h);
+        let an = grads[idx];
+        assert!(
+            (fd - an).abs() < 2e-2 * fd.abs().max(1.0),
+            "{name}[{kidx}]: fd {fd} vs analytic {an}"
+        );
+    }
+}
+
+#[test]
+fn infer_logits_bit_identical_across_pass_subsets() {
+    let (_dir, m) = demo_manifest("infer");
+    for model in [VANILLA, WASI] {
+        let entry = m.model(model).unwrap();
+        let params = entry.load_params().unwrap();
+        let side = entry.image_side().unwrap();
+        let mut task = VisionTask::new("inf", entry.classes, side, 0.5, 4, 17);
+        let (x, _, _) = task.batch_onehot(entry.batch);
+        let infer_with = |ps: PassSet| -> Vec<u32> {
+            let graph = LayerGraph::from_entry(entry).unwrap();
+            let exec = GraphExecutor::new_infer_with(graph, entry, ps).unwrap();
+            bits(&exec.infer(&params, &x, entry.batch).unwrap())
+        };
+        let want = infer_with(PassSet::none());
+        assert_eq!(infer_with(PassSet::all()), want, "{model}: all vs none");
+        for pass in ["fold", "fuse", "arena", "prepack"] {
+            let ps = PassSet::all().without(pass).unwrap();
+            assert_eq!(infer_with(ps), want, "{model}: without {pass}");
+        }
+    }
+}
+
+#[test]
+fn packed_infer_bit_identical_with_and_without_panels() {
+    let (_dir, m) = demo_manifest("panels");
+    for model in [VANILLA, WASI] {
+        let entry = m.model(model).unwrap();
+        let params = entry.load_params().unwrap();
+        let side = entry.image_side().unwrap();
+        let mut task = VisionTask::new("pan", entry.classes, side, 0.5, 4, 23);
+        let (x, _, _) = task.batch_onehot(entry.batch);
+        let exec_all = GraphExecutor::new_infer_with(
+            LayerGraph::from_entry(entry).unwrap(),
+            entry,
+            PassSet::all(),
+        )
+        .unwrap();
+        let exec_none = GraphExecutor::new_infer_with(
+            LayerGraph::from_entry(entry).unwrap(),
+            entry,
+            PassSet::none(),
+        )
+        .unwrap();
+        for prec in [Precision::Bf16, Precision::I8] {
+            let on = PackedParams::pack_with(entry, &params, prec, PassSet::all()).unwrap();
+            let off = PackedParams::pack_with(entry, &params, prec, PassSet::none()).unwrap();
+            assert!(on.panel_count() > 0, "{model}@{prec}: no panels packed");
+            assert_eq!(off.panel_count(), 0, "{model}@{prec}: panels despite none");
+            let want = bits(&exec_none.infer_packed(&off, &x, entry.batch).unwrap());
+            for (tag, exec, packed) in [
+                ("planned+panels", &exec_all, &on),
+                ("planned+repack", &exec_all, &off),
+                ("unplanned+panels", &exec_none, &on),
+            ] {
+                assert_eq!(
+                    bits(&exec.infer_packed(packed, &x, entry.batch).unwrap()),
+                    want,
+                    "{model}@{prec}: {tag} diverged from unplanned+repack"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn liveness_rejects_overlapping_arena_layout() {
+    let mut lv = Liveness::new();
+    let a = lv.alloc(0, 64);
+    lv.touch(a, 3);
+    let b = lv.alloc(1, 32);
+    lv.touch(b, 2);
+    let c = lv.alloc(4, 16); // born after `a` and `b` die: may share
+    lv.touch(c, 5);
+    assert_eq!(lv.sum_elems(), 112);
+
+    let layout = assign_offsets(lv.intervals());
+    check_disjoint(lv.intervals(), &layout).unwrap();
+    assert!(layout.total >= 96, "a and b are simultaneously live");
+    assert!(layout.total < 112, "c must reuse freed space");
+
+    // Hand-corrupt the layout so `a` and `b` collide: the checker that
+    // guards the executors' unsafe arena views must refuse it.
+    let bad = ArenaLayout { offsets: vec![0, 0, layout.total], total: layout.total + 16 };
+    let err = check_disjoint(lv.intervals(), &bad).unwrap_err().to_string();
+    assert!(err.contains("overlap"), "unexpected error: {err}");
+}
+
+#[test]
+fn passset_parse_display_round_trips() {
+    assert_eq!(PassSet::parse("all").unwrap(), PassSet::all());
+    assert_eq!(PassSet::parse("none").unwrap(), PassSet::none());
+    let ps = PassSet::parse("arena,prepack").unwrap();
+    assert!(ps.arena() && ps.prepack() && !ps.fold() && !ps.fuse());
+    assert_eq!(PassSet::parse(&ps.to_string()).unwrap(), ps);
+    assert_eq!(PassSet::all().to_string(), "all");
+    assert_eq!(PassSet::none().to_string(), "none");
+    let sub = PassSet::all().without("arena").unwrap();
+    assert!(!sub.arena() && sub.fold() && sub.fuse() && sub.prepack());
+    assert!(PassSet::parse("turbo").is_err());
+}

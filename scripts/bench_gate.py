@@ -27,7 +27,13 @@ Rules
   variant-store paging sweep) must report ``reload_bit_identical: true``
   with nonzero ``evictions`` and ``compression_ratio >= 10`` — a
   serving-invariant violation or a lossy/underpaged store run fails the
-  gate even when every wallclock is in range.  Every missing
+  gate even when every wallclock is in range.  The ``passes`` section
+  (optimization-pass pipeline) must report ``arena_reuse_ratio >= 1``
+  and an optimized executor that allocates no more per step/infer than
+  the unoptimized one — hard failures; its allocation counts are
+  additionally budgeted at 10% + 4 against the baseline and
+  ``prepack_infer_speedup`` must exceed 1.0, both riding the
+  provisional downgrade like wallclock.  Every missing
   requirement is reported by its exact key path
   (``$.soak.invariant_violations: required key missing``), never as a
   raw KeyError traceback.
@@ -187,6 +193,35 @@ def check_sections(fresh, errors):
                 f"$.store.compression_ratio must be >= 10, got {ratio}", errors)
     for key in ("store.hit_rate", "store.delta_bytes", "store.full_bytes"):
         lookup(fresh, key, errors)
+    # The passes section (optimization-pass pipeline, DESIGN.md §Pass
+    # pipeline) must show the liveness plan actually sharing storage and
+    # the planned executor allocating no more per step than the
+    # unoptimized one.  These are machine-independent facts about the
+    # code, so they fail hard even on a provisional baseline.
+    reuse = lookup(fresh, "passes.arena_reuse_ratio", errors)
+    if not isinstance(reuse, MissingKey):
+        require(isinstance(reuse, (int, float)) and reuse >= 1.0,
+                f"$.passes.arena_reuse_ratio must be >= 1, got {reuse}", errors)
+    for opt_key, ref_key in (
+        ("passes.allocations_per_step_optimized",
+         "passes.allocations_per_step_unoptimized"),
+        ("passes.allocations_per_infer_optimized",
+         "passes.allocations_per_infer_unoptimized"),
+    ):
+        opt = lookup(fresh, opt_key, errors)
+        ref = lookup(fresh, ref_key, errors)
+        if not isinstance(opt, MissingKey) and not isinstance(ref, MissingKey):
+            require(
+                isinstance(opt, (int, float)) and isinstance(ref, (int, float))
+                and opt <= ref,
+                f"$.{opt_key}: optimized executor allocates more than the "
+                f"unoptimized one ({opt} vs {ref})",
+                errors,
+            )
+    for key in ("passes.arena_bytes", "passes.sum_buffer_bytes",
+                "passes.prepack_panel_bytes", "passes.prepack_cache_hit_rate",
+                "passes.prepack_infer_speedup"):
+        lookup(fresh, key, errors)
 
 
 def main():
@@ -237,6 +272,27 @@ def main():
                 f"{path}: {f:.4f} vs baseline {b:.4f} ({ratio:.2f}x, "
                 f"allowed [{lo:.2f}, {hi:.2f}])"
             )
+
+    # Allocation counts are not wallclock, but they are runner-neutral
+    # code-version facts: the fresh record must stay within 10% (plus a
+    # small absolute grace for allocator noise) of the baseline.  Routed
+    # through the provisional downgrade like the timings so a seeded
+    # baseline warns instead of failing.  The prepack speedup is
+    # timing-derived and rides the same path: panels must beat
+    # dequantize-on-the-fly.
+    for key in ("passes.allocations_per_step_optimized",
+                "passes.allocations_per_infer_optimized"):
+        b, f = lookup(base, key), lookup(fresh, key)
+        if isinstance(b, (int, float)) and isinstance(f, (int, float)) \
+                and f > b * 1.10 + 4:
+            violations.append(
+                f"$.{key}: {f:.0f} allocations vs baseline {b:.0f} "
+                f"(budget 1.10x + 4)")
+    spd = lookup(fresh, "passes.prepack_infer_speedup")
+    if isinstance(spd, (int, float)) and spd <= 1.0:
+        violations.append(
+            f"$.passes.prepack_infer_speedup: {spd:.3f} — prepacked panels "
+            "must beat dequantize-on-the-fly")
 
     status = 0
     if errors:

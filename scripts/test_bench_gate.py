@@ -94,6 +94,28 @@ def baseline_record():
             "reload_p95_ms": 0.8,
             "reload_bit_identical": True,
         },
+        "passes": {
+            "enabled": "fold,fuse,arena,prepack",
+            "model": "vit_demo_vanilla",
+            "arena_bytes": 400000,
+            "sum_buffer_bytes": 1200000,
+            "arena_reuse_ratio": 3.0,
+            "intervals": 60,
+            "allocations_per_step_optimized": 8,
+            "allocations_per_step_unoptimized": 80,
+            "allocations_per_infer_optimized": 3,
+            "allocations_per_infer_unoptimized": 20,
+            "train_step_optimized_ms": 8.0,
+            "train_step_unoptimized_ms": 9.0,
+            "infer_optimized_ms": 1.5,
+            "infer_unoptimized_ms": 1.8,
+            "infer_prepacked_ms": 1.8,
+            "infer_repack_ms": 2.2,
+            "prepack_infer_speedup": 1.2,
+            "prepack_panel_count": 14,
+            "prepack_panel_bytes": 120000,
+            "prepack_cache_hit_rate": 0.875,
+        },
         "nodes": [
             {"node": "dense:embed", "fwd_ms_per_step": 0.2, "bwd_ms_per_step": 0.3},
         ],
@@ -213,6 +235,70 @@ def test_store_compression_floor_is_enforced(tmp_path):
     res = run_gate(tmp_path, base, fresh)
     assert res.returncode == 1, res.stdout + res.stderr
     assert "$.store.compression_ratio must be >= 10, got 7.0" in res.stdout
+
+
+def test_missing_passes_section_names_key_path(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    del fresh["passes"]
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.passes" in res.stdout
+    assert "KeyError" not in res.stdout + res.stderr
+    assert "Traceback" not in res.stderr
+
+
+def test_optimized_executor_may_not_allocate_more(tmp_path):
+    # Self-relative invariant inside the fresh record: the arena-planned
+    # executor allocating MORE than the unoptimized one is a hard fail,
+    # provisional baseline or not.
+    base = baseline_record()
+    base["provisional"] = True
+    fresh = copy.deepcopy(baseline_record())
+    fresh["passes"]["allocations_per_step_optimized"] = 200
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "optimized executor allocates more" in res.stdout
+
+
+def test_arena_reuse_ratio_floor(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["passes"]["arena_reuse_ratio"] = 0.8
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.passes.arena_reuse_ratio must be >= 1" in res.stdout
+
+
+def test_allocation_regression_vs_baseline_fails(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    # 8 -> 40 allocations/step: way past the 10% + 4 budget.
+    fresh["passes"]["allocations_per_step_optimized"] = 40
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.passes.allocations_per_step_optimized" in res.stdout
+    assert "budget 1.10x + 4" in res.stdout
+
+
+def test_allocation_regression_warns_on_provisional_baseline(tmp_path):
+    base = baseline_record()
+    base["provisional"] = True
+    fresh = copy.deepcopy(baseline_record())
+    fresh["passes"]["allocations_per_step_optimized"] = 40
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "WARN" in res.stdout
+
+
+def test_prepack_speedup_must_exceed_one(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["passes"]["prepack_infer_speedup"] = 0.9
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.passes.prepack_infer_speedup" in res.stdout
+    assert "must beat dequantize-on-the-fly" in res.stdout
 
 
 def test_wrong_section_type_is_actionable_not_traceback(tmp_path):
