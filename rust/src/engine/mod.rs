@@ -130,7 +130,7 @@ pub trait InferEngine: Send + Sync {
 }
 
 /// Engine selection policy (the CLI's `--engine {auto|hlo|native}`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum EngineKind {
     /// Prefer HLO when the runtime can execute model HLO; fall back to
     /// the native full-model engine otherwise.

@@ -8,17 +8,24 @@
 //! {f32, bf16, i8} inference precisions (latency, weight bytes, top-1
 //! agreement with f32), pages a Zipf population of per-user subspace
 //! deltas through the variant store (compression, hit rate,
-//! evict→reload latency + bit-identity), and emits the machine-readable
+//! evict→reload latency + bit-identity), drives the socket front-end
+//! at 10/100/1000 in-flight clients (solo vs micro-batched — the
+//! batched/solo throughput ratio joins the gate), and emits the
+//! machine-readable
 //! `BENCH_native.json` that feeds the repo's perf record
 //! (EXPERIMENTS.md §Perf) and the CI `bench-gate` comparison against
 //! the committed `BENCH_baseline.json`.  Kernels are bit-deterministic
 //! across thread counts AND SIMD backends, so both sweeps measure
 //! wall-clock only.
 
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::FinetuneConfig;
 use crate::data::synth::VisionTask;
@@ -27,9 +34,10 @@ use crate::engine::{
     train_engine, EngineKind, InferEngine, NativeInferEngine, NativeModelEngine, TrainEngine,
 };
 use crate::linalg::simd;
+use crate::net::{read_frame, serve_listener, write_frame, NetConfig, MAX_FRAME_BYTES};
 use crate::precision::Precision;
 use crate::runtime::{Manifest, ModelEntry, Runtime};
-use crate::serve::{JobSpec, Service, ServiceConfig};
+use crate::serve::{InferRequest, JobSpec, Service, ServiceConfig};
 use crate::scenario::{run_soak, SoakConfig};
 use crate::util::json::{arr, finite_num, num, obj, str as jstr, Json};
 use crate::util::stats::percentile;
@@ -265,6 +273,195 @@ fn bench_serve(dir: &Path, models: &[String], quick: bool) -> Result<Vec<ServeAr
         });
     }
     Ok(arms)
+}
+
+/// One high-concurrency socket arm's measurements.
+struct NetArm {
+    inflight: usize,
+    mode: &'static str,
+    requests: usize,
+    connections: usize,
+    total_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+/// One bench client: a pipelined framed connection holding `depth`
+/// requests in flight, matching responses back to their send times by
+/// the framing-layer id (responses may return out of order — the
+/// dispatcher pool makes no ordering promise across requests).
+fn run_net_client(
+    addr: SocketAddr,
+    model: &str,
+    count: usize,
+    depth: usize,
+    seed0: u64,
+) -> Result<Vec<f64>> {
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut sent_at: HashMap<usize, Instant> = HashMap::new();
+    let mut latencies = Vec::with_capacity(count);
+    let mut next = 0usize;
+    while latencies.len() < count {
+        while next < count && sent_at.len() < depth {
+            // Seeds vary per request (distinct synthetic inputs); the
+            // batch key deliberately ignores them, so concurrent
+            // requests stay coalescible in the batched arm.
+            let line = obj(vec![
+                ("cmd", jstr("infer")),
+                ("model", jstr(model.to_string())),
+                ("engine", jstr("native")),
+                ("seed", num((seed0 + next as u64) as f64)),
+                ("id", num(next as f64)),
+            ])
+            .to_string();
+            write_frame(&mut writer, line.as_bytes())?;
+            sent_at.insert(next, Instant::now());
+            next += 1;
+        }
+        let payload = read_frame(&mut reader, MAX_FRAME_BYTES)?
+            .ok_or_else(|| anyhow!("server closed mid-bench"))?;
+        let text = String::from_utf8_lossy(&payload);
+        let resp = Json::parse(text.trim()).map_err(|e| anyhow!("bad bench response: {e}"))?;
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            return Err(anyhow!("bench infer failed: {}", resp.to_string()));
+        }
+        let id = resp
+            .get("id")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("bench response without an id"))?;
+        let t0 = sent_at
+            .remove(&id)
+            .ok_or_else(|| anyhow!("bench response for unknown id {id}"))?;
+        latencies.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(latencies)
+}
+
+/// Socket front-end bench (DESIGN.md §Network front-end): p50/p99
+/// infer latency and aggregate throughput at 10/100/1000 in-flight
+/// over real loopback connections, solo (batching disabled) vs
+/// micro-batched, both front-ends over ONE shared single-worker
+/// service so the arms differ only in coalescing.  Batching is
+/// bit-identical to solo serving (tests/net.rs), so the arms measure
+/// wall-clock only; the batched/solo throughput ratio at 100 in-flight
+/// joins the gate.
+fn bench_net(dir: &Path, model: &str, quick: bool) -> Result<(Json, String)> {
+    set_num_threads(0);
+    let svc = Arc::new(Service::start(ServiceConfig::new(dir.to_path_buf()).with_workers(1))?);
+    // Warm the pool so every arm measures serving, not the first load.
+    let warm = InferRequest {
+        model: model.to_string(),
+        engine: EngineKind::Native,
+        precision: Precision::F32,
+        seed: 1,
+        x: None,
+    };
+    svc.infer(None, &warm, None)?;
+
+    let levels: [usize; 3] = [10, 100, 1000];
+    let mut arms: Vec<NetArm> = Vec::new();
+    let mut batched = (0u64, 0u64);
+    for (mode, window_us, max_batch) in [("solo", 0u64, 1usize), ("batched", 400, 32)] {
+        let net_cfg = NetConfig {
+            listen: "127.0.0.1:0".into(),
+            max_inflight: 4096,
+            queue_cap: 8192,
+            batch_window_us: window_us,
+            max_batch,
+            // One dispatcher per potential window-mate: batch size is
+            // bounded by concurrent batcher entrants.
+            dispatchers: 64,
+        };
+        let mut handle = serve_listener(svc.clone(), net_cfg)?;
+        let addr = handle.addr();
+        for &level in &levels {
+            let requests =
+                if quick { (level * 2).clamp(60, 1200) } else { (level * 4).clamp(200, 4000) };
+            let conns = level.min(20);
+            let depth = level.div_ceil(conns);
+            let t0 = Instant::now();
+            let latencies: Vec<f64> = std::thread::scope(|s| {
+                let clients: Vec<_> = (0..conns)
+                    .map(|c| {
+                        let count = requests / conns + usize::from(c < requests % conns);
+                        let seed0 = 1000 + (c as u64) * 10_000;
+                        s.spawn(move || run_net_client(addr, model, count, depth, seed0))
+                    })
+                    .collect();
+                clients
+                    .into_iter()
+                    .map(|h| h.join().expect("bench client thread"))
+                    .collect::<Result<Vec<Vec<f64>>>>()
+                    .map(|v| v.into_iter().flatten().collect())
+            })?;
+            let total_s = t0.elapsed().as_secs_f64();
+            arms.push(NetArm {
+                inflight: level,
+                mode,
+                requests,
+                connections: conns,
+                total_s,
+                p50_ms: percentile(&latencies, 50.0),
+                p99_ms: percentile(&latencies, 99.0),
+            });
+        }
+        if mode == "batched" {
+            let stats = handle.stats();
+            batched = (stats.batches(), stats.infer_batched());
+        }
+        handle.shutdown();
+    }
+    svc.shutdown();
+
+    let rate = |mode: &str| {
+        let a = arms
+            .iter()
+            .find(|a| a.mode == mode && a.inflight == 100)
+            .expect("both modes run the 100-in-flight level");
+        a.requests as f64 / a.total_s
+    };
+    let ratio = rate("batched") / rate("solo");
+    let (batches, batched_requests) = batched;
+    let mean_batch = batched_requests as f64 / (batches as f64).max(1.0);
+    let json = obj(vec![
+        ("model", jstr(model.to_string())),
+        ("workers", num(1.0)),
+        ("dispatchers", num(64.0)),
+        (
+            "arms",
+            arr(arms.iter().map(|a| {
+                obj(vec![
+                    ("inflight", num(a.inflight as f64)),
+                    ("mode", jstr(a.mode)),
+                    ("requests", num(a.requests as f64)),
+                    ("connections", num(a.connections as f64)),
+                    ("total_seconds", num(a.total_s)),
+                    ("throughput_rps", num(a.requests as f64 / a.total_s)),
+                    ("p50_ms", num(a.p50_ms)),
+                    ("p99_ms", num(a.p99_ms)),
+                ])
+            })),
+        ),
+        (
+            "batched",
+            obj(vec![
+                ("window_us", num(400.0)),
+                ("max_batch", num(32.0)),
+                ("batches", num(batches as f64)),
+                ("batched_requests", num(batched_requests as f64)),
+                ("mean_batch", num(mean_batch)),
+            ]),
+        ),
+        ("batched_vs_solo_throughput_at_100", num(ratio)),
+    ]);
+    let summary = format!(
+        "net: solo vs micro-batched over loopback at 10/100/1000 in-flight, \
+         batched/solo throughput at 100 in-flight {ratio:.2}x, \
+         mean batch {mean_batch:.1} across {batches} stacked call(s)\n"
+    );
+    Ok((json, summary))
 }
 
 /// Variant-store paging bench (DESIGN.md §Variant store): N synthetic
@@ -704,6 +901,11 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
     let (passes_json, passes_summary) =
         bench_passes(&dir, &manifest, &names, &entry, steps, infer_reps)?;
 
+    // 4e. the socket front-end: p50/p99 infer latency and throughput at
+    //     10/100/1000 in-flight over real loopback connections, solo vs
+    //     micro-batched over one shared single-worker service.
+    let (net_json, net_summary) = bench_net(&dir, &model, cfg.quick)?;
+
     // 5. the HLO engine on the same artifact set (expected unavailable
     //    offline: the demo set ships no train artifact, and without
     //    PJRT the runtime cannot execute model HLO).
@@ -748,6 +950,7 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         ("soak", soak_json),
         ("store", store_json),
         ("passes", passes_json),
+        ("net", net_json),
         ("nodes", node_json),
     ]);
     std::fs::write(&cfg.out, out_json.to_string())
@@ -819,6 +1022,7 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
     ));
     body.push_str(&store_summary);
     body.push_str(&passes_summary);
+    body.push_str(&net_summary);
     match (&node_table, &profiled) {
         (Some(table), _) => {
             body.push('\n');

@@ -27,7 +27,11 @@
 //! each artifact set once, a [`serve::Service`] schedules concurrent
 //! fine-tuning jobs over fixed worker threads with cancellation and
 //! streamed per-step events, and `wasi-train serve` exposes it all as
-//! a JSON-lines session protocol.  The blocking
+//! a JSON-lines session protocol.  The same protocol also serves many
+//! concurrent clients over TCP (`serve --listen`): the [`net`] module
+//! adds length-prefix framing, admission control, and cross-request
+//! micro-batching of `infer` calls — coalesced requests run as one
+//! stacked engine call, bit-identical to solo serving.  The blocking
 //! [`coordinator::Session`] API and the CLI are thin clients of the
 //! same core.  The [`scenario`] harness (`wasi-train soak`) drives
 //! that core with replayed or synthesized adversarial workloads —
@@ -62,6 +66,7 @@ pub mod device;
 pub mod engine;
 pub mod eval;
 pub mod linalg;
+pub mod net;
 pub mod precision;
 pub mod runtime;
 pub mod scenario;

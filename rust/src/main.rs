@@ -73,13 +73,21 @@ fn usage() -> String {
         "            runs as one job through the same service core as `serve`",
         "serve:      --workers N (default 2) -- long-lived JSON-lines service:",
         "            {\"cmd\":\"submit\"|\"status\"|\"events\"|\"infer\"|\"cancel\"|\"forget\"",
-        "             |\"store\"|\"store-stats\"|\"shutdown\"} per line on stdin; training",
-        "            jobs queue onto worker threads, infer requests answer inline",
-        "            (DESIGN.md \u{a7}serve)",
+        "             |\"store\"|\"store-stats\"|\"stats\"|\"shutdown\"} per line on stdin;",
+        "            training jobs queue onto worker threads, infer requests answer",
+        "            inline (DESIGN.md \u{a7}serve)",
         "            --store DIR attaches a variant store: submit accepts",
         "            \"persist\":\"delta\" and finished jobs keep only their subspace",
         "            factors (DESIGN.md \u{a7}Variant store)",
         "            --memory-budget-mb N caps the resident delta set (0 = unbounded)",
+        "            --listen ADDR serves the same protocol over TCP instead of",
+        "            stdio (length-prefix framed, many concurrent connections;",
+        "            DESIGN.md \u{a7}Network front-end), with admission control",
+        "            (--max-inflight N, default 64; --queue-cap N, default 256 --",
+        "            overload answers {\"ok\":false,\"code\":\"overloaded\"} in-band) and",
+        "            cross-request infer micro-batching (--batch-window-us U,",
+        "            default 200; --max-batch N, default 8; bit-identical to solo",
+        "            serving); --stdio forces the stdio session explicitly",
         "soak:       [--quick] --events N --seconds S --seed S --workers N",
         "            --faults LIST (cancel-storm,worker-death,evict,malformed,evict-budget|all|none)",
         "            --trace FILE (replay a recorded trace) --record FILE (save it)",
@@ -87,6 +95,10 @@ fn usage() -> String {
         "            --store DIR --memory-budget-mb N (variant store for delta jobs;",
         "            auto-provisioned under a tight budget when --faults includes",
         "            evict-budget)",
+        "            --listen routes infer traffic over a real loopback socket",
+        "            front-end (implied by --faults conn-churn/all, which add",
+        "            abrupt-disconnect, half-close, and slow-reader connection",
+        "            faults)",
         "            drives the serve core with a seeded adversarial workload,",
         "            checks the serving invariants, exits non-zero on violations",
         "store:      <ls|gc|show KEY> --store DIR (default: store) -- offline",
@@ -136,13 +148,19 @@ fn check_known_options(sub: &str, args: &Args) -> Result<()> {
             ],
             &["silent"],
         ),
-        "serve" => (&["workers", "store", "memory-budget-mb"], &[]),
+        "serve" => (
+            &[
+                "workers", "store", "memory-budget-mb", "listen", "max-inflight", "queue-cap",
+                "batch-window-us", "max-batch",
+            ],
+            &["stdio"],
+        ),
         "soak" => (
             &[
                 "workers", "events", "seconds", "seed", "trace", "record", "out", "faults",
                 "variants", "store", "memory-budget-mb",
             ],
-            &["quick", "pace"],
+            &["quick", "pace", "listen"],
         ),
         "store" => (&["store"], &[]),
         "infer" => (&["model", "seed"], &[]),
@@ -323,8 +341,22 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
 }
 
 /// `serve`: the long-lived multi-session front-end — JSON-lines
-/// requests on stdin, responses on stdout, log chatter on stderr.
+/// requests on stdin, responses on stdout, log chatter on stderr; or,
+/// with `--listen ADDR`, the same protocol length-prefix framed over
+/// TCP with admission control and infer micro-batching
+/// (DESIGN.md §Network front-end).
 fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
+    let listen = args.get("listen").map(str::to_string);
+    if args.flag("stdio") && listen.is_some() {
+        return Err(anyhow!("--stdio and --listen ADDR are mutually exclusive"));
+    }
+    if listen.is_none() {
+        for opt in ["max-inflight", "queue-cap", "batch-window-us", "max-batch"] {
+            if args.get(opt).is_some() {
+                return Err(anyhow!("--{opt} requires --listen ADDR"));
+            }
+        }
+    }
     let workers = args.usize_or("workers", 2)?;
     let mut cfg = ServiceConfig::new(PathBuf::from(artifacts)).with_workers(workers);
     if let Some(dir) = args.get("store") {
@@ -338,10 +370,36 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
         .as_ref()
         .map(|d| format!(", variant store {}", d.display()))
         .unwrap_or_default();
+    if let Some(addr) = listen {
+        let net_cfg = wasi_train::net::NetConfig {
+            listen: addr,
+            max_inflight: args.usize_or("max-inflight", 64)?,
+            queue_cap: args.usize_or("queue-cap", 256)?,
+            batch_window_us: args.usize_or("batch-window-us", 200)? as u64,
+            max_batch: args.usize_or("max-batch", 8)?,
+            dispatchers: 0,
+        };
+        let service = std::sync::Arc::new(Service::start(cfg)?);
+        let mut handle = wasi_train::net::serve_listener(service.clone(), net_cfg)?;
+        // The "listening on ADDR" phrase is parsed by socket clients
+        // (scripts/socket_smoke.py) to discover a `:0` ephemeral port.
+        eprintln!(
+            "wasi-train serve: {} worker(s) over {artifacts}/{store_note} — listening on {} \
+             (length-prefix framed JSON; send {{\"cmd\":\"shutdown\"}} to stop)",
+            workers.max(1),
+            handle.addr()
+        );
+        handle.wait_stop();
+        // Stop the service first so any still-streaming `events` jobs
+        // terminate, then drain and join the front-end.
+        service.shutdown();
+        handle.shutdown();
+        return Ok(());
+    }
     let service = Service::start(cfg)?;
     eprintln!(
         "wasi-train serve: {} worker(s) over {artifacts}/{store_note} — JSON-lines on stdin \
-         (submit|status|events|infer|cancel|forget|store|store-stats|shutdown)",
+         (submit|status|events|infer|cancel|forget|store|store-stats|stats|shutdown)",
         workers.max(1)
     );
     let stdin = std::io::stdin();
@@ -368,6 +426,7 @@ fn cmd_soak(args: &Args, artifacts: &str) -> Result<()> {
     cfg.pace = args.flag("pace");
     cfg.store = args.get("store").map(PathBuf::from);
     cfg.memory_budget_mb = args.usize_or("memory-budget-mb", 0)?;
+    cfg.listen = args.flag("listen");
     if let Some(v) = args.get("variants") {
         cfg.variants = v.split(',').map(|s| s.trim().to_string()).collect();
     }

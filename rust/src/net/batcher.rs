@@ -1,0 +1,252 @@
+//! Dynamic micro-batching for `infer` requests (DESIGN.md §Network
+//! front-end).
+//!
+//! Concurrent `infer` requests that resolve to the same pool entry and
+//! parameter source — the [`BatchKey`]: artifact directory, variant,
+//! engine, precision, and personalized job — are coalesced within a
+//! short gather window into ONE stacked engine call
+//! ([`crate::serve::Service::infer_batch`], which rides the
+//! arena-planned batched graph walk), and the logits fan back out per
+//! request.  Because every inference GEMM is row-independent with a
+//! fixed accumulation order, the stacked call is bitwise identical to
+//! serving each request alone (pinned in `tests/net.rs`); batching
+//! changes throughput, never answers.
+//!
+//! Protocol: the first request to arrive for a key becomes the group
+//! *leader*.  It waits up to the window for followers (a follower that
+//! fills the group to `max_batch` seals it early), unpublishes the
+//! group so later arrivals start a fresh one, executes, and publishes
+//! per-request results; followers just wait on the group.  A failed
+//! stacked call falls back to serving each member individually so one
+//! request's bad input cannot fail its window-mates.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::EngineKind;
+use crate::precision::Precision;
+use crate::serve::{InferOutput, InferRequest, JobId, Service};
+
+use super::stats::NetStats;
+
+/// The coalescing key: requests may share one stacked call only if
+/// they would read the same weights through the same engine at the
+/// same precision.  Seed and explicit inputs vary per request and are
+/// deliberately NOT part of the key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    /// Artifact directory (`None` = the service default).
+    pub artifacts: Option<PathBuf>,
+    pub model: String,
+    pub engine: EngineKind,
+    pub precision: Precision,
+    /// Personalized job whose params are served (`None` = pretrained).
+    pub job: Option<JobId>,
+}
+
+/// Per-request result slot: the stacked call's per-request output, or
+/// this request's own error (errors don't clone through `anyhow`, so
+/// they fan out pre-rendered).
+type Slot = std::result::Result<InferOutput, String>;
+
+struct GroupState {
+    reqs: Vec<InferRequest>,
+    /// Once sealed no request may join; set by the leader after its
+    /// window, or by the follower that fills the group.
+    sealed: bool,
+    done: Option<Vec<Slot>>,
+}
+
+struct Group {
+    state: Mutex<GroupState>,
+    cond: Condvar,
+}
+
+impl Group {
+    fn new(first: InferRequest) -> Group {
+        Group {
+            state: Mutex::new(GroupState { reqs: vec![first], sealed: false, done: None }),
+            cond: Condvar::new(),
+        }
+    }
+}
+
+/// The gather/execute engine.  One per server; also usable standalone
+/// (the soak harness and `tests/net.rs` drive it directly).
+pub struct Batcher {
+    svc: Arc<Service>,
+    window: Duration,
+    max_batch: usize,
+    stats: Arc<NetStats>,
+    groups: Mutex<HashMap<BatchKey, Arc<Group>>>,
+}
+
+impl Batcher {
+    pub fn new(svc: Arc<Service>, window_us: u64, max_batch: usize, stats: Arc<NetStats>) -> Self {
+        Batcher {
+            svc,
+            window: Duration::from_micros(window_us),
+            max_batch: max_batch.max(1),
+            stats,
+            groups: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Submit one request and block until its result is ready (the
+    /// caller is a dispatcher thread; blocking here IS the gather
+    /// window).  Returns exactly what a solo [`Service::infer`] call
+    /// would, bit for bit.
+    pub fn submit(&self, key: BatchKey, req: InferRequest) -> Result<InferOutput> {
+        let (group, index, leader) = self.join_or_lead(&key, req);
+        if leader {
+            self.lead(&key, &group);
+        }
+        let st = group.state.lock().unwrap();
+        let st = self.wait_done(&group, st);
+        match &st.done.as_ref().expect("group published without results")[index] {
+            Ok(out) => Ok(out.clone()),
+            Err(msg) => Err(anyhow!("{msg}")),
+        }
+    }
+
+    /// Join the key's open group as a follower, or register a fresh
+    /// group and become its leader.
+    fn join_or_lead(&self, key: &BatchKey, req: InferRequest) -> (Arc<Group>, usize, bool) {
+        let mut groups = self.groups.lock().unwrap();
+        if let Some(g) = groups.get(key) {
+            let mut st = g.state.lock().unwrap();
+            if !st.sealed && st.reqs.len() < self.max_batch {
+                st.reqs.push(req);
+                let index = st.reqs.len() - 1;
+                let filled = st.reqs.len() >= self.max_batch;
+                if filled {
+                    st.sealed = true;
+                }
+                let g = g.clone();
+                drop(st);
+                if filled {
+                    g.cond.notify_all();
+                }
+                return (g, index, false);
+            }
+        }
+        let g = Arc::new(Group::new(req));
+        groups.insert(key.clone(), g.clone());
+        (g, 0, true)
+    }
+
+    /// Leader protocol: gather for the window, seal + unpublish,
+    /// execute, publish.
+    fn lead(&self, key: &BatchKey, group: &Arc<Group>) {
+        if self.max_batch > 1 && !self.window.is_zero() {
+            let st = group.state.lock().unwrap();
+            let _ = self.cond_gather(group, st);
+        }
+        {
+            let mut st = group.state.lock().unwrap();
+            st.sealed = true;
+        }
+        {
+            // Unpublish (only if the map still points at THIS group —
+            // a filled group may already have been replaced).
+            let mut groups = self.groups.lock().unwrap();
+            if let Some(cur) = groups.get(key) {
+                if Arc::ptr_eq(cur, group) {
+                    groups.remove(key);
+                }
+            }
+        }
+        let reqs = group.state.lock().unwrap().reqs.clone();
+        let slots = self.execute(key, &reqs);
+        let mut st = group.state.lock().unwrap();
+        st.done = Some(slots);
+        drop(st);
+        group.cond.notify_all();
+    }
+
+    fn cond_gather<'a>(
+        &self,
+        group: &'a Group,
+        st: std::sync::MutexGuard<'a, GroupState>,
+    ) -> std::sync::MutexGuard<'a, GroupState> {
+        let (st, _) = group
+            .cond
+            .wait_timeout_while(st, self.window, |s| !s.sealed)
+            .expect("batch group lock poisoned");
+        st
+    }
+
+    fn wait_done<'a>(
+        &self,
+        group: &'a Group,
+        st: std::sync::MutexGuard<'a, GroupState>,
+    ) -> std::sync::MutexGuard<'a, GroupState> {
+        group
+            .cond
+            .wait_while(st, |s| s.done.is_none())
+            .expect("batch group lock poisoned")
+    }
+
+    /// Run a sealed group: one stacked call when it coalesced, with a
+    /// per-request fallback on error.
+    fn execute(&self, key: &BatchKey, reqs: &[InferRequest]) -> Vec<Slot> {
+        let arts = key.artifacts.as_deref();
+        if reqs.len() == 1 {
+            self.stats.note_solo(1);
+            return vec![self.svc.infer(arts, &reqs[0], key.job).map_err(|e| format!("{e:#}"))];
+        }
+        match self.svc.infer_batch(arts, reqs, key.job) {
+            Ok(outs) => {
+                self.stats.note_batch(reqs.len());
+                outs.into_iter().map(Ok).collect()
+            }
+            Err(_) => {
+                // One member's bad input (or a source that vanished
+                // mid-window) must not fail the whole group: serve each
+                // request alone so every member gets its own accurate
+                // result or error.
+                self.stats.note_solo(reqs.len());
+                reqs.iter()
+                    .map(|r| self.svc.infer(arts, r, key.job).map_err(|e| format!("{e:#}")))
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Correctness and coalescing behavior are pinned end-to-end in
+    // `tests/net.rs` (they need demo artifacts); here we only pin the
+    // group bookkeeping that needs no service.
+
+    #[test]
+    fn batch_key_distinguishes_every_field() {
+        let base = BatchKey {
+            artifacts: None,
+            model: "m".into(),
+            engine: EngineKind::Native,
+            precision: Precision::F32,
+            job: None,
+        };
+        let mut other = base.clone();
+        assert_eq!(base, other);
+        other.precision = Precision::I8;
+        assert_ne!(base, other);
+        let mut other = base.clone();
+        other.job = Some(JobId(3));
+        assert_ne!(base, other);
+        let mut other = base.clone();
+        other.artifacts = Some(PathBuf::from("/tmp/a"));
+        assert_ne!(base, other);
+        let mut other = base.clone();
+        other.engine = EngineKind::Auto;
+        assert_ne!(base, other);
+    }
+}

@@ -1,0 +1,110 @@
+//! Length-delimited framing for the socket transport.
+//!
+//! One frame = a 4-byte big-endian payload length followed by exactly
+//! that many payload bytes.  The payload is one line of the existing
+//! JSON protocol (`serve/proto.rs`), WITHOUT a trailing newline — the
+//! length prefix replaces the newline as the record boundary, so
+//! payloads may in principle contain any bytes (malformed UTF-8/JSON is
+//! still answered in-band, exactly as on stdio).
+//!
+//! Framing errors are connection-fatal: a partial header/payload means
+//! the peer died mid-frame, and an oversize length means the stream is
+//! garbage or hostile — in both cases the reader drops the connection
+//! rather than guessing at a resync point.  Everything *inside* a
+//! well-formed frame is answered in-band and the connection lives on.
+
+use std::io::{self, Read, Write};
+
+/// Hard per-frame payload cap.  Generous for the protocol's largest
+/// legitimate payload (an explicit `x` input batch serialized as JSON
+/// numbers) while bounding what one connection can make the server
+/// buffer.
+pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// Write one frame: 4-byte big-endian length, then the payload.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame payload {} exceeds cap {MAX_FRAME_BYTES}", payload.len()),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)
+}
+
+/// Read one frame.  `Ok(None)` is a clean end-of-stream (EOF exactly on
+/// a frame boundary); EOF mid-header or mid-payload, and a length above
+/// `max`, are errors.
+pub fn read_frame(r: &mut impl Read, max: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    let mut got = 0usize;
+    while got < header.len() {
+        match r.read(&mut header[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid frame header",
+                ))
+            }
+            n => got += n,
+        }
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > max {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap {max}"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_round_trip_back_to_back() {
+        let mut buf = Vec::new();
+        let payloads: [&[u8]; 4] = [b"{}", b"", b"{\"cmd\":\"status\"}", &[0xff, 0x00, 0x7f]];
+        for p in payloads {
+            write_frame(&mut buf, p).unwrap();
+        }
+        let mut r = Cursor::new(buf);
+        for p in payloads {
+            assert_eq!(read_frame(&mut r, MAX_FRAME_BYTES).unwrap().as_deref(), Some(p));
+        }
+        assert!(read_frame(&mut r, MAX_FRAME_BYTES).unwrap().is_none());
+    }
+
+    #[test]
+    fn eof_mid_frame_is_an_error_clean_eof_is_none() {
+        // Clean EOF before any byte → None.
+        assert!(read_frame(&mut Cursor::new(Vec::<u8>::new()), 64).unwrap().is_none());
+        // Truncated header.
+        let mut r = Cursor::new(vec![0u8, 0, 0]);
+        assert_eq!(read_frame(&mut r, 64).unwrap_err().kind(), io::ErrorKind::UnexpectedEof);
+        // Header promises more payload than the stream holds.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abcdef").unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r, 64).unwrap_err().kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn oversize_frames_are_rejected_on_both_sides() {
+        let mut r = Cursor::new(u32::MAX.to_be_bytes().to_vec());
+        assert_eq!(read_frame(&mut r, 64).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        let big = vec![b'x'; 65];
+        let mut w = Vec::new();
+        write_frame(&mut w, &big).unwrap(); // cap is MAX_FRAME_BYTES, not 64
+        let mut r = Cursor::new(w);
+        assert_eq!(read_frame(&mut r, 64).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+}

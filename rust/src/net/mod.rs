@@ -1,0 +1,36 @@
+//! Socket front-end for the job service: `wasi-train serve --listen`
+//! (DESIGN.md §Network front-end).
+//!
+//! The stdio protocol ([`crate::serve::proto`]) is one session over one
+//! pipe; this module multiplexes many concurrent TCP connections onto
+//! the same [`crate::serve::Service`] without touching the protocol
+//! itself.  Three pieces:
+//!
+//! * [`frame`] — length-prefix framing: each request/response line
+//!   travels as a 4-byte big-endian length + payload, so partial reads,
+//!   half-closes, and pipelined bursts are unambiguous;
+//! * [`server`] — the listener: per-connection reader/writer threads
+//!   over a shared bounded submission queue, framing-layer request
+//!   `"id"`s threaded through so responses and streamed job events fan
+//!   back to the right request, admission control
+//!   (`--max-inflight` / `--queue-cap`, overload answered in-band as
+//!   `{"ok":false,"code":"overloaded"}`), and graceful drain on
+//!   shutdown;
+//! * [`batcher`] — cross-request micro-batching: concurrent `infer`
+//!   requests sharing one [`BatchKey`] coalesce within a gather window
+//!   (`--batch-window-us` / `--max-batch`) into one stacked engine
+//!   call, bit-identical to solo serving (pinned in `tests/net.rs`).
+//!
+//! [`stats`] carries the front-end telemetry (connections, queue
+//! depth, batch-size histogram, admission rejections) surfaced by the
+//! protocol's `stats` command and the soak report.
+
+pub mod batcher;
+pub mod frame;
+pub mod server;
+pub mod stats;
+
+pub use batcher::{BatchKey, Batcher};
+pub use frame::{read_frame, write_frame, MAX_FRAME_BYTES};
+pub use server::{serve_listener, NetConfig, ServerHandle};
+pub use stats::{ConnStats, NetStats, BATCH_EDGES};

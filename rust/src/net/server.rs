@@ -1,0 +1,622 @@
+//! The TCP front-end: `wasi-train serve --listen ADDR` (DESIGN.md
+//! §Network front-end).
+//!
+//! One accept loop hands each connection to a reader thread; each
+//! connection also owns a writer thread fed by an in-process channel,
+//! so a slow or dead peer can only ever stall its own writer — never a
+//! dispatcher, never a service worker.  Readers validate framing
+//! ([`super::frame`]), strip the framing-layer `"id"`, apply admission
+//! control, and push admitted requests onto one shared bounded queue;
+//! a small dispatcher pool drains it through the unchanged protocol
+//! dispatcher ([`crate::serve::proto::handle_line`]), with `infer`
+//! detoured through the micro-batcher ([`super::batcher::Batcher`]).
+//! Responses — including every streamed `events` line — are re-tagged
+//! with the request's `"id"` and framed back on the owning connection.
+//!
+//! Admission: a request is admitted only while both caps hold
+//! (`in-flight < --max-inflight` and `queued < --queue-cap`);
+//! otherwise it is answered in-band `{"ok":false,"code":"overloaded"}`
+//! immediately — overload degrades to fast rejections, never to an
+//! unresponsive socket.  `stats` and `shutdown` bypass admission (an
+//! operator must be able to observe and stop an overloaded server).
+//!
+//! Shutdown: an accepted protocol `shutdown` (or
+//! [`ServerHandle::shutdown`]) stops the accept loop, lets admitted
+//! work drain (deadline-bounded — past it the service itself is shut
+//! down, which cancels jobs and unblocks any event streams, exactly
+//! like a stdio shutdown), then closes the sockets and joins every
+//! thread.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::serve::proto::{self, Flow};
+use crate::serve::Service;
+use crate::util::json::{self, Json};
+
+use super::batcher::{BatchKey, Batcher};
+use super::frame::{read_frame, write_frame, MAX_FRAME_BYTES};
+use super::stats::{connections_json, ConnStats, NetStats};
+
+/// How long [`ServerHandle::shutdown`] waits for admitted work before
+/// forcing the service down to unwedge it.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Socket front-end configuration (`serve --listen` flags).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:7777` (`:0` picks a free port).
+    pub listen: String,
+    /// Admission cap on admitted-but-unanswered requests.
+    pub max_inflight: usize,
+    /// Admission cap on the shared submission queue's depth.
+    pub queue_cap: usize,
+    /// Micro-batch gather window (0 disables batching).
+    pub batch_window_us: u64,
+    /// Micro-batch size cap (1 disables batching).
+    pub max_batch: usize,
+    /// Dispatcher threads draining the shared queue (0 = auto).
+    pub dispatchers: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_inflight: 64,
+            queue_cap: 256,
+            batch_window_us: 200,
+            max_batch: 8,
+            dispatchers: 0,
+        }
+    }
+}
+
+impl NetConfig {
+    /// The dispatcher pool size actually used: enough parallelism for
+    /// the batcher to observe concurrency (a gathering leader parks its
+    /// dispatcher for the window), bounded so an idle server stays
+    /// cheap.
+    fn dispatcher_count(&self) -> usize {
+        if self.dispatchers > 0 {
+            self.dispatchers
+        } else {
+            self.max_inflight.min(16).max(2)
+        }
+    }
+}
+
+/// One admitted request, queued for (or being run by) a dispatcher.
+struct Work {
+    cmd: String,
+    /// Framing-layer request id, re-attached to every response line.
+    id: Option<Json>,
+    /// The request line with `"id"` stripped — exactly what the stdio
+    /// protocol would have read.
+    line: String,
+    reply: Sender<String>,
+}
+
+struct ConnReg {
+    stream: TcpStream,
+    stats: Arc<ConnStats>,
+}
+
+struct ServerShared {
+    svc: Arc<Service>,
+    cfg: NetConfig,
+    addr: SocketAddr,
+    stats: Arc<NetStats>,
+    batcher: Batcher,
+    queue: Mutex<VecDeque<Work>>,
+    queue_cond: Condvar,
+    stop: AtomicBool,
+    stop_flag: Mutex<bool>,
+    stop_cond: Condvar,
+    inflight: AtomicUsize,
+    conns: Mutex<HashMap<u64, ConnReg>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ServerShared {
+    fn register_thread(&self, h: JoinHandle<()>) {
+        self.threads.lock().unwrap().push(h);
+    }
+
+    /// Flip the server into stopping mode (idempotent) and wake
+    /// everything that might be parked: dispatchers, the stop waiter,
+    /// and the accept loop (via a throwaway self-connection).
+    fn trigger_stop(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.queue_cond.notify_all();
+        {
+            let mut stopped = self.stop_flag.lock().unwrap();
+            *stopped = true;
+            self.stop_cond.notify_all();
+        }
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+    }
+}
+
+/// Bind `cfg.listen` and serve `svc` over it until a protocol
+/// `shutdown` or [`ServerHandle::shutdown`].  Returns immediately; the
+/// handle carries the resolved address (for `:0` binds) and the
+/// front-end stats.
+pub fn serve_listener(svc: Arc<Service>, cfg: NetConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.listen)
+        .map_err(|e| anyhow!("cannot bind {}: {e}", cfg.listen))?;
+    let addr = listener.local_addr()?;
+    let stats = Arc::new(NetStats::default());
+    let batcher =
+        Batcher::new(svc.clone(), cfg.batch_window_us, cfg.max_batch, stats.clone());
+    let shared = Arc::new(ServerShared {
+        svc,
+        addr,
+        stats,
+        batcher,
+        queue: Mutex::new(VecDeque::new()),
+        queue_cond: Condvar::new(),
+        stop: AtomicBool::new(false),
+        stop_flag: Mutex::new(false),
+        stop_cond: Condvar::new(),
+        inflight: AtomicUsize::new(0),
+        conns: Mutex::new(HashMap::new()),
+        threads: Mutex::new(Vec::new()),
+        cfg,
+    });
+    for _ in 0..shared.cfg.dispatcher_count() {
+        let s = shared.clone();
+        shared.register_thread(std::thread::spawn(move || dispatcher_loop(&s)));
+    }
+    let accept = {
+        let s = shared.clone();
+        std::thread::spawn(move || accept_loop(&s, listener))
+    };
+    Ok(ServerHandle { shared, accept: Some(accept), finished: false })
+}
+
+/// A running socket front-end.  Dropping the handle shuts it down.
+pub struct ServerHandle {
+    shared: Arc<ServerShared>,
+    accept: Option<JoinHandle<()>>,
+    finished: bool,
+}
+
+impl ServerHandle {
+    /// The bound address (resolved port for `:0` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// The front-end's telemetry counters.
+    pub fn stats(&self) -> Arc<NetStats> {
+        self.shared.stats.clone()
+    }
+
+    /// Block until the server starts stopping (an accepted protocol
+    /// `shutdown`, or [`ServerHandle::shutdown`] from another thread).
+    pub fn wait_stop(&self) {
+        let stopped = self.shared.stop_flag.lock().unwrap();
+        let _guard = self
+            .shared
+            .stop_cond
+            .wait_while(stopped, |s| !*s)
+            .expect("server stop lock poisoned");
+    }
+
+    /// Graceful drain: stop accepting, let admitted work finish
+    /// (deadline-bounded — past [`DRAIN_DEADLINE`] the service is shut
+    /// down to cancel whatever is wedging the drain, mirroring stdio
+    /// shutdown semantics), then close the sockets and join every
+    /// thread.  Idempotent; does NOT stop the service itself on the
+    /// clean path — the caller owns that.
+    pub fn shutdown(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        self.shared.trigger_stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let deadline = Instant::now() + DRAIN_DEADLINE;
+        loop {
+            let idle = self.shared.inflight.load(Ordering::SeqCst) == 0
+                && self.shared.queue.lock().unwrap().is_empty();
+            if idle {
+                break;
+            }
+            if Instant::now() >= deadline {
+                // Something holds the drain open (a streamed job that
+                // never terminates, a wedged peer): shut the service
+                // down — jobs cancel, event channels disconnect, and
+                // every in-flight handler unblocks promptly.
+                self.shared.svc.shutdown();
+                break;
+            }
+            self.shared.queue_cond.notify_all();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Unblock readers parked in read_frame and writers parked on a
+        // full TCP buffer.
+        for reg in self.shared.conns.lock().unwrap().values() {
+            let _ = reg.stream.shutdown(Shutdown::Both);
+        }
+        self.shared.queue_cond.notify_all();
+        // Join until the registry stays empty (threads register the
+        // threads they spawn: conn readers register their writers).
+        loop {
+            let handles = std::mem::take(&mut *self.shared.threads.lock().unwrap());
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(shared: &Arc<ServerShared>, listener: TcpListener) {
+    let mut next_conn = 0u64;
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        next_conn += 1;
+        let conn_id = next_conn;
+        let s = shared.clone();
+        shared.register_thread(std::thread::spawn(move || conn_loop(&s, stream, conn_id)));
+    }
+}
+
+/// Per-connection reader: owns the socket's read half for its whole
+/// life, spawns the writer for the write half, and feeds admitted work
+/// to the shared queue.
+fn conn_loop(shared: &Arc<ServerShared>, stream: TcpStream, conn_id: u64) {
+    let (Ok(write_half), Ok(read_half)) = (stream.try_clone(), stream.try_clone()) else {
+        return;
+    };
+    shared.stats.connection_opened();
+    let cstats = Arc::new(ConnStats::default());
+    shared
+        .conns
+        .lock()
+        .unwrap()
+        .insert(conn_id, ConnReg { stream, stats: cstats.clone() });
+    let (tx, rx) = mpsc::channel::<String>();
+    {
+        let (gstats, wstats) = (shared.stats.clone(), cstats.clone());
+        shared.register_thread(std::thread::spawn(move || {
+            writer_loop(write_half, rx, &gstats, &wstats)
+        }));
+    }
+    let mut reader = BufReader::new(read_half);
+    loop {
+        match read_frame(&mut reader, MAX_FRAME_BYTES) {
+            Ok(Some(payload)) => {
+                shared.stats.frame_in();
+                cstats.frames_in.fetch_add(1, Ordering::Relaxed);
+                handle_payload(shared, payload, &tx, &cstats);
+            }
+            Ok(None) => break, // clean EOF (or half-close after a burst)
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                // Oversize frame: report why, then drop the connection —
+                // framing errors are connection-fatal (module docs).
+                let err = error_json("?", &format!("framing error: {e}"), None);
+                let _ = tx.send(attach_id(&err, &None));
+                break;
+            }
+            Err(_) => break, // peer reset / died mid-frame
+        }
+    }
+    shared.conns.lock().unwrap().remove(&conn_id);
+    shared.stats.connection_closed();
+    // Dropping `tx` lets the writer exit once in-flight handlers (which
+    // hold their own reply senders) finish.
+}
+
+/// Per-connection writer: frames response lines in submission order.
+/// Exits when every sender is gone (connection closed AND all its
+/// in-flight work answered) or the peer stops accepting bytes.
+fn writer_loop(
+    stream: TcpStream,
+    rx: Receiver<String>,
+    stats: &NetStats,
+    cstats: &ConnStats,
+) {
+    let mut w = BufWriter::new(stream);
+    for line in rx {
+        if write_frame(&mut w, line.as_bytes()).is_err() || w.flush().is_err() {
+            // Peer gone: drain-and-drop whatever is still queued so
+            // handlers never block on a dead connection.
+            for _ in rx.iter() {}
+            return;
+        }
+        stats.frame_out();
+        cstats.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Decode one frame, strip its `"id"`, and route it: `stats` inline,
+/// `shutdown` admission-exempt, `events wait:true` to a dedicated
+/// streamer thread, everything else through admission onto the shared
+/// queue.
+fn handle_payload(
+    shared: &Arc<ServerShared>,
+    payload: Vec<u8>,
+    tx: &Sender<String>,
+    cstats: &Arc<ConnStats>,
+) {
+    let text = match String::from_utf8(payload) {
+        Ok(t) => t,
+        Err(e) => {
+            let err = error_json("?", &format!("frame is not valid UTF-8: {e}"), None);
+            let _ = tx.send(attach_id(&err, &None));
+            return;
+        }
+    };
+    // Strip the framing-layer "id" so the protocol's strict key
+    // validation never sees it; non-object frames pass through verbatim
+    // and handle_line reports them exactly as it would on stdio.
+    let (id, cmd, extra_keys, is_stream, line) = match Json::parse(text.trim()) {
+        Ok(Json::Obj(mut m)) => {
+            let id = m.remove("id");
+            let cmd = m.get("cmd").and_then(|c| c.as_str()).unwrap_or("?").to_string();
+            let extra = m.keys().any(|k| k != "cmd");
+            let is_stream = cmd == "events" && m.get("wait") == Some(&Json::Bool(true));
+            (id, cmd, extra, is_stream, Json::Obj(m).to_string())
+        }
+        _ => (None, "?".to_string(), false, false, text.trim().to_string()),
+    };
+    // `stats` answers from the reader thread so it works *under*
+    // overload — that is the point of having it.  (With unexpected
+    // keys it falls through so the protocol's key rejection answers.)
+    if cmd == "stats" && !extra_keys {
+        let mut fields = vec![("ok", Json::Bool(true)), ("cmd", json::str("stats"))];
+        fields.extend(proto::service_stat_fields(&shared.svc));
+        let mut m = match json::obj(fields) {
+            Json::Obj(m) => m,
+            _ => unreachable!("json::obj builds an object"),
+        };
+        m.insert("net".to_string(), shared.stats.to_json());
+        let conns = shared.conns.lock().unwrap();
+        m.insert(
+            "connections".to_string(),
+            connections_json(conns.iter().map(|(id, reg)| (*id, reg.stats.as_ref()))),
+        );
+        drop(conns);
+        let _ = tx.send(attach_id(&Json::Obj(m), &id));
+        return;
+    }
+    // Admission (shutdown is exempt: an overloaded server must still be
+    // stoppable).
+    if cmd != "shutdown" {
+        let stopping = shared.stop.load(Ordering::SeqCst);
+        let admitted = !stopping && {
+            let q = shared.queue.lock().unwrap();
+            shared.inflight.load(Ordering::SeqCst) < shared.cfg.max_inflight
+                && q.len() < shared.cfg.queue_cap
+        };
+        if !admitted {
+            shared.stats.rejected();
+            cstats.rejections.fetch_add(1, Ordering::Relaxed);
+            let (code, why) = if stopping {
+                ("shutdown", "server is shutting down".to_string())
+            } else {
+                (
+                    "overloaded",
+                    format!(
+                        "server at capacity ({} in-flight cap, {} queue cap); retry later",
+                        shared.cfg.max_inflight, shared.cfg.queue_cap
+                    ),
+                )
+            };
+            let _ = tx.send(attach_id(&error_json(&cmd, &why, Some(code)), &id));
+            return;
+        }
+    }
+    shared.inflight.fetch_add(1, Ordering::SeqCst);
+    let work = Work { cmd, id, line, reply: tx.clone() };
+    if is_stream {
+        // A blocking event stream would park a dispatcher for a whole
+        // job; give it its own thread (it still counts against the
+        // in-flight cap — streams hold resources too).
+        let s = shared.clone();
+        shared.register_thread(std::thread::spawn(move || process(&s, work)));
+    } else {
+        shared.queue.lock().unwrap().push_back(work);
+        shared.queue_cond.notify_one();
+    }
+}
+
+fn dispatcher_loop(shared: &Arc<ServerShared>) {
+    loop {
+        let work = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(w) = q.pop_front() {
+                    break Some(w);
+                }
+                // Exit only on stop AND empty: admitted work drains.
+                if shared.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.queue_cond.wait(q).unwrap();
+            }
+        };
+        match work {
+            Some(w) => process(shared, w),
+            None => return,
+        }
+    }
+}
+
+/// Run one admitted request to completion and answer on its
+/// connection.  `infer` detours through the micro-batcher; everything
+/// else reuses the stdio dispatcher verbatim, with a line-splitting
+/// adapter re-tagging each response line with the request id.
+fn process(shared: &Arc<ServerShared>, work: Work) {
+    let mut out = LineWriter { id: work.id.clone(), tx: work.reply.clone(), buf: Vec::new() };
+    let flow = if work.cmd == "infer" {
+        if let Ok(req) = Json::parse(&work.line) {
+            let response = match proto::parse_infer_frame(&req) {
+                Ok((ireq, artifacts, job)) => {
+                    let model = ireq.model.clone();
+                    let key = BatchKey {
+                        artifacts,
+                        model: model.clone(),
+                        engine: ireq.engine,
+                        precision: ireq.precision,
+                        job,
+                    };
+                    match shared.batcher.submit(key, ireq) {
+                        Ok(infer_out) => proto::infer_response(&model, &infer_out),
+                        Err(e) => proto::error_line("infer", &e),
+                    }
+                }
+                Err(e) => proto::error_line("infer", &e),
+            };
+            let _ = writeln!(out, "{response}");
+            Flow::Continue
+        } else {
+            proto::handle_line(&shared.svc, &work.line, &mut out).unwrap_or(Flow::Continue)
+        }
+    } else {
+        // LineWriter cannot fail, so the io::Result is vacuous here.
+        proto::handle_line(&shared.svc, &work.line, &mut out).unwrap_or(Flow::Continue)
+    };
+    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+    if flow == Flow::Shutdown {
+        shared.trigger_stop();
+    }
+}
+
+/// `Write` adapter between the line-oriented protocol dispatcher and
+/// the framed transport: buffers bytes, and on every completed line
+/// re-parses it, inserts the request `"id"`, and ships it to the
+/// connection's writer.  This is what lets `handle_line` — including
+/// its streamed `events` lines — run verbatim over sockets.
+struct LineWriter {
+    id: Option<Json>,
+    tx: Sender<String>,
+    buf: Vec<u8>,
+}
+
+impl Write for LineWriter {
+    fn write(&mut self, bytes: &[u8]) -> io::Result<usize> {
+        self.buf.extend_from_slice(bytes);
+        while let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = self.buf.drain(..=pos).collect();
+            let text = String::from_utf8_lossy(&line);
+            let text = text.trim();
+            if text.is_empty() {
+                continue;
+            }
+            // A send failure means the peer is gone; the work still
+            // runs to completion (its job-side effects are real), the
+            // response is simply undeliverable.
+            let _ = self.tx.send(attach_line_id(text, &self.id));
+        }
+        Ok(bytes.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Insert the request `"id"` into one serialized response line.
+fn attach_line_id(line: &str, id: &Option<Json>) -> String {
+    let Some(id) = id else {
+        return line.to_string();
+    };
+    match Json::parse(line) {
+        Ok(Json::Obj(mut m)) => {
+            m.insert("id".to_string(), id.clone());
+            Json::Obj(m).to_string()
+        }
+        // Every protocol response is a JSON object; anything else is
+        // passed through untagged rather than corrupted.
+        _ => line.to_string(),
+    }
+}
+
+fn attach_id(response: &Json, id: &Option<Json>) -> String {
+    attach_line_id(&response.to_string(), id)
+}
+
+/// An in-band error response, optionally machine-tagged (`"code"`:
+/// `"overloaded"` at admission, `"shutdown"` while stopping).
+fn error_json(cmd: &str, error: &str, code: Option<&str>) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(false)),
+        ("cmd", json::str(cmd)),
+        ("error", json::str(error)),
+    ];
+    if let Some(code) = code {
+        fields.push(("code", json::str(code)));
+    }
+    json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_reattaches_to_response_lines_verbatim() {
+        let id = Some(Json::Str("req-77".to_string()));
+        let tagged = attach_line_id(r#"{"ok":true,"cmd":"status"}"#, &id);
+        let parsed = Json::parse(&tagged).unwrap();
+        assert_eq!(parsed.get("id").and_then(|v| v.as_str()), Some("req-77"));
+        assert_eq!(parsed.get("ok"), Some(&Json::Bool(true)));
+        // Numeric ids survive too, and absent ids change nothing.
+        let tagged = attach_line_id(r#"{"ok":true}"#, &Some(json::num(42.0)));
+        assert_eq!(Json::parse(&tagged).unwrap().get("id").and_then(|v| v.as_usize()), Some(42));
+        assert_eq!(attach_line_id(r#"{"ok":true}"#, &None), r#"{"ok":true}"#);
+    }
+
+    #[test]
+    fn line_writer_splits_and_tags_streamed_lines() {
+        let (tx, rx) = mpsc::channel();
+        let mut lw = LineWriter { id: Some(json::num(7.0)), tx, buf: Vec::new() };
+        // Two lines delivered across split writes, exactly as the
+        // events streamer emits them.
+        lw.write_all(b"{\"ok\":true,\"event\":\"started\"}\n{\"ok\":").unwrap();
+        lw.write_all(b"true,\"event\":\"done\"}\n").unwrap();
+        drop(lw);
+        let lines: Vec<String> = rx.iter().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("id").and_then(|i| i.as_usize()), Some(7));
+        }
+        assert!(lines[1].contains("done"));
+    }
+
+    #[test]
+    fn error_json_carries_the_code_tag() {
+        let e = error_json("infer", "server at capacity", Some("overloaded"));
+        assert_eq!(e.get("code").and_then(|v| v.as_str()), Some("overloaded"));
+        assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
+        assert!(error_json("x", "y", None).get("code").is_none());
+    }
+}

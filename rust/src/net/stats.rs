@@ -1,0 +1,182 @@
+//! Front-end telemetry: lock-free global counters plus per-connection
+//! gauges, surfaced through the `stats` protocol command and folded
+//! into the soak report (`scenario/telemetry.rs` owns the latency
+//! shapes; this module mirrors its fixed-edge histogram layout for
+//! batch sizes).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::{self, Json};
+
+/// Fixed batch-size histogram edges (`counts` has one extra overflow
+/// bucket), mirroring `scenario::LatencyStats`'s fixed-edge layout so
+/// dashboards treat both the same way.
+pub const BATCH_EDGES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Global front-end counters.  Everything is monotonic except
+/// `connections_open`, which is a live gauge.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    connections_opened: AtomicU64,
+    connections_open: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    /// Requests answered `code:"overloaded"` at admission.
+    rejections: AtomicU64,
+    /// Infer requests served one-at-a-time (group of one, or the
+    /// per-request fallback after a failed stacked call).
+    infer_solo: AtomicU64,
+    /// Infer requests served through a stacked micro-batch.
+    infer_batched: AtomicU64,
+    /// Stacked executions (each covers ≥ 2 requests).
+    batches: AtomicU64,
+    batch_hist: Mutex<[u64; BATCH_EDGES.len() + 1]>,
+}
+
+impl NetStats {
+    pub fn connection_opened(&self) {
+        self.connections_opened.fetch_add(1, Ordering::Relaxed);
+        self.connections_open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn connection_closed(&self) {
+        self.connections_open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn frame_in(&self) {
+        self.frames_in.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn frame_out(&self) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn rejected(&self) {
+        self.rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` requests served individually.
+    pub fn note_solo(&self, n: usize) {
+        self.infer_solo.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Record one stacked execution covering `n` requests.
+    pub fn note_batch(&self, n: usize) {
+        self.infer_batched.fetch_add(n as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let idx = BATCH_EDGES.iter().position(|&edge| n <= edge).unwrap_or(BATCH_EDGES.len());
+        self.batch_hist.lock().unwrap()[idx] += 1;
+    }
+
+    pub fn rejections(&self) -> u64 {
+        self.rejections.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn infer_batched(&self) -> u64 {
+        self.infer_batched.load(Ordering::Relaxed)
+    }
+
+    pub fn infer_solo(&self) -> u64 {
+        self.infer_solo.load(Ordering::Relaxed)
+    }
+
+    pub fn connections_open(&self) -> u64 {
+        self.connections_open.load(Ordering::Relaxed)
+    }
+
+    /// The gauges as protocol/report JSON.
+    pub fn to_json(&self) -> Json {
+        let count = |c: &AtomicU64| json::num(c.load(Ordering::Relaxed) as f64);
+        let hist = self.batch_hist.lock().unwrap();
+        json::obj(vec![
+            ("connections_opened", count(&self.connections_opened)),
+            ("connections_open", count(&self.connections_open)),
+            ("frames_in", count(&self.frames_in)),
+            ("frames_out", count(&self.frames_out)),
+            ("admission_rejections", count(&self.rejections)),
+            ("infer_solo", count(&self.infer_solo)),
+            ("infer_batched", count(&self.infer_batched)),
+            ("batches", count(&self.batches)),
+            (
+                "batch_size_histogram",
+                json::obj(vec![
+                    ("le", Json::Arr(BATCH_EDGES.iter().map(|&e| json::num(e as f64)).collect())),
+                    ("counts", Json::Arr(hist.iter().map(|&c| json::num(c as f64)).collect())),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Per-connection gauges, listed under `connections` in the `stats`
+/// response while the connection is open.
+#[derive(Debug, Default)]
+pub struct ConnStats {
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    pub rejections: AtomicU64,
+}
+
+impl ConnStats {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("frames_in", json::num(self.frames_in.load(Ordering::Relaxed) as f64)),
+            ("frames_out", json::num(self.frames_out.load(Ordering::Relaxed) as f64)),
+            ("rejections", json::num(self.rejections.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// Render an open-connection registry as the `connections` map of the
+/// `stats` response (conn id → per-connection gauges).
+pub fn connections_json<'a>(conns: impl Iterator<Item = (u64, &'a ConnStats)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (id, stats) in conns {
+        m.insert(format!("conn-{id}"), stats.to_json());
+    }
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_histogram_buckets_and_counts_line_up() {
+        let s = NetStats::default();
+        s.note_batch(2);
+        s.note_batch(2);
+        s.note_batch(5); // → le 8
+        s.note_batch(1000); // → overflow
+        s.note_solo(3);
+        assert_eq!(s.batches(), 3);
+        assert_eq!(s.infer_batched(), 1009);
+        assert_eq!(s.infer_solo(), 3);
+        let j = s.to_json();
+        let counts = j.get("batch_size_histogram").unwrap().get("counts").unwrap();
+        let counts: Vec<u64> =
+            counts.as_arr().unwrap().iter().map(|c| c.as_f64().unwrap() as u64).collect();
+        assert_eq!(counts.len(), BATCH_EDGES.len() + 1);
+        assert_eq!(counts[1], 2, "two batches of 2 in le=2");
+        assert_eq!(counts[3], 1, "batch of 5 in le=8");
+        assert_eq!(counts[BATCH_EDGES.len()], 1, "batch of 1000 overflows");
+    }
+
+    #[test]
+    fn connection_gauge_tracks_open_and_close() {
+        let s = NetStats::default();
+        s.connection_opened();
+        s.connection_opened();
+        s.connection_closed();
+        assert_eq!(s.connections_open(), 1);
+        let j = s.to_json();
+        assert_eq!(j.get("connections_opened").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("connections_open").unwrap().as_f64(), Some(1.0));
+    }
+}

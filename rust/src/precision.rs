@@ -23,7 +23,7 @@ use std::str::FromStr;
 use anyhow::{anyhow, Result};
 
 /// Weight storage format for one run (CLI `--precision f32|bf16|i8`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub enum Precision {
     /// IEEE single precision — the reference format.
     #[default]

@@ -35,6 +35,11 @@ pub struct FaultPlan {
     /// predictions are bit-identical before and after a forced
     /// evict-everything pass.
     pub evict_budget: bool,
+    /// Route infer traffic through the socket front-end and abuse the
+    /// connections: abrupt disconnect mid-request, half-close after
+    /// send, and slow readers.  The soak asserts no dispatcher wedges
+    /// and the serving invariants hold regardless.
+    pub conn_churn: bool,
 }
 
 impl FaultPlan {
@@ -49,12 +54,13 @@ impl FaultPlan {
             evict: true,
             malformed: true,
             evict_budget: true,
+            conn_churn: true,
         }
     }
 
     /// Parse a comma-separated fault list: `cancel-storm`,
-    /// `worker-death`, `evict`, `malformed`, `evict-budget`, plus the
-    /// shorthands `all` and `none`.
+    /// `worker-death`, `evict`, `malformed`, `evict-budget`,
+    /// `conn-churn`, plus the shorthands `all` and `none`.
     pub fn parse(s: &str) -> Result<FaultPlan> {
         let mut plan = FaultPlan::none();
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
@@ -64,12 +70,13 @@ impl FaultPlan {
                 "evict" => plan.evict = true,
                 "malformed" => plan.malformed = true,
                 "evict-budget" => plan.evict_budget = true,
+                "conn-churn" => plan.conn_churn = true,
                 "all" => plan = FaultPlan::all(),
                 "none" => plan = FaultPlan::none(),
                 other => {
                     return Err(anyhow!(
                         "unknown fault {other:?}; expected cancel-storm, worker-death, \
-                         evict, malformed, evict-budget, all, or none"
+                         evict, malformed, evict-budget, conn-churn, all, or none"
                     ))
                 }
             }
@@ -111,6 +118,9 @@ impl std::fmt::Display for FaultPlan {
         }
         if self.evict_budget {
             parts.push("evict-budget");
+        }
+        if self.conn_churn {
+            parts.push("conn-churn");
         }
         if parts.is_empty() {
             f.write_str("none")
@@ -177,11 +187,14 @@ mod tests {
         assert_eq!(FaultPlan::parse("all").unwrap(), FaultPlan::all());
         let p = FaultPlan::parse("cancel-storm, worker-death").unwrap();
         assert!(p.cancel_storm && p.worker_death && !p.evict && !p.malformed);
-        assert!(!p.evict_budget);
+        assert!(!p.evict_budget && !p.conn_churn);
         assert_eq!(p.to_string(), "cancel-storm,worker-death");
         let p = FaultPlan::parse("evict-budget").unwrap();
         assert!(p.evict_budget && !p.cancel_storm && !p.evict);
         assert_eq!(p.to_string(), "evict-budget");
+        let p = FaultPlan::parse("conn-churn").unwrap();
+        assert!(p.conn_churn && !p.evict_budget && !p.malformed);
+        assert_eq!(p.to_string(), "conn-churn");
         assert_eq!(FaultPlan::parse(&FaultPlan::all().to_string()).unwrap(), FaultPlan::all());
         assert_eq!(FaultPlan::none().to_string(), "none");
         assert!(FaultPlan::parse("cancel_storm").is_err());

@@ -20,7 +20,11 @@
 //!   soak itself: delta-persist every factored-variant job under a
 //!   resident budget far below the job count, then assert the paging
 //!   invariants (no eviction-caused failures, exactly-once reloads,
-//!   bit-identical predictions across evict→reload);
+//!   bit-identical predictions across evict→reload), plus connection
+//!   churn (`conn-churn`): infer traffic routed over a real loopback
+//!   socket front-end ([`crate::net`]) with abrupt disconnects,
+//!   half-closes, and slow readers — no dispatcher may wedge and
+//!   every accepted job still reaches exactly one terminal state;
 //! * [`telemetry`] — queue-depth series, pool occupancy, latency
 //!   histograms, and the [`SoakReport`] (`SOAK_report.json`);
 //! * [`soak`] — the bounded driver tying it together.

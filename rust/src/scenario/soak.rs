@@ -27,20 +27,24 @@
 //! against the plan, so a clean run is clean on every machine.
 
 use std::collections::BTreeSet;
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpStream};
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::memory::delta_bytes;
 use crate::coordinator::FinetuneConfig;
 use crate::engine::EngineKind;
+use crate::net::{read_frame, serve_listener, write_frame, NetConfig, MAX_FRAME_BYTES};
 use crate::precision::Precision;
 use crate::runtime::Manifest;
 use crate::serve::{
     handle_line, Flow, InferRequest, JobId, JobSpec, JobState, Service, ServiceConfig,
 };
-use crate::util::json::Json;
+use crate::util::json::{self, Json};
 
 use super::faults::{silence_injected_panics, FaultPlan, PlanHook};
 use super::generator::{generate, GeneratorConfig};
@@ -76,6 +80,11 @@ pub struct SoakConfig {
     /// [`EVICT_BUDGET_RESIDENTS`] delta records when evict-budget is
     /// armed, unbounded otherwise).
     pub memory_budget_mb: usize,
+    /// Route infer traffic through a real loopback socket front-end
+    /// ([`crate::net::serve_listener`]) instead of in-process calls.
+    /// The conn-churn fault implies this and additionally abuses the
+    /// connections (abrupt disconnect, half-close, slow reader).
+    pub listen: bool,
 }
 
 /// Resident-set capacity (in delta records) the evict-budget fault
@@ -99,6 +108,86 @@ impl SoakConfig {
             pace: false,
             store: None,
             memory_budget_mb: 0,
+            listen: false,
+        }
+    }
+}
+
+/// A framed protocol client over one soak-owned connection.
+struct SoakClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl SoakClient {
+    fn connect(addr: SocketAddr) -> std::io::Result<SoakClient> {
+        let writer = TcpStream::connect(addr)?;
+        let reader = BufReader::new(writer.try_clone()?);
+        Ok(SoakClient { writer, reader })
+    }
+
+    fn send(&mut self, line: &str) -> std::io::Result<()> {
+        write_frame(&mut self.writer, line.as_bytes())
+    }
+
+    fn recv(&mut self) -> std::result::Result<String, String> {
+        match read_frame(&mut self.reader, MAX_FRAME_BYTES) {
+            Ok(Some(payload)) => Ok(String::from_utf8_lossy(&payload).into_owned()),
+            Ok(None) => Err("connection closed before the response".into()),
+            Err(e) => Err(format!("recv: {e}")),
+        }
+    }
+}
+
+/// Route one infer over the socket front-end, applying the planned
+/// connection churn.  `Ok(Some(response))` round-tripped; `Ok(None)`
+/// means the churn variant deliberately abandoned the response.  `Err`
+/// is a violation — the front-end must keep serving through churn.
+fn socket_infer(
+    addr: SocketAddr,
+    client: &mut Option<SoakClient>,
+    line: &str,
+    churn: Option<u64>,
+) -> std::result::Result<Option<String>, String> {
+    match churn {
+        // Abrupt disconnect: dedicated connection, send, drop without
+        // reading.  The request still executes server-side; only this
+        // throwaway connection's response is lost.
+        Some(0) => {
+            let mut c = SoakClient::connect(addr).map_err(|e| format!("connect: {e}"))?;
+            c.send(line).map_err(|e| format!("send: {e}"))?;
+            Ok(None)
+        }
+        // Half-close: send, close the write half, still read the
+        // response — EOF at a frame boundary must not kill the reply.
+        Some(1) => {
+            let mut c = SoakClient::connect(addr).map_err(|e| format!("connect: {e}"))?;
+            c.send(line).map_err(|e| format!("send: {e}"))?;
+            let _ = c.writer.shutdown(Shutdown::Write);
+            c.recv().map(Some)
+        }
+        // Slow reader (Some(_)) or plain round trip (None), both over
+        // the persistent connection; any error drops it so the next
+        // infer reconnects instead of wedging the run.
+        churn => {
+            if client.is_none() {
+                *client =
+                    Some(SoakClient::connect(addr).map_err(|e| format!("connect: {e}"))?);
+            }
+            let c = client.as_mut().expect("client connected above");
+            let result = match c.send(line) {
+                Err(e) => Err(format!("send: {e}")),
+                Ok(()) => {
+                    if churn.is_some() {
+                        std::thread::sleep(Duration::from_millis(30));
+                    }
+                    c.recv().map(Some)
+                }
+            };
+            if result.is_err() {
+                *client = None;
+            }
+            result
         }
     }
 }
@@ -173,8 +262,29 @@ pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
     if cfg.faults.service_side() {
         scfg = scfg.with_faults(std::sync::Arc::new(PlanHook::new(cfg.faults)));
     }
-    let svc = Service::start(scfg)?;
+    let svc = Arc::new(Service::start(scfg)?);
     let entry = svc.default_entry()?;
+    // Socket mode: `--listen`, or implied by the conn-churn fault —
+    // infer traffic then rides a real loopback front-end so the soak
+    // exercises framing, admission, and micro-batching under load.
+    let socket_mode = cfg.listen || cfg.faults.conn_churn;
+    let net_front = if socket_mode {
+        let net_cfg = NetConfig {
+            listen: "127.0.0.1:0".into(),
+            max_inflight: 256,
+            queue_cap: 1024,
+            batch_window_us: 200,
+            max_batch: 8,
+            dispatchers: 0,
+        };
+        Some(serve_listener(svc.clone(), net_cfg)?)
+    } else {
+        None
+    };
+    let net_addr = net_front.as_ref().map(|h| h.addr());
+    let mut net_client: Option<SoakClient> = None;
+    let mut socket_infers = 0u64;
+    let mut churned = 0u64;
     // Variants with a subspace — the only ones a delta job can persist.
     let factored: BTreeSet<String> = variants
         .iter()
@@ -287,28 +397,77 @@ pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
                 TraceOp::Infer { model, precision, seed } => {
                     report.ops.infers += 1;
                     infer_keys.insert((model.clone(), *precision));
-                    let req = InferRequest {
-                        model: model.clone(),
-                        engine: EngineKind::Auto,
-                        precision: *precision,
-                        seed: *seed,
-                        x: None,
-                    };
-                    let t0 = Instant::now();
-                    match svc.infer(None, &req, None) {
-                        Ok(out) => {
-                            report
-                                .infer_roundtrip
-                                .push(t0.elapsed().as_secs_f64() * 1e3);
-                            if out.preds.is_empty() {
-                                report.violations.push(format!(
-                                    "infer on {model:?} ({precision}) returned no predictions"
-                                ));
+                    if let Some(addr) = net_addr {
+                        // Socket path: framed request with an id, the
+                        // response validated like the in-process one.
+                        socket_infers += 1;
+                        let churn = if cfg.faults.conn_churn && report.ops.infers % 6 == 0 {
+                            churned += 1;
+                            Some((report.ops.infers as u64 / 6) % 3)
+                        } else {
+                            None
+                        };
+                        let line = json::obj(vec![
+                            ("cmd", json::str("infer")),
+                            ("model", json::str(model.clone())),
+                            ("engine", json::str("auto")),
+                            ("precision", json::str(precision.to_string())),
+                            ("seed", json::num(*seed as f64)),
+                            ("id", json::num(report.ops.infers as f64)),
+                        ])
+                        .to_string();
+                        let t0 = Instant::now();
+                        match socket_infer(addr, &mut net_client, &line, churn) {
+                            Ok(None) => {} // abrupt churn abandons the response by design
+                            Ok(Some(resp)) => {
+                                report
+                                    .infer_roundtrip
+                                    .push(t0.elapsed().as_secs_f64() * 1e3);
+                                let v = Json::parse(&resp).ok();
+                                let ok = v
+                                    .as_ref()
+                                    .and_then(|v| v.get("ok").and_then(|o| o.as_bool()))
+                                    .unwrap_or(false);
+                                let preds = v
+                                    .as_ref()
+                                    .and_then(|v| v.get("preds").and_then(|p| p.as_arr()))
+                                    .map(|a| !a.is_empty())
+                                    .unwrap_or(false);
+                                if !ok || !preds {
+                                    report.violations.push(format!(
+                                        "socket infer on {model:?} ({precision}) drew a bad \
+                                         response: {resp}"
+                                    ));
+                                }
                             }
+                            Err(e) => report.violations.push(format!(
+                                "socket infer on {model:?} ({precision}) failed: {e}"
+                            )),
                         }
-                        Err(e) => report.violations.push(format!(
-                            "infer on {model:?} ({precision}) failed: {e:#}"
-                        )),
+                    } else {
+                        let req = InferRequest {
+                            model: model.clone(),
+                            engine: EngineKind::Auto,
+                            precision: *precision,
+                            seed: *seed,
+                            x: None,
+                        };
+                        let t0 = Instant::now();
+                        match svc.infer(None, &req, None) {
+                            Ok(out) => {
+                                report
+                                    .infer_roundtrip
+                                    .push(t0.elapsed().as_secs_f64() * 1e3);
+                                if out.preds.is_empty() {
+                                    report.violations.push(format!(
+                                        "infer on {model:?} ({precision}) returned no predictions"
+                                    ));
+                                }
+                            }
+                            Err(e) => report.violations.push(format!(
+                                "infer on {model:?} ({precision}) failed: {e:#}"
+                            )),
+                        }
                     }
                 }
                 TraceOp::Cancel { submit } => {
@@ -379,6 +538,23 @@ pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
             }))
             .collect()
     });
+
+    // Quiesce the socket front-end before the invariant checks: churn
+    // leaves abandoned requests mid-execution server-side, and the
+    // exactly-once pool accounting below must observe their completed
+    // loads.  The drained stats land in the report.
+    if let Some(mut handle) = net_front {
+        drop(net_client);
+        let stats = handle.stats();
+        handle.shutdown();
+        let mut m = match stats.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("NetStats::to_json returns an object"),
+        };
+        m.insert("socket_infers".to_string(), json::num(socket_infers as f64));
+        m.insert("churned_connections".to_string(), json::num(churned as f64));
+        report.net = Some(Json::Obj(m));
+    }
 
     // All watchers joined => every submitted job reached its terminal
     // transition; classify outcomes and check exactly-one-terminal.

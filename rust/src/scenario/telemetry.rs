@@ -147,6 +147,11 @@ pub struct SoakReport {
     /// Delta jobs whose predictions were verified bit-identical across
     /// a forced evict-everything pass (evict-budget fault).
     pub store_verified: usize,
+    /// Socket front-end telemetry (`None` = in-process soak; present
+    /// when `--listen` or the conn-churn fault routed infer traffic
+    /// over real sockets): the [`crate::net::NetStats`] counters plus
+    /// the driver's socket/churn op counts.
+    pub net: Option<Json>,
     /// Invariant violations; a healthy soak ends with this EMPTY.
     pub violations: Vec<String>,
 }
@@ -204,6 +209,9 @@ impl SoakReport {
             let mut store = crate::serve::store_stat_fields(s);
             store.push(("verified_jobs", num(self.store_verified as f64)));
             fields.push(("store", obj(store)));
+        }
+        if let Some(n) = &self.net {
+            fields.push(("net", n.clone()));
         }
         fields.push((
             "violations",

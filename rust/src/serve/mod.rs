@@ -18,8 +18,11 @@
 //!   that interleaves with running jobs;
 //! * [`proto`] — the JSON-lines protocol (`submit` / `status` /
 //!   `events` / `infer` / `cancel` / `forget` / `store` /
-//!   `store-stats` / `shutdown`) `wasi-train serve` speaks over
-//!   stdin/stdout.
+//!   `store-stats` / `stats` / `shutdown`) `wasi-train serve` speaks
+//!   over stdin/stdout — and, length-prefix framed, over the socket
+//!   front-end ([`crate::net`], `serve --listen`), which multiplexes
+//!   many connections onto one service and micro-batches concurrent
+//!   `infer` requests through [`Service::infer_batch`].
 //!
 //! A service started with `--store DIR` additionally persists
 //! `persist:"delta"` jobs to a [`crate::store::VariantStore`]: only the
@@ -41,8 +44,9 @@ pub mod service;
 
 pub use job::{JobEvent, JobId, JobSpec, JobState};
 pub use pool::{ModelPool, PoolEntry, PooledInfer};
-pub use proto::{handle_line, serve_lines, store_stat_fields, Flow};
+pub use proto::{handle_line, serve_lines, service_stat_fields, store_stat_fields, Flow};
 pub use runner::{
-    run_infer, run_infer_keyed, run_infer_with, InferOutput, InferParams, InferRequest, RunnerEvent,
+    run_infer, run_infer_batch_keyed, run_infer_keyed, run_infer_with, InferOutput, InferParams,
+    InferRequest, RunnerEvent,
 };
 pub use service::{delta_key, FaultAction, FaultHook, Service, ServiceConfig};

@@ -3,9 +3,15 @@
 //! per line on stdout.
 //!
 //! Requests: `{"cmd": "submit"|"status"|"events"|"infer"|"cancel"|
-//! "forget"|"store"|"store-stats"|"shutdown", ...}`.  Every response
-//! carries `"ok"` plus either the payload or `"error"`.  See DESIGN.md
-//! §serve for the full schema and README for a transcript.
+//! "forget"|"store"|"store-stats"|"stats"|"shutdown", ...}`.  Every
+//! response carries `"ok"` plus either the payload or `"error"`.  See
+//! DESIGN.md §serve for the full schema and README for a transcript.
+//!
+//! The same protocol runs over two transports: newline-delimited on
+//! stdio (this module's [`serve_lines`]) and length-prefix-framed over
+//! TCP (`crate::net`, `serve --listen`), which reuses [`handle_line`]
+//! per frame and threads an optional request `"id"` through at the
+//! framing layer.
 
 use std::io::{BufRead, Write};
 use std::path::PathBuf;
@@ -19,6 +25,11 @@ use super::job::{JobEvent, JobId, JobSpec, JobState};
 use super::runner::InferRequest;
 use super::service::Service;
 
+/// Accepted keys of the `infer` command (one definition for the stdio
+/// dispatch table and the socket front-end's [`parse_infer_frame`]).
+pub(crate) const INFER_KEYS: &[&str] =
+    &["model", "engine", "precision", "seed", "x", "job", "artifacts"];
+
 /// What the stdio loop should do after a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Flow {
@@ -26,7 +37,7 @@ pub enum Flow {
     Shutdown,
 }
 
-fn error_line(cmd: &str, e: &anyhow::Error) -> Json {
+pub(crate) fn error_line(cmd: &str, e: &anyhow::Error) -> Json {
     obj(vec![
         ("ok", Json::Bool(false)),
         ("cmd", jstr(cmd)),
@@ -231,6 +242,58 @@ fn parse_infer(req: &Json) -> Result<InferRequest> {
     })
 }
 
+/// Parse a full `infer` request frame — key validation, the
+/// [`InferRequest`] itself, and its parameter-source selectors — shared
+/// by [`handle_line`]'s dispatch and the socket front-end's
+/// micro-batching path (`crate::net`), so both transports accept and
+/// reject exactly the same requests.
+pub(crate) fn parse_infer_frame(
+    req: &Json,
+) -> Result<(InferRequest, Option<PathBuf>, Option<JobId>)> {
+    check_keys(req, "infer", INFER_KEYS)?;
+    let ireq = parse_infer(req)?;
+    let artifacts = req_path(req, "artifacts")?;
+    let job = req_usize(req, "job")?.map(|j| JobId(j as u64));
+    Ok((ireq, artifacts, job))
+}
+
+/// Render one infer result as its protocol response object (shared by
+/// the dispatch arm and the socket front-end).
+pub(crate) fn infer_response(model: &str, out: &super::runner::InferOutput) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("cmd", jstr("infer")),
+        ("model", jstr(model)),
+        ("engine", jstr(out.backend.clone())),
+        ("precision", jstr(out.precision.to_string())),
+        ("batch", num(out.batch as f64)),
+        ("preds", arr(out.preds.iter().map(|p| num(*p as f64)))),
+    ];
+    if let Some(c) = out.correct {
+        fields.push(("correct", num(c as f64)));
+    }
+    obj(fields)
+}
+
+/// Service-level gauges for the `stats` command (the socket front-end
+/// appends its connection/batching counters to these).
+pub fn service_stat_fields(svc: &Service) -> Vec<(&'static str, Json)> {
+    let entry = svc.default_entry().ok();
+    vec![
+        ("queue_depth", num(svc.queue_depth() as f64)),
+        ("running", num(svc.running_count() as f64)),
+        ("jobs", num(svc.jobs().len() as f64)),
+        (
+            "pool_infer_loads",
+            num(entry.as_ref().map(|e| e.infer_loads()).unwrap_or(0) as f64),
+        ),
+        (
+            "pool_infer_evictions",
+            num(entry.as_ref().map(|e| e.infer_evictions()).unwrap_or(0) as f64),
+        ),
+    ]
+}
+
 /// The attached variant store, or the in-band error every store command
 /// answers when the service was started without `--store`.
 fn no_store_err(svc: &Service) -> Result<std::sync::Arc<crate::store::VariantStore>> {
@@ -303,8 +366,8 @@ fn dispatch(
         ]),
         "status" | "cancel" | "forget" => Some(&["job"]),
         "events" => Some(&["job", "wait"]),
-        "infer" => Some(&["model", "engine", "precision", "seed", "x", "job", "artifacts"]),
-        "store" | "store-stats" => Some(&[]),
+        "infer" => Some(INFER_KEYS),
+        "store" | "store-stats" | "stats" => Some(&[]),
         "shutdown" => Some(&[]),
         _ => None,
     };
@@ -383,26 +446,9 @@ fn dispatch(
                 },
             }
         }
-        "infer" => parse_infer(req).and_then(|ireq| {
-            let artifacts = req_path(req, "artifacts")?;
-            let job = req_usize(req, "job")?.map(|j| JobId(j as u64));
+        "infer" => parse_infer_frame(req).and_then(|(ireq, artifacts, job)| {
             let infer_out = svc.infer(artifacts.as_deref(), &ireq, job)?;
-            let mut fields = vec![
-                ("ok", Json::Bool(true)),
-                ("cmd", jstr("infer")),
-                ("model", jstr(ireq.model.clone())),
-                ("engine", jstr(infer_out.backend.clone())),
-                ("precision", jstr(infer_out.precision.to_string())),
-                ("batch", num(infer_out.batch as f64)),
-                (
-                    "preds",
-                    arr(infer_out.preds.iter().map(|p| num(*p as f64))),
-                ),
-            ];
-            if let Some(c) = infer_out.correct {
-                fields.push(("correct", num(c as f64)));
-            }
-            Ok(Some(obj(fields)))
+            Ok(Some(infer_response(&ireq.model, &infer_out)))
         }),
         "cancel" => req_job(req).map(|id| {
             let cancelled = svc.cancel(id);
@@ -448,13 +494,18 @@ fn dispatch(
             fields.extend(store_stat_fields(&s));
             Ok(Some(obj(fields)))
         }),
+        "stats" => {
+            let mut fields = vec![("ok", Json::Bool(true)), ("cmd", jstr("stats"))];
+            fields.extend(service_stat_fields(svc));
+            Ok(Some(obj(fields)))
+        }
         "shutdown" => Ok(Some(obj(vec![
             ("ok", Json::Bool(true)),
             ("cmd", jstr("shutdown")),
         ]))),
         other => Err(anyhow!(
             "unknown cmd {other:?}; expected submit|status|events|infer|cancel|forget\
-             |store|store-stats|shutdown"
+             |store|store-stats|stats|shutdown"
         )),
     };
     Ok(result)

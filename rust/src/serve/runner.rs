@@ -170,7 +170,10 @@ pub struct InferRequest {
 }
 
 /// Inference result: predictions, plus accuracy when the input was the
-/// labelled synthetic probe batch.
+/// labelled synthetic probe batch.  `logits` carries the raw pre-argmax
+/// rows so callers (the micro-batching bit-identity pins in
+/// `tests/net.rs`, notably) can compare outputs bitwise, not just at
+/// the argmax level.
 #[derive(Debug, Clone)]
 pub struct InferOutput {
     pub backend: String,
@@ -178,6 +181,7 @@ pub struct InferOutput {
     pub preds: Vec<usize>,
     pub batch: usize,
     pub correct: Option<usize>,
+    pub logits: Vec<f32>,
 }
 
 /// The parameter source a pool inference reads from.
@@ -226,7 +230,47 @@ pub fn run_infer_keyed(
     source: InferParams<'_>,
     cache_key: Option<&str>,
 ) -> Result<InferOutput> {
-    let entry = pool.manifest.model(&req.model)?;
+    let mut outs = run_infer_batch_keyed(pool, std::slice::from_ref(req), source, cache_key)?;
+    outs.pop().ok_or_else(|| anyhow!("infer batch returned no output"))
+}
+
+/// [`run_infer_keyed`] over a *group* of requests sharing one
+/// `(model, engine, precision)` pool entry and one parameter source —
+/// the execution site of the network front-end's micro-batcher
+/// (`net/batcher.rs`, DESIGN.md §Network front-end).
+///
+/// All requests' input rows are stacked into ONE engine call through
+/// the arena-planned batched walk, and the logits are split back per
+/// request afterwards.  Every inference GEMM in the native engine is
+/// row-independent (`linalg::kernels`: per-row dot products, fixed
+/// ascending-k accumulation order), and the graph walk itself is
+/// per-batch-element, so the stacked call is **bitwise identical** to
+/// running each request alone — pinned at all three precisions in
+/// `tests/net.rs`.  An HLO engine makes no such shape promise, so a
+/// multi-request group without a native engine runs each request's
+/// rows through its own call instead (same results, no stacking win).
+pub fn run_infer_batch_keyed(
+    pool: &PoolEntry,
+    reqs: &[InferRequest],
+    source: InferParams<'_>,
+    cache_key: Option<&str>,
+) -> Result<Vec<InferOutput>> {
+    let first = reqs.first().ok_or_else(|| anyhow!("empty infer batch"))?;
+    for r in &reqs[1..] {
+        if r.model != first.model || r.engine != first.engine || r.precision != first.precision {
+            bail!(
+                "infer batch mixes pool keys: ({}, {:?}, {}) vs ({}, {:?}, {}) — \
+                 the batcher must only coalesce requests sharing one entry",
+                first.model,
+                first.engine,
+                first.precision,
+                r.model,
+                r.engine,
+                r.precision
+            );
+        }
+    }
+    let entry = pool.manifest.model(&first.model)?;
     if let InferParams::Full(p) = &source {
         if p.len() != entry.params_len {
             bail!(
@@ -248,39 +292,98 @@ pub fn run_infer_keyed(
             );
         }
     }
-    let pooled = pool.shared_infer_at(&req.model, req.engine, req.precision)?;
+    let pooled = pool.shared_infer_at(&first.model, first.engine, first.precision)?;
     let engine = pooled.engine();
-    let (x, labels) = match &req.x {
-        Some(x) => {
-            if x.is_empty() || x.len() % entry.input_dim != 0 {
-                bail!(
-                    "input length {} is not a positive multiple of input_dim {}",
-                    x.len(),
-                    entry.input_dim
-                );
+
+    // Per-request input prep (explicit rows, or the labelled synthetic
+    // probe batch seeded per request).
+    let mut xs: Vec<Vec<f32>> = Vec::with_capacity(reqs.len());
+    let mut labels: Vec<Option<Vec<usize>>> = Vec::with_capacity(reqs.len());
+    for req in reqs {
+        match &req.x {
+            Some(x) => {
+                if x.is_empty() || x.len() % entry.input_dim != 0 {
+                    bail!(
+                        "input length {} is not a positive multiple of input_dim {}",
+                        x.len(),
+                        entry.input_dim
+                    );
+                }
+                xs.push(x.clone());
+                labels.push(None);
             }
-            (x.clone(), None)
+            None => {
+                let side = entry.image_side().ok_or_else(|| {
+                    anyhow!(
+                        "model {} is not an image model (input_dim {}); \
+                         supply explicit inputs",
+                        entry.name,
+                        entry.input_dim
+                    )
+                })?;
+                let mut task = VisionTask::new("infer", entry.classes, side, 0.7, 8, req.seed);
+                let (x, _, l) = task.batch_onehot(entry.batch);
+                xs.push(x);
+                labels.push(Some(l));
+            }
         }
-        None => {
-            let side = entry.image_side().ok_or_else(|| {
-                anyhow!(
-                    "model {} is not an image model (input_dim {}); \
-                     supply explicit inputs",
-                    entry.name,
-                    entry.input_dim
-                )
-            })?;
-            let mut task = VisionTask::new("infer", entry.classes, side, 0.7, 8, req.seed);
-            let (x, _, labels) = task.batch_onehot(entry.batch);
-            (x, Some(labels))
+    }
+
+    let logits_per_req: Vec<Vec<f32>> = if reqs.len() == 1 || pooled.native().is_some() {
+        // One stacked call; split the logit rows back out per request.
+        let stacked: Vec<f32> = xs.iter().flat_map(|x| x.iter().copied()).collect();
+        let logits = infer_logits(pool, &pooled, first, &source, cache_key, &stacked)?;
+        let mut off = 0usize;
+        let mut split = Vec::with_capacity(reqs.len());
+        for x in &xs {
+            let n = (x.len() / entry.input_dim) * entry.classes;
+            split.push(logits[off..off + n].to_vec());
+            off += n;
         }
+        split
+    } else {
+        xs.iter()
+            .map(|x| infer_logits(pool, &pooled, first, &source, cache_key, x))
+            .collect::<Result<_>>()?
     };
-    let preds = if req.precision == Precision::F32 {
-        match &source {
-            InferParams::Full(p) => engine.predict(p, &x)?,
+
+    let mut outs = Vec::with_capacity(reqs.len());
+    for (i, req) in reqs.iter().enumerate() {
+        let logits = &logits_per_req[i];
+        let preds = crate::engine::ops::argmax_rows(logits, entry.classes);
+        let correct = labels[i]
+            .as_ref()
+            .map(|l| preds.iter().zip(l).filter(|(p, q)| p == q).count());
+        outs.push(InferOutput {
+            backend: engine.backend().to_string(),
+            precision: req.precision,
+            batch: preds.len(),
+            preds,
+            correct,
+            logits: logits.clone(),
+        });
+    }
+    Ok(outs)
+}
+
+/// The (precision × parameter-source) inference matrix, at the logits
+/// level.  `x` may be one request's rows or a whole micro-batch's
+/// stacked rows — the callee never depends on the row count.
+fn infer_logits(
+    pool: &PoolEntry,
+    pooled: &super::pool::PooledInfer<'_>,
+    req: &InferRequest,
+    source: &InferParams<'_>,
+    cache_key: Option<&str>,
+    x: &[f32],
+) -> Result<Vec<f32>> {
+    let engine = pooled.engine();
+    if req.precision == Precision::F32 {
+        match source {
+            InferParams::Full(p) => engine.infer(p, x),
             InferParams::Base => {
                 let initial = pool.initial_params(&req.model)?;
-                engine.predict(&initial, &x)?
+                engine.infer(&initial, x)
             }
             InferParams::Delta(rec) => {
                 let base = pool.initial_params(&req.model)?;
@@ -290,15 +393,14 @@ pub fn run_infer_keyed(
                         // shared base inside the walk — bit-identical
                         // to predicting on the materialized vector.
                         let overlay = rec.overlay(&base)?;
-                        let logits = native.infer_overlay(&overlay, &x)?;
-                        crate::engine::ops::argmax_rows(&logits, entry.classes)
+                        native.infer_overlay(&overlay, x)
                     } else {
-                        engine.predict(&rec.apply(&base)?, &x)?
+                        engine.infer(&rec.apply(&base)?, x)
                     }
                 } else {
                     // A bf16-trained job's frozen region is the rounded
                     // base; apply() reproduces it exactly, transiently.
-                    engine.predict(&rec.apply(&base)?, &x)?
+                    engine.infer(&rec.apply(&base)?, x)
                 }
             }
         }
@@ -310,7 +412,7 @@ pub fn run_infer_keyed(
         let native = pooled
             .native()
             .ok_or_else(|| anyhow!("precision {} requires the native engine", req.precision))?;
-        let logits = match &source {
+        match source {
             InferParams::Full(p) => {
                 let packed = match cache_key {
                     Some(key) => pool.packed_for(key, req.precision, || {
@@ -318,9 +420,9 @@ pub fn run_infer_keyed(
                     })?,
                     None => std::sync::Arc::new(native.pack_params(p, req.precision)?),
                 };
-                native.infer_packed(&packed, &x)?
+                native.infer_packed(&packed, x)
             }
-            InferParams::Base => native.infer_quantized(&x)?,
+            InferParams::Base => native.infer_quantized(x),
             InferParams::Delta(rec) => {
                 // Transiently materialize, then pack exactly as the
                 // retained-full path would — the packed views are
@@ -334,19 +436,8 @@ pub fn run_infer_keyed(
                         std::sync::Arc::new(native.pack_params(&rec.apply(&base)?, req.precision)?)
                     }
                 };
-                native.infer_packed(&packed, &x)?
+                native.infer_packed(&packed, x)
             }
-        };
-        crate::engine::ops::argmax_rows(&logits, entry.classes)
-    };
-    let correct = labels
-        .as_ref()
-        .map(|l| preds.iter().zip(l).filter(|(p, q)| p == q).count());
-    Ok(InferOutput {
-        backend: engine.backend().to_string(),
-        precision: req.precision,
-        batch: preds.len(),
-        preds,
-        correct,
-    })
+        }
+    }
 }

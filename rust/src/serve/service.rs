@@ -694,21 +694,40 @@ impl Service {
         req: &InferRequest,
         job: Option<JobId>,
     ) -> Result<InferOutput> {
+        let mut outs = self.infer_batch(artifacts, std::slice::from_ref(req), job)?;
+        outs.pop().ok_or_else(|| anyhow!("infer batch returned no output"))
+    }
+
+    /// [`Service::infer`] over a micro-batch: every request must target
+    /// the same `(model, engine, precision)` pool entry and the same
+    /// parameter source (`artifacts`/`job`), which is exactly the
+    /// coalescing key of the network front-end's batcher
+    /// ([`crate::net::BatchKey`]).  The group's input rows run through
+    /// ONE stacked engine call and fan back out per request,
+    /// bit-identical to serving each alone
+    /// ([`runner::run_infer_batch_keyed`]).
+    pub fn infer_batch(
+        &self,
+        artifacts: Option<&std::path::Path>,
+        reqs: &[InferRequest],
+        job: Option<JobId>,
+    ) -> Result<Vec<InferOutput>> {
+        let first = reqs.first().ok_or_else(|| anyhow!("empty infer batch"))?;
         let dir = artifacts
             .map(|p| p.to_path_buf())
             .unwrap_or_else(|| self.shared.default_artifacts.clone());
         let entry = self.shared.pool.open(&dir)?;
         match job {
-            None => runner::run_infer_with(&entry, req, InferParams::Base),
+            None => runner::run_infer_batch_keyed(&entry, reqs, InferParams::Base, None),
             Some(id) => {
                 // A job's key doubles as the packed-params cache key:
                 // repeated reduced-precision requests against one Done
                 // job quantize+pack once (invalidated by `forget`).
                 let cache_key = delta_key(id);
-                match self.job_source_for_model(id, &req.model, &dir)? {
-                    JobSource::Full(p) => runner::run_infer_keyed(
+                match self.job_source_for_model(id, &first.model, &dir)? {
+                    JobSource::Full(p) => runner::run_infer_batch_keyed(
                         &entry,
-                        req,
+                        reqs,
                         InferParams::Full(&p),
                         Some(&cache_key),
                     ),
@@ -719,9 +738,9 @@ impl Service {
                         // `get` reloads from disk if the record was paged
                         // out — eviction must never fail a request.
                         let rec = store.get(&key)?;
-                        runner::run_infer_keyed(
+                        runner::run_infer_batch_keyed(
                             &entry,
-                            req,
+                            reqs,
                             InferParams::Delta(&rec),
                             Some(&cache_key),
                         )

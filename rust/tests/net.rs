@@ -1,0 +1,309 @@
+//! Socket front-end integration tests (tier-1, artifact-free): the
+//! network layer over the pure-rust demo artifacts.
+//!
+//! What is pinned:
+//! * cross-request micro-batching is INVISIBLE in the answers: a
+//!   stacked [`Service::infer_batch`] call returns logits bitwise
+//!   identical to serving each request alone, at f32, bf16, AND i8,
+//!   for pretrained and personalized (job) parameter sources — the
+//!   acceptance criterion of the front-end PR;
+//! * the [`Batcher`] coalesces only within a [`BatchKey`]: same-key
+//!   concurrent requests share exactly one stacked call, requests on
+//!   different keys never do;
+//! * length-delimited framing over a real loopback socket: request
+//!   `"id"`s echo on every response line, garbage inside a well-formed
+//!   frame is answered in-band without killing the connection, and a
+//!   protocol `shutdown` stops the listener;
+//! * admission control degrades overload to a deterministic in-band
+//!   `code:"overloaded"` rejection, never an unresponsive socket.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use wasi_train::coordinator::FinetuneConfig;
+use wasi_train::engine::demo::{write_demo_artifacts, DemoConfig};
+use wasi_train::engine::EngineKind;
+use wasi_train::net::{
+    read_frame, serve_listener, write_frame, BatchKey, Batcher, NetConfig, NetStats,
+    MAX_FRAME_BYTES,
+};
+use wasi_train::precision::Precision;
+use wasi_train::serve::{InferRequest, JobSpec, Service, ServiceConfig};
+use wasi_train::util::json::Json;
+
+fn demo_service(tag: &str, workers: usize) -> Arc<Service> {
+    let dir = std::env::temp_dir().join(format!("wasi_net_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    write_demo_artifacts(&dir, &DemoConfig::default()).unwrap();
+    Arc::new(Service::start(ServiceConfig::new(dir).with_workers(workers)).unwrap())
+}
+
+fn req(model: &str, precision: Precision, seed: u64) -> InferRequest {
+    InferRequest { model: model.into(), engine: EngineKind::Native, precision, seed, x: None }
+}
+
+fn key(precision: Precision) -> BatchKey {
+    BatchKey {
+        artifacts: None,
+        model: "vit_demo_wasi_eps80".into(),
+        engine: EngineKind::Native,
+        precision,
+        job: None,
+    }
+}
+
+fn bits(logits: &[f32]) -> Vec<u32> {
+    logits.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The acceptance criterion: a stacked micro-batch answers every
+/// request with EXACTLY the bits a solo call produces, at all three
+/// serving precisions.
+#[test]
+fn stacked_infer_is_bit_identical_to_solo_at_every_precision() {
+    let svc = demo_service("bitwise", 1);
+    for precision in [Precision::F32, Precision::Bf16, Precision::I8] {
+        let reqs: Vec<InferRequest> =
+            (0..5).map(|i| req("vit_demo_wasi_eps80", precision, 100 + i)).collect();
+        let solo: Vec<_> = reqs.iter().map(|r| svc.infer(None, r, None).unwrap()).collect();
+        let stacked = svc.infer_batch(None, &reqs, None).unwrap();
+        assert_eq!(stacked.len(), solo.len());
+        for (s, b) in solo.iter().zip(&stacked) {
+            assert_eq!(
+                bits(&s.logits),
+                bits(&b.logits),
+                "{precision} logits diverged under stacking"
+            );
+            assert!(!b.logits.is_empty(), "{precision} output carries logits");
+            assert_eq!(s.preds, b.preds);
+            assert_eq!(s.correct, b.correct);
+            assert_eq!(s.batch, b.batch);
+        }
+    }
+    svc.shutdown();
+}
+
+/// Personalized params (a Done job's weights) ride the same stacked
+/// path bit-identically — the batch key pins the job, not just the
+/// variant.
+#[test]
+fn stacked_infer_serves_job_params_bit_identically() {
+    let svc = demo_service("bitwise_job", 1);
+    let cfg = FinetuneConfig::builder()
+        .model("vit_demo_wasi_eps80")
+        .samples(32)
+        .steps(3)
+        .lr0(0.1)
+        .engine(EngineKind::Native)
+        .build();
+    let id = svc.submit(JobSpec::new(cfg)).unwrap();
+    svc.wait(id).unwrap();
+    let reqs: Vec<InferRequest> =
+        (0..4).map(|i| req("vit_demo_wasi_eps80", Precision::F32, 7 + i)).collect();
+    let solo: Vec<_> = reqs.iter().map(|r| svc.infer(None, r, Some(id)).unwrap()).collect();
+    let stacked = svc.infer_batch(None, &reqs, Some(id)).unwrap();
+    for (s, b) in solo.iter().zip(&stacked) {
+        assert_eq!(bits(&s.logits), bits(&b.logits), "personalized logits diverged");
+        assert_eq!(s.preds, b.preds);
+    }
+    // The personalized answers really differ from pretrained serving —
+    // otherwise the pin above would be vacuous.
+    let pre = svc.infer(None, &reqs[0], None).unwrap();
+    assert_ne!(bits(&pre.logits), bits(&stacked[0].logits));
+    svc.shutdown();
+}
+
+/// Requests on DIFFERENT keys (here: precisions) must never share a
+/// stacked call, no matter how wide the gather window is.
+#[test]
+fn batcher_never_coalesces_across_keys() {
+    let svc = demo_service("nokey", 2);
+    let stats = Arc::new(NetStats::default());
+    let batcher = Batcher::new(svc.clone(), 50_000, 4, stats.clone());
+    let f32_ref = svc.infer(None, &req("vit_demo_wasi_eps80", Precision::F32, 5), None).unwrap();
+    let i8_ref = svc.infer(None, &req("vit_demo_wasi_eps80", Precision::I8, 5), None).unwrap();
+    std::thread::scope(|s| {
+        let b = &batcher;
+        let a = s.spawn(move || {
+            b.submit(key(Precision::F32), req("vit_demo_wasi_eps80", Precision::F32, 5)).unwrap()
+        });
+        let c = s.spawn(move || {
+            b.submit(key(Precision::I8), req("vit_demo_wasi_eps80", Precision::I8, 5)).unwrap()
+        });
+        let out_a = a.join().unwrap();
+        let out_c = c.join().unwrap();
+        assert_eq!(bits(&out_a.logits), bits(&f32_ref.logits));
+        assert_eq!(bits(&out_c.logits), bits(&i8_ref.logits));
+    });
+    assert_eq!(stats.batches(), 0, "different keys must never share a stacked call");
+    assert_eq!(stats.infer_solo(), 2);
+    assert_eq!(stats.infer_batched(), 0);
+    svc.shutdown();
+}
+
+/// Four same-key concurrent requests coalesce into exactly ONE stacked
+/// call (the fourth arrival seals the group early — the long window
+/// only bounds the wait, the test never sleeps it out), and every
+/// caller still gets its own solo-identical answer.
+#[test]
+fn batcher_coalesces_same_key_into_one_stacked_call() {
+    let svc = demo_service("coalesce", 2);
+    let stats = Arc::new(NetStats::default());
+    let batcher = Batcher::new(svc.clone(), 5_000_000, 4, stats.clone());
+    let reqs: Vec<InferRequest> =
+        (0..4).map(|i| req("vit_demo_wasi_eps80", Precision::F32, 20 + i)).collect();
+    let solo: Vec<_> = reqs.iter().map(|r| svc.infer(None, r, None).unwrap()).collect();
+    let outs: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|r| {
+                let b = &batcher;
+                let r = r.clone();
+                s.spawn(move || b.submit(key(Precision::F32), r).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(stats.batches(), 1, "four same-key requests must share one stacked call");
+    assert_eq!(stats.infer_batched(), 4);
+    assert_eq!(stats.infer_solo(), 0);
+    for (s, b) in solo.iter().zip(&outs) {
+        assert_eq!(bits(&s.logits), bits(&b.logits), "batched answer diverged from solo");
+        assert_eq!(s.preds, b.preds);
+    }
+    svc.shutdown();
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    write_frame(stream, line.as_bytes()).unwrap();
+}
+
+fn recv_line(reader: &mut BufReader<TcpStream>) -> Option<Json> {
+    let payload = read_frame(reader, MAX_FRAME_BYTES).unwrap()?;
+    Some(Json::parse(std::str::from_utf8(&payload).unwrap()).unwrap())
+}
+
+/// Framed request/response over a real loopback socket: ids echo on
+/// every line (numeric and string), garbage inside a valid frame is
+/// answered in-band, and a protocol `shutdown` stops the listener.
+#[test]
+fn socket_round_trip_echoes_ids_and_survives_garbage() {
+    let svc = demo_service("socket", 1);
+    let mut handle = serve_listener(
+        svc.clone(),
+        NetConfig { batch_window_us: 0, max_batch: 1, ..NetConfig::default() },
+    )
+    .unwrap();
+    let mut stream = TcpStream::connect(handle.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let line = r#"{"cmd":"infer","model":"vit_demo_wasi_eps80","seed":3,"precision":"i8","id":42}"#;
+    send_line(&mut stream, line);
+    let resp = recv_line(&mut reader).unwrap();
+    assert_eq!(resp.get("id").and_then(|v| v.as_usize()), Some(42), "{resp:?}");
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    assert_eq!(resp.get("precision").and_then(|v| v.as_str()), Some("i8"));
+    assert!(resp.get("preds").and_then(|v| v.as_arr()).is_some_and(|a| !a.is_empty()));
+
+    // String ids echo too; `stats` answers inline with net counters.
+    send_line(&mut stream, r#"{"cmd":"stats","id":"s-1"}"#);
+    let resp = recv_line(&mut reader).unwrap();
+    assert_eq!(resp.get("id").and_then(|v| v.as_str()), Some("s-1"));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let net = resp.get("net").expect("stats carries the net section");
+    assert!(net.get("frames_in").and_then(|v| v.as_f64()).is_some_and(|n| n >= 2.0));
+    assert!(resp.get("connections").is_some());
+
+    // Garbage inside a well-formed frame: in-band error, live socket.
+    send_line(&mut stream, "this is not json");
+    let resp = recv_line(&mut reader).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+    send_line(&mut stream, r#"{"cmd":"stats","id":7}"#);
+    let resp = recv_line(&mut reader).unwrap();
+    assert_eq!(resp.get("id").and_then(|v| v.as_usize()), Some(7));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+
+    // A protocol shutdown is acknowledged, then the listener stops.
+    send_line(&mut stream, r#"{"cmd":"shutdown","id":9}"#);
+    let resp = recv_line(&mut reader).unwrap();
+    assert_eq!(resp.get("id").and_then(|v| v.as_usize()), Some(9));
+    assert_eq!(resp.get("cmd").and_then(|v| v.as_str()), Some("shutdown"));
+    handle.wait_stop();
+    handle.shutdown();
+    svc.shutdown();
+}
+
+/// With the single in-flight slot pinned by a streamed `events`
+/// subscription, the next request must be rejected in-band with
+/// `code:"overloaded"` — deterministically, not by racing timeouts.
+#[test]
+fn admission_rejects_overload_in_band() {
+    let svc = demo_service("overload", 1);
+    let cfg = FinetuneConfig::builder()
+        .model("vit_demo_vanilla")
+        .samples(32)
+        .steps(5000)
+        .lr0(0.1)
+        .engine(EngineKind::Native)
+        .build();
+    let job = svc.submit(JobSpec::new(cfg)).unwrap();
+    let mut handle = serve_listener(
+        svc.clone(),
+        NetConfig {
+            max_inflight: 1,
+            queue_cap: 8,
+            batch_window_us: 0,
+            max_batch: 1,
+            dispatchers: 2,
+            ..NetConfig::default()
+        },
+    )
+    .unwrap();
+
+    // Connection A claims the only in-flight slot with a job stream.
+    let mut a = TcpStream::connect(handle.addr()).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut ra = BufReader::new(a.try_clone().unwrap());
+    send_line(&mut a, &format!(r#"{{"cmd":"events","job":{},"wait":true,"id":"sub"}}"#, job.0));
+    let first = recv_line(&mut ra).unwrap();
+    assert_eq!(first.get("id").and_then(|v| v.as_str()), Some("sub"), "{first:?}");
+    assert_eq!(first.get("event").and_then(|v| v.as_str()), Some("started"));
+
+    // Connection B must be turned away in-band, immediately.
+    let mut b = TcpStream::connect(handle.addr()).unwrap();
+    b.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut rb = BufReader::new(b.try_clone().unwrap());
+    send_line(&mut b, r#"{"cmd":"infer","model":"vit_demo_vanilla","seed":1,"id":"rej"}"#);
+    let resp = recv_line(&mut rb).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+    assert_eq!(resp.get("code").and_then(|v| v.as_str()), Some("overloaded"));
+    assert_eq!(resp.get("id").and_then(|v| v.as_str()), Some("rej"));
+
+    // ...but `stats` still answers under overload (that is its point).
+    send_line(&mut b, r#"{"cmd":"stats","id":"peek"}"#);
+    let resp = recv_line(&mut rb).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    assert!(
+        resp.get("net")
+            .and_then(|n| n.get("admission_rejections"))
+            .and_then(|v| v.as_f64())
+            .is_some_and(|n| n >= 1.0),
+        "{resp:?}"
+    );
+
+    // Cancelling the job terminates A's stream and frees the slot.
+    assert!(svc.cancel(job));
+    loop {
+        let line = recv_line(&mut ra).expect("stream must end with a terminal event");
+        match line.get("event").and_then(|v| v.as_str()) {
+            Some("failed") => break,
+            _ => continue,
+        }
+    }
+    assert!(handle.stats().rejections() >= 1);
+    handle.shutdown();
+    svc.shutdown();
+}

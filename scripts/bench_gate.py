@@ -33,7 +33,11 @@ Rules
   the unoptimized one — hard failures; its allocation counts are
   additionally budgeted at 10% + 4 against the baseline and
   ``prepack_infer_speedup`` must exceed 1.0, both riding the
-  provisional downgrade like wallclock.  Every missing
+  provisional downgrade like wallclock.  The ``net`` section (socket
+  front-end, DESIGN.md §Network front-end) must cover both serving
+  modes (solo, batched) at every in-flight level (10/100/1000), and
+  ``batched_vs_solo_throughput_at_100`` — micro-batching's headline —
+  must be >= 1.0, riding the provisional downgrade.  Every missing
   requirement is reported by its exact key path
   (``$.soak.invariant_violations: required key missing``), never as a
   raw KeyError traceback.
@@ -222,6 +226,24 @@ def check_sections(fresh, errors):
                 "passes.prepack_panel_bytes", "passes.prepack_cache_hit_rate",
                 "passes.prepack_infer_speedup"):
         lookup(fresh, key, errors)
+    # The net section (socket front-end, DESIGN.md §Network front-end)
+    # must sweep both serving modes across every in-flight level — a
+    # missing arm means the high-concurrency bench silently degraded.
+    net_arms = lookup(fresh, "net.arms", errors)
+    if not isinstance(net_arms, list):
+        net_arms = []
+    pairs = {(a.get("mode"), a.get("inflight"))
+             for a in net_arms if isinstance(a, dict)}
+    want = {(m, n) for m in ("solo", "batched") for n in (10, 100, 1000)}
+    require(
+        want <= pairs,
+        "$.net.arms must cover modes solo/batched at in-flight 10/100/1000, "
+        f"missing {sorted(want - pairs)}",
+        errors,
+    )
+    for key in ("net.batched.mean_batch", "net.batched.batches",
+                "net.batched_vs_solo_throughput_at_100"):
+        lookup(fresh, key, errors)
 
 
 def main():
@@ -293,6 +315,14 @@ def main():
         violations.append(
             f"$.passes.prepack_infer_speedup: {spd:.3f} — prepacked panels "
             "must beat dequantize-on-the-fly")
+    # Micro-batching's headline: at 100 concurrent in-flight requests
+    # the batched front-end must not serve SLOWER than solo dispatch.
+    # Timing-derived, so it rides the provisional downgrade too.
+    net_ratio = lookup(fresh, "net.batched_vs_solo_throughput_at_100")
+    if isinstance(net_ratio, (int, float)) and net_ratio < 1.0:
+        violations.append(
+            f"$.net.batched_vs_solo_throughput_at_100: {net_ratio:.3f} — "
+            "cross-request micro-batching must not lose to solo dispatch")
 
     status = 0
     if errors:

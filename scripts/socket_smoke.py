@@ -1,0 +1,203 @@
+#!/usr/bin/env python3
+"""CI socket-serve smoke (job `socket-smoke`): boot `wasi-train serve
+--listen`, drive it with several concurrent framed clients, and assert
+the front-end's contract from the outside.
+
+    python3 scripts/socket_smoke.py BIN ARTIFACTS_DIR NET_STATS_OUT
+
+What is exercised, all at once over real TCP connections:
+* a training submit followed by a streamed `events wait:true`
+  subscription that must deliver started -> steps -> done in order;
+* concurrent `infer` traffic at f32, bf16, and i8, each request
+  tagged with a unique framing-layer `"id"` that must echo back on
+  exactly its own connection;
+* one abrupt mid-stream disconnect (a client that subscribes to a job
+  stream and vanishes without reading), which must not wedge anything;
+* a `stats` snapshot (written to NET_STATS_OUT for the CI artifact)
+  whose counters must reflect the traffic above;
+* a protocol `shutdown`, after which the server process must drain and
+  exit 0 on its own.
+
+Stdlib only — the framing is 4-byte big-endian length + JSON payload
+(rust/src/net/frame.rs).
+"""
+
+import json
+import socket
+import struct
+import subprocess
+import sys
+import threading
+
+
+class Client:
+    """One framed JSON connection."""
+
+    def __init__(self, addr):
+        self.sock = socket.create_connection(addr, timeout=120)
+
+    def send(self, obj):
+        payload = json.dumps(obj).encode()
+        self.sock.sendall(struct.pack(">I", len(payload)) + payload)
+
+    def _read_exact(self, n):
+        buf = b""
+        while len(buf) < n:
+            chunk = self.sock.recv(n - len(buf))
+            if not chunk:
+                raise EOFError("connection closed mid frame")
+            buf += chunk
+        return buf
+
+    def recv(self):
+        (length,) = struct.unpack(">I", self._read_exact(4))
+        return json.loads(self._read_exact(length))
+
+    def close(self):
+        self.sock.close()
+
+
+def fail(msg):
+    print(f"socket-smoke: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def expect(cond, msg):
+    if not cond:
+        fail(msg)
+
+
+def train_session(addr, errors):
+    """Submit a short job and consume its full event stream."""
+    try:
+        c = Client(addr)
+        c.send({"cmd": "submit", "model": "vit_demo_wasi_eps80", "steps": 5,
+                "samples": 32, "engine": "native", "precision": "bf16",
+                "id": "train-submit"})
+        resp = c.recv()
+        expect(resp.get("ok") is True, f"submit rejected: {resp}")
+        expect(resp.get("id") == "train-submit", f"submit id mangled: {resp}")
+        job = resp["job"]
+        c.send({"cmd": "events", "job": job, "wait": True, "id": "train-events"})
+        events = []
+        while True:
+            line = c.recv()
+            expect(line.get("id") == "train-events", f"stream line untagged: {line}")
+            if "event" in line:
+                events.append(line["event"])
+                continue
+            # Final status line after the stream disconnects.
+            expect(line.get("ok") is True and line.get("state") == "done",
+                   f"job did not finish clean: {line}")
+            break
+        expect(events[0] == "started" and events[-1] == "done",
+               f"stream out of order: {events}")
+        expect(events.count("step") == 5, f"expected 5 step events: {events}")
+        c.close()
+    except Exception as e:  # noqa: BLE001 - surfaced via the errors list
+        errors.append(f"train session: {e!r}")
+
+
+def infer_session(addr, precision, count, errors):
+    """Fire `count` sequential infers on one connection; ids must echo."""
+    try:
+        c = Client(addr)
+        for i in range(count):
+            rid = f"{precision}-{i}"
+            c.send({"cmd": "infer", "model": "vit_demo_wasi_eps80",
+                    "precision": precision, "seed": 40 + i, "id": rid})
+            resp = c.recv()
+            expect(resp.get("ok") is True, f"infer failed: {resp}")
+            expect(resp.get("id") == rid, f"response for wrong request: {resp}")
+            expect(resp.get("precision") == precision, f"wrong precision: {resp}")
+            expect(resp.get("preds"), f"no predictions: {resp}")
+        c.close()
+    except Exception as e:  # noqa: BLE001
+        errors.append(f"infer session {precision}: {e!r}")
+
+
+def abrupt_disconnect(addr, errors):
+    """Subscribe to a job stream, then vanish without reading it."""
+    try:
+        c = Client(addr)
+        c.send({"cmd": "submit", "model": "vit_demo_wasi_eps80", "steps": 4,
+                "samples": 32, "engine": "native", "id": "churn"})
+        resp = c.recv()
+        expect(resp.get("ok") is True, f"churn submit rejected: {resp}")
+        c.send({"cmd": "events", "job": resp["job"], "wait": True, "id": "churn-ev"})
+        c.close()  # mid-stream: the server must shrug this off
+    except Exception as e:  # noqa: BLE001
+        errors.append(f"abrupt disconnect: {e!r}")
+
+
+def main():
+    if len(sys.argv) != 4:
+        fail(f"usage: {sys.argv[0]} BIN ARTIFACTS_DIR NET_STATS_OUT")
+    bin_path, artifacts, stats_out = sys.argv[1:]
+
+    proc = subprocess.Popen(
+        [bin_path, "serve", "--artifacts", artifacts, "--listen", "127.0.0.1:0",
+         "--workers", "2"],
+        stdout=subprocess.DEVNULL, stderr=subprocess.PIPE, text=True,
+    )
+    addr = None
+    try:
+        for line in proc.stderr:
+            if "listening on " in line:
+                host_port = line.split("listening on ", 1)[1].split()[0]
+                host, port = host_port.rsplit(":", 1)
+                addr = (host, int(port))
+                break
+        expect(addr is not None, "server exited before announcing its address")
+        print(f"socket-smoke: server up at {addr[0]}:{addr[1]}")
+
+        errors = []
+        threads = [
+            threading.Thread(target=train_session, args=(addr, errors)),
+            threading.Thread(target=abrupt_disconnect, args=(addr, errors)),
+        ] + [
+            threading.Thread(target=infer_session, args=(addr, p, 6, errors))
+            for p in ("f32", "bf16", "i8", "f32")
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=180)
+            expect(not t.is_alive(), "a client thread wedged (server unresponsive)")
+        expect(not errors, "; ".join(errors))
+
+        c = Client(addr)
+        c.send({"cmd": "stats", "id": "final"})
+        stats = c.recv()
+        expect(stats.get("ok") is True and stats.get("id") == "final",
+               f"stats failed: {stats}")
+        net = stats["net"]
+        with open(stats_out, "w") as f:
+            json.dump(stats, f, indent=2, sort_keys=True)
+        # 7 client connections total (6 worker threads + this one).
+        expect(net["connections_opened"] >= 7, f"missing connections: {net}")
+        expect(net["frames_in"] >= 30, f"missing inbound frames: {net}")
+        expect(net["frames_out"] >= 30, f"missing outbound frames: {net}")
+        expect(net["infer_solo"] + net["infer_batched"] >= 24,
+               f"infer traffic unaccounted for: {net}")
+        print("socket-smoke: stats clean:",
+              net["connections_opened"], "connections,",
+              net["frames_in"], "frames in,",
+              int(net["infer_batched"]), "infers micro-batched")
+
+        c.send({"cmd": "shutdown", "id": "bye"})
+        bye = c.recv()
+        expect(bye.get("ok") is True and bye.get("id") == "bye",
+               f"shutdown rejected: {bye}")
+        c.close()
+        code = proc.wait(timeout=60)
+        expect(code == 0, f"server exited {code}, want 0")
+        print("socket-smoke: OK (clean drain, exit 0)")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+
+if __name__ == "__main__":
+    main()

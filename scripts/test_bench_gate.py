@@ -116,6 +116,20 @@ def baseline_record():
             "prepack_panel_bytes": 120000,
             "prepack_cache_hit_rate": 0.875,
         },
+        "net": {
+            "model": "vit_demo_wasi_eps80",
+            "workers": 1,
+            "dispatchers": 64,
+            "arms": [
+                {"inflight": n, "mode": m, "requests": 60, "connections": 10,
+                 "total_seconds": 0.3, "throughput_rps": 200.0,
+                 "p50_ms": 40.0, "p99_ms": 90.0}
+                for m in ("solo", "batched") for n in (10, 100, 1000)
+            ],
+            "batched": {"window_us": 400.0, "max_batch": 32.0, "batches": 60,
+                        "batched_requests": 900, "mean_batch": 15.0},
+            "batched_vs_solo_throughput_at_100": 2.0,
+        },
         "nodes": [
             {"node": "dense:embed", "fwd_ms_per_step": 0.2, "bwd_ms_per_step": 0.3},
         ],
@@ -299,6 +313,53 @@ def test_prepack_speedup_must_exceed_one(tmp_path):
     assert res.returncode == 1, res.stdout + res.stderr
     assert "$.passes.prepack_infer_speedup" in res.stdout
     assert "must beat dequantize-on-the-fly" in res.stdout
+
+
+def test_missing_net_section_names_key_path(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    del fresh["net"]
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.net" in res.stdout
+    assert "KeyError" not in res.stdout + res.stderr
+    assert "Traceback" not in res.stderr
+
+
+def test_net_arms_must_cover_both_modes_at_every_level(tmp_path):
+    # Dropping the batched@1000 arm must be named, not silently passed.
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["net"]["arms"] = [
+        a for a in fresh["net"]["arms"]
+        if not (a["mode"] == "batched" and a["inflight"] == 1000)
+    ]
+    base["net"]["arms"] = copy.deepcopy(fresh["net"]["arms"])
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.net.arms must cover modes solo/batched" in res.stdout
+    assert "('batched', 1000)" in res.stdout
+
+
+def test_batched_throughput_must_not_lose_to_solo(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["net"]["batched_vs_solo_throughput_at_100"] = 0.7
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.net.batched_vs_solo_throughput_at_100" in res.stdout
+    assert "must not lose to solo dispatch" in res.stdout
+
+
+def test_batched_throughput_ratio_warns_on_provisional_baseline(tmp_path):
+    base = baseline_record()
+    base["provisional"] = True
+    fresh = copy.deepcopy(baseline_record())
+    fresh["net"]["batched_vs_solo_throughput_at_100"] = 0.7
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "WARN" in res.stdout
+    assert "$.net.batched_vs_solo_throughput_at_100" in res.stdout
 
 
 def test_wrong_section_type_is_actionable_not_traceback(tmp_path):
