@@ -474,9 +474,11 @@ pub struct PackedParams {
     /// resolved bindings address tensors by offset).
     tensors: BTreeMap<usize, StoredTensor>,
     params_len: usize,
-    /// Prepacked f32 panels for reduced-precision GEMM weights, keyed
-    /// by flat offset (the `prepack` pass — built once at pack time so
-    /// the inference hot path never re-dequantizes a B panel).
+    /// Prepacked panels for reduced-precision GEMM weights, keyed by
+    /// flat offset (the `prepack` pass — built once at pack time so
+    /// the inference hot path never re-dequantizes a B panel).  bf16
+    /// weights pack as f32 images, int8 as raw quantized bytes for the
+    /// true-integer GEMM.
     panels: BTreeMap<usize, PackedPanel>,
     /// The `fold` pass's precomputed `cls + pos` assembly constant
     /// (`pos`-shaped; the first `dim` elements carry the folded CLS
@@ -536,10 +538,13 @@ impl PackedParams {
                 let (n, k) = (spec.shape[0], spec.shape[1]);
                 match &stored {
                     StoredTensor::Bf16(d) => {
-                        panels.insert(spec.offset, PackedPanel::pack(d, n, k, None));
+                        panels.insert(spec.offset, PackedPanel::pack(d, n, k));
                     }
+                    // int8 panels keep RAW quantized bytes (1 B/elem,
+                    // ~¼ of an f32 image) and route to the true-integer
+                    // GEMM; the scale travels inside the panel.
                     StoredTensor::I8(t) => {
-                        panels.insert(spec.offset, PackedPanel::pack(&t.q, n, k, Some(t.scale)));
+                        panels.insert(spec.offset, PackedPanel::pack_i8(&t.q, n, k, t.scale));
                     }
                     // f32 weights feed `gemm_nt` directly (B rows are
                     // already contiguous f32) — nothing to prepack.
@@ -622,9 +627,10 @@ pub enum WeightView<'a> {
     F32(&'a [f32]),
     Bf16(&'a [u16]),
     I8(&'a [i8], f32),
-    /// A prepacked f32 dequantization image of a reduced-precision
-    /// weight (the `prepack` pass) — carries its own dims and, for
-    /// int8, the epilogue scale.
+    /// A prepacked panel of a reduced-precision weight (the `prepack`
+    /// pass) — an f32 image for bf16, raw quantized bytes + scale for
+    /// int8.  Carries its own dims; scales are applied intrinsically
+    /// by `gemm_nt_prepacked`.
     Panel(&'a PackedPanel),
 }
 
@@ -729,8 +735,10 @@ impl<'a> ParamsView<'a> {
 
 /// One linear layer forward for the inference walk: `out = x · Wᵀ`
 /// (+ bias, optionally fused GELU), dispatching on the weight's storage
-/// precision — f32 and bf16 dequantize in the inner loop at scale 1,
-/// int8 folds its per-tensor scale into the dequantizing epilogue.
+/// precision — f32 and bf16 dequantize in the inner loop at scale 1;
+/// int8 runs the TRUE-integer `gemm_nt_i8` (activations quantize
+/// per-row, i8×i8→i32 dots, scales applied intrinsically in the
+/// epilogue), so every storage form takes the same plain epilogue.
 fn linear_nt(
     w: WeightView,
     x: &[f32],
@@ -751,41 +759,13 @@ fn linear_nt(
         WeightView::F32(wf) => kernels::gemm_nt(x, wf, rows, i, o, out, plain_epi),
         WeightView::Bf16(wq) => kernels::gemm_nt_deq(x, wq, rows, i, o, out, plain_epi),
         WeightView::I8(wq, scale) => {
-            let epi = match (bias, fuse_gelu) {
-                (Some(b), true) => Epilogue::ScaleBiasGelu(scale, b),
-                (Some(b), false) => Epilogue::ScaleBias(scale, b),
-                (None, _) => Epilogue::Scale(scale),
-            };
-            kernels::gemm_nt_deq(x, wq, rows, i, o, out, epi);
-            if bias.is_none() && fuse_gelu {
-                // Not produced by the current graphs (GELU only fuses
-                // into biased linears); kept correct regardless.
-                for v in out.iter_mut() {
-                    *v = kernels::gelu(*v);
-                }
-            }
+            kernels::gemm_nt_i8(x, wq, rows, i, o, scale, out, plain_epi)
         }
-        WeightView::Panel(p) => match p.scale() {
-            // bf16 panel: already the exact f32 image `gemm_nt_deq`
-            // would reconstruct — same epilogues as the f32 path.
-            None => kernels::gemm_nt_prepacked(x, p, rows, out, plain_epi),
-            // int8 panel: raw quantized magnitudes with the dequant
-            // scale folded into the epilogue, exactly like the
-            // repacking path above.
-            Some(s) => {
-                let epi = match (bias, fuse_gelu) {
-                    (Some(b), true) => Epilogue::ScaleBiasGelu(s, b),
-                    (Some(b), false) => Epilogue::ScaleBias(s, b),
-                    (None, _) => Epilogue::Scale(s),
-                };
-                kernels::gemm_nt_prepacked(x, p, rows, out, epi);
-                if bias.is_none() && fuse_gelu {
-                    for v in out.iter_mut() {
-                        *v = kernels::gelu(*v);
-                    }
-                }
-            }
-        },
+        // Panels dispatch on their payload internally: bf16 images run
+        // the f32 path, i8 panels the integer path — both with scales
+        // already final/intrinsic, so the plain epilogue is correct
+        // for every panel form.
+        WeightView::Panel(p) => kernels::gemm_nt_prepacked(x, p, rows, out, plain_epi),
     }
 }
 

@@ -40,7 +40,9 @@ const FUSE: u8 = 1 << 1;
 /// planned executors that drive per-step heap allocation to ~zero).
 const ARENA: u8 = 1 << 2;
 /// Bit for [`PassSet`]: pre-packed weight panels for quantized weights
-/// (`linalg::kernels::PackedPanel`), packed once at plan time.
+/// (`linalg::kernels::PackedPanel`), packed once at plan time — f32
+/// images for bf16 weights, raw quantized bytes for int8 (fed to the
+/// true-integer GEMM).
 const PREPACK: u8 = 1 << 3;
 
 const ALL: u8 = FOLD | FUSE | ARENA | PREPACK;

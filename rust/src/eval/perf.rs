@@ -207,6 +207,70 @@ fn bench_precision(entry: &ModelEntry, infer_reps: usize) -> Result<Vec<PrecArm>
     Ok(arms)
 }
 
+/// Batched-GEMM amortization: per-request latency of solo (batch=1)
+/// inference vs an 8-request coalesced batch, for f32 and the
+/// true-integer int8 path.  The 4-row microtiles in `linalg::kernels`
+/// walk each weight panel once per row group instead of once per
+/// request, so the coalesced arm should win per request (`>= 1.0`
+/// speedups — gated by scripts/bench_gate.py once the baseline is
+/// armed).  Both arms see the same total sample count: the solo arm
+/// runs `8 * reps` single-sample calls against the batched arm's
+/// `reps` eight-sample calls.
+fn bench_batched(entry: &ModelEntry, infer_reps: usize) -> Result<(Json, f64, f64)> {
+    set_num_threads(0);
+    const BATCH: usize = 8;
+    let side = entry
+        .image_side()
+        .ok_or_else(|| anyhow::anyhow!("bench model is not an image model"))?;
+    let mut task = VisionTask::new("batched", entry.classes, side, 0.7, 8, 91);
+    let (xb, _, _) = task.batch_onehot(BATCH);
+    let sample = xb.len() / BATCH;
+    let x1 = xb[..sample].to_vec();
+    let per_req = |total: f64| total / (infer_reps * BATCH) as f64;
+
+    let f32_engine = NativeInferEngine::load(entry)?;
+    let params = entry.load_params()?;
+    f32_engine.infer(&params, &x1)?; // warmup
+    let t0 = Instant::now();
+    for _ in 0..infer_reps * BATCH {
+        f32_engine.infer(&params, &x1)?;
+    }
+    let f32_solo = per_req(t0.elapsed().as_secs_f64());
+    f32_engine.infer(&params, &xb)?; // warmup
+    let t0 = Instant::now();
+    for _ in 0..infer_reps {
+        f32_engine.infer(&params, &xb)?;
+    }
+    let f32_batch = per_req(t0.elapsed().as_secs_f64());
+
+    let i8_engine = NativeInferEngine::load_quantized(entry, Precision::I8)?;
+    i8_engine.infer_quantized(&x1)?; // warmup
+    let t0 = Instant::now();
+    for _ in 0..infer_reps * BATCH {
+        i8_engine.infer_quantized(&x1)?;
+    }
+    let i8_solo = per_req(t0.elapsed().as_secs_f64());
+    i8_engine.infer_quantized(&xb)?; // warmup
+    let t0 = Instant::now();
+    for _ in 0..infer_reps {
+        i8_engine.infer_quantized(&xb)?;
+    }
+    let i8_batch = per_req(t0.elapsed().as_secs_f64());
+
+    let f32_speedup = f32_solo / f32_batch;
+    let i8_speedup = i8_solo / i8_batch;
+    let json = obj(vec![
+        ("batch", num(BATCH as f64)),
+        ("f32_solo_per_req_seconds", num(f32_solo)),
+        ("f32_batch_per_req_seconds", num(f32_batch)),
+        ("f32_batch_per_req_speedup", num(f32_speedup)),
+        ("i8_solo_per_req_seconds", num(i8_solo)),
+        ("i8_batch_per_req_seconds", num(i8_batch)),
+        ("i8_batch_per_req_speedup", num(i8_speedup)),
+    ]);
+    Ok((json, f32_speedup, i8_speedup))
+}
+
 /// One serve arm: J jobs through a service with W workers.
 struct ServeArm {
     workers: usize,
@@ -823,6 +887,10 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
         .expect("precision sweep always includes i8");
     let int8_vs_f32_speedup = f32_arm.infer_s / i8_arm.infer_s;
     let int8_weight_compression = f32_arm.weight_bytes as f64 / i8_arm.weight_bytes as f64;
+
+    // 2d. batched-GEMM amortization: solo vs coalesced batch of 8.
+    let (batched_json, f32_batch8_speedup, i8_batch8_speedup) =
+        bench_batched(&entry, infer_reps)?;
     let precision_json = obj(vec![
         (
             "arms",
@@ -836,8 +904,10 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
                 ])
             })),
         ),
+        ("int8_isa", jstr(simd::int8_isa_name())),
         ("int8_vs_f32_speedup", num(int8_vs_f32_speedup)),
         ("int8_weight_compression", num(int8_weight_compression)),
+        ("batched", batched_json),
     ]);
 
     // 3. per-node attribution at the auto thread count — ONE profiled
@@ -995,7 +1065,12 @@ fn run_bench_inner(cfg: &BenchConfig) -> Result<String> {
     body.push_str(&pt.render());
     body.push_str(&format!(
         "int8 vs f32: {int8_vs_f32_speedup:.2}x latency, \
-         {int8_weight_compression:.2}x weight compression\n"
+         {int8_weight_compression:.2}x weight compression ({} integer dots)\n",
+        simd::int8_isa_name()
+    ));
+    body.push_str(&format!(
+        "batch-8 per-request speedup: f32 {f32_batch8_speedup:.2}x, \
+         int8 {i8_batch8_speedup:.2}x\n"
     ));
     let mut st = Table::new(["workers", "jobs", "steps/job", "jobs/s", "p50 s", "p95 s"])
         .title("serve scheduler — submit->done latency".to_string());

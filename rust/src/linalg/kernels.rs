@@ -38,7 +38,21 @@
 //!   block-wise into a per-thread f32 panel (each element converts once
 //!   per thread, not once per output row), the dots run on the same
 //!   SIMD [`dot`] as the f32 path, and the int8 per-tensor scale folds
-//!   into the epilogue ([`Epilogue::ScaleBias`]).
+//!   into the epilogue ([`Epilogue::ScaleBias`]).  Still the reference
+//!   int8 semantics the true-integer path is measured against, and the
+//!   production bf16 path.
+//! * **True-integer GEMM** — [`gemm_nt_i8`] never dequantizes:
+//!   activations quantize per-row once (`precision::quantize_i8_rows`),
+//!   the dots run as exact i8×i8→i32 integer arithmetic on
+//!   [`simd::dot_i8`] / [`simd::dot4_i8`] (AVX2 / NEON / scalar,
+//!   bit-identical by construction), and the combined scale applies
+//!   once per output in the epilogue.  This is what makes int8 faster
+//!   — not just smaller — than f32 (ROADMAP item 3).
+//! * **M>1 microtiles** — `gemm_nt` and `gemm_nt_i8` walk output rows
+//!   four at a time ([`simd::dot4`] / [`simd::dot4_i8`]), so a
+//!   coalesced batch from the serving front-end amortizes each B-row
+//!   load across four requests without perturbing solo-vs-batched
+//!   bitwise equality.
 
 use crate::util::threadpool::parallel_ranges;
 
@@ -217,15 +231,46 @@ pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
 
 /// C (m x n) = A (m x k) · Bᵀ with B stored (n x k) — dot-product form,
 /// no transpose materialized.  Then `epi`.  Overwrites `out`.
+///
+/// Rows run through the 4-row [`simd::dot4`] microtile (each B row
+/// loads once per four output rows — the M>1 form the micro-batching
+/// front-end coalesces into), with single-row [`simd::dot`] remainders.
+/// `dot4` rows are bit-identical to solo `dot` calls, so the result is
+/// independent of m and of where the 4-row blocking lands — batched
+/// inference stays bitwise equal to solo inference (pinned below and
+/// in `engine::net`).
 pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], epi: Epilogue) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
     let out_ptr = SendPtr(out.as_mut_ptr());
     parallel_ranges(m, |lo, hi| {
-        for i in lo..hi {
-            let out_row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), n) };
-            let a_row = &a[i * k..(i + 1) * k];
+        let mut i = lo;
+        while i + 4 <= hi {
+            let out4 = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), 4 * n) };
+            let (o0, rest) = out4.split_at_mut(n);
+            let (o1, rest) = rest.split_at_mut(n);
+            let (o2, o3) = rest.split_at_mut(n);
+            let a0 = &a[i * k..(i + 1) * k];
+            let a1 = &a[(i + 1) * k..(i + 2) * k];
+            let a2 = &a[(i + 2) * k..(i + 3) * k];
+            let a3 = &a[(i + 3) * k..(i + 4) * k];
+            for j in 0..n {
+                let b_row = &b[j * k..(j + 1) * k];
+                let s4 = simd::dot4(a0, a1, a2, a3, b_row);
+                o0[j] = s4[0];
+                o1[j] = s4[1];
+                o2[j] = s4[2];
+                o3[j] = s4[3];
+            }
+            for row in [o0, o1, o2, o3] {
+                epi.apply(row);
+            }
+            i += 4;
+        }
+        for ii in i..hi {
+            let out_row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(ii * n), n) };
+            let a_row = &a[ii * k..(ii + 1) * k];
             for (j, o) in out_row.iter_mut().enumerate() {
                 let b_row = &b[j * k..(j + 1) * k];
                 *o = dot(a_row, b_row);
@@ -289,38 +334,163 @@ pub fn gemm_nt_deq<E: DequantElem>(
     });
 }
 
-/// A pre-packed B-side panel for [`gemm_nt_prepacked`]: the dequantized
-/// f32 image of an `(n x k)` reduced-precision weight tensor, packed
-/// ONCE at plan time instead of per GEMM call (DESIGN.md §Pass
-/// pipeline, prepack pass).
+/// Largest reduction depth the integer GEMM accepts: with every
+/// product bounded by `127·127`, `k` of them summed exactly in i32
+/// needs `k ≤ i32::MAX / 127²`.  Model dims sit orders of magnitude
+/// below this; the assert in [`gemm_nt_i8`] turns a silent-wraparound
+/// hazard into a loud error.
+pub const I8_DOT_MAX_K: usize = i32::MAX as usize / (127 * 127);
+
+/// TRUE-integer [`gemm_nt`] against int8 weights: C (m x n) =
+/// A (m x k) · Bᵀ with B stored (n x k) as raw quantized bytes and
+/// per-tensor scale `wscale`.  Unlike [`gemm_nt_deq`] — which
+/// dequantizes every weight to f32 lanes before the dot — this path
+/// quantizes each *activation row* once (per-row symmetric scale,
+/// `precision::quantize_i8_rows`), runs i8×i8→i32 integer dots on the
+/// runtime-dispatched [`simd::dot_i8`] / [`simd::dot4_i8`] microtile,
+/// and applies the combined scale `s_row · wscale` once per output in
+/// the epilogue.  That is O(m·k) conversion work amortized over n
+/// outputs, vs the deq path's O(n·k) per thread.
 ///
-/// The layout is deliberately the same row-major `(n x k)` the f32
-/// `gemm_nt` consumes — NOT the interleaved `apack` tile layout — so
-/// the prepacked product runs the identical [`dot`] calls in the
-/// identical order as [`gemm_nt_deq`] over the same payload, and the
-/// bitwise-identity contract of the kernel layer survives the pass.
-/// (An interleaved B layout would reorder the accumulation and is
-/// exactly the renegotiation ROADMAP item 3's true-int8 microkernels
-/// will make; this panel is its staging format.)  Int8 payloads pack
-/// as RAW quantized magnitudes with the per-tensor scale carried
-/// alongside for the epilogue, matching the deq path's `Scale` forms.
-pub struct PackedPanel {
+/// **Determinism:** the integer accumulation is *exact* (the assert on
+/// [`I8_DOT_MAX_K`] rules out i32 overflow), so results are
+/// bit-identical across scalar/AVX2/NEON backends, thread counts, and
+/// batch blockings by construction; the f32 epilogue applies one fixed
+/// operation sequence per element (`acc as f32 * (s_row * wscale)`,
+/// then `epi`).  Row scales are computed before the parallel region so
+/// every thread partition sees identical quantized activations.
+///
+/// **Epilogue contract:** pass the PLAIN forms (`None` / `Bias` /
+/// `BiasGelu` / `Gelu`).  The quantization scales are applied
+/// intrinsically — a `Scale*` epilogue would double-scale.
+///
+/// **Accuracy:** vs the dequantizing path the only new error is the
+/// activation round-trip: per output element the difference is at most
+/// `(s_row/2) · 127 · k · wscale` (|x − q·s| ≤ s/2 against weight
+/// magnitudes ≤ 127·wscale, summed over k), pinned in tests.
+#[allow(clippy::too_many_arguments)] // the GEMM signature family + the weight scale
+pub fn gemm_nt_i8(
+    a: &[f32],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    wscale: f32,
+    out: &mut [f32],
+    epi: Epilogue,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    assert!(
+        k <= I8_DOT_MAX_K,
+        "gemm_nt_i8: k = {k} exceeds the exact-i32 accumulation bound {I8_DOT_MAX_K}"
+    );
+    debug_assert!(
+        !matches!(
+            epi,
+            Epilogue::Scale(_) | Epilogue::ScaleBias(..) | Epilogue::ScaleBiasGelu(..)
+        ),
+        "gemm_nt_i8 applies quantization scales intrinsically; pass a plain epilogue"
+    );
+    let (qa, ascales) = crate::precision::quantize_i8_rows(a, m, k);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_ranges(m, |lo, hi| {
+        let mut i = lo;
+        while i + 4 <= hi {
+            let out4 = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(i * n), 4 * n) };
+            let (o0, rest) = out4.split_at_mut(n);
+            let (o1, rest) = rest.split_at_mut(n);
+            let (o2, o3) = rest.split_at_mut(n);
+            let a0 = &qa[i * k..(i + 1) * k];
+            let a1 = &qa[(i + 1) * k..(i + 2) * k];
+            let a2 = &qa[(i + 2) * k..(i + 3) * k];
+            let a3 = &qa[(i + 3) * k..(i + 4) * k];
+            let s0 = ascales[i] * wscale;
+            let s1 = ascales[i + 1] * wscale;
+            let s2 = ascales[i + 2] * wscale;
+            let s3 = ascales[i + 3] * wscale;
+            for j in 0..n {
+                let b_row = &b[j * k..(j + 1) * k];
+                let acc = simd::dot4_i8(a0, a1, a2, a3, b_row);
+                o0[j] = acc[0] as f32 * s0;
+                o1[j] = acc[1] as f32 * s1;
+                o2[j] = acc[2] as f32 * s2;
+                o3[j] = acc[3] as f32 * s3;
+            }
+            for row in [o0, o1, o2, o3] {
+                epi.apply(row);
+            }
+            i += 4;
+        }
+        for ii in i..hi {
+            let out_row = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(ii * n), n) };
+            let a_row = &qa[ii * k..(ii + 1) * k];
+            let srow = ascales[ii] * wscale;
+            for (j, o) in out_row.iter_mut().enumerate() {
+                let b_row = &b[j * k..(j + 1) * k];
+                *o = simd::dot_i8(a_row, b_row) as f32 * srow;
+            }
+            epi.apply(out_row);
+        }
+    });
+}
+
+/// Payload of a [`PackedPanel`]: either a pre-dequantized f32 image
+/// (bf16 weights) or raw int8 bytes with their per-tensor scale (the
+/// true-integer path — a quarter of the f32 image's footprint).
+pub enum PanelPayload {
     /// Dequantized `(n x k)` row-major f32 image.
-    data: Vec<f32>,
+    F32(Vec<f32>),
+    /// Raw `(n x k)` row-major quantized bytes + per-tensor scale —
+    /// consumed directly by [`gemm_nt_i8`], never dequantized.
+    I8 {
+        /// Quantized weight bytes.
+        q: Vec<i8>,
+        /// Per-tensor dequantization scale (applied in the integer
+        /// GEMM's epilogue).
+        scale: f32,
+    },
+}
+
+/// A pre-packed B-side panel for [`gemm_nt_prepacked`], built ONCE at
+/// plan time instead of per GEMM call (DESIGN.md §Pass pipeline,
+/// prepack pass).
+///
+/// Two payload forms (see [`PanelPayload`]):
+///
+/// * **bf16 → f32 image** — the same row-major `(n x k)` layout the
+///   f32 `gemm_nt` consumes, NOT an interleaved tile layout, so the
+///   prepacked product runs the identical [`dot`] calls in the
+///   identical order as [`gemm_nt_deq`] over the same payload and the
+///   bitwise-identity contract survives the pass.
+/// * **i8 → raw quantized bytes** — stored 1 byte/element (~¼ the f32
+///   image) and fed straight to the integer GEMM [`gemm_nt_i8`], which
+///   is bit-identical to the unpacked int8 route because both run the
+///   same exact integer dots over the same bytes.  The per-tensor
+///   scale travels inside the payload and is applied intrinsically —
+///   callers pass plain epilogues for BOTH payload forms.
+pub struct PackedPanel {
+    payload: PanelPayload,
     /// Output features (B rows).
     n: usize,
     /// Reduction depth (B cols).
     k: usize,
-    /// Int8 per-tensor scale to fold into the epilogue (`None` for
-    /// payloads whose values are already final, e.g. bf16).
-    scale: Option<f32>,
 }
 
 impl PackedPanel {
-    /// Pack an `(n x k)` reduced-precision tensor into its f32 image.
-    pub fn pack<E: DequantElem>(b: &[E], n: usize, k: usize, scale: Option<f32>) -> PackedPanel {
+    /// Pack an `(n x k)` reduced-precision tensor into its f32 image
+    /// (the bf16 panel form; values are final after conversion).
+    pub fn pack<E: DequantElem>(b: &[E], n: usize, k: usize) -> PackedPanel {
         debug_assert_eq!(b.len(), n * k);
-        PackedPanel { data: b.iter().map(|e| e.to_f32()).collect(), n, k, scale }
+        PackedPanel { payload: PanelPayload::F32(b.iter().map(|e| e.to_f32()).collect()), n, k }
+    }
+
+    /// Pack an `(n x k)` int8 tensor as raw quantized bytes + scale
+    /// (the true-integer panel form).
+    pub fn pack_i8(q: &[i8], n: usize, k: usize, scale: f32) -> PackedPanel {
+        debug_assert_eq!(q.len(), n * k);
+        PackedPanel { payload: PanelPayload::I8 { q: q.to_vec(), scale }, n, k }
     }
 
     /// Output features (B rows).
@@ -333,27 +503,45 @@ impl PackedPanel {
         self.k
     }
 
-    /// The int8 per-tensor scale the caller must fold into the
-    /// epilogue (`None`: values are final).
+    /// The int8 per-tensor scale carried by an i8 payload (`None` for
+    /// f32-image panels, whose values are final).  Informational —
+    /// [`gemm_nt_prepacked`] applies it intrinsically either way.
     pub fn scale(&self) -> Option<f32> {
-        self.scale
+        match &self.payload {
+            PanelPayload::F32(_) => None,
+            PanelPayload::I8 { scale, .. } => Some(*scale),
+        }
     }
 
-    /// Resident bytes of the packed image (the prepack pass trades
-    /// this memory for zero per-call conversion work).
+    /// The stored payload (bench/report introspection).
+    pub fn payload(&self) -> &PanelPayload {
+        &self.payload
+    }
+
+    /// Resident bytes of the packed payload (the prepack pass trades
+    /// this memory for zero per-call conversion work; i8 panels keep
+    /// 1 byte/element instead of a 4-byte f32 image).
     pub fn bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<f32>()
+        match &self.payload {
+            PanelPayload::F32(data) => data.len() * std::mem::size_of::<f32>(),
+            PanelPayload::I8 { q, .. } => q.len() + std::mem::size_of::<f32>(),
+        }
     }
 }
 
 /// [`gemm_nt`] against a [`PackedPanel`]: C (m x n) = A (m x k) · Bᵀ
-/// with B pre-dequantized at plan time.  Delegates to the f32
-/// [`gemm_nt`] over the panel's image — same row partition, same
-/// [`dot`] order — so the result is bit-identical to [`gemm_nt_deq`]
-/// over the original payload (pinned below).  As with the deq path,
-/// an int8 panel's `scale()` belongs in `epi`.
+/// with B packed at plan time.  f32-image panels delegate to the f32
+/// [`gemm_nt`] — same row partition, same [`dot`] order, so the result
+/// is bit-identical to [`gemm_nt_deq`] over the original payload
+/// (pinned below).  i8 panels delegate to the true-integer
+/// [`gemm_nt_i8`] — bit-identical to the unpacked int8 route over the
+/// same bytes.  Scales are applied intrinsically for both forms: pass
+/// plain epilogues only.
 pub fn gemm_nt_prepacked(a: &[f32], b: &PackedPanel, m: usize, out: &mut [f32], epi: Epilogue) {
-    gemm_nt(a, &b.data, m, b.k, b.n, out, epi);
+    match &b.payload {
+        PanelPayload::F32(data) => gemm_nt(a, data, m, b.k, b.n, out, epi),
+        PanelPayload::I8 { q, scale } => gemm_nt_i8(a, q, m, b.k, b.n, *scale, out, epi),
+    }
 }
 
 /// C (m x n) = Aᵀ · B with A stored (k x m) — no transpose materialized.
@@ -681,9 +869,10 @@ mod tests {
         let bias: Vec<f32> = rng.normal_vec(n);
 
         let wq16: Vec<u16> = w.iter().map(|&v| f32_to_bf16(v)).collect();
-        let panel16 = PackedPanel::pack(&wq16, n, k, None);
+        let panel16 = PackedPanel::pack(&wq16, n, k);
         assert_eq!((panel16.rows(), panel16.cols()), (n, k));
         assert_eq!(panel16.bytes(), n * k * 4);
+        assert_eq!(panel16.scale(), None);
         let mut c_pre = vec![0.0f32; m * n];
         let mut c_deq = vec![0.0f32; m * n];
         gemm_nt_prepacked(&a, &panel16, m, &mut c_pre, Epilogue::Bias(&bias));
@@ -694,16 +883,156 @@ mod tests {
             "bf16 prepacked GEMM diverged from the dequantizing GEMM"
         );
 
+        // i8 panels store RAW quantized bytes and route to the
+        // true-integer GEMM: bit-identical to the unpacked integer
+        // route over the same bytes, and a quarter of the f32 image.
         let (q, scale) = quantize_i8(&w);
-        let panel8 = PackedPanel::pack(&q, n, k, Some(scale));
+        let panel8 = PackedPanel::pack_i8(&q, n, k, scale);
         assert_eq!(panel8.scale(), Some(scale));
-        gemm_nt_prepacked(&a, &panel8, m, &mut c_pre, Epilogue::ScaleBias(scale, &bias));
-        gemm_nt_deq(&a, &q, m, k, n, &mut c_deq, Epilogue::ScaleBias(scale, &bias));
+        assert_eq!(panel8.bytes(), n * k + 4);
+        gemm_nt_prepacked(&a, &panel8, m, &mut c_pre, Epilogue::Bias(&bias));
+        gemm_nt_i8(&a, &q, m, k, n, scale, &mut c_deq, Epilogue::Bias(&bias));
         assert_eq!(
             c_pre.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             c_deq.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-            "i8 prepacked GEMM diverged from the dequantizing GEMM"
+            "i8 prepacked GEMM diverged from the unpacked integer GEMM"
         );
+    }
+
+    #[test]
+    fn i8_dot_max_k_is_the_exact_i32_bound() {
+        // k products of ±127² must sum exactly in i32 …
+        assert!(I8_DOT_MAX_K * 127 * 127 <= i32::MAX as usize);
+        // … and the bound is tight (one more product can overflow).
+        assert!((I8_DOT_MAX_K + 1) * 127 * 127 > i32::MAX as usize);
+        // Model dims sit far below it.
+        assert!(I8_DOT_MAX_K > 100_000);
+    }
+
+    #[test]
+    fn f32_gemm_nt_batch_matches_solo_rows_bitwise() {
+        // The dot4 microtile must not perturb per-row results: a
+        // coalesced batch (m = 8, and a remainder shape m = 6) is
+        // bitwise the concatenation of solo m = 1 calls — the kernel
+        // half of the serving layer's batched-vs-solo equality pin.
+        let mut rng = Pcg64::new(31);
+        for (m, k, n) in [(8usize, 37usize, 13usize), (6, 64, 9), (5, 17, 33)] {
+            let a: Vec<f32> = rng.normal_vec(m * k);
+            let w: Vec<f32> = rng.normal_vec(n * k);
+            let bias: Vec<f32> = rng.normal_vec(n);
+            let mut batched = vec![0.0f32; m * n];
+            gemm_nt(&a, &w, m, k, n, &mut batched, Epilogue::BiasGelu(&bias));
+            let mut solo = vec![0.0f32; n];
+            for i in 0..m {
+                gemm_nt(&a[i * k..(i + 1) * k], &w, 1, k, n, &mut solo, Epilogue::BiasGelu(&bias));
+                assert_eq!(
+                    batched[i * n..(i + 1) * n].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    solo.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{m}x{k}x{n} row {i} diverged between batched and solo"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn integer_gemm_batch_matches_solo_rows_bitwise() {
+        // Integer accumulation is exact and activation scales are
+        // per-row, so batching cannot change a bit either.
+        let mut rng = Pcg64::new(32);
+        for (m, k, n) in [(8usize, 37usize, 13usize), (6, 64, 9), (3, 17, 7)] {
+            let a: Vec<f32> = rng.normal_vec(m * k);
+            let w: Vec<f32> = rng.normal_vec(n * k);
+            let bias: Vec<f32> = rng.normal_vec(n);
+            let (q, scale) = quantize_i8(&w);
+            let mut batched = vec![0.0f32; m * n];
+            gemm_nt_i8(&a, &q, m, k, n, scale, &mut batched, Epilogue::Bias(&bias));
+            let mut solo = vec![0.0f32; n];
+            for i in 0..m {
+                gemm_nt_i8(
+                    &a[i * k..(i + 1) * k],
+                    &q,
+                    1,
+                    k,
+                    n,
+                    scale,
+                    &mut solo,
+                    Epilogue::Bias(&bias),
+                );
+                assert_eq!(
+                    batched[i * n..(i + 1) * n].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    solo.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{m}x{k}x{n} row {i} diverged between batched and solo"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn integer_gemm_is_backend_and_thread_invariant_bitwise() {
+        // The true-int8 parity pin: exact i32 accumulation makes
+        // scalar vs SIMD AND 1 vs 7 threads bit-identical, including
+        // k-tail remainder lanes (k % 32 != 0), odd m/n, and the 4-row
+        // microtile remainder.
+        let _simd = SIMD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let _threads = crate::util::threadpool::TEST_OVERRIDE_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut rng = Pcg64::new(33);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (3, 17, 7), (5, 33, 13), (13, 100, 65)] {
+            let a: Vec<f32> = rng.normal_vec(m * k);
+            let w: Vec<f32> = rng.normal_vec(n * k);
+            let bias: Vec<f32> = rng.normal_vec(n);
+            let (q, scale) = quantize_i8(&w);
+            let mut want = vec![0.0f32; m * n];
+            set_force_scalar(true);
+            set_num_threads(1);
+            gemm_nt_i8(&a, &q, m, k, n, scale, &mut want, Epilogue::BiasGelu(&bias));
+            let mut got = vec![0.0f32; m * n];
+            for (forced, threads) in [(false, 1usize), (true, 7), (false, 7)] {
+                set_force_scalar(forced);
+                set_num_threads(threads);
+                gemm_nt_i8(&a, &q, m, k, n, scale, &mut got, Epilogue::BiasGelu(&bias));
+                assert_eq!(
+                    got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{m}x{k}x{n} forced={forced} threads={threads} diverged"
+                );
+            }
+            set_force_scalar(false);
+            set_num_threads(0);
+        }
+    }
+
+    #[test]
+    fn integer_gemm_tracks_dequantizing_gemm_within_activation_bound() {
+        // vs the old dequantizing route the ONLY new error is the
+        // activation round-trip: per output element
+        //   |c_int - c_deq| <= (s_row/2) · 127 · k · wscale
+        // (|x - q·s| <= s/2 per activation, against weight magnitudes
+        // <= 127·wscale, summed over k).  Documented in DESIGN.md
+        // §Kernels; this test is the documentation's enforcement.
+        let mut rng = Pcg64::new(34);
+        for (m, k, n) in [(5usize, 37usize, 13usize), (8, 100, 9), (1, 7, 3)] {
+            let a: Vec<f32> = rng.normal_vec(m * k);
+            let w: Vec<f32> = rng.normal_vec(n * k);
+            let bias: Vec<f32> = rng.normal_vec(n);
+            let (q, wscale) = quantize_i8(&w);
+            let (_, ascales) = crate::precision::quantize_i8_rows(&a, m, k);
+            let mut c_int = vec![0.0f32; m * n];
+            let mut c_deq = vec![0.0f32; m * n];
+            gemm_nt_i8(&a, &q, m, k, n, wscale, &mut c_int, Epilogue::Bias(&bias));
+            gemm_nt_deq(&a, &q, m, k, n, &mut c_deq, Epilogue::ScaleBias(wscale, &bias));
+            for i in 0..m {
+                let bound = (ascales[i] / 2.0) * 127.0 * k as f32 * wscale * 1.01 + 1e-4;
+                for j in 0..n {
+                    let (x, y) = (c_int[i * n + j], c_deq[i * n + j]);
+                    assert!(
+                        (x - y).abs() <= bound,
+                        "{m}x{k}x{n} [{i},{j}]: |{x} - {y}| exceeds the activation bound {bound}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

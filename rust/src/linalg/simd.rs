@@ -20,7 +20,30 @@
 //! The primitives operate on the kernel layer's packed panels
 //! (`linalg::kernels`): `update4_panel` is the 4-row register-blocked
 //! microkernel over an interleaved packed A tile, `update1_panel` the
-//! single-row remainder form, `dot` the 8-accumulator dot product.
+//! single-row remainder form, `dot` the 8-accumulator dot product and
+//! `dot4` its 4-row batched form (each row bit-identical to `dot`).
+//!
+//! **Integer (int8) primitives** live alongside the f32 vocabulary:
+//! [`dot_i8`] / [`dot4_i8`] are i8×i8→i32 dot products with exact i32
+//! accumulation — the true-integer inference path (`gemm_nt_i8`).
+//! Integer addition is associative, so these are bit-identical across
+//! scalar/AVX2/NEON *by construction*, whatever the lane order; the
+//! determinism contract needs no op-sequence discipline here, only the
+//! caller's `k` bound that rules out i32 overflow
+//! (`kernels::I8_DOT_MAX_K`).  Backends:
+//!
+//! * **avx2** (`x86_64`, runtime-detected): sign-extend i8→i16
+//!   (`cvtepi8_epi16`) then `madd_epi16` pairwise into i32 — the
+//!   `maddubs`-family integer path *without* its i16 saturation hazard
+//!   (pair sums of ±127 products exceed i16 when one operand is u8).
+//! * **neon** (`aarch64` baseline): `sdot`-style widening
+//!   multiply-accumulate — `vmull_s8` to i16×8, `vpadalq_s16` pairwise
+//!   into i32×4.  The literal `vdotq_s32` intrinsic needs the optional
+//!   `dotprod` target feature and is not stable on the crate's MSRV
+//!   (1.74); the widening-MAC form is baseline NEON and produces the
+//!   same exact integers.
+//! * **scalar** — the plain i32 loop, also what [`set_force_scalar`]
+//!   pins (shared flag with the f32 backends).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::OnceLock;
@@ -101,6 +124,67 @@ pub fn isa_name() -> &'static str {
         Isa::Avx => "avx",
         #[cfg(target_arch = "aarch64")]
         Isa::Neon => "neon",
+    }
+}
+
+/// The instruction set the *integer* dispatcher currently selects.
+///
+/// Separate from [`Isa`] because the integer path needs AVX2
+/// (256-bit integer ops), a strictly stronger feature than the AVX
+/// the f32 path detects; NEON integer MAC is aarch64 baseline like
+/// the f32 lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Int8Isa {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_int8() -> Int8Isa {
+    if is_x86_feature_detected!("avx2") {
+        Int8Isa::Avx2
+    } else {
+        Int8Isa::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_int8() -> Int8Isa {
+    // Widening i8 multiply-accumulate is part of the aarch64 baseline.
+    Int8Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_int8() -> Int8Isa {
+    Int8Isa::Scalar
+}
+
+fn detected_int8_isa() -> Int8Isa {
+    static DETECTED: OnceLock<Int8Isa> = OnceLock::new();
+    *DETECTED.get_or_init(detect_int8)
+}
+
+/// The backend the next *integer* kernel call will use.  Honors the
+/// same [`set_force_scalar`] pin as the f32 dispatcher.
+pub fn active_int8_isa() -> Int8Isa {
+    if force_scalar() {
+        Int8Isa::Scalar
+    } else {
+        detected_int8_isa()
+    }
+}
+
+/// Short name of [`active_int8_isa`] for logs and the bench record.
+pub fn int8_isa_name() -> &'static str {
+    match active_int8_isa() {
+        Int8Isa::Scalar => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        Int8Isa::Avx2 => "avx2",
+        #[cfg(target_arch = "aarch64")]
+        Int8Isa::Neon => "neon",
     }
 }
 
@@ -218,6 +302,17 @@ mod avx {
     }
 
     #[target_feature(enable = "avx")]
+    pub(super) unsafe fn dot4(
+        a0: &[f32],
+        a1: &[f32],
+        a2: &[f32],
+        a3: &[f32],
+        b: &[f32],
+    ) -> [f32; 4] {
+        super::dot4_impl::<AvxIsa>(a0, a1, a2, a3, b)
+    }
+
+    #[target_feature(enable = "avx")]
     pub(super) unsafe fn update1_panel(apanel: &[f32], bpanel: &[f32], n: usize, out: &mut [f32]) {
         super::update1_panel_impl::<AvxIsa>(apanel, bpanel, n, out)
     }
@@ -283,6 +378,16 @@ mod neon {
         super::dot_impl::<NeonIsa>(a, b)
     }
 
+    pub(super) unsafe fn dot4(
+        a0: &[f32],
+        a1: &[f32],
+        a2: &[f32],
+        a3: &[f32],
+        b: &[f32],
+    ) -> [f32; 4] {
+        super::dot4_impl::<NeonIsa>(a0, a1, a2, a3, b)
+    }
+
     pub(super) unsafe fn update1_panel(apanel: &[f32], bpanel: &[f32], n: usize, out: &mut [f32]) {
         super::update1_panel_impl::<NeonIsa>(apanel, bpanel, n, out)
     }
@@ -329,6 +434,63 @@ unsafe fn dot_impl<S: F32x8>(a: &[f32], b: &[f32]) -> f32 {
         s += a[i] * b[i];
     }
     s
+}
+
+/// 4-row batched dot product: four independent accumulator chains
+/// share each B load, and every row runs the *exact* operation
+/// sequence of [`dot_impl`] (8 lanes bound to ascending indices,
+/// multiply then add, lanes reduced 0 → 7, scalar tail) — so each of
+/// the four results is **bit-identical** to a solo `dot` call on that
+/// row.  That invariance is what keeps batched inference bitwise equal
+/// to solo inference (pinned in `engine::net`).
+#[inline(always)]
+unsafe fn dot4_impl<S: F32x8>(
+    a0: &[f32],
+    a1: &[f32],
+    a2: &[f32],
+    a3: &[f32],
+    b: &[f32],
+) -> [f32; 4] {
+    let k = b.len();
+    debug_assert_eq!(a0.len(), k);
+    debug_assert_eq!(a1.len(), k);
+    debug_assert_eq!(a2.len(), k);
+    debug_assert_eq!(a3.len(), k);
+    let chunks = k / 8;
+    let mut lanes = [[0.0f32; 8]; 4];
+    if chunks > 0 {
+        let pb = b.as_ptr();
+        let (p0, p1, p2, p3) = (a0.as_ptr(), a1.as_ptr(), a2.as_ptr(), a3.as_ptr());
+        let mut acc0 = S::splat(0.0);
+        let mut acc1 = S::splat(0.0);
+        let mut acc2 = S::splat(0.0);
+        let mut acc3 = S::splat(0.0);
+        for c in 0..chunks {
+            let off = c * 8;
+            let vb = S::load(pb.add(off));
+            acc0 = S::add(acc0, S::mul(S::load(p0.add(off)), vb));
+            acc1 = S::add(acc1, S::mul(S::load(p1.add(off)), vb));
+            acc2 = S::add(acc2, S::mul(S::load(p2.add(off)), vb));
+            acc3 = S::add(acc3, S::mul(S::load(p3.add(off)), vb));
+        }
+        S::store(lanes[0].as_mut_ptr(), acc0);
+        S::store(lanes[1].as_mut_ptr(), acc1);
+        S::store(lanes[2].as_mut_ptr(), acc2);
+        S::store(lanes[3].as_mut_ptr(), acc3);
+    }
+    let rows = [a0, a1, a2, a3];
+    let mut out = [0.0f32; 4];
+    for ((o, row), row_lanes) in out.iter_mut().zip(rows).zip(lanes) {
+        let mut s = 0.0f32;
+        for lane in row_lanes {
+            s += lane;
+        }
+        for i in chunks * 8..k {
+            s += row[i] * b[i];
+        }
+        *o = s;
+    }
+    out
 }
 
 /// One packed-panel row update: `out[j] += apanel[kk] * bpanel[kk*n+j]`
@@ -408,6 +570,191 @@ unsafe fn update4_panel_impl<S: F32x8>(
 }
 
 // ---------------------------------------------------------------------------
+// Integer (int8) backends
+// ---------------------------------------------------------------------------
+//
+// i8×i8→i32 with exact i32 accumulation.  No op-sequence discipline is
+// needed for bit-identity (integer addition is associative); the only
+// correctness obligation is the caller's bound on `k`
+// (`kernels::I8_DOT_MAX_K`) that rules out i32 overflow.
+
+/// Plain scalar i8 dot product — the reference all SIMD integer paths
+/// must match exactly (and do, by associativity of exact i32 adds).
+fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0i32;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        s += i32::from(x) * i32::from(y);
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi32, _mm256_castsi256_si128, _mm256_cvtepi8_epi16,
+        _mm256_extracti128_si256, _mm256_loadu_si256, _mm256_madd_epi16, _mm256_setzero_si256,
+        _mm256_storeu_si256,
+    };
+
+    /// Widen one 32-byte i8 vector into two i16×16 halves (low 16
+    /// bytes, high 16 bytes) via sign extension.  Widening first keeps
+    /// every `madd_epi16` pair sum ≤ 2·127² — far inside i16×i16→i32
+    /// exactness — unlike `maddubs`, whose u8×i8 pair sums can
+    /// saturate i16.
+    #[inline(always)]
+    unsafe fn widen(v: __m256i) -> (__m256i, __m256i) {
+        (
+            _mm256_cvtepi8_epi16(_mm256_castsi256_si128(v)),
+            _mm256_cvtepi8_epi16(_mm256_extracti128_si256(v, 1)),
+        )
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 32;
+        let mut acc = _mm256_setzero_si256();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(pa.add(c * 32) as *const __m256i);
+            let vb = _mm256_loadu_si256(pb.add(c * 32) as *const __m256i);
+            let (a_lo, a_hi) = widen(va);
+            let (b_lo, b_hi) = widen(vb);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a_lo, b_lo));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(a_hi, b_hi));
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut s: i32 = lanes.iter().sum();
+        for i in chunks * 32..a.len() {
+            s += i32::from(a[i]) * i32::from(b[i]);
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4_i8(
+        a0: &[i8],
+        a1: &[i8],
+        a2: &[i8],
+        a3: &[i8],
+        b: &[i8],
+    ) -> [i32; 4] {
+        let k = b.len();
+        let chunks = k / 32;
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut acc2 = _mm256_setzero_si256();
+        let mut acc3 = _mm256_setzero_si256();
+        let pb = b.as_ptr();
+        let (p0, p1, p2, p3) = (a0.as_ptr(), a1.as_ptr(), a2.as_ptr(), a3.as_ptr());
+        for c in 0..chunks {
+            let off = c * 32;
+            let (b_lo, b_hi) = widen(_mm256_loadu_si256(pb.add(off) as *const __m256i));
+            let (v_lo, v_hi) = widen(_mm256_loadu_si256(p0.add(off) as *const __m256i));
+            acc0 = _mm256_add_epi32(acc0, _mm256_madd_epi16(v_lo, b_lo));
+            acc0 = _mm256_add_epi32(acc0, _mm256_madd_epi16(v_hi, b_hi));
+            let (v_lo, v_hi) = widen(_mm256_loadu_si256(p1.add(off) as *const __m256i));
+            acc1 = _mm256_add_epi32(acc1, _mm256_madd_epi16(v_lo, b_lo));
+            acc1 = _mm256_add_epi32(acc1, _mm256_madd_epi16(v_hi, b_hi));
+            let (v_lo, v_hi) = widen(_mm256_loadu_si256(p2.add(off) as *const __m256i));
+            acc2 = _mm256_add_epi32(acc2, _mm256_madd_epi16(v_lo, b_lo));
+            acc2 = _mm256_add_epi32(acc2, _mm256_madd_epi16(v_hi, b_hi));
+            let (v_lo, v_hi) = widen(_mm256_loadu_si256(p3.add(off) as *const __m256i));
+            acc3 = _mm256_add_epi32(acc3, _mm256_madd_epi16(v_lo, b_lo));
+            acc3 = _mm256_add_epi32(acc3, _mm256_madd_epi16(v_hi, b_hi));
+        }
+        let rows = [a0, a1, a2, a3];
+        let accs = [acc0, acc1, acc2, acc3];
+        let mut out = [0i32; 4];
+        for ((o, row), acc) in out.iter_mut().zip(rows).zip(accs) {
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            let mut s: i32 = lanes.iter().sum();
+            for i in chunks * 32..k {
+                s += i32::from(row[i]) * i32::from(b[i]);
+            }
+            *o = s;
+        }
+        out
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon_i8 {
+    use std::arch::aarch64::{
+        int32x4_t, int8x16_t, vaddvq_s32, vdupq_n_s32, vget_high_s8, vget_low_s8, vld1q_s8,
+        vmull_s8, vpadalq_s16,
+    };
+
+    /// `sdot`-style widening MAC over one 16-byte chunk of each
+    /// operand: `vmull_s8` (i8×8 → i16×8 products, exact) then
+    /// `vpadalq_s16` (pairwise add-accumulate into i32×4, exact).
+    /// `vdotq_s32` itself needs the optional `dotprod` feature and is
+    /// unstable on the crate's MSRV; this baseline form computes the
+    /// same exact integers.
+    #[inline(always)]
+    unsafe fn mac16(acc: int32x4_t, va: int8x16_t, vb: int8x16_t) -> int32x4_t {
+        let acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(va), vget_low_s8(vb)));
+        vpadalq_s16(acc, vmull_s8(vget_high_s8(va), vget_high_s8(vb)))
+    }
+
+    pub(super) unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 16;
+        let mut acc = vdupq_n_s32(0);
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        for c in 0..chunks {
+            acc = mac16(acc, vld1q_s8(pa.add(c * 16)), vld1q_s8(pb.add(c * 16)));
+        }
+        let mut s = vaddvq_s32(acc);
+        for i in chunks * 16..a.len() {
+            s += i32::from(a[i]) * i32::from(b[i]);
+        }
+        s
+    }
+
+    pub(super) unsafe fn dot4_i8(
+        a0: &[i8],
+        a1: &[i8],
+        a2: &[i8],
+        a3: &[i8],
+        b: &[i8],
+    ) -> [i32; 4] {
+        let k = b.len();
+        let chunks = k / 16;
+        let mut acc0 = vdupq_n_s32(0);
+        let mut acc1 = vdupq_n_s32(0);
+        let mut acc2 = vdupq_n_s32(0);
+        let mut acc3 = vdupq_n_s32(0);
+        let pb = b.as_ptr();
+        let (p0, p1, p2, p3) = (a0.as_ptr(), a1.as_ptr(), a2.as_ptr(), a3.as_ptr());
+        for c in 0..chunks {
+            let off = c * 16;
+            let vb = vld1q_s8(pb.add(off));
+            acc0 = mac16(acc0, vld1q_s8(p0.add(off)), vb);
+            acc1 = mac16(acc1, vld1q_s8(p1.add(off)), vb);
+            acc2 = mac16(acc2, vld1q_s8(p2.add(off)), vb);
+            acc3 = mac16(acc3, vld1q_s8(p3.add(off)), vb);
+        }
+        let rows = [a0, a1, a2, a3];
+        let accs = [acc0, acc1, acc2, acc3];
+        let mut out = [0i32; 4];
+        for ((o, row), acc) in out.iter_mut().zip(rows).zip(accs) {
+            let mut s = vaddvq_s32(acc);
+            for i in chunks * 16..k {
+                s += i32::from(row[i]) * i32::from(b[i]);
+            }
+            *o = s;
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Dispatched entry points
 // ---------------------------------------------------------------------------
 
@@ -420,6 +767,66 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         Isa::Avx => unsafe { avx::dot(a, b) },
         #[cfg(target_arch = "aarch64")]
         Isa::Neon => unsafe { neon::dot(a, b) },
+    }
+}
+
+/// 4-row batched dot product, dispatched to the active backend.  Each
+/// returned element is bit-identical to `dot(a_r, b)` — four
+/// accumulator chains run the same per-row operation sequence while
+/// sharing each B load, which is what lets an M>1 GEMM microtile
+/// amortize the B walk without perturbing solo-vs-batched bitwise
+/// equality.
+#[inline]
+pub fn dot4(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], b: &[f32]) -> [f32; 4] {
+    assert_eq!(a0.len(), b.len());
+    assert_eq!(a1.len(), b.len());
+    assert_eq!(a2.len(), b.len());
+    assert_eq!(a3.len(), b.len());
+    match active_isa() {
+        Isa::Scalar => unsafe { dot4_impl::<ScalarIsa>(a0, a1, a2, a3, b) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx => unsafe { avx::dot4(a0, a1, a2, a3, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot4(a0, a1, a2, a3, b) },
+    }
+}
+
+/// Integer i8×i8→i32 dot product with exact i32 accumulation,
+/// dispatched to the active integer backend.  Exact (hence bit-
+/// identical across backends) as long as `a.len() <=
+/// kernels::I8_DOT_MAX_K`, which callers must guarantee.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    assert_eq!(a.len(), b.len());
+    match active_int8_isa() {
+        Int8Isa::Scalar => dot_i8_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Int8Isa::Avx2 => unsafe { avx2::dot_i8(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Int8Isa::Neon => unsafe { neon_i8::dot_i8(a, b) },
+    }
+}
+
+/// 4-row batched integer dot product (the int8 GEMM microtile),
+/// dispatched to the active integer backend.  Each element equals
+/// `dot_i8(a_r, b)` exactly.
+#[inline]
+pub fn dot4_i8(a0: &[i8], a1: &[i8], a2: &[i8], a3: &[i8], b: &[i8]) -> [i32; 4] {
+    assert_eq!(a0.len(), b.len());
+    assert_eq!(a1.len(), b.len());
+    assert_eq!(a2.len(), b.len());
+    assert_eq!(a3.len(), b.len());
+    match active_int8_isa() {
+        Int8Isa::Scalar => [
+            dot_i8_scalar(a0, b),
+            dot_i8_scalar(a1, b),
+            dot_i8_scalar(a2, b),
+            dot_i8_scalar(a3, b),
+        ],
+        #[cfg(target_arch = "x86_64")]
+        Int8Isa::Avx2 => unsafe { avx2::dot4_i8(a0, a1, a2, a3, b) },
+        #[cfg(target_arch = "aarch64")]
+        Int8Isa::Neon => unsafe { neon_i8::dot4_i8(a0, a1, a2, a3, b) },
     }
 }
 
@@ -526,9 +933,95 @@ mod tests {
         set_force_scalar(true);
         assert_eq!(active_isa(), Isa::Scalar);
         assert_eq!(isa_name(), "scalar");
+        assert_eq!(active_int8_isa(), Int8Isa::Scalar);
+        assert_eq!(int8_isa_name(), "scalar");
         set_force_scalar(false);
         // Detection is cached; whatever it picked, the name matches.
         let name = isa_name();
         assert!(["scalar", "avx", "neon"].contains(&name), "{name}");
+        let iname = int8_isa_name();
+        assert!(["scalar", "avx2", "neon"].contains(&iname), "{iname}");
+    }
+
+    fn random_i8(rng: &mut Pcg64, len: usize) -> Vec<i8> {
+        rng.normal_vec(len)
+            .into_iter()
+            .map(|x| (x * 50.0).clamp(-127.0, 127.0) as i8)
+            .collect()
+    }
+
+    #[test]
+    fn dispatched_dot4_rows_are_bitwise_solo_dots() {
+        let _guard = SIMD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Pcg64::new(21);
+        for len in [0usize, 1, 7, 8, 9, 16, 33, 64, 100, 1000] {
+            let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(len)).collect();
+            let b: Vec<f32> = rng.normal_vec(len);
+            set_force_scalar(false);
+            let got = dot4(&rows[0], &rows[1], &rows[2], &rows[3], &b);
+            for (r, g) in got.iter().enumerate() {
+                let solo = dot(&rows[r], &b);
+                assert_eq!(g.to_bits(), solo.to_bits(), "len {len} row {r}");
+                let scalar = scalar_dot(&rows[r], &b);
+                assert_eq!(g.to_bits(), scalar.to_bits(), "len {len} row {r} vs scalar");
+            }
+        }
+    }
+
+    #[test]
+    fn integer_dot_matches_scalar_reference_exactly() {
+        let _guard = SIMD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Pcg64::new(22);
+        for len in [0usize, 1, 15, 16, 17, 31, 32, 33, 64, 100, 1000] {
+            let a = random_i8(&mut rng, len);
+            let b = random_i8(&mut rng, len);
+            let want = dot_i8_scalar(&a, &b);
+            set_force_scalar(false);
+            assert_eq!(dot_i8(&a, &b), want, "len {len} dispatched vs scalar");
+            set_force_scalar(true);
+            assert_eq!(dot_i8(&a, &b), want, "len {len} forced-scalar");
+            set_force_scalar(false);
+        }
+    }
+
+    #[test]
+    fn integer_dot4_rows_equal_solo_integer_dots() {
+        let _guard = SIMD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Pcg64::new(23);
+        for len in [0usize, 1, 15, 16, 17, 33, 100, 1000] {
+            let rows: Vec<Vec<i8>> = (0..4).map(|_| random_i8(&mut rng, len)).collect();
+            let b = random_i8(&mut rng, len);
+            set_force_scalar(false);
+            let got = dot4_i8(&rows[0], &rows[1], &rows[2], &rows[3], &b);
+            for (r, g) in got.iter().enumerate() {
+                assert_eq!(*g, dot_i8(&rows[r], &b), "len {len} row {r}");
+                assert_eq!(*g, dot_i8_scalar(&rows[r], &b), "len {len} row {r} vs scalar");
+            }
+        }
+    }
+
+    #[test]
+    fn integer_dot_is_exact_at_saturated_inputs() {
+        let _guard = SIMD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // Worst-case magnitudes: every product is ±127·127 (or 128·128
+        // when fed raw i8::MIN, which the quantizer never emits but the
+        // kernel must still handle).  k = 1000 keeps the exact sum well
+        // inside i32; the i64 recomputation pins exactness end-to-end.
+        for (x, y, k) in [
+            (127i8, 127i8, 1000usize),
+            (-127, 127, 1000),
+            (i8::MIN, i8::MIN, 1000),
+            (i8::MIN, 127, 999),
+        ] {
+            let a = vec![x; k];
+            let b = vec![y; k];
+            let want_i64 = i64::from(x) * i64::from(y) * k as i64;
+            let want = i32::try_from(want_i64).expect("test sum fits i32");
+            set_force_scalar(false);
+            assert_eq!(dot_i8(&a, &b), want, "{x}*{y} k={k} dispatched");
+            set_force_scalar(true);
+            assert_eq!(dot_i8(&a, &b), want, "{x}*{y} k={k} scalar");
+            set_force_scalar(false);
+        }
     }
 }

@@ -10,8 +10,10 @@
 //! is exactly what a 2-byte weight store would produce.  **i8** is
 //! per-tensor symmetric int8 quantization for inference only: each 2-D
 //! GEMM weight tensor stores `round(w / s)` with one scale
-//! `s = max|w| / 127`, and the kernel layer dequantizes in the GEMM
-//! epilogue (`linalg::kernels::Epilogue::ScaleBias`).
+//! `s = max|w| / 127`, activations quantize per-row at GEMM entry
+//! ([`quantize_i8_rows`]), and the kernel layer runs true-integer
+//! i8×i8→i32 dots with both scales applied once per output in the
+//! epilogue (`linalg::kernels::gemm_nt_i8`).
 //!
 //! Legality matrix (enforced by `engine::train_engine_with` and
 //! `serve::pool`): training {f32, bf16}; inference {f32, bf16, i8};
@@ -134,6 +136,31 @@ pub fn dequantize_i8(q: &[i8], scale: f32) -> Vec<f32> {
     q.iter().map(|&v| v as f32 * scale).collect()
 }
 
+/// Per-ROW symmetric int8 quantization of an `(rows x cols)` row-major
+/// matrix: row `r` stores `round(v / s_r)` clamped to `[-127, 127]`
+/// with its own `s_r = max|row| / 127` (1.0 for an all-zero row).
+///
+/// This is the *activation* quantizer for the true-integer GEMM
+/// (`linalg::kernels::gemm_nt_i8`): activations vary wildly per sample,
+/// so one tensor-wide scale would crush quiet rows to zero; one scale
+/// per row keeps the `scale/2` round-trip bound local to each row
+/// while the weight side keeps its per-tensor scale.
+pub fn quantize_i8_rows(data: &[f32], rows: usize, cols: usize) -> (Vec<i8>, Vec<f32>) {
+    debug_assert_eq!(data.len(), rows * cols);
+    let mut q = vec![0i8; rows * cols];
+    let mut scales = vec![1.0f32; rows];
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        let maxabs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+        scales[r] = scale;
+        for (dst, &v) in q[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+            *dst = (v / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scales)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,5 +239,44 @@ mod tests {
         assert_eq!(scale, 1.0);
         assert!(q.iter().all(|&v| v == 0));
         assert_eq!(dequantize_i8(&q, scale), vec![0.0f32; 16]);
+    }
+
+    #[test]
+    fn i8_row_quantization_bounds_each_row_independently() {
+        let mut rng = Pcg64::new(17);
+        let (rows, cols) = (5, 37);
+        let mut data: Vec<f32> = rng.normal_vec(rows * cols);
+        // One loud row and one all-zero row: per-tensor scaling would
+        // crush the others; per-row scaling must keep every row within
+        // its OWN scale/2 bound.
+        for v in data[cols..2 * cols].iter_mut() {
+            *v *= 1000.0;
+        }
+        for v in data[3 * cols..4 * cols].iter_mut() {
+            *v = 0.0;
+        }
+        let (q, scales) = quantize_i8_rows(&data, rows, cols);
+        assert_eq!(scales.len(), rows);
+        assert_eq!(scales[3], 1.0, "all-zero row pins scale to 1.0");
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            let maxabs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if maxabs > 0.0 {
+                assert!((scales[r] - maxabs / 127.0).abs() <= 1e-12 * maxabs.max(1.0));
+            }
+            for (x, &qq) in row.iter().zip(&q[r * cols..(r + 1) * cols]) {
+                let back = f32::from(qq) * scales[r];
+                assert!(
+                    (x - back).abs() <= scales[r] * 0.5 + 1e-6,
+                    "row {r}: {x} -> {back} exceeds scale/2 = {}",
+                    scales[r] * 0.5
+                );
+            }
+        }
+        // Matches the per-tensor quantizer when the matrix is one row.
+        let (q1, s1) = quantize_i8(&data[..cols]);
+        let (qr, sr) = quantize_i8_rows(&data[..cols], 1, cols);
+        assert_eq!(q1, qr);
+        assert_eq!(s1, sr[0]);
     }
 }

@@ -14,9 +14,11 @@
 //!   calls (`infer(&self, params, x)`), so the pool caches one native
 //!   engine per (variant, precision) and every request borrows it
 //!   concurrently.  Reduced-precision entries **quantize on load**
-//!   (DESIGN.md §Precision): the packed bf16/int8 weight set is built
-//!   once when the cache entry is created, so every subsequent request
-//!   serves from the compact representation.  HLO inference engines
+//!   (DESIGN.md §Precision): the packed bf16/int8 weight set — int8
+//!   panels hold raw quantized bytes served by the true-integer GEMM —
+//!   is built once when the cache entry is created, so every
+//!   subsequent request serves from the compact representation.  HLO
+//!   inference engines
 //!   borrow the runtime (their executables live in its cache), so they
 //!   are constructed per call instead — the compile cache makes that a
 //!   map lookup.

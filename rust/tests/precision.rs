@@ -8,7 +8,7 @@ use std::path::PathBuf;
 use wasi_train::data::synth::VisionTask;
 use wasi_train::engine::demo::{write_demo_artifacts, DemoConfig};
 use wasi_train::engine::{InferEngine, NativeInferEngine, NativeModelEngine, TrainEngine};
-use wasi_train::precision::{bf16_to_f32, f32_to_bf16, Precision};
+use wasi_train::precision::{bf16_to_f32, dequantize_i8, f32_to_bf16, quantize_i8, Precision};
 use wasi_train::runtime::Manifest;
 use wasi_train::serve::{serve_lines, Service, ServiceConfig};
 use wasi_train::util::json::Json;
@@ -84,6 +84,44 @@ fn int8_top1_predictions_match_f32_on_demo_artifact() {
         let f32_logits = f32_engine.infer(&params, &x).unwrap();
         let i8_logits = i8_engine.infer_quantized(&x).unwrap();
         assert_top1_agreement(&f32_logits, &i8_logits, entry.classes, 2, 0.15, model);
+    }
+}
+
+/// The TRUE-integer int8 path vs the old dequantizing route: the deq
+/// GEMM was pinned bitwise to f32 inference over round-tripped
+/// (dequantized) weights, so that reconstruction IS the old path.  The
+/// integer path runs the same quantized weights with exact i8×i8→i32
+/// arithmetic; the only difference is the per-row activation
+/// round-trip, bounded by `s_row/2` per element (the kernel-level
+/// bound test in `linalg::kernels` enforces the formula; this pin
+/// checks it stays prediction-preserving end-to-end on the demo
+/// artifact).
+#[test]
+fn int8_integer_path_tracks_dequantizing_path_on_demo_artifact() {
+    let dir = demo_dir("intdeq");
+    let manifest = Manifest::load(&dir).unwrap();
+    for model in ["vit_demo_vanilla", "vit_demo_wasi_eps80"] {
+        let entry = manifest.model(model).unwrap();
+        let params = entry.load_params().unwrap();
+        let mut roundtripped = params.clone();
+        for spec in &entry.param_spec {
+            let is_gemm = spec.shape.len() == 2
+                && (spec.name.ends_with(".w")
+                    || spec.name.ends_with(".l")
+                    || spec.name.ends_with(".r"));
+            if is_gemm {
+                let range = spec.offset..spec.offset + spec.numel();
+                let (q, scale) = quantize_i8(&params[range.clone()]);
+                roundtripped[range].copy_from_slice(&dequantize_i8(&q, scale));
+            }
+        }
+        let f32_engine = NativeInferEngine::load(entry).unwrap();
+        let i8_engine = NativeInferEngine::load_quantized(entry, Precision::I8).unwrap();
+        let mut task = VisionTask::new("intdeq", entry.classes, 16, 0.5, 4, 77);
+        let (x, _, _) = task.batch_onehot(entry.batch);
+        let deq_logits = f32_engine.infer(&roundtripped, &x).unwrap();
+        let int_logits = i8_engine.infer_quantized(&x).unwrap();
+        assert_top1_agreement(&deq_logits, &int_logits, entry.classes, 2, 0.15, model);
     }
 }
 

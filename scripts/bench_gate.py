@@ -21,7 +21,13 @@ Rules
   The per-node attribution under ``"nodes"`` is micro-timing noise and
   is compared structurally only.
 * **Required non-empty sections**: the SIMD-vs-scalar and precision
-  (int8-vs-f32) sections must exist with their arms populated, the
+  (int8-vs-f32) sections must exist with their arms populated —
+  including ``precision.int8_isa`` (the integer-dot backend the run
+  dispatched to) and the ``precision.batched`` solo-vs-coalesced sweep;
+  ``precision.int8_vs_f32_speedup`` and both ``precision.batched``
+  per-request speedups must be >= 1.0 (the true-integer kernels must
+  beat f32, and a coalesced batch of 8 must not lose to solo dispatch),
+  riding the provisional downgrade like wallclock.  The
   ``soak`` section (the bench's embedded scenario-harness run) must
   report ``invariant_violations == 0``, and the ``store`` section (the
   variant-store paging sweep) must report ``reload_bit_identical: true``
@@ -158,6 +164,17 @@ def check_sections(fresh, errors):
         errors,
     )
     lookup(fresh, "precision.int8_vs_f32_speedup", errors)
+    # The true-integer int8 path must record which integer-dot backend
+    # it dispatched to and the solo-vs-coalesced batch sweep.
+    isa = lookup(fresh, "precision.int8_isa", errors)
+    if not isinstance(isa, MissingKey):
+        require(isa in ("scalar", "avx2", "neon"),
+                f"$.precision.int8_isa must name a known backend, got {isa!r}",
+                errors)
+    for key in ("precision.batched.batch",
+                "precision.batched.f32_batch_per_req_speedup",
+                "precision.batched.i8_batch_per_req_speedup"):
+        lookup(fresh, key, errors)
     require(bool(fresh.get("serve")), "$.serve section must be non-empty", errors)
     for i, a in enumerate(arms):
         require(
@@ -315,6 +332,24 @@ def main():
         violations.append(
             f"$.passes.prepack_infer_speedup: {spd:.3f} — prepacked panels "
             "must beat dequantize-on-the-fly")
+    # True-integer int8's headline: the integer kernels must make int8
+    # FASTER than f32 inference, not just smaller.  Timing-derived, so
+    # it rides the provisional downgrade.
+    i8_spd = lookup(fresh, "precision.int8_vs_f32_speedup")
+    if isinstance(i8_spd, (int, float)) and i8_spd < 1.0:
+        violations.append(
+            f"$.precision.int8_vs_f32_speedup: {i8_spd:.3f} — true-integer "
+            "int8 kernels must beat f32 inference")
+    # Batched-GEMM amortization: a coalesced batch of 8 must not be
+    # slower PER REQUEST than solo single-sample calls, in either
+    # precision — the microtiles exist to amortize the panel walk.
+    for key in ("precision.batched.f32_batch_per_req_speedup",
+                "precision.batched.i8_batch_per_req_speedup"):
+        b8 = lookup(fresh, key)
+        if isinstance(b8, (int, float)) and b8 < 1.0:
+            violations.append(
+                f"$.{key}: {b8:.3f} — a coalesced batch of 8 must not "
+                "lose to solo per-request dispatch")
     # Micro-batching's headline: at 100 concurrent in-flight requests
     # the batched front-end must not serve SLOWER than solo dispatch.
     # Timing-derived, so it rides the provisional downgrade too.

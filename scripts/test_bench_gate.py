@@ -53,11 +53,21 @@ def baseline_record():
                  "weight_bytes": 150000, "top1_agreement": 1.0},
                 {"precision": "bf16", "infer_seconds": 0.011, "infer_reps": 5,
                  "weight_bytes": 80000, "top1_agreement": 1.0},
-                {"precision": "i8", "infer_seconds": 0.011, "infer_reps": 5,
+                {"precision": "i8", "infer_seconds": 0.008, "infer_reps": 5,
                  "weight_bytes": 45000, "top1_agreement": 1.0},
             ],
-            "int8_vs_f32_speedup": 0.95,
+            "int8_isa": "avx2",
+            "int8_vs_f32_speedup": 1.25,
             "int8_weight_compression": 3.4,
+            "batched": {
+                "batch": 8,
+                "f32_solo_per_req_seconds": 0.0020,
+                "f32_batch_per_req_seconds": 0.0015,
+                "f32_batch_per_req_speedup": 1.33,
+                "i8_solo_per_req_seconds": 0.0016,
+                "i8_batch_per_req_seconds": 0.0011,
+                "i8_batch_per_req_speedup": 1.45,
+            },
         },
         "serve": [
             {"workers": 1, "jobs": 2, "steps_per_job": 3, "total_seconds": 0.2,
@@ -360,6 +370,71 @@ def test_batched_throughput_ratio_warns_on_provisional_baseline(tmp_path):
     assert res.returncode == 0, res.stdout + res.stderr
     assert "WARN" in res.stdout
     assert "$.net.batched_vs_solo_throughput_at_100" in res.stdout
+
+
+def test_int8_speedup_below_one_fails(tmp_path):
+    # True-integer int8's headline: the kernels must make int8 FASTER
+    # than f32, not just smaller.
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["precision"]["int8_vs_f32_speedup"] = 0.9
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.precision.int8_vs_f32_speedup" in res.stdout
+    assert "must beat f32 inference" in res.stdout
+
+
+def test_int8_speedup_warns_on_provisional_baseline(tmp_path):
+    base = baseline_record()
+    base["provisional"] = True
+    fresh = copy.deepcopy(baseline_record())
+    fresh["precision"]["int8_vs_f32_speedup"] = 0.9
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "WARN" in res.stdout
+    assert "$.precision.int8_vs_f32_speedup" in res.stdout
+
+
+def test_missing_int8_isa_names_key_path(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    del fresh["precision"]["int8_isa"]
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.precision.int8_isa" in res.stdout
+    assert "KeyError" not in res.stdout + res.stderr
+
+
+def test_unknown_int8_isa_is_rejected(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["precision"]["int8_isa"] = "sse2"
+    base["precision"]["int8_isa"] = "sse2"  # keep structure identical
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "must name a known backend" in res.stdout
+
+
+def test_batch8_per_req_speedup_below_one_fails(tmp_path):
+    # A coalesced batch of 8 serving SLOWER per request than solo calls
+    # means the microtiles amortized nothing.
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    fresh["precision"]["batched"]["i8_batch_per_req_speedup"] = 0.8
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.precision.batched.i8_batch_per_req_speedup" in res.stdout
+    assert "lose to solo per-request dispatch" in res.stdout
+
+
+def test_missing_batched_sweep_names_key_path(tmp_path):
+    base = baseline_record()
+    fresh = copy.deepcopy(base)
+    del fresh["precision"]["batched"]
+    res = run_gate(tmp_path, base, fresh)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "$.precision.batched" in res.stdout
+    assert "KeyError" not in res.stdout + res.stderr
 
 
 def test_wrong_section_type_is_actionable_not_traceback(tmp_path):
